@@ -1,0 +1,24 @@
+//! Bench: Fig. 1a regenerator — pattern extraction + ranking on
+//! Wiki-Vote with a 4×4 window, plus the partitioner hot path across
+//! window sizes. Prints the figure once, then timing statistics.
+//!
+//! Run: `cargo bench --bench fig1_patterns`
+
+use repro::graph::datasets::Dataset;
+use repro::pattern::{extract::partition, rank::PatternRanking};
+use repro::report::figures;
+use repro::util::bench::{black_box, Bench};
+
+fn main() {
+    println!("{}", figures::fig1(None).unwrap());
+
+    let g = Dataset::WikiVote.load().unwrap();
+    let mut b = Bench::new();
+    b.run("partition WV c=4", || black_box(partition(&g, 4, false)));
+    b.run("partition WV c=8", || black_box(partition(&g, 8, false)));
+    let part = partition(&g, 4, false);
+    b.run("rank patterns WV c=4", || {
+        black_box(PatternRanking::from_partitioned(&part))
+    });
+    b.run("fig1 end-to-end", || black_box(figures::fig1(None).unwrap()));
+}

@@ -1,0 +1,32 @@
+//! Bench: Fig. 5 regenerator — BFS on Wiki-Vote with 4 static + 2
+//! dynamic engines (4 crossbars each) and activity tracing on, which is
+//! the worst-case scheduler overhead configuration.
+//!
+//! Run: `cargo bench --bench fig5_activity`
+
+use repro::accel::{Accelerator, ArchConfig};
+use repro::algo::Bfs;
+use repro::cost::CostParams;
+use repro::graph::datasets::Dataset;
+use repro::report::figures;
+use repro::sched::executor::NativeExecutor;
+use repro::util::bench::{black_box, Bench};
+
+fn main() {
+    println!("{}", figures::fig5(None).unwrap());
+
+    let g = Dataset::WikiVote.load().unwrap();
+    let acc = Accelerator::new(ArchConfig::fig5(), CostParams::default());
+    let pre = acc.preprocess(&g, false).unwrap();
+    let mut b = Bench::new();
+    b.run("fig5 sim (traced, 6 engines)", || {
+        black_box(acc.run(&pre, &Bfs::new(0), &mut NativeExecutor).unwrap())
+    });
+    let acc_untraced = Accelerator::new(
+        ArchConfig { trace_activity: false, ..ArchConfig::fig5() },
+        CostParams::default(),
+    );
+    b.run("fig5 sim (untraced)", || {
+        black_box(acc_untraced.run(&pre, &Bfs::new(0), &mut NativeExecutor).unwrap())
+    });
+}

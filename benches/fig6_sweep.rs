@@ -1,0 +1,33 @@
+//! Bench: Fig. 6 regenerator — static-engine sweep (N ∈ 0..32) over
+//! three datasets, normalized to N = 0.
+//!
+//! Run: `cargo bench --bench fig6_sweep`
+
+use std::time::Duration;
+
+use repro::accel::ArchConfig;
+use repro::algo::Bfs;
+use repro::cost::CostParams;
+use repro::dse::static_engine_sweep;
+use repro::graph::datasets::Dataset;
+use repro::report::figures;
+use repro::util::bench::{black_box, Bench};
+
+fn main() {
+    println!("{}", figures::fig6(None).unwrap());
+
+    let g = Dataset::Gnutella.load().unwrap();
+    let mut b = Bench::new().with_target(Duration::from_secs(5)).with_max_iters(10);
+    b.run("static sweep PG (5 points)", || {
+        black_box(
+            static_engine_sweep(
+                &g,
+                &ArchConfig::default(),
+                &CostParams::default(),
+                &Bfs::new(0),
+                &[0, 8, 16, 24, 31],
+            )
+            .unwrap(),
+        )
+    });
+}

@@ -1,0 +1,31 @@
+//! Bench: Fig. 7 regenerator — BFS speedup of all four designs
+//! normalized to GraphR, across the six Table 2 datasets.
+//!
+//! Run: `cargo bench --bench fig7_speedup`
+
+use std::time::Duration;
+
+use repro::accel::{Accelerator, ArchConfig};
+use repro::algo::Bfs;
+use repro::baselines;
+use repro::cost::CostParams;
+use repro::graph::datasets::Dataset;
+use repro::report::figures;
+use repro::sched::executor::NativeExecutor;
+use repro::util::bench::{black_box, Bench};
+
+fn main() {
+    println!("{}", figures::fig7(None).unwrap());
+
+    let g = Dataset::WikiVote.load().unwrap();
+    let params = CostParams::default();
+    let mut b = Bench::new().with_target(Duration::from_secs(4)).with_max_iters(15);
+    let acc = Accelerator::new(ArchConfig::default(), params.clone());
+    let pre = acc.preprocess(&g, false).unwrap();
+    b.run("proposed sim WV", || {
+        black_box(acc.run(&pre, &Bfs::new(0), &mut NativeExecutor).unwrap())
+    });
+    b.run("baseline models WV (x3)", || {
+        black_box(baselines::simulate_all(&g, 0, &params, 32))
+    });
+}

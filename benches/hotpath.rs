@@ -1,0 +1,102 @@
+//! Bench: hot-path microbenchmarks — the components the performance pass
+//! (EXPERIMENTS.md §Perf) optimizes: scheduler dispatch throughput,
+//! native executor, PJRT dispatch, partitioner, and the serving loop.
+//!
+//! Run: `make artifacts && cargo bench --bench hotpath`
+
+use std::time::Duration;
+
+use repro::accel::{Accelerator, ArchConfig};
+use repro::algo::traits::{StepKind, INF};
+use repro::algo::{Bfs, PageRank};
+use repro::cost::CostParams;
+use repro::coordinator::{Job, Service, ServiceConfig};
+use repro::graph::datasets::Dataset;
+use repro::pattern::extract::partition;
+use repro::runtime::PjrtExecutor;
+use repro::sched::executor::{NativeExecutor, StepExecutor};
+use repro::util::bench::{black_box, Bench};
+use repro::util::SplitMix64;
+
+fn main() {
+    let g = Dataset::WikiVote.load().unwrap();
+    let acc = Accelerator::new(ArchConfig::default(), CostParams::default());
+    let pre = acc.preprocess(&g, false).unwrap();
+    let ops = pre.part.num_subgraphs() as u64;
+    let mut b = Bench::new().with_target(Duration::from_secs(3)).with_max_iters(20);
+
+    // Scheduler + native executor end to end (the dominant loop).
+    let s = b.run("sched+native BFS WV", || {
+        black_box(acc.run(&pre, &Bfs::new(0), &mut NativeExecutor).unwrap())
+    });
+    let run = acc.run(&pre, &Bfs::new(0), &mut NativeExecutor).unwrap();
+    println!(
+        "  -> {:.2} M subgraph-dispatches/s ({} ops per run)",
+        run.counts.mvm_ops as f64 / s.mean.as_secs_f64() / 1e6,
+        run.counts.mvm_ops
+    );
+
+    b.run("sched+native PageRank(5) WV", || {
+        black_box(acc.run(&pre, &PageRank::new(0.85, 5), &mut NativeExecutor).unwrap())
+    });
+
+    // Native executor alone on a big batch.
+    let part = partition(&g, 4, false);
+    let n = part.num_subgraphs().min(50_000);
+    let sgs: Vec<u32> = (0..n as u32).collect();
+    let mut rng = SplitMix64::new(7);
+    let xs: Vec<f32> = (0..n * 4)
+        .map(|_| if rng.next_bool(0.5) { INF } else { rng.next_f32() * 8.0 })
+        .collect();
+    let mut out = Vec::new();
+    let st = b.run("native executor 50k subgraphs", || {
+        NativeExecutor
+            .execute(StepKind::Bfs, &part, &sgs, &xs, &mut out)
+            .unwrap();
+        black_box(out.len())
+    });
+    println!(
+        "  -> {:.1} M subgraph-MVMs/s",
+        n as f64 / st.mean.as_secs_f64() / 1e6
+    );
+
+    // Partitioner.
+    b.run("partition WV c=4", || black_box(partition(&g, 4, false)));
+
+    // PJRT dispatch path (needs `make artifacts`).
+    match PjrtExecutor::from_default_dir() {
+        Ok(mut pjrt) => {
+            let n = 4096.min(part.num_subgraphs());
+            let sgs: Vec<u32> = (0..n as u32).collect();
+            let xs2 = &xs[..n * 4];
+            let st = b.run("pjrt executor 4k subgraphs", || {
+                pjrt.execute(StepKind::Bfs, &part, &sgs, xs2, &mut out).unwrap();
+                black_box(out.len())
+            });
+            println!(
+                "  -> {:.2} M subgraph-MVMs/s through PJRT",
+                n as f64 / st.mean.as_secs_f64() / 1e6
+            );
+        }
+        Err(e) => println!("(pjrt bench skipped: {e})"),
+    }
+
+    // Serving loop throughput.
+    let st = b.run("serving loop: 16 mixed jobs (Tiny)", || {
+        let svc = Service::spawn(ServiceConfig { workers: 4, ..ServiceConfig::default() });
+        let pending: Vec<_> = (0..16u32)
+            .map(|i| {
+                svc.submit(match i % 2 {
+                    0 => Job::Bfs { dataset: Dataset::Tiny, scale: 1.0, source: i },
+                    _ => Job::Wcc { dataset: Dataset::Tiny, scale: 1.0 },
+                })
+                .unwrap()
+            })
+            .collect();
+        for p in pending {
+            p.wait().unwrap();
+        }
+    });
+    println!("  -> {:.0} jobs/s", 16.0 / st.mean.as_secs_f64());
+    let _ = ops;
+}

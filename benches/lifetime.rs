@@ -1,0 +1,26 @@
+//! Bench: §IV.D regenerator — lifetime analysis (128 engines, Wiki-Vote
+//! hourly, E = 1e8).
+//!
+//! Run: `cargo bench --bench lifetime`
+
+use std::time::Duration;
+
+use repro::accel::{Accelerator, ArchConfig};
+use repro::algo::Bfs;
+use repro::cost::CostParams;
+use repro::graph::datasets::Dataset;
+use repro::report::figures;
+use repro::sched::executor::NativeExecutor;
+use repro::util::bench::{black_box, Bench};
+
+fn main() {
+    println!("{}", figures::lifetime(None).unwrap());
+
+    let g = Dataset::WikiVote.load().unwrap();
+    let acc = Accelerator::new(ArchConfig::lifetime(), CostParams::default());
+    let pre = acc.preprocess(&g, false).unwrap();
+    let mut b = Bench::new().with_target(Duration::from_secs(4)).with_max_iters(15);
+    b.run("lifetime config sim (128 engines)", || {
+        black_box(acc.run(&pre, &Bfs::new(0), &mut NativeExecutor).unwrap())
+    });
+}

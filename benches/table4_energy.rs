@@ -1,0 +1,19 @@
+//! Bench: Table 4 regenerator — BFS energy of all four designs across
+//! the six Table 2 datasets.
+//!
+//! Run: `cargo bench --bench table4_energy`
+
+use std::time::Duration;
+
+use repro::report::figures;
+use repro::util::bench::{black_box, Bench};
+
+fn main() {
+    println!("{}", figures::table4(None).unwrap());
+
+    let mut b = Bench::new().with_target(Duration::from_secs(4)).with_max_iters(5);
+    // Small-scale end-to-end regeneration timing (full scale printed above).
+    b.run("table4 end-to-end (5% scale)", || {
+        black_box(figures::table4(Some(0.05)).unwrap())
+    });
+}

@@ -1,0 +1,76 @@
+//! Design-space exploration driver (paper Fig. 6 + conclusion):
+//! sweeps static/dynamic engine splits, crossbar sizes, and replacement
+//! policies on three datasets, and reports the best configuration the
+//! DSE framework would pick for each.
+//!
+//! Run: `cargo run --release --example dse_sweep`
+
+use anyhow::Result;
+
+use repro::accel::ArchConfig;
+use repro::algo::Bfs;
+use repro::cost::CostParams;
+use repro::dse::{crossbar_sweep, find_best_static_split, policy_sweep};
+use repro::graph::datasets::Dataset;
+use repro::report::Table;
+use repro::util::fmt;
+
+fn main() -> Result<()> {
+    let params = CostParams::default();
+    let datasets = [Dataset::WikiVote, Dataset::Epinions, Dataset::Gnutella];
+
+    println!("== static/dynamic split (T = 32, 4x4 crossbars) ==");
+    for d in datasets {
+        let g = d.load()?;
+        let (best, points) = find_best_static_split(
+            &g,
+            &ArchConfig::default(),
+            &params,
+            &Bfs::new(0),
+            Some(&[0, 2, 4, 8, 12, 16, 20, 24, 28, 31]),
+        )?;
+        let mut t = Table::new(format!("{} ({})", d.spec().name, d.spec().short))
+            .header(["N static", "speedup", "energy", "writes (bits)", "hit rate"]);
+        for p in &points {
+            t.row([
+                p.x.to_string(),
+                format!("{:.2}x", p.speedup),
+                fmt::energy(p.energy_j),
+                fmt::count(p.write_bits),
+                format!("{:.1}%", p.static_hit_rate * 100.0),
+            ]);
+        }
+        print!("{}", t.render());
+        println!("→ best split for {}: N = {best}\n", d.spec().short);
+    }
+
+    println!("== crossbar-size ablation (Wiki-Vote) ==");
+    let g = Dataset::WikiVote.load()?;
+    let points = crossbar_sweep(&g, &ArchConfig::default(), &params, &Bfs::new(0), &[2, 4, 8])?;
+    let mut t = Table::new("window/crossbar size C")
+        .header(["C", "speedup vs C=2", "energy", "hit rate"]);
+    for p in &points {
+        t.row([
+            p.x.to_string(),
+            format!("{:.2}x", p.speedup),
+            fmt::energy(p.energy_j),
+            format!("{:.1}%", p.static_hit_rate * 100.0),
+        ]);
+    }
+    print!("{}", t.render());
+
+    println!("\n== replacement-policy ablation (Wiki-Vote, 16 dynamic engines) ==");
+    let out = policy_sweep(&g, &ArchConfig::default(), &params, &Bfs::new(0))?;
+    let mut t =
+        Table::new("dynamic-engine replacement").header(["policy", "time vs LRU", "writes (bits)"]);
+    let lru_time = out[0].1.exec_time_ns;
+    for (kind, p) in &out {
+        t.row([
+            kind.name().to_string(),
+            format!("{:.3}x", p.exec_time_ns / lru_time),
+            fmt::count(p.write_bits),
+        ]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}

@@ -1,0 +1,101 @@
+"""AOT lowering: JAX batch-step models -> HLO *text* artifacts + manifest.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``). The text parser
+reassigns ids, so text round-trips cleanly (see /opt/xla-example).
+
+Each artifact is one (algorithm, batch, crossbar-size) variant:
+
+    artifacts/<name>_b<B>_c<C>.hlo.txt
+
+plus ``artifacts/manifest.json`` describing shapes so the rust runtime can
+discover and validate artifacts without hardcoding.
+
+Usage:  cd python && python -m compile.aot --out ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import STEP_NAMES, build_step
+
+# (B, C) variants the rust coordinator may request. B is the engine batch
+# (total graph engines T in the paper's Fig. 6 setups), C the crossbar size.
+# NOTE: a (1024, 4) large-batch variant was measured 12x SLOWER end to
+# end: the interpret-mode pallas grid lowers to a sequential loop whose
+# cost scales with B, and padded tail batches waste compute. B = 128 is
+# the sweet spot on the CPU PJRT client (EXPERIMENTS.md §Perf).
+VARIANTS: list[tuple[int, int]] = [
+    (32, 4),   # paper default: 32 engines, 4x4 crossbars
+    (32, 8),   # 8x8 crossbar ablation
+    (128, 4),  # lifetime config (§IV.D) + best PJRT dispatch batch
+    (6, 2),    # Fig. 3 worked example (3 engines used; padded to 6)
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (return_tuple for rust side)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(name: str, b: int, c: int) -> str:
+    fn, example_args = build_step(name, b, c)
+    lowered = jax.jit(fn).lower(*example_args)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument(
+        "--steps", nargs="*", default=list(STEP_NAMES), help="subset of steps"
+    )
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    manifest: dict = {"format": "hlo-text", "entries": []}
+    for name in args.steps:
+        for b, c in VARIANTS:
+            text = lower_variant(name, b, c)
+            fname = f"{name}_b{b}_c{c}.hlo.txt"
+            path = os.path.join(args.out, fname)
+            with open(path, "w") as f:
+                f.write(text)
+            manifest["entries"].append(
+                {
+                    "step": name,
+                    "batch": b,
+                    "crossbar": c,
+                    "file": fname,
+                    # All steps take (B,C,C) f32 + (B,C) f32 -> 1-tuple (B,C) f32.
+                    "inputs": [[b, c, c], [b, c]],
+                    "output": [b, c],
+                }
+            )
+            print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    # TSV manifest is what the rust runtime parses (offline image vendors
+    # no JSON crate); JSON kept for humans/tools.
+    with open(os.path.join(args.out, "manifest.tsv"), "w") as f:
+        f.write("# step\tbatch\tcrossbar\tfile\n")
+        for e in manifest["entries"]:
+            f.write(f"{e['step']}\t{e['batch']}\t{e['crossbar']}\t{e['file']}\n")
+    print(f"wrote {os.path.join(args.out, 'manifest.json')} + manifest.tsv "
+          f"({len(manifest['entries'])} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+"""Layer-1 Pallas kernels (build-time only; never imported at runtime)."""
+
+from .crossbar_mvm import (  # noqa: F401
+    ADC_LEVELS,
+    INF,
+    matmul_mvm,
+    matmul_mvm_adc,
+    minplus_mvm,
+)

@@ -1,0 +1,113 @@
+"""Layer-1 Pallas kernels: the ReRAM crossbar datapath.
+
+A graph engine's crossbar performs an in-situ MVM: each bitline j computes
+sum_i G[i,j] * V[i] in O(1) analog time (paper §II.A). We model a *batch*
+of engines as one TPU-style kernel invocation: the grid iterates over the
+engine batch, and each program instance owns one C x C crossbar tile in
+VMEM plus its C-vector of wordline voltages.
+
+Three datapath variants:
+
+* ``matmul_mvm``   - the plain analog MAC (PageRank-style semiring).
+* ``matmul_mvm_adc`` - same, followed by the 8-bit ADC quantization model
+  (sample-and-hold -> shared SAR ADC, paper Fig. 4 / Table 3).
+* ``minplus_mvm``  - tropical semiring out[j] = min_i (cost[i,j] + x[i])
+  used by BFS/SSSP edge-compute. An analog crossbar does not natively
+  min-reduce; the paper offloads non-MVM ops to the engine ALU. We keep
+  the op inside the kernel so the whole edge-compute phase lowers into a
+  single fused HLO (DESIGN.md §Hardware-Adaptation).
+
+All kernels are lowered with ``interpret=True``: the CPU PJRT client that
+the rust runtime embeds cannot execute Mosaic custom-calls. On a real TPU
+the same BlockSpecs tile each engine batch into VMEM and feed the MXU.
+
+Correctness oracle: ``ref.py`` (pure jnp), pinned by pytest + hypothesis.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Sentinel for "no edge" in the tropical semiring. f32 has plenty of
+# headroom: INF + INF stays finite and well above any real path length.
+INF = 1.0e9
+
+# 8-bit SAR ADC (Table 3): 256 levels across the bitline full-scale range.
+ADC_LEVELS = 256
+
+
+def _mvm_kernel(g_ref, x_ref, o_ref):
+    """One engine: bitline MAC  o[j] = sum_i G[i,j] * x[i]."""
+    g = g_ref[0]  # (C, C) crossbar conductances
+    x = x_ref[0]  # (C,)  wordline voltages
+    # x @ G contracts over wordlines i — one dot per bitline, exactly the
+    # analog reduction the crossbar performs in a single cycle.
+    o_ref[0] = x @ g
+
+
+def _mvm_adc_kernel(fullscale, g_ref, x_ref, o_ref):
+    """Bitline MAC followed by the S/H + 8-bit ADC quantization model."""
+    g = g_ref[0]
+    x = x_ref[0]
+    acc = x @ g
+    # ``fullscale`` is a plain python float (compile-time constant): pallas
+    # kernels cannot capture traced array constants.
+    lsb = float(fullscale) / (ADC_LEVELS - 1)
+    code = jnp.clip(jnp.round(acc / lsb), 0.0, ADC_LEVELS - 1.0)
+    o_ref[0] = code * lsb
+
+
+def _minplus_kernel(cost_ref, x_ref, o_ref):
+    """One engine: tropical MVM  o[j] = min_i (cost[i,j] + x[i]).
+
+    ``cost[i,j]`` is the edge weight (1.0 for BFS) where an edge exists and
+    INF elsewhere; ``x`` is the current vertex property of the C source
+    vertices of the subgraph.
+    """
+    cost = cost_ref[0]  # (C, C)
+    x = x_ref[0]  # (C,)
+    cand = cost + x[:, None]
+    o_ref[0] = jnp.min(cand, axis=0)
+
+
+def _batched_call(kernel, b: int, c: int, n_mats: int):
+    """Build a pallas_call whose grid iterates over the engine batch.
+
+    ``n_mats`` matrix operands of shape (b, c, c) are followed by one
+    vector operand of shape (b, c); output is (b, c).
+    """
+    mat_spec = pl.BlockSpec((1, c, c), lambda i: (i, 0, 0))
+    vec_spec = pl.BlockSpec((1, c), lambda i: (i, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=(b,),
+        in_specs=[mat_spec] * n_mats + [vec_spec],
+        out_specs=vec_spec,
+        out_shape=jax.ShapeDtypeStruct((b, c), jnp.float32),
+        interpret=True,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=())
+def matmul_mvm(patterns: jax.Array, x: jax.Array) -> jax.Array:
+    """Batched crossbar MVM.  patterns: (B, C, C), x: (B, C) -> (B, C)."""
+    b, c, _ = patterns.shape
+    return _batched_call(_mvm_kernel, b, c, 1)(patterns, x)
+
+
+def matmul_mvm_adc(patterns: jax.Array, x: jax.Array, fullscale: float) -> jax.Array:
+    """Batched crossbar MVM with 8-bit ADC quantization on each bitline."""
+    b, c, _ = patterns.shape
+    kernel = functools.partial(_mvm_adc_kernel, float(fullscale))
+    return _batched_call(kernel, b, c, 1)(patterns, x)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def minplus_mvm(cost: jax.Array, x: jax.Array) -> jax.Array:
+    """Batched tropical MVM.  cost: (B, C, C), x: (B, C) -> (B, C)."""
+    b, c, _ = cost.shape
+    return _batched_call(_minplus_kernel, b, c, 1)(cost, x)

@@ -1,0 +1,33 @@
+"""Pure-jnp oracles for the Pallas crossbar kernels.
+
+These are the correctness ground truth: no pallas, no tiling, just the
+mathematical definition of each datapath. pytest + hypothesis assert the
+kernels in ``crossbar_mvm.py`` match these bit-for-bit-ish (allclose).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .crossbar_mvm import ADC_LEVELS
+
+
+def matmul_mvm_ref(patterns: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """out[b, j] = sum_i patterns[b, i, j] * x[b, i]."""
+    return jnp.einsum("bij,bi->bj", patterns, x)
+
+
+def adc_quantize_ref(v: jnp.ndarray, fullscale: float) -> jnp.ndarray:
+    """8-bit SAR ADC transfer function: clip + round to 256 levels."""
+    lsb = fullscale / (ADC_LEVELS - 1)
+    code = jnp.clip(jnp.round(v / lsb), 0.0, ADC_LEVELS - 1.0)
+    return code * lsb
+
+
+def matmul_mvm_adc_ref(patterns, x, fullscale: float) -> jnp.ndarray:
+    return adc_quantize_ref(matmul_mvm_ref(patterns, x), fullscale)
+
+
+def minplus_mvm_ref(cost: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """out[b, j] = min_i (cost[b, i, j] + x[b, i])."""
+    return jnp.min(cost + x[:, :, None], axis=1)

@@ -1,0 +1,109 @@
+"""Layer-2 JAX model: per-algorithm batch steps over a batch of graph engines.
+
+One *batch step* is what the rust scheduler (Alg. 2) offloads per
+iteration: B engines, each holding a C x C crossbar (the subgraph pattern,
+possibly weighted) and a C-vector of vertex data, produce B updated
+C-vectors. The reduce across subgraphs that share destination vertices
+(the "aggregate" of Alg. 2 line 17) happens back in the rust ALU model —
+batches mix arbitrary subgraphs, so the cross-subgraph reduce cannot be a
+fixed-shape XLA op.
+
+Vertex programming model (paper §III.D, inherited from GraphR):
+
+* ``edge compute``  - in-situ MVM on the crossbar  -> the L1 Pallas kernel.
+* ``reduce/apply``  - per-engine part fused here (min along bitlines for
+  BFS/SSSP already happens inside the tropical kernel; PageRank applies
+  damping here); the cross-engine part stays in rust.
+
+Everything here is shape-polymorphic python, lowered ONCE per (B, C) by
+``aot.py`` to HLO text. Python never runs at request time.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import INF, matmul_mvm, matmul_mvm_adc, minplus_mvm
+
+
+def bfs_step(adj: jax.Array, x: jax.Array) -> tuple[jax.Array]:
+    """BFS edge-compute for a batch of subgraphs.
+
+    adj: (B, C, C) 0/1 pattern matrices (adj[b, i, j] = edge i -> j).
+    x:   (B, C)    current level of each subgraph's C source vertices
+                   (INF when unvisited / inactive).
+    returns (B, C) candidate level for each destination vertex:
+                   min_i over edges of (x[i] + 1).
+    """
+    cost = jnp.where(adj > 0, 1.0, INF).astype(jnp.float32)
+    return (minplus_mvm(cost, x),)
+
+
+def sssp_step(adjw: jax.Array, x: jax.Array) -> tuple[jax.Array]:
+    """SSSP edge-compute: adjw holds positive edge weights, 0 = no edge.
+
+    returns (B, C) candidate distances min_i (x[i] + w[i, j]).
+    """
+    cost = jnp.where(adjw > 0, adjw, INF).astype(jnp.float32)
+    return (minplus_mvm(cost, x),)
+
+
+def wcc_step(adj: jax.Array, x: jax.Array) -> tuple[jax.Array]:
+    """WCC (min-label propagation) edge-compute: min-plus with zero edge
+    cost, so each destination receives the minimum label among its sources.
+    """
+    cost = jnp.where(adj > 0, 0.0, INF).astype(jnp.float32)
+    return (minplus_mvm(cost, x),)
+
+
+def pagerank_step(adj: jax.Array, contrib: jax.Array) -> tuple[jax.Array]:
+    """PageRank edge-compute: plain analog MAC along bitlines.
+
+    contrib: (B, C) = rank[i] / outdeg[i] of the source vertices (the rust
+    side pre-divides; the crossbar stores the 1-bit adjacency).
+    returns (B, C) partial rank mass arriving at each destination vertex.
+    """
+    return (matmul_mvm(adj.astype(jnp.float32), contrib),)
+
+
+def pagerank_step_adc(adj: jax.Array, contrib: jax.Array, *, c: int) -> tuple[jax.Array]:
+    """PageRank edge-compute through the 8-bit ADC model.
+
+    Full-scale = C (a bitline can at most sum C unit contributions); this
+    is the fidelity-loss variant used by the ADC ablation bench.
+    """
+    return (matmul_mvm_adc(adj.astype(jnp.float32), contrib, float(c)),)
+
+
+def mvm_step(patterns: jax.Array, x: jax.Array) -> tuple[jax.Array]:
+    """Raw crossbar MVM — the quickstart / microbench artifact."""
+    return (matmul_mvm(patterns, x),)
+
+
+#: name -> (builder taking (B, C) -> (fn, example_args)) for aot.py.
+def _specs(b: int, c: int):
+    mat = jax.ShapeDtypeStruct((b, c, c), jnp.float32)
+    vec = jax.ShapeDtypeStruct((b, c), jnp.float32)
+    return mat, vec
+
+
+def build_step(name: str, b: int, c: int):
+    """Return (callable, example_args) for a named step at batch B, size C."""
+    mat, vec = _specs(b, c)
+    if name == "bfs":
+        return bfs_step, (mat, vec)
+    if name == "sssp":
+        return sssp_step, (mat, vec)
+    if name == "wcc":
+        return wcc_step, (mat, vec)
+    if name == "pagerank":
+        return pagerank_step, (mat, vec)
+    if name == "pagerank_adc":
+        return (lambda adj, x: pagerank_step_adc(adj, x, c=c)), (mat, vec)
+    if name == "mvm":
+        return mvm_step, (mat, vec)
+    raise ValueError(f"unknown step {name!r}")
+
+
+STEP_NAMES = ("bfs", "sssp", "wcc", "pagerank", "pagerank_adc", "mvm")

@@ -1,0 +1,108 @@
+"""Pallas kernels vs pure-jnp oracles — the CORE correctness signal.
+
+hypothesis sweeps batch size, crossbar size, and value ranges; every
+kernel must match its ref.py oracle to f32 tolerance.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import INF, matmul_mvm, matmul_mvm_adc, minplus_mvm
+from compile.kernels import ref
+
+# Keep example counts modest: every pallas interpret trace is a fresh jit.
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def rand(shape, seed, lo=-4.0, hi=4.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.uniform(lo, hi, size=shape), dtype=jnp.float32)
+
+
+@given(b=st.integers(1, 8), c=st.integers(1, 8), seed=st.integers(0, 2**31))
+@settings(**SETTINGS)
+def test_matmul_mvm_matches_ref(b, c, seed):
+    g = rand((b, c, c), seed)
+    x = rand((b, c), seed + 1)
+    got = matmul_mvm(g, x)
+    want = ref.matmul_mvm_ref(g, x)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+@given(b=st.integers(1, 6), c=st.integers(1, 8), seed=st.integers(0, 2**31))
+@settings(**SETTINGS)
+def test_minplus_mvm_matches_ref(b, c, seed):
+    cost = rand((b, c, c), seed, lo=0.0, hi=10.0)
+    x = rand((b, c), seed + 1, lo=0.0, hi=10.0)
+    got = minplus_mvm(cost, x)
+    want = ref.minplus_mvm_ref(cost, x)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+@given(
+    b=st.integers(1, 4),
+    c=st.integers(1, 8),
+    seed=st.integers(0, 2**31),
+    fullscale=st.sampled_from([1.0, 4.0, 8.0, 16.0]),
+)
+@settings(**SETTINGS)
+def test_matmul_mvm_adc_matches_ref(b, c, seed, fullscale):
+    g = jnp.asarray(
+        np.random.default_rng(seed).integers(0, 2, size=(b, c, c)), jnp.float32
+    )
+    x = rand((b, c), seed + 1, lo=0.0, hi=1.0)
+    got = matmul_mvm_adc(g, x, fullscale)
+    want = ref.matmul_mvm_adc_ref(g, x, fullscale)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+def test_minplus_respects_inf_sentinel():
+    # A crossbar with no edges must return >= INF everywhere (no update).
+    cost = jnp.full((2, 4, 4), INF, jnp.float32)
+    x = jnp.zeros((2, 4), jnp.float32)
+    out = minplus_mvm(cost, x)
+    assert bool(jnp.all(out >= INF))
+
+
+def test_minplus_single_edge():
+    # One edge 0 -> 2 with weight 1, source level 3 => dest candidate 4.
+    cost = jnp.full((1, 4, 4), INF, jnp.float32)
+    cost = cost.at[0, 0, 2].set(1.0)
+    x = jnp.full((1, 4), INF, jnp.float32).at[0, 0].set(3.0)
+    out = np.asarray(minplus_mvm(cost, x))
+    assert out[0, 2] == pytest.approx(4.0)
+    assert np.all(out[0, [0, 1, 3]] >= INF)
+
+
+def test_matmul_is_transpose_contraction():
+    # out[j] = sum_i G[i,j] x[i]  — i.e. x @ G, not G @ x.
+    g = jnp.arange(16, dtype=jnp.float32).reshape(1, 4, 4)
+    x = jnp.asarray([[1.0, 0.0, 0.0, 0.0]])
+    out = np.asarray(matmul_mvm(g, x))
+    np.testing.assert_allclose(out[0], np.arange(4.0))  # row 0 of G
+
+
+def test_adc_quantization_is_monotone_and_bounded():
+    v = jnp.linspace(-1.0, 20.0, 64)
+    q = np.asarray(ref.adc_quantize_ref(v, 16.0))
+    assert np.all(np.diff(q) >= 0)
+    assert q.min() >= 0.0 and q.max() <= 16.0
+
+
+def test_adc_idempotent():
+    v = rand((32,), 7, lo=0.0, hi=4.0)
+    q1 = ref.adc_quantize_ref(v, 4.0)
+    q2 = ref.adc_quantize_ref(q1, 4.0)
+    np.testing.assert_allclose(q1, q2, rtol=0, atol=1e-6)
+
+
+def test_kernels_are_jittable_at_paper_shapes():
+    # The exact shapes aot.py lowers must trace cleanly.
+    for b, c in [(32, 4), (32, 8), (128, 4)]:
+        g = rand((b, c, c), b + c)
+        x = rand((b, c), b * c)
+        assert matmul_mvm(g, x).shape == (b, c)
+        assert minplus_mvm(jnp.abs(g), jnp.abs(x)).shape == (b, c)

@@ -1,0 +1,89 @@
+"""Layer-2 batch-step semantics: handcrafted graph fragments."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import INF
+from compile.model import (
+    STEP_NAMES,
+    bfs_step,
+    build_step,
+    pagerank_step,
+    pagerank_step_adc,
+    sssp_step,
+)
+
+
+def test_bfs_step_propagates_level_plus_one():
+    # Subgraph: edges 0->1 and 0->3; source vertex 0 at level 2.
+    adj = jnp.zeros((1, 4, 4), jnp.float32).at[0, 0, 1].set(1.0).at[0, 0, 3].set(1.0)
+    x = jnp.full((1, 4), INF, jnp.float32).at[0, 0].set(2.0)
+    (out,) = bfs_step(adj, x)
+    out = np.asarray(out)
+    assert out[0, 1] == pytest.approx(3.0)
+    assert out[0, 3] == pytest.approx(3.0)
+    assert np.all(out[0, [0, 2]] >= INF)
+
+
+def test_bfs_step_unvisited_sources_never_update():
+    adj = jnp.ones((1, 4, 4), jnp.float32)
+    x = jnp.full((1, 4), INF, jnp.float32)
+    (out,) = bfs_step(adj, x)
+    assert bool(jnp.all(out >= INF))
+
+
+def test_bfs_step_takes_min_over_sources():
+    # Both 0->2 and 1->2 exist; levels 5 and 1 => dest candidate 2.
+    adj = jnp.zeros((1, 4, 4), jnp.float32).at[0, 0, 2].set(1.0).at[0, 1, 2].set(1.0)
+    x = jnp.full((1, 4), INF, jnp.float32).at[0, 0].set(5.0).at[0, 1].set(1.0)
+    (out,) = bfs_step(adj, x)
+    assert np.asarray(out)[0, 2] == pytest.approx(2.0)
+
+
+def test_sssp_step_uses_edge_weights():
+    adjw = jnp.zeros((1, 4, 4), jnp.float32).at[0, 0, 1].set(2.5).at[0, 2, 1].set(0.5)
+    x = jnp.full((1, 4), INF, jnp.float32).at[0, 0].set(1.0).at[0, 2].set(4.0)
+    (out,) = sssp_step(adjw, x)
+    # min(1.0 + 2.5, 4.0 + 0.5) = 3.5
+    assert np.asarray(out)[0, 1] == pytest.approx(3.5)
+
+
+def test_sssp_zero_weight_means_no_edge():
+    adjw = jnp.zeros((2, 4, 4), jnp.float32)
+    x = jnp.zeros((2, 4), jnp.float32)
+    (out,) = sssp_step(adjw, x)
+    assert bool(jnp.all(out >= INF))
+
+
+def test_pagerank_step_sums_contributions():
+    adj = jnp.zeros((1, 4, 4), jnp.float32).at[0, 0, 3].set(1.0).at[0, 1, 3].set(1.0)
+    contrib = jnp.asarray([[0.25, 0.5, 0.0, 0.0]])
+    (out,) = pagerank_step(adj, contrib)
+    assert np.asarray(out)[0, 3] == pytest.approx(0.75)
+    assert np.asarray(out)[0, :3] == pytest.approx([0.0, 0.0, 0.0])
+
+
+def test_pagerank_adc_close_to_exact():
+    rng = np.random.default_rng(0)
+    adj = jnp.asarray(rng.integers(0, 2, (8, 4, 4)), jnp.float32)
+    contrib = jnp.asarray(rng.uniform(0, 0.25, (8, 4)), jnp.float32)
+    (exact,) = pagerank_step(adj, contrib)
+    (quant,) = pagerank_step_adc(adj, contrib, c=4)
+    # 8-bit over full-scale 4 => lsb ~ 0.0157; error bounded by lsb/2.
+    np.testing.assert_allclose(quant, exact, atol=4.0 / 255 / 2 + 1e-6)
+
+
+def test_build_step_covers_all_names_and_shapes():
+    for name in STEP_NAMES:
+        fn, (mat, vec) = build_step(name, 6, 2)
+        assert mat.shape == (6, 2, 2) and vec.shape == (6, 2)
+        adj = jnp.zeros(mat.shape, jnp.float32)
+        x = jnp.zeros(vec.shape, jnp.float32)
+        (out,) = fn(adj, x)
+        assert out.shape == (6, 2)
+
+
+def test_build_step_rejects_unknown():
+    with pytest.raises(ValueError):
+        build_step("pagerankk", 4, 4)

@@ -1,0 +1,140 @@
+//! Per-iteration engine activity trace (paper Fig. 5): crossbar
+//! read/write bit counts per engine per scheduler iteration, plus the
+//! sliding-window 0–100 normalization the figure plots.
+
+/// Flattened trace: iteration-major, engine-minor.
+#[derive(Debug, Clone, Default)]
+pub struct ActivityTrace {
+    pub num_engines: usize,
+    reads: Vec<u32>,
+    writes: Vec<u32>,
+}
+
+impl ActivityTrace {
+    pub fn new(num_engines: usize) -> Self {
+        Self { num_engines, reads: Vec::new(), writes: Vec::new() }
+    }
+
+    /// Append one iteration's per-engine (read_bits, write_bits).
+    pub fn push_iteration(&mut self, per_engine: impl Iterator<Item = (u32, u32)>) {
+        let before = self.reads.len();
+        for (r, w) in per_engine {
+            self.reads.push(r);
+            self.writes.push(w);
+        }
+        debug_assert_eq!(self.reads.len() - before, self.num_engines);
+    }
+
+    pub fn num_iterations(&self) -> usize {
+        if self.num_engines == 0 {
+            0
+        } else {
+            self.reads.len() / self.num_engines
+        }
+    }
+
+    #[inline]
+    pub fn read(&self, iter: usize, engine: usize) -> u32 {
+        self.reads[iter * self.num_engines + engine]
+    }
+
+    #[inline]
+    pub fn write(&self, iter: usize, engine: usize) -> u32 {
+        self.writes[iter * self.num_engines + engine]
+    }
+
+    /// Fig. 5 series: aggregate over a sliding window of `window`
+    /// iterations and normalize to 0–100 against the global max, per
+    /// engine. Returns `(read_activity, write_activity)`, each
+    /// `[engine][window_index]`.
+    pub fn windowed_activity(&self, window: usize) -> (Vec<Vec<f64>>, Vec<Vec<f64>>) {
+        assert!(window >= 1);
+        let iters = self.num_iterations();
+        let nw = iters.div_ceil(window).max(1);
+        let mut reads = vec![vec![0f64; nw]; self.num_engines];
+        let mut writes = vec![vec![0f64; nw]; self.num_engines];
+        for it in 0..iters {
+            for e in 0..self.num_engines {
+                reads[e][it / window] += self.read(it, e) as f64;
+                writes[e][it / window] += self.write(it, e) as f64;
+            }
+        }
+        let norm = |m: &mut Vec<Vec<f64>>| {
+            let max = m
+                .iter()
+                .flat_map(|row| row.iter().copied())
+                .fold(0.0f64, f64::max);
+            if max > 0.0 {
+                for row in m.iter_mut() {
+                    for v in row.iter_mut() {
+                        *v = *v / max * 100.0;
+                    }
+                }
+            }
+        };
+        norm(&mut reads);
+        norm(&mut writes);
+        (reads, writes)
+    }
+
+    /// Total (reads, writes) per engine across the whole run.
+    pub fn totals(&self) -> Vec<(u64, u64)> {
+        let mut out = vec![(0u64, 0u64); self.num_engines];
+        for it in 0..self.num_iterations() {
+            for e in 0..self.num_engines {
+                out[e].0 += self.read(it, e) as u64;
+                out[e].1 += self.write(it, e) as u64;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn trace() -> ActivityTrace {
+        let mut t = ActivityTrace::new(2);
+        t.push_iteration([(10, 0), (0, 5)].into_iter());
+        t.push_iteration([(20, 0), (0, 0)].into_iter());
+        t.push_iteration([(30, 0), (10, 5)].into_iter());
+        t.push_iteration([(0, 0), (0, 0)].into_iter());
+        t
+    }
+
+    #[test]
+    fn indexing() {
+        let t = trace();
+        assert_eq!(t.num_iterations(), 4);
+        assert_eq!(t.read(0, 0), 10);
+        assert_eq!(t.write(2, 1), 5);
+    }
+
+    #[test]
+    fn windowed_normalizes_to_100() {
+        let t = trace();
+        let (r, w) = t.windowed_activity(2);
+        assert_eq!(r[0].len(), 2);
+        // Engine 0 reads: windows [30, 30] -> both 100.
+        assert_eq!(r[0], vec![100.0, 100.0]);
+        // Engine 1 reads: [0, 10] -> [0, 33.3].
+        assert!(r[1][0] == 0.0 && (r[1][1] - 100.0 / 3.0).abs() < 1e-9);
+        // Writes max is 5 per window.
+        assert_eq!(w[1][0], 100.0);
+    }
+
+    #[test]
+    fn totals_sum_all_iterations() {
+        let t = trace();
+        assert_eq!(t.totals(), vec![(60, 0), (10, 10)]);
+    }
+
+    #[test]
+    fn empty_trace() {
+        let t = ActivityTrace::new(3);
+        assert_eq!(t.num_iterations(), 0);
+        let (r, _) = t.windowed_activity(4);
+        assert_eq!(r.len(), 3);
+    }
+}

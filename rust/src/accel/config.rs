@@ -1,0 +1,181 @@
+//! Architecture parameters (paper §III.A): crossbar size C, total graph
+//! engines T, static engines N, crossbars per engine M — plus execution
+//! order and the dynamic-engine replacement policy.
+
+use crate::pattern::tables::{ExecOrder, StaticAssignment};
+
+/// Dynamic-engine replacement policy selector (Alg. 2 `FindGE`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PolicyKind {
+    /// Least-recently-used slot (default).
+    #[default]
+    Lru,
+    /// Round-robin over dynamic slots.
+    RoundRobin,
+    /// Least-frequently-used slot.
+    Lfu,
+    /// Uniform random slot (deterministic seed).
+    Random,
+}
+
+impl PolicyKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "lru" => Some(Self::Lru),
+            "rr" | "round-robin" | "roundrobin" => Some(Self::RoundRobin),
+            "lfu" => Some(Self::Lfu),
+            "random" | "rand" => Some(Self::Random),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Lru => "lru",
+            Self::RoundRobin => "round-robin",
+            Self::Lfu => "lfu",
+            Self::Random => "random",
+        }
+    }
+}
+
+/// Generic architecture model (Fig. 2): all four paper parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArchConfig {
+    /// Crossbar size C (window size), 1..=8.
+    pub crossbar_size: usize,
+    /// Total number of graph engines T.
+    pub total_engines: u32,
+    /// Number of static graph engines N (≤ T).
+    pub static_engines: u32,
+    /// Crossbars per graph engine M.
+    pub crossbars_per_engine: u32,
+    /// Streaming-apply execution order (§III.C).
+    pub order: ExecOrder,
+    /// Dynamic-engine replacement policy.
+    pub policy: PolicyKind,
+    /// Static slot apportionment: `Balanced` (default) replicates hot
+    /// patterns across engines proportionally to frequency ("balances
+    /// pattern load among static engines", §III.B); `TopK` is the
+    /// literal one-slot-per-pattern Alg. 1 (ablation).
+    pub static_assignment: StaticAssignment,
+    /// Extension (not in the paper): before reconfiguring, check whether
+    /// a dynamic crossbar *already holds* the pattern and reuse it
+    /// write-free. Alg. 2 reconfigures unconditionally ("…and then
+    /// reconfigured with the corresponding pattern"), so this defaults to
+    /// off; the ablation bench quantifies what reuse would buy.
+    pub dynamic_reuse: bool,
+    /// Record the per-iteration activity trace (Fig. 5) — adds memory
+    /// proportional to iterations × engines, so off by default.
+    pub trace_activity: bool,
+}
+
+impl Default for ArchConfig {
+    /// Paper §IV.A defaults: 32 engines with 4×4 crossbars; 16 static
+    /// (the Fig. 6 optimum); single crossbar per engine.
+    fn default() -> Self {
+        Self {
+            crossbar_size: 4,
+            total_engines: 32,
+            static_engines: 16,
+            crossbars_per_engine: 1,
+            order: ExecOrder::ColumnMajor,
+            policy: PolicyKind::Lru,
+            static_assignment: StaticAssignment::Balanced,
+            dynamic_reuse: false,
+            trace_activity: false,
+        }
+    }
+}
+
+impl ArchConfig {
+    /// Paper Fig. 5 configuration: 6 engines (4 static + 2 dynamic),
+    /// 4 crossbars each, with tracing on.
+    pub fn fig5() -> Self {
+        Self {
+            total_engines: 6,
+            static_engines: 4,
+            crossbars_per_engine: 4,
+            trace_activity: true,
+            ..Self::default()
+        }
+    }
+
+    /// Paper §IV.D lifetime configuration: 128 engines.
+    pub fn lifetime() -> Self {
+        Self { total_engines: 128, static_engines: 16, ..Self::default() }
+    }
+
+    pub fn dynamic_engines(&self) -> u32 {
+        self.total_engines - self.static_engines
+    }
+
+    /// Static pattern capacity N × M.
+    pub fn static_capacity(&self) -> u32 {
+        self.static_engines * self.crossbars_per_engine
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            (1..=crate::pattern::pattern::MAX_C).contains(&self.crossbar_size),
+            "crossbar size must be 1..=8, got {}",
+            self.crossbar_size
+        );
+        anyhow::ensure!(self.total_engines >= 1, "need at least one engine");
+        anyhow::ensure!(
+            self.static_engines <= self.total_engines,
+            "static engines ({}) exceed total ({})",
+            self.static_engines,
+            self.total_engines
+        );
+        anyhow::ensure!(self.crossbars_per_engine >= 1, "need at least one crossbar per engine");
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_matches_paper_setup() {
+        let c = ArchConfig::default();
+        assert_eq!(c.crossbar_size, 4);
+        assert_eq!(c.total_engines, 32);
+        assert_eq!(c.static_engines, 16);
+        assert_eq!(c.crossbars_per_engine, 1);
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn fig5_config() {
+        let c = ArchConfig::fig5();
+        assert_eq!(c.total_engines, 6);
+        assert_eq!(c.static_engines, 4);
+        assert_eq!(c.crossbars_per_engine, 4);
+        assert_eq!(c.static_capacity(), 16);
+        assert!(c.trace_activity);
+    }
+
+    #[test]
+    fn validation_catches_bad_configs() {
+        let mut c = ArchConfig::default();
+        c.static_engines = 40;
+        assert!(c.validate().is_err());
+        c = ArchConfig::default();
+        c.crossbar_size = 9;
+        assert!(c.validate().is_err());
+        c = ArchConfig::default();
+        c.crossbars_per_engine = 0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn policy_parsing() {
+        assert_eq!(PolicyKind::parse("LRU"), Some(PolicyKind::Lru));
+        assert_eq!(PolicyKind::parse("rr"), Some(PolicyKind::RoundRobin));
+        assert_eq!(PolicyKind::parse("lfu"), Some(PolicyKind::Lfu));
+        assert_eq!(PolicyKind::parse("random"), Some(PolicyKind::Random));
+        assert_eq!(PolicyKind::parse("fifo"), None);
+    }
+}

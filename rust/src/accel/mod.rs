@@ -1,0 +1,10 @@
+//! Top-level accelerator: architecture configuration, the preprocessing +
+//! simulation pipeline, and per-iteration activity tracing.
+
+pub mod activity;
+pub mod config;
+pub mod simulator;
+
+pub use activity::ActivityTrace;
+pub use config::{ArchConfig, PolicyKind};
+pub use simulator::{Accelerator, Preprocessed, SimReport};

@@ -1,0 +1,184 @@
+//! Top-level accelerator: design flow of Fig. 2 — preprocess the input
+//! graph against an architecture model, then execute vertex programs and
+//! report energy/latency/lifetime.
+
+use anyhow::Result;
+
+use crate::algo::traits::VertexProgram;
+use crate::cost::{CostParams, EnergyBreakdown, EventCounts};
+use crate::graph::Coo;
+use crate::pattern::extract::{partition, Partitioned};
+use crate::pattern::rank::PatternRanking;
+use crate::pattern::tables::{ConfigTable, SubgraphTable};
+use crate::sched::executor::StepExecutor;
+use crate::sched::scheduler::{RunResult, Scheduler};
+
+use super::config::ArchConfig;
+
+/// Output of the preprocessing stage (Alg. 1): everything the runtime
+/// needs, resident in main memory.
+#[derive(Debug, Clone)]
+pub struct Preprocessed {
+    pub part: Partitioned,
+    pub ranking: PatternRanking,
+    pub ct: ConfigTable,
+    pub st: SubgraphTable,
+}
+
+impl Preprocessed {
+    /// Fraction of subgraph occurrences served by static engines.
+    pub fn static_coverage(&self) -> f64 {
+        self.ct.static_coverage()
+    }
+}
+
+/// One simulated execution, summarized.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    pub design: String,
+    pub algorithm: String,
+    pub counts: EventCounts,
+    pub energy: EnergyBreakdown,
+    pub exec_time_ns: f64,
+    pub supersteps: usize,
+    pub iterations: u64,
+    pub static_hit_rate: f64,
+    /// Max per-cell writes on any runtime-writable crossbar (lifetime w).
+    pub max_cell_writes: u64,
+    pub run: Option<RunResult>,
+}
+
+impl SimReport {
+    pub fn energy_j(&self) -> f64 {
+        self.energy.total_j()
+    }
+
+    pub fn exec_time_s(&self) -> f64 {
+        self.exec_time_ns * 1e-9
+    }
+}
+
+/// The proposed accelerator (preprocessing + scheduler + cost model).
+pub struct Accelerator {
+    pub config: ArchConfig,
+    pub params: CostParams,
+}
+
+impl Accelerator {
+    pub fn new(config: ArchConfig, params: CostParams) -> Self {
+        Self { config, params }
+    }
+
+    pub fn with_defaults() -> Self {
+        Self::new(ArchConfig::default(), CostParams::default())
+    }
+
+    /// Alg. 1: partition, rank, build CT/ST.
+    pub fn preprocess(&self, graph: &Coo, weighted: bool) -> Result<Preprocessed> {
+        self.config.validate()?;
+        let part = partition(graph, self.config.crossbar_size, weighted);
+        let ranking = PatternRanking::from_partitioned(&part);
+        let ct = ConfigTable::build(
+            &ranking,
+            self.config.crossbar_size,
+            self.config.static_engines,
+            self.config.crossbars_per_engine,
+            self.config.dynamic_engines() * self.config.crossbars_per_engine,
+            self.config.static_assignment,
+        );
+        let st = SubgraphTable::build(&part, &ranking, self.config.order);
+        Ok(Preprocessed { part, ranking, ct, st })
+    }
+
+    /// Alg. 2: run a vertex program on a preprocessed graph.
+    pub fn run(
+        &self,
+        pre: &Preprocessed,
+        program: &dyn VertexProgram,
+        executor: &mut dyn StepExecutor,
+    ) -> Result<SimReport> {
+        let sched = Scheduler::new(&self.config, &self.params, &pre.part, &pre.ct, &pre.st);
+        let run = sched.run(program, executor)?;
+        let total = run.total_counts();
+        Ok(SimReport {
+            design: "Proposed".to_string(),
+            algorithm: program.name().to_string(),
+            counts: total,
+            energy: total.energy(&self.params),
+            exec_time_ns: run.exec_time_ns,
+            supersteps: run.supersteps,
+            iterations: run.iterations,
+            static_hit_rate: run.static_hit_rate(),
+            max_cell_writes: run.max_dynamic_cell_writes as u64,
+            run: Some(run),
+        })
+    }
+
+    /// Convenience: preprocess + run in one call.
+    pub fn simulate(
+        &self,
+        graph: &Coo,
+        program: &dyn VertexProgram,
+        executor: &mut dyn StepExecutor,
+    ) -> Result<SimReport> {
+        let pre = self.preprocess(graph, program.needs_weights())?;
+        self.run(&pre, program, executor)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::Bfs;
+    use crate::graph::datasets::Dataset;
+    use crate::sched::executor::NativeExecutor;
+
+    #[test]
+    fn end_to_end_simulate_tiny() {
+        let g = Dataset::Tiny.load().unwrap();
+        let acc = Accelerator::with_defaults();
+        let report = acc
+            .simulate(&g, &Bfs::new(0), &mut NativeExecutor)
+            .unwrap();
+        assert!(report.energy_j() > 0.0);
+        assert!(report.exec_time_ns > 0.0);
+        assert!(report.static_hit_rate > 0.0);
+        assert_eq!(report.design, "Proposed");
+        assert_eq!(report.algorithm, "bfs");
+    }
+
+    #[test]
+    fn preprocess_exposes_coverage() {
+        let g = Dataset::Tiny.load().unwrap();
+        let acc = Accelerator::with_defaults();
+        let pre = acc.preprocess(&g, false).unwrap();
+        let cov = pre.static_coverage();
+        assert!(cov > 0.0 && cov <= 1.0);
+        assert_eq!(pre.ct.num_static_engines, 16);
+        assert!(!pre.st.is_empty());
+    }
+
+    #[test]
+    fn energy_dominated_by_reads_not_writes() {
+        // With 16 static engines, runtime write energy should be a small
+        // share — the headline effect of the paper.
+        let g = Dataset::Tiny.load().unwrap();
+        let acc = Accelerator::with_defaults();
+        let r = acc.simulate(&g, &Bfs::new(0), &mut NativeExecutor).unwrap();
+        assert!(
+            r.energy.reram_write_j < r.energy.total_j() * 0.5,
+            "write energy {:.3e} of {:.3e}",
+            r.energy.reram_write_j,
+            r.energy.total_j()
+        );
+    }
+
+    #[test]
+    fn invalid_config_rejected() {
+        let g = Dataset::Tiny.load().unwrap();
+        let mut config = ArchConfig::default();
+        config.static_engines = 99;
+        let acc = Accelerator::new(config, CostParams::default());
+        assert!(acc.preprocess(&g, false).is_err());
+    }
+}

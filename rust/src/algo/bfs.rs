@@ -1,0 +1,75 @@
+//! Breadth-First Search as a vertex program: values are levels; the
+//! edge-compute min-plus uses unit edge cost, so the fixpoint equals the
+//! BFS level of every reachable vertex. The paper uses BFS as its
+//! baseline benchmark algorithm (§IV.A).
+
+use super::traits::{Semiring, StepKind, VertexProgram, INF};
+
+#[derive(Debug, Clone, Copy)]
+pub struct Bfs {
+    pub source: u32,
+}
+
+impl Bfs {
+    pub fn new(source: u32) -> Self {
+        Self { source }
+    }
+}
+
+impl VertexProgram for Bfs {
+    fn name(&self) -> &'static str {
+        "bfs"
+    }
+
+    fn semiring(&self) -> Semiring {
+        Semiring::MinPlus
+    }
+
+    fn step_kind(&self) -> StepKind {
+        StepKind::Bfs
+    }
+
+    fn init(&self, num_vertices: u32) -> Vec<f32> {
+        let mut v = vec![INF; num_vertices as usize];
+        if (self.source as usize) < v.len() {
+            v[self.source as usize] = 0.0;
+        }
+        v
+    }
+
+    fn apply(&self, old: f32, reduced: f32) -> f32 {
+        old.min(reduced)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_sets_source_to_zero() {
+        let v = Bfs::new(2).init(4);
+        assert_eq!(v, vec![INF, INF, 0.0, INF]);
+    }
+
+    #[test]
+    fn apply_is_min() {
+        let b = Bfs::new(0);
+        assert_eq!(b.apply(5.0, 3.0), 3.0);
+        assert_eq!(b.apply(2.0, 9.0), 2.0);
+    }
+
+    #[test]
+    fn changed_detects_updates() {
+        let b = Bfs::new(0);
+        assert!(b.changed(INF, 3.0));
+        assert!(!b.changed(3.0, 3.0));
+    }
+
+    #[test]
+    fn frontier_semantics() {
+        let b = Bfs::new(0);
+        assert!(!b.processes_all_blocks());
+        assert!(!b.needs_weights());
+    }
+}

@@ -1,0 +1,17 @@
+//! Graph algorithms in the vertex programming model (paper §III.D,
+//! inherited from GraphR): *edge compute* runs as in-situ MVM on the
+//! crossbars, *reduce and apply* runs on the engine ALU. Pure-CPU
+//! reference implementations validate the accelerator's numeric output.
+
+pub mod bfs;
+pub mod pagerank;
+pub mod reference;
+pub mod sssp;
+pub mod traits;
+pub mod wcc;
+
+pub use bfs::Bfs;
+pub use pagerank::PageRank;
+pub use sssp::Sssp;
+pub use traits::{Semiring, StepKind, VertexProgram, INF};
+pub use wcc::Wcc;

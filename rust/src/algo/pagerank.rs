@@ -1,0 +1,121 @@
+//! PageRank: sum-product edge compute (the crossbar's native analog MAC)
+//! with damping applied in the reduce/apply phase. Runs a fixed number of
+//! synchronous power iterations — the same schedule as the CPU reference,
+//! so results are comparable to float tolerance.
+
+use super::traits::{Semiring, StepKind, VertexProgram};
+
+#[derive(Debug, Clone, Copy)]
+pub struct PageRank {
+    pub damping: f32,
+    pub iterations: usize,
+}
+
+impl Default for PageRank {
+    fn default() -> Self {
+        Self { damping: 0.85, iterations: 20 }
+    }
+}
+
+impl PageRank {
+    pub fn new(damping: f32, iterations: usize) -> Self {
+        assert!((0.0..1.0).contains(&damping));
+        assert!(iterations >= 1);
+        Self { damping, iterations }
+    }
+}
+
+impl VertexProgram for PageRank {
+    fn name(&self) -> &'static str {
+        "pagerank"
+    }
+
+    fn semiring(&self) -> Semiring {
+        Semiring::SumProd
+    }
+
+    fn step_kind(&self) -> StepKind {
+        StepKind::PageRank
+    }
+
+    fn init(&self, num_vertices: u32) -> Vec<f32> {
+        let r = 1.0 / num_vertices.max(1) as f32;
+        vec![r; num_vertices as usize]
+    }
+
+    fn source_value(&self, value: f32, out_degree: u32) -> f32 {
+        if out_degree == 0 {
+            0.0 // dangling mass dropped, as in GraphR's streaming model
+        } else {
+            value / out_degree as f32
+        }
+    }
+
+    /// Not used for SumProd (scheduler accumulates into `acc`); finalize
+    /// happens in `post_superstep`.
+    fn apply(&self, _old: f32, reduced: f32) -> f32 {
+        reduced
+    }
+
+    fn post_superstep(
+        &self,
+        superstep: usize,
+        values: &mut [f32],
+        acc: &mut [f32],
+        _any_changed: bool,
+    ) -> bool {
+        let n = values.len().max(1) as f32;
+        let base = (1.0 - self.damping) / n;
+        for (v, a) in values.iter_mut().zip(acc.iter_mut()) {
+            *v = base + self.damping * *a;
+            *a = 0.0;
+        }
+        superstep + 1 < self.iterations
+    }
+
+    fn max_supersteps(&self) -> usize {
+        self.iterations
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_is_uniform() {
+        let v = PageRank::default().init(4);
+        assert!(v.iter().all(|&x| (x - 0.25).abs() < 1e-7));
+    }
+
+    #[test]
+    fn source_value_divides_by_outdegree() {
+        let pr = PageRank::default();
+        assert_eq!(pr.source_value(0.6, 3), 0.2);
+        assert_eq!(pr.source_value(0.6, 0), 0.0);
+    }
+
+    #[test]
+    fn post_superstep_applies_damping_and_resets_acc() {
+        let pr = PageRank::new(0.85, 2);
+        let mut values = vec![0.0f32; 2];
+        let mut acc = vec![0.4f32, 0.1];
+        let cont = pr.post_superstep(0, &mut values, &mut acc, true);
+        assert!(cont);
+        assert!((values[0] - (0.075 + 0.85 * 0.4)).abs() < 1e-6);
+        assert_eq!(acc, vec![0.0, 0.0]);
+        // Second superstep is the last.
+        assert!(!pr.post_superstep(1, &mut values, &mut acc, true));
+    }
+
+    #[test]
+    fn processes_all_blocks() {
+        assert!(PageRank::default().processes_all_blocks());
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_bad_damping() {
+        PageRank::new(1.5, 10);
+    }
+}

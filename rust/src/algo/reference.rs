@@ -1,0 +1,209 @@
+//! Pure-CPU reference implementations — ground truth for validating the
+//! accelerator's numeric output (end-to-end example + integration tests).
+
+use std::collections::VecDeque;
+
+use crate::graph::Csr;
+
+use super::traits::INF;
+
+/// BFS levels from `source` (INF for unreachable vertices).
+pub fn bfs_levels(csr: &Csr, source: u32) -> Vec<f32> {
+    let n = csr.num_vertices as usize;
+    let mut level = vec![INF; n];
+    if source as usize >= n {
+        return level;
+    }
+    level[source as usize] = 0.0;
+    let mut q = VecDeque::new();
+    q.push_back(source);
+    while let Some(v) = q.pop_front() {
+        let next = level[v as usize] + 1.0;
+        for (u, _) in csr.neighbors(v) {
+            if level[u as usize] >= INF {
+                level[u as usize] = next;
+                q.push_back(u);
+            }
+        }
+    }
+    level
+}
+
+/// SSSP distances via Bellman–Ford (handles any non-negative weights; the
+/// accelerator's synchronous min-plus converges to the same fixpoint).
+pub fn sssp_distances(csr: &Csr, source: u32) -> Vec<f32> {
+    let n = csr.num_vertices as usize;
+    let mut dist = vec![INF; n];
+    if source as usize >= n {
+        return dist;
+    }
+    dist[source as usize] = 0.0;
+    let mut active: Vec<u32> = vec![source];
+    let mut next: Vec<u32> = Vec::new();
+    let mut in_next = vec![false; n];
+    let mut rounds = 0;
+    while !active.is_empty() && rounds <= n {
+        for &v in &active {
+            let dv = dist[v as usize];
+            for (u, w) in csr.neighbors(v) {
+                let cand = dv + w;
+                if cand < dist[u as usize] {
+                    dist[u as usize] = cand;
+                    if !in_next[u as usize] {
+                        in_next[u as usize] = true;
+                        next.push(u);
+                    }
+                }
+            }
+        }
+        active.clear();
+        std::mem::swap(&mut active, &mut next);
+        for &v in &active {
+            in_next[v as usize] = false;
+        }
+        rounds += 1;
+    }
+    dist
+}
+
+/// Synchronous PageRank, identical schedule to the accelerator: `iters`
+/// power iterations, damping `d`, dangling mass dropped.
+pub fn pagerank(csr: &Csr, d: f32, iters: usize) -> Vec<f32> {
+    let n = csr.num_vertices as usize;
+    if n == 0 {
+        return vec![];
+    }
+    let mut rank = vec![1.0 / n as f32; n];
+    let mut acc = vec![0f32; n];
+    for _ in 0..iters {
+        acc.iter_mut().for_each(|a| *a = 0.0);
+        for v in 0..n as u32 {
+            let deg = csr.out_degree(v);
+            if deg == 0 {
+                continue;
+            }
+            let share = rank[v as usize] / deg as f32;
+            for (u, _) in csr.neighbors(v) {
+                acc[u as usize] += share;
+            }
+        }
+        let base = (1.0 - d) / n as f32;
+        for (r, a) in rank.iter_mut().zip(&acc) {
+            *r = base + d * a;
+        }
+    }
+    rank
+}
+
+/// Weakly-connected-component labels (min vertex id per component).
+/// Assumes the graph is already symmetrized (paper benchmarks are
+/// undirected).
+pub fn wcc_labels(csr: &Csr) -> Vec<f32> {
+    let n = csr.num_vertices as usize;
+    let mut label: Vec<f32> = (0..n).map(|v| v as f32).collect();
+    let mut changed = true;
+    while changed {
+        changed = false;
+        for v in 0..n as u32 {
+            for (u, _) in csr.neighbors(v) {
+                let lv = label[v as usize];
+                let lu = label[u as usize];
+                if lv < lu {
+                    label[u as usize] = lv;
+                    changed = true;
+                } else if lu < lv {
+                    label[v as usize] = lu;
+                    changed = true;
+                }
+            }
+        }
+    }
+    label
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::coo::{Coo, Edge};
+
+    fn path_graph() -> Csr {
+        // 0 -> 1 -> 2 -> 3, plus isolated 4.
+        Csr::from_coo(&Coo::from_edges(
+            5,
+            vec![Edge::new(0, 1), Edge::new(1, 2), Edge::new(2, 3)],
+        ))
+    }
+
+    #[test]
+    fn bfs_levels_on_path() {
+        let l = bfs_levels(&path_graph(), 0);
+        assert_eq!(&l[..4], &[0.0, 1.0, 2.0, 3.0]);
+        assert!(l[4] >= INF);
+    }
+
+    #[test]
+    fn bfs_from_middle() {
+        let l = bfs_levels(&path_graph(), 2);
+        assert!(l[0] >= INF); // directed: cannot go back
+        assert_eq!(l[3], 1.0);
+    }
+
+    #[test]
+    fn sssp_prefers_cheaper_path() {
+        // 0->1 (5), 0->2 (1), 2->1 (1): dist(1) = 2.
+        let g = Coo::from_edges(
+            3,
+            vec![
+                Edge::weighted(0, 1, 5.0),
+                Edge::weighted(0, 2, 1.0),
+                Edge::weighted(2, 1, 1.0),
+            ],
+        );
+        let d = sssp_distances(&Csr::from_coo(&g), 0);
+        assert_eq!(d, vec![0.0, 2.0, 1.0]);
+    }
+
+    #[test]
+    fn sssp_equals_bfs_on_unit_weights() {
+        let g = crate::graph::datasets::Dataset::Tiny.load().unwrap();
+        let csr = Csr::from_coo(&g);
+        let b = bfs_levels(&csr, 0);
+        let s = sssp_distances(&csr, 0);
+        for (x, y) in b.iter().zip(&s) {
+            assert!((x - y).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn pagerank_sums_to_at_most_one() {
+        let g = crate::graph::datasets::Dataset::Tiny.load().unwrap();
+        let csr = Csr::from_coo(&g);
+        let r = pagerank(&csr, 0.85, 15);
+        let sum: f32 = r.iter().sum();
+        assert!(sum > 0.5 && sum <= 1.0 + 1e-3, "sum={sum}");
+        assert!(r.iter().all(|&x| x > 0.0));
+    }
+
+    #[test]
+    fn pagerank_uniform_on_cycle() {
+        let g = Coo::from_edges(
+            3,
+            vec![Edge::new(0, 1), Edge::new(1, 2), Edge::new(2, 0)],
+        );
+        let r = pagerank(&Csr::from_coo(&g), 0.85, 50);
+        for &x in &r {
+            assert!((x - 1.0 / 3.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn wcc_finds_components() {
+        let g = Coo::from_edges(
+            6,
+            vec![Edge::new(0, 1), Edge::new(1, 2), Edge::new(4, 5)],
+        )
+        .symmetrize();
+        let l = wcc_labels(&Csr::from_coo(&g));
+        assert_eq!(l, vec![0.0, 0.0, 0.0, 3.0, 4.0, 4.0]);
+    }
+}

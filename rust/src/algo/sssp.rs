@@ -1,0 +1,64 @@
+//! Single-Source Shortest Path: Bellman-Ford-style min-plus over weighted
+//! edges (weights stored in the crossbar; 1-bit ReRAM holds structure and
+//! the weight rides in the subgraph table — functionally equivalent for
+//! the simulator, see DESIGN.md).
+
+use super::traits::{Semiring, StepKind, VertexProgram, INF};
+
+#[derive(Debug, Clone, Copy)]
+pub struct Sssp {
+    pub source: u32,
+}
+
+impl Sssp {
+    pub fn new(source: u32) -> Self {
+        Self { source }
+    }
+}
+
+impl VertexProgram for Sssp {
+    fn name(&self) -> &'static str {
+        "sssp"
+    }
+
+    fn semiring(&self) -> Semiring {
+        Semiring::MinPlus
+    }
+
+    fn step_kind(&self) -> StepKind {
+        StepKind::Sssp
+    }
+
+    fn needs_weights(&self) -> bool {
+        true
+    }
+
+    fn init(&self, num_vertices: u32) -> Vec<f32> {
+        let mut v = vec![INF; num_vertices as usize];
+        if (self.source as usize) < v.len() {
+            v[self.source as usize] = 0.0;
+        }
+        v
+    }
+
+    fn apply(&self, old: f32, reduced: f32) -> f32 {
+        old.min(reduced)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn requires_weights() {
+        assert!(Sssp::new(0).needs_weights());
+    }
+
+    #[test]
+    fn init_and_apply() {
+        let s = Sssp::new(1);
+        assert_eq!(s.init(3), vec![INF, 0.0, INF]);
+        assert_eq!(s.apply(7.5, 2.5), 2.5);
+    }
+}

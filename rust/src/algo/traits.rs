@@ -1,0 +1,122 @@
+//! The vertex-program abstraction shared by the scheduler, the native
+//! executor and the AOT (PJRT) executor.
+//!
+//! Execution is synchronous (Jacobi-style): each superstep computes all
+//! edge contributions from a snapshot of the vertex values, then the
+//! reduce/apply phase folds them into the new values. This matches the
+//! L2 batch-step artifacts, which are pure functions of
+//! `(patterns, snapshot)`.
+
+/// "No value" sentinel for the tropical semiring. Mirrors
+/// `python/compile/kernels/crossbar_mvm.py::INF` — the two layers must
+/// agree so PJRT and native execution are interchangeable.
+pub const INF: f32 = 1.0e9;
+
+/// Reduction structure of the edge-compute phase.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Semiring {
+    /// out[j] = min_i (cost[i][j] + x[i])  (BFS, SSSP, WCC).
+    MinPlus,
+    /// out[j] = sum_i (adj[i][j] * x[i])   (PageRank).
+    SumProd,
+}
+
+/// Which AOT artifact implements a program's edge-compute step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum StepKind {
+    Bfs,
+    Sssp,
+    PageRank,
+    Wcc,
+    Mvm,
+}
+
+impl StepKind {
+    /// Artifact base name (matches `python/compile/aot.py`).
+    pub fn artifact_name(self) -> &'static str {
+        match self {
+            StepKind::Bfs => "bfs",
+            StepKind::Sssp => "sssp",
+            StepKind::PageRank => "pagerank",
+            StepKind::Wcc => "wcc",
+            StepKind::Mvm => "mvm",
+        }
+    }
+}
+
+/// A graph algorithm expressed for the accelerator.
+pub trait VertexProgram {
+    fn name(&self) -> &'static str;
+    fn semiring(&self) -> Semiring;
+    fn step_kind(&self) -> StepKind;
+
+    /// Whether edge weights must be kept by partitioning (SSSP).
+    fn needs_weights(&self) -> bool {
+        false
+    }
+
+    /// Initial vertex values.
+    fn init(&self, num_vertices: u32) -> Vec<f32>;
+
+    /// Map a vertex value to its wordline input for edge compute.
+    /// PageRank divides by out-degree; min-plus programs pass through.
+    fn source_value(&self, value: f32, out_degree: u32) -> f32 {
+        let _ = out_degree;
+        value
+    }
+
+    /// Fold one reduced candidate into a vertex value; returns the new
+    /// value. (MinPlus: min(old, cand); SumProd: accumulation handled by
+    /// the scheduler, `apply` finalizes in `post_superstep`.)
+    fn apply(&self, old: f32, reduced: f32) -> f32;
+
+    /// Did `apply` change the vertex (drives the active frontier)?
+    fn changed(&self, old: f32, new: f32) -> bool {
+        (old - new).abs() > 1e-7
+    }
+
+    /// Finalize a superstep. For SumProd programs `acc` holds the summed
+    /// contributions and the program writes the new values; returns
+    /// `true` if another superstep is needed. MinPlus programs use the
+    /// default (continue while the frontier is non-empty).
+    fn post_superstep(
+        &self,
+        superstep: usize,
+        values: &mut [f32],
+        acc: &mut [f32],
+        any_changed: bool,
+    ) -> bool {
+        let _ = (superstep, values, acc);
+        any_changed
+    }
+
+    /// Process every subgraph each superstep (SumProd) or only those with
+    /// active sources (MinPlus frontier).
+    fn processes_all_blocks(&self) -> bool {
+        self.semiring() == Semiring::SumProd
+    }
+
+    /// Hard cap on supersteps (guards non-converging inputs).
+    fn max_supersteps(&self) -> usize {
+        10_000
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifact_names_match_python_step_names() {
+        assert_eq!(StepKind::Bfs.artifact_name(), "bfs");
+        assert_eq!(StepKind::Sssp.artifact_name(), "sssp");
+        assert_eq!(StepKind::PageRank.artifact_name(), "pagerank");
+        assert_eq!(StepKind::Wcc.artifact_name(), "wcc");
+        assert_eq!(StepKind::Mvm.artifact_name(), "mvm");
+    }
+
+    #[test]
+    fn inf_matches_python_sentinel() {
+        assert_eq!(INF, 1.0e9);
+    }
+}

@@ -1,0 +1,46 @@
+//! Weakly Connected Components by min-label propagation: min-plus with
+//! zero edge cost, so each vertex converges to the minimum vertex id in
+//! its (weakly) connected component. Exercises the third "classical"
+//! algorithm family the paper's architecture supports.
+
+use super::traits::{Semiring, StepKind, VertexProgram};
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Wcc;
+
+impl VertexProgram for Wcc {
+    fn name(&self) -> &'static str {
+        "wcc"
+    }
+
+    fn semiring(&self) -> Semiring {
+        Semiring::MinPlus
+    }
+
+    fn step_kind(&self) -> StepKind {
+        StepKind::Wcc
+    }
+
+    fn init(&self, num_vertices: u32) -> Vec<f32> {
+        (0..num_vertices).map(|v| v as f32).collect()
+    }
+
+    fn apply(&self, old: f32, reduced: f32) -> f32 {
+        old.min(reduced)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_is_identity_labels() {
+        assert_eq!(Wcc.init(4), vec![0.0, 1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn apply_propagates_min_label() {
+        assert_eq!(Wcc.apply(3.0, 1.0), 1.0);
+    }
+}

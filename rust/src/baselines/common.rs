@@ -1,0 +1,168 @@
+//! Shared machinery for the baseline models: coarse (arbitrary-size)
+//! window partitioning and the BFS frontier schedule that tells each
+//! model which blocks are touched in which superstep.
+
+use std::collections::HashMap;
+
+use crate::accel::SimReport;
+use crate::algo::reference::bfs_levels;
+use crate::algo::traits::INF;
+use crate::cost::CostParams;
+use crate::graph::{Coo, Csr};
+
+/// One non-empty window at an arbitrary block size (supports the 128×128
+/// crossbars the baselines use — too large for the packed `Pattern`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CoarseBlock {
+    pub brow: u32,
+    pub bcol: u32,
+    pub nnz: u32,
+}
+
+/// Non-empty C×C windows of `g`'s adjacency matrix with edge counts.
+pub fn coarse_partition(g: &Coo, c: u32) -> Vec<CoarseBlock> {
+    assert!(c >= 1);
+    let mut windows: HashMap<u64, u32> = HashMap::new();
+    for e in &g.edges {
+        let key = ((e.src / c) as u64) << 32 | (e.dst / c) as u64;
+        *windows.entry(key).or_insert(0) += 1;
+    }
+    let mut blocks: Vec<CoarseBlock> = windows
+        .into_iter()
+        .map(|(k, nnz)| CoarseBlock { brow: (k >> 32) as u32, bcol: k as u32, nnz })
+        .collect();
+    blocks.sort_unstable_by_key(|b| (b.bcol, b.brow)); // column-major order
+    blocks
+}
+
+/// BFS workload schedule at block granularity: for each superstep, which
+/// blocks have frontier sources, and how many frontier edges they carry.
+#[derive(Debug, Clone)]
+pub struct BfsSchedule {
+    /// `active[s]` = indices into `blocks` processed in superstep `s`.
+    pub active: Vec<Vec<u32>>,
+    pub blocks: Vec<CoarseBlock>,
+    pub supersteps: usize,
+}
+
+impl BfsSchedule {
+    /// Total block operations across the run.
+    pub fn total_ops(&self) -> u64 {
+        self.active.iter().map(|a| a.len() as u64).sum()
+    }
+
+    /// Total edges touched (sum of nnz over processed blocks).
+    pub fn total_edges_touched(&self) -> u64 {
+        self.active
+            .iter()
+            .flat_map(|a| a.iter())
+            .map(|&i| self.blocks[i as usize].nnz as u64)
+            .sum()
+    }
+}
+
+/// Build the BFS schedule: superstep `s` processes every block whose
+/// source range contains a vertex at level `s` (the frontier), mirroring
+/// the streaming-apply model with active-source filtering.
+pub fn bfs_schedule(g: &Coo, c: u32, source: u32) -> BfsSchedule {
+    let levels = bfs_levels(&Csr::from_coo(g), source);
+    let blocks = coarse_partition(g, c);
+    let num_brows = g.num_vertices.div_ceil(c) as usize;
+
+    // level -> set of source block-rows with a frontier vertex.
+    let max_level = levels
+        .iter()
+        .filter(|&&l| l < INF)
+        .fold(0f32, |a, &b| a.max(b)) as usize;
+    let mut frontier_rows: Vec<Vec<bool>> = vec![vec![false; num_brows]; max_level + 1];
+    for (v, &l) in levels.iter().enumerate() {
+        if l < INF {
+            frontier_rows[l as usize][v / c as usize] = true;
+        }
+    }
+
+    let active = frontier_rows
+        .iter()
+        .map(|rows| {
+            blocks
+                .iter()
+                .enumerate()
+                .filter(|(_, b)| rows[b.brow as usize])
+                .map(|(i, _)| i as u32)
+                .collect()
+        })
+        .collect();
+    BfsSchedule { active, blocks, supersteps: max_level + 1 }
+}
+
+/// A baseline accelerator model.
+pub trait BaselineModel {
+    fn name(&self) -> &'static str;
+    /// Simulate BFS with `engines` graph engines and Table 3 costs.
+    fn simulate_bfs(&self, g: &Coo, source: u32, params: &CostParams, engines: u32)
+        -> SimReport;
+}
+
+/// 64-byte burst count for `bits` of sequential traffic.
+pub fn bursts(bits: u64) -> u64 {
+    bits.div_ceil(512)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::coo::Edge;
+    use crate::graph::datasets::Dataset;
+
+    #[test]
+    fn coarse_partition_counts_nnz() {
+        let g = Coo::from_edges(
+            256,
+            vec![Edge::new(0, 1), Edge::new(3, 200), Edge::new(130, 140), Edge::new(131, 141)],
+        );
+        let blocks = coarse_partition(&g, 128);
+        assert_eq!(blocks.len(), 3); // (0,0), (0,1), (1,1)
+        let b11 = blocks.iter().find(|b| (b.brow, b.bcol) == (1, 1)).unwrap();
+        assert_eq!(b11.nnz, 2);
+    }
+
+    #[test]
+    fn coarse_matches_fine_partition_totals() {
+        let g = Dataset::Tiny.load().unwrap();
+        let blocks = coarse_partition(&g, 4);
+        let fine = crate::pattern::extract::partition(&g, 4, false);
+        assert_eq!(blocks.len(), fine.num_subgraphs());
+        let nnz: u64 = blocks.iter().map(|b| b.nnz as u64).sum();
+        assert_eq!(nnz as usize, g.num_edges());
+    }
+
+    #[test]
+    fn bfs_schedule_covers_frontier() {
+        let g = Dataset::Tiny.load().unwrap();
+        let s = bfs_schedule(&g, 4, 0);
+        assert!(s.supersteps >= 2);
+        assert!(s.total_ops() > 0);
+        // Superstep 0 processes exactly the blocks whose source row
+        // contains vertex 0.
+        for &i in &s.active[0] {
+            assert_eq!(s.blocks[i as usize].brow, 0);
+        }
+    }
+
+    #[test]
+    fn schedule_larger_blocks_fewer_ops() {
+        let g = Dataset::Tiny.load().unwrap();
+        let fine = bfs_schedule(&g, 4, 0);
+        let coarse = bfs_schedule(&g, 128, 0);
+        assert!(coarse.total_ops() < fine.total_ops());
+        assert_eq!(fine.supersteps, coarse.supersteps);
+    }
+
+    #[test]
+    fn bursts_rounding() {
+        assert_eq!(bursts(0), 0);
+        assert_eq!(bursts(1), 1);
+        assert_eq!(bursts(512), 1);
+        assert_eq!(bursts(513), 2);
+    }
+}

@@ -1,0 +1,34 @@
+//! State-of-the-art baseline accelerators (paper §IV.C): analytic event
+//! models of GraphR [10], SparseMEM [15] and TARe [16], driven by the
+//! same workload (graph + BFS frontier schedule) and the same Table 3
+//! constants as the proposed design. Each model implements the mapping
+//! scheme the paper attributes to it; see DESIGN.md §Substitutions for
+//! the calibration rationale.
+
+pub mod common;
+pub mod graphr;
+pub mod sparsemem;
+pub mod tare;
+
+pub use common::{bfs_schedule, coarse_partition, BaselineModel, BfsSchedule, CoarseBlock};
+pub use graphr::GraphR;
+pub use sparsemem::SparseMem;
+pub use tare::TaRe;
+
+use crate::accel::SimReport;
+use crate::cost::CostParams;
+use crate::graph::Coo;
+
+/// Run all three baselines on a BFS workload.
+pub fn simulate_all(
+    g: &Coo,
+    source: u32,
+    params: &CostParams,
+    engines: u32,
+) -> Vec<SimReport> {
+    vec![
+        GraphR::default().simulate_bfs(g, source, params, engines),
+        SparseMem::default().simulate_bfs(g, source, params, engines),
+        TaRe::default().simulate_bfs(g, source, params, engines),
+    ]
+}

@@ -1,0 +1,126 @@
+//! TARe [16] baseline: write-free task-adaptive mapping.
+//!
+//! Model (paper §II.C / Table 1: memory access High/Low, 1-bit ReRAM):
+//! * each crossbar is partitioned into computing blocks (CBs)
+//!   preconfigured with *all* possible k×k binary submatrices, so runtime
+//!   never writes ReRAM;
+//! * a C×C subgraph is evaluated as (C/k)² CB lookups whose partial
+//!   results merge on the ALU — the restricted MVM parallelism the paper
+//!   calls out (more iterations);
+//! * the subgraph's structure is not stored on-chip, so every operation
+//!   fetches pattern indices + vertex data from off-chip memory
+//!   ("frequent off-chip memory reads degrade performance").
+
+use crate::accel::SimReport;
+use crate::cost::{timing, CostParams, EventCounts};
+use crate::graph::Coo;
+
+use super::common::{bfs_schedule, BaselineModel};
+
+#[derive(Debug, Clone)]
+pub struct TaRe {
+    /// Subgraph window size (adapted to classical algorithms at the same
+    /// granularity as the proposed design, §IV.A).
+    pub window: u32,
+    /// Computing-block size k (2 ⇒ 16 preconfigured patterns per CB set).
+    pub cb_size: u32,
+}
+
+impl Default for TaRe {
+    fn default() -> Self {
+        Self { window: 4, cb_size: 2 }
+    }
+}
+
+impl BaselineModel for TaRe {
+    fn name(&self) -> &'static str {
+        "TARe"
+    }
+
+    fn simulate_bfs(
+        &self,
+        g: &Coo,
+        source: u32,
+        params: &CostParams,
+        engines: u32,
+    ) -> SimReport {
+        let k = self.cb_size as u64;
+        let sub_ops = (self.window as u64 / k).pow(2); // CB lookups per subgraph
+        let sched = bfs_schedule(g, self.window, source);
+
+        let mut counts = EventCounts::default();
+        let mut exec_time_ns = 0f64;
+        for active in &sched.active {
+            if active.is_empty() {
+                continue;
+            }
+            let ops = active.len() as u64;
+            counts.mvm_ops += ops;
+            counts.read_bits += ops * sub_ops * k * k;
+            counts.sense_ops += ops * sub_ops * k;
+            counts.adc_ops += ops * sub_ops * k;
+            counts.sram_accesses += ops * 2;
+            // Off-chip fetch per subgraph: pattern CB indices + vertex
+            // data, random access — NOT amortizable into bursts.
+            counts.main_mem_accesses += ops;
+            // Merge partial CB results + reduce.
+            counts.alu_ops += ops * (sub_ops + self.window as u64);
+
+            // Serialized CB lookups per subgraph; engines in parallel.
+            let per_op_ns = sub_ops as f64
+                * timing::mvm_latency_ns(params, self.cb_size, self.cb_size)
+                + timing::reduce_latency_ns(params, self.window)
+                + params.t_main_mem_ns * 0.75; // off-chip fetch, thinly overlapped
+            let waves = ops.div_ceil(engines as u64);
+            exec_time_ns += waves as f64 * per_op_ns;
+        }
+
+        SimReport {
+            design: self.name().to_string(),
+            algorithm: "bfs".to_string(),
+            counts,
+            energy: counts.energy(params),
+            exec_time_ns,
+            supersteps: sched.supersteps,
+            iterations: sched.total_ops(),
+            static_hit_rate: 1.0, // by construction: never reconfigured
+            max_cell_writes: 0,   // write-free
+            run: None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::datasets::Dataset;
+
+    #[test]
+    fn tare_is_write_free() {
+        let g = Dataset::Tiny.load().unwrap();
+        let r = TaRe::default().simulate_bfs(&g, 0, &CostParams::default(), 32);
+        assert_eq!(r.counts.write_bits, 0);
+        assert_eq!(r.max_cell_writes, 0);
+        assert_eq!(r.energy.reram_write_j, 0.0);
+    }
+
+    #[test]
+    fn tare_pays_main_memory() {
+        let g = Dataset::Tiny.load().unwrap();
+        let r = TaRe::default().simulate_bfs(&g, 0, &CostParams::default(), 32);
+        // Off-chip energy dominates its budget.
+        assert!(r.energy.main_mem_j > 0.4 * r.energy_j());
+        assert_eq!(r.counts.main_mem_accesses, r.counts.mvm_ops);
+    }
+
+    #[test]
+    fn smaller_cb_more_lookups() {
+        let g = Dataset::Tiny.load().unwrap();
+        let p = CostParams::default();
+        let k2 = TaRe::default().simulate_bfs(&g, 0, &p, 32);
+        let k4 = TaRe { window: 4, cb_size: 4 }.simulate_bfs(&g, 0, &p, 32);
+        // k=2: 4 lookups per subgraph; k=4: 1 lookup.
+        assert!(k2.counts.alu_ops > k4.counts.alu_ops);
+        assert!(k2.exec_time_ns > k4.exec_time_ns);
+    }
+}

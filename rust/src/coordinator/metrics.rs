@@ -1,0 +1,74 @@
+//! Lightweight service metrics: counters + latency summary, lock-free on
+//! the hot path (atomics), snapshot on demand.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub jobs_submitted: AtomicU64,
+    pub jobs_completed: AtomicU64,
+    pub jobs_failed: AtomicU64,
+    /// Total wall-clock job latency, microseconds.
+    total_latency_us: AtomicU64,
+    /// Max single-job latency, microseconds.
+    max_latency_us: AtomicU64,
+    /// Total subgraph ops processed across jobs.
+    pub subgraph_ops: AtomicU64,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricsSnapshot {
+    pub jobs_submitted: u64,
+    pub jobs_completed: u64,
+    pub jobs_failed: u64,
+    pub mean_latency_us: f64,
+    pub max_latency_us: u64,
+    pub subgraph_ops: u64,
+}
+
+impl Metrics {
+    pub fn record_completion(&self, latency_us: u64, ops: u64) {
+        self.jobs_completed.fetch_add(1, Ordering::Relaxed);
+        self.total_latency_us.fetch_add(latency_us, Ordering::Relaxed);
+        self.max_latency_us.fetch_max(latency_us, Ordering::Relaxed);
+        self.subgraph_ops.fetch_add(ops, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let completed = self.jobs_completed.load(Ordering::Relaxed);
+        let total = self.total_latency_us.load(Ordering::Relaxed);
+        MetricsSnapshot {
+            jobs_submitted: self.jobs_submitted.load(Ordering::Relaxed),
+            jobs_completed: completed,
+            jobs_failed: self.jobs_failed.load(Ordering::Relaxed),
+            mean_latency_us: if completed > 0 { total as f64 / completed as f64 } else { 0.0 },
+            max_latency_us: self.max_latency_us.load(Ordering::Relaxed),
+            subgraph_ops: self.subgraph_ops.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_snapshots() {
+        let m = Metrics::default();
+        m.jobs_submitted.fetch_add(3, Ordering::Relaxed);
+        m.record_completion(100, 10);
+        m.record_completion(300, 20);
+        let s = m.snapshot();
+        assert_eq!(s.jobs_submitted, 3);
+        assert_eq!(s.jobs_completed, 2);
+        assert_eq!(s.mean_latency_us, 200.0);
+        assert_eq!(s.max_latency_us, 300);
+        assert_eq!(s.subgraph_ops, 30);
+    }
+
+    #[test]
+    fn empty_snapshot_no_nan() {
+        let s = Metrics::default().snapshot();
+        assert_eq!(s.mean_latency_us, 0.0);
+    }
+}

@@ -1,0 +1,127 @@
+//! Event accounting: the simulator counts hardware events; this module
+//! converts them to joules via the Table 3 constants. Keeping *counts*
+//! (not joules) in the hot loop makes the accounting exact, additive, and
+//! cheap (integer adds only).
+
+use super::params::CostParams;
+
+/// Raw hardware event counts accumulated during a simulation.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct EventCounts {
+    /// ReRAM cells read (bit-reads) during MVM operations.
+    pub read_bits: u64,
+    /// ReRAM cells written (SET/RESET) during crossbar (re)configuration.
+    pub write_bits: u64,
+    /// Sense-amplifier samples (one per read bitline).
+    pub sense_ops: u64,
+    /// SRAM buffer accesses (input/output FIFO entries).
+    pub sram_accesses: u64,
+    /// ADC conversions.
+    pub adc_ops: u64,
+    /// ALU reduce/apply operations.
+    pub alu_ops: u64,
+    /// Off-chip main-memory accesses (ST/CT fetches, write-backs).
+    pub main_mem_accesses: u64,
+    /// In-situ MVM operations issued (one per subgraph processed).
+    pub mvm_ops: u64,
+    /// Crossbar reconfigurations (dynamic-engine pattern swaps).
+    pub reconfigs: u64,
+}
+
+impl EventCounts {
+    pub fn add(&mut self, other: &EventCounts) {
+        self.read_bits += other.read_bits;
+        self.write_bits += other.write_bits;
+        self.sense_ops += other.sense_ops;
+        self.sram_accesses += other.sram_accesses;
+        self.adc_ops += other.adc_ops;
+        self.alu_ops += other.alu_ops;
+        self.main_mem_accesses += other.main_mem_accesses;
+        self.mvm_ops += other.mvm_ops;
+        self.reconfigs += other.reconfigs;
+    }
+
+    /// Convert to an energy breakdown in joules.
+    pub fn energy(&self, p: &CostParams) -> EnergyBreakdown {
+        const PJ: f64 = 1e-12;
+        EnergyBreakdown {
+            reram_read_j: self.read_bits as f64 * p.e_read_bit_pj * PJ
+                + self.sense_ops as f64 * p.e_sense_pj * PJ,
+            reram_write_j: self.write_bits as f64 * p.e_write_bit_pj * PJ,
+            sram_j: self.sram_accesses as f64 * p.e_sram_pj * PJ,
+            adc_j: self.adc_ops as f64 * p.e_adc_pj * PJ,
+            alu_j: self.alu_ops as f64 * p.e_alu_pj * PJ,
+            main_mem_j: self.main_mem_accesses as f64 * p.e_main_mem_pj * PJ,
+        }
+    }
+}
+
+/// Energy per component, joules.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct EnergyBreakdown {
+    pub reram_read_j: f64,
+    pub reram_write_j: f64,
+    pub sram_j: f64,
+    pub adc_j: f64,
+    pub alu_j: f64,
+    pub main_mem_j: f64,
+}
+
+impl EnergyBreakdown {
+    pub fn total_j(&self) -> f64 {
+        self.reram_read_j
+            + self.reram_write_j
+            + self.sram_j
+            + self.adc_j
+            + self.alu_j
+            + self.main_mem_j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_is_componentwise() {
+        let mut a = EventCounts { read_bits: 1, write_bits: 2, ..Default::default() };
+        let b = EventCounts { read_bits: 10, adc_ops: 3, ..Default::default() };
+        a.add(&b);
+        assert_eq!(a.read_bits, 11);
+        assert_eq!(a.write_bits, 2);
+        assert_eq!(a.adc_ops, 3);
+    }
+
+    #[test]
+    fn energy_uses_table3_constants() {
+        let p = CostParams::default();
+        let c = EventCounts {
+            read_bits: 1000,
+            write_bits: 100,
+            sense_ops: 0,
+            sram_accesses: 10,
+            adc_ops: 50,
+            ..Default::default()
+        };
+        let e = c.energy(&p);
+        assert!((e.reram_read_j - 1000.0 * 1.1e-12).abs() < 1e-18);
+        assert!((e.reram_write_j - 100.0 * 4.9e-12).abs() < 1e-18);
+        assert!((e.sram_j - 10.0 * 29.0e-12).abs() < 1e-18);
+        assert!((e.adc_j - 50.0 * 2.0e-12).abs() < 1e-18);
+        assert!(e.total_j() > 0.0);
+    }
+
+    #[test]
+    fn zero_counts_zero_energy() {
+        let e = EventCounts::default().energy(&CostParams::default());
+        assert_eq!(e.total_j(), 0.0);
+    }
+
+    #[test]
+    fn writes_cost_more_than_reads_per_bit() {
+        let p = CostParams::default();
+        let reads = EventCounts { read_bits: 1, ..Default::default() }.energy(&p);
+        let writes = EventCounts { write_bits: 1, ..Default::default() }.energy(&p);
+        assert!(writes.total_j() > 4.0 * reads.total_j());
+    }
+}

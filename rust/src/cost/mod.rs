@@ -1,0 +1,11 @@
+//! Hardware cost model: Table 3 latency/energy constants, event
+//! accounting, and the endurance/lifetime model of §IV.D.
+
+pub mod energy;
+pub mod lifetime;
+pub mod params;
+pub mod timing;
+
+pub use energy::{EnergyBreakdown, EventCounts};
+pub use lifetime::{lifetime_seconds, LifetimeReport};
+pub use params::CostParams;

@@ -1,0 +1,127 @@
+//! Simulation specifications (paper Table 3, 32 nm node).
+//!
+//! ReRAM numbers come from NVSim, buffer numbers from CACTI-6.5, the ADC
+//! from Kull et al. [32]. The paper does not publish main-memory numbers;
+//! we use representative DDR-class constants (documented in DESIGN.md
+//! §Substitutions) — they only matter for the *relative* ranking of TARe,
+//! whose design trades ReRAM writes for off-chip reads.
+
+/// All latencies in nanoseconds, energies in picojoules (converted to
+/// joules/seconds at report time).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CostParams {
+    // --- 4x4 ReRAM crossbar, 32 KB, V_SET = V_RESET = 2 V ---
+    /// Per-bit read.
+    pub t_read_bit_ns: f64,
+    pub e_read_bit_pj: f64,
+    /// Per-bit write (SET/RESET).
+    pub t_write_bit_ns: f64,
+    pub e_write_bit_pj: f64,
+    /// Sense amplifier, per bitline sample.
+    pub t_sense_ns: f64,
+    pub e_sense_pj: f64,
+    // --- SRAM buffer, 32 KB ---
+    pub t_sram_ns: f64,
+    pub e_sram_pj: f64,
+    // --- ADC, 8-bit resolution ---
+    pub t_adc_ns: f64,
+    pub e_adc_pj: f64,
+    // --- main memory (off-chip), per 64 B access ---
+    pub t_main_mem_ns: f64,
+    pub e_main_mem_pj: f64,
+    // --- lightweight ALU (reduce/apply), per op ---
+    pub t_alu_ns: f64,
+    pub e_alu_pj: f64,
+    /// ReRAM cell endurance in write cycles (paper §IV.D: ~1e8 [23]).
+    pub endurance_cycles: f64,
+    /// ADCs shared across bitlines: conversions per crossbar read that
+    /// must serialize (C bitlines / adc_share ADCs).
+    pub adc_share: u32,
+}
+
+impl Default for CostParams {
+    /// Paper Table 3 values.
+    fn default() -> Self {
+        Self {
+            t_read_bit_ns: 1.3,
+            e_read_bit_pj: 1.1,
+            t_write_bit_ns: 20.2,
+            e_write_bit_pj: 4.9,
+            t_sense_ns: 1.0,
+            e_sense_pj: 1.0,
+            t_sram_ns: 0.31,
+            e_sram_pj: 29.0,
+            t_adc_ns: 1.0,
+            e_adc_pj: 2.0,
+            // DDR4-class: ~50 ns random access, ~10 pJ/bit * 512 bit line.
+            t_main_mem_ns: 50.0,
+            e_main_mem_pj: 640.0,
+            // Small fixed-function ALU at 32 nm.
+            t_alu_ns: 0.5,
+            e_alu_pj: 0.6,
+            endurance_cycles: 1.0e8,
+            adc_share: 1,
+        }
+    }
+}
+
+impl CostParams {
+    /// Sanity bound used by property tests: every constant positive.
+    pub fn is_valid(&self) -> bool {
+        [
+            self.t_read_bit_ns,
+            self.e_read_bit_pj,
+            self.t_write_bit_ns,
+            self.e_write_bit_pj,
+            self.t_sense_ns,
+            self.e_sense_pj,
+            self.t_sram_ns,
+            self.e_sram_pj,
+            self.t_adc_ns,
+            self.e_adc_pj,
+            self.t_main_mem_ns,
+            self.e_main_mem_pj,
+            self.t_alu_ns,
+            self.e_alu_pj,
+            self.endurance_cycles,
+        ]
+        .iter()
+        .all(|&v| v > 0.0)
+            && self.adc_share >= 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_matches_table3() {
+        let p = CostParams::default();
+        assert_eq!(p.t_read_bit_ns, 1.3);
+        assert_eq!(p.e_read_bit_pj, 1.1);
+        assert_eq!(p.t_write_bit_ns, 20.2);
+        assert_eq!(p.e_write_bit_pj, 4.9);
+        assert_eq!(p.t_sense_ns, 1.0);
+        assert_eq!(p.e_sense_pj, 1.0);
+        assert_eq!(p.t_sram_ns, 0.31);
+        assert_eq!(p.e_sram_pj, 29.0);
+        assert_eq!(p.t_adc_ns, 1.0);
+        assert_eq!(p.e_adc_pj, 2.0);
+        assert_eq!(p.endurance_cycles, 1.0e8);
+    }
+
+    #[test]
+    fn write_dominates_read() {
+        // The premise of the whole paper: ReRAM writes are ~an order of
+        // magnitude slower and costlier than reads.
+        let p = CostParams::default();
+        assert!(p.t_write_bit_ns > 10.0 * p.t_read_bit_ns);
+        assert!(p.e_write_bit_pj > 4.0 * p.e_read_bit_pj);
+    }
+
+    #[test]
+    fn default_is_valid() {
+        assert!(CostParams::default().is_valid());
+    }
+}

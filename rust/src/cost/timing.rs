@@ -1,0 +1,91 @@
+//! Per-operation latency model.
+//!
+//! A graph-engine operation on one subgraph is either:
+//!
+//! * an **MVM** — drive the active wordlines (in-situ, one crossbar
+//!   read), sample C bitlines (sense amps in parallel), digitize through
+//!   the shared ADC (serialized by the share factor), and stream vertex
+//!   data through the input/output SRAM FIFOs; or
+//! * a **reconfiguration + MVM** — a dynamic engine first serially writes
+//!   the toggled ReRAM cells (the dominant cost: 20.2 ns/bit), then runs
+//!   the MVM.
+//!
+//! Engines operate in parallel (Alg. 2 `parallelforeach`); within an
+//! engine, queued operations serialize. The scheduler sums per-engine
+//! latencies and takes the max per iteration batch.
+
+use super::params::CostParams;
+
+/// Latency of one in-situ MVM on a crossbar of size `c` with
+/// `active_rows` driven wordlines.
+#[inline]
+pub fn mvm_latency_ns(p: &CostParams, c: u32, _active_rows: u32) -> f64 {
+    // Crossbar read is analog-parallel: one bit-read time regardless of
+    // rows; bitlines sense in parallel; ADC conversions serialize by the
+    // share factor; input + output FIFO accesses bracket the op.
+    let adc_serial = (c as f64 / p.adc_share as f64).ceil();
+    p.t_read_bit_ns + p.t_sense_ns + adc_serial * p.t_adc_ns + 2.0 * p.t_sram_ns
+}
+
+/// Latency of reprogramming `toggled_bits` ReRAM cells (serial per-bit
+/// writes — ReRAM crossbars write one wordline at a time, and Table 3 is
+/// per-bit).
+#[inline]
+pub fn reconfig_latency_ns(p: &CostParams, toggled_bits: u32) -> f64 {
+    toggled_bits as f64 * p.t_write_bit_ns
+}
+
+/// Latency of the ALU reduce/apply over `c` destination vertices.
+#[inline]
+pub fn reduce_latency_ns(p: &CostParams, c: u32) -> f64 {
+    c as f64 * p.t_alu_ns
+}
+
+/// Latency of one off-chip main-memory access.
+#[inline]
+pub fn main_mem_latency_ns(p: &CostParams) -> f64 {
+    p.t_main_mem_ns
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mvm_latency_is_a_few_ns() {
+        let p = CostParams::default();
+        let t = mvm_latency_ns(&p, 4, 4);
+        // 1.3 + 1.0 + 4*1.0 + 2*0.31 = 6.92 ns
+        assert!((t - 6.92).abs() < 1e-9, "t={t}");
+    }
+
+    #[test]
+    fn adc_sharing_reduces_serialization() {
+        let mut p = CostParams::default();
+        let t1 = mvm_latency_ns(&p, 8, 8);
+        p.adc_share = 4;
+        let t4 = mvm_latency_ns(&p, 8, 8);
+        assert!(t4 < t1);
+    }
+
+    #[test]
+    fn reconfig_dominates_mvm() {
+        // A single-bit reconfiguration (20.2 ns) already outweighs a full
+        // 4x4 MVM (~7 ns) — the quantitative core of the paper's premise.
+        let p = CostParams::default();
+        assert!(reconfig_latency_ns(&p, 1) > 2.0 * mvm_latency_ns(&p, 4, 4));
+    }
+
+    #[test]
+    fn reconfig_scales_linearly() {
+        let p = CostParams::default();
+        assert_eq!(reconfig_latency_ns(&p, 0), 0.0);
+        assert!((reconfig_latency_ns(&p, 16) - 16.0 * 20.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn reduce_scales_with_c() {
+        let p = CostParams::default();
+        assert!((reduce_latency_ns(&p, 4) - 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,9 @@
+//! Design-space exploration (paper Fig. 2 ③ / Fig. 6): sweeps over the
+//! architecture parameters and selection of the best static/dynamic
+//! engine split for a given application.
+
+pub mod optimizer;
+pub mod sweep;
+
+pub use optimizer::find_best_static_split;
+pub use sweep::{crossbar_sweep, policy_sweep, static_engine_sweep, SweepPoint};

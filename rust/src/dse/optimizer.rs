@@ -1,0 +1,95 @@
+//! "A method to find the best number of static graph engines for a given
+//! application" (paper conclusion): sweep candidate splits and return the
+//! fastest.
+
+use anyhow::Result;
+
+use crate::accel::ArchConfig;
+use crate::algo::traits::VertexProgram;
+use crate::cost::CostParams;
+use crate::graph::Coo;
+
+use super::sweep::{static_engine_sweep, SweepPoint};
+
+/// Best static/dynamic split for `program` on `g`. Candidates default to
+/// every power-of-two-ish split plus the paper's N = C² heuristic.
+pub fn find_best_static_split(
+    g: &Coo,
+    base: &ArchConfig,
+    params: &CostParams,
+    program: &dyn VertexProgram,
+    candidates: Option<&[u32]>,
+) -> Result<(u32, Vec<SweepPoint>)> {
+    let t = base.total_engines;
+    let default: Vec<u32> = {
+        let mut v = vec![0u32];
+        let mut n = 2;
+        while n < t {
+            v.push(n);
+            n *= 2;
+        }
+        // The paper's heuristic: at least C² static engines so every
+        // single-edge pattern is static (§IV.B).
+        let c2 = (base.crossbar_size * base.crossbar_size) as u32;
+        if c2 < t && !v.contains(&c2) {
+            v.push(c2);
+        }
+        if t >= 1 {
+            v.push(t - 1);
+        }
+        v.sort_unstable();
+        v.dedup();
+        v
+    };
+    let ns = candidates.unwrap_or(&default);
+    let points = static_engine_sweep(g, base, params, program, ns)?;
+    let best = points
+        .iter()
+        .max_by(|a, b| a.speedup.total_cmp(&b.speedup))
+        .map(|p| p.x)
+        .unwrap_or(0);
+    Ok((best, points))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::Bfs;
+    use crate::graph::datasets::Dataset;
+
+    #[test]
+    fn finds_a_nontrivial_split() {
+        let g = Dataset::Tiny.load().unwrap();
+        let (best, points) = find_best_static_split(
+            &g,
+            &ArchConfig::default(),
+            &CostParams::default(),
+            &Bfs::new(0),
+            None,
+        )
+        .unwrap();
+        assert!(!points.is_empty());
+        // All-dynamic should never be optimal on a power-law graph.
+        assert!(best > 0, "best split was all-dynamic");
+        // The winning point carries the max speedup.
+        let best_point = points.iter().find(|p| p.x == best).unwrap();
+        for p in &points {
+            assert!(best_point.speedup >= p.speedup - 1e-12);
+        }
+    }
+
+    #[test]
+    fn respects_explicit_candidates() {
+        let g = Dataset::Tiny.load().unwrap();
+        let (best, points) = find_best_static_split(
+            &g,
+            &ArchConfig::default(),
+            &CostParams::default(),
+            &Bfs::new(0),
+            Some(&[4, 16]),
+        )
+        .unwrap();
+        assert_eq!(points.len(), 2);
+        assert!(best == 4 || best == 16);
+    }
+}

@@ -1,0 +1,110 @@
+//! Single ReRAM crossbar: holds one C×C binary pattern, tracks per-cell
+//! write wear (for the §IV.D lifetime analysis).
+
+use crate::pattern::Pattern;
+
+#[derive(Debug, Clone)]
+pub struct Crossbar {
+    pub c: usize,
+    /// Pattern currently programmed into the cells (EMPTY = all RESET).
+    pub pattern: Pattern,
+    /// Per-cell cumulative write count (length c*c) — wear tracking.
+    cell_writes: Vec<u32>,
+    /// Total bit-writes this crossbar has absorbed.
+    pub total_write_bits: u64,
+    /// Number of (re)configurations.
+    pub config_count: u64,
+}
+
+impl Crossbar {
+    pub fn new(c: usize) -> Self {
+        Self {
+            c,
+            pattern: Pattern::EMPTY,
+            cell_writes: vec![0; c * c],
+            total_write_bits: 0,
+            config_count: 0,
+        }
+    }
+
+    /// Reprogram to `target`. Only toggled cells are written (SET new
+    /// edges, RESET removed ones). Returns the number of bit-writes.
+    pub fn configure(&mut self, target: Pattern) -> u32 {
+        let toggled = target.0 ^ self.pattern.0;
+        let n = toggled.count_ones();
+        if n > 0 {
+            let mut bits = toggled;
+            while bits != 0 {
+                let cell = bits.trailing_zeros() as usize;
+                debug_assert!(cell < self.cell_writes.len(), "pattern exceeds crossbar");
+                self.cell_writes[cell] += 1;
+                bits &= bits - 1;
+            }
+            self.total_write_bits += n as u64;
+            self.pattern = target;
+        }
+        self.config_count += 1;
+        n
+    }
+
+    /// Worst per-cell wear (the `w` of the lifetime formula).
+    pub fn max_cell_writes(&self) -> u32 {
+        self.cell_writes.iter().copied().max().unwrap_or(0)
+    }
+
+    /// True once any cell exceeded the endurance budget — the paper
+    /// retires such engines ("graph engines are not used once a crossbar
+    /// reaches maximum writes").
+    pub fn worn_out(&self, endurance: f64) -> bool {
+        self.max_cell_writes() as f64 >= endurance
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn configure_writes_only_toggled_cells() {
+        let mut cb = Crossbar::new(4);
+        let a = Pattern(0b0011);
+        let b = Pattern(0b0110);
+        assert_eq!(cb.configure(a), 2); // from empty: 2 SETs
+        assert_eq!(cb.configure(b), 2); // toggle bits 0 and 2
+        assert_eq!(cb.configure(b), 0); // no-op
+        assert_eq!(cb.total_write_bits, 4);
+        assert_eq!(cb.config_count, 3);
+        assert_eq!(cb.pattern, b);
+    }
+
+    #[test]
+    fn per_cell_wear_tracks_toggles() {
+        let mut cb = Crossbar::new(2);
+        let a = Pattern(0b01);
+        let b = Pattern(0b10);
+        for _ in 0..5 {
+            cb.configure(a);
+            cb.configure(b);
+        }
+        // Cells 0 and 1 each toggled ~10 times.
+        assert_eq!(cb.max_cell_writes(), 10);
+        assert_eq!(cb.total_write_bits, 19); // first config writes 1 bit
+    }
+
+    #[test]
+    fn wear_out_threshold() {
+        let mut cb = Crossbar::new(2);
+        cb.configure(Pattern(1));
+        assert!(!cb.worn_out(2.0));
+        cb.configure(Pattern(0));
+        cb.configure(Pattern(1));
+        assert!(cb.worn_out(2.0));
+    }
+
+    #[test]
+    fn fresh_crossbar_is_unworn() {
+        let cb = Crossbar::new(4);
+        assert_eq!(cb.max_cell_writes(), 0);
+        assert!(!cb.worn_out(1.0));
+    }
+}

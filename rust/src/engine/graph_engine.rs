@@ -1,0 +1,195 @@
+//! Graph engine (paper Fig. 4): M crossbars sharing a driver, S/H stage,
+//! ADC, FIFO buffers and a small ALU. Static engines are configured once
+//! at initialization; dynamic engines are reconfigured at runtime by the
+//! scheduler's replacement policy.
+
+use crate::cost::{timing, CostParams, EventCounts};
+use crate::pattern::Pattern;
+
+use super::crossbar::Crossbar;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineKind {
+    /// Configured once during initialization (Alg. 2 lines 6–8).
+    Static,
+    /// Reconfigured at runtime as needed (Alg. 2 lines 13–15).
+    Dynamic,
+}
+
+#[derive(Debug, Clone)]
+pub struct GraphEngine {
+    pub id: u32,
+    pub kind: EngineKind,
+    pub crossbars: Vec<Crossbar>,
+    /// Cumulative hardware events issued by this engine.
+    pub counts: EventCounts,
+    /// Busy time within the current scheduler iteration (ns); the
+    /// scheduler resets it per batch and takes the max across engines.
+    pub busy_ns: f64,
+    /// Ops queued in the current iteration (for activity tracing).
+    pub ops_this_iter: u32,
+    /// Wear-out retirement flag (§IV.D).
+    pub retired: bool,
+}
+
+impl GraphEngine {
+    pub fn new(id: u32, kind: EngineKind, c: usize, m: u32) -> Self {
+        Self {
+            id,
+            kind,
+            crossbars: (0..m).map(|_| Crossbar::new(c)).collect(),
+            counts: EventCounts::default(),
+            busy_ns: 0.0,
+            ops_this_iter: 0,
+            retired: false,
+        }
+    }
+
+    pub fn c(&self) -> usize {
+        self.crossbars[0].c
+    }
+
+    /// Crossbar index currently holding `p`, if any.
+    pub fn crossbar_with(&self, p: Pattern) -> Option<usize> {
+        self.crossbars.iter().position(|cb| cb.pattern == p)
+    }
+
+    /// Configure crossbar `idx` with `p` (init-time for static engines,
+    /// runtime for dynamic). Accounts write events + latency. Energy is
+    /// per toggled *bit*; latency is per toggled *row* — the driver
+    /// programs one wordline at a time with the row's bitlines in
+    /// parallel (standard 1T1R write scheme).
+    pub fn configure(&mut self, idx: usize, p: Pattern, params: &CostParams) -> f64 {
+        let old = self.crossbars[idx].pattern;
+        let toggled_rows = Pattern(old.0 ^ p.0).active_row_count(self.c());
+        let toggled = self.crossbars[idx].configure(p);
+        self.counts.write_bits += toggled as u64;
+        self.counts.reconfigs += 1;
+        // Pattern (COO cell) data arrives through the input buffer
+        // (Fig. 4: Config_i via the input FIFO). The configuration table
+        // is small (#patterns × ~8 B ≪ 32 KB) and lives in the on-chip
+        // SRAM buffer, so no off-chip access is charged here.
+        self.counts.sram_accesses += 2;
+        let lat = timing::reconfig_latency_ns(params, toggled_rows.min(toggled));
+        self.busy_ns += lat;
+        lat
+    }
+
+    /// Issue one in-situ MVM against crossbar `idx` for a subgraph whose
+    /// pattern has `active_rows` driven wordlines. `row_addr_shortcut`
+    /// models the CT row-address optimization for single-edge patterns
+    /// (§III.B): only the addressed row's cells are read.
+    pub fn mvm(
+        &mut self,
+        idx: usize,
+        active_rows: u32,
+        row_addr_shortcut: bool,
+        params: &CostParams,
+    ) -> f64 {
+        let read_rows = if row_addr_shortcut { 1 } else { active_rows.max(1) as u64 };
+        let lat = timing::mvm_latency_ns(params, self.c() as u32, active_rows)
+            + timing::reduce_latency_ns(params, self.c() as u32);
+        self.mvm_precomputed(idx, read_rows, lat);
+        lat
+    }
+
+    /// Hot-path variant: the scheduler precomputes `lat` once per run
+    /// (it depends only on params and C), so the per-op work is pure
+    /// counter arithmetic.
+    #[inline]
+    pub fn mvm_precomputed(&mut self, idx: usize, read_rows: u64, lat: f64) {
+        let c = self.crossbars[0].c as u64;
+        self.counts.read_bits += read_rows * c;
+        self.counts.sense_ops += c;
+        self.counts.adc_ops += c;
+        // Vertex data in + processed vertex data out through the FIFOs.
+        // (Main-memory traffic is accounted at the system level by the
+        // scheduler: ST entries and vertex data stream in 64 B bursts.)
+        self.counts.sram_accesses += 2;
+        // Reduce/apply on the ALU for the C destination lanes.
+        self.counts.alu_ops += c;
+        self.counts.mvm_ops += 1;
+        self.busy_ns += lat;
+        self.ops_this_iter += 1;
+        let _ = idx;
+    }
+
+    /// Reset per-iteration accounting (scheduler calls between batches).
+    pub fn end_iteration(&mut self) -> (f64, u32) {
+        let out = (self.busy_ns, self.ops_this_iter);
+        self.busy_ns = 0.0;
+        self.ops_this_iter = 0;
+        out
+    }
+
+    /// Worst per-cell wear across this engine's crossbars.
+    pub fn max_cell_writes(&self) -> u32 {
+        self.crossbars.iter().map(|cb| cb.max_cell_writes()).max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params() -> CostParams {
+        CostParams::default()
+    }
+
+    #[test]
+    fn mvm_accounts_reads_and_peripherals() {
+        let mut e = GraphEngine::new(0, EngineKind::Static, 4, 1);
+        let lat = e.mvm(0, 2, false, &params());
+        assert!(lat > 0.0);
+        assert_eq!(e.counts.read_bits, 8); // 2 active rows x 4 cells
+        assert_eq!(e.counts.sense_ops, 4);
+        assert_eq!(e.counts.adc_ops, 4);
+        assert_eq!(e.counts.sram_accesses, 2);
+        assert_eq!(e.counts.mvm_ops, 1);
+        assert_eq!(e.counts.write_bits, 0); // MVM never writes ReRAM
+        assert_eq!(e.counts.main_mem_accesses, 0); // system-level concern
+    }
+
+    #[test]
+    fn row_addr_shortcut_reads_one_row() {
+        let mut e = GraphEngine::new(0, EngineKind::Static, 4, 1);
+        e.mvm(0, 1, true, &params());
+        assert_eq!(e.counts.read_bits, 4);
+    }
+
+    #[test]
+    fn configure_accounts_writes_and_latency() {
+        let mut e = GraphEngine::new(1, EngineKind::Dynamic, 4, 2);
+        // Pattern 0b111: 3 toggled bits, all in row 0 → energy 3 bits,
+        // latency 1 row-write.
+        let lat = e.configure(1, Pattern(0b111), &params());
+        assert!((lat - 20.2).abs() < 1e-9);
+        assert_eq!(e.counts.write_bits, 3);
+        assert_eq!(e.counts.reconfigs, 1);
+        assert_eq!(e.crossbar_with(Pattern(0b111)), Some(1));
+        // Two rows touched → two row-writes.
+        let lat2 = e.configure(0, Pattern(1 | 1 << 5), &params());
+        assert!((lat2 - 2.0 * 20.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn end_iteration_resets_busy() {
+        let mut e = GraphEngine::new(0, EngineKind::Dynamic, 4, 1);
+        e.mvm(0, 4, false, &params());
+        let (busy, ops) = e.end_iteration();
+        assert!(busy > 0.0);
+        assert_eq!(ops, 1);
+        assert_eq!(e.busy_ns, 0.0);
+        assert_eq!(e.ops_this_iter, 0);
+    }
+
+    #[test]
+    fn engine_wear_is_max_over_crossbars() {
+        let mut e = GraphEngine::new(0, EngineKind::Dynamic, 2, 2);
+        e.configure(0, Pattern(1), &params());
+        e.configure(0, Pattern(0), &params());
+        e.configure(0, Pattern(1), &params());
+        e.configure(1, Pattern(2), &params());
+        assert_eq!(e.max_cell_writes(), 3);
+    }
+}

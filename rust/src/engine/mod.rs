@@ -1,0 +1,13 @@
+//! Graph-engine hardware model (paper Fig. 4): ReRAM crossbars plus
+//! peripherals (driver, sample-and-hold, shared ADC, FIFO buffers, ALU).
+//!
+//! The engine model is *event-level*: it tracks state (which pattern each
+//! crossbar holds, per-cell write wear) and accumulates `EventCounts`;
+//! functional MVM values are computed by the scheduler through the
+//! runtime executor (AOT PJRT artifact or the native mirror).
+
+pub mod crossbar;
+pub mod graph_engine;
+
+pub use crossbar::Crossbar;
+pub use graph_engine::{EngineKind, GraphEngine};

@@ -1,0 +1,173 @@
+//! Coordinate-list (COO) graph storage — the main-memory format.
+//!
+//! The paper stores input graphs in COO "to ensure efficient storage and
+//! sequential edge access, while utilizing adjacency matrix format in
+//! local memory" (§II.B). All preprocessing starts from a sorted,
+//! deduplicated COO.
+
+use std::cmp::Ordering;
+
+/// A directed, weighted edge. Unweighted graphs use `weight == 1.0`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Edge {
+    pub src: u32,
+    pub dst: u32,
+    pub weight: f32,
+}
+
+impl Edge {
+    pub fn new(src: u32, dst: u32) -> Self {
+        Self { src, dst, weight: 1.0 }
+    }
+
+    pub fn weighted(src: u32, dst: u32, weight: f32) -> Self {
+        Self { src, dst, weight }
+    }
+
+    /// Ordering key: row-major over (src, dst).
+    #[inline]
+    fn key(&self) -> (u32, u32) {
+        (self.src, self.dst)
+    }
+}
+
+/// COO graph: vertex count + edge list.
+#[derive(Debug, Clone, Default)]
+pub struct Coo {
+    pub num_vertices: u32,
+    pub edges: Vec<Edge>,
+}
+
+impl Coo {
+    /// Build from raw edges: clamps the vertex count, sorts row-major and
+    /// removes duplicate (src, dst) pairs (keeping the first weight).
+    pub fn from_edges(num_vertices: u32, mut edges: Vec<Edge>) -> Self {
+        edges.retain(|e| e.src < num_vertices && e.dst < num_vertices);
+        edges.sort_unstable_by(|a, b| a.key().cmp(&b.key()));
+        edges.dedup_by(|a, b| a.key() == b.key());
+        Self { num_vertices, edges }
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.edges.is_empty()
+    }
+
+    /// Make the graph undirected by mirroring every edge (self-loops kept
+    /// single). Paper benchmarks are undirected (§IV.A Table 2).
+    pub fn symmetrize(&self) -> Coo {
+        let mut edges = Vec::with_capacity(self.edges.len() * 2);
+        for e in &self.edges {
+            edges.push(*e);
+            if e.src != e.dst {
+                edges.push(Edge::weighted(e.dst, e.src, e.weight));
+            }
+        }
+        Coo::from_edges(self.num_vertices, edges)
+    }
+
+    /// Reverse every edge (used for column-major / pull-style traversal).
+    pub fn transpose(&self) -> Coo {
+        let edges = self
+            .edges
+            .iter()
+            .map(|e| Edge::weighted(e.dst, e.src, e.weight))
+            .collect();
+        Coo::from_edges(self.num_vertices, edges)
+    }
+
+    /// Assign deterministic pseudo-random positive weights in `[lo, hi)`
+    /// (for SSSP on originally-unweighted benchmarks).
+    pub fn with_random_weights(&self, seed: u64, lo: f32, hi: f32) -> Coo {
+        assert!(hi > lo && lo >= 0.0);
+        let mut rng = crate::util::SplitMix64::new(seed);
+        let edges = self
+            .edges
+            .iter()
+            .map(|e| Edge::weighted(e.src, e.dst, lo + rng.next_f32() * (hi - lo)))
+            .collect();
+        Coo { num_vertices: self.num_vertices, edges }
+    }
+
+    /// True if edges are sorted row-major and unique (invariant after
+    /// `from_edges`; property-tested).
+    pub fn is_canonical(&self) -> bool {
+        self.edges
+            .windows(2)
+            .all(|w| w[0].key().cmp(&w[1].key()) == Ordering::Less)
+    }
+
+    /// Out-degree of every vertex.
+    pub fn out_degrees(&self) -> Vec<u32> {
+        let mut d = vec![0u32; self.num_vertices as usize];
+        for e in &self.edges {
+            d[e.src as usize] += 1;
+        }
+        d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Coo {
+        Coo::from_edges(
+            4,
+            vec![Edge::new(0, 1), Edge::new(1, 2), Edge::new(0, 1), Edge::new(3, 0)],
+        )
+    }
+
+    #[test]
+    fn from_edges_dedups_and_sorts() {
+        let g = toy();
+        assert_eq!(g.num_edges(), 3);
+        assert!(g.is_canonical());
+    }
+
+    #[test]
+    fn from_edges_drops_out_of_range() {
+        let g = Coo::from_edges(2, vec![Edge::new(0, 1), Edge::new(0, 5), Edge::new(7, 1)]);
+        assert_eq!(g.num_edges(), 1);
+    }
+
+    #[test]
+    fn symmetrize_mirrors_edges() {
+        let g = toy().symmetrize();
+        assert_eq!(g.num_edges(), 6);
+        assert!(g.edges.iter().any(|e| (e.src, e.dst) == (1, 0)));
+        assert!(g.is_canonical());
+    }
+
+    #[test]
+    fn symmetrize_keeps_self_loops_single() {
+        let g = Coo::from_edges(2, vec![Edge::new(0, 0), Edge::new(0, 1)]).symmetrize();
+        assert_eq!(g.num_edges(), 3); // (0,0), (0,1), (1,0)
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let g = toy();
+        let tt = g.transpose().transpose();
+        assert_eq!(g.edges, tt.edges);
+    }
+
+    #[test]
+    fn random_weights_in_range_and_deterministic() {
+        let g = toy().with_random_weights(9, 1.0, 5.0);
+        let h = toy().with_random_weights(9, 1.0, 5.0);
+        for (a, b) in g.edges.iter().zip(&h.edges) {
+            assert_eq!(a.weight, b.weight);
+            assert!((1.0..5.0).contains(&a.weight));
+        }
+    }
+
+    #[test]
+    fn out_degrees_count_edges() {
+        let g = toy();
+        assert_eq!(g.out_degrees(), vec![1, 1, 0, 1]);
+    }
+}

@@ -1,0 +1,104 @@
+//! Compressed Sparse Row view — used by the pure-CPU reference algorithms
+//! (`algo::reference`) that validate the accelerator's numeric results.
+
+use super::coo::Coo;
+
+/// CSR adjacency: `row_ptr[v]..row_ptr[v+1]` indexes `col_idx`/`weights`.
+#[derive(Debug, Clone)]
+pub struct Csr {
+    pub num_vertices: u32,
+    pub row_ptr: Vec<u32>,
+    pub col_idx: Vec<u32>,
+    pub weights: Vec<f32>,
+}
+
+impl Csr {
+    pub fn from_coo(g: &Coo) -> Self {
+        let n = g.num_vertices as usize;
+        let mut row_ptr = vec![0u32; n + 1];
+        for e in &g.edges {
+            row_ptr[e.src as usize + 1] += 1;
+        }
+        for i in 0..n {
+            row_ptr[i + 1] += row_ptr[i];
+        }
+        let m = g.edges.len();
+        let mut col_idx = vec![0u32; m];
+        let mut weights = vec![0f32; m];
+        let mut cursor = row_ptr.clone();
+        // COO is sorted row-major, so this fills each row in dst order.
+        for e in &g.edges {
+            let slot = cursor[e.src as usize] as usize;
+            col_idx[slot] = e.dst;
+            weights[slot] = e.weight;
+            cursor[e.src as usize] += 1;
+        }
+        Self { num_vertices: g.num_vertices, row_ptr, col_idx, weights }
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.col_idx.len()
+    }
+
+    /// Out-neighbors of `v` with weights.
+    #[inline]
+    pub fn neighbors(&self, v: u32) -> impl Iterator<Item = (u32, f32)> + '_ {
+        let lo = self.row_ptr[v as usize] as usize;
+        let hi = self.row_ptr[v as usize + 1] as usize;
+        self.col_idx[lo..hi]
+            .iter()
+            .copied()
+            .zip(self.weights[lo..hi].iter().copied())
+    }
+
+    #[inline]
+    pub fn out_degree(&self, v: u32) -> u32 {
+        self.row_ptr[v as usize + 1] - self.row_ptr[v as usize]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::coo::Edge;
+
+    fn toy() -> Csr {
+        Csr::from_coo(&Coo::from_edges(
+            4,
+            vec![
+                Edge::weighted(0, 1, 2.0),
+                Edge::weighted(0, 3, 1.0),
+                Edge::weighted(2, 0, 5.0),
+            ],
+        ))
+    }
+
+    #[test]
+    fn row_ptr_prefix_sums() {
+        let c = toy();
+        assert_eq!(c.row_ptr, vec![0, 2, 2, 3, 3]);
+        assert_eq!(c.num_edges(), 3);
+    }
+
+    #[test]
+    fn neighbors_ordered_with_weights() {
+        let c = toy();
+        let n: Vec<_> = c.neighbors(0).collect();
+        assert_eq!(n, vec![(1, 2.0), (3, 1.0)]);
+        assert_eq!(c.neighbors(1).count(), 0);
+    }
+
+    #[test]
+    fn out_degree_matches() {
+        let c = toy();
+        assert_eq!(c.out_degree(0), 2);
+        assert_eq!(c.out_degree(2), 1);
+    }
+
+    #[test]
+    fn empty_graph() {
+        let c = Csr::from_coo(&Coo::from_edges(3, vec![]));
+        assert_eq!(c.row_ptr, vec![0, 0, 0, 0]);
+        assert_eq!(c.num_edges(), 0);
+    }
+}

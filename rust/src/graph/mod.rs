@@ -1,0 +1,17 @@
+//! Graph substrate: storage formats, loaders, generators, dataset presets.
+//!
+//! The accelerator stores input graphs in COO format in main memory
+//! (paper §II.B) and converts to adjacency-window views during
+//! preprocessing. CSR is used by the pure-CPU reference algorithms.
+
+pub mod coo;
+pub mod csr;
+pub mod datasets;
+pub mod generator;
+pub mod loader;
+pub mod stats;
+
+pub use coo::{Coo, Edge};
+pub use csr::Csr;
+pub use datasets::Dataset;
+pub use stats::GraphStats;

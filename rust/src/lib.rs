@@ -1,0 +1,41 @@
+//! # repro — pattern-aware ReRAM graph accelerator
+//!
+//! Reproduction of *"Leveraging Recurrent Patterns in Graph Accelerators"*
+//! (Rahimi & Le Beux, CS.AR 2025): a graph accelerator that partitions the
+//! adjacency matrix with a non-overlapping C×C window, ranks the resulting
+//! subgraph *patterns* by frequency, and pins the most frequent patterns
+//! into **static** graph engines (ReRAM crossbars written once) while the
+//! long tail runs on **dynamic** engines (reconfigured at runtime).
+//!
+//! Three-layer architecture (see `DESIGN.md`):
+//!
+//! * **L3 (this crate)** — the coordinator: graph substrate, window
+//!   partitioner + pattern ranking (Alg. 1), streaming-apply scheduler with
+//!   static/dynamic dispatch (Alg. 2), ReRAM engine + cost models
+//!   (Table 3), baselines (GraphR / SparseMEM / TARe), DSE, lifetime
+//!   analysis, reports, CLI, and an async serving loop.
+//! * **L2/L1 (python, build-time only)** — JAX batch-step models calling
+//!   Pallas crossbar kernels, AOT-lowered to HLO text in `artifacts/`.
+//! * **runtime** — loads the HLO artifacts via the `xla` crate (PJRT CPU
+//!   client) and executes them from the rust hot path; python never runs
+//!   at request time.
+
+pub mod accel;
+pub mod algo;
+pub mod baselines;
+pub mod coordinator;
+pub mod cost;
+pub mod dse;
+pub mod engine;
+pub mod graph;
+pub mod pattern;
+pub mod report;
+pub mod runtime;
+pub mod sched;
+pub mod util;
+
+pub use accel::config::ArchConfig;
+pub use accel::simulator::{Accelerator, SimReport};
+pub use graph::coo::Coo;
+pub use graph::csr::Csr;
+pub use pattern::pattern::Pattern;

@@ -1,0 +1,300 @@
+//! `repro` — CLI for the pattern-aware ReRAM graph accelerator.
+//!
+//! Subcommands map onto the paper's artifacts: `preprocess` (Alg. 1),
+//! `run` (Alg. 2 on a dataset/algorithm), `figure` (regenerate any
+//! table/figure of the evaluation), `dse` (best static split),
+//! `datasets` (Table 2), and `serve` (the leader/worker serving loop).
+
+use anyhow::Result;
+
+use repro::accel::{Accelerator, ArchConfig, PolicyKind};
+use repro::algo::{Bfs, PageRank, Sssp, Wcc};
+use repro::coordinator::{Job, Service, ServiceConfig};
+use repro::cost::CostParams;
+use repro::graph::datasets::{Dataset, ALL_DATASETS};
+use repro::graph::GraphStats;
+use repro::report::{figures, Table};
+use repro::sched::executor::NativeExecutor;
+use repro::sched::StepExecutor;
+use repro::util::cli::Args;
+use repro::util::fmt;
+
+const USAGE: &str = "\
+repro — pattern-aware ReRAM graph accelerator (CS.AR 2025 reproduction)
+
+USAGE:
+  repro preprocess <DATASET> [--scale F] [arch options]
+  repro run <DATASET> [--algo bfs|sssp|pagerank|wcc] [--source N]
+            [--scale F] [--backend native|pjrt] [--validate] [arch options]
+  repro figure <fig1|fig5|fig6|fig7|table1|table4|lifetime|all> [--scale F]
+  repro dse <DATASET> [--scale F] [arch options]
+  repro datasets
+  repro serve [--jobs N] [--workers N]
+
+DATASET: WG AZ SD EP PG WV TN (Table 2 presets; TN = tiny test graph)
+
+ARCH OPTIONS:
+  --crossbar C              crossbar size (1..=8, default 4)
+  --engines T               total graph engines (default 32)
+  --static-engines N        static graph engines (default 16)
+  --crossbars-per-engine M  crossbars per engine (default 1)
+  --policy P                lru | rr | lfu | random (default lru)
+";
+
+fn arch_from(args: &Args) -> Result<ArchConfig> {
+    let policy_s: String = args.get_or("policy", "lru".to_string())?;
+    let policy = PolicyKind::parse(&policy_s)
+        .ok_or_else(|| anyhow::anyhow!("unknown policy {policy_s:?}"))?;
+    let cfg = ArchConfig {
+        crossbar_size: args.get_or("crossbar", 4usize)?,
+        total_engines: args.get_or("engines", 32u32)?,
+        static_engines: args.get_or("static-engines", 16u32)?,
+        crossbars_per_engine: args.get_or("crossbars-per-engine", 1u32)?,
+        policy,
+        ..ArchConfig::default()
+    };
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn parse_dataset(s: &str) -> Result<Dataset> {
+    Dataset::from_short(s)
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset {s:?}; expected WG AZ SD EP PG WV TN"))
+}
+
+fn scale_for(d: Dataset, args: &Args) -> Result<f64> {
+    Ok(args
+        .get_parsed::<f64>("scale")?
+        .unwrap_or_else(|| figures::default_scale(d)))
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1), &["validate", "help"])?;
+    if args.flag("help") || args.positional.is_empty() {
+        print!("{USAGE}");
+        return Ok(());
+    }
+    let cmd = args.positional[0].as_str();
+    match cmd {
+        "preprocess" => cmd_preprocess(&args),
+        "run" => cmd_run(&args),
+        "figure" => cmd_figure(&args),
+        "dse" => cmd_dse(&args),
+        "datasets" => cmd_datasets(),
+        "serve" => cmd_serve(&args),
+        _ => {
+            print!("{USAGE}");
+            anyhow::bail!("unknown command {cmd:?}")
+        }
+    }
+}
+
+fn dataset_arg(args: &Args) -> Result<Dataset> {
+    let name = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow::anyhow!("missing <DATASET>\n{USAGE}"))?;
+    parse_dataset(name)
+}
+
+fn cmd_preprocess(args: &Args) -> Result<()> {
+    let d = dataset_arg(args)?;
+    let g = d.load_scaled(scale_for(d, args)?)?;
+    let acc = Accelerator::new(arch_from(args)?, CostParams::default());
+    let pre = acc.preprocess(&g, false)?;
+    let s = GraphStats::of(&g);
+    println!(
+        "{}: {} vertices, {} edges, avg degree {:.1}, sparsity {:.3}%",
+        d.spec().name,
+        fmt::count(s.num_vertices as u64),
+        fmt::count(s.num_edges as u64),
+        s.avg_degree,
+        s.sparsity_pct
+    );
+    println!(
+        "subgraphs: {}   distinct patterns: {}   top-16 coverage: {:.1}%   static coverage (N*M={}): {:.1}%",
+        fmt::count(pre.part.num_subgraphs() as u64),
+        pre.ranking.num_patterns(),
+        pre.ranking.coverage(16) * 100.0,
+        acc.config.static_capacity(),
+        pre.static_coverage() * 100.0
+    );
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let d = dataset_arg(args)?;
+    let algo: String = args.get_or("algo", "bfs".to_string())?;
+    let source: u32 = args.get_or("source", 0u32)?;
+    let backend: String = args.get_or("backend", "native".to_string())?;
+    let sc = scale_for(d, args)?;
+    let weighted = algo == "sssp";
+    let g = if weighted { d.load_weighted(sc)? } else { d.load_scaled(sc)? };
+    let acc = Accelerator::new(arch_from(args)?, CostParams::default());
+
+    let mut native = NativeExecutor;
+    let mut pjrt_holder;
+    let exec: &mut dyn StepExecutor = match backend.as_str() {
+        "native" => &mut native,
+        "pjrt" => {
+            pjrt_holder = repro::runtime::PjrtExecutor::from_default_dir()?;
+            &mut pjrt_holder
+        }
+        other => anyhow::bail!("unknown backend {other:?} (native|pjrt)"),
+    };
+
+    let report = match algo.as_str() {
+        "bfs" => acc.simulate(&g, &Bfs::new(source), exec)?,
+        "sssp" => acc.simulate(&g, &Sssp::new(source), exec)?,
+        "pagerank" => acc.simulate(&g, &PageRank::default(), exec)?,
+        "wcc" => acc.simulate(&g, &Wcc, exec)?,
+        other => anyhow::bail!("unknown algo {other:?} (bfs|sssp|pagerank|wcc)"),
+    };
+
+    let mut t = Table::new(format!(
+        "{} on {} ({backend} backend)",
+        report.algorithm,
+        d.spec().name
+    ))
+    .header(["metric", "value"]);
+    t.row(["energy", &fmt::energy(report.energy_j())]);
+    t.row(["exec time (modeled)", &fmt::time(report.exec_time_s())]);
+    t.row(["supersteps", &report.supersteps.to_string()]);
+    t.row(["iterations", &fmt::count(report.iterations)]);
+    t.row(["subgraph ops", &fmt::count(report.counts.mvm_ops)]);
+    t.row(["static hit rate", &format!("{:.1}%", report.static_hit_rate * 100.0)]);
+    t.row(["ReRAM write bits", &fmt::count(report.counts.write_bits)]);
+    t.row(["max cell writes", &fmt::count(report.max_cell_writes)]);
+    print!("{}", t.render());
+
+    if args.flag("validate") {
+        let csr = repro::graph::Csr::from_coo(&g);
+        let run = report.run.as_ref().unwrap();
+        let want = match algo.as_str() {
+            "bfs" => repro::algo::reference::bfs_levels(&csr, source),
+            "sssp" => repro::algo::reference::sssp_distances(&csr, source),
+            "pagerank" => repro::algo::reference::pagerank(&csr, 0.85, 20),
+            _ => repro::algo::reference::wcc_labels(&csr),
+        };
+        let worst = run
+            .values
+            .iter()
+            .zip(&want)
+            .map(|(a, b)| if *a >= 1e9 && *b >= 1e9 { 0.0 } else { (a - b).abs() })
+            .fold(0.0f32, f32::max);
+        println!("validation vs CPU reference: max abs error = {worst:.2e}");
+        anyhow::ensure!(worst < 1e-2, "validation FAILED");
+        println!("validation OK");
+    }
+    Ok(())
+}
+
+fn cmd_figure(args: &Args) -> Result<()> {
+    let id = args
+        .positional
+        .get(1)
+        .map(String::as_str)
+        .ok_or_else(|| anyhow::anyhow!("missing figure id\n{USAGE}"))?;
+    let scale = args.get_parsed::<f64>("scale")?;
+    let render = |id: &str| -> Result<String> {
+        match id {
+            "fig1" => figures::fig1(scale),
+            "fig5" => figures::fig5(scale),
+            "fig6" => figures::fig6(scale),
+            "fig7" => figures::fig7(scale),
+            "table1" => figures::table1(),
+            "table4" => figures::table4(scale),
+            "lifetime" => figures::lifetime(scale),
+            other => anyhow::bail!(
+                "unknown figure {other:?}; expected fig1|fig5|fig6|fig7|table1|table4|lifetime|all"
+            ),
+        }
+    };
+    if id == "all" {
+        for id in ["table1", "fig1", "fig5", "fig6", "table4", "fig7", "lifetime"] {
+            println!("{}", render(id)?);
+        }
+    } else {
+        println!("{}", render(id)?);
+    }
+    Ok(())
+}
+
+fn cmd_dse(args: &Args) -> Result<()> {
+    let d = dataset_arg(args)?;
+    let g = d.load_scaled(scale_for(d, args)?)?;
+    let cfg = arch_from(args)?;
+    let (best, points) = repro::dse::find_best_static_split(
+        &g,
+        &cfg,
+        &CostParams::default(),
+        &Bfs::new(0),
+        None,
+    )?;
+    let mut t = Table::new(format!("DSE: static-engine split on {}", d.spec().name))
+        .header(["N static", "speedup vs N=0", "energy", "static hit rate"]);
+    for p in &points {
+        t.row([
+            p.x.to_string(),
+            format!("{:.2}x", p.speedup),
+            fmt::energy(p.energy_j),
+            format!("{:.1}%", p.static_hit_rate * 100.0),
+        ]);
+    }
+    print!("{}", t.render());
+    println!("best static split: N = {best} (of T = {})", cfg.total_engines);
+    Ok(())
+}
+
+fn cmd_datasets() -> Result<()> {
+    let mut t = Table::new("Table 2: graph datasets (paper spec; generated as seeded R-MAT)")
+        .header(["name", "short", "vertices", "edges", "avg deg", "sparsity", "domain"]);
+    for d in ALL_DATASETS {
+        let s = d.spec();
+        t.row([
+            s.name.to_string(),
+            s.short.to_string(),
+            fmt::count(s.vertices as u64),
+            fmt::count(s.edges as u64),
+            s.avg_degree.to_string(),
+            format!("{:.3}%", s.sparsity_pct),
+            s.domain.to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let jobs: usize = args.get_or("jobs", 16usize)?;
+    let workers: usize = args.get_or("workers", 2usize)?;
+    let svc = Service::spawn(ServiceConfig { workers, ..ServiceConfig::default() });
+    let pending: Vec<_> = (0..jobs)
+        .map(|i| {
+            let job = match i % 3 {
+                0 => Job::Bfs { dataset: Dataset::Tiny, scale: 1.0, source: i as u32 },
+                1 => Job::PageRank { dataset: Dataset::Tiny, scale: 1.0, iterations: 5 },
+                _ => Job::Wcc { dataset: Dataset::Tiny, scale: 1.0 },
+            };
+            svc.submit(job)
+        })
+        .collect::<Result<_>>()?;
+    for p in pending {
+        let r = p.wait()?;
+        println!(
+            "job {} done in {} µs ({} subgraph ops)",
+            r.report.algorithm,
+            r.wall_time_us,
+            fmt::count(r.report.counts.mvm_ops)
+        );
+    }
+    let s = svc.metrics.snapshot();
+    println!(
+        "served {} jobs, mean latency {:.0} µs, max {} µs, {} total subgraph ops",
+        s.jobs_completed,
+        s.mean_latency_us,
+        s.max_latency_us,
+        fmt::count(s.subgraph_ops)
+    );
+    Ok(())
+}

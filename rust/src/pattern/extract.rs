@@ -1,0 +1,264 @@
+//! Window-based partitioning (Alg. 1 step ①): a non-overlapping C×C
+//! sliding window over the adjacency matrix. All-zero windows are
+//! discarded (they involve no processing, §I), which is what makes the
+//! approach viable for graphs at 99.99 % sparsity: we bucket *edges* into
+//! windows rather than scanning the dense matrix.
+
+use std::collections::HashMap;
+
+use crate::graph::coo::Coo;
+
+use super::pattern::{Pattern, MAX_C};
+
+/// One non-empty window of the adjacency matrix.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Subgraph {
+    /// Block row: source vertices `[brow*C, (brow+1)*C)`.
+    pub brow: u32,
+    /// Block column: destination vertices `[bcol*C, (bcol+1)*C)`.
+    pub bcol: u32,
+    /// The 0/1 structure of the window.
+    pub pattern: Pattern,
+}
+
+impl Subgraph {
+    /// Starting (source, destination) vertex — the only vertex data the
+    /// subgraph table stores, since every window has exactly C vertices
+    /// per side (Fig. 3e).
+    #[inline]
+    pub fn start_vertices(&self, c: usize) -> (u32, u32) {
+        (self.brow * c as u32, self.bcol * c as u32)
+    }
+}
+
+/// Partitioning result: subgraphs (sorted row-major by (brow, bcol)) plus
+/// optional per-subgraph edge weights (aligned with `Pattern::cells`
+/// order) for weighted algorithms.
+#[derive(Debug, Clone)]
+pub struct Partitioned {
+    pub c: usize,
+    pub num_vertices: u32,
+    pub subgraphs: Vec<Subgraph>,
+    /// `weights[k]` holds the weights of subgraph k's edges in the same
+    /// order as `subgraphs[k].pattern.cells(c)`; `None` for unweighted
+    /// graphs (all weights 1.0).
+    pub weights: Option<Vec<Vec<f32>>>,
+}
+
+impl Partitioned {
+    pub fn num_subgraphs(&self) -> usize {
+        self.subgraphs.len()
+    }
+
+    /// Total number of block rows/cols of the adjacency matrix.
+    pub fn num_blocks(&self) -> u32 {
+        self.num_vertices.div_ceil(self.c as u32)
+    }
+
+    /// Dense C×C weight matrix of subgraph `k` (for the MVM datapath).
+    pub fn dense_weights(&self, k: usize) -> Vec<f32> {
+        let mut m = vec![0f32; self.c * self.c];
+        self.dense_weights_into(k, &mut m);
+        m
+    }
+
+    /// Zero-allocation variant: writes subgraph `k`'s dense C×C weight
+    /// matrix into `out` (which must be zeroed, length c*c). This is the
+    /// PJRT packing hot path — no per-subgraph Vec, no `cells()` Vec.
+    #[inline]
+    pub fn dense_weights_into(&self, k: usize, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.c * self.c);
+        let sg = &self.subgraphs[k];
+        match &self.weights {
+            None => {
+                let mut bits = sg.pattern.0;
+                while bits != 0 {
+                    out[bits.trailing_zeros() as usize] = 1.0;
+                    bits &= bits - 1;
+                }
+            }
+            Some(w) => {
+                let mut bits = sg.pattern.0;
+                let mut nth = 0usize;
+                while bits != 0 {
+                    out[bits.trailing_zeros() as usize] = w[k][nth];
+                    bits &= bits - 1;
+                    nth += 1;
+                }
+            }
+        }
+    }
+}
+
+/// Partition `g` with a C×C window. `weighted` keeps edge weights (SSSP);
+/// BFS/PageRank only need the 0/1 structure.
+pub fn partition(g: &Coo, c: usize, weighted: bool) -> Partitioned {
+    assert!((1..=MAX_C).contains(&c), "window size must be 1..=8, got {c}");
+    let cu = c as u32;
+    // Bucket edges by window. Key packs (brow, bcol) into u64.
+    let mut windows: HashMap<u64, Pattern> = HashMap::new();
+    for e in &g.edges {
+        let key = ((e.src / cu) as u64) << 32 | (e.dst / cu) as u64;
+        let (i, j) = ((e.src % cu) as usize, (e.dst % cu) as usize);
+        let p = windows.entry(key).or_insert(Pattern::EMPTY);
+        *p = p.with_edge(i, j, c);
+    }
+
+    let mut subgraphs: Vec<Subgraph> = windows
+        .into_iter()
+        .map(|(key, pattern)| Subgraph {
+            brow: (key >> 32) as u32,
+            bcol: key as u32,
+            pattern,
+        })
+        .collect();
+    subgraphs.sort_unstable_by_key(|s| (s.brow, s.bcol));
+
+    let weights = weighted.then(|| {
+        // Second pass: gather weights per window in cells() (bit) order.
+        let mut index: HashMap<(u32, u32), usize> = HashMap::with_capacity(subgraphs.len());
+        for (k, s) in subgraphs.iter().enumerate() {
+            index.insert((s.brow, s.bcol), k);
+        }
+        let mut out: Vec<Vec<f32>> = subgraphs
+            .iter()
+            .map(|s| vec![0f32; s.pattern.nnz() as usize])
+            .collect();
+        for e in &g.edges {
+            let k = index[&(e.src / cu, e.dst / cu)];
+            let s = &subgraphs[k];
+            let bit = (e.src % cu) as usize * c + (e.dst % cu) as usize;
+            // Position of this bit among the pattern's set bits.
+            let below = s.pattern.0 & ((1u64 << bit) - 1);
+            out[k][below.count_ones() as usize] = e.weight;
+        }
+        out
+    });
+
+    Partitioned { c, num_vertices: g.num_vertices, subgraphs, weights }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::coo::Edge;
+
+    /// The paper's Fig. 3 example: 6 vertices, 2×2 windows.
+    fn fig3_graph() -> Coo {
+        // Edges chosen so S0 (block 0,0) and S4 (block 1,1) share a
+        // pattern, mirroring the paper's worked example structure.
+        Coo::from_edges(
+            6,
+            vec![
+                Edge::new(0, 1), // block (0,0), local (0,1)
+                Edge::new(2, 3), // block (1,1), local (0,1)
+                Edge::new(4, 5), // block (2,2), local (0,1)
+                Edge::new(1, 2), // block (0,1), local (1,0)
+                Edge::new(3, 4), // block (1,2), local (1,0)
+                Edge::new(5, 0), // block (2,0), local (1,0)
+                Edge::new(0, 4), // block (0,2), local (0,0)
+            ],
+        )
+    }
+
+    #[test]
+    fn partitions_into_expected_windows() {
+        let p = partition(&fig3_graph(), 2, false);
+        assert_eq!(p.num_blocks(), 3);
+        assert_eq!(p.num_subgraphs(), 7); // 7 distinct non-empty windows
+        // Window (0,0) holds local edge (0,1).
+        let s00 = p.subgraphs.iter().find(|s| (s.brow, s.bcol) == (0, 0)).unwrap();
+        assert!(s00.pattern.has_edge(0, 1, 2));
+        assert_eq!(s00.pattern.nnz(), 1);
+    }
+
+    #[test]
+    fn identical_windows_share_pattern() {
+        let p = partition(&fig3_graph(), 2, false);
+        let pat = |br, bc| {
+            p.subgraphs
+                .iter()
+                .find(|s| (s.brow, s.bcol) == (br, bc))
+                .unwrap()
+                .pattern
+        };
+        assert_eq!(pat(0, 0), pat(1, 1));
+        assert_eq!(pat(0, 0), pat(2, 2));
+        assert_eq!(pat(0, 1), pat(1, 2));
+        assert_ne!(pat(0, 0), pat(0, 1));
+    }
+
+    #[test]
+    fn zero_windows_are_discarded() {
+        let p = partition(&fig3_graph(), 2, false);
+        assert!(p.subgraphs.iter().all(|s| !s.pattern.is_empty()));
+        // 9 possible windows, 7 non-empty.
+        assert!(p.num_subgraphs() < 9);
+    }
+
+    #[test]
+    fn edge_count_is_preserved() {
+        let g = crate::graph::generator::rmat(
+            512,
+            4_000,
+            crate::graph::generator::RmatParams::default(),
+            3,
+        );
+        let p = partition(&g, 4, false);
+        let total: u32 = p.subgraphs.iter().map(|s| s.pattern.nnz()).sum();
+        assert_eq!(total as usize, g.num_edges());
+    }
+
+    #[test]
+    fn start_vertices_scale_with_c() {
+        let s = Subgraph { brow: 3, bcol: 5, pattern: Pattern(1) };
+        assert_eq!(s.start_vertices(4), (12, 20));
+    }
+
+    #[test]
+    fn weighted_partition_aligns_weights_with_cells() {
+        let g = Coo::from_edges(
+            4,
+            vec![
+                Edge::weighted(0, 0, 3.0),
+                Edge::weighted(0, 1, 5.0),
+                Edge::weighted(1, 0, 7.0),
+            ],
+        );
+        let p = partition(&g, 2, true);
+        assert_eq!(p.num_subgraphs(), 1);
+        let cells = p.subgraphs[0].pattern.cells(2);
+        let w = &p.weights.as_ref().unwrap()[0];
+        let lookup: std::collections::HashMap<(u8, u8), f32> =
+            cells.into_iter().zip(w.iter().copied()).collect();
+        assert_eq!(lookup[&(0, 0)], 3.0);
+        assert_eq!(lookup[&(0, 1)], 5.0);
+        assert_eq!(lookup[&(1, 0)], 7.0);
+    }
+
+    #[test]
+    fn dense_weights_unweighted_is_adjacency() {
+        let p = partition(&fig3_graph(), 2, false);
+        let k = p
+            .subgraphs
+            .iter()
+            .position(|s| (s.brow, s.bcol) == (0, 0))
+            .unwrap();
+        assert_eq!(p.dense_weights(k), vec![0.0, 1.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn subgraphs_sorted_row_major() {
+        let p = partition(&fig3_graph(), 2, false);
+        let keys: Vec<_> = p.subgraphs.iter().map(|s| (s.brow, s.bcol)).collect();
+        let mut sorted = keys.clone();
+        sorted.sort_unstable();
+        assert_eq!(keys, sorted);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_oversized_window() {
+        partition(&fig3_graph(), 9, false);
+    }
+}

@@ -1,0 +1,12 @@
+//! Pattern layer: window partitioning, pattern extraction/ranking (Alg. 1),
+//! and the configuration/subgraph tables the scheduler consumes (Fig. 3e).
+
+pub mod extract;
+pub mod pattern;
+pub mod rank;
+pub mod tables;
+
+pub use extract::{partition, Partitioned, Subgraph};
+pub use pattern::Pattern;
+pub use rank::PatternRanking;
+pub use tables::{ConfigTable, EngineSlot, SubgraphTable};

@@ -1,0 +1,188 @@
+//! A *pattern* is the 0/1 structure of one C×C window of the adjacency
+//! matrix (paper §I): bit `i*C + j` is set iff local source `i` has an
+//! edge to local destination `j`. With C ≤ 8 a pattern packs into a u64,
+//! making frequency counting a dense hash over machine words.
+
+/// Packed C×C binary pattern. The crossbar size C is carried externally
+/// (it is a global architecture parameter, identical for every pattern).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Pattern(pub u64);
+
+/// Maximum supported window size (bits of u64: 8×8).
+pub const MAX_C: usize = 8;
+
+impl Pattern {
+    pub const EMPTY: Pattern = Pattern(0);
+
+    /// Set the bit for local edge (i -> j).
+    #[inline]
+    pub fn with_edge(self, i: usize, j: usize, c: usize) -> Pattern {
+        debug_assert!(i < c && j < c && c <= MAX_C);
+        Pattern(self.0 | 1u64 << (i * c + j))
+    }
+
+    #[inline]
+    pub fn has_edge(self, i: usize, j: usize, c: usize) -> bool {
+        self.0 >> (i * c + j) & 1 == 1
+    }
+
+    /// Number of edges in the pattern.
+    #[inline]
+    pub fn nnz(self) -> u32 {
+        self.0.count_ones()
+    }
+
+    #[inline]
+    pub fn is_empty(self) -> bool {
+        self.0 == 0
+    }
+
+    /// Bitmask over rows that contain at least one edge. The paper stores
+    /// the row address of single-edge patterns in the configuration table
+    /// so static engines skip inactive wordlines (§III.B).
+    #[inline]
+    pub fn active_rows(self, c: usize) -> u32 {
+        let row_mask = (1u64 << c) - 1;
+        let mut rows = 0u32;
+        for i in 0..c {
+            if self.0 >> (i * c) & row_mask != 0 {
+                rows |= 1 << i;
+            }
+        }
+        rows
+    }
+
+    /// Number of active rows (wordlines that must be driven for an MVM).
+    #[inline]
+    pub fn active_row_count(self, c: usize) -> u32 {
+        self.active_rows(c).count_ones()
+    }
+
+    /// If the pattern has exactly one edge, its (row, col); the CT stores
+    /// this to avoid iterating crossbar rows (§III.B).
+    pub fn single_edge(self, c: usize) -> Option<(u8, u8)> {
+        if self.nnz() != 1 {
+            return None;
+        }
+        let bit = self.0.trailing_zeros() as usize;
+        Some(((bit / c) as u8, (bit % c) as u8))
+    }
+
+    /// COO cell list ((i, j) pairs in bit order) — the representation the
+    /// configuration table stores (Fig. 3e).
+    pub fn cells(self, c: usize) -> Vec<(u8, u8)> {
+        let mut out = Vec::with_capacity(self.nnz() as usize);
+        let mut bits = self.0;
+        while bits != 0 {
+            let bit = bits.trailing_zeros() as usize;
+            out.push(((bit / c) as u8, (bit % c) as u8));
+            bits &= bits - 1;
+        }
+        out
+    }
+
+    /// Dense row-major f32 matrix (crossbar conductances) — what the
+    /// runtime feeds the AOT executable.
+    pub fn to_dense(self, c: usize) -> Vec<f32> {
+        let mut m = vec![0f32; c * c];
+        for (i, j) in self.cells(c) {
+            m[i as usize * c + j as usize] = 1.0;
+        }
+        m
+    }
+
+    /// Build from a dense 0/1 row-major matrix.
+    pub fn from_dense(m: &[f32], c: usize) -> Pattern {
+        assert_eq!(m.len(), c * c);
+        let mut p = Pattern::EMPTY;
+        for i in 0..c {
+            for j in 0..c {
+                if m[i * c + j] != 0.0 {
+                    p = p.with_edge(i, j, c);
+                }
+            }
+        }
+        p
+    }
+
+    /// Number of ReRAM cells that must be written to reprogram a crossbar
+    /// currently holding `from` into `self` (toggled cells only — SET on
+    /// new edges, RESET on removed ones).
+    #[inline]
+    pub fn write_cost_from(self, from: Pattern) -> u32 {
+        (self.0 ^ from.0).count_ones()
+    }
+}
+
+impl std::fmt::Display for Pattern {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "P{:#x}", self.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn edges_round_trip() {
+        let p = Pattern::EMPTY.with_edge(0, 1, 4).with_edge(3, 2, 4);
+        assert!(p.has_edge(0, 1, 4));
+        assert!(p.has_edge(3, 2, 4));
+        assert!(!p.has_edge(1, 0, 4));
+        assert_eq!(p.nnz(), 2);
+    }
+
+    #[test]
+    fn active_rows_tracks_rows_with_edges() {
+        let p = Pattern::EMPTY.with_edge(0, 3, 4).with_edge(2, 0, 4).with_edge(2, 1, 4);
+        assert_eq!(p.active_rows(4), 0b101);
+        assert_eq!(p.active_row_count(4), 2);
+    }
+
+    #[test]
+    fn single_edge_detection() {
+        let p = Pattern::EMPTY.with_edge(2, 3, 4);
+        assert_eq!(p.single_edge(4), Some((2, 3)));
+        assert_eq!(p.with_edge(0, 0, 4).single_edge(4), None);
+        assert_eq!(Pattern::EMPTY.single_edge(4), None);
+    }
+
+    #[test]
+    fn cells_in_bit_order() {
+        let p = Pattern::EMPTY.with_edge(1, 0, 2).with_edge(0, 1, 2);
+        assert_eq!(p.cells(2), vec![(0, 1), (1, 0)]);
+    }
+
+    #[test]
+    fn dense_round_trip() {
+        let p = Pattern::EMPTY.with_edge(0, 0, 3).with_edge(2, 1, 3);
+        let d = p.to_dense(3);
+        assert_eq!(d[0], 1.0);
+        assert_eq!(d[2 * 3 + 1], 1.0);
+        assert_eq!(d.iter().filter(|&&x| x != 0.0).count(), 2);
+        assert_eq!(Pattern::from_dense(&d, 3), p);
+    }
+
+    #[test]
+    fn write_cost_is_hamming_distance() {
+        let a = Pattern(0b1100);
+        let b = Pattern(0b1010);
+        assert_eq!(a.write_cost_from(b), 2);
+        assert_eq!(a.write_cost_from(a), 0);
+        assert_eq!(a.write_cost_from(Pattern::EMPTY), 2);
+    }
+
+    #[test]
+    fn max_c_pattern_uses_all_bits() {
+        let mut p = Pattern::EMPTY;
+        for i in 0..8 {
+            for j in 0..8 {
+                p = p.with_edge(i, j, 8);
+            }
+        }
+        assert_eq!(p.0, u64::MAX);
+        assert_eq!(p.nnz(), 64);
+        assert_eq!(p.active_row_count(8), 8);
+    }
+}

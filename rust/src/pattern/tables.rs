@@ -1,0 +1,528 @@
+//! Main-memory tables produced by preprocessing (Alg. 1 steps ④, Fig. 3e).
+//!
+//! * **Configuration table (CT)** — per pattern: COO cell data, the graph
+//!   engine/crossbar slot(s) it is pinned to if static, and the row
+//!   address shortcut for single-edge patterns.
+//! * **Subgraph table (ST)** — per subgraph: starting source/destination
+//!   vertex (all windows have C vertices per side, so one pair suffices)
+//!   and the pattern it instantiates, sorted in execution order.
+//!
+//! Static assignment supports two policies:
+//!
+//! * `TopK` — the literal Alg. 1: the N×M most frequent patterns get one
+//!   static crossbar each.
+//! * `Balanced` (default) — the paper's load-balancing refinement
+//!   ("patterns assigned to static engines are evenly distributed …
+//!   balances pattern load among static engines, improving overall
+//!   utilization"): N×M slots are apportioned by a cost-aware greedy
+//!   that weighs covering one more pattern against *replicating* a very
+//!   frequent one, so hot patterns stop serializing a single engine.
+//!   Replicas of a pattern land on distinct engines.
+
+use std::collections::HashMap;
+
+use super::extract::Partitioned;
+use super::pattern::Pattern;
+use super::rank::PatternRanking;
+
+/// Where a static pattern replica lives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EngineSlot {
+    pub engine: u32,
+    pub crossbar: u32,
+}
+
+/// Static-assignment policy (see module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum StaticAssignment {
+    TopK,
+    #[default]
+    Balanced,
+}
+
+/// Configuration-table entry for one pattern.
+#[derive(Debug, Clone)]
+pub struct CtEntry {
+    pub pattern: Pattern,
+    pub occurrences: u32,
+    /// Static crossbar replicas holding this pattern (empty = dynamic).
+    pub slots: Vec<EngineSlot>,
+    /// Row address shortcut for single-edge patterns (§III.B).
+    pub row_addr: Option<u8>,
+    /// Cached `pattern.active_row_count(c)` — scheduler hot path.
+    pub active_rows: u32,
+}
+
+impl CtEntry {
+    #[inline]
+    pub fn is_static(&self) -> bool {
+        !self.slots.is_empty()
+    }
+}
+
+/// Configuration table: rank-ordered patterns with static assignments.
+#[derive(Debug, Clone)]
+pub struct ConfigTable {
+    pub entries: Vec<CtEntry>,
+    index: HashMap<Pattern, u32>,
+    pub num_static_engines: u32,
+    pub crossbars_per_engine: u32,
+    pub assignment: StaticAssignment,
+}
+
+impl ConfigTable {
+    /// Assign `n_static * m` static crossbar slots over the ranking.
+    /// `dyn_slots` is the number of dynamic crossbars in the machine —
+    /// the balanced apportionment weighs "cover one more pattern"
+    /// against "replicate a hot one" using the relative cost of dynamic
+    /// ops and the dynamic pool's parallelism.
+    pub fn build(
+        ranking: &PatternRanking,
+        c: usize,
+        n_static: u32,
+        m: u32,
+        dyn_slots: u32,
+        assignment: StaticAssignment,
+    ) -> Self {
+        let capacity = (n_static * m) as usize;
+        // replicas[i] = number of slots for rank-i pattern.
+        let replicas = match assignment {
+            StaticAssignment::TopK => {
+                let mut r = vec![0usize; ranking.num_patterns()];
+                for x in r.iter_mut().take(capacity) {
+                    *x = 1;
+                }
+                r
+            }
+            StaticAssignment::Balanced => {
+                apportion_balanced(ranking, capacity, dyn_slots, DYN_COST_RATIO)
+            }
+        };
+
+        // Assign slot positions engine-major in rank order so replicas of
+        // the same pattern land on distinct engines.
+        let mut next_slot = 0u32;
+        let mut slot_at = |_: usize| {
+            let s = next_slot;
+            next_slot += 1;
+            EngineSlot { engine: s % n_static.max(1), crossbar: s / n_static.max(1) }
+        };
+
+        let entries: Vec<CtEntry> = ranking
+            .ranked
+            .iter()
+            .enumerate()
+            .map(|(i, &(pattern, occurrences))| CtEntry {
+                pattern,
+                occurrences,
+                slots: if n_static == 0 {
+                    Vec::new()
+                } else {
+                    (0..replicas.get(i).copied().unwrap_or(0))
+                        .map(|k| slot_at(k))
+                        .collect()
+                },
+                row_addr: pattern.single_edge(c).map(|(r, _)| r),
+                active_rows: pattern.active_row_count(c),
+            })
+            .collect();
+        let index = entries
+            .iter()
+            .enumerate()
+            .map(|(i, e)| (e.pattern, i as u32))
+            .collect();
+        Self {
+            entries,
+            index,
+            num_static_engines: n_static,
+            crossbars_per_engine: m,
+            assignment,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    #[inline]
+    pub fn entry_of(&self, p: Pattern) -> Option<&CtEntry> {
+        self.index.get(&p).map(|&i| &self.entries[i as usize])
+    }
+
+    /// First static slot for a pattern, if any (Alg. 2 line-11 test).
+    #[inline]
+    pub fn slot_of(&self, p: Pattern) -> Option<EngineSlot> {
+        self.entry_of(p).and_then(|e| e.slots.first().copied())
+    }
+
+    #[inline]
+    pub fn is_static(&self, p: Pattern) -> bool {
+        self.entry_of(p).is_some_and(|e| e.is_static())
+    }
+
+    /// All (entry, replica slot) pairs — used to preconfigure static
+    /// engines at init (Alg. 2 lines 6–8).
+    pub fn static_assignments(&self) -> impl Iterator<Item = (&CtEntry, EngineSlot)> {
+        self.entries
+            .iter()
+            .flat_map(|e| e.slots.iter().map(move |&s| (e, s)))
+    }
+
+    /// Fraction of subgraph *occurrences* that will hit static engines.
+    pub fn static_coverage(&self) -> f64 {
+        let total: u64 = self.entries.iter().map(|e| e.occurrences as u64).sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let stat: u64 = self
+            .entries
+            .iter()
+            .filter(|e| e.is_static())
+            .map(|e| e.occurrences as u64)
+            .sum();
+        stat as f64 / total as f64
+    }
+}
+
+/// A dynamic subgraph op (row-parallel reconfiguration + MVM) costs this
+/// many static-op equivalents — derived from Table 3: ~2 row-writes at
+/// 20.2 ns plus the MVM, vs the ~9 ns static MVM.
+pub const DYN_COST_RATIO: f64 = 6.0;
+
+/// Cost-aware greedy apportionment of `capacity` static slots.
+///
+/// Models the steady-state bottleneck: static ops queue on the engine
+/// holding their pattern (per-replica queue = occ / r), while uncovered
+/// patterns run on the dynamic pool at `ratio`× the per-op cost spread
+/// over `dyn_slots` crossbars. Each slot goes to whichever action —
+/// promote the next-ranked pattern to static, or replicate the hottest
+/// static pattern — minimizes the resulting makespan. Promotion wins
+/// ties (coverage also saves ReRAM writes, which the makespan ignores).
+fn apportion_balanced(
+    ranking: &PatternRanking,
+    capacity: usize,
+    dyn_slots: u32,
+    ratio: f64,
+) -> Vec<usize> {
+    let n = ranking.num_patterns();
+    let mut replicas = vec![0usize; n];
+    if capacity == 0 || n == 0 {
+        return replicas;
+    }
+    let occ: Vec<f64> = ranking.ranked.iter().map(|&(_, c)| c as f64).collect();
+    let mut dyn_total: f64 = occ.iter().sum();
+    let mut next = 0usize; // next unassigned rank
+    let dyn_cost = |d: f64| d * ratio / dyn_slots.max(1) as f64;
+    let hottest = |replicas: &[usize], upto: usize| -> (usize, f64) {
+        let mut best = (usize::MAX, 0.0f64);
+        for i in 0..upto {
+            let q = occ[i] / replicas[i] as f64;
+            if q > best.1 {
+                best = (i, q);
+            }
+        }
+        best
+    };
+    for _ in 0..capacity {
+        let (hot_i, hot_q) = hottest(&replicas, next);
+        // Option A: promote pattern `next` to static (one slot).
+        let obj_a = if next < n {
+            hot_q.max(occ[next]).max(dyn_cost(dyn_total - occ[next]))
+        } else {
+            f64::INFINITY
+        };
+        // Option B: replicate the hottest static pattern.
+        let obj_b = if hot_i != usize::MAX {
+            let mut r2 = replicas[hot_i];
+            r2 += 1;
+            // New hottest after the replica.
+            let mut new_hot = occ[hot_i] / r2 as f64;
+            for i in 0..next {
+                if i != hot_i {
+                    new_hot = new_hot.max(occ[i] / replicas[i] as f64);
+                }
+            }
+            new_hot.max(dyn_cost(dyn_total))
+        } else {
+            f64::INFINITY
+        };
+        if obj_a.is_infinite() && obj_b.is_infinite() {
+            break;
+        }
+        if obj_a <= obj_b {
+            replicas[next] = 1;
+            dyn_total -= occ[next];
+            next += 1;
+        } else {
+            replicas[hot_i] += 1;
+        }
+    }
+    debug_assert!(replicas.iter().sum::<usize>() <= capacity);
+    replicas
+}
+
+/// Subgraph-table entry: compressed per-subgraph record.
+#[derive(Debug, Clone, Copy)]
+pub struct StEntry {
+    /// Index into `Partitioned::subgraphs` (vertex data + weights live there).
+    pub sg_idx: u32,
+    /// Starting source vertex (brow * C).
+    pub src_start: u32,
+    /// Starting destination vertex (bcol * C).
+    pub dst_start: u32,
+    /// Pattern rank (index into the CT) — small ids for hot patterns.
+    pub pattern_rank: u32,
+}
+
+/// Execution order of the subgraph table (paper §III.C).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ExecOrder {
+    /// Group subgraphs sharing destination vertices (baseline, used for BFS).
+    #[default]
+    ColumnMajor,
+    /// Group subgraphs sharing source vertices.
+    RowMajor,
+}
+
+/// Subgraph table in execution order, with group boundaries: each group
+/// shares the same destination (column-major) or source (row-major)
+/// block — the "batch of subgraphs with same dest. vertices" of Alg. 2.
+#[derive(Debug, Clone)]
+pub struct SubgraphTable {
+    pub order: ExecOrder,
+    pub entries: Vec<StEntry>,
+    /// `groups[g]..groups[g+1]` delimits group g in `entries`.
+    pub groups: Vec<u32>,
+}
+
+impl SubgraphTable {
+    pub fn build(p: &Partitioned, ranking: &PatternRanking, order: ExecOrder) -> Self {
+        let c = p.c as u32;
+        let mut keyed: Vec<(u32, u32, StEntry)> = p
+            .subgraphs
+            .iter()
+            .enumerate()
+            .map(|(k, s)| {
+                let entry = StEntry {
+                    sg_idx: k as u32,
+                    src_start: s.brow * c,
+                    dst_start: s.bcol * c,
+                    pattern_rank: ranking.rank_of[&s.pattern],
+                };
+                match order {
+                    ExecOrder::ColumnMajor => (s.bcol, s.brow, entry),
+                    ExecOrder::RowMajor => (s.brow, s.bcol, entry),
+                }
+            })
+            .collect();
+        keyed.sort_unstable_by_key(|&(a, b, _)| (a, b));
+
+        let mut entries = Vec::with_capacity(keyed.len());
+        let mut groups = vec![0u32];
+        let mut current: Option<u32> = None;
+        for (major, _, e) in keyed {
+            if current != Some(major) {
+                if current.is_some() {
+                    groups.push(entries.len() as u32);
+                }
+                current = Some(major);
+            }
+            entries.push(e);
+        }
+        groups.push(entries.len() as u32);
+        if entries.is_empty() {
+            groups = vec![0, 0];
+        }
+        Self { order, entries, groups }
+    }
+
+    pub fn num_groups(&self) -> usize {
+        self.groups.len() - 1
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Entries of group `g`.
+    pub fn group(&self, g: usize) -> &[StEntry] {
+        &self.entries[self.groups[g] as usize..self.groups[g + 1] as usize]
+    }
+
+    /// Iterate groups in order.
+    pub fn iter_groups(&self) -> impl Iterator<Item = &[StEntry]> {
+        (0..self.num_groups()).map(move |g| self.group(g))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::coo::{Coo, Edge};
+    use crate::pattern::extract::partition;
+
+    fn setup() -> (Partitioned, PatternRanking) {
+        let g = Coo::from_edges(
+            8,
+            vec![
+                Edge::new(0, 1),
+                Edge::new(2, 3),
+                Edge::new(4, 5),
+                Edge::new(6, 6),
+                Edge::new(0, 5),
+                Edge::new(1, 4),
+            ],
+        );
+        let p = partition(&g, 2, false);
+        let r = PatternRanking::from_partitioned(&p);
+        (p, r)
+    }
+
+    #[test]
+    fn topk_assignment_respects_capacity() {
+        let (_, r) = setup();
+        let ct = ConfigTable::build(&r, 2, 1, 2, 4, StaticAssignment::TopK);
+        let n_static = ct.entries.iter().filter(|e| e.is_static()).count();
+        assert_eq!(n_static, 2.min(r.num_patterns()));
+        assert!(ct.entries[0].is_static());
+        // TopK gives exactly one slot per static pattern.
+        assert!(ct.entries.iter().all(|e| e.slots.len() <= 1));
+    }
+
+    #[test]
+    fn balanced_replicates_hot_patterns() {
+        let (_, r) = setup();
+        // Ranking: one pattern with 3 occurrences, three with 1.
+        let ct = ConfigTable::build(&r, 2, 4, 1, 4, StaticAssignment::Balanced);
+        let total_slots: usize = ct.entries.iter().map(|e| e.slots.len()).sum();
+        assert_eq!(total_slots, 4);
+        // D'Hondt: priorities 3, 1.5, 1, 1, 1 → P0 gets 2 slots.
+        assert_eq!(ct.entries[0].slots.len(), 2);
+        // Replicas land on distinct engines.
+        let engines: Vec<u32> = ct.entries[0].slots.iter().map(|s| s.engine).collect();
+        assert_ne!(engines[0], engines[1]);
+    }
+
+    #[test]
+    fn balanced_never_exceeds_capacity_and_is_rank_monotone() {
+        let (_, r) = setup();
+        for cap in 1..8u32 {
+            let ct = ConfigTable::build(&r, 2, cap, 1, 4, StaticAssignment::Balanced);
+            let total: usize = ct.entries.iter().map(|e| e.slots.len()).sum();
+            assert!(total <= cap as usize);
+            // A lower-ranked pattern never has more replicas than a
+            // higher-ranked one (D'Hondt is proportional).
+            for w in ct.entries.windows(2) {
+                assert!(w[0].slots.len() >= w[1].slots.len());
+            }
+        }
+    }
+
+    #[test]
+    fn zero_static_engines_means_all_dynamic() {
+        let (_, r) = setup();
+        for a in [StaticAssignment::TopK, StaticAssignment::Balanced] {
+            let ct = ConfigTable::build(&r, 2, 0, 4, 4, a);
+            assert!(ct.entries.iter().all(|e| !e.is_static()));
+            assert_eq!(ct.static_coverage(), 0.0);
+        }
+    }
+
+    #[test]
+    fn row_addr_only_for_single_edge_patterns() {
+        let (_, r) = setup();
+        let ct = ConfigTable::build(&r, 2, 4, 1, 4, StaticAssignment::TopK);
+        for e in &ct.entries {
+            assert_eq!(e.row_addr.is_some(), e.pattern.nnz() == 1, "{:?}", e.pattern);
+        }
+    }
+
+    #[test]
+    fn topk_static_coverage_matches_ranking_coverage() {
+        let (_, r) = setup();
+        let ct = ConfigTable::build(&r, 2, 1, 1, 4, StaticAssignment::TopK);
+        assert!((ct.static_coverage() - r.coverage(1)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn static_assignments_slots_are_unique() {
+        let (_, r) = setup();
+        for a in [StaticAssignment::TopK, StaticAssignment::Balanced] {
+            let ct = ConfigTable::build(&r, 2, 3, 2, 4, a);
+            let mut seen = std::collections::HashSet::new();
+            for (_, slot) in ct.static_assignments() {
+                assert!(slot.engine < 3 && slot.crossbar < 2);
+                assert!(seen.insert((slot.engine, slot.crossbar)), "slot reused");
+            }
+        }
+    }
+
+    #[test]
+    fn st_column_major_groups_share_dst_block() {
+        let (p, r) = setup();
+        let st = SubgraphTable::build(&p, &r, ExecOrder::ColumnMajor);
+        assert_eq!(st.len(), p.num_subgraphs());
+        for grp in st.iter_groups() {
+            assert!(!grp.is_empty());
+            let d0 = grp[0].dst_start;
+            assert!(grp.iter().all(|e| e.dst_start == d0));
+        }
+        let firsts: Vec<u32> = st.iter_groups().map(|g| g[0].dst_start).collect();
+        let mut sorted = firsts.clone();
+        sorted.sort_unstable();
+        assert_eq!(firsts, sorted);
+    }
+
+    #[test]
+    fn st_row_major_groups_share_src_block() {
+        let (p, r) = setup();
+        let st = SubgraphTable::build(&p, &r, ExecOrder::RowMajor);
+        for grp in st.iter_groups() {
+            let s0 = grp[0].src_start;
+            assert!(grp.iter().all(|e| e.src_start == s0));
+        }
+    }
+
+    #[test]
+    fn st_pattern_ranks_consistent_with_ct() {
+        let (p, r) = setup();
+        let ct = ConfigTable::build(&r, 2, 2, 1, 4, StaticAssignment::Balanced);
+        let st = SubgraphTable::build(&p, &r, ExecOrder::ColumnMajor);
+        for e in &st.entries {
+            let sg = &p.subgraphs[e.sg_idx as usize];
+            assert_eq!(ct.entries[e.pattern_rank as usize].pattern, sg.pattern);
+        }
+    }
+
+    #[test]
+    fn empty_graph_tables() {
+        let p = partition(&Coo::from_edges(4, vec![]), 2, false);
+        let r = PatternRanking::from_partitioned(&p);
+        let ct = ConfigTable::build(&r, 2, 4, 1, 4, StaticAssignment::Balanced);
+        let st = SubgraphTable::build(&p, &r, ExecOrder::ColumnMajor);
+        assert!(ct.is_empty());
+        assert!(st.is_empty());
+        assert_eq!(st.num_groups(), 1);
+        assert_eq!(st.group(0).len(), 0);
+    }
+
+    #[test]
+    fn balanced_coverage_is_house_monotone() {
+        let (_, r) = setup();
+        let mut last = -1.0;
+        for cap in 0..8 {
+            let ct = ConfigTable::build(&r, 2, cap, 1, 4, StaticAssignment::Balanced);
+            let cov = ct.static_coverage();
+            assert!(cov >= last - 1e-12, "coverage dropped at cap {cap}");
+            last = cov;
+        }
+    }
+}

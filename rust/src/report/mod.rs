@@ -1,0 +1,9 @@
+//! Report generation: ASCII tables and regenerators for every table and
+//! figure in the paper's evaluation section (per-experiment index in
+//! DESIGN.md §4).
+
+pub mod figures;
+pub mod tables;
+
+pub use figures::{fig1, fig5, fig6, fig7, lifetime, table1, table4};
+pub use tables::Table;

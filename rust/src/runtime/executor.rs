@@ -1,0 +1,235 @@
+//! PJRT-backed step executor: the production datapath.
+//!
+//! Loads HLO text (`HloModuleProto::from_text_file` — the text parser
+//! reassigns instruction ids, which is why text, not `.serialize()`, is
+//! the interchange format), compiles once per (step, crossbar) variant,
+//! and executes batches from the scheduler hot path, chunking/padding the
+//! op stream to the artifact's fixed batch size.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+
+use crate::algo::traits::StepKind;
+use crate::pattern::extract::Partitioned;
+use crate::sched::executor::{identity, StepExecutor};
+
+use super::manifest::Manifest;
+
+/// A compiled artifact plus its shape metadata.
+struct LoadedStep {
+    exe: xla::PjRtLoadedExecutable,
+    batch: usize,
+    #[allow(dead_code)]
+    c: usize,
+}
+
+/// PJRT CPU client + executable cache.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    dir: PathBuf,
+    loaded: HashMap<(StepKind, usize), LoadedStep>,
+    /// Executions issued (for metrics / amortization checks).
+    pub dispatches: u64,
+}
+
+impl PjrtRuntime {
+    /// Create against an artifact directory (see `make artifacts`).
+    pub fn new(dir: PathBuf) -> Result<Self> {
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu().map_err(wrap_xla)?;
+        Ok(Self { client, manifest, dir, loaded: HashMap::new(), dispatches: 0 })
+    }
+
+    pub fn from_default_dir() -> Result<Self> {
+        Self::new(super::default_artifact_dir())
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (once) and cache the artifact for (step, crossbar size).
+    fn load(&mut self, kind: StepKind, c: usize) -> Result<&LoadedStep> {
+        if !self.loaded.contains_key(&(kind, c)) {
+            let entry = self
+                .manifest
+                .select(kind.artifact_name(), c)
+                .ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "no artifact for step {:?} at C={c}; rerun `make artifacts`",
+                        kind
+                    )
+                })?
+                .clone();
+            let path = self.dir.join(&entry.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+            )
+            .map_err(wrap_xla)
+            .with_context(|| format!("parse {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp).map_err(wrap_xla)?;
+            self.loaded
+                .insert((kind, c), LoadedStep { exe, batch: entry.batch, c });
+        }
+        Ok(&self.loaded[&(kind, c)])
+    }
+
+    /// Execute one padded batch: `mats` is (B, C, C) row-major, `xs` is
+    /// (B, C); returns the (B, C) output.
+    fn dispatch(&mut self, kind: StepKind, c: usize, mats: &[f32], xs: &[f32]) -> Result<Vec<f32>> {
+        self.dispatches += 1;
+        let step = self.load(kind, c)?;
+        let b = step.batch;
+        debug_assert_eq!(mats.len(), b * c * c);
+        debug_assert_eq!(xs.len(), b * c);
+        let m_lit = xla::Literal::vec1(mats)
+            .reshape(&[b as i64, c as i64, c as i64])
+            .map_err(wrap_xla)?;
+        let x_lit = xla::Literal::vec1(xs)
+            .reshape(&[b as i64, c as i64])
+            .map_err(wrap_xla)?;
+        let result = step
+            .exe
+            .execute::<xla::Literal>(&[m_lit, x_lit])
+            .map_err(wrap_xla)?[0][0]
+            .to_literal_sync()
+            .map_err(wrap_xla)?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = result.to_tuple1().map_err(wrap_xla)?;
+        out.to_vec::<f32>().map_err(wrap_xla)
+    }
+}
+
+/// `xla::Error` does not implement `std::error::Error` across versions;
+/// stringify defensively.
+fn wrap_xla<E: std::fmt::Debug>(e: E) -> anyhow::Error {
+    anyhow::anyhow!("xla: {e:?}")
+}
+
+/// `StepExecutor` over a `PjrtRuntime`: packs scheduler ops into dense
+/// (B, C, C)/(B, C) literals, padding the tail chunk with zero matrices
+/// (zero adjacency ⇒ identity candidates in every semiring).
+pub struct PjrtExecutor {
+    pub runtime: PjrtRuntime,
+    // Reused packing buffers — no allocation per dispatch.
+    mats: Vec<f32>,
+    xvec: Vec<f32>,
+}
+
+impl PjrtExecutor {
+    pub fn new(runtime: PjrtRuntime) -> Self {
+        Self { runtime, mats: Vec::new(), xvec: Vec::new() }
+    }
+
+    pub fn from_default_dir() -> Result<Self> {
+        Ok(Self::new(PjrtRuntime::from_default_dir()?))
+    }
+}
+
+impl StepExecutor for PjrtExecutor {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn execute(
+        &mut self,
+        kind: StepKind,
+        part: &Partitioned,
+        sgs: &[u32],
+        xs: &[f32],
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        let c = part.c;
+        anyhow::ensure!(xs.len() == sgs.len() * c, "xs length mismatch");
+        out.clear();
+        out.reserve(sgs.len() * c);
+        let b = self.runtime.load(kind, c)?.batch;
+        let ident = identity(kind);
+
+        for (chunk_sgs, chunk_xs) in sgs.chunks(b).zip(xs.chunks(b * c)) {
+            self.mats.clear();
+            self.mats.resize(b * c * c, 0.0);
+            self.xvec.clear();
+            self.xvec.resize(b * c, ident);
+            for (k, &sg_idx) in chunk_sgs.iter().enumerate() {
+                part.dense_weights_into(
+                    sg_idx as usize,
+                    &mut self.mats[k * c * c..(k + 1) * c * c],
+                );
+            }
+            self.xvec[..chunk_xs.len()].copy_from_slice(chunk_xs);
+            let mats = std::mem::take(&mut self.mats);
+            let xvec = std::mem::take(&mut self.xvec);
+            let res = self.runtime.dispatch(kind, c, &mats, &xvec)?;
+            self.mats = mats;
+            self.xvec = xvec;
+            out.extend_from_slice(&res[..chunk_sgs.len() * c]);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! Requires `make artifacts` (skipped silently when absent so pure
+    //! cargo-test environments stay green; integration tests in
+    //! `rust/tests/` assert the full PJRT path).
+    use super::*;
+    use crate::algo::traits::INF;
+    use crate::graph::coo::{Coo, Edge};
+    use crate::pattern::extract::partition;
+    use crate::sched::executor::NativeExecutor;
+
+    fn runtime() -> Option<PjrtRuntime> {
+        let dir = crate::runtime::default_artifact_dir();
+        dir.join("manifest.tsv")
+            .exists()
+            .then(|| PjrtRuntime::new(dir).unwrap())
+    }
+
+    #[test]
+    fn pjrt_matches_native_on_bfs_batch() {
+        let Some(rt) = runtime() else { return };
+        let mut pjrt = PjrtExecutor::new(rt);
+        let g = crate::graph::datasets::Dataset::Tiny.load().unwrap();
+        let part = partition(&g, 4, false);
+        let n = part.num_subgraphs().min(100);
+        let sgs: Vec<u32> = (0..n as u32).collect();
+        let mut rng = crate::util::SplitMix64::new(1);
+        let xs: Vec<f32> = (0..n * 4)
+            .map(|_| if rng.next_bool(0.5) { INF } else { rng.next_f32() * 5.0 })
+            .collect();
+        let mut got = Vec::new();
+        let mut want = Vec::new();
+        pjrt.execute(StepKind::Bfs, &part, &sgs, &xs, &mut got).unwrap();
+        NativeExecutor.execute(StepKind::Bfs, &part, &sgs, &xs, &mut want).unwrap();
+        assert_eq!(got.len(), want.len());
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-3 || (*g >= INF && *w >= INF), "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn pjrt_matches_native_on_pagerank_batch() {
+        let Some(rt) = runtime() else { return };
+        let mut pjrt = PjrtExecutor::new(rt);
+        let g = Coo::from_edges(
+            8,
+            vec![Edge::new(0, 1), Edge::new(1, 2), Edge::new(4, 7), Edge::new(5, 6)],
+        );
+        let part = partition(&g, 4, false);
+        let sgs: Vec<u32> = (0..part.num_subgraphs() as u32).collect();
+        let xs: Vec<f32> = (0..sgs.len() * 4).map(|i| i as f32 * 0.01).collect();
+        let mut got = Vec::new();
+        let mut want = Vec::new();
+        pjrt.execute(StepKind::PageRank, &part, &sgs, &xs, &mut got).unwrap();
+        NativeExecutor.execute(StepKind::PageRank, &part, &sgs, &xs, &mut want).unwrap();
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-5, "{g} vs {w}");
+        }
+    }
+}

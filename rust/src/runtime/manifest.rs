@@ -1,0 +1,118 @@
+//! `artifacts/manifest.tsv` — the contract between `python/compile/aot.py`
+//! and the rust runtime: which step variants exist, at which shapes, in
+//! which files. (TSV rather than JSON: the offline image vendors no JSON
+//! crate, and the schema is a flat table anyway. aot.py also writes a
+//! manifest.json for humans/tools.)
+//!
+//! Line format: `step<TAB>batch<TAB>crossbar<TAB>file`, `#` comments.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub entries: Vec<ManifestEntry>,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ManifestEntry {
+    pub step: String,
+    pub batch: usize,
+    pub crossbar: usize,
+    pub file: String,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {} (run `make artifacts`)", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut entries = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let t = line.trim();
+            if t.is_empty() || t.starts_with('#') {
+                continue;
+            }
+            let cols: Vec<&str> = t.split('\t').collect();
+            anyhow::ensure!(
+                cols.len() == 4,
+                "manifest line {}: expected 4 tab-separated columns, got {}",
+                lineno + 1,
+                cols.len()
+            );
+            entries.push(ManifestEntry {
+                step: cols[0].to_string(),
+                batch: cols[1]
+                    .parse()
+                    .with_context(|| format!("manifest line {}: bad batch", lineno + 1))?,
+                crossbar: cols[2]
+                    .parse()
+                    .with_context(|| format!("manifest line {}: bad crossbar", lineno + 1))?,
+                file: cols[3].to_string(),
+            });
+        }
+        anyhow::ensure!(!entries.is_empty(), "manifest is empty");
+        Ok(Self { entries })
+    }
+
+    /// Best variant for (step, crossbar size): the largest batch — bigger
+    /// batches amortize PJRT dispatch overhead across more subgraphs.
+    pub fn select(&self, step: &str, c: usize) -> Option<&ManifestEntry> {
+        self.entries
+            .iter()
+            .filter(|e| e.step == step && e.crossbar == c)
+            .max_by_key(|e| e.batch)
+    }
+
+    /// All (step, batch, crossbar) triples, for diagnostics.
+    pub fn variants(&self) -> impl Iterator<Item = (&str, usize, usize)> {
+        self.entries
+            .iter()
+            .map(|e| (e.step.as_str(), e.batch, e.crossbar))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "# step\tbatch\tcrossbar\tfile\n\
+        bfs\t32\t4\tbfs_b32_c4.hlo.txt\n\
+        bfs\t128\t4\tbfs_b128_c4.hlo.txt\n\
+        bfs\t32\t8\tbfs_b32_c8.hlo.txt\n";
+
+    #[test]
+    fn parses_and_selects_largest_batch() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.entries.len(), 3);
+        assert_eq!(m.select("bfs", 4).unwrap().batch, 128);
+        assert_eq!(m.select("bfs", 8).unwrap().batch, 32);
+        assert!(m.select("bfs", 2).is_none());
+        assert!(m.select("sssp", 4).is_none());
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(Manifest::parse("bfs\t32\t4\n").is_err()); // 3 cols
+        assert!(Manifest::parse("bfs\tx\t4\tf\n").is_err()); // bad number
+        assert!(Manifest::parse("# only comments\n").is_err()); // empty
+    }
+
+    #[test]
+    fn loads_real_artifacts_if_present() {
+        let dir = crate::runtime::default_artifact_dir();
+        if dir.join("manifest.tsv").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.select("bfs", 4).is_some());
+            assert!(m.select("pagerank", 4).is_some());
+            for e in &m.entries {
+                assert!(dir.join(&e.file).exists(), "missing {}", e.file);
+            }
+        }
+    }
+}

@@ -1,0 +1,21 @@
+//! AOT runtime: loads the HLO-text artifacts produced by
+//! `python/compile/aot.py`, compiles them once on the PJRT CPU client
+//! (`xla` crate), and executes them from the scheduler hot path.
+//!
+//! Python never runs at request time — the artifacts are the only
+//! hand-off between the build-time JAX/Pallas layers and this crate.
+
+pub mod executor;
+pub mod manifest;
+
+pub use executor::{PjrtExecutor, PjrtRuntime};
+pub use manifest::{Manifest, ManifestEntry};
+
+use std::path::PathBuf;
+
+/// Default artifact directory: `$REPRO_ARTIFACTS` or `./artifacts`.
+pub fn default_artifact_dir() -> PathBuf {
+    std::env::var("REPRO_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}

@@ -1,0 +1,215 @@
+//! The numeric edge-compute backend.
+//!
+//! The scheduler is *functional/timing split*: hardware events and
+//! latencies are modeled in rust, while the edge-compute *values* flow
+//! through a [`StepExecutor`]. Two interchangeable implementations:
+//!
+//! * [`NativeExecutor`] — a pure-rust mirror of the L1/L2 semantics
+//!   (bit-level min-plus / sum-product over the packed patterns). Fast;
+//!   used for large sweeps and as the cross-check oracle.
+//! * [`runtime::PjrtExecutor`](crate::runtime) — executes the AOT-lowered
+//!   HLO artifact on the PJRT CPU client; the production datapath.
+//!
+//! Both must agree to float tolerance — asserted by integration tests.
+
+use anyhow::Result;
+
+use crate::algo::traits::{StepKind, INF};
+use crate::pattern::extract::Partitioned;
+
+/// Computes edge-compute candidates for a batch of subgraphs.
+///
+/// `xs` holds one C-vector of wordline inputs per subgraph (snapshot of
+/// source-vertex values, already mapped through
+/// `VertexProgram::source_value`); `out` receives one C-vector of
+/// candidates per subgraph (destination lanes).
+pub trait StepExecutor {
+    fn name(&self) -> &'static str;
+
+    fn execute(
+        &mut self,
+        kind: StepKind,
+        part: &Partitioned,
+        sgs: &[u32],
+        xs: &[f32],
+        out: &mut Vec<f32>,
+    ) -> Result<()>;
+}
+
+/// Pure-rust mirror of the Pallas kernels (bit loops over packed
+/// patterns — no dense materialization).
+#[derive(Debug, Default, Clone)]
+pub struct NativeExecutor;
+
+impl StepExecutor for NativeExecutor {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn execute(
+        &mut self,
+        kind: StepKind,
+        part: &Partitioned,
+        sgs: &[u32],
+        xs: &[f32],
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        let c = part.c;
+        anyhow::ensure!(xs.len() == sgs.len() * c, "xs length mismatch");
+        out.clear();
+        out.resize(sgs.len() * c, identity(kind));
+        for (k, &sg_idx) in sgs.iter().enumerate() {
+            let sg = &part.subgraphs[sg_idx as usize];
+            let x = &xs[k * c..(k + 1) * c];
+            let o = &mut out[k * c..(k + 1) * c];
+            match kind {
+                StepKind::PageRank | StepKind::Mvm => {
+                    // out[j] = sum_i adj[i][j] * x[i]
+                    let mut bits = sg.pattern.0;
+                    while bits != 0 {
+                        let bit = bits.trailing_zeros() as usize;
+                        o[bit % c] += x[bit / c];
+                        bits &= bits - 1;
+                    }
+                }
+                StepKind::Bfs | StepKind::Wcc => {
+                    let cost = if kind == StepKind::Bfs { 1.0 } else { 0.0 };
+                    let mut bits = sg.pattern.0;
+                    while bits != 0 {
+                        let bit = bits.trailing_zeros() as usize;
+                        let cand = x[bit / c] + cost;
+                        let j = bit % c;
+                        if cand < o[j] {
+                            o[j] = cand;
+                        }
+                        bits &= bits - 1;
+                    }
+                }
+                StepKind::Sssp => {
+                    let weights = part
+                        .weights
+                        .as_ref()
+                        .ok_or_else(|| anyhow::anyhow!("SSSP requires weighted partitioning"))?;
+                    let w = &weights[sg_idx as usize];
+                    let mut bits = sg.pattern.0;
+                    let mut nth = 0usize;
+                    while bits != 0 {
+                        let bit = bits.trailing_zeros() as usize;
+                        let cand = x[bit / c] + w[nth];
+                        let j = bit % c;
+                        if cand < o[j] {
+                            o[j] = cand;
+                        }
+                        bits &= bits - 1;
+                        nth += 1;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Reduction identity per step kind (must match the L1 kernels).
+pub fn identity(kind: StepKind) -> f32 {
+    match kind {
+        StepKind::Bfs | StepKind::Sssp | StepKind::Wcc => INF,
+        StepKind::PageRank | StepKind::Mvm => 0.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::coo::{Coo, Edge};
+    use crate::pattern::extract::partition;
+
+    fn part2() -> Partitioned {
+        // One 2x2 window with edges (0,1)=w2.0 and (1,0)=w3.0.
+        partition(
+            &Coo::from_edges(2, vec![Edge::weighted(0, 1, 2.0), Edge::weighted(1, 0, 3.0)]),
+            2,
+            true,
+        )
+    }
+
+    #[test]
+    fn bfs_minplus_semantics() {
+        let p = part2();
+        let mut out = Vec::new();
+        let xs = vec![0.0, INF]; // vertex 0 at level 0
+        NativeExecutor
+            .execute(StepKind::Bfs, &p, &[0], &xs, &mut out)
+            .unwrap();
+        assert_eq!(out[1], 1.0); // 0 -> 1 at level 1
+        assert!(out[0] >= INF); // 1 -> 0 from unvisited source stays INF
+    }
+
+    #[test]
+    fn sssp_uses_weights() {
+        let p = part2();
+        let mut out = Vec::new();
+        let xs = vec![1.0, 10.0];
+        NativeExecutor
+            .execute(StepKind::Sssp, &p, &[0], &xs, &mut out)
+            .unwrap();
+        assert_eq!(out[1], 3.0); // 1.0 + w(0,1)=2.0
+        assert_eq!(out[0], 13.0); // 10.0 + w(1,0)=3.0
+    }
+
+    #[test]
+    fn sssp_without_weights_errors() {
+        let p = partition(&Coo::from_edges(2, vec![Edge::new(0, 1)]), 2, false);
+        let mut out = Vec::new();
+        assert!(NativeExecutor
+            .execute(StepKind::Sssp, &p, &[0], &[0.0, 0.0], &mut out)
+            .is_err());
+    }
+
+    #[test]
+    fn pagerank_sums() {
+        let p = part2();
+        let mut out = Vec::new();
+        let xs = vec![0.25, 0.5];
+        NativeExecutor
+            .execute(StepKind::PageRank, &p, &[0], &xs, &mut out)
+            .unwrap();
+        assert_eq!(out, vec![0.5, 0.25]);
+    }
+
+    #[test]
+    fn wcc_zero_cost() {
+        let p = part2();
+        let mut out = Vec::new();
+        let xs = vec![0.0, 1.0];
+        NativeExecutor
+            .execute(StepKind::Wcc, &p, &[0], &xs, &mut out)
+            .unwrap();
+        assert_eq!(out[1], 0.0);
+        assert_eq!(out[0], 1.0);
+    }
+
+    #[test]
+    fn batch_of_subgraphs() {
+        let g = Coo::from_edges(4, vec![Edge::new(0, 1), Edge::new(2, 3)]);
+        let p = partition(&g, 2, false);
+        assert_eq!(p.num_subgraphs(), 2);
+        let xs = vec![0.0, INF, 5.0, INF];
+        let mut out = Vec::new();
+        NativeExecutor
+            .execute(StepKind::Bfs, &p, &[0, 1], &xs, &mut out)
+            .unwrap();
+        assert_eq!(out.len(), 4);
+        assert_eq!(out[1], 1.0);
+        assert_eq!(out[3], 6.0);
+    }
+
+    #[test]
+    fn xs_length_checked() {
+        let p = part2();
+        let mut out = Vec::new();
+        assert!(NativeExecutor
+            .execute(StepKind::Bfs, &p, &[0], &[0.0], &mut out)
+            .is_err());
+    }
+}

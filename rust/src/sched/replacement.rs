@@ -1,0 +1,239 @@
+//! Dynamic-engine replacement policies (Alg. 2 `FindGE`).
+//!
+//! When a subgraph's pattern is not pinned to a static engine, the
+//! scheduler first checks whether any dynamic crossbar *already* holds
+//! the pattern (a dynamic hit — no write needed); otherwise the policy
+//! selects a victim slot (engine, crossbar) to reconfigure.
+
+use crate::accel::config::PolicyKind;
+use crate::util::SplitMix64;
+
+/// A dynamic crossbar slot: (engine index, crossbar index) — engine
+/// indices are global (dynamic engines occupy `n_static..total`).
+pub type Slot = (usize, usize);
+
+pub trait ReplacementPolicy: Send {
+    fn name(&self) -> &'static str;
+    /// Choose a victim slot for a pattern miss. `retired[k]` marks slots
+    /// that must not be used (wear-out, §IV.D). Returns `None` when every
+    /// slot is retired.
+    fn pick(&mut self, retired: &[bool]) -> Option<usize>;
+    /// Record a use of slot `k` (hit or post-reconfig use).
+    fn touch(&mut self, k: usize);
+    /// Number of slots managed.
+    fn num_slots(&self) -> usize;
+}
+
+/// Least-recently-used over dynamic slots.
+pub struct Lru {
+    stamp: Vec<u64>,
+    clock: u64,
+}
+
+impl Lru {
+    pub fn new(slots: usize) -> Self {
+        Self { stamp: vec![0; slots], clock: 0 }
+    }
+}
+
+impl ReplacementPolicy for Lru {
+    fn name(&self) -> &'static str {
+        "lru"
+    }
+
+    fn pick(&mut self, retired: &[bool]) -> Option<usize> {
+        (0..self.stamp.len())
+            .filter(|&k| !retired[k])
+            .min_by_key(|&k| self.stamp[k])
+    }
+
+    fn touch(&mut self, k: usize) {
+        self.clock += 1;
+        self.stamp[k] = self.clock;
+    }
+
+    fn num_slots(&self) -> usize {
+        self.stamp.len()
+    }
+}
+
+/// Round-robin cursor over dynamic slots.
+pub struct RoundRobin {
+    cursor: usize,
+    slots: usize,
+}
+
+impl RoundRobin {
+    pub fn new(slots: usize) -> Self {
+        Self { cursor: 0, slots }
+    }
+}
+
+impl ReplacementPolicy for RoundRobin {
+    fn name(&self) -> &'static str {
+        "round-robin"
+    }
+
+    fn pick(&mut self, retired: &[bool]) -> Option<usize> {
+        for _ in 0..self.slots {
+            let k = self.cursor;
+            self.cursor = (self.cursor + 1) % self.slots.max(1);
+            if !retired[k] {
+                return Some(k);
+            }
+        }
+        None
+    }
+
+    fn touch(&mut self, _k: usize) {}
+
+    fn num_slots(&self) -> usize {
+        self.slots
+    }
+}
+
+/// Least-frequently-used over dynamic slots.
+pub struct Lfu {
+    freq: Vec<u64>,
+}
+
+impl Lfu {
+    pub fn new(slots: usize) -> Self {
+        Self { freq: vec![0; slots] }
+    }
+}
+
+impl ReplacementPolicy for Lfu {
+    fn name(&self) -> &'static str {
+        "lfu"
+    }
+
+    fn pick(&mut self, retired: &[bool]) -> Option<usize> {
+        (0..self.freq.len())
+            .filter(|&k| !retired[k])
+            .min_by_key(|&k| self.freq[k])
+    }
+
+    fn touch(&mut self, k: usize) {
+        self.freq[k] += 1;
+    }
+
+    fn num_slots(&self) -> usize {
+        self.freq.len()
+    }
+}
+
+/// Uniform-random victim (deterministic seed — reproducible runs).
+pub struct Random {
+    rng: SplitMix64,
+    slots: usize,
+}
+
+impl Random {
+    pub fn new(slots: usize, seed: u64) -> Self {
+        Self { rng: SplitMix64::new(seed), slots }
+    }
+}
+
+impl ReplacementPolicy for Random {
+    fn name(&self) -> &'static str {
+        "random"
+    }
+
+    fn pick(&mut self, retired: &[bool]) -> Option<usize> {
+        if retired.iter().all(|&r| r) || self.slots == 0 {
+            return None;
+        }
+        loop {
+            let k = self.rng.next_index(self.slots);
+            if !retired[k] {
+                return Some(k);
+            }
+        }
+    }
+
+    fn touch(&mut self, _k: usize) {}
+
+    fn num_slots(&self) -> usize {
+        self.slots
+    }
+}
+
+/// Factory from the config enum.
+pub fn build_policy(kind: PolicyKind, slots: usize) -> Box<dyn ReplacementPolicy> {
+    match kind {
+        PolicyKind::Lru => Box::new(Lru::new(slots)),
+        PolicyKind::RoundRobin => Box::new(RoundRobin::new(slots)),
+        PolicyKind::Lfu => Box::new(Lfu::new(slots)),
+        PolicyKind::Random => Box::new(Random::new(slots, 0xD15C)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lru_evicts_least_recent() {
+        let mut p = Lru::new(3);
+        let retired = vec![false; 3];
+        p.touch(0);
+        p.touch(1);
+        p.touch(2);
+        p.touch(0);
+        assert_eq!(p.pick(&retired), Some(1));
+    }
+
+    #[test]
+    fn lru_skips_retired() {
+        let mut p = Lru::new(2);
+        p.touch(0);
+        assert_eq!(p.pick(&[false, true]), Some(0));
+        assert_eq!(p.pick(&[true, true]), None);
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let mut p = RoundRobin::new(3);
+        let retired = vec![false; 3];
+        assert_eq!(p.pick(&retired), Some(0));
+        assert_eq!(p.pick(&retired), Some(1));
+        assert_eq!(p.pick(&retired), Some(2));
+        assert_eq!(p.pick(&retired), Some(0));
+    }
+
+    #[test]
+    fn lfu_prefers_cold_slot() {
+        let mut p = Lfu::new(3);
+        let retired = vec![false; 3];
+        p.touch(0);
+        p.touch(0);
+        p.touch(2);
+        assert_eq!(p.pick(&retired), Some(1));
+    }
+
+    #[test]
+    fn random_is_deterministic_and_respects_retired() {
+        let mut a = Random::new(4, 1);
+        let mut b = Random::new(4, 1);
+        let retired = vec![false, true, false, true];
+        for _ in 0..20 {
+            let ka = a.pick(&retired).unwrap();
+            assert_eq!(Some(ka), b.pick(&retired));
+            assert!(ka == 0 || ka == 2);
+        }
+    }
+
+    #[test]
+    fn factory_builds_all_kinds() {
+        for kind in [
+            PolicyKind::Lru,
+            PolicyKind::RoundRobin,
+            PolicyKind::Lfu,
+            PolicyKind::Random,
+        ] {
+            let p = build_policy(kind, 4);
+            assert_eq!(p.num_slots(), 4);
+        }
+    }
+}

@@ -1,0 +1,637 @@
+//! Graph processing & scheduling — paper Algorithm 2.
+//!
+//! Static engines are configured once at initialization; subgraphs are
+//! then processed in batches that share destination (column-major) or
+//! source (row-major) vertices. Within a batch, engines operate in
+//! parallel; operations queued on the same engine serialize. Subgraphs
+//! whose pattern is pinned to a static engine transfer only vertex data;
+//! the rest go to a dynamic engine picked by the replacement policy
+//! (reconfiguring it unless it already holds the pattern).
+//!
+//! The scheduler is the paper's timing/energy model; numeric edge-compute
+//! values flow through a [`StepExecutor`] (native mirror or AOT/PJRT
+//! artifact) with synchronous (Jacobi) superstep semantics.
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use crate::accel::activity::ActivityTrace;
+use crate::accel::config::ArchConfig;
+use crate::algo::traits::{Semiring, VertexProgram, INF};
+use crate::cost::{CostParams, EventCounts};
+use crate::engine::{EngineKind, GraphEngine};
+use crate::pattern::extract::Partitioned;
+use crate::pattern::tables::{ConfigTable, SubgraphTable};
+use crate::pattern::Pattern;
+
+use super::executor::StepExecutor;
+use super::replacement::{build_policy, ReplacementPolicy};
+
+/// Per-engine summary for reports and the lifetime analysis.
+#[derive(Debug, Clone)]
+pub struct EngineSummary {
+    pub id: u32,
+    pub is_static: bool,
+    pub read_bits: u64,
+    pub write_bits: u64,
+    pub mvm_ops: u64,
+    pub reconfigs: u64,
+    pub max_cell_writes: u32,
+}
+
+/// Outcome of one accelerator run.
+#[derive(Debug, Clone)]
+pub struct RunResult {
+    /// Final vertex values (levels / distances / ranks / labels).
+    pub values: Vec<f32>,
+    /// Runtime hardware events (excludes initialization).
+    pub counts: EventCounts,
+    /// Initialization events (static-engine configuration).
+    pub init_counts: EventCounts,
+    /// Modeled execution time (ns), initialization excluded.
+    pub exec_time_ns: f64,
+    /// Initialization time (ns).
+    pub init_time_ns: f64,
+    /// Algorithm supersteps executed.
+    pub supersteps: usize,
+    /// Scheduler iterations (processed batches).
+    pub iterations: u64,
+    /// Subgraph ops served by static engines.
+    pub static_ops: u64,
+    /// Subgraph ops served by dynamic engines.
+    pub dynamic_ops: u64,
+    /// Dynamic ops that hit an already-configured crossbar (no write).
+    pub dynamic_hits: u64,
+    /// Max per-cell write count over dynamic crossbars (lifetime `w`).
+    pub max_dynamic_cell_writes: u32,
+    pub engines: Vec<EngineSummary>,
+    /// Per-iteration activity (Fig. 5), if tracing was enabled.
+    pub activity: Option<ActivityTrace>,
+}
+
+impl RunResult {
+    /// Fraction of subgraph ops served without any ReRAM write risk.
+    pub fn static_hit_rate(&self) -> f64 {
+        let total = self.static_ops + self.dynamic_ops;
+        if total == 0 {
+            0.0
+        } else {
+            self.static_ops as f64 / total as f64
+        }
+    }
+
+    /// Total events including initialization.
+    pub fn total_counts(&self) -> EventCounts {
+        let mut c = self.counts;
+        c.add(&self.init_counts);
+        c
+    }
+}
+
+/// Algorithm 2 scheduler over a preprocessed graph.
+pub struct Scheduler<'a> {
+    pub config: &'a ArchConfig,
+    pub params: &'a CostParams,
+    pub part: &'a Partitioned,
+    pub ct: &'a ConfigTable,
+    pub st: &'a SubgraphTable,
+}
+
+impl<'a> Scheduler<'a> {
+    pub fn new(
+        config: &'a ArchConfig,
+        params: &'a CostParams,
+        part: &'a Partitioned,
+        ct: &'a ConfigTable,
+        st: &'a SubgraphTable,
+    ) -> Self {
+        Self { config, params, part, ct, st }
+    }
+
+    /// Slot index -> (engine index, crossbar index). Dynamic slots spread
+    /// over engines first so consecutive misses land on distinct engines.
+    #[inline]
+    fn slot_pos(&self, k: usize) -> (usize, usize) {
+        let n_dyn = self.config.dynamic_engines() as usize;
+        (self.config.static_engines as usize + k % n_dyn, k / n_dyn)
+    }
+
+    /// Run `program` to convergence, computing values via `executor`.
+    pub fn run(
+        &self,
+        program: &dyn VertexProgram,
+        executor: &mut dyn StepExecutor,
+    ) -> Result<RunResult> {
+        self.config.validate()?;
+        if program.needs_weights() {
+            anyhow::ensure!(
+                self.part.weights.is_some(),
+                "{} requires weighted partitioning",
+                program.name()
+            );
+        }
+        let c = self.part.c;
+        let n = self.part.num_vertices as usize;
+        let num_blocks = self.part.num_blocks() as usize;
+        let n_static = self.config.static_engines;
+        let n_total = self.config.total_engines;
+        let m = self.config.crossbars_per_engine as usize;
+
+        // --- engines + policy + dynamic-content directory ---
+        let mut engines: Vec<GraphEngine> = (0..n_total)
+            .map(|i| {
+                let kind = if i < n_static { EngineKind::Static } else { EngineKind::Dynamic };
+                GraphEngine::new(i, kind, c, m as u32)
+            })
+            .collect();
+        let n_dyn_slots = self.config.dynamic_engines() as usize * m;
+        let mut policy: Box<dyn ReplacementPolicy> =
+            build_policy(self.config.policy, n_dyn_slots);
+        let mut dyn_dir: HashMap<Pattern, usize> = HashMap::new();
+        let mut slot_pattern: Vec<Pattern> = vec![Pattern::EMPTY; n_dyn_slots];
+        let mut retired: Vec<bool> = vec![false; n_dyn_slots];
+
+        // --- initialization: configure static engines (Alg. 2 l. 6–8) ---
+        for (entry, slot) in self.ct.static_assignments() {
+            engines[slot.engine as usize].configure(
+                slot.crossbar as usize,
+                entry.pattern,
+                self.params,
+            );
+        }
+        let mut init_counts = EventCounts::default();
+        let mut init_time_ns = 0f64;
+        for e in engines.iter_mut() {
+            init_counts.add(&e.counts);
+            let (busy, _) = e.end_iteration();
+            init_time_ns = init_time_ns.max(busy);
+        }
+        let counts_baseline = init_counts;
+
+        // --- vertex state ---
+        let mut values = program.init(self.part.num_vertices);
+        anyhow::ensure!(values.len() == n, "program init length mismatch");
+        let mut snapshot = values.clone();
+        let semiring = program.semiring();
+        let mut acc = match semiring {
+            Semiring::SumProd => vec![0f32; n],
+            Semiring::MinPlus => Vec::new(),
+        };
+        let outdeg = self.out_degrees();
+
+        // Frontier at block-row granularity.
+        let all_blocks = program.processes_all_blocks();
+        let mut active_block = vec![false; num_blocks];
+        let mut next_active_block = vec![false; num_blocks];
+        if !all_blocks {
+            for (v, &val) in values.iter().enumerate() {
+                if val < INF {
+                    active_block[v / c] = true;
+                }
+            }
+        }
+
+        // --- tracing ---
+        let mut trace = self
+            .config
+            .trace_activity
+            .then(|| ActivityTrace::new(n_total as usize));
+        let mut prev_reads = vec![0u64; n_total as usize];
+        let mut prev_writes = vec![0u64; n_total as usize];
+        if trace.is_some() {
+            for (i, e) in engines.iter().enumerate() {
+                prev_reads[i] = e.counts.read_bits;
+                prev_writes[i] = e.counts.write_bits;
+            }
+        }
+
+        // --- main loop ---
+        let kind = program.step_kind();
+        let mut exec_time_ns = 0f64;
+        // System-level events not attributable to one engine: ST entries
+        // and vertex data stream from main memory in 64 B bursts (16
+        // four-byte ST records / 4-lane vertex vectors per burst).
+        let mut sys_counts = EventCounts::default();
+        let mut iterations = 0u64;
+        let mut static_ops = 0u64;
+        let mut dynamic_ops = 0u64;
+        let mut dynamic_hits = 0u64;
+        let mut supersteps = 0usize;
+
+        // Reused per-superstep buffers (no allocation in the hot loop).
+        let mut sup_sgs: Vec<u32> = Vec::new();
+        let mut sup_dst: Vec<u32> = Vec::new();
+        let mut xs: Vec<f32> = Vec::new();
+        let mut cand: Vec<f32> = Vec::new();
+
+        // Per-op latency depends only on params and C — compute once.
+        let lat_mvm = crate::cost::timing::mvm_latency_ns(self.params, c as u32, c as u32)
+            + crate::cost::timing::reduce_latency_ns(self.params, c as u32);
+
+        for superstep in 0..program.max_supersteps() {
+            snapshot.copy_from_slice(&values);
+            sup_sgs.clear();
+            sup_dst.clear();
+
+            for group in self.st.iter_groups() {
+                let mut ops_in_group = 0u64;
+                for entry in group {
+                    if !all_blocks && !active_block[entry.src_start as usize / c] {
+                        continue;
+                    }
+                    ops_in_group += 1;
+                    let ct_entry = &self.ct.entries[entry.pattern_rank as usize];
+                    let pattern = ct_entry.pattern;
+                    let rows = ct_entry.active_rows;
+                    if ct_entry.is_static() {
+                        // Static hit: vertex data only, no configuration.
+                        // Among the pattern's replicas, queue on the
+                        // least-busy engine (load balancing, §III.B).
+                        let slot = if ct_entry.slots.len() == 1 {
+                            ct_entry.slots[0]
+                        } else {
+                            *ct_entry
+                                .slots
+                                .iter()
+                                .min_by(|a, b| {
+                                    engines[a.engine as usize]
+                                        .busy_ns
+                                        .total_cmp(&engines[b.engine as usize].busy_ns)
+                                })
+                                .expect("static entry has a slot")
+                        };
+                        let read_rows =
+                            if ct_entry.row_addr.is_some() { 1 } else { rows.max(1) as u64 };
+                        engines[slot.engine as usize].mvm_precomputed(
+                            slot.crossbar as usize,
+                            read_rows,
+                            lat_mvm,
+                        );
+                        static_ops += 1;
+                    } else {
+                        // Dynamic path (Alg. 2 l. 13–15). Alg. 2
+                        // reconfigures unconditionally; content-aware
+                        // reuse is the opt-in extension (config flag).
+                        let hit = if self.config.dynamic_reuse {
+                            dyn_dir.get(&pattern).copied().filter(|&k| !retired[k])
+                        } else {
+                            None
+                        };
+                        let k = match hit {
+                            Some(k) => {
+                                dynamic_hits += 1;
+                                k
+                            }
+                            None => {
+                                let k = policy.pick(&retired).ok_or_else(|| {
+                                    anyhow::anyhow!("all dynamic crossbars retired (wear-out)")
+                                })?;
+                                let (ei, cb) = self.slot_pos(k);
+                                let old = slot_pattern[k];
+                                if !old.is_empty() {
+                                    dyn_dir.remove(&old);
+                                }
+                                engines[ei].configure(cb, pattern, self.params);
+                                if engines[ei].crossbars[cb]
+                                    .worn_out(self.params.endurance_cycles)
+                                {
+                                    retired[k] = true;
+                                }
+                                slot_pattern[k] = pattern;
+                                dyn_dir.insert(pattern, k);
+                                k
+                            }
+                        };
+                        let (ei, cb) = self.slot_pos(k);
+                        engines[ei].mvm_precomputed(cb, rows.max(1) as u64, lat_mvm);
+                        policy.touch(k);
+                        dynamic_ops += 1;
+                    }
+                    sup_sgs.push(entry.sg_idx);
+                    sup_dst.push(entry.dst_start);
+                }
+                if ops_in_group == 0 {
+                    continue;
+                }
+                iterations += 1;
+                // ST stream-in + vertex data in/out, 64 B bursts.
+                sys_counts.main_mem_accesses += 2 * ops_in_group.div_ceil(16);
+                if let Some(t) = trace.as_mut() {
+                    t.push_iteration(engines.iter().enumerate().map(|(i, e)| {
+                        let dr = (e.counts.read_bits - prev_reads[i]) as u32;
+                        let dw = (e.counts.write_bits - prev_writes[i]) as u32;
+                        prev_reads[i] = e.counts.read_bits;
+                        prev_writes[i] = e.counts.write_bits;
+                        (dr, dw)
+                    }));
+                }
+            }
+
+            // Superstep timing: engines run their queues in parallel
+            // (Alg. 2 `parallelforeach`); the FIFO input/output buffers
+            // pipeline consecutive batches (Fig. 4), so the superstep
+            // latency is the longest per-engine queue, not a barrier per
+            // destination group.
+            let mut max_busy = 0f64;
+            for e in engines.iter_mut() {
+                let (busy, _) = e.end_iteration();
+                max_busy = max_busy.max(busy);
+            }
+            exec_time_ns += max_busy;
+
+            if sup_sgs.is_empty() {
+                break;
+            }
+
+            // --- numeric phase: edge compute through the executor ---
+            xs.clear();
+            xs.reserve(sup_sgs.len() * c);
+            for &sg_idx in &sup_sgs {
+                let src_start = self.part.subgraphs[sg_idx as usize].brow as usize * c;
+                for i in 0..c {
+                    let v = src_start + i;
+                    if v < n {
+                        xs.push(program.source_value(snapshot[v], outdeg[v]));
+                    } else {
+                        xs.push(super::executor::identity(kind));
+                    }
+                }
+            }
+            executor.execute(kind, self.part, &sup_sgs, &xs, &mut cand)?;
+
+            // --- reduce & apply (engine ALU, modeled events already) ---
+            let mut any_changed = false;
+            match semiring {
+                Semiring::MinPlus => {
+                    next_active_block.iter_mut().for_each(|b| *b = false);
+                    for (k, &dst_start) in sup_dst.iter().enumerate() {
+                        for j in 0..c {
+                            let v = dst_start as usize + j;
+                            if v >= n {
+                                break;
+                            }
+                            let old = values[v];
+                            let new = program.apply(old, cand[k * c + j]);
+                            if program.changed(old, new) {
+                                values[v] = new;
+                                next_active_block[v / c] = true;
+                                any_changed = true;
+                            }
+                        }
+                    }
+                    std::mem::swap(&mut active_block, &mut next_active_block);
+                }
+                Semiring::SumProd => {
+                    for (k, &dst_start) in sup_dst.iter().enumerate() {
+                        for j in 0..c {
+                            let v = dst_start as usize + j;
+                            if v >= n {
+                                break;
+                            }
+                            acc[v] += cand[k * c + j];
+                        }
+                    }
+                    any_changed = true;
+                }
+            }
+
+            supersteps = superstep + 1;
+            if !program.post_superstep(superstep, &mut values, &mut acc, any_changed) {
+                break;
+            }
+        }
+
+        // --- final accounting ---
+        let mut counts = sys_counts;
+        let mut summaries = Vec::with_capacity(engines.len());
+        let mut max_dyn_writes = 0u32;
+        for e in &engines {
+            counts.add(&e.counts);
+            if e.kind == EngineKind::Dynamic {
+                max_dyn_writes = max_dyn_writes.max(e.max_cell_writes());
+            }
+            summaries.push(EngineSummary {
+                id: e.id,
+                is_static: e.kind == EngineKind::Static,
+                read_bits: e.counts.read_bits,
+                write_bits: e.counts.write_bits,
+                mvm_ops: e.counts.mvm_ops,
+                reconfigs: e.counts.reconfigs,
+                max_cell_writes: e.max_cell_writes(),
+            });
+        }
+        // Runtime counts exclude initialization.
+        counts.read_bits -= counts_baseline.read_bits;
+        counts.write_bits -= counts_baseline.write_bits;
+        counts.sense_ops -= counts_baseline.sense_ops;
+        counts.sram_accesses -= counts_baseline.sram_accesses;
+        counts.adc_ops -= counts_baseline.adc_ops;
+        counts.alu_ops -= counts_baseline.alu_ops;
+        counts.main_mem_accesses -= counts_baseline.main_mem_accesses;
+        counts.mvm_ops -= counts_baseline.mvm_ops;
+        counts.reconfigs -= counts_baseline.reconfigs;
+
+        Ok(RunResult {
+            values,
+            counts,
+            init_counts,
+            exec_time_ns,
+            init_time_ns,
+            supersteps,
+            iterations,
+            static_ops,
+            dynamic_ops,
+            dynamic_hits,
+            max_dynamic_cell_writes: max_dyn_writes,
+            engines: summaries,
+            activity: trace,
+        })
+    }
+
+    /// Out-degree per vertex, reconstructed from the partitioning (the
+    /// ST is the only main-memory representation at runtime).
+    fn out_degrees(&self) -> Vec<u32> {
+        let c = self.part.c;
+        let mut deg = vec![0u32; self.part.num_vertices as usize];
+        for sg in &self.part.subgraphs {
+            let base = sg.brow as usize * c;
+            let mut bits = sg.pattern.0;
+            while bits != 0 {
+                let bit = bits.trailing_zeros() as usize;
+                let v = base + bit / c;
+                if v < deg.len() {
+                    deg[v] += 1;
+                }
+                bits &= bits - 1;
+            }
+        }
+        deg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::{Bfs, PageRank, Sssp, Wcc};
+    use crate::graph::datasets::Dataset;
+    use crate::graph::Csr;
+    use crate::pattern::extract::partition;
+    use crate::pattern::rank::PatternRanking;
+    use crate::pattern::tables::{ConfigTable, ExecOrder, SubgraphTable};
+    use crate::sched::executor::NativeExecutor;
+
+    fn run_on(
+        g: &crate::graph::Coo,
+        config: &ArchConfig,
+        program: &dyn VertexProgram,
+    ) -> RunResult {
+        let part = partition(g, config.crossbar_size, program.needs_weights());
+        let ranking = PatternRanking::from_partitioned(&part);
+        let ct = ConfigTable::build(
+            &ranking,
+            config.crossbar_size,
+            config.static_engines,
+            config.crossbars_per_engine,
+            config.dynamic_engines() * config.crossbars_per_engine,
+            config.static_assignment,
+        );
+        let st = SubgraphTable::build(&part, &ranking, config.order);
+        let params = CostParams::default();
+        let sched = Scheduler::new(config, &params, &part, &ct, &st);
+        sched.run(program, &mut NativeExecutor).unwrap()
+    }
+
+    #[test]
+    fn bfs_matches_reference_on_tiny() {
+        let g = Dataset::Tiny.load().unwrap();
+        let config = ArchConfig::default();
+        let res = run_on(&g, &config, &Bfs::new(0));
+        let want = crate::algo::reference::bfs_levels(&Csr::from_coo(&g), 0);
+        assert_eq!(res.values.len(), want.len());
+        for (v, (got, want)) in res.values.iter().zip(&want).enumerate() {
+            assert!(
+                (got - want).abs() < 1e-3 || (*got >= INF && *want >= INF),
+                "vertex {v}: got {got} want {want}"
+            );
+        }
+        assert!(res.supersteps > 1);
+        assert!(res.counts.mvm_ops > 0);
+    }
+
+    #[test]
+    fn sssp_matches_reference_on_tiny() {
+        let g = Dataset::Tiny.load_weighted(1.0).unwrap();
+        let config = ArchConfig::default();
+        let res = run_on(&g, &config, &Sssp::new(3));
+        let want = crate::algo::reference::sssp_distances(&Csr::from_coo(&g), 3);
+        for (got, want) in res.values.iter().zip(&want) {
+            assert!(
+                (got - want).abs() < 1e-2 || (*got >= INF && *want >= INF),
+                "got {got} want {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn pagerank_matches_reference_on_tiny() {
+        let g = Dataset::Tiny.load().unwrap();
+        let config = ArchConfig::default();
+        let pr = PageRank::new(0.85, 10);
+        let res = run_on(&g, &config, &pr);
+        let want = crate::algo::reference::pagerank(&Csr::from_coo(&g), 0.85, 10);
+        for (got, want) in res.values.iter().zip(&want) {
+            assert!((got - want).abs() < 1e-4, "got {got} want {want}");
+        }
+        assert_eq!(res.supersteps, 10);
+    }
+
+    #[test]
+    fn wcc_matches_reference_on_tiny() {
+        let g = Dataset::Tiny.load().unwrap();
+        let config = ArchConfig::default();
+        let res = run_on(&g, &config, &Wcc);
+        let want = crate::algo::reference::wcc_labels(&Csr::from_coo(&g));
+        for (got, want) in res.values.iter().zip(&want) {
+            assert_eq!(got, want);
+        }
+    }
+
+    #[test]
+    fn static_engines_attract_most_ops() {
+        // The paper's core claim: with 16 static engines most subgraphs
+        // are served without writes.
+        let g = Dataset::Tiny.load().unwrap();
+        let config = ArchConfig::default();
+        let res = run_on(&g, &config, &Bfs::new(0));
+        assert!(
+            res.static_hit_rate() > 0.5,
+            "static hit rate {:.2}",
+            res.static_hit_rate()
+        );
+    }
+
+    #[test]
+    fn zero_static_engines_write_more() {
+        let g = Dataset::Tiny.load().unwrap();
+        let mut cfg0 = ArchConfig::default();
+        cfg0.static_engines = 0;
+        let mut cfg16 = ArchConfig::default();
+        cfg16.static_engines = 16;
+        let r0 = run_on(&g, &cfg0, &Bfs::new(0));
+        let r16 = run_on(&g, &cfg16, &Bfs::new(0));
+        assert!(r0.counts.write_bits > 2 * r16.counts.write_bits);
+        assert!(r0.exec_time_ns > r16.exec_time_ns);
+        // Same numeric result regardless of engine allocation.
+        assert_eq!(r0.values, r16.values);
+    }
+
+    #[test]
+    fn static_engines_never_written_at_runtime() {
+        let g = Dataset::Tiny.load().unwrap();
+        let config = ArchConfig::default();
+        let res = run_on(&g, &config, &Bfs::new(0));
+        for e in res.engines.iter().filter(|e| e.is_static) {
+            // Exactly the init writes, no runtime reconfiguration: the
+            // engine summary includes init, so write_bits equals the
+            // pattern's nnz (written once) and max one write per cell.
+            assert!(e.max_cell_writes <= 1, "static engine rewritten");
+        }
+    }
+
+    #[test]
+    fn activity_trace_when_enabled() {
+        let g = Dataset::Tiny.load().unwrap();
+        let config = ArchConfig::fig5();
+        let res = run_on(&g, &config, &Bfs::new(0));
+        let t = res.activity.expect("tracing enabled");
+        assert_eq!(t.num_engines, 6);
+        assert!(t.num_iterations() > 0);
+        assert_eq!(res.iterations, t.num_iterations() as u64);
+    }
+
+    #[test]
+    fn row_major_order_also_converges() {
+        let g = Dataset::Tiny.load().unwrap();
+        let mut config = ArchConfig::default();
+        config.order = ExecOrder::RowMajor;
+        let res = run_on(&g, &config, &Bfs::new(0));
+        let want = crate::algo::reference::bfs_levels(&Csr::from_coo(&g), 0);
+        for (got, want) in res.values.iter().zip(&want) {
+            assert!((got - want).abs() < 1e-3 || (*got >= INF && *want >= INF));
+        }
+    }
+
+    #[test]
+    fn unreachable_source_terminates_quickly() {
+        // Source with no out-edges: one superstep, nothing explodes.
+        let g = crate::graph::Coo::from_edges(
+            8,
+            vec![crate::graph::coo::Edge::new(1, 2)],
+        );
+        let config = ArchConfig::default();
+        let res = run_on(&g, &config, &Bfs::new(7));
+        assert!(res.supersteps <= 1);
+        assert_eq!(res.values[7], 0.0);
+    }
+}

@@ -1,0 +1,162 @@
+//! Minimal criterion-style bench harness (the offline image vendors no
+//! criterion). Used by every `benches/*.rs` target via `harness = false`:
+//! warmup, repeated timed runs, mean/min/max/stddev report, and a
+//! black-box to defeat dead-code elimination.
+
+use std::hint::black_box as std_black_box;
+use std::time::{Duration, Instant};
+
+/// Re-exported black box.
+pub fn black_box<T>(x: T) -> T {
+    std_black_box(x)
+}
+
+/// Timing statistics over the measured iterations.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub min: Duration,
+    pub max: Duration,
+    pub stddev: Duration,
+}
+
+impl Stats {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<40} {:>12} mean  [{:>12} .. {:>12}]  ±{:<10} ({} iters)",
+            self.name,
+            fmt_dur(self.mean),
+            fmt_dur(self.min),
+            fmt_dur(self.max),
+            fmt_dur(self.stddev),
+            self.iters
+        )
+    }
+}
+
+fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos() as f64;
+    if ns >= 1e9 {
+        format!("{:.3} s", ns / 1e9)
+    } else if ns >= 1e6 {
+        format!("{:.3} ms", ns / 1e6)
+    } else if ns >= 1e3 {
+        format!("{:.3} µs", ns / 1e3)
+    } else {
+        format!("{ns:.0} ns")
+    }
+}
+
+/// Bench runner: fixed warmup iterations, then timed iterations chosen to
+/// fill roughly `target` wall time (bounded by `max_iters`).
+pub struct Bench {
+    warmup: usize,
+    target: Duration,
+    max_iters: usize,
+    results: Vec<Stats>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self {
+            warmup: 1,
+            target: Duration::from_secs(2),
+            max_iters: 50,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_target(mut self, target: Duration) -> Self {
+        self.target = target;
+        self
+    }
+
+    pub fn with_max_iters(mut self, n: usize) -> Self {
+        self.max_iters = n.max(1);
+        self
+    }
+
+    /// Measure `f`, printing the stats line immediately.
+    pub fn run<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &Stats {
+        for _ in 0..self.warmup {
+            black_box(f());
+        }
+        // Estimate a single-iteration time to size the loop.
+        let t0 = Instant::now();
+        black_box(f());
+        let est = t0.elapsed().max(Duration::from_nanos(100));
+        let iters = ((self.target.as_secs_f64() / est.as_secs_f64()).ceil() as usize)
+            .clamp(3, self.max_iters);
+
+        let mut samples = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t = Instant::now();
+            black_box(f());
+            samples.push(t.elapsed());
+        }
+        let sum: Duration = samples.iter().sum();
+        let mean = sum / iters as u32;
+        let min = *samples.iter().min().unwrap();
+        let max = *samples.iter().max().unwrap();
+        let var = samples
+            .iter()
+            .map(|s| {
+                let d = s.as_secs_f64() - mean.as_secs_f64();
+                d * d
+            })
+            .sum::<f64>()
+            / iters as f64;
+        let stats = Stats {
+            name: name.to_string(),
+            iters,
+            mean,
+            min,
+            max,
+            stddev: Duration::from_secs_f64(var.sqrt()),
+        };
+        println!("{}", stats.report());
+        self.results.push(stats);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[Stats] {
+        &self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut b = Bench::new()
+            .with_target(Duration::from_millis(5))
+            .with_max_iters(5);
+        let s = b.run("noop-loop", || {
+            let mut acc = 0u64;
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+            acc
+        });
+        assert!(s.iters >= 3);
+        assert!(s.mean >= s.min && s.mean <= s.max);
+        assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert_eq!(fmt_dur(Duration::from_nanos(500)), "500 ns");
+        assert!(fmt_dur(Duration::from_micros(1500)).contains("ms"));
+        assert!(fmt_dur(Duration::from_secs(2)).contains(" s"));
+    }
+}

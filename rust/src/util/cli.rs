@@ -1,0 +1,105 @@
+//! Tiny argument parser (the offline image vendors no clap): positional
+//! arguments plus `--flag`, `--key value` and `--key=value` options.
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    options: HashMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw args (without argv[0]). `flag_names` lists options that
+    /// take no value.
+    pub fn parse(raw: impl IntoIterator<Item = String>, flag_names: &[&str]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if flag_names.contains(&name) {
+                    out.flags.push(name.to_string());
+                } else {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| anyhow::anyhow!("option --{name} expects a value"))?;
+                    out.options.insert(name.to_string(), v);
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(String::as_str)
+    }
+
+    pub fn get_parsed<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => Ok(None),
+            Some(s) => s
+                .parse()
+                .map(Some)
+                .map_err(|e| anyhow::anyhow!("--{name} {s:?}: {e}")),
+        }
+    }
+
+    pub fn get_or<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        Ok(self.get_parsed(name)?.unwrap_or(default))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from), &["validate", "verbose"]).unwrap()
+    }
+
+    #[test]
+    fn parses_positional_and_options() {
+        let a = args("run WV --algo bfs --scale=0.5 --validate");
+        assert_eq!(a.positional, vec!["run", "WV"]);
+        assert_eq!(a.get("algo"), Some("bfs"));
+        assert_eq!(a.get_or("scale", 1.0f64).unwrap(), 0.5);
+        assert!(a.flag("validate"));
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn typed_parsing_errors() {
+        let a = args("--engines abc");
+        assert!(a.get_parsed::<u32>("engines").is_err());
+        assert_eq!(args("--engines 8").get_or("engines", 32u32).unwrap(), 8);
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(vec!["--scale".to_string()], &[]).is_err());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = args("");
+        assert_eq!(a.get_or("engines", 32u32).unwrap(), 32);
+        assert!(a.get_parsed::<f64>("scale").unwrap().is_none());
+    }
+}

@@ -1,0 +1,83 @@
+//! Human-readable formatting of physical quantities for reports.
+
+/// Format an energy value given in joules with an SI prefix (J, mJ, µJ, nJ, pJ).
+pub fn energy(joules: f64) -> String {
+    si(joules, "J")
+}
+
+/// Format a time value given in seconds with an SI prefix.
+pub fn time(seconds: f64) -> String {
+    if seconds >= 31_536_000.0 {
+        return format!("{:.1} years", seconds / 31_536_000.0);
+    }
+    if seconds >= 3_600.0 {
+        return format!("{:.1} h", seconds / 3_600.0);
+    }
+    si(seconds, "s")
+}
+
+/// Format a count with thousands separators.
+pub fn count(n: u64) -> String {
+    let s = n.to_string();
+    let mut out = String::with_capacity(s.len() + s.len() / 3);
+    for (i, ch) in s.chars().enumerate() {
+        if i > 0 && (s.len() - i) % 3 == 0 {
+            out.push(',');
+        }
+        out.push(ch);
+    }
+    out
+}
+
+fn si(v: f64, unit: &str) -> String {
+    let a = v.abs();
+    let (scale, prefix) = if a == 0.0 {
+        (1.0, "")
+    } else if a >= 1.0 {
+        (1.0, "")
+    } else if a >= 1e-3 {
+        (1e3, "m")
+    } else if a >= 1e-6 {
+        (1e6, "µ")
+    } else if a >= 1e-9 {
+        (1e9, "n")
+    } else {
+        (1e12, "p")
+    };
+    let scaled = v * scale;
+    if scaled >= 100.0 {
+        format!("{scaled:.0} {prefix}{unit}")
+    } else if scaled >= 10.0 {
+        format!("{scaled:.1} {prefix}{unit}")
+    } else {
+        format!("{scaled:.2} {prefix}{unit}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn energy_prefixes() {
+        assert_eq!(energy(4.1), "4.10 J");
+        assert_eq!(energy(3.3e-3), "3.30 mJ");
+        assert_eq!(energy(5.9e-6), "5.90 µJ");
+        assert_eq!(energy(1.1e-12), "1.10 pJ");
+    }
+
+    #[test]
+    fn time_scales() {
+        assert_eq!(time(2.0e-9), "2.00 ns");
+        assert!(time(7200.0).contains('h'));
+        assert!(time(4.0e8).contains("years"));
+    }
+
+    #[test]
+    fn count_separators() {
+        assert_eq!(count(0), "0");
+        assert_eq!(count(999), "999");
+        assert_eq!(count(1_000), "1,000");
+        assert_eq!(count(1_234_567), "1,234,567");
+    }
+}

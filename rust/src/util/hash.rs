@@ -1,0 +1,101 @@
+//! Fast non-cryptographic hasher (FxHash-style multiply-xor; the offline
+//! image vendors no fxhash/ahash crate).
+//!
+//! PERF NOTE (EXPERIMENTS.md §Perf iteration 2a): swapping this in for
+//! the window-partition and ranking maps measured ~2x SLOWER than std's
+//! hasher on the structured `(brow << 32) | bcol` keys (clustered low
+//! bits after the multiply defeat hashbrown's bucket indexing), so the
+//! hot paths keep `std::collections::HashMap`. Retained as a utility and
+//! as the recorded negative result.
+
+use std::collections::HashMap;
+use std::hash::{BuildHasherDefault, Hasher};
+
+/// Multiply-xor hasher over 8-byte chunks (Firefox's FxHash constant).
+#[derive(Default)]
+pub struct FxHasher {
+    state: u64,
+}
+
+const SEED: u64 = 0x51_7c_c1_b7_27_22_0a_95;
+
+impl FxHasher {
+    #[inline]
+    fn mix(&mut self, word: u64) {
+        self.state = (self.state.rotate_left(5) ^ word).wrapping_mul(SEED);
+    }
+}
+
+impl Hasher for FxHasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.state
+    }
+
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        for chunk in bytes.chunks(8) {
+            let mut buf = [0u8; 8];
+            buf[..chunk.len()].copy_from_slice(chunk);
+            self.mix(u64::from_le_bytes(buf));
+        }
+    }
+
+    #[inline]
+    fn write_u32(&mut self, n: u32) {
+        self.mix(n as u64);
+    }
+
+    #[inline]
+    fn write_u64(&mut self, n: u64) {
+        self.mix(n);
+    }
+
+    #[inline]
+    fn write_usize(&mut self, n: usize) {
+        self.mix(n as u64);
+    }
+}
+
+pub type FxBuildHasher = BuildHasherDefault<FxHasher>;
+
+/// Drop-in `HashMap` with the fast hasher.
+pub type FxHashMap<K, V> = HashMap<K, V, FxBuildHasher>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn distinct_keys_distinct_buckets_mostly() {
+        let mut m: FxHashMap<u64, u64> = FxHashMap::default();
+        for i in 0..10_000u64 {
+            m.insert(i.wrapping_mul(0x9E3779B97F4A7C15), i);
+        }
+        assert_eq!(m.len(), 10_000);
+        for i in 0..10_000u64 {
+            assert_eq!(m[&i.wrapping_mul(0x9E3779B97F4A7C15)], i);
+        }
+    }
+
+    #[test]
+    fn hasher_is_deterministic() {
+        let mut a = FxHasher::default();
+        let mut b = FxHasher::default();
+        a.write_u64(42);
+        b.write_u64(42);
+        assert_eq!(a.finish(), b.finish());
+        let mut c = FxHasher::default();
+        c.write_u64(43);
+        assert_ne!(a.finish(), c.finish());
+    }
+
+    #[test]
+    fn byte_writes_cover_tail_chunks() {
+        let mut a = FxHasher::default();
+        a.write(b"hello world tail");
+        let mut b = FxHasher::default();
+        b.write(b"hello world tai_");
+        assert_ne!(a.finish(), b.finish());
+    }
+}

@@ -1,0 +1,9 @@
+//! Small shared utilities: deterministic RNG, formatting helpers.
+
+pub mod bench;
+pub mod cli;
+pub mod hash;
+pub mod fmt;
+pub mod rng;
+
+pub use rng::SplitMix64;

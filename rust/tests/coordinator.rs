@@ -1,0 +1,125 @@
+//! Integration + property tests over the serving coordinator: queueing
+//! invariants, metrics conservation, cache behaviour under concurrency,
+//! and determinism of served results.
+
+use repro::accel::ArchConfig;
+use repro::coordinator::{Job, Service, ServiceConfig};
+use repro::cost::CostParams;
+use repro::graph::datasets::Dataset;
+use repro::util::SplitMix64;
+
+fn service(workers: usize) -> Service {
+    Service::spawn(ServiceConfig {
+        arch: ArchConfig::default(),
+        params: CostParams::default(),
+        workers,
+    })
+}
+
+#[test]
+fn metrics_conserve_jobs() {
+    // Property: submitted == completed + failed after all jobs resolve,
+    // across random job mixes and worker counts.
+    for seed in 0..6u64 {
+        let mut rng = SplitMix64::new(seed);
+        let workers = 1 + rng.next_index(4);
+        let svc = service(workers);
+        let njobs = 4 + rng.next_index(12);
+        let pending: Vec<_> = (0..njobs)
+            .map(|i| {
+                let job = match rng.next_index(4) {
+                    0 => Job::Bfs { dataset: Dataset::Tiny, scale: 1.0, source: i as u32 },
+                    1 => Job::PageRank { dataset: Dataset::Tiny, scale: 1.0, iterations: 3 },
+                    2 => Job::Wcc { dataset: Dataset::Tiny, scale: 1.0 },
+                    _ => Job::Sssp { dataset: Dataset::Tiny, scale: 1.0, source: i as u32 },
+                };
+                svc.submit(job).unwrap()
+            })
+            .collect();
+        let mut ok = 0u64;
+        for p in pending {
+            if p.wait().is_ok() {
+                ok += 1;
+            }
+        }
+        let snap = svc.metrics.snapshot();
+        assert_eq!(snap.jobs_submitted, njobs as u64, "seed {seed}");
+        assert_eq!(snap.jobs_completed, ok, "seed {seed}");
+        assert_eq!(snap.jobs_completed + snap.jobs_failed, njobs as u64, "seed {seed}");
+        assert!(snap.max_latency_us >= snap.mean_latency_us as u64, "seed {seed}");
+    }
+}
+
+#[test]
+fn served_results_are_deterministic() {
+    // The same job must produce identical reports regardless of worker
+    // interleaving or cache state.
+    let svc = service(4);
+    let job = || Job::Bfs { dataset: Dataset::Tiny, scale: 1.0, source: 7 };
+    let first = svc.submit_blocking(job()).unwrap().report;
+    let pending: Vec<_> = (0..6).map(|_| svc.submit(job()).unwrap()).collect();
+    for p in pending {
+        let r = p.wait().unwrap().report;
+        assert_eq!(
+            r.run.as_ref().unwrap().values,
+            first.run.as_ref().unwrap().values
+        );
+        assert_eq!(r.counts, first.counts);
+        assert_eq!(r.exec_time_ns, first.exec_time_ns);
+    }
+}
+
+#[test]
+fn preprocessing_cache_accelerates_repeat_jobs() {
+    let svc = service(1);
+    // Cold: includes dataset generation + Alg. 1.
+    let cold = svc
+        .submit_blocking(Job::Bfs { dataset: Dataset::Gnutella, scale: 1.0, source: 0 })
+        .unwrap()
+        .wall_time_us;
+    // Warm average.
+    let mut warm_total = 0u64;
+    for i in 1..4u32 {
+        warm_total += svc
+            .submit_blocking(Job::Bfs { dataset: Dataset::Gnutella, scale: 1.0, source: i })
+            .unwrap()
+            .wall_time_us;
+    }
+    let warm = warm_total / 3;
+    assert!(
+        warm < cold,
+        "warm jobs ({warm} µs) not faster than cold ({cold} µs)"
+    );
+}
+
+#[test]
+fn scale_variants_do_not_collide_in_cache() {
+    let svc = service(2);
+    let a = svc
+        .submit_blocking(Job::Bfs { dataset: Dataset::Tiny, scale: 1.0, source: 0 })
+        .unwrap();
+    let b = svc
+        .submit_blocking(Job::Bfs { dataset: Dataset::Tiny, scale: 0.5, source: 0 })
+        .unwrap();
+    assert_ne!(
+        a.report.run.as_ref().unwrap().values.len(),
+        b.report.run.as_ref().unwrap().values.len(),
+        "different scales must map to different preprocessed graphs"
+    );
+}
+
+#[test]
+fn heavy_concurrency_smoke() {
+    let svc = service(8);
+    let pending: Vec<_> = (0..64u32)
+        .map(|i| {
+            svc.submit(Job::Wcc { dataset: Dataset::Tiny, scale: 1.0 })
+                .map(|p| (i, p))
+                .unwrap()
+        })
+        .collect();
+    for (_, p) in pending {
+        p.wait().unwrap();
+    }
+    assert_eq!(svc.metrics.snapshot().jobs_completed, 64);
+}

@@ -1,0 +1,161 @@
+//! Integration: the paper's *qualitative* results must hold on the
+//! synthetic datasets — who wins, by roughly what factor, where the
+//! crossover falls (DESIGN.md §4 acceptance bar). Full-scale numbers are
+//! produced by the benches; these tests run at reduced scale to stay
+//! fast, asserting orderings and coarse ratios rather than absolutes.
+
+use repro::accel::{Accelerator, ArchConfig};
+use repro::algo::Bfs;
+use repro::baselines::{self, BaselineModel, GraphR, SparseMem, TaRe};
+use repro::cost::{lifetime_seconds, CostParams};
+use repro::dse::static_engine_sweep;
+use repro::graph::datasets::Dataset;
+use repro::sched::executor::NativeExecutor;
+
+fn ours(g: &repro::graph::Coo) -> repro::accel::SimReport {
+    Accelerator::with_defaults()
+        .simulate(g, &Bfs::new(0), &mut NativeExecutor)
+        .unwrap()
+}
+
+/// Table 4 shape: energy ordering GraphR ≫ SparseMEM > TARe > Proposed,
+/// with Proposed beating SparseMEM by >2x and GraphR by >2 orders.
+#[test]
+fn table4_energy_ordering() {
+    for d in [Dataset::WikiVote, Dataset::Gnutella] {
+        let g = d.load().unwrap();
+        let params = CostParams::default();
+        let us = ours(&g).energy_j();
+        let gr = GraphR::default().simulate_bfs(&g, 0, &params, 32).energy_j();
+        let sm = SparseMem::default().simulate_bfs(&g, 0, &params, 32).energy_j();
+        let ta = TaRe::default().simulate_bfs(&g, 0, &params, 32).energy_j();
+        let short = d.spec().short;
+        // Paper reports 2–4 orders vs GraphR; our kinder GraphR model
+        // still leaves a >20x gap on the small graphs and orders of
+        // magnitude on the large ones (see benches for the full table).
+        assert!(gr > 20.0 * us, "{short}: GraphR {gr:.2e} vs ours {us:.2e}");
+        assert!(sm > 1.5 * us, "{short}: SparseMEM {sm:.2e} vs ours {us:.2e}");
+        assert!(ta > us, "{short}: TARe {ta:.2e} vs ours {us:.2e}");
+        assert!(gr > sm && gr > ta, "{short}: GraphR must be worst");
+    }
+}
+
+/// Fig. 7 shape: speedup ordering Proposed > TARe > SparseMEM ≫ GraphR.
+#[test]
+fn fig7_speedup_ordering() {
+    for d in [Dataset::WikiVote, Dataset::Gnutella] {
+        let g = d.load().unwrap();
+        let params = CostParams::default();
+        let us = ours(&g).exec_time_ns;
+        let gr = GraphR::default().simulate_bfs(&g, 0, &params, 32).exec_time_ns;
+        let sm = SparseMem::default().simulate_bfs(&g, 0, &params, 32).exec_time_ns;
+        let ta = TaRe::default().simulate_bfs(&g, 0, &params, 32).exec_time_ns;
+        let short = d.spec().short;
+        assert!(gr > 100.0 * us, "{short}: vs GraphR only {:.1}x", gr / us);
+        assert!(sm > us, "{short}: SparseMEM faster than us");
+        assert!(ta > us, "{short}: TARe faster than us");
+        // Paper: ours/TARe ≈ 1.27x, ours/SparseMEM ≈ 2.38x — both are
+        // single-digit factors, not orders of magnitude.
+        assert!(ta / us < 20.0, "{short}: TARe gap implausibly large");
+        assert!(sm / us < 20.0, "{short}: SparseMEM gap implausibly large");
+    }
+}
+
+/// Fig. 6 shape: some intermediate static split beats both extremes, and
+/// the all-static-but-one end loses to the optimum.
+#[test]
+fn fig6_hump_exists() {
+    let g = Dataset::WikiVote.load_scaled(0.4).unwrap();
+    let points = static_engine_sweep(
+        &g,
+        &ArchConfig::default(),
+        &CostParams::default(),
+        &Bfs::new(0),
+        &[0, 8, 16, 24, 31],
+    )
+    .unwrap();
+    let speed = |n: u32| points.iter().find(|p| p.x == n).unwrap().speedup;
+    let best = points.iter().map(|p| p.speedup).fold(0.0, f64::max);
+    assert!(best > 1.2, "no meaningful speedup from static engines: {best:.2}");
+    // The optimum is an interior point (paper: N = 16).
+    assert!(best > speed(0) && best > speed(31), "optimum at an extreme");
+    let best_n = points
+        .iter()
+        .max_by(|a, b| a.speedup.total_cmp(&b.speedup))
+        .unwrap()
+        .x;
+    assert!(
+        (8..=24).contains(&best_n),
+        "optimum N={best_n} outside the paper's interior region"
+    );
+}
+
+/// §IV.D shape: lifetime ordering Proposed > SparseMEM ≫ GraphR, with
+/// the proposed design exceeding 10 years at hourly executions.
+#[test]
+fn lifetime_ordering() {
+    let g = Dataset::WikiVote.load().unwrap();
+    let params = CostParams::default();
+    let engines = 128;
+    let cfg = ArchConfig::lifetime();
+    let acc = Accelerator::new(cfg, params.clone());
+    let us = acc.simulate(&g, &Bfs::new(0), &mut NativeExecutor).unwrap();
+    let base = baselines::simulate_all(&g, 0, &params, engines);
+    let w = |name: &str| {
+        base.iter()
+            .find(|r| r.design == name)
+            .unwrap()
+            .max_cell_writes
+    };
+    let lt = |w: u64| lifetime_seconds(params.endurance_cycles, w, 3600.0);
+    let ours_lt = lt(us.max_cell_writes);
+    let ten_years = 10.0 * 365.25 * 24.0 * 3600.0;
+    assert!(ours_lt > ten_years, "proposed lifetime {ours_lt:.2e} s < 10 years");
+    assert!(ours_lt > lt(w("SparseMEM")), "must outlive SparseMEM");
+    assert!(lt(w("SparseMEM")) > lt(w("GraphR")), "SparseMEM must outlive GraphR");
+    assert!(
+        ours_lt > 10.0 * lt(w("GraphR")),
+        "vs GraphR only {:.1}x",
+        ours_lt / lt(w("GraphR"))
+    );
+    // TARe is write-free: infinite lifetime by construction.
+    assert!(lt(w("TARe")).is_infinite());
+}
+
+/// Fig. 1a shape: pattern histogram skew on every dataset — the top-16
+/// patterns must cover the majority of subgraphs (paper: 86 % on WV).
+#[test]
+fn fig1_skew_on_all_datasets() {
+    for d in [Dataset::WikiVote, Dataset::Gnutella, Dataset::Epinions] {
+        let g = d.load_scaled(if d == Dataset::Epinions { 0.3 } else { 1.0 }).unwrap();
+        let acc = Accelerator::with_defaults();
+        let pre = acc.preprocess(&g, false).unwrap();
+        let cov = pre.ranking.coverage(16);
+        assert!(cov > 0.55, "{}: top-16 coverage {cov:.3}", d.spec().short);
+    }
+}
+
+/// Fig. 5 shape: static engines see far more read traffic than dynamic
+/// ones; dynamic engines own all the writes.
+#[test]
+fn fig5_static_dynamic_asymmetry() {
+    let g = Dataset::WikiVote.load_scaled(0.4).unwrap();
+    let acc = Accelerator::new(ArchConfig::fig5(), CostParams::default());
+    let r = acc.simulate(&g, &Bfs::new(0), &mut NativeExecutor).unwrap();
+    let run = r.run.as_ref().unwrap();
+    let trace = run.activity.as_ref().unwrap();
+    let totals = trace.totals();
+    let static_reads: u64 = totals[..4].iter().map(|t| t.0).sum();
+    let dynamic_reads: u64 = totals[4..].iter().map(|t| t.0).sum();
+    let static_writes: u64 = totals[..4].iter().map(|t| t.1).sum();
+    let dynamic_writes: u64 = totals[4..].iter().map(|t| t.1).sum();
+    // Static engines serve ~80 % of ops; the row-address shortcut trims
+    // their per-op reads, so assert a clear majority rather than the
+    // paper's unquantified "significantly higher".
+    assert!(
+        static_reads as f64 > 1.4 * dynamic_reads as f64,
+        "static reads {static_reads} vs dynamic {dynamic_reads}"
+    );
+    assert_eq!(static_writes, 0, "static engines wrote at runtime");
+    assert!(dynamic_writes > 0);
+}

@@ -1,0 +1,191 @@
+//! Integration: the AOT/PJRT production datapath.
+//!
+//! Requires `make artifacts`. These tests are the proof that the three
+//! layers compose: JAX/Pallas kernels lowered to HLO text, loaded by the
+//! xla crate on the PJRT CPU client, driven by the rust scheduler, and
+//! numerically indistinguishable from both the native mirror and the
+//! pure-CPU references.
+
+use repro::accel::{Accelerator, ArchConfig};
+use repro::algo::traits::{StepKind, INF};
+use repro::algo::{reference, Bfs, PageRank, Sssp, Wcc};
+use repro::cost::CostParams;
+use repro::graph::datasets::Dataset;
+use repro::graph::Csr;
+use repro::runtime::{Manifest, PjrtExecutor};
+use repro::sched::executor::{NativeExecutor, StepExecutor};
+use repro::util::SplitMix64;
+
+fn artifacts_present() -> bool {
+    repro::runtime::default_artifact_dir()
+        .join("manifest.tsv")
+        .exists()
+}
+
+macro_rules! require_artifacts {
+    () => {
+        if !artifacts_present() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+    };
+}
+
+#[test]
+fn manifest_covers_every_step_kind() {
+    require_artifacts!();
+    let m = Manifest::load(&repro::runtime::default_artifact_dir()).unwrap();
+    for kind in [
+        StepKind::Bfs,
+        StepKind::Sssp,
+        StepKind::Wcc,
+        StepKind::PageRank,
+        StepKind::Mvm,
+    ] {
+        assert!(
+            m.select(kind.artifact_name(), 4).is_some(),
+            "missing artifact for {kind:?} at C=4"
+        );
+    }
+    // The 8x8 ablation and the Fig. 3 (C=2) variants exist too.
+    assert!(m.select("bfs", 8).is_some());
+    assert!(m.select("bfs", 2).is_some());
+}
+
+#[test]
+fn pjrt_equals_native_on_random_batches() {
+    require_artifacts!();
+    let mut pjrt = PjrtExecutor::from_default_dir().unwrap();
+    let g = Dataset::Tiny.load().unwrap();
+    for c in [4usize, 8] {
+        let part = repro::pattern::extract::partition(&g, c, false);
+        let n = part.num_subgraphs().min(300);
+        let sgs: Vec<u32> = (0..n as u32).collect();
+        let mut rng = SplitMix64::new(c as u64);
+        for kind in [StepKind::Bfs, StepKind::Wcc, StepKind::PageRank, StepKind::Mvm] {
+            let xs: Vec<f32> = (0..n * c)
+                .map(|_| {
+                    if kind == StepKind::PageRank || kind == StepKind::Mvm {
+                        rng.next_f32()
+                    } else if rng.next_bool(0.4) {
+                        INF
+                    } else {
+                        (rng.next_f32() * 10.0).floor()
+                    }
+                })
+                .collect();
+            let mut got = Vec::new();
+            let mut want = Vec::new();
+            pjrt.execute(kind, &part, &sgs, &xs, &mut got).unwrap();
+            NativeExecutor.execute(kind, &part, &sgs, &xs, &mut want).unwrap();
+            assert_eq!(got.len(), want.len());
+            for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+                let ok = (a - b).abs() < 1e-4 || (*a >= INF && *b >= INF);
+                assert!(ok, "{kind:?} c={c} lane {i}: pjrt {a} native {b}");
+            }
+        }
+    }
+}
+
+#[test]
+fn pjrt_sssp_uses_weights() {
+    require_artifacts!();
+    let mut pjrt = PjrtExecutor::from_default_dir().unwrap();
+    let g = Dataset::Tiny.load_weighted(1.0).unwrap();
+    let part = repro::pattern::extract::partition(&g, 4, true);
+    let n = part.num_subgraphs().min(200);
+    let sgs: Vec<u32> = (0..n as u32).collect();
+    let mut rng = SplitMix64::new(11);
+    let xs: Vec<f32> = (0..n * 4)
+        .map(|_| if rng.next_bool(0.5) { INF } else { rng.next_f32() * 4.0 })
+        .collect();
+    let mut got = Vec::new();
+    let mut want = Vec::new();
+    pjrt.execute(StepKind::Sssp, &part, &sgs, &xs, &mut got).unwrap();
+    NativeExecutor.execute(StepKind::Sssp, &part, &sgs, &xs, &mut want).unwrap();
+    for (a, b) in got.iter().zip(&want) {
+        assert!((a - b).abs() < 1e-3 || (*a >= INF && *b >= INF), "{a} vs {b}");
+    }
+}
+
+#[test]
+fn full_bfs_through_pjrt_matches_cpu_reference() {
+    require_artifacts!();
+    let g = Dataset::Tiny.load().unwrap();
+    let acc = Accelerator::with_defaults();
+    let mut pjrt = PjrtExecutor::from_default_dir().unwrap();
+    let r = acc.simulate(&g, &Bfs::new(0), &mut pjrt).unwrap();
+    let want = reference::bfs_levels(&Csr::from_coo(&g), 0);
+    for (got, want) in r.run.as_ref().unwrap().values.iter().zip(&want) {
+        assert!(
+            (got - want).abs() < 1e-3 || (*got >= INF && *want >= INF),
+            "{got} vs {want}"
+        );
+    }
+    assert!(pjrt.runtime.dispatches > 0, "PJRT was never dispatched");
+}
+
+#[test]
+fn full_pagerank_and_wcc_through_pjrt() {
+    require_artifacts!();
+    let g = Dataset::Tiny.load().unwrap();
+    let csr = Csr::from_coo(&g);
+    let acc = Accelerator::with_defaults();
+    let mut pjrt = PjrtExecutor::from_default_dir().unwrap();
+
+    let pr = acc.simulate(&g, &PageRank::new(0.85, 6), &mut pjrt).unwrap();
+    let want = reference::pagerank(&csr, 0.85, 6);
+    for (got, want) in pr.run.as_ref().unwrap().values.iter().zip(&want) {
+        assert!((got - want).abs() < 1e-4, "pagerank {got} vs {want}");
+    }
+
+    let wcc = acc.simulate(&g, &Wcc, &mut pjrt).unwrap();
+    let want = reference::wcc_labels(&csr);
+    for (got, want) in wcc.run.as_ref().unwrap().values.iter().zip(&want) {
+        assert_eq!(got, want, "wcc label mismatch");
+    }
+}
+
+#[test]
+fn full_sssp_through_pjrt() {
+    require_artifacts!();
+    let g = Dataset::Tiny.load_weighted(1.0).unwrap();
+    let acc = Accelerator::with_defaults();
+    let mut pjrt = PjrtExecutor::from_default_dir().unwrap();
+    let r = acc.simulate(&g, &Sssp::new(2), &mut pjrt).unwrap();
+    let want = reference::sssp_distances(&Csr::from_coo(&g), 2);
+    for (got, want) in r.run.as_ref().unwrap().values.iter().zip(&want) {
+        assert!(
+            (got - want).abs() < 1e-2 || (*got >= INF && *want >= INF),
+            "{got} vs {want}"
+        );
+    }
+}
+
+#[test]
+fn pjrt_8x8_crossbar_configuration() {
+    require_artifacts!();
+    let g = Dataset::Tiny.load().unwrap();
+    let cfg = ArchConfig { crossbar_size: 8, ..ArchConfig::default() };
+    let acc = Accelerator::new(cfg, CostParams::default());
+    let mut pjrt = PjrtExecutor::from_default_dir().unwrap();
+    let r = acc.simulate(&g, &Bfs::new(0), &mut pjrt).unwrap();
+    let want = reference::bfs_levels(&Csr::from_coo(&g), 0);
+    for (got, want) in r.run.as_ref().unwrap().values.iter().zip(&want) {
+        assert!((got - want).abs() < 1e-3 || (*got >= INF && *want >= INF));
+    }
+}
+
+#[test]
+fn missing_artifact_is_a_clean_error() {
+    require_artifacts!();
+    let mut pjrt = PjrtExecutor::from_default_dir().unwrap();
+    // C=3 has no artifact variant.
+    let g = Dataset::Tiny.load().unwrap();
+    let part = repro::pattern::extract::partition(&g, 3, false);
+    let mut out = Vec::new();
+    let err = pjrt
+        .execute(StepKind::Bfs, &part, &[0], &[0.0, 0.0, 0.0], &mut out)
+        .unwrap_err();
+    assert!(err.to_string().contains("no artifact"), "unexpected error: {err}");
+}

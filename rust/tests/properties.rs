@@ -1,0 +1,224 @@
+//! Property-based tests over randomized inputs (seeded SplitMix64 — the
+//! offline image vendors no proptest, so these are explicit-seed
+//! property sweeps: every case prints its seed on failure).
+
+use repro::accel::{Accelerator, ArchConfig, PolicyKind};
+use repro::algo::traits::INF;
+use repro::algo::{reference, Bfs};
+use repro::cost::CostParams;
+use repro::graph::coo::{Coo, Edge};
+use repro::graph::generator::{erdos_renyi, rmat, RmatParams};
+use repro::graph::Csr;
+use repro::pattern::extract::partition;
+use repro::pattern::rank::PatternRanking;
+use repro::pattern::tables::{ConfigTable, ExecOrder, SubgraphTable};
+use repro::sched::executor::NativeExecutor;
+use repro::util::SplitMix64;
+
+fn random_graph(seed: u64) -> Coo {
+    let mut rng = SplitMix64::new(seed);
+    let n = 32 + rng.next_bounded(480) as u32;
+    let m = (n as usize) * (1 + rng.next_index(8));
+    if rng.next_bool(0.5) {
+        rmat(n, m, RmatParams::default(), rng.next_u64())
+    } else {
+        erdos_renyi(n, m, rng.next_u64())
+    }
+}
+
+#[test]
+fn prop_partition_preserves_edges() {
+    for seed in 0..40u64 {
+        let g = random_graph(seed);
+        for c in [2usize, 3, 4, 5, 8] {
+            let p = partition(&g, c, false);
+            let nnz: u64 = p.subgraphs.iter().map(|s| s.pattern.nnz() as u64).sum();
+            assert_eq!(nnz as usize, g.num_edges(), "seed {seed} c {c}");
+            // No empty windows, block coords in range.
+            let nb = p.num_blocks();
+            for s in &p.subgraphs {
+                assert!(!s.pattern.is_empty(), "seed {seed}: empty window kept");
+                assert!(s.brow < nb && s.bcol < nb, "seed {seed}: block out of range");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_ranking_counts_sum_to_subgraphs() {
+    for seed in 40..70u64 {
+        let g = random_graph(seed);
+        let p = partition(&g, 4, false);
+        let r = PatternRanking::from_partitioned(&p);
+        let total: u64 = r.ranked.iter().map(|&(_, c)| c as u64).sum();
+        assert_eq!(total as usize, p.num_subgraphs(), "seed {seed}");
+        // Ranked counts are non-increasing.
+        for w in r.ranked.windows(2) {
+            assert!(w[0].1 >= w[1].1, "seed {seed}: ranking not sorted");
+        }
+        // coverage is monotone in k.
+        let mut last = 0.0;
+        for k in 0..r.num_patterns().min(32) {
+            let c = r.coverage(k);
+            assert!(c >= last - 1e-12, "seed {seed}: coverage not monotone");
+            last = c;
+        }
+    }
+}
+
+#[test]
+fn prop_tables_are_consistent() {
+    for seed in 70..95u64 {
+        let g = random_graph(seed);
+        let p = partition(&g, 4, false);
+        let r = PatternRanking::from_partitioned(&p);
+        let mut rng = SplitMix64::new(seed ^ 0xABCD);
+        let n_static = rng.next_bounded(8) as u32;
+        let m = 1 + rng.next_bounded(4) as u32;
+        let assignment = if rng.next_bool(0.5) {
+            repro::pattern::tables::StaticAssignment::TopK
+        } else {
+            repro::pattern::tables::StaticAssignment::Balanced
+        };
+        let ct = ConfigTable::build(&r, 4, n_static, m, 4, assignment);
+        // Static slots unique and within range.
+        let mut seen = std::collections::HashSet::new();
+        for (_, slot) in ct.static_assignments() {
+            assert!(slot.engine < n_static.max(1), "seed {seed}");
+            assert!(slot.crossbar < m, "seed {seed}");
+            assert!(seen.insert((slot.engine, slot.crossbar)), "seed {seed}: slot reused");
+        }
+        assert!(seen.len() <= (n_static * m) as usize);
+        // ST covers every subgraph exactly once, groups share major key.
+        for order in [ExecOrder::ColumnMajor, ExecOrder::RowMajor] {
+            let st = SubgraphTable::build(&p, &r, order);
+            assert_eq!(st.len(), p.num_subgraphs(), "seed {seed}");
+            let mut covered = vec![false; p.num_subgraphs()];
+            for grp in st.iter_groups() {
+                let key0 = match order {
+                    ExecOrder::ColumnMajor => grp[0].dst_start,
+                    ExecOrder::RowMajor => grp[0].src_start,
+                };
+                for e in grp {
+                    let key = match order {
+                        ExecOrder::ColumnMajor => e.dst_start,
+                        ExecOrder::RowMajor => e.src_start,
+                    };
+                    assert_eq!(key, key0, "seed {seed}: mixed group");
+                    assert!(!covered[e.sg_idx as usize], "seed {seed}: duplicate");
+                    covered[e.sg_idx as usize] = true;
+                }
+            }
+            assert!(covered.iter().all(|&c| c), "seed {seed}: missing subgraph");
+        }
+    }
+}
+
+#[test]
+fn prop_accelerator_bfs_equals_reference() {
+    // The headline correctness property across random graphs, sources,
+    // window sizes and engine splits.
+    for seed in 95..120u64 {
+        let g = random_graph(seed);
+        let mut rng = SplitMix64::new(seed ^ 0x5EED);
+        let source = rng.next_bounded(g.num_vertices as u64) as u32;
+        let cfg = ArchConfig {
+            crossbar_size: [2, 4, 8][rng.next_index(3)],
+            total_engines: 4 + rng.next_bounded(28) as u32,
+            static_engines: 0, // set below
+            policy: [PolicyKind::Lru, PolicyKind::RoundRobin, PolicyKind::Lfu]
+                [rng.next_index(3)],
+            ..ArchConfig::default()
+        };
+        let cfg = ArchConfig {
+            static_engines: rng.next_bounded(cfg.total_engines as u64 + 1) as u32,
+            ..cfg
+        };
+        let acc = Accelerator::new(cfg.clone(), CostParams::default());
+        let r = acc.simulate(&g, &Bfs::new(source), &mut NativeExecutor).unwrap();
+        let want = reference::bfs_levels(&Csr::from_coo(&g), source);
+        for (v, (got, want)) in r.run.as_ref().unwrap().values.iter().zip(&want).enumerate()
+        {
+            let ok = (got - want).abs() < 1e-3 || (*got >= INF && *want >= INF);
+            assert!(ok, "seed {seed} cfg {cfg:?} vertex {v}: got {got} want {want}");
+        }
+        // Conservation: every op is static or dynamic.
+        let run = r.run.as_ref().unwrap();
+        assert_eq!(run.static_ops + run.dynamic_ops, run.counts.mvm_ops, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_write_bits_zero_when_everything_static() {
+    // If capacity >= distinct patterns, runtime must be write-free.
+    for seed in 120..140u64 {
+        let g = random_graph(seed);
+        let p = partition(&g, 4, false);
+        let r = PatternRanking::from_partitioned(&p);
+        let patterns = r.num_patterns() as u32;
+        if patterns == 0 || patterns > 256 {
+            continue;
+        }
+        let cfg = ArchConfig {
+            total_engines: patterns + 1,
+            static_engines: patterns,
+            crossbars_per_engine: 1,
+            // TopK guarantees one slot per distinct pattern; Balanced
+            // may spend slots on replicas of hot patterns instead.
+            static_assignment: repro::pattern::tables::StaticAssignment::TopK,
+            ..ArchConfig::default()
+        };
+        let acc = Accelerator::new(cfg, CostParams::default());
+        let rep = acc.simulate(&g, &Bfs::new(0), &mut NativeExecutor).unwrap();
+        let run = rep.run.as_ref().unwrap();
+        assert_eq!(run.counts.write_bits, 0, "seed {seed}: runtime writes");
+        assert_eq!(run.dynamic_ops, 0, "seed {seed}");
+        assert!((rep.static_hit_rate - 1.0).abs() < 1e-12, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_symmetrize_partition_transpose_symmetry() {
+    // For an undirected graph, the window multiset is symmetric:
+    // pattern(brow,bcol) is the transpose of pattern(bcol,brow).
+    for seed in 140..155u64 {
+        let g = random_graph(seed).symmetrize();
+        let p = partition(&g, 4, false);
+        let map: std::collections::HashMap<(u32, u32), repro::pattern::Pattern> =
+            p.subgraphs.iter().map(|s| ((s.brow, s.bcol), s.pattern)).collect();
+        for s in &p.subgraphs {
+            let mirror = map
+                .get(&(s.bcol, s.brow))
+                .unwrap_or_else(|| panic!("seed {seed}: missing mirror window"));
+            // transpose bit-by-bit
+            let mut transposed = repro::pattern::Pattern::EMPTY;
+            for (i, j) in mirror.cells(4) {
+                transposed = transposed.with_edge(j as usize, i as usize, 4);
+            }
+            assert_eq!(transposed, s.pattern, "seed {seed}: asymmetric windows");
+        }
+    }
+}
+
+#[test]
+fn prop_energy_monotone_in_work() {
+    // Adding edges can only increase total modeled energy.
+    for seed in 155..170u64 {
+        let mut rng = SplitMix64::new(seed);
+        let n = 64 + rng.next_bounded(192) as u32;
+        let base_edges = (n as usize) * 2;
+        let g1 = erdos_renyi(n, base_edges, seed);
+        let mut extra = g1.edges.clone();
+        let g2e = erdos_renyi(n, base_edges * 2, seed ^ 1);
+        extra.extend_from_slice(&g2e.edges);
+        let g2 = Coo::from_edges(n, extra);
+        assert!(g2.num_edges() >= g1.num_edges());
+        let acc = Accelerator::with_defaults();
+        let r1 = acc.simulate(&g1, &repro::algo::PageRank::new(0.85, 3), &mut NativeExecutor).unwrap();
+        let r2 = acc.simulate(&g2, &repro::algo::PageRank::new(0.85, 3), &mut NativeExecutor).unwrap();
+        assert!(
+            r2.energy_j() >= r1.energy_j() * 0.99,
+            "seed {seed}: energy shrank with more edges"
+        );
+    }
+}
