@@ -13,7 +13,6 @@ use repro::cost::CostParams;
 use repro::coordinator::{Job, Service, ServiceConfig};
 use repro::graph::datasets::Dataset;
 use repro::pattern::extract::partition;
-use repro::runtime::PjrtExecutor;
 use repro::sched::executor::{NativeExecutor, StepExecutor};
 use repro::util::bench::{black_box, Bench};
 use repro::util::SplitMix64;
@@ -63,8 +62,9 @@ fn main() {
     // Partitioner.
     b.run("partition WV c=4", || black_box(partition(&g, 4, false)));
 
-    // PJRT dispatch path (needs `make artifacts`).
-    match PjrtExecutor::from_default_dir() {
+    // PJRT dispatch path (needs `make artifacts` + `--features pjrt`).
+    #[cfg(feature = "pjrt")]
+    match repro::runtime::PjrtExecutor::from_default_dir() {
         Ok(mut pjrt) => {
             let n = 4096.min(part.num_subgraphs());
             let sgs: Vec<u32> = (0..n as u32).collect();
@@ -80,10 +80,13 @@ fn main() {
         }
         Err(e) => println!("(pjrt bench skipped: {e})"),
     }
+    #[cfg(not(feature = "pjrt"))]
+    println!("(pjrt bench skipped: built without the `pjrt` feature)");
 
     // Serving loop throughput.
     let st = b.run("serving loop: 16 mixed jobs (Tiny)", || {
-        let svc = Service::spawn(ServiceConfig { workers: 4, ..ServiceConfig::default() });
+        let svc =
+            Service::spawn(ServiceConfig { workers: 4, ..ServiceConfig::default() }).unwrap();
         let pending: Vec<_> = (0..16u32)
             .map(|i| {
                 svc.submit(match i % 2 {

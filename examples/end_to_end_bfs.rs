@@ -19,129 +19,145 @@
 //! Run: `make artifacts && cargo run --release --example end_to_end_bfs`
 //! Recorded in EXPERIMENTS.md §End-to-end.
 
-use std::time::Instant;
-
-use anyhow::Result;
-
-use repro::accel::{Accelerator, ArchConfig};
-use repro::algo::{reference, traits::INF, Bfs, PageRank};
-use repro::cost::{lifetime_seconds, CostParams};
-use repro::graph::datasets::Dataset;
-use repro::graph::{Csr, GraphStats};
-use repro::runtime::PjrtExecutor;
-use repro::sched::executor::NativeExecutor;
-use repro::util::fmt;
-
-fn main() -> Result<()> {
-    // --- 1. workload ---
-    let dataset = Dataset::WikiVote;
-    let g = dataset.load()?;
-    let s = GraphStats::of(&g);
-    println!(
-        "workload: {} — {} vertices, {} edges, avg degree {:.1}, sparsity {:.3}%",
-        dataset.spec().name,
-        fmt::count(s.num_vertices as u64),
-        fmt::count(s.num_edges as u64),
-        s.avg_degree,
-        s.sparsity_pct
+#[cfg(not(feature = "pjrt"))]
+fn main() {
+    eprintln!(
+        "end_to_end_bfs drives the AOT/PJRT datapath; rebuild with \
+         `--features pjrt` and run `make artifacts` first."
     );
+}
 
-    // --- 2. preprocessing (Alg. 1) ---
-    let params = CostParams::default();
-    let acc = Accelerator::new(ArchConfig::default(), params.clone());
-    let t0 = Instant::now();
-    let pre = acc.preprocess(&g, false)?;
-    println!(
-        "preprocess: {} subgraphs, {} patterns, top-16 coverage {:.1}%, static coverage {:.1}% ({} ms)",
-        fmt::count(pre.part.num_subgraphs() as u64),
-        pre.ranking.num_patterns(),
-        pre.ranking.coverage(16) * 100.0,
-        pre.static_coverage() * 100.0,
-        t0.elapsed().as_millis()
-    );
+#[cfg(feature = "pjrt")]
+fn main() -> anyhow::Result<()> {
+    pjrt_demo::run()
+}
 
-    // --- 3. BFS through the AOT/PJRT datapath ---
-    let mut pjrt = PjrtExecutor::from_default_dir()?;
-    println!("datapath: PJRT ({})", pjrt.runtime.platform());
-    let t1 = Instant::now();
-    let report = acc.run(&pre, &Bfs::new(0), &mut pjrt)?;
-    let wall = t1.elapsed();
-    let run = report.run.as_ref().unwrap();
-    println!(
-        "bfs: {} supersteps, {} scheduler iterations, {} subgraph ops, {} PJRT dispatches, wall {:.2} s",
-        report.supersteps,
-        fmt::count(report.iterations),
-        fmt::count(report.counts.mvm_ops),
-        fmt::count(pjrt.runtime.dispatches),
-        wall.as_secs_f64()
-    );
+#[cfg(feature = "pjrt")]
+mod pjrt_demo {
+    use std::time::Instant;
 
-    // --- 4. validation ---
-    let csr = Csr::from_coo(&g);
-    let want = reference::bfs_levels(&csr, 0);
-    let mut worst = 0f32;
-    let mut reached = 0usize;
-    for (got, want) in run.values.iter().zip(&want) {
-        if *got < INF || *want < INF {
-            worst = worst.max((got - want).abs());
+    use anyhow::Result;
+
+    use repro::accel::{Accelerator, ArchConfig};
+    use repro::algo::{reference, traits::INF, Bfs, PageRank};
+    use repro::cost::{lifetime_seconds, CostParams};
+    use repro::graph::datasets::Dataset;
+    use repro::graph::{Csr, GraphStats};
+    use repro::runtime::PjrtExecutor;
+    use repro::sched::executor::NativeExecutor;
+    use repro::util::fmt;
+
+    pub fn run() -> Result<()> {
+        // --- 1. workload ---
+        let dataset = Dataset::WikiVote;
+        let g = dataset.load()?;
+        let s = GraphStats::of(&g);
+        println!(
+            "workload: {} — {} vertices, {} edges, avg degree {:.1}, sparsity {:.3}%",
+            dataset.spec().name,
+            fmt::count(s.num_vertices as u64),
+            fmt::count(s.num_edges as u64),
+            s.avg_degree,
+            s.sparsity_pct
+        );
+
+        // --- 2. preprocessing (Alg. 1) ---
+        let params = CostParams::default();
+        let acc = Accelerator::new(ArchConfig::default(), params.clone());
+        let t0 = Instant::now();
+        let pre = acc.preprocess(&g, false)?;
+        println!(
+            "preprocess: {} subgraphs, {} patterns, top-16 coverage {:.1}%, static coverage {:.1}% ({} ms)",
+            fmt::count(pre.part.num_subgraphs() as u64),
+            pre.ranking.num_patterns(),
+            pre.ranking.coverage(16) * 100.0,
+            pre.static_coverage() * 100.0,
+            t0.elapsed().as_millis()
+        );
+
+        // --- 3. BFS through the AOT/PJRT datapath ---
+        let mut pjrt = PjrtExecutor::from_default_dir()?;
+        println!("datapath: PJRT ({})", pjrt.runtime.platform());
+        let t1 = Instant::now();
+        let report = acc.run(&pre, &Bfs::new(0), &mut pjrt)?;
+        let wall = t1.elapsed();
+        let run = report.run.as_ref().unwrap();
+        println!(
+            "bfs: {} supersteps, {} scheduler iterations, {} subgraph ops, {} PJRT dispatches, wall {:.2} s",
+            report.supersteps,
+            fmt::count(report.iterations),
+            fmt::count(report.counts.mvm_ops),
+            fmt::count(pjrt.runtime.dispatches),
+            wall.as_secs_f64()
+        );
+
+        // --- 4. validation ---
+        let csr = Csr::from_coo(&g);
+        let want = reference::bfs_levels(&csr, 0);
+        let mut worst = 0f32;
+        let mut reached = 0usize;
+        for (got, want) in run.values.iter().zip(&want) {
+            if *got < INF || *want < INF {
+                worst = worst.max((got - want).abs());
+            }
+            if *want < INF {
+                reached += 1;
+            }
         }
-        if *want < INF {
-            reached += 1;
-        }
+        println!(
+            "validation vs CPU reference BFS: {} reachable vertices, max abs error {:.1e}",
+            fmt::count(reached as u64),
+            worst
+        );
+        anyhow::ensure!(worst < 1e-3, "PJRT datapath diverged from reference");
+
+        // Cross-check PJRT vs native mirror on identical preprocessing.
+        let native_report = acc.run(&pre, &Bfs::new(0), &mut NativeExecutor)?;
+        let nr = native_report.run.as_ref().unwrap();
+        anyhow::ensure!(
+            nr.values == run.values,
+            "native and PJRT executors disagree"
+        );
+        println!("cross-check: native mirror produces identical levels ✓");
+
+        // --- 5. paper metrics ---
+        println!("\n== modeled hardware metrics (Table 3 constants) ==");
+        println!("energy:           {}", fmt::energy(report.energy_j()));
+        println!("  reram read:     {}", fmt::energy(report.energy.reram_read_j));
+        println!("  reram write:    {}", fmt::energy(report.energy.reram_write_j));
+        println!("  sram buffers:   {}", fmt::energy(report.energy.sram_j));
+        println!("  adc:            {}", fmt::energy(report.energy.adc_j));
+        println!("  main memory:    {}", fmt::energy(report.energy.main_mem_j));
+        println!("modeled time:     {}", fmt::time(report.exec_time_s()));
+        println!("static hit rate:  {:.1}%", report.static_hit_rate * 100.0);
+        println!("ReRAM write bits: {}", fmt::count(report.counts.write_bits));
+        println!(
+            "lifetime (hourly runs): {}",
+            fmt::time(lifetime_seconds(params.endurance_cycles, report.max_cell_writes, 3600.0))
+        );
+        println!(
+            "host throughput:  {:.0} subgraph ops/s through PJRT",
+            report.counts.mvm_ops as f64 / wall.as_secs_f64()
+        );
+
+        // Bonus: PageRank over the same preprocessing, PJRT datapath.
+        let t2 = Instant::now();
+        let pr = acc.run(&pre, &PageRank::new(0.85, 10), &mut pjrt)?;
+        let pr_run = pr.run.as_ref().unwrap();
+        let want_pr = reference::pagerank(&csr, 0.85, 10);
+        let worst_pr = pr_run
+            .values
+            .iter()
+            .zip(&want_pr)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0f32, f32::max);
+        println!(
+            "\npagerank (10 iters): wall {:.2} s, max abs error vs reference {:.1e}",
+            t2.elapsed().as_secs_f64(),
+            worst_pr
+        );
+        anyhow::ensure!(worst_pr < 1e-4, "pagerank diverged");
+        println!("END-TO-END OK");
+        Ok(())
     }
-    println!(
-        "validation vs CPU reference BFS: {} reachable vertices, max abs error {:.1e}",
-        fmt::count(reached as u64),
-        worst
-    );
-    anyhow::ensure!(worst < 1e-3, "PJRT datapath diverged from reference");
-
-    // Cross-check PJRT vs native mirror on identical preprocessing.
-    let native_report = acc.run(&pre, &Bfs::new(0), &mut NativeExecutor)?;
-    let nr = native_report.run.as_ref().unwrap();
-    anyhow::ensure!(
-        nr.values == run.values,
-        "native and PJRT executors disagree"
-    );
-    println!("cross-check: native mirror produces identical levels ✓");
-
-    // --- 5. paper metrics ---
-    println!("\n== modeled hardware metrics (Table 3 constants) ==");
-    println!("energy:           {}", fmt::energy(report.energy_j()));
-    println!("  reram read:     {}", fmt::energy(report.energy.reram_read_j));
-    println!("  reram write:    {}", fmt::energy(report.energy.reram_write_j));
-    println!("  sram buffers:   {}", fmt::energy(report.energy.sram_j));
-    println!("  adc:            {}", fmt::energy(report.energy.adc_j));
-    println!("  main memory:    {}", fmt::energy(report.energy.main_mem_j));
-    println!("modeled time:     {}", fmt::time(report.exec_time_s()));
-    println!("static hit rate:  {:.1}%", report.static_hit_rate * 100.0);
-    println!("ReRAM write bits: {}", fmt::count(report.counts.write_bits));
-    println!(
-        "lifetime (hourly runs): {}",
-        fmt::time(lifetime_seconds(params.endurance_cycles, report.max_cell_writes, 3600.0))
-    );
-    println!(
-        "host throughput:  {:.0} subgraph ops/s through PJRT",
-        report.counts.mvm_ops as f64 / wall.as_secs_f64()
-    );
-
-    // Bonus: PageRank over the same preprocessing, PJRT datapath.
-    let t2 = Instant::now();
-    let pr = acc.run(&pre, &PageRank::new(0.85, 10), &mut pjrt)?;
-    let pr_run = pr.run.as_ref().unwrap();
-    let want_pr = reference::pagerank(&csr, 0.85, 10);
-    let worst_pr = pr_run
-        .values
-        .iter()
-        .zip(&want_pr)
-        .map(|(a, b)| (a - b).abs())
-        .fold(0f32, f32::max);
-    println!(
-        "\npagerank (10 iters): wall {:.2} s, max abs error vs reference {:.1e}",
-        t2.elapsed().as_secs_f64(),
-        worst_pr
-    );
-    anyhow::ensure!(worst_pr < 1e-4, "pagerank diverged");
-    println!("END-TO-END OK");
-    Ok(())
 }

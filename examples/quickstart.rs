@@ -20,6 +20,21 @@ use repro::sched::executor::NativeExecutor;
 use repro::sched::StepExecutor;
 use repro::util::fmt;
 
+fn make_executor() -> Result<Box<dyn StepExecutor>> {
+    #[cfg(feature = "pjrt")]
+    {
+        let artifacts = repro::runtime::default_artifact_dir();
+        if artifacts.join("manifest.tsv").exists() {
+            println!("datapath: AOT HLO artifact via PJRT ({})", artifacts.display());
+            return Ok(Box::new(repro::runtime::PjrtExecutor::from_default_dir()?));
+        }
+    }
+    println!(
+        "datapath: native mirror (build with --features pjrt and run `make artifacts` for the PJRT path)"
+    );
+    Ok(Box::new(NativeExecutor))
+}
+
 fn main() -> Result<()> {
     // Fig. 3a: six vertices; windows chosen so patterns repeat.
     let g = Coo::from_edges(
@@ -86,20 +101,10 @@ fn main() -> Result<()> {
         pre.static_coverage() * 100.0
     );
 
-    // Run BFS through the accelerator; prefer the AOT/PJRT datapath.
-    let mut native = NativeExecutor;
-    let mut pjrt_holder;
-    let artifacts = repro::runtime::default_artifact_dir();
-    let exec: &mut dyn StepExecutor = if artifacts.join("manifest.tsv").exists() {
-        pjrt_holder = repro::runtime::PjrtExecutor::from_default_dir()?;
-        println!("datapath: AOT HLO artifact via PJRT ({})", artifacts.display());
-        &mut pjrt_holder
-    } else {
-        println!("datapath: native mirror (run `make artifacts` for the PJRT path)");
-        &mut native
-    };
-
-    let report = acc.run(&pre, &Bfs::new(0), exec)?;
+    // Run BFS through the accelerator; prefer the AOT/PJRT datapath when
+    // this binary has it and artifacts exist.
+    let mut exec = make_executor()?;
+    let report = acc.run(&pre, &Bfs::new(0), exec.as_mut())?;
     let run = report.run.as_ref().unwrap();
     println!("\n== BFS from V0 ==");
     println!("levels: {:?}", run.values);

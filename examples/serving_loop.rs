@@ -13,11 +13,12 @@ use repro::graph::datasets::Dataset;
 use repro::util::fmt;
 
 fn main() -> Result<()> {
-    let svc = Service::spawn(ServiceConfig { workers: 4, ..ServiceConfig::default() });
+    let svc = Service::spawn(ServiceConfig { workers: 4, ..ServiceConfig::default() })?;
     let t0 = Instant::now();
 
     // A burst of mixed jobs; Tiny and Gnutella alternate so the
-    // preprocessing cache sees both hits and misses.
+    // preprocessing cache sees both hits and misses. The legacy `Job`
+    // enum still submits (it converts into `JobSpec` internally).
     let mut pending = Vec::new();
     for i in 0..24u32 {
         let dataset = if i % 2 == 0 { Dataset::Tiny } else { Dataset::Gnutella };
@@ -52,6 +53,14 @@ fn main() -> Result<()> {
         s.max_latency_us,
         fmt::count(s.subgraph_ops),
         s.subgraph_ops as f64 / wall / 1e6,
+    );
+    for (algo, st) in &s.per_algorithm {
+        println!("  {algo:>9}: {} completed, queue depth {}", st.completed, st.queue_depth);
+    }
+    let cache = svc.session().artifacts().stats();
+    println!(
+        "artifact cache: {} preprocessing runs for {} jobs ({} hits)",
+        cache.misses, s.jobs_completed, cache.hits
     );
     assert_eq!(s.jobs_failed, 0);
     Ok(())

@@ -78,16 +78,24 @@ impl Accelerator {
         self.config.validate()?;
         let part = partition(graph, self.config.crossbar_size, weighted);
         let ranking = PatternRanking::from_partitioned(&part);
-        let ct = ConfigTable::build(
-            &ranking,
+        let ct = self.build_config_table(&ranking);
+        let st = SubgraphTable::build(&part, &ranking, self.config.order);
+        Ok(Preprocessed { part, ranking, ct, st })
+    }
+
+    /// Build just the engine config table for `ranking` under this
+    /// architecture. The CT is the only Alg.-1 output that depends on the
+    /// static/dynamic split, so sweeps over N rebuild this table against
+    /// shared partition/ranking instead of re-running all of Alg. 1.
+    pub fn build_config_table(&self, ranking: &PatternRanking) -> ConfigTable {
+        ConfigTable::build(
+            ranking,
             self.config.crossbar_size,
             self.config.static_engines,
             self.config.crossbars_per_engine,
             self.config.dynamic_engines() * self.config.crossbars_per_engine,
             self.config.static_assignment,
-        );
-        let st = SubgraphTable::build(&part, &ranking, self.config.order);
-        Ok(Preprocessed { part, ranking, ct, st })
+        )
     }
 
     /// Alg. 2: run a vertex program on a preprocessed graph.

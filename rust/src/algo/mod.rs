@@ -6,12 +6,14 @@
 pub mod bfs;
 pub mod pagerank;
 pub mod reference;
+pub mod registry;
 pub mod sssp;
 pub mod traits;
 pub mod wcc;
 
 pub use bfs::Bfs;
 pub use pagerank::PageRank;
+pub use registry::{AlgoParams, AlgorithmId, AlgorithmRegistry, BoxedProgram};
 pub use sssp::Sssp;
 pub use traits::{Semiring, StepKind, VertexProgram, INF};
 pub use wcc::Wcc;

@@ -1,0 +1,245 @@
+//! Open algorithm registry: algorithms as pluggable *data*, not
+//! hardcoded control flow.
+//!
+//! The CLI `run` path, the coordinator `serve` path, and DSE all used to
+//! carry their own four-way `match` over BFS/SSSP/PageRank/WCC. The
+//! registry collapses those into a single lookup table of factories built
+//! on the [`VertexProgram`] trait: adding an algorithm is one
+//! [`AlgorithmRegistry::register`] call, visible to every entry point at
+//! once (GraphR's framing — graph processing as algorithm-agnostic
+//! sparse-MVM episodes — with programmability as a first-class axis).
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::traits::VertexProgram;
+use super::{Bfs, PageRank, Sssp, Wcc};
+
+/// A boxed, thread-safe vertex program (serve workers run jobs on any
+/// thread, so registered programs must be `Send + Sync`).
+pub type BoxedProgram = Box<dyn VertexProgram + Send + Sync>;
+
+/// Identifier of a registered algorithm. Case-insensitive: stored and
+/// compared lowercase, so `"BFS"`, `"bfs"` and `"Bfs"` name one entry.
+#[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct AlgorithmId(String);
+
+impl AlgorithmId {
+    pub fn new(name: impl AsRef<str>) -> Self {
+        Self(name.as_ref().trim().to_ascii_lowercase())
+    }
+
+    pub fn as_str(&self) -> &str {
+        &self.0
+    }
+}
+
+impl fmt::Display for AlgorithmId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl From<&str> for AlgorithmId {
+    fn from(s: &str) -> Self {
+        Self::new(s)
+    }
+}
+
+impl From<String> for AlgorithmId {
+    fn from(s: String) -> Self {
+        Self::new(s)
+    }
+}
+
+/// Open parameter bag for instantiating a vertex program. Factories read
+/// the fields they care about and ignore the rest, so one `JobSpec` shape
+/// serves every algorithm (and future registrations reuse the same bag).
+#[derive(Debug, Clone, PartialEq)]
+pub struct AlgoParams {
+    /// Source vertex (BFS / SSSP; ignored by PageRank / WCC).
+    pub source: u32,
+    /// Power iterations (PageRank).
+    pub iterations: usize,
+    /// Damping factor (PageRank).
+    pub damping: f32,
+}
+
+impl Default for AlgoParams {
+    fn default() -> Self {
+        Self { source: 0, iterations: 20, damping: 0.85 }
+    }
+}
+
+type BuildFn = dyn Fn(&AlgoParams) -> Result<BoxedProgram> + Send + Sync;
+
+/// One registered algorithm: identity plus the factory that turns an
+/// [`AlgoParams`] bag into a runnable program. Partitioning requirements
+/// (`needs_weights`) come from the instantiated [`VertexProgram`]
+/// itself, so the registry cannot disagree with the program.
+pub struct AlgorithmEntry {
+    id: AlgorithmId,
+    build: Box<BuildFn>,
+}
+
+impl AlgorithmEntry {
+    pub fn id(&self) -> &AlgorithmId {
+        &self.id
+    }
+
+    pub fn instantiate(&self, params: &AlgoParams) -> Result<BoxedProgram> {
+        (self.build)(params)
+    }
+}
+
+impl fmt::Debug for AlgorithmEntry {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("AlgorithmEntry")
+            .field("id", &self.id)
+            .finish_non_exhaustive()
+    }
+}
+
+/// Lookup table from [`AlgorithmId`] to factory. Immutable once a
+/// `Session` is built; construct with [`with_builtins`] and extend via
+/// [`register`] before handing it to the session builder.
+///
+/// [`with_builtins`]: AlgorithmRegistry::with_builtins
+/// [`register`]: AlgorithmRegistry::register
+#[derive(Debug)]
+pub struct AlgorithmRegistry {
+    entries: BTreeMap<AlgorithmId, Arc<AlgorithmEntry>>,
+}
+
+impl AlgorithmRegistry {
+    /// A registry with no entries (library users composing their own set).
+    pub fn empty() -> Self {
+        Self { entries: BTreeMap::new() }
+    }
+
+    /// The paper's four algorithms (§III.D).
+    pub fn with_builtins() -> Self {
+        let mut r = Self::empty();
+        r.register("bfs", |p| Ok(Box::new(Bfs::new(p.source))));
+        r.register("sssp", |p| Ok(Box::new(Sssp::new(p.source))));
+        r.register("pagerank", |p| {
+            anyhow::ensure!(
+                (0.0..1.0).contains(&p.damping),
+                "pagerank damping must be in [0, 1), got {}",
+                p.damping
+            );
+            anyhow::ensure!(p.iterations >= 1, "pagerank needs at least one iteration");
+            Ok(Box::new(PageRank::new(p.damping, p.iterations)))
+        });
+        r.register("wcc", |_| Ok(Box::new(Wcc)));
+        r
+    }
+
+    /// Register (or replace) an algorithm: `build` validates the
+    /// parameter bag and constructs the program.
+    pub fn register(
+        &mut self,
+        id: impl Into<AlgorithmId>,
+        build: impl Fn(&AlgoParams) -> Result<BoxedProgram> + Send + Sync + 'static,
+    ) -> &mut Self {
+        let id = id.into();
+        self.entries
+            .insert(id.clone(), Arc::new(AlgorithmEntry { id, build: Box::new(build) }));
+        self
+    }
+
+    pub fn get(&self, id: &AlgorithmId) -> Option<&Arc<AlgorithmEntry>> {
+        self.entries.get(id)
+    }
+
+    /// Like [`get`](Self::get), but the error names every known id.
+    pub fn resolve(&self, id: &AlgorithmId) -> Result<&Arc<AlgorithmEntry>> {
+        self.get(id).ok_or_else(|| {
+            let known: Vec<&str> = self.entries.keys().map(AlgorithmId::as_str).collect();
+            anyhow::anyhow!("unknown algorithm {:?} (registered: {})", id.as_str(), known.join(" "))
+        })
+    }
+
+    /// Registered ids, sorted.
+    pub fn ids(&self) -> impl Iterator<Item = &AlgorithmId> {
+        self.entries.keys()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+impl Default for AlgorithmRegistry {
+    fn default() -> Self {
+        Self::with_builtins()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtins_cover_the_paper_algorithms() {
+        let r = AlgorithmRegistry::with_builtins();
+        let ids: Vec<&str> = r.ids().map(AlgorithmId::as_str).collect();
+        assert_eq!(ids, vec!["bfs", "pagerank", "sssp", "wcc"]);
+        let p = AlgoParams::default();
+        let prog = |id: &str| r.get(&id.into()).unwrap().instantiate(&p).unwrap();
+        assert!(prog("sssp").needs_weights());
+        assert!(!prog("bfs").needs_weights());
+    }
+
+    #[test]
+    fn ids_are_case_insensitive() {
+        let r = AlgorithmRegistry::with_builtins();
+        assert!(r.get(&AlgorithmId::new("PageRank")).is_some());
+        assert_eq!(AlgorithmId::new(" BFS "), AlgorithmId::new("bfs"));
+    }
+
+    #[test]
+    fn resolve_error_names_known_ids() {
+        let r = AlgorithmRegistry::with_builtins();
+        let err = r.resolve(&"sswp".into()).unwrap_err().to_string();
+        assert!(err.contains("sswp") && err.contains("sssp"), "{err}");
+    }
+
+    #[test]
+    fn factories_thread_params_through() {
+        let r = AlgorithmRegistry::with_builtins();
+        let p = AlgoParams { source: 7, ..AlgoParams::default() };
+        let prog = r.resolve(&"bfs".into()).unwrap().instantiate(&p).unwrap();
+        let init = prog.init(10);
+        assert_eq!(init[7], 0.0);
+    }
+
+    #[test]
+    fn factories_validate_params() {
+        let r = AlgorithmRegistry::with_builtins();
+        let bad = AlgoParams { damping: 1.5, ..AlgoParams::default() };
+        assert!(r.resolve(&"pagerank".into()).unwrap().instantiate(&bad).is_err());
+        let bad = AlgoParams { iterations: 0, ..AlgoParams::default() };
+        assert!(r.resolve(&"pagerank".into()).unwrap().instantiate(&bad).is_err());
+    }
+
+    #[test]
+    fn custom_registration_is_one_call() {
+        let mut r = AlgorithmRegistry::with_builtins();
+        r.register("bfs-from-42", |_| Ok(Box::new(Bfs::new(42))));
+        assert_eq!(r.len(), 5);
+        let prog = r
+            .resolve(&"bfs-from-42".into())
+            .unwrap()
+            .instantiate(&AlgoParams::default())
+            .unwrap();
+        assert_eq!(prog.init(64)[42], 0.0);
+    }
+}

@@ -1,7 +1,20 @@
-//! Lightweight service metrics: counters + latency summary, lock-free on
-//! the hot path (atomics), snapshot on demand.
+//! Lightweight service metrics: global counters + latency summary stay
+//! lock-free on the hot path (atomics); per-algorithm counters and the
+//! in-flight gauge live behind a short-critical-section mutex, keyed by
+//! the algorithm id from the job's `JobSpec`.
 
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Per-algorithm counters plus the queue-depth gauge.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct AlgoStats {
+    pub completed: u64,
+    pub failed: u64,
+    /// Jobs submitted but not yet finished (queued or running).
+    pub queue_depth: u64,
+}
 
 #[derive(Debug, Default)]
 pub struct Metrics {
@@ -14,6 +27,7 @@ pub struct Metrics {
     max_latency_us: AtomicU64,
     /// Total subgraph ops processed across jobs.
     pub subgraph_ops: AtomicU64,
+    per_algo: Mutex<BTreeMap<String, AlgoStats>>,
 }
 
 #[derive(Debug, Clone, PartialEq)]
@@ -24,14 +38,43 @@ pub struct MetricsSnapshot {
     pub mean_latency_us: f64,
     pub max_latency_us: u64,
     pub subgraph_ops: u64,
+    /// Keyed by algorithm id, sorted.
+    pub per_algorithm: BTreeMap<String, AlgoStats>,
 }
 
 impl Metrics {
-    pub fn record_completion(&self, latency_us: u64, ops: u64) {
+    pub fn record_submitted(&self, algo: &str) {
+        self.jobs_submitted.fetch_add(1, Ordering::Relaxed);
+        let mut m = self.per_algo.lock().unwrap();
+        m.entry(algo.to_string()).or_default().queue_depth += 1;
+    }
+
+    pub fn record_completion(&self, algo: &str, latency_us: u64, ops: u64) {
         self.jobs_completed.fetch_add(1, Ordering::Relaxed);
         self.total_latency_us.fetch_add(latency_us, Ordering::Relaxed);
         self.max_latency_us.fetch_max(latency_us, Ordering::Relaxed);
         self.subgraph_ops.fetch_add(ops, Ordering::Relaxed);
+        let mut m = self.per_algo.lock().unwrap();
+        let e = m.entry(algo.to_string()).or_default();
+        e.completed += 1;
+        e.queue_depth = e.queue_depth.saturating_sub(1);
+    }
+
+    pub fn record_failure(&self, algo: &str) {
+        self.jobs_failed.fetch_add(1, Ordering::Relaxed);
+        let mut m = self.per_algo.lock().unwrap();
+        let e = m.entry(algo.to_string()).or_default();
+        e.failed += 1;
+        e.queue_depth = e.queue_depth.saturating_sub(1);
+    }
+
+    /// Current in-flight gauge for one algorithm.
+    pub fn queue_depth(&self, algo: &str) -> u64 {
+        self.per_algo
+            .lock()
+            .unwrap()
+            .get(algo)
+            .map_or(0, |e| e.queue_depth)
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
@@ -44,6 +87,7 @@ impl Metrics {
             mean_latency_us: if completed > 0 { total as f64 / completed as f64 } else { 0.0 },
             max_latency_us: self.max_latency_us.load(Ordering::Relaxed),
             subgraph_ops: self.subgraph_ops.load(Ordering::Relaxed),
+            per_algorithm: self.per_algo.lock().unwrap().clone(),
         }
     }
 }
@@ -55,9 +99,11 @@ mod tests {
     #[test]
     fn records_and_snapshots() {
         let m = Metrics::default();
-        m.jobs_submitted.fetch_add(3, Ordering::Relaxed);
-        m.record_completion(100, 10);
-        m.record_completion(300, 20);
+        m.record_submitted("bfs");
+        m.record_submitted("bfs");
+        m.record_submitted("wcc");
+        m.record_completion("bfs", 100, 10);
+        m.record_completion("wcc", 300, 20);
         let s = m.snapshot();
         assert_eq!(s.jobs_submitted, 3);
         assert_eq!(s.jobs_completed, 2);
@@ -67,8 +113,32 @@ mod tests {
     }
 
     #[test]
+    fn per_algorithm_counters_and_gauge() {
+        let m = Metrics::default();
+        m.record_submitted("bfs");
+        m.record_submitted("bfs");
+        m.record_submitted("sssp");
+        assert_eq!(m.queue_depth("bfs"), 2);
+        assert_eq!(m.queue_depth("sssp"), 1);
+        m.record_completion("bfs", 50, 5);
+        m.record_failure("sssp");
+        let s = m.snapshot();
+        assert_eq!(s.per_algorithm["bfs"], AlgoStats { completed: 1, failed: 0, queue_depth: 1 });
+        assert_eq!(s.per_algorithm["sssp"], AlgoStats { completed: 0, failed: 1, queue_depth: 0 });
+        assert_eq!(m.queue_depth("pagerank"), 0);
+    }
+
+    #[test]
+    fn gauge_never_underflows() {
+        let m = Metrics::default();
+        m.record_completion("bfs", 10, 1); // completion without a submit
+        assert_eq!(m.queue_depth("bfs"), 0);
+    }
+
+    #[test]
     fn empty_snapshot_no_nan() {
         let s = Metrics::default().snapshot();
         assert_eq!(s.mean_latency_us, 0.0);
+        assert!(s.per_algorithm.is_empty());
     }
 }

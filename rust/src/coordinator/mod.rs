@@ -1,10 +1,11 @@
-//! Async serving layer: a tokio-based leader that accepts simulation /
-//! graph-processing jobs, runs them on worker tasks, and exposes metrics.
-//! This is the deployment shell around the accelerator — the CLI `serve`
-//! command and the `serving_loop` example drive it.
+//! Serving layer: a leader/worker queue that accepts graph-processing
+//! jobs, runs them through a shared [`Session`](crate::session::Session)
+//! on worker threads, and exposes metrics. This is the deployment shell
+//! around the accelerator — the CLI `serve` command and the
+//! `serving_loop` example drive it.
 
 pub mod metrics;
 pub mod service;
 
-pub use metrics::Metrics;
-pub use service::{Job, JobResult, Service, ServiceConfig};
+pub use metrics::{AlgoStats, Metrics, MetricsSnapshot};
+pub use service::{Job, JobResult, Pending, Service, ServiceConfig};

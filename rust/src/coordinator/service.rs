@@ -1,27 +1,29 @@
 //! The serving loop: a leader owns a job queue; worker threads pull
-//! jobs, run the accelerator (preprocessing cached per dataset/config),
-//! and reply over per-job channels. Python is never on this path —
-//! numeric edge-compute goes through the native mirror or the AOT PJRT
-//! artifact, both pure rust at runtime.
+//! [`JobSpec`]s and run them through a shared [`Session`] — same
+//! registry, same backend, same preprocessed-artifact cache as the CLI
+//! and DSE paths. Python is never on this path — numeric edge-compute
+//! goes through the native mirror or the AOT PJRT artifact, both pure
+//! rust at runtime.
 //!
 //! Implemented on std threads + mpsc (this image vendors no async
 //! runtime offline; the architecture is the same leader/worker queue).
 
-use std::collections::HashMap;
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::accel::{Accelerator, ArchConfig, Preprocessed, SimReport};
-use crate::algo::{Bfs, PageRank, Sssp, Wcc};
+use crate::accel::{ArchConfig, SimReport};
 use crate::cost::CostParams;
 use crate::graph::datasets::Dataset;
-use crate::sched::executor::NativeExecutor;
+use crate::sched::StepExecutor;
+use crate::session::{AlgorithmId, Backend, JobSpec, Session};
 
 use super::metrics::Metrics;
 
-/// A graph-processing request.
+/// Legacy closed job enum, kept as a shim for pre-`JobSpec` callers.
+/// New code should construct [`JobSpec`] directly (or register custom
+/// algorithms, which this enum cannot name).
 #[derive(Debug, Clone)]
 pub enum Job {
     Bfs { dataset: Dataset, scale: f64, source: u32 },
@@ -30,27 +32,20 @@ pub enum Job {
     Wcc { dataset: Dataset, scale: f64 },
 }
 
-impl Job {
-    pub fn dataset(&self) -> Dataset {
-        match self {
-            Job::Bfs { dataset, .. }
-            | Job::Sssp { dataset, .. }
-            | Job::PageRank { dataset, .. }
-            | Job::Wcc { dataset, .. } => *dataset,
+impl From<Job> for JobSpec {
+    fn from(job: Job) -> JobSpec {
+        match job {
+            Job::Bfs { dataset, scale, source } => {
+                JobSpec::new(dataset, "bfs").with_scale(scale).with_source(source)
+            }
+            Job::Sssp { dataset, scale, source } => {
+                JobSpec::new(dataset, "sssp").with_scale(scale).with_source(source)
+            }
+            Job::PageRank { dataset, scale, iterations } => JobSpec::new(dataset, "pagerank")
+                .with_scale(scale)
+                .with_iterations(iterations),
+            Job::Wcc { dataset, scale } => JobSpec::new(dataset, "wcc").with_scale(scale),
         }
-    }
-
-    fn scale(&self) -> f64 {
-        match self {
-            Job::Bfs { scale, .. }
-            | Job::Sssp { scale, .. }
-            | Job::PageRank { scale, .. }
-            | Job::Wcc { scale, .. } => *scale,
-        }
-    }
-
-    fn weighted(&self) -> bool {
-        matches!(self, Job::Sssp { .. })
     }
 }
 
@@ -65,22 +60,48 @@ pub struct JobResult {
 pub struct ServiceConfig {
     pub arch: ArchConfig,
     pub params: CostParams,
+    /// Honored by every worker — a PJRT-configured service fails loudly
+    /// at spawn when artifacts are missing, never silently runs native.
+    pub backend: Backend,
     pub workers: usize,
 }
 
 impl Default for ServiceConfig {
     fn default() -> Self {
-        Self { arch: ArchConfig::default(), params: CostParams::default(), workers: 2 }
+        Self {
+            arch: ArchConfig::default(),
+            params: CostParams::default(),
+            backend: Backend::Native,
+            workers: 2,
+        }
     }
 }
 
-type PreCache = Arc<Mutex<HashMap<(Dataset, u64, bool), Arc<Preprocessed>>>>;
 type Reply = mpsc::Sender<Result<JobResult>>;
+
+/// Balances `record_submitted` even if the worker panics mid-job: unless
+/// disarmed by a normal completion/failure record, dropping the guard
+/// records a failure, so the per-algorithm queue-depth gauge and the
+/// `submitted == completed + failed` invariant survive unwinding.
+struct CompletionGuard<'m> {
+    metrics: &'m Metrics,
+    algo: AlgorithmId,
+    armed: bool,
+}
+
+impl Drop for CompletionGuard<'_> {
+    fn drop(&mut self) {
+        if self.armed {
+            self.metrics.record_failure(self.algo.as_str());
+        }
+    }
+}
 
 /// Handle to a running service. Dropping it shuts the workers down.
 pub struct Service {
-    tx: Option<mpsc::Sender<(Job, Reply)>>,
+    tx: Option<mpsc::Sender<(JobSpec, Reply)>>,
     workers: Vec<std::thread::JoinHandle<()>>,
+    session: Arc<Session>,
     pub metrics: Arc<Metrics>,
 }
 
@@ -99,93 +120,110 @@ impl Pending {
 }
 
 impl Service {
-    /// Spawn the leader queue + worker threads.
-    pub fn spawn(config: ServiceConfig) -> Self {
-        let (tx, rx) = mpsc::channel::<(Job, Reply)>();
+    /// Build a [`Session`] from `config` and spawn the leader queue +
+    /// worker threads. Fails eagerly on invalid arch or an unavailable
+    /// backend (e.g. PJRT without artifacts).
+    pub fn spawn(config: ServiceConfig) -> Result<Self> {
+        let session = Session::builder()
+            .arch(config.arch)
+            .cost_params(config.params)
+            .backend(config.backend)
+            .build()?;
+        Ok(Self::with_session(Arc::new(session), config.workers))
+    }
+
+    /// Spawn workers over an existing session (sharing its registry and
+    /// artifact store with other callers — CLI, DSE, other services).
+    pub fn with_session(session: Arc<Session>, workers: usize) -> Self {
+        let (tx, rx) = mpsc::channel::<(JobSpec, Reply)>();
         let rx = Arc::new(Mutex::new(rx));
         let metrics = Arc::new(Metrics::default());
-        let cache: PreCache = Arc::new(Mutex::new(HashMap::new()));
-        let workers = (0..config.workers.max(1))
+        let handles = (0..workers.max(1))
             .map(|_| {
                 let rx = Arc::clone(&rx);
                 let metrics = Arc::clone(&metrics);
-                let cache = Arc::clone(&cache);
-                let config = config.clone();
-                std::thread::spawn(move || loop {
-                    let item = { rx.lock().unwrap().recv() };
-                    let Ok((job, reply)) = item else { break };
-                    let started = Instant::now();
-                    let result = Self::run_job(&config, &cache, job).map(|report| JobResult {
-                        wall_time_us: started.elapsed().as_micros() as u64,
-                        report,
-                    });
-                    match &result {
-                        Ok(r) => {
-                            metrics.record_completion(r.wall_time_us, r.report.counts.mvm_ops)
+                let session = Arc::clone(&session);
+                std::thread::spawn(move || {
+                    // One executor per worker, built lazily on the first
+                    // job: PJRT compiles each artifact once and reuses it
+                    // across the worker's lifetime. A construction error
+                    // fails the job (loudly) — there is no fallback.
+                    let mut exec: Option<Box<dyn StepExecutor>> = None;
+                    loop {
+                        let item = { rx.lock().unwrap().recv() };
+                        let Ok((spec, reply)) = item else { break };
+                        let mut guard = CompletionGuard {
+                            metrics: &metrics,
+                            algo: spec.algorithm.clone(),
+                            armed: true,
+                        };
+                        let started = Instant::now();
+                        let result =
+                            Self::run_job(&session, &mut exec, &spec).map(|report| JobResult {
+                                wall_time_us: started.elapsed().as_micros() as u64,
+                                report,
+                            });
+                        guard.armed = false;
+                        match &result {
+                            Ok(r) => metrics.record_completion(
+                                guard.algo.as_str(),
+                                r.wall_time_us,
+                                r.report.counts.mvm_ops,
+                            ),
+                            Err(_) => metrics.record_failure(guard.algo.as_str()),
                         }
-                        Err(_) => {
-                            metrics
-                                .jobs_failed
-                                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                        }
+                        let _ = reply.send(result);
                     }
-                    let _ = reply.send(result);
                 })
             })
             .collect();
-        Self { tx: Some(tx), workers, metrics }
+        Self { tx: Some(tx), workers: handles, session, metrics }
     }
 
-    fn run_job(config: &ServiceConfig, cache: &PreCache, job: Job) -> Result<SimReport> {
-        let key = (job.dataset(), (job.scale() * 1e6) as u64, job.weighted());
-        // Fast path: cached preprocessing (Alg. 1 runs once per dataset).
-        let cached = cache.lock().unwrap().get(&key).cloned();
-        let pre = match cached {
-            Some(p) => p,
-            None => {
-                let g = if job.weighted() {
-                    job.dataset().load_weighted(job.scale())?
-                } else {
-                    job.dataset().load_scaled(job.scale())?
-                };
-                let acc = Accelerator::new(config.arch.clone(), config.params.clone());
-                let p = Arc::new(acc.preprocess(&g, job.weighted())?);
-                cache
-                    .lock()
-                    .unwrap()
-                    .entry(key)
-                    .or_insert_with(|| Arc::clone(&p));
-                p
-            }
-        };
-        let acc = Accelerator::new(config.arch.clone(), config.params.clone());
-        let mut exec = NativeExecutor;
-        match job {
-            Job::Bfs { source, .. } => acc.run(&pre, &Bfs::new(source), &mut exec),
-            Job::Sssp { source, .. } => acc.run(&pre, &Sssp::new(source), &mut exec),
-            Job::PageRank { iterations, .. } => {
-                acc.run(&pre, &PageRank::new(0.85, iterations), &mut exec)
-            }
-            Job::Wcc { .. } => acc.run(&pre, &Wcc, &mut exec),
+    fn run_job(
+        session: &Session,
+        exec: &mut Option<Box<dyn StepExecutor>>,
+        spec: &JobSpec,
+    ) -> Result<crate::accel::SimReport> {
+        if exec.is_none() {
+            *exec = Some(session.executor()?);
         }
+        session.run_with(spec, exec.as_mut().unwrap().as_mut())
     }
 
-    /// Submit a job; returns a handle resolving when a worker completes it.
-    pub fn submit(&self, job: Job) -> Result<Pending> {
-        self.metrics
-            .jobs_submitted
-            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    /// The shared session (inspect the registry, artifact-cache stats…).
+    pub fn session(&self) -> &Arc<Session> {
+        &self.session
+    }
+
+    /// Submit a job; returns a handle resolving when a worker completes
+    /// it. Accepts a [`JobSpec`] or the legacy [`Job`] enum.
+    pub fn submit(&self, job: impl Into<JobSpec>) -> Result<Pending> {
+        let spec: JobSpec = job.into();
+        self.metrics.record_submitted(spec.algorithm.as_str());
         let (tx, rx) = mpsc::channel();
-        self.tx
-            .as_ref()
-            .expect("service running")
-            .send((job, tx))
-            .map_err(|_| anyhow::anyhow!("service stopped"))?;
+        let sender = self.tx.as_ref().expect("service running");
+        if let Err(mpsc::SendError((spec, _))) = sender.send((spec, tx)) {
+            // Balance the submit record so the gauges stay conserved.
+            self.metrics.record_failure(spec.algorithm.as_str());
+            anyhow::bail!("service stopped");
+        }
         Ok(Pending { rx })
     }
 
+    /// Submit a batch of jobs in order; pending handles come back in the
+    /// same order. The batch shares preprocessing through the session's
+    /// artifact store — one Alg.-1 run per distinct dataset key.
+    pub fn submit_batch<I>(&self, jobs: I) -> Result<Vec<Pending>>
+    where
+        I: IntoIterator,
+        I::Item: Into<JobSpec>,
+    {
+        jobs.into_iter().map(|j| self.submit(j)).collect()
+    }
+
     /// Submit and wait.
-    pub fn submit_blocking(&self, job: Job) -> Result<JobResult> {
+    pub fn submit_blocking(&self, job: impl Into<JobSpec>) -> Result<JobResult> {
         self.submit(job)?.wait()
     }
 }
@@ -204,54 +242,75 @@ mod tests {
     use super::*;
 
     fn tiny_service(workers: usize) -> Service {
-        Service::spawn(ServiceConfig { workers, ..ServiceConfig::default() })
+        Service::spawn(ServiceConfig { workers, ..ServiceConfig::default() }).unwrap()
     }
 
     #[test]
     fn serves_bfs_jobs() {
         let svc = tiny_service(2);
         let res = svc
-            .submit_blocking(Job::Bfs { dataset: Dataset::Tiny, scale: 1.0, source: 0 })
+            .submit_blocking(JobSpec::new(Dataset::Tiny, "bfs"))
             .unwrap();
         assert_eq!(res.report.algorithm, "bfs");
         assert!(res.report.counts.mvm_ops > 0);
         let snap = svc.metrics.snapshot();
         assert_eq!(snap.jobs_completed, 1);
         assert_eq!(snap.jobs_failed, 0);
+        assert_eq!(snap.per_algorithm["bfs"].completed, 1);
+        assert_eq!(snap.per_algorithm["bfs"].queue_depth, 0);
+    }
+
+    #[test]
+    fn legacy_job_enum_still_submits() {
+        let svc = tiny_service(2);
+        let res = svc
+            .submit_blocking(Job::PageRank { dataset: Dataset::Tiny, scale: 1.0, iterations: 3 })
+            .unwrap();
+        assert_eq!(res.report.algorithm, "pagerank");
+    }
+
+    #[test]
+    fn unknown_algorithm_fails_the_job_not_the_service() {
+        let svc = tiny_service(1);
+        let err = svc
+            .submit_blocking(JobSpec::new(Dataset::Tiny, "nope"))
+            .unwrap_err();
+        assert!(err.to_string().contains("unknown algorithm"), "{err}");
+        // Service keeps serving afterwards.
+        svc.submit_blocking(JobSpec::new(Dataset::Tiny, "wcc")).unwrap();
+        let snap = svc.metrics.snapshot();
+        assert_eq!(snap.jobs_failed, 1);
+        assert_eq!(snap.jobs_completed, 1);
     }
 
     #[test]
     fn concurrent_jobs_share_preprocessing_cache() {
         let svc = tiny_service(4);
-        let pending: Vec<_> = (0..8u32)
-            .map(|i| {
-                svc.submit(Job::Bfs { dataset: Dataset::Tiny, scale: 1.0, source: i })
-                    .unwrap()
-            })
-            .collect();
+        let pending = svc
+            .submit_batch((0..8u32).map(|i| JobSpec::new(Dataset::Tiny, "bfs").with_source(i)))
+            .unwrap();
         for p in pending {
             p.wait().unwrap();
         }
         assert_eq!(svc.metrics.snapshot().jobs_completed, 8);
+        // Exactly one Alg.-1 run across all 4 workers.
+        assert_eq!(svc.session().artifacts().stats().misses, 1);
     }
 
     #[test]
     fn mixed_algorithms() {
         let svc = tiny_service(2);
         let d = Dataset::Tiny;
-        svc.submit_blocking(Job::PageRank { dataset: d, scale: 1.0, iterations: 3 })
-            .unwrap();
-        svc.submit_blocking(Job::Wcc { dataset: d, scale: 1.0 }).unwrap();
-        svc.submit_blocking(Job::Sssp { dataset: d, scale: 1.0, source: 1 })
-            .unwrap();
+        svc.submit_blocking(JobSpec::new(d, "pagerank").with_iterations(3)).unwrap();
+        svc.submit_blocking(JobSpec::new(d, "wcc")).unwrap();
+        svc.submit_blocking(JobSpec::new(d, "sssp").with_source(1)).unwrap();
         assert_eq!(svc.metrics.snapshot().jobs_completed, 3);
     }
 
     #[test]
     fn shutdown_joins_workers() {
         let svc = tiny_service(2);
-        svc.submit_blocking(Job::Wcc { dataset: Dataset::Tiny, scale: 1.0 })
-            .unwrap();
+        svc.submit_blocking(JobSpec::new(Dataset::Tiny, "wcc")).unwrap();
         drop(svc); // must not hang
     }
 }

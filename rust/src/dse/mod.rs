@@ -5,5 +5,7 @@
 pub mod optimizer;
 pub mod sweep;
 
-pub use optimizer::find_best_static_split;
-pub use sweep::{crossbar_sweep, policy_sweep, static_engine_sweep, SweepPoint};
+pub use optimizer::{candidate_splits, find_best_static_split, find_best_static_split_with};
+pub use sweep::{
+    crossbar_sweep, policy_sweep, static_engine_sweep, static_engine_sweep_with, SweepPoint,
+};

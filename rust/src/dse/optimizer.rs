@@ -4,15 +4,46 @@
 
 use anyhow::Result;
 
-use crate::accel::ArchConfig;
+use crate::accel::{ArchConfig, Preprocessed};
 use crate::algo::traits::VertexProgram;
 use crate::cost::CostParams;
 use crate::graph::Coo;
 
-use super::sweep::{static_engine_sweep, SweepPoint};
+use super::sweep::{static_engine_sweep, static_engine_sweep_with, SweepPoint};
+
+/// Default candidate splits: every power-of-two below T, the paper's
+/// N = C² heuristic (at least C² static engines so every single-edge
+/// pattern is static, §IV.B), all-dynamic, and T−1.
+pub fn candidate_splits(base: &ArchConfig) -> Vec<u32> {
+    let t = base.total_engines;
+    let mut v = vec![0u32];
+    let mut n = 2;
+    while n < t {
+        v.push(n);
+        n *= 2;
+    }
+    let c2 = (base.crossbar_size * base.crossbar_size) as u32;
+    if c2 < t && !v.contains(&c2) {
+        v.push(c2);
+    }
+    if t >= 1 {
+        v.push(t - 1);
+    }
+    v.sort_unstable();
+    v.dedup();
+    v
+}
+
+fn pick_best(points: &[SweepPoint]) -> u32 {
+    points
+        .iter()
+        .max_by(|a, b| a.speedup.total_cmp(&b.speedup))
+        .map(|p| p.x)
+        .unwrap_or(0)
+}
 
 /// Best static/dynamic split for `program` on `g`. Candidates default to
-/// every power-of-two-ish split plus the paper's N = C² heuristic.
+/// [`candidate_splits`].
 pub fn find_best_static_split(
     g: &Coo,
     base: &ArchConfig,
@@ -20,35 +51,25 @@ pub fn find_best_static_split(
     program: &dyn VertexProgram,
     candidates: Option<&[u32]>,
 ) -> Result<(u32, Vec<SweepPoint>)> {
-    let t = base.total_engines;
-    let default: Vec<u32> = {
-        let mut v = vec![0u32];
-        let mut n = 2;
-        while n < t {
-            v.push(n);
-            n *= 2;
-        }
-        // The paper's heuristic: at least C² static engines so every
-        // single-edge pattern is static (§IV.B).
-        let c2 = (base.crossbar_size * base.crossbar_size) as u32;
-        if c2 < t && !v.contains(&c2) {
-            v.push(c2);
-        }
-        if t >= 1 {
-            v.push(t - 1);
-        }
-        v.sort_unstable();
-        v.dedup();
-        v
-    };
+    let default = candidate_splits(base);
     let ns = candidates.unwrap_or(&default);
     let points = static_engine_sweep(g, base, params, program, ns)?;
-    let best = points
-        .iter()
-        .max_by(|a, b| a.speedup.total_cmp(&b.speedup))
-        .map(|p| p.x)
-        .unwrap_or(0);
-    Ok((best, points))
+    Ok((pick_best(&points), points))
+}
+
+/// Like [`find_best_static_split`] but over an existing Alg.-1 output
+/// (no graph load or re-partition; `pre.ct` is scratch).
+pub fn find_best_static_split_with(
+    pre: &mut Preprocessed,
+    base: &ArchConfig,
+    params: &CostParams,
+    program: &dyn VertexProgram,
+    candidates: Option<&[u32]>,
+) -> Result<(u32, Vec<SweepPoint>)> {
+    let default = candidate_splits(base);
+    let ns = candidates.unwrap_or(&default);
+    let points = static_engine_sweep_with(pre, base, params, program, ns)?;
+    Ok((pick_best(&points), points))
 }
 
 #[cfg(test)]

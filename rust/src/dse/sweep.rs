@@ -3,7 +3,7 @@
 
 use anyhow::Result;
 
-use crate::accel::{Accelerator, ArchConfig, PolicyKind};
+use crate::accel::{Accelerator, ArchConfig, PolicyKind, Preprocessed};
 use crate::algo::traits::VertexProgram;
 use crate::cost::CostParams;
 use crate::graph::Coo;
@@ -31,6 +31,25 @@ pub fn static_engine_sweep(
     program: &dyn VertexProgram,
     ns: &[u32],
 ) -> Result<Vec<SweepPoint>> {
+    // Partition, ranking and the subgraph table are independent of the
+    // static/dynamic split: run Alg. 1 once and rebuild only the
+    // N-dependent config table per candidate.
+    let mut pre = Accelerator::new(base.clone(), params.clone())
+        .preprocess(g, program.needs_weights())?;
+    static_engine_sweep_with(&mut pre, base, params, program, ns)
+}
+
+/// Like [`static_engine_sweep`] but over an existing Alg.-1 output
+/// (e.g. a scratch copy of a session's cached artifact — no graph
+/// re-load or re-partition). `pre.ct` is rebuilt per candidate and left
+/// at the last swept configuration.
+pub fn static_engine_sweep_with(
+    pre: &mut Preprocessed,
+    base: &ArchConfig,
+    params: &CostParams,
+    program: &dyn VertexProgram,
+    ns: &[u32],
+) -> Result<Vec<SweepPoint>> {
     let mut points = Vec::with_capacity(ns.len());
     let mut baseline_ns = None;
     // Always measure N = 0 first for normalization.
@@ -43,8 +62,10 @@ pub fn static_engine_sweep(
     for &n in &order {
         let mut cfg = base.clone();
         cfg.static_engines = n;
+        cfg.validate()?;
         let acc = Accelerator::new(cfg, params.clone());
-        let report = acc.simulate(g, program, &mut NativeExecutor)?;
+        pre.ct = acc.build_config_table(&pre.ranking);
+        let report = acc.run(pre, program, &mut NativeExecutor)?;
         if baseline_ns.is_none() {
             baseline_ns = Some(n);
             base_time = report.exec_time_ns;

@@ -32,10 +32,13 @@ pub mod pattern;
 pub mod report;
 pub mod runtime;
 pub mod sched;
+pub mod session;
 pub mod util;
 
 pub use accel::config::ArchConfig;
 pub use accel::simulator::{Accelerator, SimReport};
+pub use algo::registry::{AlgoParams, AlgorithmId, AlgorithmRegistry};
 pub use graph::coo::Coo;
 pub use graph::csr::Csr;
 pub use pattern::pattern::Pattern;
+pub use session::{Backend, JobSpec, Session, SessionBuilder};

@@ -4,18 +4,23 @@
 //! `run` (Alg. 2 on a dataset/algorithm), `figure` (regenerate any
 //! table/figure of the evaluation), `dse` (best static split),
 //! `datasets` (Table 2), and `serve` (the leader/worker serving loop).
+//!
+//! Every pipeline-building command is a thin adapter over
+//! [`Session`](repro::session::Session): one facade wires architecture,
+//! cost model, backend, algorithm registry and the shared artifact cache
+//! for `run`, `serve` and `dse` alike.
+
+use std::sync::Arc;
 
 use anyhow::Result;
 
-use repro::accel::{Accelerator, ArchConfig, PolicyKind};
-use repro::algo::{Bfs, PageRank, Sssp, Wcc};
-use repro::coordinator::{Job, Service, ServiceConfig};
-use repro::cost::CostParams;
+use repro::accel::{ArchConfig, PolicyKind};
+use repro::algo::reference;
+use repro::coordinator::Service;
 use repro::graph::datasets::{Dataset, ALL_DATASETS};
-use repro::graph::GraphStats;
+use repro::graph::{Csr, GraphStats};
 use repro::report::{figures, Table};
-use repro::sched::executor::NativeExecutor;
-use repro::sched::StepExecutor;
+use repro::session::{Backend, JobSpec, Session};
 use repro::util::cli::Args;
 use repro::util::fmt;
 
@@ -24,12 +29,21 @@ repro — pattern-aware ReRAM graph accelerator (CS.AR 2025 reproduction)
 
 USAGE:
   repro preprocess <DATASET> [--scale F] [arch options]
-  repro run <DATASET> [--algo bfs|sssp|pagerank|wcc] [--source N]
-            [--scale F] [--backend native|pjrt] [--validate] [arch options]
+  repro run <DATASET> [--algo NAME] [--source N] [--iterations K]
+            [--damping D] [--scale F] [--backend native|pjrt]
+            [--validate] [arch options]
   repro figure <fig1|fig5|fig6|fig7|table1|table4|lifetime|all> [--scale F]
-  repro dse <DATASET> [--scale F] [arch options]
+  repro dse <DATASET> [--algo NAME] [--scale F] [arch options]
   repro datasets
-  repro serve [--jobs N] [--workers N]
+  repro serve [--jobs N] [--workers N] [--backend native|pjrt]
+              [--dataset DATASET] [--scale F] [arch options]
+
+Algorithms are session-registry entries (bfs sssp pagerank wcc built in;
+library users register more — no CLI change needed). `serve` submits one
+mixed batch cycling through every registered algorithm and prints
+per-algorithm completion counters and queue depths on shutdown. Both
+`run` and `serve` honor --backend; a PJRT selection without artifacts
+fails loudly instead of falling back to native.
 
 DATASET: WG AZ SD EP PG WV TN (Table 2 presets; TN = tiny test graph)
 
@@ -55,6 +69,31 @@ fn arch_from(args: &Args) -> Result<ArchConfig> {
     };
     cfg.validate()?;
     Ok(cfg)
+}
+
+/// The one place the CLI constructs the pipeline: arch + backend in, a
+/// validated `Session` out.
+fn session_from(args: &Args) -> Result<Session> {
+    let backend_s: String = args.get_or("backend", "native".to_string())?;
+    Session::builder()
+        .arch(arch_from(args)?)
+        .backend(Backend::parse(&backend_s)?)
+        .build()
+}
+
+fn spec_from(args: &Args, dataset: Dataset) -> Result<JobSpec> {
+    let algo: String = args.get_or("algo", "bfs".to_string())?;
+    let mut spec = JobSpec::new(dataset, algo.as_str()).with_scale(scale_for(dataset, args)?);
+    if let Some(source) = args.get_parsed::<u32>("source")? {
+        spec = spec.with_source(source);
+    }
+    if let Some(iters) = args.get_parsed::<usize>("iterations")? {
+        spec = spec.with_iterations(iters);
+    }
+    if let Some(damping) = args.get_parsed::<f32>("damping")? {
+        spec = spec.with_damping(damping);
+    }
+    Ok(spec)
 }
 
 fn parse_dataset(s: &str) -> Result<Dataset> {
@@ -99,9 +138,10 @@ fn dataset_arg(args: &Args) -> Result<Dataset> {
 
 fn cmd_preprocess(args: &Args) -> Result<()> {
     let d = dataset_arg(args)?;
-    let g = d.load_scaled(scale_for(d, args)?)?;
-    let acc = Accelerator::new(arch_from(args)?, CostParams::default());
-    let pre = acc.preprocess(&g, false)?;
+    let session = session_from(args)?;
+    let spec = JobSpec::new(d, "bfs").with_scale(scale_for(d, args)?);
+    let g = session.load_graph(&spec)?;
+    let pre = session.preprocess_on(&spec, &g)?;
     let s = GraphStats::of(&g);
     println!(
         "{}: {} vertices, {} edges, avg degree {:.1}, sparsity {:.3}%",
@@ -116,7 +156,7 @@ fn cmd_preprocess(args: &Args) -> Result<()> {
         fmt::count(pre.part.num_subgraphs() as u64),
         pre.ranking.num_patterns(),
         pre.ranking.coverage(16) * 100.0,
-        acc.config.static_capacity(),
+        session.arch().static_capacity(),
         pre.static_coverage() * 100.0
     );
     Ok(())
@@ -124,37 +164,18 @@ fn cmd_preprocess(args: &Args) -> Result<()> {
 
 fn cmd_run(args: &Args) -> Result<()> {
     let d = dataset_arg(args)?;
-    let algo: String = args.get_or("algo", "bfs".to_string())?;
-    let source: u32 = args.get_or("source", 0u32)?;
-    let backend: String = args.get_or("backend", "native".to_string())?;
-    let sc = scale_for(d, args)?;
-    let weighted = algo == "sssp";
-    let g = if weighted { d.load_weighted(sc)? } else { d.load_scaled(sc)? };
-    let acc = Accelerator::new(arch_from(args)?, CostParams::default());
-
-    let mut native = NativeExecutor;
-    let mut pjrt_holder;
-    let exec: &mut dyn StepExecutor = match backend.as_str() {
-        "native" => &mut native,
-        "pjrt" => {
-            pjrt_holder = repro::runtime::PjrtExecutor::from_default_dir()?;
-            &mut pjrt_holder
-        }
-        other => anyhow::bail!("unknown backend {other:?} (native|pjrt)"),
-    };
-
-    let report = match algo.as_str() {
-        "bfs" => acc.simulate(&g, &Bfs::new(source), exec)?,
-        "sssp" => acc.simulate(&g, &Sssp::new(source), exec)?,
-        "pagerank" => acc.simulate(&g, &PageRank::default(), exec)?,
-        "wcc" => acc.simulate(&g, &Wcc, exec)?,
-        other => anyhow::bail!("unknown algo {other:?} (bfs|sssp|pagerank|wcc)"),
-    };
+    let session = session_from(args)?;
+    let spec = spec_from(args, d)?;
+    // Load once; `run_on` feeds the same graph to preprocessing and
+    // `--validate` reuses it for the reference oracle.
+    let g = session.load_graph(&spec)?;
+    let report = session.run_on(&spec, &g)?;
 
     let mut t = Table::new(format!(
-        "{} on {} ({backend} backend)",
+        "{} on {} ({} backend)",
         report.algorithm,
-        d.spec().name
+        d.spec().name,
+        session.backend().name()
     ))
     .header(["metric", "value"]);
     t.row(["energy", &fmt::energy(report.energy_j())]);
@@ -168,13 +189,16 @@ fn cmd_run(args: &Args) -> Result<()> {
     print!("{}", t.render());
 
     if args.flag("validate") {
-        let csr = repro::graph::Csr::from_coo(&g);
+        let csr = Csr::from_coo(&g);
         let run = report.run.as_ref().unwrap();
-        let want = match algo.as_str() {
-            "bfs" => repro::algo::reference::bfs_levels(&csr, source),
-            "sssp" => repro::algo::reference::sssp_distances(&csr, source),
-            "pagerank" => repro::algo::reference::pagerank(&csr, 0.85, 20),
-            _ => repro::algo::reference::wcc_labels(&csr),
+        let want = match spec.algorithm.as_str() {
+            "bfs" => reference::bfs_levels(&csr, spec.params.source),
+            "sssp" => reference::sssp_distances(&csr, spec.params.source),
+            "pagerank" => {
+                reference::pagerank(&csr, spec.params.damping, spec.params.iterations)
+            }
+            "wcc" => reference::wcc_labels(&csr),
+            other => anyhow::bail!("no CPU reference oracle for algorithm {other:?}"),
         };
         let worst = run
             .values
@@ -222,17 +246,15 @@ fn cmd_figure(args: &Args) -> Result<()> {
 
 fn cmd_dse(args: &Args) -> Result<()> {
     let d = dataset_arg(args)?;
-    let g = d.load_scaled(scale_for(d, args)?)?;
-    let cfg = arch_from(args)?;
-    let (best, points) = repro::dse::find_best_static_split(
-        &g,
-        &cfg,
-        &CostParams::default(),
-        &Bfs::new(0),
-        None,
-    )?;
-    let mut t = Table::new(format!("DSE: static-engine split on {}", d.spec().name))
-        .header(["N static", "speedup vs N=0", "energy", "static hit rate"]);
+    let session = session_from(args)?;
+    let spec = spec_from(args, d)?;
+    let (best, points) = session.dse(&spec, None)?;
+    let mut t = Table::new(format!(
+        "DSE: static-engine split on {} ({})",
+        d.spec().name,
+        spec.algorithm
+    ))
+    .header(["N static", "speedup vs N=0", "energy", "static hit rate"]);
     for p in &points {
         t.row([
             p.x.to_string(),
@@ -242,7 +264,10 @@ fn cmd_dse(args: &Args) -> Result<()> {
         ]);
     }
     print!("{}", t.render());
-    println!("best static split: N = {best} (of T = {})", cfg.total_engines);
+    println!(
+        "best static split: N = {best} (of T = {})",
+        session.arch().total_engines
+    );
     Ok(())
 }
 
@@ -268,17 +293,28 @@ fn cmd_datasets() -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     let jobs: usize = args.get_or("jobs", 16usize)?;
     let workers: usize = args.get_or("workers", 2usize)?;
-    let svc = Service::spawn(ServiceConfig { workers, ..ServiceConfig::default() });
-    let pending: Vec<_> = (0..jobs)
+    let dataset_s: String = args.get_or("dataset", "TN".to_string())?;
+    let d = parse_dataset(&dataset_s)?;
+    let scale = scale_for(d, args)?;
+
+    let session = Arc::new(session_from(args)?);
+    let svc = Service::with_session(Arc::clone(&session), workers);
+
+    // One mixed batch cycling through every registered algorithm.
+    let algos: Vec<_> = session.registry().ids().cloned().collect();
+    let specs: Vec<JobSpec> = (0..jobs)
         .map(|i| {
-            let job = match i % 3 {
-                0 => Job::Bfs { dataset: Dataset::Tiny, scale: 1.0, source: i as u32 },
-                1 => Job::PageRank { dataset: Dataset::Tiny, scale: 1.0, iterations: 5 },
-                _ => Job::Wcc { dataset: Dataset::Tiny, scale: 1.0 },
-            };
-            svc.submit(job)
+            JobSpec {
+                dataset: d,
+                scale,
+                algorithm: algos[i % algos.len()].clone(),
+                params: Default::default(),
+            }
+            .with_source(i as u32)
+            .with_iterations(5)
         })
-        .collect::<Result<_>>()?;
+        .collect();
+    let pending = svc.submit_batch(specs)?;
     for p in pending {
         let r = p.wait()?;
         println!(
@@ -288,13 +324,26 @@ fn cmd_serve(args: &Args) -> Result<()> {
             fmt::count(r.report.counts.mvm_ops)
         );
     }
+
     let s = svc.metrics.snapshot();
+    let cache = session.artifacts().stats();
     println!(
-        "served {} jobs, mean latency {:.0} µs, max {} µs, {} total subgraph ops",
+        "served {} jobs on {} backend, mean latency {:.0} µs, max {} µs, {} total subgraph ops",
         s.jobs_completed,
+        session.backend().name(),
         s.mean_latency_us,
         s.max_latency_us,
         fmt::count(s.subgraph_ops)
     );
+    println!(
+        "artifact cache: {} preprocessing runs, {} hits, {} entries",
+        cache.misses, cache.hits, cache.entries
+    );
+    for (algo, st) in &s.per_algorithm {
+        println!(
+            "  {algo:>9}: {} completed, {} failed, queue depth {}",
+            st.completed, st.failed, st.queue_depth
+        );
+    }
     Ok(())
 }

@@ -33,7 +33,7 @@ pub struct EngineSlot {
 }
 
 /// Static-assignment policy (see module docs).
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
 pub enum StaticAssignment {
     TopK,
     #[default]
@@ -279,7 +279,7 @@ pub struct StEntry {
 }
 
 /// Execution order of the subgraph table (paper §III.C).
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
 pub enum ExecOrder {
     /// Group subgraphs sharing destination vertices (baseline, used for BFS).
     #[default]

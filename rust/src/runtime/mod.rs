@@ -4,10 +4,16 @@
 //!
 //! Python never runs at request time — the artifacts are the only
 //! hand-off between the build-time JAX/Pallas layers and this crate.
+//!
+//! The executor (and its `xla` dependency) is gated behind the `pjrt`
+//! cargo feature; the manifest reader always compiles so a non-PJRT
+//! build can still *diagnose* an artifact directory.
 
+#[cfg(feature = "pjrt")]
 pub mod executor;
 pub mod manifest;
 
+#[cfg(feature = "pjrt")]
 pub use executor::{PjrtExecutor, PjrtRuntime};
 pub use manifest::{Manifest, ManifestEntry};
 

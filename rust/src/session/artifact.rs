@@ -1,0 +1,251 @@
+//! `ArtifactStore` — the shared preprocessed-artifact cache.
+//!
+//! Promoted from the serve loop's ad-hoc `PreCache` so that CLI,
+//! coordinator, and DSE callers all reuse one set of Alg.-1 outputs: the
+//! paper's static engines only avoid crossbar reconfiguration if every
+//! entry point runs against the same preprocessed tables.
+//!
+//! Exactly-once semantics per key: concurrent requesters of the *same*
+//! key block on a per-key slot while the first one preprocesses;
+//! different keys build in parallel.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use crate::accel::{Accelerator, ArchConfig, Preprocessed};
+use crate::graph::datasets::Dataset;
+use crate::pattern::tables::{ExecOrder, StaticAssignment};
+
+/// The architecture parameters an Alg.-1 output depends on: partition
+/// (crossbar size), config table (engine counts, assignment), subgraph
+/// table (execution order). Stored in full — no lossy hashing — so two
+/// sessions sharing one store can never serve each other artifacts
+/// built for a different architecture.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+struct ArchSig {
+    crossbar_size: usize,
+    total_engines: u32,
+    static_engines: u32,
+    crossbars_per_engine: u32,
+    order: ExecOrder,
+    static_assignment: StaticAssignment,
+}
+
+impl ArchSig {
+    fn of(arch: &ArchConfig) -> Self {
+        Self {
+            crossbar_size: arch.crossbar_size,
+            total_engines: arch.total_engines,
+            static_engines: arch.static_engines,
+            crossbars_per_engine: arch.crossbars_per_engine,
+            order: arch.order,
+            static_assignment: arch.static_assignment,
+        }
+    }
+}
+
+/// Cache key: dataset identity, scale (fixed-point, microunits — f64 is
+/// not `Eq`), whether edge weights were kept by partitioning, and the
+/// preprocessing-relevant architecture parameters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ArtifactKey {
+    pub dataset: Dataset,
+    scale_micro: u64,
+    pub weighted: bool,
+    arch: ArchSig,
+}
+
+impl ArtifactKey {
+    pub fn new(dataset: Dataset, scale: f64, weighted: bool, arch: &ArchConfig) -> Self {
+        // .max(1): a denormal-small scale must stay a loadable key.
+        let scale_micro = ((scale * 1e6).round() as u64).max(1);
+        Self { dataset, scale_micro, weighted, arch: ArchSig::of(arch) }
+    }
+
+    pub fn scale(&self) -> f64 {
+        self.scale_micro as f64 * 1e-6
+    }
+}
+
+#[derive(Debug, Default)]
+struct Slot {
+    pre: Mutex<Option<Arc<Preprocessed>>>,
+}
+
+/// Counters for cache behaviour (`misses` == preprocessing runs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ArtifactStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub entries: usize,
+}
+
+/// Concurrent map from [`ArtifactKey`] to preprocessed artifacts.
+#[derive(Debug, Default)]
+pub struct ArtifactStore {
+    slots: Mutex<HashMap<ArtifactKey, Arc<Slot>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl ArtifactStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Return the cached artifact for `key`, or load the dataset and run
+    /// Alg. 1 under `acc` exactly once. A failed build leaves the slot
+    /// empty so the next caller retries.
+    pub fn get_or_preprocess(
+        &self,
+        key: ArtifactKey,
+        acc: &Accelerator,
+    ) -> Result<Arc<Preprocessed>> {
+        self.build(key, acc, None)
+    }
+
+    /// Like [`get_or_preprocess`](Self::get_or_preprocess) but builds
+    /// from a graph the caller already loaded (must be `key`'s graph),
+    /// avoiding a second dataset load on a cache miss.
+    pub fn get_or_preprocess_from(
+        &self,
+        key: ArtifactKey,
+        acc: &Accelerator,
+        graph: &crate::graph::Coo,
+    ) -> Result<Arc<Preprocessed>> {
+        self.build(key, acc, Some(graph))
+    }
+
+    fn build(
+        &self,
+        key: ArtifactKey,
+        acc: &Accelerator,
+        graph: Option<&crate::graph::Coo>,
+    ) -> Result<Arc<Preprocessed>> {
+        let slot = {
+            let mut slots = self.slots.lock().unwrap();
+            Arc::clone(slots.entry(key).or_default())
+        };
+        let mut cell = slot.pre.lock().unwrap();
+        if let Some(p) = cell.as_ref() {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(Arc::clone(p));
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let loaded;
+        let g = match graph {
+            Some(g) => g,
+            None => {
+                loaded = if key.weighted {
+                    key.dataset.load_weighted(key.scale())?
+                } else {
+                    key.dataset.load_scaled(key.scale())?
+                };
+                &loaded
+            }
+        };
+        let p = Arc::new(acc.preprocess(g, key.weighted)?);
+        *cell = Some(Arc::clone(&p));
+        Ok(p)
+    }
+
+    /// Peek without building (does not count as a hit).
+    pub fn get(&self, key: &ArtifactKey) -> Option<Arc<Preprocessed>> {
+        let slot = self.slots.lock().unwrap().get(key).cloned()?;
+        let cell = slot.pre.lock().unwrap();
+        cell.clone()
+    }
+
+    pub fn stats(&self) -> ArtifactStats {
+        let slots = self.slots.lock().unwrap();
+        let entries = slots
+            .values()
+            .filter(|s| s.pre.lock().unwrap().is_some())
+            .count();
+        ArtifactStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            entries,
+        }
+    }
+
+    /// Drop every cached artifact (counters keep accumulating).
+    pub fn clear(&self) {
+        self.slots.lock().unwrap().clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::Accelerator;
+
+    fn key(scale: f64, weighted: bool) -> ArtifactKey {
+        ArtifactKey::new(Dataset::Tiny, scale, weighted, &ArchConfig::default())
+    }
+
+    #[test]
+    fn key_is_fixed_point_in_scale() {
+        let a = key(1.0, false);
+        let b = key(1.0 - 1e-9, false);
+        assert_eq!(a, b);
+        assert_eq!(a.scale(), 1.0);
+        assert_ne!(a, key(0.5, false));
+        assert_ne!(a, key(1.0, true));
+    }
+
+    #[test]
+    fn different_architectures_do_not_collide() {
+        let a = key(1.0, false);
+        let arch8 = ArchConfig { crossbar_size: 8, ..ArchConfig::default() };
+        assert_ne!(a, ArtifactKey::new(Dataset::Tiny, 1.0, false, &arch8));
+        let n0 = ArchConfig { static_engines: 0, ..ArchConfig::default() };
+        assert_ne!(a, ArtifactKey::new(Dataset::Tiny, 1.0, false, &n0));
+    }
+
+    #[test]
+    fn same_key_preprocesses_once() {
+        let store = ArtifactStore::new();
+        let acc = Accelerator::with_defaults();
+        let a = store.get_or_preprocess(key(1.0, false), &acc).unwrap();
+        let b = store.get_or_preprocess(key(1.0, false), &acc).unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
+        let s = store.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (1, 1, 1));
+    }
+
+    #[test]
+    fn distinct_keys_build_separately() {
+        let store = ArtifactStore::new();
+        let acc = Accelerator::with_defaults();
+        store.get_or_preprocess(key(1.0, false), &acc).unwrap();
+        store.get_or_preprocess(key(0.5, false), &acc).unwrap();
+        store.get_or_preprocess(key(1.0, true), &acc).unwrap();
+        let s = store.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (0, 3, 3));
+    }
+
+    #[test]
+    fn concurrent_same_key_builds_exactly_once() {
+        let store = Arc::new(ArtifactStore::new());
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let store = Arc::clone(&store);
+                std::thread::spawn(move || {
+                    store
+                        .get_or_preprocess(key(1.0, false), &Accelerator::with_defaults())
+                        .unwrap()
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let s = store.stats();
+        assert_eq!(s.misses, 1, "preprocessing must run exactly once");
+        assert_eq!(s.hits, 7);
+    }
+}

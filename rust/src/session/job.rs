@@ -1,0 +1,92 @@
+//! `JobSpec` — the open job description shared by every entry point.
+//!
+//! Replaces the closed `coordinator::Job` enum (whose per-algorithm
+//! variants forced duplicated match arms into `main.rs` and the serve
+//! workers): *what* to run is an [`AlgorithmId`] looked up in the
+//! session's registry, and per-algorithm knobs ride in one open
+//! [`AlgoParams`] bag.
+
+use anyhow::Result;
+
+use crate::algo::registry::{AlgoParams, AlgorithmId};
+use crate::graph::datasets::Dataset;
+
+/// A graph-processing request: which input, at which scale, through which
+/// registered algorithm, with which parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobSpec {
+    pub dataset: Dataset,
+    /// Dataset scale factor in (0, 1] (see `Dataset::load_scaled`).
+    pub scale: f64,
+    pub algorithm: AlgorithmId,
+    pub params: AlgoParams,
+}
+
+impl JobSpec {
+    /// A job at full dataset scale with default parameters.
+    pub fn new(dataset: Dataset, algorithm: impl Into<AlgorithmId>) -> Self {
+        Self {
+            dataset,
+            scale: 1.0,
+            algorithm: algorithm.into(),
+            params: AlgoParams::default(),
+        }
+    }
+
+    pub fn with_scale(mut self, scale: f64) -> Self {
+        self.scale = scale;
+        self
+    }
+
+    pub fn with_source(mut self, source: u32) -> Self {
+        self.params.source = source;
+        self
+    }
+
+    pub fn with_iterations(mut self, iterations: usize) -> Self {
+        self.params.iterations = iterations;
+        self
+    }
+
+    pub fn with_damping(mut self, damping: f32) -> Self {
+        self.params.damping = damping;
+        self
+    }
+
+    pub fn with_params(mut self, params: AlgoParams) -> Self {
+        self.params = params;
+        self
+    }
+
+    /// Spec-level validation (algorithm existence and parameter checks
+    /// happen against the session's registry at run time).
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(
+            self.scale > 0.0 && self.scale <= 1.0 && self.scale.is_finite(),
+            "scale must be in (0, 1], got {}",
+            self.scale
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_style_construction() {
+        let s = JobSpec::new(Dataset::Tiny, "BFS").with_scale(0.5).with_source(3);
+        assert_eq!(s.algorithm.as_str(), "bfs");
+        assert_eq!(s.scale, 0.5);
+        assert_eq!(s.params.source, 3);
+        assert!(s.validate().is_ok());
+    }
+
+    #[test]
+    fn rejects_bad_scale() {
+        assert!(JobSpec::new(Dataset::Tiny, "bfs").with_scale(0.0).validate().is_err());
+        assert!(JobSpec::new(Dataset::Tiny, "bfs").with_scale(1.5).validate().is_err());
+        assert!(JobSpec::new(Dataset::Tiny, "bfs").with_scale(f64::NAN).validate().is_err());
+    }
+}

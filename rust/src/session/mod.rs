@@ -1,0 +1,408 @@
+//! The `Session` facade — the one way to construct the accelerator
+//! pipeline.
+//!
+//! Every entry point (the CLI `run`/`dse` commands, the serving
+//! coordinator, examples, benches) builds a [`Session`] and goes through
+//! it; none of them hand-wire `Accelerator` + executor anymore. A session
+//! bundles:
+//!
+//! * the architecture model ([`ArchConfig`]) and cost model ([`CostParams`]),
+//! * a [`Backend`] selection — the pure-rust [`NativeExecutor`] mirror or
+//!   the AOT/PJRT production datapath,
+//! * an [`AlgorithmRegistry`] of pluggable vertex programs, and
+//! * a shared [`ArtifactStore`] so preprocessing (Alg. 1) runs once per
+//!   `(dataset, scale, weighted, arch)` key no matter how many callers
+//!   or worker threads submit jobs.
+//!
+//! # Example
+//!
+//! ```no_run
+//! use repro::graph::datasets::Dataset;
+//! use repro::session::{Backend, JobSpec, Session};
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let session = Session::builder().backend(Backend::Native).build()?;
+//! let report = session.run(&JobSpec::new(Dataset::Tiny, "bfs").with_source(0))?;
+//! println!("{}: {} supersteps, {:.3e} J", report.algorithm, report.supersteps,
+//!          report.energy_j());
+//!
+//! // Algorithms are registry entries, not match arms: the same spec shape
+//! // drives any registered program.
+//! let pr = JobSpec::new(Dataset::Tiny, "pagerank").with_iterations(10);
+//! let _report = session.run(&pr)?;
+//! # Ok(()) }
+//! ```
+
+mod artifact;
+mod job;
+
+pub use artifact::{ArtifactKey, ArtifactStats, ArtifactStore};
+pub use job::JobSpec;
+
+pub use crate::algo::registry::{AlgoParams, AlgorithmId, AlgorithmRegistry, BoxedProgram};
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::accel::{Accelerator, ArchConfig, Preprocessed, SimReport};
+use crate::cost::CostParams;
+use crate::dse::SweepPoint;
+use crate::graph::Coo;
+use crate::sched::executor::NativeExecutor;
+use crate::sched::StepExecutor;
+
+/// Which numeric edge-compute datapath a session drives.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Backend {
+    /// Pure-rust mirror of the L1/L2 kernels.
+    Native,
+    /// AOT-lowered HLO artifacts on the PJRT CPU client, loaded from the
+    /// given artifact directory.
+    Pjrt(PathBuf),
+}
+
+impl Backend {
+    /// PJRT against the default artifact directory
+    /// (`$REPRO_ARTIFACTS` or `./artifacts`).
+    pub fn pjrt_default() -> Self {
+        Backend::Pjrt(crate::runtime::default_artifact_dir())
+    }
+
+    /// Parse a CLI selector (`native` | `pjrt`).
+    pub fn parse(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "native" => Ok(Backend::Native),
+            "pjrt" => Ok(Backend::pjrt_default()),
+            other => anyhow::bail!("unknown backend {other:?} (native|pjrt)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::Native => "native",
+            Backend::Pjrt(_) => "pjrt",
+        }
+    }
+
+    /// Eager availability check, run at session build time so a
+    /// misconfigured backend fails loudly up front — a PJRT session never
+    /// silently falls back to the native executor.
+    pub fn validate(&self) -> Result<()> {
+        match self {
+            Backend::Native => Ok(()),
+            Backend::Pjrt(dir) => {
+                anyhow::ensure!(
+                    cfg!(feature = "pjrt"),
+                    "backend pjrt selected but this binary was built without the \
+                     `pjrt` feature (rebuild with `--features pjrt`)"
+                );
+                let manifest = dir.join("manifest.tsv");
+                anyhow::ensure!(
+                    manifest.exists(),
+                    "backend pjrt selected but no artifact manifest at {} \
+                     (run `make artifacts`); refusing to fall back to native",
+                    manifest.display()
+                );
+                Ok(())
+            }
+        }
+    }
+}
+
+/// Builder for [`Session`]. Defaults: paper §IV.A architecture, default
+/// cost table, native backend, builtin algorithms, fresh artifact store.
+#[derive(Debug)]
+pub struct SessionBuilder {
+    arch: ArchConfig,
+    params: CostParams,
+    backend: Backend,
+    registry: Option<AlgorithmRegistry>,
+    artifacts: Option<Arc<ArtifactStore>>,
+}
+
+impl Default for SessionBuilder {
+    fn default() -> Self {
+        Self {
+            arch: ArchConfig::default(),
+            params: CostParams::default(),
+            backend: Backend::Native,
+            registry: None,
+            artifacts: None,
+        }
+    }
+}
+
+impl SessionBuilder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn arch(mut self, arch: ArchConfig) -> Self {
+        self.arch = arch;
+        self
+    }
+
+    pub fn cost_params(mut self, params: CostParams) -> Self {
+        self.params = params;
+        self
+    }
+
+    pub fn backend(mut self, backend: Backend) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    /// Replace the algorithm registry (default: the four builtins).
+    pub fn registry(mut self, registry: AlgorithmRegistry) -> Self {
+        self.registry = Some(registry);
+        self
+    }
+
+    /// Share an existing artifact store across sessions instead of
+    /// starting one fresh. Safe across differing architectures: the
+    /// cache key includes the preprocessing-relevant arch parameters.
+    pub fn artifacts(mut self, store: Arc<ArtifactStore>) -> Self {
+        self.artifacts = Some(store);
+        self
+    }
+
+    /// Validate everything eagerly and assemble the session.
+    pub fn build(self) -> Result<Session> {
+        self.arch.validate().context("invalid architecture")?;
+        self.backend.validate()?;
+        let registry = self.registry.unwrap_or_default();
+        anyhow::ensure!(!registry.is_empty(), "algorithm registry is empty");
+        Ok(Session {
+            arch: self.arch,
+            params: self.params,
+            backend: self.backend,
+            registry: Arc::new(registry),
+            artifacts: self.artifacts.unwrap_or_default(),
+        })
+    }
+}
+
+/// The shared facade over preprocessing, dispatch, and cost reporting.
+/// Cheap to share: clone the `Arc<Session>` the coordinator hands out.
+#[derive(Debug)]
+pub struct Session {
+    arch: ArchConfig,
+    params: CostParams,
+    backend: Backend,
+    registry: Arc<AlgorithmRegistry>,
+    artifacts: Arc<ArtifactStore>,
+}
+
+impl Session {
+    pub fn builder() -> SessionBuilder {
+        SessionBuilder::new()
+    }
+
+    /// Paper defaults on the native backend.
+    pub fn with_defaults() -> Result<Session> {
+        Self::builder().build()
+    }
+
+    pub fn arch(&self) -> &ArchConfig {
+        &self.arch
+    }
+
+    pub fn cost_params(&self) -> &CostParams {
+        &self.params
+    }
+
+    pub fn backend(&self) -> &Backend {
+        &self.backend
+    }
+
+    pub fn registry(&self) -> &AlgorithmRegistry {
+        &self.registry
+    }
+
+    pub fn artifacts(&self) -> &Arc<ArtifactStore> {
+        &self.artifacts
+    }
+
+    /// The accelerator model this session simulates.
+    pub fn accelerator(&self) -> Accelerator {
+        Accelerator::new(self.arch.clone(), self.params.clone())
+    }
+
+    /// Construct a fresh executor for this session's backend. Serve
+    /// workers hold one each so PJRT compiles every artifact once per
+    /// worker; `run` builds one per call.
+    pub fn executor(&self) -> Result<Box<dyn StepExecutor>> {
+        match &self.backend {
+            Backend::Native => Ok(Box::new(NativeExecutor)),
+            Backend::Pjrt(dir) => pjrt_executor(dir),
+        }
+    }
+
+    /// Resolve and instantiate the job's program. `needs_weights` comes
+    /// from the program itself, so the dataset loader and artifact key
+    /// can never disagree with what the scheduler will demand.
+    fn program_for(&self, spec: &JobSpec) -> Result<BoxedProgram> {
+        spec.validate()?;
+        self.registry.resolve(&spec.algorithm)?.instantiate(&spec.params)
+    }
+
+    /// Load the job's input graph (weighted iff the algorithm requires it).
+    pub fn load_graph(&self, spec: &JobSpec) -> Result<Coo> {
+        let program = self.program_for(spec)?;
+        if program.needs_weights() {
+            spec.dataset.load_weighted(spec.scale)
+        } else {
+            spec.dataset.load_scaled(spec.scale)
+        }
+    }
+
+    /// Alg. 1 through the shared [`ArtifactStore`]: preprocesses at most
+    /// once per `(dataset, scale, weighted, arch)` key across all
+    /// callers.
+    pub fn preprocess(&self, spec: &JobSpec) -> Result<Arc<Preprocessed>> {
+        let program = self.program_for(spec)?;
+        let key = self.key_for(spec, program.needs_weights());
+        self.artifacts.get_or_preprocess(key, &self.accelerator())
+    }
+
+    /// Like [`preprocess`](Self::preprocess) but from a caller-loaded
+    /// graph (must be the spec's dataset/scale), avoiding a second
+    /// dataset load on a cache miss.
+    pub fn preprocess_on(&self, spec: &JobSpec, graph: &Coo) -> Result<Arc<Preprocessed>> {
+        let program = self.program_for(spec)?;
+        let key = self.key_for(spec, program.needs_weights());
+        self.artifacts
+            .get_or_preprocess_from(key, &self.accelerator(), graph)
+    }
+
+    /// Run a job end to end on a fresh backend executor.
+    pub fn run(&self, spec: &JobSpec) -> Result<SimReport> {
+        let mut exec = self.executor()?;
+        self.run_with(spec, exec.as_mut())
+    }
+
+    /// Run against a caller-loaded graph (must be the spec's
+    /// dataset/scale): skips the second dataset load when the caller
+    /// also needs the graph, e.g. the CLI's `--validate` path.
+    pub fn run_on(&self, spec: &JobSpec, graph: &Coo) -> Result<SimReport> {
+        let program = self.program_for(spec)?;
+        let key = self.key_for(spec, program.needs_weights());
+        let acc = self.accelerator();
+        let pre = self.artifacts.get_or_preprocess_from(key, &acc, graph)?;
+        let mut exec = self.executor()?;
+        acc.run(&pre, program.as_ref(), exec.as_mut())
+    }
+
+    /// Run a job on a caller-provided executor (the serve workers reuse
+    /// one executor across jobs to amortize PJRT compilation).
+    pub fn run_with(
+        &self,
+        spec: &JobSpec,
+        executor: &mut dyn StepExecutor,
+    ) -> Result<SimReport> {
+        let program = self.program_for(spec)?;
+        let key = self.key_for(spec, program.needs_weights());
+        let acc = self.accelerator();
+        let pre = self.artifacts.get_or_preprocess(key, &acc)?;
+        acc.run(&pre, program.as_ref(), executor)
+    }
+
+    /// DSE: best static/dynamic engine split for the job's algorithm on
+    /// its dataset (paper Fig. 6 / conclusion). Reuses the session's
+    /// cached Alg.-1 output; only the N-dependent config table is
+    /// rebuilt per candidate, on a scratch copy so the shared artifact
+    /// stays untouched.
+    pub fn dse(
+        &self,
+        spec: &JobSpec,
+        candidates: Option<&[u32]>,
+    ) -> Result<(u32, Vec<SweepPoint>)> {
+        let program = self.program_for(spec)?;
+        let mut scratch = (*self.preprocess(spec)?).clone();
+        crate::dse::find_best_static_split_with(
+            &mut scratch,
+            &self.arch,
+            &self.params,
+            program.as_ref(),
+            candidates,
+        )
+    }
+
+    fn key_for(&self, spec: &JobSpec, weighted: bool) -> ArtifactKey {
+        ArtifactKey::new(spec.dataset, spec.scale, weighted, &self.arch)
+    }
+}
+
+#[cfg(feature = "pjrt")]
+fn pjrt_executor(dir: &std::path::Path) -> Result<Box<dyn StepExecutor>> {
+    let rt = crate::runtime::PjrtRuntime::new(dir.to_path_buf())?;
+    Ok(Box::new(crate::runtime::PjrtExecutor::new(rt)))
+}
+
+/// Unreachable in practice: `Backend::validate` already rejected the
+/// PJRT selection at build time in a non-PJRT binary. Kept as a loud
+/// guard for sessions constructed through future unchecked paths.
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_executor(_dir: &std::path::Path) -> Result<Box<dyn StepExecutor>> {
+    anyhow::bail!("backend pjrt requires building with `--features pjrt`")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::datasets::Dataset;
+
+    #[test]
+    fn default_session_runs_bfs() {
+        let session = Session::with_defaults().unwrap();
+        let report = session
+            .run(&JobSpec::new(Dataset::Tiny, "bfs").with_source(0))
+            .unwrap();
+        assert_eq!(report.algorithm, "bfs");
+        assert!(report.counts.mvm_ops > 0);
+    }
+
+    #[test]
+    fn invalid_arch_rejected_at_build() {
+        let bad = ArchConfig { static_engines: 99, ..ArchConfig::default() };
+        assert!(Session::builder().arch(bad).build().is_err());
+    }
+
+    #[test]
+    fn empty_registry_rejected_at_build() {
+        let err = Session::builder()
+            .registry(AlgorithmRegistry::empty())
+            .build()
+            .map(|_| ())
+            .unwrap_err();
+        assert!(err.to_string().contains("registry"), "{err}");
+    }
+
+    #[test]
+    fn pjrt_backend_without_artifacts_fails_loudly() {
+        let backend = Backend::Pjrt(PathBuf::from("/definitely/not/artifacts"));
+        let err = Session::builder().backend(backend).build().map(|_| ()).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("pjrt"), "{msg}");
+    }
+
+    #[test]
+    fn backend_parse() {
+        assert_eq!(Backend::parse("native").unwrap(), Backend::Native);
+        assert_eq!(Backend::parse("PJRT").unwrap().name(), "pjrt");
+        assert!(Backend::parse("tpu").is_err());
+    }
+
+    #[test]
+    fn repeated_runs_share_preprocessing() {
+        let session = Session::with_defaults().unwrap();
+        let spec = JobSpec::new(Dataset::Tiny, "wcc");
+        session.run(&spec).unwrap();
+        session.run(&spec).unwrap();
+        let s = session.artifacts().stats();
+        assert_eq!(s.misses, 1);
+        assert_eq!(s.hits, 1);
+    }
+}

@@ -1,0 +1,15 @@
+//! Helpers shared by the integration-test binaries.
+
+use repro::algo::traits::INF;
+
+/// Elementwise tolerance comparison treating any pair of values at or
+/// above the INF sentinel as equal (unreached vertices).
+pub fn assert_close(got: &[f32], want: &[f32], tol: f32, what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        if *g >= INF && *w >= INF {
+            continue;
+        }
+        assert!((g - w).abs() <= tol, "{what}: vertex {i}: got {g}, want {w}");
+    }
+}

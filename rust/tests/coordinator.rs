@@ -1,25 +1,37 @@
 //! Integration + property tests over the serving coordinator: queueing
-//! invariants, metrics conservation, cache behaviour under concurrency,
-//! and determinism of served results.
+//! invariants, metrics conservation, shared-session cache behaviour under
+//! concurrency, backend honoring, and determinism of served results.
+
+use std::path::PathBuf;
+use std::sync::Arc;
 
 use repro::accel::ArchConfig;
-use repro::coordinator::{Job, Service, ServiceConfig};
+use repro::algo::reference;
+use repro::coordinator::{Service, ServiceConfig};
 use repro::cost::CostParams;
 use repro::graph::datasets::Dataset;
+use repro::graph::Csr;
+use repro::session::{Backend, JobSpec, Session};
 use repro::util::SplitMix64;
+
+mod common;
+use common::assert_close;
 
 fn service(workers: usize) -> Service {
     Service::spawn(ServiceConfig {
         arch: ArchConfig::default(),
         params: CostParams::default(),
+        backend: Backend::Native,
         workers,
     })
+    .unwrap()
 }
 
 #[test]
 fn metrics_conserve_jobs() {
     // Property: submitted == completed + failed after all jobs resolve,
     // across random job mixes and worker counts.
+    let algos = ["bfs", "pagerank", "wcc", "sssp"];
     for seed in 0..6u64 {
         let mut rng = SplitMix64::new(seed);
         let workers = 1 + rng.next_index(4);
@@ -27,13 +39,10 @@ fn metrics_conserve_jobs() {
         let njobs = 4 + rng.next_index(12);
         let pending: Vec<_> = (0..njobs)
             .map(|i| {
-                let job = match rng.next_index(4) {
-                    0 => Job::Bfs { dataset: Dataset::Tiny, scale: 1.0, source: i as u32 },
-                    1 => Job::PageRank { dataset: Dataset::Tiny, scale: 1.0, iterations: 3 },
-                    2 => Job::Wcc { dataset: Dataset::Tiny, scale: 1.0 },
-                    _ => Job::Sssp { dataset: Dataset::Tiny, scale: 1.0, source: i as u32 },
-                };
-                svc.submit(job).unwrap()
+                let spec = JobSpec::new(Dataset::Tiny, algos[rng.next_index(4)])
+                    .with_source(i as u32)
+                    .with_iterations(3);
+                svc.submit(spec).unwrap()
             })
             .collect();
         let mut ok = 0u64;
@@ -47,6 +56,15 @@ fn metrics_conserve_jobs() {
         assert_eq!(snap.jobs_completed, ok, "seed {seed}");
         assert_eq!(snap.jobs_completed + snap.jobs_failed, njobs as u64, "seed {seed}");
         assert!(snap.max_latency_us >= snap.mean_latency_us as u64, "seed {seed}");
+        // Per-algorithm counters sum to the global ones and nothing is
+        // left in flight after every job resolved.
+        let per: u64 = snap.per_algorithm.values().map(|s| s.completed + s.failed).sum();
+        assert_eq!(per, njobs as u64, "seed {seed}");
+        assert!(
+            snap.per_algorithm.values().all(|s| s.queue_depth == 0),
+            "seed {seed}: {:?}",
+            snap.per_algorithm
+        );
     }
 }
 
@@ -55,7 +73,7 @@ fn served_results_are_deterministic() {
     // The same job must produce identical reports regardless of worker
     // interleaving or cache state.
     let svc = service(4);
-    let job = || Job::Bfs { dataset: Dataset::Tiny, scale: 1.0, source: 7 };
+    let job = || JobSpec::new(Dataset::Tiny, "bfs").with_source(7);
     let first = svc.submit_blocking(job()).unwrap().report;
     let pending: Vec<_> = (0..6).map(|_| svc.submit(job()).unwrap()).collect();
     for p in pending {
@@ -74,14 +92,14 @@ fn preprocessing_cache_accelerates_repeat_jobs() {
     let svc = service(1);
     // Cold: includes dataset generation + Alg. 1.
     let cold = svc
-        .submit_blocking(Job::Bfs { dataset: Dataset::Gnutella, scale: 1.0, source: 0 })
+        .submit_blocking(JobSpec::new(Dataset::Gnutella, "bfs"))
         .unwrap()
         .wall_time_us;
     // Warm average.
     let mut warm_total = 0u64;
     for i in 1..4u32 {
         warm_total += svc
-            .submit_blocking(Job::Bfs { dataset: Dataset::Gnutella, scale: 1.0, source: i })
+            .submit_blocking(JobSpec::new(Dataset::Gnutella, "bfs").with_source(i))
             .unwrap()
             .wall_time_us;
     }
@@ -96,10 +114,10 @@ fn preprocessing_cache_accelerates_repeat_jobs() {
 fn scale_variants_do_not_collide_in_cache() {
     let svc = service(2);
     let a = svc
-        .submit_blocking(Job::Bfs { dataset: Dataset::Tiny, scale: 1.0, source: 0 })
+        .submit_blocking(JobSpec::new(Dataset::Tiny, "bfs"))
         .unwrap();
     let b = svc
-        .submit_blocking(Job::Bfs { dataset: Dataset::Tiny, scale: 0.5, source: 0 })
+        .submit_blocking(JobSpec::new(Dataset::Tiny, "bfs").with_scale(0.5))
         .unwrap();
     assert_ne!(
         a.report.run.as_ref().unwrap().values.len(),
@@ -109,17 +127,78 @@ fn scale_variants_do_not_collide_in_cache() {
 }
 
 #[test]
+fn mixed_submit_batch_is_correct_and_preprocesses_once_per_dataset() {
+    // The acceptance test for the Session facade: a 4-algorithm mixed
+    // batch through 4 workers returns reference-correct results while
+    // Alg. 1 runs once per (dataset, weighted) artifact key.
+    let session = Arc::new(Session::builder().build().unwrap());
+    let svc = Service::with_session(Arc::clone(&session), 4);
+    let d = Dataset::Tiny;
+    let batch = vec![
+        JobSpec::new(d, "bfs").with_source(0),
+        JobSpec::new(d, "sssp").with_source(0),
+        JobSpec::new(d, "pagerank").with_iterations(8),
+        JobSpec::new(d, "wcc"),
+        // Second wave of the same mix → pure cache hits.
+        JobSpec::new(d, "bfs").with_source(3),
+        JobSpec::new(d, "wcc"),
+    ];
+    let n = batch.len() as u64;
+    let results: Vec<_> = svc
+        .submit_batch(batch)
+        .unwrap()
+        .into_iter()
+        .map(|p| p.wait().unwrap())
+        .collect();
+
+    let csr = Csr::from_coo(&d.load().unwrap());
+    let wcsr = Csr::from_coo(&d.load_weighted(1.0).unwrap());
+    fn values(r: &repro::coordinator::JobResult) -> &[f32] {
+        &r.report.run.as_ref().unwrap().values
+    }
+    assert_close(values(&results[0]), &reference::bfs_levels(&csr, 0), 1e-3, "bfs");
+    assert_close(values(&results[1]), &reference::sssp_distances(&wcsr, 0), 1e-2, "sssp");
+    assert_close(values(&results[2]), &reference::pagerank(&csr, 0.85, 8), 1e-4, "pagerank");
+    assert_close(values(&results[3]), &reference::wcc_labels(&csr), 0.0, "wcc");
+    assert_close(values(&results[4]), &reference::bfs_levels(&csr, 3), 1e-3, "bfs from 3");
+
+    // One unweighted + one weighted artifact — exactly two Alg.-1 runs
+    // across all workers; everything else hit the shared store.
+    let cache = session.artifacts().stats();
+    assert_eq!(cache.misses, 2, "preprocessing must run once per dataset key");
+    assert_eq!(cache.hits, n - 2);
+
+    let snap = svc.metrics.snapshot();
+    assert_eq!(snap.jobs_completed, n);
+    assert_eq!(snap.per_algorithm["bfs"].completed, 2);
+    assert_eq!(snap.per_algorithm["wcc"].completed, 2);
+    assert_eq!(snap.per_algorithm["sssp"].completed, 1);
+    assert_eq!(snap.per_algorithm["pagerank"].completed, 1);
+    assert!(snap.per_algorithm.values().all(|s| s.queue_depth == 0));
+}
+
+#[test]
+fn pjrt_service_fails_loudly_when_artifacts_missing() {
+    // A PJRT-configured service must refuse to spawn (never silently
+    // fall back to the native executor) when artifacts are absent.
+    let cfg = ServiceConfig {
+        backend: Backend::Pjrt(PathBuf::from("/definitely/not/an/artifact/dir")),
+        ..ServiceConfig::default()
+    };
+    let err = Service::spawn(cfg).err().expect("spawn must fail, not fall back");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("pjrt"), "error must name the backend: {msg}");
+}
+
+#[test]
 fn heavy_concurrency_smoke() {
     let svc = service(8);
-    let pending: Vec<_> = (0..64u32)
-        .map(|i| {
-            svc.submit(Job::Wcc { dataset: Dataset::Tiny, scale: 1.0 })
-                .map(|p| (i, p))
-                .unwrap()
-        })
-        .collect();
-    for (_, p) in pending {
+    let pending = svc
+        .submit_batch((0..64).map(|_| JobSpec::new(Dataset::Tiny, "wcc")))
+        .unwrap();
+    for p in pending {
         p.wait().unwrap();
     }
     assert_eq!(svc.metrics.snapshot().jobs_completed, 64);
+    assert_eq!(svc.session().artifacts().stats().misses, 1);
 }

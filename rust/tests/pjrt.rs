@@ -6,6 +6,8 @@
 //! numerically indistinguishable from both the native mirror and the
 //! pure-CPU references.
 
+#![cfg(feature = "pjrt")]
+
 use repro::accel::{Accelerator, ArchConfig};
 use repro::algo::traits::{StepKind, INF};
 use repro::algo::{reference, Bfs, PageRank, Sssp, Wcc};
@@ -188,4 +190,27 @@ fn missing_artifact_is_a_clean_error() {
         .execute(StepKind::Bfs, &part, &[0], &[0.0, 0.0, 0.0], &mut out)
         .unwrap_err();
     assert!(err.to_string().contains("no artifact"), "unexpected error: {err}");
+}
+
+#[test]
+fn service_honors_pjrt_backend_end_to_end() {
+    // The serve-path backend gap: a PJRT-configured service must route
+    // worker jobs through the PJRT executor (not NativeExecutor) and
+    // produce reference-correct results.
+    use repro::coordinator::{Service, ServiceConfig};
+    use repro::session::{Backend, JobSpec};
+    require_artifacts!();
+    let svc = Service::spawn(ServiceConfig {
+        backend: Backend::pjrt_default(),
+        workers: 2,
+        ..ServiceConfig::default()
+    })
+    .unwrap();
+    let r = svc
+        .submit_blocking(JobSpec::new(Dataset::Tiny, "bfs"))
+        .unwrap();
+    let want = reference::bfs_levels(&Csr::from_coo(&Dataset::Tiny.load().unwrap()), 0);
+    for (got, want) in r.report.run.as_ref().unwrap().values.iter().zip(&want) {
+        assert!((got - want).abs() < 1e-3 || (*got >= INF && *want >= INF));
+    }
 }

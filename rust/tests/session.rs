@@ -1,0 +1,166 @@
+//! Integration tests for the `Session` facade: builder validation, the
+//! algorithm registry against the CPU reference oracles, artifact-cache
+//! sharing, and backend selection.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use repro::accel::ArchConfig;
+use repro::algo::reference;
+use repro::algo::Bfs;
+use repro::graph::datasets::Dataset;
+use repro::graph::Csr;
+use repro::session::{
+    AlgorithmRegistry, ArtifactStore, Backend, JobSpec, Session,
+};
+
+mod common;
+use common::assert_close;
+
+#[test]
+fn builder_rejects_invalid_configurations() {
+    // Bad architecture.
+    let bad_arch = ArchConfig { static_engines: 99, ..ArchConfig::default() };
+    let err = Session::builder().arch(bad_arch).build().map(|_| ()).unwrap_err();
+    assert!(format!("{err:#}").contains("architecture"), "{err:#}");
+
+    // Empty registry.
+    assert!(Session::builder().registry(AlgorithmRegistry::empty()).build().is_err());
+
+    // PJRT without artifacts: loud, names the backend, no fallback.
+    let err = Session::builder()
+        .backend(Backend::Pjrt(PathBuf::from("/no/such/dir")))
+        .build()
+        .map(|_| ())
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("pjrt"), "{err:#}");
+}
+
+#[test]
+fn run_rejects_bad_specs_loudly() {
+    let session = Session::with_defaults().unwrap();
+    // Unknown algorithm names every registered id.
+    let err = session
+        .run(&JobSpec::new(Dataset::Tiny, "dijkstra"))
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("dijkstra") && err.contains("bfs"), "{err}");
+    // Out-of-range scale.
+    assert!(session
+        .run(&JobSpec::new(Dataset::Tiny, "bfs").with_scale(2.0))
+        .is_err());
+    // Bad algorithm params (damping ≥ 1 is a factory error, not a panic).
+    assert!(session
+        .run(&JobSpec::new(Dataset::Tiny, "pagerank").with_damping(1.5))
+        .is_err());
+}
+
+#[test]
+fn registry_runs_all_four_algorithms_to_reference_fixpoints() {
+    let session = Session::with_defaults().unwrap();
+    let d = Dataset::Tiny;
+    let csr = Csr::from_coo(&d.load().unwrap());
+    let wcsr = Csr::from_coo(&d.load_weighted(1.0).unwrap());
+
+    let run = |spec: &JobSpec| -> Vec<f32> {
+        session.run(spec).unwrap().run.unwrap().values
+    };
+
+    assert_close(
+        &run(&JobSpec::new(d, "bfs").with_source(2)),
+        &reference::bfs_levels(&csr, 2),
+        1e-3,
+        "bfs",
+    );
+    assert_close(
+        &run(&JobSpec::new(d, "sssp").with_source(2)),
+        &reference::sssp_distances(&wcsr, 2),
+        1e-2,
+        "sssp",
+    );
+    assert_close(
+        &run(&JobSpec::new(d, "pagerank").with_iterations(8)),
+        &reference::pagerank(&csr, 0.85, 8),
+        1e-4,
+        "pagerank",
+    );
+    assert_close(
+        &run(&JobSpec::new(d, "wcc")),
+        &reference::wcc_labels(&csr),
+        0.0,
+        "wcc",
+    );
+}
+
+#[test]
+fn custom_algorithm_is_one_registration() {
+    // "Adding an algorithm is one registration, not four match-arm
+    // edits": a pinned-source BFS variant becomes runnable everywhere.
+    let mut registry = AlgorithmRegistry::with_builtins();
+    registry.register("bfs-pinned", |_| Ok(Box::new(Bfs::new(5))));
+    let session = Session::builder().registry(registry).build().unwrap();
+    let report = session.run(&JobSpec::new(Dataset::Tiny, "bfs-pinned")).unwrap();
+    let csr = Csr::from_coo(&Dataset::Tiny.load().unwrap());
+    assert_close(
+        &report.run.unwrap().values,
+        &reference::bfs_levels(&csr, 5),
+        1e-3,
+        "bfs-pinned",
+    );
+}
+
+#[test]
+fn artifact_store_shared_across_sessions() {
+    // Two sessions with the same arch share one store: the second
+    // session's first run is a cache hit.
+    let store = Arc::new(ArtifactStore::new());
+    let spec = JobSpec::new(Dataset::Tiny, "wcc");
+    let a = Session::builder().artifacts(Arc::clone(&store)).build().unwrap();
+    a.run(&spec).unwrap();
+    let b = Session::builder().artifacts(Arc::clone(&store)).build().unwrap();
+    b.run(&spec).unwrap();
+    let s = store.stats();
+    assert_eq!((s.misses, s.hits), (1, 1));
+
+    // A session with a different architecture must NOT be served the
+    // cached artifact — the key carries the arch parameters.
+    let c = Session::builder()
+        .arch(ArchConfig { crossbar_size: 8, ..ArchConfig::default() })
+        .artifacts(Arc::clone(&store))
+        .build()
+        .unwrap();
+    c.run(&spec).unwrap();
+    let s = store.stats();
+    assert_eq!((s.misses, s.hits), (2, 1));
+}
+
+#[test]
+fn dse_through_session_matches_direct_call() {
+    let session = Session::with_defaults().unwrap();
+    let spec = JobSpec::new(Dataset::Tiny, "bfs");
+    let (best, points) = session.dse(&spec, Some(&[4, 16])).unwrap();
+    assert_eq!(points.len(), 2);
+    assert!(best == 4 || best == 16);
+
+    let g = Dataset::Tiny.load().unwrap();
+    let (best_direct, direct) = repro::dse::find_best_static_split(
+        &g,
+        session.arch(),
+        session.cost_params(),
+        &Bfs::new(0),
+        Some(&[4, 16]),
+    )
+    .unwrap();
+    assert_eq!(best, best_direct);
+    for (a, b) in points.iter().zip(&direct) {
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.exec_time_ns, b.exec_time_ns);
+    }
+}
+
+#[test]
+fn native_backend_reports_its_name() {
+    let session = Session::with_defaults().unwrap();
+    assert_eq!(session.backend().name(), "native");
+    assert_eq!(session.registry().len(), 4);
+}
