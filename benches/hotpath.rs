@@ -1,6 +1,10 @@
 //! Bench: hot-path microbenchmarks — the components the performance pass
-//! (EXPERIMENTS.md §Perf) optimizes: scheduler dispatch throughput,
-//! native executor, PJRT dispatch, partitioner, and the serving loop.
+//! (EXPERIMENTS.md §Perf) optimizes: plan compilation vs per-superstep
+//! interpretation, scheduler dispatch throughput, native executor, PJRT
+//! dispatch, partitioner, and the serving loop.
+//!
+//! Results are also written to `BENCH_hotpath.json` so the hot path is
+//! tracked across PRs.
 //!
 //! Run: `make artifacts && cargo bench --bench hotpath`
 
@@ -10,37 +14,50 @@ use repro::accel::{Accelerator, ArchConfig};
 use repro::algo::traits::{StepKind, INF};
 use repro::algo::{Bfs, PageRank};
 use repro::cost::CostParams;
-use repro::coordinator::{Job, Service, ServiceConfig};
+use repro::coordinator::{Service, ServiceConfig};
 use repro::graph::datasets::Dataset;
 use repro::pattern::extract::partition;
 use repro::sched::executor::{NativeExecutor, StepExecutor};
+use repro::sched::ExecutionPlan;
+use repro::session::JobSpec;
 use repro::util::bench::{black_box, Bench};
 use repro::util::SplitMix64;
 
 fn main() {
     let g = Dataset::WikiVote.load().unwrap();
-    let acc = Accelerator::new(ArchConfig::default(), CostParams::default());
+    let arch = ArchConfig::default();
+    let acc = Accelerator::new(arch.clone(), CostParams::default());
     let pre = acc.preprocess(&g, false).unwrap();
     let ops = pre.part.num_subgraphs() as u64;
     let mut b = Bench::new().with_target(Duration::from_secs(3)).with_max_iters(20);
 
-    // Scheduler + native executor end to end (the dominant loop).
-    let s = b.run("sched+native BFS WV", || {
+    // Plan compilation: the one-time cost the ArtifactStore amortizes
+    // across every run/serve/DSE caller of the same artifact key.
+    b.run("plan build WV", || {
+        black_box(ExecutionPlan::build(&pre.part, &pre.ct, &pre.st, &arch))
+    });
+
+    // Plan interpretation end to end (scheduler + native executor) — the
+    // per-job cost once the plan is compiled.
+    let s = b.run("plan interpret: BFS WV (sched+native)", || {
         black_box(acc.run(&pre, &Bfs::new(0), &mut NativeExecutor).unwrap())
     });
     let run = acc.run(&pre, &Bfs::new(0), &mut NativeExecutor).unwrap();
     println!(
-        "  -> {:.2} M subgraph-dispatches/s ({} ops per run)",
+        "  -> {:.2} M subgraph-dispatches/s ({} ops per run, {:.1} µs/superstep over {})",
         run.counts.mvm_ops as f64 / s.mean.as_secs_f64() / 1e6,
-        run.counts.mvm_ops
+        run.counts.mvm_ops,
+        s.mean.as_secs_f64() * 1e6 / run.supersteps.max(1) as f64,
+        run.supersteps,
     );
 
-    b.run("sched+native PageRank(5) WV", || {
+    b.run("plan interpret: PageRank(5) WV", || {
         black_box(acc.run(&pre, &PageRank::new(0.85, 5), &mut NativeExecutor).unwrap())
     });
 
     // Native executor alone on a big batch.
     let part = partition(&g, 4, false);
+    let exec_plan = ExecutionPlan::from_partitioned(&part);
     let n = part.num_subgraphs().min(50_000);
     let sgs: Vec<u32> = (0..n as u32).collect();
     let mut rng = SplitMix64::new(7);
@@ -50,7 +67,7 @@ fn main() {
     let mut out = Vec::new();
     let st = b.run("native executor 50k subgraphs", || {
         NativeExecutor
-            .execute(StepKind::Bfs, &part, &sgs, &xs, &mut out)
+            .execute(StepKind::Bfs, exec_plan.batch(&sgs), &xs, &mut out)
             .unwrap();
         black_box(out.len())
     });
@@ -70,7 +87,8 @@ fn main() {
             let sgs: Vec<u32> = (0..n as u32).collect();
             let xs2 = &xs[..n * 4];
             let st = b.run("pjrt executor 4k subgraphs", || {
-                pjrt.execute(StepKind::Bfs, &part, &sgs, xs2, &mut out).unwrap();
+                pjrt.execute(StepKind::Bfs, exec_plan.batch(&sgs), xs2, &mut out)
+                    .unwrap();
                 black_box(out.len())
             });
             println!(
@@ -90,8 +108,8 @@ fn main() {
         let pending: Vec<_> = (0..16u32)
             .map(|i| {
                 svc.submit(match i % 2 {
-                    0 => Job::Bfs { dataset: Dataset::Tiny, scale: 1.0, source: i },
-                    _ => Job::Wcc { dataset: Dataset::Tiny, scale: 1.0 },
+                    0 => JobSpec::new(Dataset::Tiny, "bfs").with_source(i),
+                    _ => JobSpec::new(Dataset::Tiny, "wcc"),
                 })
                 .unwrap()
             })
@@ -101,5 +119,11 @@ fn main() {
         }
     });
     println!("  -> {:.0} jobs/s", 16.0 / st.mean.as_secs_f64());
+
+    if let Err(e) = b.write_json("BENCH_hotpath.json") {
+        eprintln!("(could not write BENCH_hotpath.json: {e})");
+    } else {
+        println!("wrote BENCH_hotpath.json ({} entries)", b.results().len());
+    }
     let _ = ops;
 }

@@ -8,8 +8,9 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use repro::coordinator::{Job, Service, ServiceConfig};
+use repro::coordinator::{Service, ServiceConfig};
 use repro::graph::datasets::Dataset;
+use repro::session::JobSpec;
 use repro::util::fmt;
 
 fn main() -> Result<()> {
@@ -17,16 +18,15 @@ fn main() -> Result<()> {
     let t0 = Instant::now();
 
     // A burst of mixed jobs; Tiny and Gnutella alternate so the
-    // preprocessing cache sees both hits and misses. The legacy `Job`
-    // enum still submits (it converts into `JobSpec` internally).
+    // preprocessing cache sees both hits and misses.
     let mut pending = Vec::new();
     for i in 0..24u32 {
         let dataset = if i % 2 == 0 { Dataset::Tiny } else { Dataset::Gnutella };
         let job = match i % 4 {
-            0 => Job::Bfs { dataset, scale: 1.0, source: i },
-            1 => Job::PageRank { dataset, scale: 1.0, iterations: 5 },
-            2 => Job::Wcc { dataset, scale: 1.0 },
-            _ => Job::Sssp { dataset, scale: 1.0, source: i },
+            0 => JobSpec::new(dataset, "bfs").with_source(i),
+            1 => JobSpec::new(dataset, "pagerank").with_iterations(5),
+            2 => JobSpec::new(dataset, "wcc"),
+            _ => JobSpec::new(dataset, "sssp").with_source(i),
         };
         pending.push((i, svc.submit(job)?));
     }

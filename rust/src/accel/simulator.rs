@@ -11,18 +11,24 @@ use crate::pattern::extract::{partition, Partitioned};
 use crate::pattern::rank::PatternRanking;
 use crate::pattern::tables::{ConfigTable, SubgraphTable};
 use crate::sched::executor::StepExecutor;
+use crate::sched::plan::ExecutionPlan;
 use crate::sched::scheduler::{RunResult, Scheduler};
 
 use super::config::ArchConfig;
 
 /// Output of the preprocessing stage (Alg. 1): everything the runtime
-/// needs, resident in main memory.
+/// needs, resident in main memory — including the compiled
+/// [`ExecutionPlan`], so the schedule itself is built exactly once per
+/// `(graph, architecture)` and shared by every run against this artifact
+/// (the session `ArtifactStore` caches `Preprocessed` whole).
 #[derive(Debug, Clone)]
 pub struct Preprocessed {
     pub part: Partitioned,
     pub ranking: PatternRanking,
     pub ct: ConfigTable,
     pub st: SubgraphTable,
+    /// Compiled scheduling IR interpreted by `Scheduler::run`.
+    pub plan: ExecutionPlan,
 }
 
 impl Preprocessed {
@@ -73,14 +79,15 @@ impl Accelerator {
         Self::new(ArchConfig::default(), CostParams::default())
     }
 
-    /// Alg. 1: partition, rank, build CT/ST.
+    /// Alg. 1: partition, rank, build CT/ST, compile the execution plan.
     pub fn preprocess(&self, graph: &Coo, weighted: bool) -> Result<Preprocessed> {
         self.config.validate()?;
         let part = partition(graph, self.config.crossbar_size, weighted);
         let ranking = PatternRanking::from_partitioned(&part);
         let ct = self.build_config_table(&ranking);
         let st = SubgraphTable::build(&part, &ranking, self.config.order);
-        Ok(Preprocessed { part, ranking, ct, st })
+        let plan = ExecutionPlan::build(&part, &ct, &st, &self.config);
+        Ok(Preprocessed { part, ranking, ct, st, plan })
     }
 
     /// Build just the engine config table for `ranking` under this
@@ -98,14 +105,15 @@ impl Accelerator {
         )
     }
 
-    /// Alg. 2: run a vertex program on a preprocessed graph.
+    /// Alg. 2: run a vertex program on a preprocessed graph — a thin
+    /// interpretation of the artifact's compiled execution plan.
     pub fn run(
         &self,
         pre: &Preprocessed,
         program: &dyn VertexProgram,
         executor: &mut dyn StepExecutor,
     ) -> Result<SimReport> {
-        let sched = Scheduler::new(&self.config, &self.params, &pre.part, &pre.ct, &pre.st);
+        let sched = Scheduler::new(&self.config, &self.params, &pre.plan);
         let run = sched.run(program, executor)?;
         let total = run.total_counts();
         Ok(SimReport {

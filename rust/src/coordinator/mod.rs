@@ -8,4 +8,4 @@ pub mod metrics;
 pub mod service;
 
 pub use metrics::{AlgoStats, Metrics, MetricsSnapshot};
-pub use service::{Job, JobResult, Pending, Service, ServiceConfig};
+pub use service::{JobResult, Pending, Service, ServiceConfig};

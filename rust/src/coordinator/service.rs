@@ -15,39 +15,10 @@ use anyhow::Result;
 
 use crate::accel::{ArchConfig, SimReport};
 use crate::cost::CostParams;
-use crate::graph::datasets::Dataset;
 use crate::sched::StepExecutor;
 use crate::session::{AlgorithmId, Backend, JobSpec, Session};
 
 use super::metrics::Metrics;
-
-/// Legacy closed job enum, kept as a shim for pre-`JobSpec` callers.
-/// New code should construct [`JobSpec`] directly (or register custom
-/// algorithms, which this enum cannot name).
-#[derive(Debug, Clone)]
-pub enum Job {
-    Bfs { dataset: Dataset, scale: f64, source: u32 },
-    Sssp { dataset: Dataset, scale: f64, source: u32 },
-    PageRank { dataset: Dataset, scale: f64, iterations: usize },
-    Wcc { dataset: Dataset, scale: f64 },
-}
-
-impl From<Job> for JobSpec {
-    fn from(job: Job) -> JobSpec {
-        match job {
-            Job::Bfs { dataset, scale, source } => {
-                JobSpec::new(dataset, "bfs").with_scale(scale).with_source(source)
-            }
-            Job::Sssp { dataset, scale, source } => {
-                JobSpec::new(dataset, "sssp").with_scale(scale).with_source(source)
-            }
-            Job::PageRank { dataset, scale, iterations } => JobSpec::new(dataset, "pagerank")
-                .with_scale(scale)
-                .with_iterations(iterations),
-            Job::Wcc { dataset, scale } => JobSpec::new(dataset, "wcc").with_scale(scale),
-        }
-    }
-}
 
 /// Completed job.
 #[derive(Debug)]
@@ -197,7 +168,7 @@ impl Service {
     }
 
     /// Submit a job; returns a handle resolving when a worker completes
-    /// it. Accepts a [`JobSpec`] or the legacy [`Job`] enum.
+    /// it.
     pub fn submit(&self, job: impl Into<JobSpec>) -> Result<Pending> {
         let spec: JobSpec = job.into();
         self.metrics.record_submitted(spec.algorithm.as_str());
@@ -240,6 +211,7 @@ impl Drop for Service {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::graph::datasets::Dataset;
 
     fn tiny_service(workers: usize) -> Service {
         Service::spawn(ServiceConfig { workers, ..ServiceConfig::default() }).unwrap()
@@ -261,10 +233,10 @@ mod tests {
     }
 
     #[test]
-    fn legacy_job_enum_still_submits() {
+    fn pagerank_jobspec_submits() {
         let svc = tiny_service(2);
         let res = svc
-            .submit_blocking(Job::PageRank { dataset: Dataset::Tiny, scale: 1.0, iterations: 3 })
+            .submit_blocking(JobSpec::new(Dataset::Tiny, "pagerank").with_iterations(3))
             .unwrap();
         assert_eq!(res.report.algorithm, "pagerank");
     }

@@ -41,8 +41,11 @@ pub fn static_engine_sweep(
 
 /// Like [`static_engine_sweep`] but over an existing Alg.-1 output
 /// (e.g. a scratch copy of a session's cached artifact — no graph
-/// re-load or re-partition). `pre.ct` is rebuilt per candidate and left
-/// at the last swept configuration.
+/// re-load or re-partition). Per candidate N only the N-dependent pieces
+/// are rebuilt: `pre.ct` and the execution plan's static-slot section
+/// (`ExecutionPlan::rebuild_static_slots`) — op records, gather data and
+/// weights are split-independent and stay as compiled. Both are left at
+/// the last swept configuration.
 pub fn static_engine_sweep_with(
     pre: &mut Preprocessed,
     base: &ArchConfig,
@@ -65,6 +68,7 @@ pub fn static_engine_sweep_with(
         cfg.validate()?;
         let acc = Accelerator::new(cfg, params.clone());
         pre.ct = acc.build_config_table(&pre.ranking);
+        pre.plan.rebuild_static_slots(&pre.ct, &acc.config)?;
         let report = acc.run(pre, program, &mut NativeExecutor)?;
         if baseline_ns.is_none() {
             baseline_ns = Some(n);

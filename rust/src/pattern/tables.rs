@@ -153,6 +153,15 @@ impl ConfigTable {
         self.index.get(&p).map(|&i| &self.entries[i as usize])
     }
 
+    /// Entry at a pattern rank. The subgraph table stores ranks, and the
+    /// plan compiler ([`crate::sched::ExecutionPlan`]) resolves per-op
+    /// metadata through this accessor exactly once — the pattern-keyed
+    /// `entry_of` hash lookup never runs in the superstep hot loop.
+    #[inline]
+    pub fn entry_at(&self, rank: u32) -> &CtEntry {
+        &self.entries[rank as usize]
+    }
+
     /// First static slot for a pattern, if any (Alg. 2 line-11 test).
     #[inline]
     pub fn slot_of(&self, p: Pattern) -> Option<EngineSlot> {

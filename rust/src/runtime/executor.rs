@@ -12,8 +12,8 @@ use std::path::PathBuf;
 use anyhow::{Context, Result};
 
 use crate::algo::traits::StepKind;
-use crate::pattern::extract::Partitioned;
 use crate::sched::executor::{identity, StepExecutor};
+use crate::sched::plan::StepBatch;
 
 use super::manifest::Manifest;
 
@@ -112,7 +112,10 @@ fn wrap_xla<E: std::fmt::Debug>(e: E) -> anyhow::Error {
 
 /// `StepExecutor` over a `PjrtRuntime`: packs scheduler ops into dense
 /// (B, C, C)/(B, C) literals, padding the tail chunk with zero matrices
-/// (zero adjacency ⇒ identity candidates in every semiring).
+/// (zero adjacency ⇒ identity candidates in every semiring). Dense
+/// matrices unpack straight from the plan-owned packed bits/weights into
+/// the reused chunk buffer, so packing memory stays O(batch) rather than
+/// O(graph).
 pub struct PjrtExecutor {
     pub runtime: PjrtRuntime,
     // Reused packing buffers — no allocation per dispatch.
@@ -138,36 +141,41 @@ impl StepExecutor for PjrtExecutor {
     fn execute(
         &mut self,
         kind: StepKind,
-        part: &Partitioned,
-        sgs: &[u32],
+        batch: StepBatch<'_>,
         xs: &[f32],
         out: &mut Vec<f32>,
     ) -> Result<()> {
-        let c = part.c;
-        anyhow::ensure!(xs.len() == sgs.len() * c, "xs length mismatch");
+        let c = batch.c();
+        anyhow::ensure!(xs.len() == batch.len() * c, "xs length mismatch");
+        if kind == StepKind::Sssp {
+            anyhow::ensure!(batch.weighted(), "SSSP requires weighted partitioning");
+        }
         out.clear();
-        out.reserve(sgs.len() * c);
+        out.reserve(batch.len() * c);
         let b = self.runtime.load(kind, c)?.batch;
+        anyhow::ensure!(b > 0, "artifact for {kind:?} at C={c} declares batch size 0");
         let ident = identity(kind);
+        let cc = c * c;
 
-        for (chunk_sgs, chunk_xs) in sgs.chunks(b).zip(xs.chunks(b * c)) {
+        let mut chunk_start = 0usize;
+        while chunk_start < batch.len() {
+            let chunk_len = b.min(batch.len() - chunk_start);
             self.mats.clear();
-            self.mats.resize(b * c * c, 0.0);
+            self.mats.resize(b * cc, 0.0);
             self.xvec.clear();
             self.xvec.resize(b * c, ident);
-            for (k, &sg_idx) in chunk_sgs.iter().enumerate() {
-                part.dense_weights_into(
-                    sg_idx as usize,
-                    &mut self.mats[k * c * c..(k + 1) * c * c],
-                );
+            for k in 0..chunk_len {
+                batch.dense_into(chunk_start + k, &mut self.mats[k * cc..(k + 1) * cc]);
             }
-            self.xvec[..chunk_xs.len()].copy_from_slice(chunk_xs);
+            self.xvec[..chunk_len * c]
+                .copy_from_slice(&xs[chunk_start * c..(chunk_start + chunk_len) * c]);
             let mats = std::mem::take(&mut self.mats);
             let xvec = std::mem::take(&mut self.xvec);
             let res = self.runtime.dispatch(kind, c, &mats, &xvec)?;
             self.mats = mats;
             self.xvec = xvec;
-            out.extend_from_slice(&res[..chunk_sgs.len() * c]);
+            out.extend_from_slice(&res[..chunk_len * c]);
+            chunk_start += chunk_len;
         }
         Ok(())
     }
@@ -183,6 +191,7 @@ mod tests {
     use crate::graph::coo::{Coo, Edge};
     use crate::pattern::extract::partition;
     use crate::sched::executor::NativeExecutor;
+    use crate::sched::plan::ExecutionPlan;
 
     fn runtime() -> Option<PjrtRuntime> {
         let dir = crate::runtime::default_artifact_dir();
@@ -197,6 +206,7 @@ mod tests {
         let mut pjrt = PjrtExecutor::new(rt);
         let g = crate::graph::datasets::Dataset::Tiny.load().unwrap();
         let part = partition(&g, 4, false);
+        let plan = ExecutionPlan::from_partitioned(&part);
         let n = part.num_subgraphs().min(100);
         let sgs: Vec<u32> = (0..n as u32).collect();
         let mut rng = crate::util::SplitMix64::new(1);
@@ -205,8 +215,8 @@ mod tests {
             .collect();
         let mut got = Vec::new();
         let mut want = Vec::new();
-        pjrt.execute(StepKind::Bfs, &part, &sgs, &xs, &mut got).unwrap();
-        NativeExecutor.execute(StepKind::Bfs, &part, &sgs, &xs, &mut want).unwrap();
+        pjrt.execute(StepKind::Bfs, plan.batch(&sgs), &xs, &mut got).unwrap();
+        NativeExecutor.execute(StepKind::Bfs, plan.batch(&sgs), &xs, &mut want).unwrap();
         assert_eq!(got.len(), want.len());
         for (g, w) in got.iter().zip(&want) {
             assert!((g - w).abs() < 1e-3 || (*g >= INF && *w >= INF), "{g} vs {w}");
@@ -222,12 +232,13 @@ mod tests {
             vec![Edge::new(0, 1), Edge::new(1, 2), Edge::new(4, 7), Edge::new(5, 6)],
         );
         let part = partition(&g, 4, false);
+        let plan = ExecutionPlan::from_partitioned(&part);
         let sgs: Vec<u32> = (0..part.num_subgraphs() as u32).collect();
         let xs: Vec<f32> = (0..sgs.len() * 4).map(|i| i as f32 * 0.01).collect();
         let mut got = Vec::new();
         let mut want = Vec::new();
-        pjrt.execute(StepKind::PageRank, &part, &sgs, &xs, &mut got).unwrap();
-        NativeExecutor.execute(StepKind::PageRank, &part, &sgs, &xs, &mut want).unwrap();
+        pjrt.execute(StepKind::PageRank, plan.batch(&sgs), &xs, &mut got).unwrap();
+        NativeExecutor.execute(StepKind::PageRank, plan.batch(&sgs), &xs, &mut want).unwrap();
         for (g, w) in got.iter().zip(&want) {
             assert!((g - w).abs() < 1e-5, "{g} vs {w}");
         }

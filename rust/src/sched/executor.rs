@@ -11,26 +11,31 @@
 //!   HLO artifact on the PJRT CPU client; the production datapath.
 //!
 //! Both must agree to float tolerance — asserted by integration tests.
+//!
+//! Executors consume a [`StepBatch`] — a selection of ops from a compiled
+//! [`ExecutionPlan`](super::ExecutionPlan) — so per-op operands (packed
+//! pattern bits, weight slices, dense matrices) are plan-owned slices
+//! rather than shapes rebuilt from a `Partitioned` on every call.
 
 use anyhow::Result;
 
 use crate::algo::traits::{StepKind, INF};
-use crate::pattern::extract::Partitioned;
 
-/// Computes edge-compute candidates for a batch of subgraphs.
+use super::plan::StepBatch;
+
+/// Computes edge-compute candidates for a batch of subgraph ops.
 ///
-/// `xs` holds one C-vector of wordline inputs per subgraph (snapshot of
+/// `xs` holds one C-vector of wordline inputs per selected op (snapshot of
 /// source-vertex values, already mapped through
 /// `VertexProgram::source_value`); `out` receives one C-vector of
-/// candidates per subgraph (destination lanes).
+/// candidates per op (destination lanes).
 pub trait StepExecutor {
     fn name(&self) -> &'static str;
 
     fn execute(
         &mut self,
         kind: StepKind,
-        part: &Partitioned,
-        sgs: &[u32],
+        batch: StepBatch<'_>,
         xs: &[f32],
         out: &mut Vec<f32>,
     ) -> Result<()>;
@@ -49,23 +54,24 @@ impl StepExecutor for NativeExecutor {
     fn execute(
         &mut self,
         kind: StepKind,
-        part: &Partitioned,
-        sgs: &[u32],
+        batch: StepBatch<'_>,
         xs: &[f32],
         out: &mut Vec<f32>,
     ) -> Result<()> {
-        let c = part.c;
-        anyhow::ensure!(xs.len() == sgs.len() * c, "xs length mismatch");
+        let c = batch.c();
+        anyhow::ensure!(xs.len() == batch.len() * c, "xs length mismatch");
+        if kind == StepKind::Sssp {
+            anyhow::ensure!(batch.weighted(), "SSSP requires weighted partitioning");
+        }
         out.clear();
-        out.resize(sgs.len() * c, identity(kind));
-        for (k, &sg_idx) in sgs.iter().enumerate() {
-            let sg = &part.subgraphs[sg_idx as usize];
+        out.resize(batch.len() * c, identity(kind));
+        for k in 0..batch.len() {
             let x = &xs[k * c..(k + 1) * c];
             let o = &mut out[k * c..(k + 1) * c];
             match kind {
                 StepKind::PageRank | StepKind::Mvm => {
                     // out[j] = sum_i adj[i][j] * x[i]
-                    let mut bits = sg.pattern.0;
+                    let mut bits = batch.bits(k);
                     while bits != 0 {
                         let bit = bits.trailing_zeros() as usize;
                         o[bit % c] += x[bit / c];
@@ -74,7 +80,7 @@ impl StepExecutor for NativeExecutor {
                 }
                 StepKind::Bfs | StepKind::Wcc => {
                     let cost = if kind == StepKind::Bfs { 1.0 } else { 0.0 };
-                    let mut bits = sg.pattern.0;
+                    let mut bits = batch.bits(k);
                     while bits != 0 {
                         let bit = bits.trailing_zeros() as usize;
                         let cand = x[bit / c] + cost;
@@ -86,12 +92,8 @@ impl StepExecutor for NativeExecutor {
                     }
                 }
                 StepKind::Sssp => {
-                    let weights = part
-                        .weights
-                        .as_ref()
-                        .ok_or_else(|| anyhow::anyhow!("SSSP requires weighted partitioning"))?;
-                    let w = &weights[sg_idx as usize];
-                    let mut bits = sg.pattern.0;
+                    let w = batch.weights_of(k);
+                    let mut bits = batch.bits(k);
                     let mut nth = 0usize;
                     while bits != 0 {
                         let bit = bits.trailing_zeros() as usize;
@@ -122,7 +124,8 @@ pub fn identity(kind: StepKind) -> f32 {
 mod tests {
     use super::*;
     use crate::graph::coo::{Coo, Edge};
-    use crate::pattern::extract::partition;
+    use crate::pattern::extract::{partition, Partitioned};
+    use crate::sched::plan::ExecutionPlan;
 
     fn part2() -> Partitioned {
         // One 2x2 window with edges (0,1)=w2.0 and (1,0)=w3.0.
@@ -135,11 +138,11 @@ mod tests {
 
     #[test]
     fn bfs_minplus_semantics() {
-        let p = part2();
+        let plan = ExecutionPlan::from_partitioned(&part2());
         let mut out = Vec::new();
         let xs = vec![0.0, INF]; // vertex 0 at level 0
         NativeExecutor
-            .execute(StepKind::Bfs, &p, &[0], &xs, &mut out)
+            .execute(StepKind::Bfs, plan.batch(&[0]), &xs, &mut out)
             .unwrap();
         assert_eq!(out[1], 1.0); // 0 -> 1 at level 1
         assert!(out[0] >= INF); // 1 -> 0 from unvisited source stays INF
@@ -147,11 +150,11 @@ mod tests {
 
     #[test]
     fn sssp_uses_weights() {
-        let p = part2();
+        let plan = ExecutionPlan::from_partitioned(&part2());
         let mut out = Vec::new();
         let xs = vec![1.0, 10.0];
         NativeExecutor
-            .execute(StepKind::Sssp, &p, &[0], &xs, &mut out)
+            .execute(StepKind::Sssp, plan.batch(&[0]), &xs, &mut out)
             .unwrap();
         assert_eq!(out[1], 3.0); // 1.0 + w(0,1)=2.0
         assert_eq!(out[0], 13.0); // 10.0 + w(1,0)=3.0
@@ -160,30 +163,31 @@ mod tests {
     #[test]
     fn sssp_without_weights_errors() {
         let p = partition(&Coo::from_edges(2, vec![Edge::new(0, 1)]), 2, false);
+        let plan = ExecutionPlan::from_partitioned(&p);
         let mut out = Vec::new();
         assert!(NativeExecutor
-            .execute(StepKind::Sssp, &p, &[0], &[0.0, 0.0], &mut out)
+            .execute(StepKind::Sssp, plan.batch(&[0]), &[0.0, 0.0], &mut out)
             .is_err());
     }
 
     #[test]
     fn pagerank_sums() {
-        let p = part2();
+        let plan = ExecutionPlan::from_partitioned(&part2());
         let mut out = Vec::new();
         let xs = vec![0.25, 0.5];
         NativeExecutor
-            .execute(StepKind::PageRank, &p, &[0], &xs, &mut out)
+            .execute(StepKind::PageRank, plan.batch(&[0]), &xs, &mut out)
             .unwrap();
         assert_eq!(out, vec![0.5, 0.25]);
     }
 
     #[test]
     fn wcc_zero_cost() {
-        let p = part2();
+        let plan = ExecutionPlan::from_partitioned(&part2());
         let mut out = Vec::new();
         let xs = vec![0.0, 1.0];
         NativeExecutor
-            .execute(StepKind::Wcc, &p, &[0], &xs, &mut out)
+            .execute(StepKind::Wcc, plan.batch(&[0]), &xs, &mut out)
             .unwrap();
         assert_eq!(out[1], 0.0);
         assert_eq!(out[0], 1.0);
@@ -194,10 +198,11 @@ mod tests {
         let g = Coo::from_edges(4, vec![Edge::new(0, 1), Edge::new(2, 3)]);
         let p = partition(&g, 2, false);
         assert_eq!(p.num_subgraphs(), 2);
+        let plan = ExecutionPlan::from_partitioned(&p);
         let xs = vec![0.0, INF, 5.0, INF];
         let mut out = Vec::new();
         NativeExecutor
-            .execute(StepKind::Bfs, &p, &[0, 1], &xs, &mut out)
+            .execute(StepKind::Bfs, plan.batch(&[0, 1]), &xs, &mut out)
             .unwrap();
         assert_eq!(out.len(), 4);
         assert_eq!(out[1], 1.0);
@@ -206,10 +211,10 @@ mod tests {
 
     #[test]
     fn xs_length_checked() {
-        let p = part2();
+        let plan = ExecutionPlan::from_partitioned(&part2());
         let mut out = Vec::new();
         assert!(NativeExecutor
-            .execute(StepKind::Bfs, &p, &[0], &[0.0], &mut out)
+            .execute(StepKind::Bfs, plan.batch(&[0]), &[0.0], &mut out)
             .is_err());
     }
 }

@@ -1,12 +1,16 @@
-//! Graph processing & scheduling (paper Alg. 2): streaming-apply batches,
-//! static/dynamic engine dispatch, replacement policies, and the executor
-//! abstraction that routes numeric edge-compute either through the native
-//! mirror or the AOT-compiled PJRT artifact.
+//! Graph processing & scheduling (paper Alg. 2): a schedule compiled once
+//! into an [`ExecutionPlan`] and interpreted per superstep, static/dynamic
+//! engine dispatch, replacement policies, and the executor abstraction
+//! that routes numeric edge-compute either through the native mirror or
+//! the AOT-compiled PJRT artifact.
 
 pub mod executor;
+pub mod oracle;
+pub mod plan;
 pub mod replacement;
 pub mod scheduler;
 
 pub use executor::{NativeExecutor, StepExecutor};
+pub use plan::{ExecutionPlan, PlanOp, StepBatch};
 pub use replacement::{build_policy, ReplacementPolicy};
 pub use scheduler::{RunResult, Scheduler};

@@ -1,0 +1,374 @@
+//! Differential-testing oracle: the seed scheduler's *on-line* decision
+//! derivation, retained verbatim.
+//!
+//! [`run_reference`] re-derives every scheduling decision inside the
+//! superstep loop exactly like the pre-plan scheduler did — it rescans
+//! the [`SubgraphTable`] groups, resolves each op through the
+//! [`ConfigTable`] (including the `HashMap<Pattern, usize>` dynamic
+//! directory), and recomputes read-row counts per op. The compiled-plan
+//! interpreter ([`Scheduler::run`](super::Scheduler::run)) must produce
+//! **bit-identical** results: same `values`, same `EventCounts`, same
+//! timing, same static/dynamic op split. `rust/tests/properties.rs`
+//! asserts that equivalence over randomized graphs, architectures and all
+//! four algorithms — any divergence is a plan-compilation bug.
+//!
+//! The only intentional departure from the seed is the wear-out fix
+//! (retire-then-repick), which is mirrored here so the equivalence holds
+//! under endurance pressure too.
+//!
+//! Numeric operands still flow through the plan's [`StepBatch`]
+//! (plan op index g == subgraph-table entry index g, guaranteed by
+//! [`ExecutionPlan::build`](super::ExecutionPlan::build)); the point of
+//! this module is independent *decision* derivation, not a second copy of
+//! the arithmetic kernels.
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use crate::accel::activity::ActivityTrace;
+use crate::accel::config::ArchConfig;
+use crate::accel::Preprocessed;
+use crate::algo::traits::{Semiring, VertexProgram, INF};
+use crate::cost::{CostParams, EventCounts};
+use crate::engine::{EngineKind, GraphEngine};
+use crate::pattern::Pattern;
+
+use super::executor::StepExecutor;
+use super::replacement::{build_policy, ReplacementPolicy};
+use super::scheduler::{EngineSummary, RunResult};
+
+/// Run `program` with on-line (table-scanning) scheduling — the seed
+/// semantics. See the module docs; use [`Scheduler`](super::Scheduler)
+/// for real work.
+pub fn run_reference(
+    config: &ArchConfig,
+    params: &CostParams,
+    pre: &Preprocessed,
+    program: &dyn VertexProgram,
+    executor: &mut dyn StepExecutor,
+) -> Result<RunResult> {
+    config.validate()?;
+    // The artifact's plan was compiled under the same arch as its ct/st,
+    // so this mirrors the interpreter's mismatch guard: a config that
+    // doesn't match the artifact would silently produce garbage here.
+    anyhow::ensure!(
+        pre.plan.matches(config),
+        "preprocessed artifact was built for a different architecture"
+    );
+    let part = &pre.part;
+    let ct = &pre.ct;
+    let st = &pre.st;
+    if program.needs_weights() {
+        anyhow::ensure!(
+            part.weights.is_some(),
+            "{} requires weighted partitioning",
+            program.name()
+        );
+    }
+    let c = part.c;
+    let n = part.num_vertices as usize;
+    let num_blocks = part.num_blocks() as usize;
+    let n_static = config.static_engines;
+    let n_total = config.total_engines;
+    let m = config.crossbars_per_engine as usize;
+    let n_dyn = config.dynamic_engines() as usize;
+    let slot_pos = |k: usize| (n_static as usize + k % n_dyn, k / n_dyn);
+
+    let mut engines: Vec<GraphEngine> = (0..n_total)
+        .map(|i| {
+            let kind = if i < n_static { EngineKind::Static } else { EngineKind::Dynamic };
+            GraphEngine::new(i, kind, c, m as u32)
+        })
+        .collect();
+    let n_dyn_slots = n_dyn * m;
+    let mut policy: Box<dyn ReplacementPolicy> = build_policy(config.policy, n_dyn_slots);
+    let mut dyn_dir: HashMap<Pattern, usize> = HashMap::new();
+    let mut slot_pattern: Vec<Pattern> = vec![Pattern::EMPTY; n_dyn_slots];
+    let mut retired: Vec<bool> = vec![false; n_dyn_slots];
+
+    // Initialization (Alg. 2 l. 6–8) straight off the config table.
+    for (entry, slot) in ct.static_assignments() {
+        engines[slot.engine as usize].configure(slot.crossbar as usize, entry.pattern, params);
+    }
+    let mut init_counts = EventCounts::default();
+    let mut init_time_ns = 0f64;
+    for e in engines.iter_mut() {
+        init_counts.add(&e.counts);
+        let (busy, _) = e.end_iteration();
+        init_time_ns = init_time_ns.max(busy);
+    }
+    let counts_baseline = init_counts;
+
+    let mut values = program.init(part.num_vertices);
+    anyhow::ensure!(values.len() == n, "program init length mismatch");
+    let mut snapshot = values.clone();
+    let semiring = program.semiring();
+    let mut acc = match semiring {
+        Semiring::SumProd => vec![0f32; n],
+        Semiring::MinPlus => Vec::new(),
+    };
+    // Independent out-degree derivation (not the plan's copy).
+    let outdeg = {
+        let mut deg = vec![0u32; n];
+        for sg in &part.subgraphs {
+            let base = sg.brow as usize * c;
+            let mut bits = sg.pattern.0;
+            while bits != 0 {
+                let bit = bits.trailing_zeros() as usize;
+                let v = base + bit / c;
+                if v < deg.len() {
+                    deg[v] += 1;
+                }
+                bits &= bits - 1;
+            }
+        }
+        deg
+    };
+
+    let all_blocks = program.processes_all_blocks();
+    let mut active_block = vec![false; num_blocks];
+    let mut next_active_block = vec![false; num_blocks];
+    if !all_blocks {
+        for (v, &val) in values.iter().enumerate() {
+            if val < INF {
+                active_block[v / c] = true;
+            }
+        }
+    }
+
+    let mut trace = config.trace_activity.then(|| ActivityTrace::new(n_total as usize));
+    let mut prev_reads = vec![0u64; n_total as usize];
+    let mut prev_writes = vec![0u64; n_total as usize];
+    if trace.is_some() {
+        for (i, e) in engines.iter().enumerate() {
+            prev_reads[i] = e.counts.read_bits;
+            prev_writes[i] = e.counts.write_bits;
+        }
+    }
+
+    let kind = program.step_kind();
+    let mut exec_time_ns = 0f64;
+    let mut sys_counts = EventCounts::default();
+    let mut iterations = 0u64;
+    let mut static_ops = 0u64;
+    let mut dynamic_ops = 0u64;
+    let mut dynamic_hits = 0u64;
+    let mut supersteps = 0usize;
+
+    let mut sup_ops: Vec<u32> = Vec::new();
+    let mut sup_dst: Vec<u32> = Vec::new();
+    let mut xs: Vec<f32> = Vec::new();
+    let mut cand: Vec<f32> = Vec::new();
+
+    let lat_mvm = crate::cost::timing::mvm_latency_ns(params, c as u32, c as u32)
+        + crate::cost::timing::reduce_latency_ns(params, c as u32);
+
+    for superstep in 0..program.max_supersteps() {
+        snapshot.copy_from_slice(&values);
+        sup_ops.clear();
+        sup_dst.clear();
+
+        let mut entry_idx = 0usize;
+        for group in st.iter_groups() {
+            let mut ops_in_group = 0u64;
+            for entry in group {
+                let global = entry_idx;
+                entry_idx += 1;
+                if !all_blocks && !active_block[entry.src_start as usize / c] {
+                    continue;
+                }
+                ops_in_group += 1;
+                let ct_entry = &ct.entries[entry.pattern_rank as usize];
+                let pattern = ct_entry.pattern;
+                let rows = ct_entry.active_rows;
+                if ct_entry.is_static() {
+                    let slot = if ct_entry.slots.len() == 1 {
+                        ct_entry.slots[0]
+                    } else {
+                        *ct_entry
+                            .slots
+                            .iter()
+                            .min_by(|a, b| {
+                                engines[a.engine as usize]
+                                    .busy_ns
+                                    .total_cmp(&engines[b.engine as usize].busy_ns)
+                            })
+                            .expect("static entry has a slot")
+                    };
+                    let read_rows =
+                        if ct_entry.row_addr.is_some() { 1 } else { rows.max(1) as u64 };
+                    engines[slot.engine as usize].mvm_precomputed(
+                        slot.crossbar as usize,
+                        read_rows,
+                        lat_mvm,
+                    );
+                    static_ops += 1;
+                } else {
+                    let hit = if config.dynamic_reuse {
+                        dyn_dir.get(&pattern).copied().filter(|&k| !retired[k])
+                    } else {
+                        None
+                    };
+                    let k = match hit {
+                        Some(k) => {
+                            dynamic_hits += 1;
+                            k
+                        }
+                        None => loop {
+                            // Retire-then-repick (mirrors the fixed
+                            // interpreter; see sched/scheduler.rs).
+                            let k = policy.pick(&retired).ok_or_else(|| {
+                                anyhow::anyhow!("all dynamic crossbars retired (wear-out)")
+                            })?;
+                            let (ei, cb) = slot_pos(k);
+                            let old = slot_pattern[k];
+                            if !old.is_empty() {
+                                dyn_dir.remove(&old);
+                                slot_pattern[k] = Pattern::EMPTY;
+                            }
+                            engines[ei].configure(cb, pattern, params);
+                            if engines[ei].crossbars[cb].worn_out(params.endurance_cycles) {
+                                retired[k] = true;
+                                continue;
+                            }
+                            slot_pattern[k] = pattern;
+                            dyn_dir.insert(pattern, k);
+                            break k;
+                        },
+                    };
+                    let (ei, cb) = slot_pos(k);
+                    engines[ei].mvm_precomputed(cb, rows.max(1) as u64, lat_mvm);
+                    policy.touch(k);
+                    dynamic_ops += 1;
+                }
+                sup_ops.push(global as u32);
+                sup_dst.push(entry.dst_start);
+            }
+            if ops_in_group == 0 {
+                continue;
+            }
+            iterations += 1;
+            sys_counts.main_mem_accesses += 2 * ops_in_group.div_ceil(16);
+            if let Some(t) = trace.as_mut() {
+                t.push_iteration(engines.iter().enumerate().map(|(i, e)| {
+                    let dr = (e.counts.read_bits - prev_reads[i]) as u32;
+                    let dw = (e.counts.write_bits - prev_writes[i]) as u32;
+                    prev_reads[i] = e.counts.read_bits;
+                    prev_writes[i] = e.counts.write_bits;
+                    (dr, dw)
+                }));
+            }
+        }
+
+        let mut max_busy = 0f64;
+        for e in engines.iter_mut() {
+            let (busy, _) = e.end_iteration();
+            max_busy = max_busy.max(busy);
+        }
+        exec_time_ns += max_busy;
+
+        if sup_ops.is_empty() {
+            break;
+        }
+
+        xs.clear();
+        xs.reserve(sup_ops.len() * c);
+        for &op in &sup_ops {
+            let src_start = st.entries[op as usize].src_start as usize;
+            for i in 0..c {
+                let v = src_start + i;
+                if v < n {
+                    xs.push(program.source_value(snapshot[v], outdeg[v]));
+                } else {
+                    xs.push(super::executor::identity(kind));
+                }
+            }
+        }
+        executor.execute(kind, pre.plan.batch(&sup_ops), &xs, &mut cand)?;
+
+        let mut any_changed = false;
+        match semiring {
+            Semiring::MinPlus => {
+                next_active_block.iter_mut().for_each(|b| *b = false);
+                for (k, &dst_start) in sup_dst.iter().enumerate() {
+                    for j in 0..c {
+                        let v = dst_start as usize + j;
+                        if v >= n {
+                            break;
+                        }
+                        let old = values[v];
+                        let new = program.apply(old, cand[k * c + j]);
+                        if program.changed(old, new) {
+                            values[v] = new;
+                            next_active_block[v / c] = true;
+                            any_changed = true;
+                        }
+                    }
+                }
+                std::mem::swap(&mut active_block, &mut next_active_block);
+            }
+            Semiring::SumProd => {
+                for (k, &dst_start) in sup_dst.iter().enumerate() {
+                    for j in 0..c {
+                        let v = dst_start as usize + j;
+                        if v >= n {
+                            break;
+                        }
+                        acc[v] += cand[k * c + j];
+                    }
+                }
+                any_changed = true;
+            }
+        }
+
+        supersteps = superstep + 1;
+        if !program.post_superstep(superstep, &mut values, &mut acc, any_changed) {
+            break;
+        }
+    }
+
+    let mut counts = sys_counts;
+    let mut summaries = Vec::with_capacity(engines.len());
+    let mut max_dyn_writes = 0u32;
+    for e in &engines {
+        counts.add(&e.counts);
+        if e.kind == EngineKind::Dynamic {
+            max_dyn_writes = max_dyn_writes.max(e.max_cell_writes());
+        }
+        summaries.push(EngineSummary {
+            id: e.id,
+            is_static: e.kind == EngineKind::Static,
+            read_bits: e.counts.read_bits,
+            write_bits: e.counts.write_bits,
+            mvm_ops: e.counts.mvm_ops,
+            reconfigs: e.counts.reconfigs,
+            max_cell_writes: e.max_cell_writes(),
+        });
+    }
+    counts.read_bits -= counts_baseline.read_bits;
+    counts.write_bits -= counts_baseline.write_bits;
+    counts.sense_ops -= counts_baseline.sense_ops;
+    counts.sram_accesses -= counts_baseline.sram_accesses;
+    counts.adc_ops -= counts_baseline.adc_ops;
+    counts.alu_ops -= counts_baseline.alu_ops;
+    counts.main_mem_accesses -= counts_baseline.main_mem_accesses;
+    counts.mvm_ops -= counts_baseline.mvm_ops;
+    counts.reconfigs -= counts_baseline.reconfigs;
+
+    Ok(RunResult {
+        values,
+        counts,
+        init_counts,
+        exec_time_ns,
+        init_time_ns,
+        supersteps,
+        iterations,
+        static_ops,
+        dynamic_ops,
+        dynamic_hits,
+        max_dynamic_cell_writes: max_dyn_writes,
+        engines: summaries,
+        activity: trace,
+    })
+}

@@ -1,0 +1,650 @@
+//! `ExecutionPlan` — the compiled scheduling IR (compile the schedule once,
+//! interpret it per superstep).
+//!
+//! The paper's central observation is that the subgraph/pattern structure
+//! is **static per graph**: static engines are configured once and most
+//! ops need no reconfiguration. The seed scheduler nevertheless re-derived
+//! every scheduling decision inside the superstep hot loop — a
+//! `HashMap<Pattern, usize>` lookup per dynamic op, a CT indirection and a
+//! slot scan per static op, and a rebuild of the `xs`/dense-weight shapes
+//! per executor call. This module compiles all of that, once per
+//! `(graph, architecture)` pair, into a flat index-interned IR that
+//! `Scheduler::run` merely interprets. The plan rides inside
+//! [`Preprocessed`](crate::accel::Preprocessed), so the session
+//! `ArtifactStore` hands the *same compiled plan* to every serve worker
+//! and repeat job with the same `(dataset, scale, weighted, arch)` key.
+//!
+//! # IR ↔ Algorithm 2 mapping
+//!
+//! | IR field                         | Algorithm 2 role                                        |
+//! |----------------------------------|---------------------------------------------------------|
+//! | [`ExecutionPlan::static_config`] | ll. 6–8: one-time static engine configuration           |
+//! | [`ExecutionPlan::groups`]        | l. 9: batches of subgraphs sharing dest. (src.) vertices |
+//! | [`PlanOp::slot_range`] (via [`ExecutionPlan::slots_of`]) | l. 11: "pattern pinned to a static engine?" — pre-resolved replica candidates |
+//! | [`PlanOp::read_rows`]            | l. 12: static MVM with the CT row-address shortcut      |
+//! | [`PlanOp::pattern_rank`]         | ll. 13–15: dynamic path — rank-interned pattern id for the directory and [`ExecutionPlan::pattern_of_rank`] for `configure` |
+//! | [`PlanOp::rows`]                 | l. 15: dynamic MVM wordline count                       |
+//! | [`PlanOp::src_block`]            | frontier mask test (which block-row feeds this op)      |
+//! | `op_bits` / `weights`            | the numeric edge-compute operands consumed by [`StepBatch`] |
+//!
+//! Everything mutable at run time (engine busy-times, the rank-keyed
+//! dynamic directory, the frontier bitmap, wear state) stays in the
+//! interpreter; everything decidable ahead of time lives here as data.
+//! Because all per-op decisions are data, batch-parallel execution across
+//! engines becomes a plan transformation rather than a scheduler rewrite.
+//!
+//! The plan deliberately *owns* its executor operands (packed bits,
+//! flattened weights in execution order) rather than borrowing from
+//! [`Partitioned`]: executors stay independent of the pattern layer and
+//! read cache-contiguous slices. The cost is a second copy of the bit
+//! patterns (8 B/op) and, for weighted graphs, of the edge weights,
+//! alongside the `Partitioned` kept in the same cached artifact.
+
+use crate::accel::config::ArchConfig;
+use crate::pattern::extract::Partitioned;
+use crate::pattern::tables::{ConfigTable, EngineSlot, ExecOrder, StaticAssignment, SubgraphTable};
+use crate::pattern::Pattern;
+
+/// One compiled per-op record: Algorithm 2's per-subgraph decisions
+/// resolved to indices. Laid out contiguously in execution order,
+/// grouped exactly like the subgraph table's destination (source) groups.
+#[derive(Debug, Clone, Copy)]
+pub struct PlanOp {
+    /// Index into `Partitioned::subgraphs` (stable subgraph identity).
+    pub sg_idx: u32,
+    /// First source vertex (wordline gather base).
+    pub src_start: u32,
+    /// First destination vertex (candidate scatter base).
+    pub dst_start: u32,
+    /// Block row feeding this op — the frontier bitmap masks on this.
+    pub src_block: u32,
+    /// Rank-interned pattern id (index into the CT ranking). The dynamic
+    /// directory is a dense vector over these ranks — no `Pattern` hash
+    /// keys anywhere in the hot loop.
+    pub pattern_rank: u32,
+    /// Driven wordlines for a dynamic MVM (`active_rows`, min 1).
+    pub rows: u32,
+    /// Rows actually read on the static path: 1 when the CT row-address
+    /// shortcut applies (single-edge pattern, §III.B), else `rows`.
+    pub read_rows: u32,
+    /// Pre-resolved static slot candidates: `slot_range` into the plan's
+    /// slot pool. Empty range = dynamic op.
+    slot_start: u32,
+    slot_len: u32,
+}
+
+impl PlanOp {
+    /// Is this op served by a static engine (Alg. 2 l. 11)?
+    #[inline]
+    pub fn is_static(&self) -> bool {
+        self.slot_len > 0
+    }
+
+    /// Candidate-slot range into the plan's slot pool.
+    #[inline]
+    pub fn slot_range(&self) -> std::ops::Range<usize> {
+        self.slot_start as usize..(self.slot_start + self.slot_len) as usize
+    }
+}
+
+/// The compiled schedule for one `(graph, architecture)` pair.
+#[derive(Debug, Clone)]
+pub struct ExecutionPlan {
+    /// Crossbar size C the plan was compiled for.
+    pub c: usize,
+    pub num_vertices: u32,
+    /// Block rows/cols of the adjacency matrix (frontier bitmap length).
+    pub num_blocks: u32,
+    /// Whether edge weights were kept by partitioning (SSSP).
+    pub weighted: bool,
+    /// Distinct patterns — the dynamic directory is a dense vec of this
+    /// length, indexed by `PlanOp::pattern_rank`.
+    pub num_patterns: u32,
+    // Engine geometry and schedule shape the plan was compiled against;
+    // the interpreter refuses to run a plan against a mismatched
+    // ArchConfig.
+    pub static_engines: u32,
+    pub total_engines: u32,
+    pub crossbars_per_engine: u32,
+    /// Execution order baked into the group structure.
+    pub order: ExecOrder,
+    /// Static-assignment policy the slot section was built with.
+    pub static_assignment: StaticAssignment,
+    /// Per-op records, contiguous in execution order.
+    pub ops: Vec<PlanOp>,
+    /// `groups[g]..groups[g+1]` delimits batch g in `ops` (Alg. 2 l. 9).
+    pub groups: Vec<u32>,
+    /// Flattened static-slot candidates (`PlanOp::slot_range` indexes here).
+    slot_pool: Vec<EngineSlot>,
+    /// One-time static configuration (Alg. 2 ll. 6–8), in CT rank order.
+    static_config: Vec<(EngineSlot, Pattern)>,
+    /// rank → pattern, for dynamic `configure` (ll. 13–15).
+    rank_pattern: Vec<Pattern>,
+    /// Per-op packed pattern bits, aligned with `ops`.
+    op_bits: Vec<u64>,
+    /// Per-op weight ranges into `weights` (len ops+1; empty if unweighted).
+    weight_off: Vec<u32>,
+    /// Flattened per-op edge weights in bit (cell) order.
+    weights: Vec<f32>,
+    /// Out-degree per vertex (PageRank wordline scaling), built once.
+    out_degrees: Vec<u32>,
+}
+
+/// Static-slot sections derived from a config table: the slot pool,
+/// per-rank candidate ranges, and the init-time configuration list.
+fn slot_sections(
+    ct: &ConfigTable,
+) -> (Vec<EngineSlot>, Vec<(u32, u32)>, Vec<(EngineSlot, Pattern)>) {
+    let mut pool = Vec::new();
+    let mut ranges = Vec::with_capacity(ct.len());
+    let mut init = Vec::new();
+    for entry in &ct.entries {
+        let start = pool.len() as u32;
+        for &slot in &entry.slots {
+            pool.push(slot);
+            init.push((slot, entry.pattern));
+        }
+        ranges.push((start, entry.slots.len() as u32));
+    }
+    (pool, ranges, init)
+}
+
+impl ExecutionPlan {
+    /// Compile the schedule from the Alg.-1 outputs and the architecture.
+    /// Op order mirrors `st.entries` exactly (one op per subgraph, in
+    /// execution order), so plan op index g equals subgraph-table entry
+    /// index g — the differential oracle relies on this.
+    pub fn build(
+        part: &Partitioned,
+        ct: &ConfigTable,
+        st: &SubgraphTable,
+        arch: &ArchConfig,
+    ) -> Self {
+        let c = part.c;
+        let weighted = part.weights.is_some();
+        let (slot_pool, rank_slots, static_config) = slot_sections(ct);
+
+        let mut ops = Vec::with_capacity(st.len());
+        let mut op_bits = Vec::with_capacity(st.len());
+        let mut weight_off = Vec::new();
+        let mut weights = Vec::new();
+        if weighted {
+            weight_off.reserve(st.len() + 1);
+            weight_off.push(0);
+        }
+        for e in &st.entries {
+            let sg = &part.subgraphs[e.sg_idx as usize];
+            let entry = ct.entry_at(e.pattern_rank);
+            let rows = entry.active_rows.max(1);
+            let (slot_start, slot_len) = rank_slots[e.pattern_rank as usize];
+            ops.push(PlanOp {
+                sg_idx: e.sg_idx,
+                src_start: e.src_start,
+                dst_start: e.dst_start,
+                src_block: e.src_start / c as u32,
+                pattern_rank: e.pattern_rank,
+                rows,
+                read_rows: if entry.row_addr.is_some() { 1 } else { rows },
+                slot_start,
+                slot_len,
+            });
+            op_bits.push(sg.pattern.0);
+            if weighted {
+                weights.extend_from_slice(&part.weights.as_ref().unwrap()[e.sg_idx as usize]);
+                weight_off.push(weights.len() as u32);
+            }
+        }
+
+        Self {
+            c,
+            num_vertices: part.num_vertices,
+            num_blocks: part.num_blocks(),
+            weighted,
+            num_patterns: ct.len() as u32,
+            static_engines: arch.static_engines,
+            total_engines: arch.total_engines,
+            crossbars_per_engine: arch.crossbars_per_engine,
+            order: st.order,
+            static_assignment: arch.static_assignment,
+            ops,
+            groups: st.groups.clone(),
+            slot_pool,
+            static_config,
+            rank_pattern: ct.entries.iter().map(|e| e.pattern).collect(),
+            op_bits,
+            weight_off,
+            weights,
+            out_degrees: out_degrees(part),
+        }
+    }
+
+    /// An executor-only plan straight from a partitioning: one op per
+    /// subgraph in partition order (op index == subgraph index), no
+    /// static-slot section, a single group. Lets executor callers (unit
+    /// tests, microbenches, PJRT cross-checks) drive [`StepBatch`]es
+    /// without running Alg. 1; it is not schedulable — the interpreter
+    /// rejects its zeroed engine geometry.
+    pub fn from_partitioned(part: &Partitioned) -> Self {
+        let c = part.c;
+        let weighted = part.weights.is_some();
+        let n = part.subgraphs.len();
+        let mut weight_off = Vec::new();
+        let mut weights = Vec::new();
+        if weighted {
+            weight_off.reserve(n + 1);
+            weight_off.push(0);
+        }
+        let mut ops = Vec::with_capacity(n);
+        let mut op_bits = Vec::with_capacity(n);
+        for (k, sg) in part.subgraphs.iter().enumerate() {
+            let rows = sg.pattern.active_row_count(c).max(1);
+            ops.push(PlanOp {
+                sg_idx: k as u32,
+                src_start: sg.brow * c as u32,
+                dst_start: sg.bcol * c as u32,
+                src_block: sg.brow,
+                pattern_rank: k as u32,
+                rows,
+                read_rows: rows,
+                slot_start: 0,
+                slot_len: 0,
+            });
+            op_bits.push(sg.pattern.0);
+            if weighted {
+                weights.extend_from_slice(&part.weights.as_ref().unwrap()[k]);
+                weight_off.push(weights.len() as u32);
+            }
+        }
+        Self {
+            c,
+            num_vertices: part.num_vertices,
+            num_blocks: part.num_blocks(),
+            weighted,
+            num_patterns: n as u32,
+            static_engines: 0,
+            total_engines: 0,
+            crossbars_per_engine: 0,
+            order: ExecOrder::default(),
+            static_assignment: StaticAssignment::default(),
+            ops,
+            groups: vec![0, n as u32],
+            slot_pool: Vec::new(),
+            static_config: Vec::new(),
+            rank_pattern: part.subgraphs.iter().map(|s| s.pattern).collect(),
+            op_bits,
+            weight_off,
+            weights,
+            out_degrees: out_degrees(part),
+        }
+    }
+
+    /// Recompile only the static-slot section against a new config table
+    /// (same ranking — same graph). The DSE static-split sweep calls this
+    /// per candidate N instead of recompiling the whole plan: op records,
+    /// gather data, and weights are split-independent. Errors (like the
+    /// interpreter's own mismatch guard) on a config table from another
+    /// ranking or an architecture whose execution order differs from the
+    /// one baked into the plan's groups.
+    pub fn rebuild_static_slots(
+        &mut self,
+        ct: &ConfigTable,
+        arch: &ArchConfig,
+    ) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            ct.len() as u32 == self.num_patterns,
+            "static-slot rebuild requires the plan's own pattern ranking \
+             ({} patterns, config table has {})",
+            self.num_patterns,
+            ct.len()
+        );
+        anyhow::ensure!(
+            arch.order == self.order,
+            "static-slot rebuild cannot change the execution order \
+             (plan {:?}, requested {:?})",
+            self.order,
+            arch.order
+        );
+        // The slot section must actually encode the layout `arch` asks
+        // for, or `matches()` would later vouch for a layout the caller
+        // never requested.
+        anyhow::ensure!(
+            ct.assignment == arch.static_assignment
+                && ct.num_static_engines == arch.static_engines
+                && ct.crossbars_per_engine == arch.crossbars_per_engine,
+            "config table ({:?}, N={}, M={}) does not match the requested \
+             architecture ({:?}, N={}, M={})",
+            ct.assignment,
+            ct.num_static_engines,
+            ct.crossbars_per_engine,
+            arch.static_assignment,
+            arch.static_engines,
+            arch.crossbars_per_engine
+        );
+        let (slot_pool, rank_slots, static_config) = slot_sections(ct);
+        for op in &mut self.ops {
+            let (start, len) = rank_slots[op.pattern_rank as usize];
+            op.slot_start = start;
+            op.slot_len = len;
+        }
+        self.slot_pool = slot_pool;
+        self.static_config = static_config;
+        self.static_engines = arch.static_engines;
+        self.total_engines = arch.total_engines;
+        self.crossbars_per_engine = arch.crossbars_per_engine;
+        self.static_assignment = arch.static_assignment;
+        Ok(())
+    }
+
+    /// Does the plan's compiled geometry and schedule shape match
+    /// `arch`? The interpreter refuses to run on a mismatch (a plan
+    /// compiled for another split would dispatch to engines that don't
+    /// exist; one compiled under another execution order or assignment
+    /// policy would batch and pin ops the caller didn't ask for).
+    pub fn matches(&self, arch: &ArchConfig) -> bool {
+        self.c == arch.crossbar_size
+            && self.static_engines == arch.static_engines
+            && self.total_engines == arch.total_engines
+            && self.crossbars_per_engine == arch.crossbars_per_engine
+            && self.order == arch.order
+            && self.static_assignment == arch.static_assignment
+    }
+
+    pub fn num_ops(&self) -> usize {
+        self.ops.len()
+    }
+
+    pub fn num_groups(&self) -> usize {
+        self.groups.len() - 1
+    }
+
+    /// Bounds of group `g` in `ops`.
+    #[inline]
+    pub fn group_bounds(&self, g: usize) -> (usize, usize) {
+        (self.groups[g] as usize, self.groups[g + 1] as usize)
+    }
+
+    /// Pre-resolved static slot candidates of `op` (empty = dynamic).
+    #[inline]
+    pub fn slots_of(&self, op: &PlanOp) -> &[EngineSlot] {
+        &self.slot_pool[op.slot_range()]
+    }
+
+    /// One-time static engine configuration (Alg. 2 ll. 6–8).
+    pub fn static_config(&self) -> &[(EngineSlot, Pattern)] {
+        &self.static_config
+    }
+
+    /// Pattern for a rank — the only place the dynamic path ever needs
+    /// the actual `Pattern` (to program a crossbar).
+    #[inline]
+    pub fn pattern_of_rank(&self, rank: u32) -> Pattern {
+        self.rank_pattern[rank as usize]
+    }
+
+    /// Out-degree per vertex (built once at compile time).
+    #[inline]
+    pub fn out_degrees(&self) -> &[u32] {
+        &self.out_degrees
+    }
+
+    /// Select `op_ids` (plan op indices) as one executor batch.
+    #[inline]
+    pub fn batch<'a>(&'a self, op_ids: &'a [u32]) -> StepBatch<'a> {
+        StepBatch { plan: self, op_ids }
+    }
+}
+
+/// Out-degree per vertex, reconstructed from the partitioning (the ST is
+/// the only main-memory representation at runtime).
+fn out_degrees(part: &Partitioned) -> Vec<u32> {
+    let c = part.c;
+    let mut deg = vec![0u32; part.num_vertices as usize];
+    for sg in &part.subgraphs {
+        let base = sg.brow as usize * c;
+        let mut bits = sg.pattern.0;
+        while bits != 0 {
+            let bit = bits.trailing_zeros() as usize;
+            let v = base + bit / c;
+            if v < deg.len() {
+                deg[v] += 1;
+            }
+            bits &= bits - 1;
+        }
+    }
+    deg
+}
+
+/// A selected slice of plan ops handed to a
+/// [`StepExecutor`](crate::sched::StepExecutor): the executor reads plan-owned operands
+/// (packed bits, weight slices, dense matrices) through positional
+/// accessors instead of rebuilding shapes from a `Partitioned` per call.
+#[derive(Debug, Clone, Copy)]
+pub struct StepBatch<'a> {
+    plan: &'a ExecutionPlan,
+    op_ids: &'a [u32],
+}
+
+impl<'a> StepBatch<'a> {
+    /// Crossbar size (lane width of `xs`/`out`).
+    #[inline]
+    pub fn c(&self) -> usize {
+        self.plan.c
+    }
+
+    /// Number of selected ops.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.op_ids.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.op_ids.is_empty()
+    }
+
+    /// Whether the plan carries edge weights (SSSP operands).
+    #[inline]
+    pub fn weighted(&self) -> bool {
+        self.plan.weighted
+    }
+
+    /// Packed pattern bits of the k-th selected op.
+    #[inline]
+    pub fn bits(&self, k: usize) -> u64 {
+        self.plan.op_bits[self.op_ids[k] as usize]
+    }
+
+    /// Edge weights of the k-th selected op, in bit (cell) order.
+    /// Panics when the plan is unweighted — check [`weighted`](Self::weighted) first.
+    #[inline]
+    pub fn weights_of(&self, k: usize) -> &'a [f32] {
+        let op = self.op_ids[k] as usize;
+        &self.plan.weights[self.plan.weight_off[op] as usize..self.plan.weight_off[op + 1] as usize]
+    }
+
+    /// Write the k-th selected op's dense C×C weight matrix into `out`
+    /// (which must be zeroed, length C²) straight from the plan-owned
+    /// packed bits/weights — the PJRT packing path, with memory bounded
+    /// by the dispatch chunk rather than the graph.
+    #[inline]
+    pub fn dense_into(&self, k: usize, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.plan.c * self.plan.c);
+        let op = self.op_ids[k] as usize;
+        let mut bits = self.plan.op_bits[op];
+        if self.plan.weighted {
+            let w = self.weights_of(k);
+            let mut nth = 0usize;
+            while bits != 0 {
+                out[bits.trailing_zeros() as usize] = w[nth];
+                bits &= bits - 1;
+                nth += 1;
+            }
+        } else {
+            while bits != 0 {
+                out[bits.trailing_zeros() as usize] = 1.0;
+                bits &= bits - 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::coo::{Coo, Edge};
+    use crate::pattern::extract::partition;
+    use crate::pattern::rank::PatternRanking;
+    use crate::pattern::tables::ExecOrder;
+
+    fn setup(weighted: bool) -> (Partitioned, ConfigTable, SubgraphTable, ArchConfig) {
+        let g = Coo::from_edges(
+            8,
+            vec![
+                Edge::weighted(0, 1, 2.0),
+                Edge::weighted(2, 3, 3.0),
+                Edge::weighted(4, 5, 4.0),
+                Edge::weighted(6, 6, 5.0),
+                Edge::weighted(0, 5, 6.0),
+                Edge::weighted(1, 4, 7.0),
+            ],
+        );
+        let arch = ArchConfig {
+            crossbar_size: 2,
+            total_engines: 4,
+            static_engines: 2,
+            ..ArchConfig::default()
+        };
+        let part = partition(&g, 2, weighted);
+        let ranking = PatternRanking::from_partitioned(&part);
+        let ct = ConfigTable::build(&ranking, 2, 2, 1, 2, arch.static_assignment);
+        let st = SubgraphTable::build(&part, &ranking, ExecOrder::ColumnMajor);
+        (part, ct, st, arch)
+    }
+
+    #[test]
+    fn plan_ops_mirror_subgraph_table() {
+        let (part, ct, st, arch) = setup(false);
+        let plan = ExecutionPlan::build(&part, &ct, &st, &arch);
+        assert_eq!(plan.num_ops(), st.len());
+        assert_eq!(plan.groups, st.groups);
+        for (op, e) in plan.ops.iter().zip(&st.entries) {
+            assert_eq!(op.sg_idx, e.sg_idx);
+            assert_eq!(op.src_start, e.src_start);
+            assert_eq!(op.dst_start, e.dst_start);
+            assert_eq!(op.pattern_rank, e.pattern_rank);
+            assert_eq!(op.src_block, e.src_start / 2);
+            let entry = ct.entry_at(e.pattern_rank);
+            assert_eq!(op.is_static(), entry.is_static());
+            assert_eq!(plan.slots_of(op), &entry.slots[..]);
+            assert_eq!(op.rows, entry.active_rows.max(1));
+            let want_read = if entry.row_addr.is_some() { 1 } else { op.rows };
+            assert_eq!(op.read_rows, want_read);
+        }
+    }
+
+    #[test]
+    fn static_config_matches_ct_assignments() {
+        let (part, ct, st, arch) = setup(false);
+        let plan = ExecutionPlan::build(&part, &ct, &st, &arch);
+        let want: Vec<_> = ct.static_assignments().map(|(e, s)| (s, e.pattern)).collect();
+        assert_eq!(plan.static_config(), &want[..]);
+        assert!(plan.matches(&arch));
+    }
+
+    #[test]
+    fn rebuild_static_slots_changes_only_the_slot_section() {
+        let (part, ct, st, arch) = setup(false);
+        let mut plan = ExecutionPlan::build(&part, &ct, &st, &arch);
+        let before: Vec<_> = plan.ops.iter().map(|o| (o.sg_idx, o.rows, o.read_rows)).collect();
+
+        let ranking = PatternRanking::from_partitioned(&part);
+        let arch0 = ArchConfig { static_engines: 0, ..arch.clone() };
+        let ct0 = ConfigTable::build(&ranking, 2, 0, 1, 4, arch0.static_assignment);
+        plan.rebuild_static_slots(&ct0, &arch0).unwrap();
+        assert!(plan.matches(&arch0));
+        assert!(plan.static_config().is_empty());
+        assert!(plan.ops.iter().all(|o| !o.is_static()));
+        let after: Vec<_> = plan.ops.iter().map(|o| (o.sg_idx, o.rows, o.read_rows)).collect();
+        assert_eq!(before, after, "non-slot op fields must be untouched");
+
+        // A rebuild that would change the baked-in execution order (or
+        // use a foreign ranking) is rejected, not silently applied.
+        let rm = ArchConfig { order: ExecOrder::RowMajor, ..arch0 };
+        assert!(plan.rebuild_static_slots(&ct0, &rm).is_err());
+    }
+
+    #[test]
+    fn batch_exposes_bits_weights_and_dense() {
+        let (part, ct, st, arch) = setup(true);
+        let plan = ExecutionPlan::build(&part, &ct, &st, &arch);
+        let ids: Vec<u32> = (0..plan.num_ops() as u32).collect();
+        let batch = plan.batch(&ids);
+        assert!(batch.weighted());
+        let mut got = vec![0f32; 4];
+        let mut want = vec![0f32; 4];
+        for k in 0..batch.len() {
+            let op = &plan.ops[k];
+            let sg = &part.subgraphs[op.sg_idx as usize];
+            assert_eq!(batch.bits(k), sg.pattern.0);
+            assert_eq!(batch.weights_of(k).len(), sg.pattern.nnz() as usize);
+            got.iter_mut().for_each(|x| *x = 0.0);
+            want.iter_mut().for_each(|x| *x = 0.0);
+            batch.dense_into(k, &mut got);
+            part.dense_weights_into(op.sg_idx as usize, &mut want);
+            assert_eq!(got, want);
+        }
+    }
+
+    #[test]
+    fn from_partitioned_is_identity_over_subgraphs() {
+        let (part, _, _, _) = setup(true);
+        let plan = ExecutionPlan::from_partitioned(&part);
+        assert_eq!(plan.num_ops(), part.num_subgraphs());
+        assert_eq!(plan.num_groups(), 1);
+        for (k, (op, sg)) in plan.ops.iter().zip(&part.subgraphs).enumerate() {
+            assert_eq!(op.sg_idx as usize, k);
+            assert_eq!(op.src_start, sg.brow * 2);
+            assert!(!op.is_static());
+        }
+        // Not schedulable: zeroed geometry never matches a valid arch.
+        assert!(!plan.matches(&ArchConfig::default()));
+    }
+
+    #[test]
+    fn out_degrees_count_edges_per_source() {
+        let (part, ct, st, arch) = setup(false);
+        let plan = ExecutionPlan::build(&part, &ct, &st, &arch);
+        let deg = plan.out_degrees();
+        assert_eq!(deg.len(), 8);
+        assert_eq!(deg[0], 2); // edges (0,1) and (0,5)
+        assert_eq!(deg[6], 1); // self-loop (6,6)
+        assert_eq!(deg.iter().sum::<u32>(), 6);
+    }
+
+    #[test]
+    fn matches_rejects_differing_order_and_assignment() {
+        let (part, ct, st, arch) = setup(false);
+        let plan = ExecutionPlan::build(&part, &ct, &st, &arch);
+        assert!(plan.matches(&arch));
+        let other_order = ArchConfig { order: ExecOrder::RowMajor, ..arch.clone() };
+        assert!(!plan.matches(&other_order), "order is baked into the groups");
+        let other_assign = ArchConfig {
+            static_assignment: crate::pattern::tables::StaticAssignment::TopK,
+            ..arch.clone()
+        };
+        assert!(!plan.matches(&other_assign), "assignment shapes the slot section");
+    }
+
+    #[test]
+    fn empty_graph_plan() {
+        let part = partition(&Coo::from_edges(4, vec![]), 2, false);
+        let ranking = PatternRanking::from_partitioned(&part);
+        let arch = ArchConfig { crossbar_size: 2, ..ArchConfig::default() };
+        let ct = ConfigTable::build(&ranking, 2, 16, 1, 16, arch.static_assignment);
+        let st = SubgraphTable::build(&part, &ranking, ExecOrder::ColumnMajor);
+        let plan = ExecutionPlan::build(&part, &ct, &st, &arch);
+        assert_eq!(plan.num_ops(), 0);
+        assert_eq!(plan.num_groups(), 1);
+        assert_eq!(plan.group_bounds(0), (0, 0));
+    }
+}

@@ -1,4 +1,5 @@
-//! Graph processing & scheduling — paper Algorithm 2.
+//! Graph processing & scheduling — paper Algorithm 2, as a thin
+//! interpreter over a compiled [`ExecutionPlan`].
 //!
 //! Static engines are configured once at initialization; subgraphs are
 //! then processed in batches that share destination (column-major) or
@@ -8,11 +9,18 @@
 //! the rest go to a dynamic engine picked by the replacement policy
 //! (reconfiguring it unless it already holds the pattern).
 //!
+//! All per-op decisions (static slot candidates, read-row counts, pattern
+//! ranks, gather bases) are data in the plan — compiled once per
+//! `(graph, architecture)` by [`ExecutionPlan::build`] and cached with the
+//! preprocessed artifact. The interpreter holds only mutable runtime
+//! state: engine busy-times, the rank-keyed dynamic directory, the
+//! frontier bitmap masking plan groups, and wear. The superstep hot loop
+//! performs no `HashMap<Pattern, _>` lookups and no `SubgraphTable`
+//! rescans.
+//!
 //! The scheduler is the paper's timing/energy model; numeric edge-compute
 //! values flow through a [`StepExecutor`] (native mirror or AOT/PJRT
 //! artifact) with synchronous (Jacobi) superstep semantics.
-
-use std::collections::HashMap;
 
 use anyhow::Result;
 
@@ -21,12 +29,13 @@ use crate::accel::config::ArchConfig;
 use crate::algo::traits::{Semiring, VertexProgram, INF};
 use crate::cost::{CostParams, EventCounts};
 use crate::engine::{EngineKind, GraphEngine};
-use crate::pattern::extract::Partitioned;
-use crate::pattern::tables::{ConfigTable, SubgraphTable};
-use crate::pattern::Pattern;
 
 use super::executor::StepExecutor;
+use super::plan::ExecutionPlan;
 use super::replacement::{build_policy, ReplacementPolicy};
+
+/// Sentinel for "no rank / no slot" in the dense dynamic directory.
+const NONE: u32 = u32::MAX;
 
 /// Per-engine summary for reports and the lifetime analysis.
 #[derive(Debug, Clone)]
@@ -89,24 +98,16 @@ impl RunResult {
     }
 }
 
-/// Algorithm 2 scheduler over a preprocessed graph.
+/// Algorithm 2 interpreter over a compiled execution plan.
 pub struct Scheduler<'a> {
     pub config: &'a ArchConfig,
     pub params: &'a CostParams,
-    pub part: &'a Partitioned,
-    pub ct: &'a ConfigTable,
-    pub st: &'a SubgraphTable,
+    pub plan: &'a ExecutionPlan,
 }
 
 impl<'a> Scheduler<'a> {
-    pub fn new(
-        config: &'a ArchConfig,
-        params: &'a CostParams,
-        part: &'a Partitioned,
-        ct: &'a ConfigTable,
-        st: &'a SubgraphTable,
-    ) -> Self {
-        Self { config, params, part, ct, st }
+    pub fn new(config: &'a ArchConfig, params: &'a CostParams, plan: &'a ExecutionPlan) -> Self {
+        Self { config, params, plan }
     }
 
     /// Slot index -> (engine index, crossbar index). Dynamic slots spread
@@ -124,21 +125,31 @@ impl<'a> Scheduler<'a> {
         executor: &mut dyn StepExecutor,
     ) -> Result<RunResult> {
         self.config.validate()?;
+        anyhow::ensure!(
+            self.plan.matches(self.config),
+            "execution plan was compiled for a different architecture \
+             (plan C={} N={} T={} M={})",
+            self.plan.c,
+            self.plan.static_engines,
+            self.plan.total_engines,
+            self.plan.crossbars_per_engine
+        );
         if program.needs_weights() {
             anyhow::ensure!(
-                self.part.weights.is_some(),
+                self.plan.weighted,
                 "{} requires weighted partitioning",
                 program.name()
             );
         }
-        let c = self.part.c;
-        let n = self.part.num_vertices as usize;
-        let num_blocks = self.part.num_blocks() as usize;
+        let plan = self.plan;
+        let c = plan.c;
+        let n = plan.num_vertices as usize;
+        let num_blocks = plan.num_blocks as usize;
         let n_static = self.config.static_engines;
         let n_total = self.config.total_engines;
         let m = self.config.crossbars_per_engine as usize;
 
-        // --- engines + policy + dynamic-content directory ---
+        // --- engines + policy + rank-keyed dynamic-content directory ---
         let mut engines: Vec<GraphEngine> = (0..n_total)
             .map(|i| {
                 let kind = if i < n_static { EngineKind::Static } else { EngineKind::Dynamic };
@@ -148,17 +159,15 @@ impl<'a> Scheduler<'a> {
         let n_dyn_slots = self.config.dynamic_engines() as usize * m;
         let mut policy: Box<dyn ReplacementPolicy> =
             build_policy(self.config.policy, n_dyn_slots);
-        let mut dyn_dir: HashMap<Pattern, usize> = HashMap::new();
-        let mut slot_pattern: Vec<Pattern> = vec![Pattern::EMPTY; n_dyn_slots];
+        // rank -> dynamic slot currently holding it (dense, no hashing).
+        let mut dyn_dir: Vec<u32> = vec![NONE; plan.num_patterns as usize];
+        // dynamic slot -> rank it holds.
+        let mut slot_rank: Vec<u32> = vec![NONE; n_dyn_slots];
         let mut retired: Vec<bool> = vec![false; n_dyn_slots];
 
         // --- initialization: configure static engines (Alg. 2 l. 6–8) ---
-        for (entry, slot) in self.ct.static_assignments() {
-            engines[slot.engine as usize].configure(
-                slot.crossbar as usize,
-                entry.pattern,
-                self.params,
-            );
+        for &(slot, pattern) in plan.static_config() {
+            engines[slot.engine as usize].configure(slot.crossbar as usize, pattern, self.params);
         }
         let mut init_counts = EventCounts::default();
         let mut init_time_ns = 0f64;
@@ -170,7 +179,7 @@ impl<'a> Scheduler<'a> {
         let counts_baseline = init_counts;
 
         // --- vertex state ---
-        let mut values = program.init(self.part.num_vertices);
+        let mut values = program.init(plan.num_vertices);
         anyhow::ensure!(values.len() == n, "program init length mismatch");
         let mut snapshot = values.clone();
         let semiring = program.semiring();
@@ -178,9 +187,9 @@ impl<'a> Scheduler<'a> {
             Semiring::SumProd => vec![0f32; n],
             Semiring::MinPlus => Vec::new(),
         };
-        let outdeg = self.out_degrees();
+        let outdeg = plan.out_degrees();
 
-        // Frontier at block-row granularity.
+        // Frontier at block-row granularity, masking plan groups.
         let all_blocks = program.processes_all_blocks();
         let mut active_block = vec![false; num_blocks];
         let mut next_active_block = vec![false; num_blocks];
@@ -220,8 +229,7 @@ impl<'a> Scheduler<'a> {
         let mut supersteps = 0usize;
 
         // Reused per-superstep buffers (no allocation in the hot loop).
-        let mut sup_sgs: Vec<u32> = Vec::new();
-        let mut sup_dst: Vec<u32> = Vec::new();
+        let mut sup_ops: Vec<u32> = Vec::new();
         let mut xs: Vec<f32> = Vec::new();
         let mut cand: Vec<f32> = Vec::new();
 
@@ -231,41 +239,36 @@ impl<'a> Scheduler<'a> {
 
         for superstep in 0..program.max_supersteps() {
             snapshot.copy_from_slice(&values);
-            sup_sgs.clear();
-            sup_dst.clear();
+            sup_ops.clear();
 
-            for group in self.st.iter_groups() {
+            for g in 0..plan.num_groups() {
+                let (start, end) = plan.group_bounds(g);
                 let mut ops_in_group = 0u64;
-                for entry in group {
-                    if !all_blocks && !active_block[entry.src_start as usize / c] {
+                for (off, op) in plan.ops[start..end].iter().enumerate() {
+                    if !all_blocks && !active_block[op.src_block as usize] {
                         continue;
                     }
                     ops_in_group += 1;
-                    let ct_entry = &self.ct.entries[entry.pattern_rank as usize];
-                    let pattern = ct_entry.pattern;
-                    let rows = ct_entry.active_rows;
-                    if ct_entry.is_static() {
+                    if op.is_static() {
                         // Static hit: vertex data only, no configuration.
                         // Among the pattern's replicas, queue on the
                         // least-busy engine (load balancing, §III.B).
-                        let slot = if ct_entry.slots.len() == 1 {
-                            ct_entry.slots[0]
+                        let slots = plan.slots_of(op);
+                        let slot = if slots.len() == 1 {
+                            slots[0]
                         } else {
-                            *ct_entry
-                                .slots
+                            *slots
                                 .iter()
                                 .min_by(|a, b| {
                                     engines[a.engine as usize]
                                         .busy_ns
                                         .total_cmp(&engines[b.engine as usize].busy_ns)
                                 })
-                                .expect("static entry has a slot")
+                                .expect("static op has a slot")
                         };
-                        let read_rows =
-                            if ct_entry.row_addr.is_some() { 1 } else { rows.max(1) as u64 };
                         engines[slot.engine as usize].mvm_precomputed(
                             slot.crossbar as usize,
-                            read_rows,
+                            op.read_rows as u64,
                             lat_mvm,
                         );
                         static_ops += 1;
@@ -273,8 +276,10 @@ impl<'a> Scheduler<'a> {
                         // Dynamic path (Alg. 2 l. 13–15). Alg. 2
                         // reconfigures unconditionally; content-aware
                         // reuse is the opt-in extension (config flag).
+                        let rank = op.pattern_rank as usize;
                         let hit = if self.config.dynamic_reuse {
-                            dyn_dir.get(&pattern).copied().filter(|&k| !retired[k])
+                            let k = dyn_dir[rank];
+                            (k != NONE && !retired[k as usize]).then_some(k as usize)
                         } else {
                             None
                         };
@@ -284,32 +289,44 @@ impl<'a> Scheduler<'a> {
                                 k
                             }
                             None => {
-                                let k = policy.pick(&retired).ok_or_else(|| {
-                                    anyhow::anyhow!("all dynamic crossbars retired (wear-out)")
-                                })?;
-                                let (ei, cb) = self.slot_pos(k);
-                                let old = slot_pattern[k];
-                                if !old.is_empty() {
-                                    dyn_dir.remove(&old);
+                                let pattern = plan.pattern_of_rank(op.pattern_rank);
+                                // Retire-then-repick: a crossbar whose
+                                // configuration write crosses the
+                                // endurance budget is retired on the spot
+                                // and must never serve the triggering MVM;
+                                // the op repicks until a healthy slot
+                                // holds the pattern.
+                                loop {
+                                    let k = policy.pick(&retired).ok_or_else(|| {
+                                        anyhow::anyhow!(
+                                            "all dynamic crossbars retired (wear-out)"
+                                        )
+                                    })?;
+                                    let (ei, cb) = self.slot_pos(k);
+                                    let old = slot_rank[k];
+                                    if old != NONE {
+                                        dyn_dir[old as usize] = NONE;
+                                        slot_rank[k] = NONE;
+                                    }
+                                    engines[ei].configure(cb, pattern, self.params);
+                                    if engines[ei].crossbars[cb]
+                                        .worn_out(self.params.endurance_cycles)
+                                    {
+                                        retired[k] = true;
+                                        continue;
+                                    }
+                                    slot_rank[k] = rank as u32;
+                                    dyn_dir[rank] = k as u32;
+                                    break k;
                                 }
-                                engines[ei].configure(cb, pattern, self.params);
-                                if engines[ei].crossbars[cb]
-                                    .worn_out(self.params.endurance_cycles)
-                                {
-                                    retired[k] = true;
-                                }
-                                slot_pattern[k] = pattern;
-                                dyn_dir.insert(pattern, k);
-                                k
                             }
                         };
                         let (ei, cb) = self.slot_pos(k);
-                        engines[ei].mvm_precomputed(cb, rows.max(1) as u64, lat_mvm);
+                        engines[ei].mvm_precomputed(cb, op.rows as u64, lat_mvm);
                         policy.touch(k);
                         dynamic_ops += 1;
                     }
-                    sup_sgs.push(entry.sg_idx);
-                    sup_dst.push(entry.dst_start);
+                    sup_ops.push((start + off) as u32);
                 }
                 if ops_in_group == 0 {
                     continue;
@@ -340,15 +357,15 @@ impl<'a> Scheduler<'a> {
             }
             exec_time_ns += max_busy;
 
-            if sup_sgs.is_empty() {
+            if sup_ops.is_empty() {
                 break;
             }
 
             // --- numeric phase: edge compute through the executor ---
             xs.clear();
-            xs.reserve(sup_sgs.len() * c);
-            for &sg_idx in &sup_sgs {
-                let src_start = self.part.subgraphs[sg_idx as usize].brow as usize * c;
+            xs.reserve(sup_ops.len() * c);
+            for &op in &sup_ops {
+                let src_start = plan.ops[op as usize].src_start as usize;
                 for i in 0..c {
                     let v = src_start + i;
                     if v < n {
@@ -358,16 +375,17 @@ impl<'a> Scheduler<'a> {
                     }
                 }
             }
-            executor.execute(kind, self.part, &sup_sgs, &xs, &mut cand)?;
+            executor.execute(kind, plan.batch(&sup_ops), &xs, &mut cand)?;
 
             // --- reduce & apply (engine ALU, modeled events already) ---
             let mut any_changed = false;
             match semiring {
                 Semiring::MinPlus => {
                     next_active_block.iter_mut().for_each(|b| *b = false);
-                    for (k, &dst_start) in sup_dst.iter().enumerate() {
+                    for (k, &op) in sup_ops.iter().enumerate() {
+                        let dst_start = plan.ops[op as usize].dst_start as usize;
                         for j in 0..c {
-                            let v = dst_start as usize + j;
+                            let v = dst_start + j;
                             if v >= n {
                                 break;
                             }
@@ -383,9 +401,10 @@ impl<'a> Scheduler<'a> {
                     std::mem::swap(&mut active_block, &mut next_active_block);
                 }
                 Semiring::SumProd => {
-                    for (k, &dst_start) in sup_dst.iter().enumerate() {
+                    for (k, &op) in sup_ops.iter().enumerate() {
+                        let dst_start = plan.ops[op as usize].dst_start as usize;
                         for j in 0..c {
-                            let v = dst_start as usize + j;
+                            let v = dst_start + j;
                             if v >= n {
                                 break;
                             }
@@ -448,26 +467,6 @@ impl<'a> Scheduler<'a> {
             activity: trace,
         })
     }
-
-    /// Out-degree per vertex, reconstructed from the partitioning (the
-    /// ST is the only main-memory representation at runtime).
-    fn out_degrees(&self) -> Vec<u32> {
-        let c = self.part.c;
-        let mut deg = vec![0u32; self.part.num_vertices as usize];
-        for sg in &self.part.subgraphs {
-            let base = sg.brow as usize * c;
-            let mut bits = sg.pattern.0;
-            while bits != 0 {
-                let bit = bits.trailing_zeros() as usize;
-                let v = base + bit / c;
-                if v < deg.len() {
-                    deg[v] += 1;
-                }
-                bits &= bits - 1;
-            }
-        }
-        deg
-    }
 }
 
 #[cfg(test)]
@@ -481,11 +480,12 @@ mod tests {
     use crate::pattern::tables::{ConfigTable, ExecOrder, SubgraphTable};
     use crate::sched::executor::NativeExecutor;
 
-    fn run_on(
+    fn run_with_params(
         g: &crate::graph::Coo,
         config: &ArchConfig,
+        params: &CostParams,
         program: &dyn VertexProgram,
-    ) -> RunResult {
+    ) -> Result<RunResult> {
         let part = partition(g, config.crossbar_size, program.needs_weights());
         let ranking = PatternRanking::from_partitioned(&part);
         let ct = ConfigTable::build(
@@ -497,9 +497,17 @@ mod tests {
             config.static_assignment,
         );
         let st = SubgraphTable::build(&part, &ranking, config.order);
-        let params = CostParams::default();
-        let sched = Scheduler::new(config, &params, &part, &ct, &st);
-        sched.run(program, &mut NativeExecutor).unwrap()
+        let plan = ExecutionPlan::build(&part, &ct, &st, config);
+        let sched = Scheduler::new(config, params, &plan);
+        sched.run(program, &mut NativeExecutor)
+    }
+
+    fn run_on(
+        g: &crate::graph::Coo,
+        config: &ArchConfig,
+        program: &dyn VertexProgram,
+    ) -> RunResult {
+        run_with_params(g, config, &CostParams::default(), program).unwrap()
     }
 
     #[test]
@@ -633,5 +641,64 @@ mod tests {
         let res = run_on(&g, &config, &Bfs::new(7));
         assert!(res.supersteps <= 1);
         assert_eq!(res.values[7], 0.0);
+    }
+
+    #[test]
+    fn plan_for_wrong_architecture_is_rejected() {
+        let g = Dataset::Tiny.load().unwrap();
+        let config = ArchConfig::default();
+        let part = partition(&g, config.crossbar_size, false);
+        let ranking = PatternRanking::from_partitioned(&part);
+        let ct = ConfigTable::build(&ranking, 4, 16, 1, 16, config.static_assignment);
+        let st = SubgraphTable::build(&part, &ranking, config.order);
+        let plan = ExecutionPlan::build(&part, &ct, &st, &config);
+        let other = ArchConfig { static_engines: 8, ..config };
+        let sched = Scheduler::new(&other, &CostParams::default(), &plan);
+        let err = sched.run(&Bfs::new(0), &mut NativeExecutor).unwrap_err();
+        assert!(err.to_string().contains("different architecture"), "{err}");
+    }
+
+    #[test]
+    fn worn_out_slot_never_serves_the_triggering_op() {
+        // One dynamic slot with endurance 1: the very first dynamic
+        // configure crosses the budget, so retire-then-repick must fail
+        // the run (nothing left to repick) instead of serving the MVM on
+        // the just-retired crossbar as the seed scheduler did.
+        let g = crate::graph::Coo::from_edges(
+            4,
+            vec![crate::graph::coo::Edge::new(0, 1)],
+        );
+        let config = ArchConfig {
+            crossbar_size: 2,
+            total_engines: 1,
+            static_engines: 0,
+            ..ArchConfig::default()
+        };
+        let params = CostParams { endurance_cycles: 1.0, ..CostParams::default() };
+        let err = run_with_params(&g, &config, &params, &Bfs::new(0)).unwrap_err();
+        assert!(
+            err.to_string().contains("retired"),
+            "expected wear-out error, got {err}"
+        );
+    }
+
+    #[test]
+    fn healthy_slot_below_endurance_still_serves() {
+        // Same setup but endurance 2: one configure writes one cell once,
+        // staying under the budget — the op is served normally.
+        let g = crate::graph::Coo::from_edges(
+            4,
+            vec![crate::graph::coo::Edge::new(0, 1)],
+        );
+        let config = ArchConfig {
+            crossbar_size: 2,
+            total_engines: 1,
+            static_engines: 0,
+            ..ArchConfig::default()
+        };
+        let params = CostParams { endurance_cycles: 2.0, ..CostParams::default() };
+        let res = run_with_params(&g, &config, &params, &Bfs::new(0)).unwrap();
+        assert!(res.dynamic_ops >= 1);
+        assert_eq!(res.values[1], 1.0);
     }
 }

@@ -5,6 +5,13 @@
 //! paper's static engines only avoid crossbar reconfiguration if every
 //! entry point runs against the same preprocessed tables.
 //!
+//! A cached [`Preprocessed`] carries its compiled
+//! [`ExecutionPlan`](crate::sched::ExecutionPlan), so the schedule is
+//! compiled exactly once per `(dataset, scale, weighted, arch)` key — the
+//! arch signature includes the execution order and the static split —
+//! and every serve worker and repeat job interprets the *same plan
+//! instance* (asserted by the coordinator integration tests).
+//!
 //! Exactly-once semantics per key: concurrent requesters of the *same*
 //! key block on a per-key slot while the first one preprocesses;
 //! different keys build in parallel.

@@ -1,9 +1,10 @@
 //! `JobSpec` — the open job description shared by every entry point.
 //!
-//! Replaces the closed `coordinator::Job` enum (whose per-algorithm
+//! Replaced the closed `coordinator::Job` enum (whose per-algorithm
 //! variants forced duplicated match arms into `main.rs` and the serve
-//! workers): *what* to run is an [`AlgorithmId`] looked up in the
-//! session's registry, and per-algorithm knobs ride in one open
+//! workers; the enum and its `From<Job>` shim were removed once every
+//! caller migrated): *what* to run is an [`AlgorithmId`] looked up in
+//! the session's registry, and per-algorithm knobs ride in one open
 //! [`AlgoParams`] bag.
 
 use anyhow::Result;

@@ -311,9 +311,10 @@ impl Session {
 
     /// DSE: best static/dynamic engine split for the job's algorithm on
     /// its dataset (paper Fig. 6 / conclusion). Reuses the session's
-    /// cached Alg.-1 output; only the N-dependent config table is
-    /// rebuilt per candidate, on a scratch copy so the shared artifact
-    /// stays untouched.
+    /// cached Alg.-1 output; only the N-dependent pieces — the config
+    /// table and the execution plan's static-slot section — are rebuilt
+    /// per candidate, on a scratch copy so the shared artifact (and its
+    /// compiled plan) stays untouched.
     pub fn dse(
         &self,
         spec: &JobSpec,

@@ -130,6 +130,35 @@ impl Bench {
     pub fn results(&self) -> &[Stats] {
         &self.results
     }
+
+    /// Serialize every measured stat as a JSON array (hand-rolled — the
+    /// offline image vendors no serde). Durations are nanoseconds.
+    pub fn to_json(&self) -> String {
+        let mut s = String::from("[\n");
+        for (i, r) in self.results.iter().enumerate() {
+            if i > 0 {
+                s.push_str(",\n");
+            }
+            s.push_str(&format!(
+                "  {{\"name\": \"{}\", \"iters\": {}, \"mean_ns\": {}, \
+                 \"min_ns\": {}, \"max_ns\": {}, \"stddev_ns\": {}}}",
+                r.name.replace('\\', "\\\\").replace('"', "\\\""),
+                r.iters,
+                r.mean.as_nanos(),
+                r.min.as_nanos(),
+                r.max.as_nanos(),
+                r.stddev.as_nanos(),
+            ));
+        }
+        s.push_str("\n]\n");
+        s
+    }
+
+    /// Write [`to_json`](Self::to_json) to `path` (`BENCH_*.json` files
+    /// tracked per bench target).
+    pub fn write_json(&self, path: impl AsRef<std::path::Path>) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json())
+    }
 }
 
 #[cfg(test)]
@@ -158,5 +187,20 @@ mod tests {
         assert_eq!(fmt_dur(Duration::from_nanos(500)), "500 ns");
         assert!(fmt_dur(Duration::from_micros(1500)).contains("ms"));
         assert!(fmt_dur(Duration::from_secs(2)).contains(" s"));
+    }
+
+    #[test]
+    fn json_output_has_one_record_per_result() {
+        let mut b = Bench::new()
+            .with_target(Duration::from_millis(1))
+            .with_max_iters(3);
+        b.run("a \"quoted\" name", || black_box(1 + 1));
+        b.run("plain", || black_box(2 + 2));
+        let json = b.to_json();
+        assert_eq!(json.matches("\"name\"").count(), 2);
+        assert!(json.contains("a \\\"quoted\\\" name"));
+        assert!(json.contains("\"mean_ns\""));
+        assert!(json.trim_start().starts_with('['));
+        assert!(json.trim_end().ends_with(']'));
     }
 }

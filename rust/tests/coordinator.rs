@@ -178,6 +178,37 @@ fn mixed_submit_batch_is_correct_and_preprocesses_once_per_dataset() {
 }
 
 #[test]
+fn serve_jobs_share_one_compiled_execution_plan() {
+    // Mirror of the preprocess-once assertion for the PR-2 plan layer:
+    // repeated serve jobs with the same (dataset, scale, weighted, arch)
+    // key must interpret the *same compiled ExecutionPlan instance*, not
+    // rebuild the schedule per job or per worker.
+    let session = Arc::new(Session::builder().build().unwrap());
+    let svc = Service::with_session(Arc::clone(&session), 4);
+    let pending = svc
+        .submit_batch((0..8u32).map(|i| JobSpec::new(Dataset::Tiny, "bfs").with_source(i)))
+        .unwrap();
+    for p in pending {
+        p.wait().unwrap();
+    }
+    // Exactly one Alg.-1 run — and the plan is compiled inside it.
+    assert_eq!(
+        session.artifacts().stats().misses,
+        1,
+        "plan must be compiled exactly once across all workers"
+    );
+    // The store serves the same Arc'd artifact (hence the same plan
+    // allocation) to every subsequent caller of the key.
+    let spec = JobSpec::new(Dataset::Tiny, "bfs");
+    let a = session.preprocess(&spec).unwrap();
+    let b = session.preprocess(&spec).unwrap();
+    // Same Arc'd artifact ⇒ same compiled plan allocation inside it.
+    assert!(Arc::ptr_eq(&a, &b), "artifact (and plan) instance must be shared");
+    assert!(a.plan.num_ops() > 0);
+    assert_eq!(a.plan.num_ops(), a.st.len(), "one plan op per ST entry");
+}
+
+#[test]
 fn pjrt_service_fails_loudly_when_artifacts_missing() {
     // A PJRT-configured service must refuse to spawn (never silently
     // fall back to the native executor) when artifacts are absent.

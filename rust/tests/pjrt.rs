@@ -16,6 +16,7 @@ use repro::graph::datasets::Dataset;
 use repro::graph::Csr;
 use repro::runtime::{Manifest, PjrtExecutor};
 use repro::sched::executor::{NativeExecutor, StepExecutor};
+use repro::sched::ExecutionPlan;
 use repro::util::SplitMix64;
 
 fn artifacts_present() -> bool {
@@ -61,6 +62,7 @@ fn pjrt_equals_native_on_random_batches() {
     let g = Dataset::Tiny.load().unwrap();
     for c in [4usize, 8] {
         let part = repro::pattern::extract::partition(&g, c, false);
+        let plan = ExecutionPlan::from_partitioned(&part);
         let n = part.num_subgraphs().min(300);
         let sgs: Vec<u32> = (0..n as u32).collect();
         let mut rng = SplitMix64::new(c as u64);
@@ -78,8 +80,8 @@ fn pjrt_equals_native_on_random_batches() {
                 .collect();
             let mut got = Vec::new();
             let mut want = Vec::new();
-            pjrt.execute(kind, &part, &sgs, &xs, &mut got).unwrap();
-            NativeExecutor.execute(kind, &part, &sgs, &xs, &mut want).unwrap();
+            pjrt.execute(kind, plan.batch(&sgs), &xs, &mut got).unwrap();
+            NativeExecutor.execute(kind, plan.batch(&sgs), &xs, &mut want).unwrap();
             assert_eq!(got.len(), want.len());
             for (i, (a, b)) in got.iter().zip(&want).enumerate() {
                 let ok = (a - b).abs() < 1e-4 || (*a >= INF && *b >= INF);
@@ -95,6 +97,7 @@ fn pjrt_sssp_uses_weights() {
     let mut pjrt = PjrtExecutor::from_default_dir().unwrap();
     let g = Dataset::Tiny.load_weighted(1.0).unwrap();
     let part = repro::pattern::extract::partition(&g, 4, true);
+    let plan = ExecutionPlan::from_partitioned(&part);
     let n = part.num_subgraphs().min(200);
     let sgs: Vec<u32> = (0..n as u32).collect();
     let mut rng = SplitMix64::new(11);
@@ -103,8 +106,8 @@ fn pjrt_sssp_uses_weights() {
         .collect();
     let mut got = Vec::new();
     let mut want = Vec::new();
-    pjrt.execute(StepKind::Sssp, &part, &sgs, &xs, &mut got).unwrap();
-    NativeExecutor.execute(StepKind::Sssp, &part, &sgs, &xs, &mut want).unwrap();
+    pjrt.execute(StepKind::Sssp, plan.batch(&sgs), &xs, &mut got).unwrap();
+    NativeExecutor.execute(StepKind::Sssp, plan.batch(&sgs), &xs, &mut want).unwrap();
     for (a, b) in got.iter().zip(&want) {
         assert!((a - b).abs() < 1e-3 || (*a >= INF && *b >= INF), "{a} vs {b}");
     }
@@ -185,9 +188,10 @@ fn missing_artifact_is_a_clean_error() {
     // C=3 has no artifact variant.
     let g = Dataset::Tiny.load().unwrap();
     let part = repro::pattern::extract::partition(&g, 3, false);
+    let plan = ExecutionPlan::from_partitioned(&part);
     let mut out = Vec::new();
     let err = pjrt
-        .execute(StepKind::Bfs, &part, &[0], &[0.0, 0.0, 0.0], &mut out)
+        .execute(StepKind::Bfs, plan.batch(&[0]), &[0.0, 0.0, 0.0], &mut out)
         .unwrap_err();
     assert!(err.to_string().contains("no artifact"), "unexpected error: {err}");
 }

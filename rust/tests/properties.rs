@@ -3,8 +3,8 @@
 //! property sweeps: every case prints its seed on failure).
 
 use repro::accel::{Accelerator, ArchConfig, PolicyKind};
-use repro::algo::traits::INF;
-use repro::algo::{reference, Bfs};
+use repro::algo::traits::{VertexProgram, INF};
+use repro::algo::{reference, Bfs, PageRank, Sssp, Wcc};
 use repro::cost::CostParams;
 use repro::graph::coo::{Coo, Edge};
 use repro::graph::generator::{erdos_renyi, rmat, RmatParams};
@@ -196,6 +196,97 @@ fn prop_symmetrize_partition_transpose_symmetry() {
                 transposed = transposed.with_edge(j as usize, i as usize, 4);
             }
             assert_eq!(transposed, s.pattern, "seed {seed}: asymmetric windows");
+        }
+    }
+}
+
+#[test]
+fn prop_plan_interpreter_matches_reference_scheduler() {
+    // The PR-2 acceptance property: interpreting the compiled
+    // `ExecutionPlan` must be *bit-identical* to the seed scheduler's
+    // on-line table-scanning derivation (retained in `sched::oracle`) —
+    // same values, same event counts, same timing, same static/dynamic
+    // split — across random graphs, architectures and all four
+    // algorithms.
+    for seed in 200..216u64 {
+        let g = random_graph(seed);
+        let mut rng = SplitMix64::new(seed ^ 0x9A7);
+        let source = rng.next_bounded(g.num_vertices as u64) as u32;
+        let cfg = ArchConfig {
+            crossbar_size: [2, 4, 8][rng.next_index(3)],
+            total_engines: 4 + rng.next_bounded(28) as u32,
+            policy: [
+                PolicyKind::Lru,
+                PolicyKind::RoundRobin,
+                PolicyKind::Lfu,
+                PolicyKind::Random,
+            ][rng.next_index(4)],
+            dynamic_reuse: rng.next_bool(0.5),
+            order: if rng.next_bool(0.5) {
+                ExecOrder::ColumnMajor
+            } else {
+                ExecOrder::RowMajor
+            },
+            ..ArchConfig::default()
+        };
+        let cfg = ArchConfig {
+            static_engines: rng.next_bounded(cfg.total_engines as u64) as u32,
+            ..cfg
+        };
+        // Random edge weights so the SSSP case exercises real weight data.
+        let gw = Coo::from_edges(
+            g.num_vertices,
+            g.edges
+                .iter()
+                .map(|e| Edge::weighted(e.src, e.dst, 0.5 + rng.next_f32() * 4.0))
+                .collect(),
+        );
+        let bfs = Bfs::new(source);
+        let sssp = Sssp::new(source);
+        let pagerank = PageRank::new(0.85, 4);
+        let wcc = Wcc;
+        let programs: [(&dyn VertexProgram, bool); 4] =
+            [(&bfs, false), (&sssp, true), (&pagerank, false), (&wcc, false)];
+        let acc = Accelerator::new(cfg.clone(), CostParams::default());
+        for (program, weighted) in programs {
+            let pre = acc
+                .preprocess(if weighted { &gw } else { &g }, weighted)
+                .unwrap();
+            let planned = acc
+                .run(&pre, program, &mut NativeExecutor)
+                .unwrap()
+                .run
+                .unwrap();
+            let oracle = repro::sched::oracle::run_reference(
+                &cfg,
+                &CostParams::default(),
+                &pre,
+                program,
+                &mut NativeExecutor,
+            )
+            .unwrap();
+            let ctx = format!("seed {seed} algo {} cfg {cfg:?}", program.name());
+            assert_eq!(planned.values, oracle.values, "{ctx}: values diverge");
+            assert_eq!(planned.counts, oracle.counts, "{ctx}: event counts diverge");
+            assert_eq!(planned.init_counts, oracle.init_counts, "{ctx}: init counts");
+            assert_eq!(planned.static_ops, oracle.static_ops, "{ctx}: static ops");
+            assert_eq!(planned.dynamic_ops, oracle.dynamic_ops, "{ctx}: dynamic ops");
+            assert_eq!(planned.dynamic_hits, oracle.dynamic_hits, "{ctx}: dynamic hits");
+            assert_eq!(planned.iterations, oracle.iterations, "{ctx}: iterations");
+            assert_eq!(planned.supersteps, oracle.supersteps, "{ctx}: supersteps");
+            assert_eq!(
+                planned.exec_time_ns, oracle.exec_time_ns,
+                "{ctx}: modeled time diverges"
+            );
+            assert_eq!(
+                planned.static_hit_rate(),
+                oracle.static_hit_rate(),
+                "{ctx}: static hit rate"
+            );
+            assert_eq!(
+                planned.max_dynamic_cell_writes, oracle.max_dynamic_cell_writes,
+                "{ctx}: wear"
+            );
         }
     }
 }
