@@ -38,22 +38,46 @@ fn main() {
     });
 
     // Plan interpretation end to end (scheduler + native executor) — the
-    // per-job cost once the plan is compiled.
-    let s = b.run("plan interpret: BFS WV (sched+native)", || {
-        black_box(acc.run(&pre, &Bfs::new(0), &mut NativeExecutor).unwrap())
-    });
+    // per-job cost once the plan is compiled, sequential vs lane-parallel
+    // (results are bit-identical; only wall time may differ).
+    let s = b
+        .run("plan interpret: BFS WV threads=1", || {
+            black_box(acc.run(&pre, &Bfs::new(0), &mut NativeExecutor).unwrap())
+        })
+        .mean;
     let run = acc.run(&pre, &Bfs::new(0), &mut NativeExecutor).unwrap();
     println!(
         "  -> {:.2} M subgraph-dispatches/s ({} ops per run, {:.1} µs/superstep over {})",
-        run.counts.mvm_ops as f64 / s.mean.as_secs_f64() / 1e6,
+        run.counts.mvm_ops as f64 / s.as_secs_f64() / 1e6,
         run.counts.mvm_ops,
-        s.mean.as_secs_f64() * 1e6 / run.supersteps.max(1) as f64,
+        s.as_secs_f64() * 1e6 / run.supersteps.max(1) as f64,
         run.supersteps,
     );
 
-    b.run("plan interpret: PageRank(5) WV", || {
-        black_box(acc.run(&pre, &PageRank::new(0.85, 5), &mut NativeExecutor).unwrap())
-    });
+    let s4 = b
+        .run("plan interpret: BFS WV threads=4", || {
+            black_box(
+                acc.run_threaded(&pre, &Bfs::new(0), &mut NativeExecutor, 4)
+                    .unwrap(),
+            )
+        })
+        .mean;
+    println!("  -> {:.2}x vs threads=1", s.as_secs_f64() / s4.as_secs_f64());
+
+    let sp = b
+        .run("plan interpret: PageRank(5) WV threads=1", || {
+            black_box(acc.run(&pre, &PageRank::new(0.85, 5), &mut NativeExecutor).unwrap())
+        })
+        .mean;
+    let sp4 = b
+        .run("plan interpret: PageRank(5) WV threads=4", || {
+            black_box(
+                acc.run_threaded(&pre, &PageRank::new(0.85, 5), &mut NativeExecutor, 4)
+                    .unwrap(),
+            )
+        })
+        .mean;
+    println!("  -> {:.2}x vs threads=1", sp.as_secs_f64() / sp4.as_secs_f64());
 
     // Native executor alone on a big batch.
     let part = partition(&g, 4, false);

@@ -12,7 +12,7 @@ use crate::pattern::rank::PatternRanking;
 use crate::pattern::tables::{ConfigTable, SubgraphTable};
 use crate::sched::executor::StepExecutor;
 use crate::sched::plan::ExecutionPlan;
-use crate::sched::scheduler::{RunResult, Scheduler};
+use crate::sched::scheduler::RunResult;
 
 use super::config::ArchConfig;
 
@@ -113,8 +113,28 @@ impl Accelerator {
         program: &dyn VertexProgram,
         executor: &mut dyn StepExecutor,
     ) -> Result<SimReport> {
-        let sched = Scheduler::new(&self.config, &self.params, &pre.plan);
-        let run = sched.run(program, executor)?;
+        self.run_threaded(pre, program, executor, 1)
+    }
+
+    /// Like [`run`](Self::run) but with `threads` batch-parallel
+    /// execution lanes (`0` = one per hardware thread). Results are
+    /// bit-identical for every thread count — `threads <= 1` takes the
+    /// sequential interpreter verbatim.
+    pub fn run_threaded(
+        &self,
+        pre: &Preprocessed,
+        program: &dyn VertexProgram,
+        executor: &mut dyn StepExecutor,
+        threads: usize,
+    ) -> Result<SimReport> {
+        let run = crate::sched::par::run_parallel(
+            &self.config,
+            &self.params,
+            &pre.plan,
+            program,
+            executor,
+            threads,
+        )?;
         let total = run.total_counts();
         Ok(SimReport {
             design: "Proposed".to_string(),
@@ -161,6 +181,21 @@ mod tests {
         assert!(report.static_hit_rate > 0.0);
         assert_eq!(report.design, "Proposed");
         assert_eq!(report.algorithm, "bfs");
+    }
+
+    #[test]
+    fn run_threaded_matches_sequential_run() {
+        let g = Dataset::Tiny.load().unwrap();
+        let acc = Accelerator::with_defaults();
+        let pre = acc.preprocess(&g, false).unwrap();
+        let a = acc.run(&pre, &Bfs::new(0), &mut NativeExecutor).unwrap();
+        let b = acc
+            .run_threaded(&pre, &Bfs::new(0), &mut NativeExecutor, 4)
+            .unwrap();
+        assert_eq!(a.run.unwrap().values, b.run.as_ref().unwrap().values);
+        assert_eq!(a.counts, b.counts);
+        assert_eq!(a.exec_time_ns, b.exec_time_ns);
+        assert_eq!(a.static_hit_rate, b.static_hit_rate);
     }
 
     #[test]

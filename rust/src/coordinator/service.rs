@@ -35,6 +35,10 @@ pub struct ServiceConfig {
     /// at spawn when artifacts are missing, never silently runs native.
     pub backend: Backend,
     pub workers: usize,
+    /// Superstep execution lanes per job, honored by every worker through
+    /// the shared session (default 1; `0` = one lane per hardware
+    /// thread). Served results are bit-identical for every setting.
+    pub parallelism: usize,
 }
 
 impl Default for ServiceConfig {
@@ -44,6 +48,7 @@ impl Default for ServiceConfig {
             params: CostParams::default(),
             backend: Backend::Native,
             workers: 2,
+            parallelism: 1,
         }
     }
 }
@@ -99,6 +104,7 @@ impl Service {
             .arch(config.arch)
             .cost_params(config.params)
             .backend(config.backend)
+            .parallelism(config.parallelism)
             .build()?;
         Ok(Self::with_session(Arc::new(session), config.workers))
     }
@@ -277,6 +283,26 @@ mod tests {
         svc.submit_blocking(JobSpec::new(d, "wcc")).unwrap();
         svc.submit_blocking(JobSpec::new(d, "sssp").with_source(1)).unwrap();
         assert_eq!(svc.metrics.snapshot().jobs_completed, 3);
+    }
+
+    #[test]
+    fn parallel_workers_serve_identical_results() {
+        let seq = tiny_service(2);
+        let par = Service::spawn(ServiceConfig {
+            workers: 2,
+            parallelism: 4,
+            ..ServiceConfig::default()
+        })
+        .unwrap();
+        let job = || JobSpec::new(Dataset::Tiny, "pagerank").with_iterations(4);
+        let a = seq.submit_blocking(job()).unwrap().report;
+        let b = par.submit_blocking(job()).unwrap().report;
+        assert_eq!(
+            a.run.as_ref().unwrap().values,
+            b.run.as_ref().unwrap().values
+        );
+        assert_eq!(a.counts, b.counts);
+        assert_eq!(a.exec_time_ns, b.exec_time_ns);
     }
 
     #[test]

@@ -41,6 +41,21 @@ impl EventCounts {
         self.reconfigs += other.reconfigs;
     }
 
+    /// Subtract a baseline (e.g. initialization events from a run total
+    /// so runtime counts exclude one-time configuration). The baseline
+    /// must be componentwise `<= self`.
+    pub fn subtract(&mut self, other: &EventCounts) {
+        self.read_bits -= other.read_bits;
+        self.write_bits -= other.write_bits;
+        self.sense_ops -= other.sense_ops;
+        self.sram_accesses -= other.sram_accesses;
+        self.adc_ops -= other.adc_ops;
+        self.alu_ops -= other.alu_ops;
+        self.main_mem_accesses -= other.main_mem_accesses;
+        self.mvm_ops -= other.mvm_ops;
+        self.reconfigs -= other.reconfigs;
+    }
+
     /// Convert to an energy breakdown in joules.
     pub fn energy(&self, p: &CostParams) -> EnergyBreakdown {
         const PJ: f64 = 1e-12;

@@ -2,6 +2,13 @@
 //! ADC, FIFO buffers and a small ALU. Static engines are configured once
 //! at initialization; dynamic engines are reconfigured at runtime by the
 //! scheduler's replacement policy.
+//!
+//! Engines are also the unit of lane sharding for batch-parallel
+//! execution (`sched::par`): every mutable field here — busy time, event
+//! counters, crossbar contents and wear — is engine-local, so a whole
+//! engine can move into a worker lane and replay its queued ops in
+//! dispatch order, reproducing the sequential interpreter's per-engine
+//! state bit for bit regardless of which thread owns the lane.
 
 use crate::cost::{timing, CostParams, EventCounts};
 use crate::pattern::Pattern;

@@ -53,6 +53,9 @@ ARCH OPTIONS:
   --static-engines N        static graph engines (default 16)
   --crossbars-per-engine M  crossbars per engine (default 1)
   --policy P                lru | rr | lfu | random (default lru)
+  --threads K               superstep execution lanes (default 1 =
+                            sequential, 0 = one per hardware thread);
+                            results are bit-identical for every K
 ";
 
 fn arch_from(args: &Args) -> Result<ArchConfig> {
@@ -78,6 +81,7 @@ fn session_from(args: &Args) -> Result<Session> {
     Session::builder()
         .arch(arch_from(args)?)
         .backend(Backend::parse(&backend_s)?)
+        .parallelism(args.get_or("threads", 1usize)?)
         .build()
 }
 
@@ -304,14 +308,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let algos: Vec<_> = session.registry().ids().cloned().collect();
     let specs: Vec<JobSpec> = (0..jobs)
         .map(|i| {
-            JobSpec {
-                dataset: d,
-                scale,
-                algorithm: algos[i % algos.len()].clone(),
-                params: Default::default(),
-            }
-            .with_source(i as u32)
-            .with_iterations(5)
+            JobSpec::new(d, algos[i % algos.len()].clone())
+                .with_scale(scale)
+                .with_source(i as u32)
+                .with_iterations(5)
         })
         .collect();
     let pending = svc.submit_batch(specs)?;

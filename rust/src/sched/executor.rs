@@ -39,6 +39,17 @@ pub trait StepExecutor {
         xs: &[f32],
         out: &mut Vec<f32>,
     ) -> Result<()>;
+
+    /// An independent executor instance for a worker thread, when this
+    /// backend supports concurrent batch evaluation (pure, stateless
+    /// numerics whose per-op outputs are position-independent — so any
+    /// chunking of a batch across forks is bit-identical to one call).
+    /// The default `None` keeps the numeric phase on the calling thread;
+    /// stateful backends (PJRT holds compiled per-process artifacts)
+    /// stay sequential under the batch-parallel scheduler.
+    fn fork(&self) -> Option<Box<dyn StepExecutor + Send>> {
+        None
+    }
 }
 
 /// Pure-rust mirror of the Pallas kernels (bit loops over packed
@@ -49,6 +60,10 @@ pub struct NativeExecutor;
 impl StepExecutor for NativeExecutor {
     fn name(&self) -> &'static str {
         "native"
+    }
+
+    fn fork(&self) -> Option<Box<dyn StepExecutor + Send>> {
+        Some(Box::new(NativeExecutor))
     }
 
     fn execute(

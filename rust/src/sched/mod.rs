@@ -1,16 +1,20 @@
 //! Graph processing & scheduling (paper Alg. 2): a schedule compiled once
-//! into an [`ExecutionPlan`] and interpreted per superstep, static/dynamic
-//! engine dispatch, replacement policies, and the executor abstraction
-//! that routes numeric edge-compute either through the native mirror or
-//! the AOT-compiled PJRT artifact.
+//! into an [`ExecutionPlan`] and interpreted per superstep — sequentially
+//! by [`Scheduler`] or across per-engine work lanes by
+//! [`par::run_parallel`] (bit-identical for every thread count) —
+//! static/dynamic engine dispatch, replacement policies, and the executor
+//! abstraction that routes numeric edge-compute either through the native
+//! mirror or the AOT-compiled PJRT artifact.
 
 pub mod executor;
 pub mod oracle;
+pub mod par;
 pub mod plan;
 pub mod replacement;
 pub mod scheduler;
 
 pub use executor::{NativeExecutor, StepExecutor};
-pub use plan::{ExecutionPlan, PlanOp, StepBatch};
+pub use par::run_parallel;
+pub use plan::{ExecutionPlan, LaneTable, PlanOp, StepBatch};
 pub use replacement::{build_policy, ReplacementPolicy};
-pub use scheduler::{RunResult, Scheduler};
+pub use scheduler::{EngineSummary, RunResult, Scheduler};

@@ -336,25 +336,9 @@ pub fn run_reference(
         if e.kind == EngineKind::Dynamic {
             max_dyn_writes = max_dyn_writes.max(e.max_cell_writes());
         }
-        summaries.push(EngineSummary {
-            id: e.id,
-            is_static: e.kind == EngineKind::Static,
-            read_bits: e.counts.read_bits,
-            write_bits: e.counts.write_bits,
-            mvm_ops: e.counts.mvm_ops,
-            reconfigs: e.counts.reconfigs,
-            max_cell_writes: e.max_cell_writes(),
-        });
+        summaries.push(EngineSummary::of(e));
     }
-    counts.read_bits -= counts_baseline.read_bits;
-    counts.write_bits -= counts_baseline.write_bits;
-    counts.sense_ops -= counts_baseline.sense_ops;
-    counts.sram_accesses -= counts_baseline.sram_accesses;
-    counts.adc_ops -= counts_baseline.adc_ops;
-    counts.alu_ops -= counts_baseline.alu_ops;
-    counts.main_mem_accesses -= counts_baseline.main_mem_accesses;
-    counts.mvm_ops -= counts_baseline.mvm_ops;
-    counts.reconfigs -= counts_baseline.reconfigs;
+    counts.subtract(&counts_baseline);
 
     Ok(RunResult {
         values,

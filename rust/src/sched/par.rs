@@ -1,0 +1,762 @@
+//! Batch-parallel superstep execution over the compiled [`ExecutionPlan`]
+//! — the inter-engine parallelism the plan IR was built to unlock.
+//!
+//! The paper's premise makes the static lanes embarrassingly parallel:
+//! static engines hold the frequent patterns, so most subgraph ops touch
+//! exactly one engine and share no state with any other engine. This
+//! module exploits that with a three-phase superstep:
+//!
+//! 1. **Dispatch** (sequential, cheap): walk the ready ops in plan order
+//!    and resolve every scheduling decision into per-engine work lanes.
+//!    Single-replica static ops come pre-homed by the plan's
+//!    [`LaneTable`]; multi-replica static ops take the least-busy replica
+//!    against a shadow busy model that replays the interpreter's f64
+//!    accumulation bit-exactly; dynamic ops run the replacement policy
+//!    (plus retire-then-repick wear-out) against dispatcher-owned shadow
+//!    crossbars.
+//! 2. **Lane replay** (parallel, `std::thread::scope`): engines move into
+//!    lanes — each worker owns whole engines and replays their queued
+//!    records (configure / MVM counter arithmetic, crossbar wear) in
+//!    dispatch order. An engine's entire queue lives in one lane, so all
+//!    engine-local state stays thread-local.
+//! 3. **Numeric phase**: the gather runs on the calling thread, then the
+//!    edge-compute batch is chunked across forked executors
+//!    ([`StepExecutor::fork`]) when the backend supports it. Per-op
+//!    outputs are independent, so any chunking is bit-identical to one
+//!    sequential call.
+//!
+//! # Why dynamic ops shard by pattern rank / slot, not round-robin
+//!
+//! A dynamic op's lane is the engine owning the crossbar slot that the
+//! replacement policy binds its pattern rank to. That keeps
+//! *crossbar-content affinity*: every configure and MVM touching one
+//! crossbar — the pattern it currently holds, its per-cell wear counters
+//! — replays inside a single lane, in dispatch order, so no crossbar
+//! state ever crosses a thread boundary. A fully rank-sharded scheme
+//! (one lane per rank, policy state split per lane) cannot reproduce the
+//! sequential semantics: the replacement policy is *global* across
+//! dynamic slots (an LRU pick for rank A evicts the slot rank B counts
+//! on), which is exactly why the *decisions* stay in the sequential
+//! dispatch pass and only slot-affine *effects* fan out.
+//!
+//! # The bit-identical merge invariant
+//!
+//! Merge order is lane-indexed, then engine-indexed: lane results are
+//! joined in lane order and folded back into the engine vector by engine
+//! id, and the superstep latency is the max over per-engine busy times
+//! folded in engine-id order — the same order the sequential interpreter
+//! uses. Combined with the bit-exact dispatch shadow, a run's
+//! [`RunResult`] (values, `EventCounts`, timing, wear, per-engine
+//! summaries) is **bit-identical for every thread count**, and identical
+//! to [`Scheduler::run`] and to the differential oracle
+//! [`oracle::run_reference`](super::oracle::run_reference) —
+//! `rust/tests/parallel.rs` locks this down over randomized graphs and
+//! all four algorithms. The invariant is what makes the concurrent
+//! scheduler safe to evolve: any divergence is a bug by definition, not
+//! a tolerance question.
+//!
+//! The sequential interpreter remains the `threads <= 1` path; runs that
+//! record the per-iteration activity trace (Fig. 5) also take it, since
+//! the trace wants per-group engine snapshots the deferred lane replay
+//! does not produce.
+
+use anyhow::Result;
+
+use crate::accel::config::ArchConfig;
+use crate::algo::traits::{Semiring, VertexProgram, INF};
+use crate::cost::{CostParams, EventCounts};
+use crate::engine::{Crossbar, EngineKind, GraphEngine};
+
+use super::executor::StepExecutor;
+use super::plan::ExecutionPlan;
+use super::replacement::build_policy;
+use super::scheduler::{
+    gather_sources, reduce_apply, slot_pos, EngineSummary, RunResult, Scheduler, NONE,
+};
+
+/// Below this many queued records a superstep replays inline: scoped
+/// thread spawn/join costs more than the counter arithmetic it would
+/// parallelize. Lane assignment never affects results (per-engine state
+/// is self-contained), so this is purely a throughput threshold.
+const MIN_PARALLEL_RECORDS: usize = 512;
+
+/// Below this many ops the numeric batch runs on the calling thread for
+/// the same reason. Chunking is bit-exact at any size, so the threshold
+/// is free to change.
+const MIN_PARALLEL_NUMERIC_OPS: usize = 256;
+
+/// One queued effect on an engine, replayed by its lane in dispatch
+/// order. Records carry rank indices, not `Pattern`s — the lane resolves
+/// them through the shared plan.
+#[derive(Debug, Clone, Copy)]
+enum LaneRecord {
+    /// Reconfigure crossbar `crossbar` to the pattern of `rank`.
+    Configure { crossbar: u32, rank: u32 },
+    /// One in-situ MVM against `crossbar` reading `read_rows` wordlines.
+    Mvm { crossbar: u32, read_rows: u32 },
+}
+
+/// Resolve a requested thread count: `0` means one lane per available
+/// hardware thread. Results never depend on the resolved value.
+pub fn effective_threads(threads: usize) -> usize {
+    if threads == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        threads
+    }
+}
+
+/// Deterministic greedy lane assignment: engines (ascending id) go to the
+/// least-loaded lane, ties to the lowest lane index. `loads[i]` is the
+/// queued record count of the i-th active engine; returns the lane index
+/// per active engine. With `n_lanes >= 1` and at least one engine, every
+/// lane `0..min(n_lanes, loads.len())` receives work — no idle lanes are
+/// ever spawned.
+fn lane_assignment(loads: &[usize], n_lanes: usize) -> Vec<usize> {
+    let n_lanes = n_lanes.min(loads.len()).max(1);
+    let mut lane_load = vec![0usize; n_lanes];
+    let mut assignment = Vec::with_capacity(loads.len());
+    for (i, &load) in loads.iter().enumerate() {
+        let lane = if i < n_lanes {
+            i // seed each lane before balancing
+        } else {
+            (0..n_lanes).min_by_key(|&l| lane_load[l]).unwrap()
+        };
+        lane_load[lane] += load;
+        assignment.push(lane);
+    }
+    assignment
+}
+
+/// Replay one engine's queued records in dispatch order.
+fn replay_engine(
+    e: &mut GraphEngine,
+    records: &[LaneRecord],
+    plan: &ExecutionPlan,
+    params: &CostParams,
+    lat_mvm: f64,
+) {
+    for r in records {
+        match *r {
+            LaneRecord::Configure { crossbar, rank } => {
+                e.configure(crossbar as usize, plan.pattern_of_rank(rank), params);
+            }
+            LaneRecord::Mvm { crossbar, read_rows } => {
+                e.mvm_precomputed(crossbar as usize, read_rows as u64, lat_mvm);
+            }
+        }
+    }
+}
+
+/// Phase 2: move record-bearing engines into lanes, replay them on scoped
+/// workers, and merge busy times back in engine-id order. Returns the
+/// superstep's max busy (ns). Falls back to an inline replay — no scope,
+/// no spawns — when a single lane would do all the work.
+fn replay_lanes(
+    engines: &mut [Option<GraphEngine>],
+    records: &mut [Vec<LaneRecord>],
+    plan: &ExecutionPlan,
+    params: &CostParams,
+    lat_mvm: f64,
+    threads: usize,
+) -> f64 {
+    let active: Vec<usize> =
+        (0..engines.len()).filter(|&e| !records[e].is_empty()).collect();
+    if active.is_empty() {
+        return 0.0;
+    }
+    let total_records: usize = active.iter().map(|&e| records[e].len()).sum();
+    let n_lanes = if total_records < MIN_PARALLEL_RECORDS {
+        1
+    } else {
+        threads.min(active.len())
+    };
+    let mut busy_by_engine = vec![0f64; engines.len()];
+    if n_lanes <= 1 {
+        for &e in &active {
+            let eng = engines[e].as_mut().expect("engine present");
+            replay_engine(eng, &records[e], plan, params, lat_mvm);
+            let (busy, _) = eng.end_iteration();
+            busy_by_engine[e] = busy;
+        }
+    } else {
+        let assignment = lane_assignment(
+            &active.iter().map(|&e| records[e].len()).collect::<Vec<_>>(),
+            n_lanes,
+        );
+        let mut lanes: Vec<Vec<(usize, GraphEngine)>> =
+            (0..n_lanes).map(|_| Vec::new()).collect();
+        for (i, &e) in active.iter().enumerate() {
+            lanes[assignment[i]].push((e, engines[e].take().expect("engine present")));
+        }
+        let records: &[Vec<LaneRecord>] = records;
+        let lane_results: Vec<Vec<(usize, GraphEngine, f64)>> =
+            std::thread::scope(|s| {
+                let handles: Vec<_> = lanes
+                    .into_iter()
+                    .map(|lane| {
+                        s.spawn(move || {
+                            lane.into_iter()
+                                .map(|(e, mut eng)| {
+                                    replay_engine(
+                                        &mut eng, &records[e], plan, params, lat_mvm,
+                                    );
+                                    let (busy, _) = eng.end_iteration();
+                                    (e, eng, busy)
+                                })
+                                .collect()
+                        })
+                    })
+                    .collect();
+                // Merge in lane order — deterministic by construction.
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("lane worker panicked"))
+                    .collect()
+            });
+        for lane in lane_results {
+            for (e, eng, busy) in lane {
+                busy_by_engine[e] = busy;
+                engines[e] = Some(eng);
+            }
+        }
+    }
+    // Engine-id fold order matches the sequential interpreter.
+    busy_by_engine.iter().fold(0f64, |a, &b| a.max(b))
+}
+
+/// Phase 3: edge compute, chunked across forked executors when the
+/// backend supports concurrent evaluation; otherwise one sequential call
+/// on `executor`. Chunk boundaries never affect the result — each op's
+/// output lanes are an independent pure function of its operands.
+fn run_numeric(
+    executor: &mut dyn StepExecutor,
+    kind: crate::algo::traits::StepKind,
+    plan: &ExecutionPlan,
+    sup_ops: &[u32],
+    xs: &[f32],
+    cand: &mut Vec<f32>,
+    threads: usize,
+) -> Result<()> {
+    let c = plan.c;
+    if threads <= 1 || sup_ops.len() < MIN_PARALLEL_NUMERIC_OPS.max(2 * threads) {
+        return executor.execute(kind, plan.batch(sup_ops), xs, cand);
+    }
+    let chunk = sup_ops.len().div_ceil(threads);
+    let n_chunks = sup_ops.len().div_ceil(chunk);
+    let mut forks: Vec<Box<dyn StepExecutor + Send>> = Vec::with_capacity(n_chunks);
+    for _ in 0..n_chunks {
+        match executor.fork() {
+            Some(f) => forks.push(f),
+            // Stateful backend (PJRT): the numeric phase stays sequential.
+            None => return executor.execute(kind, plan.batch(sup_ops), xs, cand),
+        }
+    }
+    let outputs: Vec<Result<Vec<f32>>> = std::thread::scope(|s| {
+        let handles: Vec<_> = sup_ops
+            .chunks(chunk)
+            .zip(xs.chunks(chunk * c))
+            .zip(forks.into_iter())
+            .map(|((ops_chunk, xs_chunk), mut exec)| {
+                s.spawn(move || {
+                    let mut out = Vec::new();
+                    exec.execute(kind, plan.batch(ops_chunk), xs_chunk, &mut out)
+                        .map(|_| out)
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("numeric worker panicked"))
+            .collect()
+    });
+    cand.clear();
+    cand.reserve(sup_ops.len() * c);
+    for out in outputs {
+        cand.extend_from_slice(&out?);
+    }
+    Ok(())
+}
+
+/// Run `program` to convergence with `threads` execution lanes.
+///
+/// `threads <= 1` (and any run recording the activity trace) takes the
+/// sequential interpreter verbatim; `threads == 0` resolves to the
+/// available hardware parallelism. Results are bit-identical to
+/// [`Scheduler::run`] for every thread count — see the module docs for
+/// the invariant and `rust/tests/parallel.rs` for the lockdown.
+pub fn run_parallel(
+    config: &ArchConfig,
+    params: &CostParams,
+    plan: &ExecutionPlan,
+    program: &dyn VertexProgram,
+    executor: &mut dyn StepExecutor,
+    threads: usize,
+) -> Result<RunResult> {
+    let threads = effective_threads(threads);
+    if threads <= 1 || config.trace_activity {
+        return Scheduler::new(config, params, plan).run(program, executor);
+    }
+    config.validate()?;
+    anyhow::ensure!(
+        plan.matches(config),
+        "execution plan was compiled for a different architecture \
+         (plan C={} N={} T={} M={})",
+        plan.c,
+        plan.static_engines,
+        plan.total_engines,
+        plan.crossbars_per_engine
+    );
+    if program.needs_weights() {
+        anyhow::ensure!(
+            plan.weighted,
+            "{} requires weighted partitioning",
+            program.name()
+        );
+    }
+    let c = plan.c;
+    let n = plan.num_vertices as usize;
+    let num_blocks = plan.num_blocks as usize;
+    let n_static = config.static_engines;
+    let n_total = config.total_engines as usize;
+    let m = config.crossbars_per_engine as usize;
+
+    // --- engines (moved into lanes per superstep) + dispatch state ---
+    let mut engines: Vec<Option<GraphEngine>> = (0..n_total)
+        .map(|i| {
+            let kind =
+                if (i as u32) < n_static { EngineKind::Static } else { EngineKind::Dynamic };
+            Some(GraphEngine::new(i as u32, kind, c, m as u32))
+        })
+        .collect();
+    let n_dyn_slots = config.dynamic_engines() as usize * m;
+    let mut policy = build_policy(config.policy, n_dyn_slots);
+    let mut dyn_dir: Vec<u32> = vec![NONE; plan.num_patterns as usize];
+    let mut slot_rank: Vec<u32> = vec![NONE; n_dyn_slots];
+    let mut retired: Vec<bool> = vec![false; n_dyn_slots];
+    // Dispatcher-owned mirror of the dynamic crossbars: retire-then-repick
+    // must know a configure's wear *at decision time*, before the owning
+    // lane replays the identical configure on the real crossbar.
+    let mut shadow: Vec<Crossbar> = (0..n_dyn_slots).map(|_| Crossbar::new(c)).collect();
+    // Shadow of the static engines' busy time, accumulated with the same
+    // f64 additions (same order, same addend) as the interpreter — the
+    // least-busy replica pick compares bit-identical values.
+    let mut shadow_busy = vec![0f64; n_total];
+
+    // --- initialization: configure static engines (Alg. 2 l. 6–8) ---
+    for &(slot, pattern) in plan.static_config() {
+        engines[slot.engine as usize]
+            .as_mut()
+            .expect("engine present")
+            .configure(slot.crossbar as usize, pattern, params);
+    }
+    let mut init_counts = EventCounts::default();
+    let mut init_time_ns = 0f64;
+    for e in engines.iter_mut() {
+        let e = e.as_mut().expect("engine present");
+        init_counts.add(&e.counts);
+        let (busy, _) = e.end_iteration();
+        init_time_ns = init_time_ns.max(busy);
+    }
+    let counts_baseline = init_counts;
+
+    // --- vertex state (identical to the sequential interpreter) ---
+    let mut values = program.init(plan.num_vertices);
+    anyhow::ensure!(values.len() == n, "program init length mismatch");
+    let mut snapshot = values.clone();
+    let semiring = program.semiring();
+    let mut acc = match semiring {
+        Semiring::SumProd => vec![0f32; n],
+        Semiring::MinPlus => Vec::new(),
+    };
+    let outdeg = plan.out_degrees();
+
+    let all_blocks = program.processes_all_blocks();
+    let mut active_block = vec![false; num_blocks];
+    let mut next_active_block = vec![false; num_blocks];
+    if !all_blocks {
+        for (v, &val) in values.iter().enumerate() {
+            if val < INF {
+                active_block[v / c] = true;
+            }
+        }
+    }
+
+    // --- per-engine work lanes, preallocated from the plan's lane table ---
+    let lane_tab = plan.lanes();
+    let mut records: Vec<Vec<LaneRecord>> = (0..n_total)
+        .map(|e| Vec::with_capacity(lane_tab.fixed_ops_on(e as u32) as usize))
+        .collect();
+
+    // --- main loop ---
+    let kind = program.step_kind();
+    let mut exec_time_ns = 0f64;
+    let mut sys_counts = EventCounts::default();
+    let mut iterations = 0u64;
+    let mut static_ops = 0u64;
+    let mut dynamic_ops = 0u64;
+    let mut dynamic_hits = 0u64;
+    let mut supersteps = 0usize;
+
+    let mut sup_ops: Vec<u32> = Vec::new();
+    let mut xs: Vec<f32> = Vec::new();
+    let mut cand: Vec<f32> = Vec::new();
+
+    let lat_mvm = crate::cost::timing::mvm_latency_ns(params, c as u32, c as u32)
+        + crate::cost::timing::reduce_latency_ns(params, c as u32);
+
+    for superstep in 0..program.max_supersteps() {
+        snapshot.copy_from_slice(&values);
+        sup_ops.clear();
+        for r in records.iter_mut() {
+            r.clear();
+        }
+        shadow_busy.iter_mut().for_each(|b| *b = 0.0);
+
+        // --- phase 1: sequential dispatch — decisions into lanes ---
+        for g in 0..plan.num_groups() {
+            let (start, end) = plan.group_bounds(g);
+            let mut ops_in_group = 0u64;
+            for (off, op) in plan.ops[start..end].iter().enumerate() {
+                if !all_blocks && !active_block[op.src_block as usize] {
+                    continue;
+                }
+                ops_in_group += 1;
+                if op.is_static() {
+                    let slots = plan.slots_of(op);
+                    // Compile-time-homed ops (the lane table's fast path:
+                    // exactly one replica) skip the least-busy scan; only
+                    // multi-replica ops resolve against the shadow busy
+                    // model — same choice, bit for bit, as the
+                    // interpreter's single-slot shortcut.
+                    let slot = if lane_tab.home_of(start + off).is_some() {
+                        slots[0]
+                    } else {
+                        *slots
+                            .iter()
+                            .min_by(|a, b| {
+                                shadow_busy[a.engine as usize]
+                                    .total_cmp(&shadow_busy[b.engine as usize])
+                            })
+                            .expect("static op has a slot")
+                    };
+                    shadow_busy[slot.engine as usize] += lat_mvm;
+                    records[slot.engine as usize].push(LaneRecord::Mvm {
+                        crossbar: slot.crossbar,
+                        read_rows: op.read_rows,
+                    });
+                    static_ops += 1;
+                } else {
+                    let rank = op.pattern_rank as usize;
+                    let hit = if config.dynamic_reuse {
+                        let k = dyn_dir[rank];
+                        (k != NONE && !retired[k as usize]).then_some(k as usize)
+                    } else {
+                        None
+                    };
+                    let k = match hit {
+                        Some(k) => {
+                            dynamic_hits += 1;
+                            k
+                        }
+                        None => {
+                            let pattern = plan.pattern_of_rank(op.pattern_rank);
+                            // Retire-then-repick, mirrored from the
+                            // interpreter: the shadow crossbar absorbs the
+                            // same configure the lane will replay, so the
+                            // wear decision and the replayed wear agree.
+                            loop {
+                                let k = policy.pick(&retired).ok_or_else(|| {
+                                    anyhow::anyhow!(
+                                        "all dynamic crossbars retired (wear-out)"
+                                    )
+                                })?;
+                                let (ei, cb) = slot_pos(config, k);
+                                let old = slot_rank[k];
+                                if old != NONE {
+                                    dyn_dir[old as usize] = NONE;
+                                    slot_rank[k] = NONE;
+                                }
+                                shadow[k].configure(pattern);
+                                records[ei].push(LaneRecord::Configure {
+                                    crossbar: cb as u32,
+                                    rank: op.pattern_rank,
+                                });
+                                if shadow[k].worn_out(params.endurance_cycles) {
+                                    retired[k] = true;
+                                    continue;
+                                }
+                                slot_rank[k] = rank as u32;
+                                dyn_dir[rank] = k as u32;
+                                break k;
+                            }
+                        }
+                    };
+                    let (ei, cb) = slot_pos(config, k);
+                    records[ei].push(LaneRecord::Mvm {
+                        crossbar: cb as u32,
+                        read_rows: op.rows,
+                    });
+                    policy.touch(k);
+                    dynamic_ops += 1;
+                }
+                sup_ops.push((start + off) as u32);
+            }
+            if ops_in_group == 0 {
+                continue;
+            }
+            iterations += 1;
+            sys_counts.main_mem_accesses += 2 * ops_in_group.div_ceil(16);
+        }
+
+        // --- phase 2: parallel lane replay, engine-ordered timing merge ---
+        exec_time_ns +=
+            replay_lanes(&mut engines, &mut records, plan, params, lat_mvm, threads);
+
+        if sup_ops.is_empty() {
+            break;
+        }
+
+        // --- phase 3: numeric — gather, chunked edge compute, reduce ---
+        // Gather and reduce/apply are the interpreter's own helpers:
+        // identical numeric semantics by construction, not by mirroring.
+        gather_sources(plan, program, kind, &snapshot, outdeg, &sup_ops, &mut xs);
+        run_numeric(executor, kind, plan, &sup_ops, &xs, &mut cand, threads)?;
+        let any_changed = reduce_apply(
+            plan,
+            program,
+            semiring,
+            &sup_ops,
+            &cand,
+            &mut values,
+            &mut acc,
+            &mut active_block,
+            &mut next_active_block,
+        );
+
+        supersteps = superstep + 1;
+        if !program.post_superstep(superstep, &mut values, &mut acc, any_changed) {
+            break;
+        }
+    }
+
+    // --- final accounting: engines reassemble into summaries ---
+    let mut counts = sys_counts;
+    let mut summaries = Vec::with_capacity(engines.len());
+    let mut max_dyn_writes = 0u32;
+    for e in &engines {
+        let e = e.as_ref().expect("engine present");
+        counts.add(&e.counts);
+        if e.kind == EngineKind::Dynamic {
+            max_dyn_writes = max_dyn_writes.max(e.max_cell_writes());
+        }
+        summaries.push(EngineSummary::of(e));
+    }
+    counts.subtract(&counts_baseline);
+
+    Ok(RunResult {
+        values,
+        counts,
+        init_counts,
+        exec_time_ns,
+        init_time_ns,
+        supersteps,
+        iterations,
+        static_ops,
+        dynamic_ops,
+        dynamic_hits,
+        max_dynamic_cell_writes: max_dyn_writes,
+        engines: summaries,
+        activity: None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::{Bfs, PageRank, Wcc};
+    use crate::graph::coo::{Coo, Edge};
+    use crate::graph::datasets::Dataset;
+    use crate::pattern::extract::partition;
+    use crate::pattern::rank::PatternRanking;
+    use crate::pattern::tables::{ConfigTable, StaticAssignment, SubgraphTable};
+    use crate::sched::executor::NativeExecutor;
+
+    fn plan_for(g: &Coo, config: &ArchConfig, weighted: bool) -> ExecutionPlan {
+        let part = partition(g, config.crossbar_size, weighted);
+        let ranking = PatternRanking::from_partitioned(&part);
+        let ct = ConfigTable::build(
+            &ranking,
+            config.crossbar_size,
+            config.static_engines,
+            config.crossbars_per_engine,
+            config.dynamic_engines() * config.crossbars_per_engine,
+            config.static_assignment,
+        );
+        let st = SubgraphTable::build(&part, &ranking, config.order);
+        ExecutionPlan::build(&part, &ct, &st, config)
+    }
+
+    fn assert_same(a: &RunResult, b: &RunResult, ctx: &str) {
+        assert_eq!(a.values, b.values, "{ctx}: values");
+        assert_eq!(a.counts, b.counts, "{ctx}: counts");
+        assert_eq!(a.init_counts, b.init_counts, "{ctx}: init counts");
+        assert_eq!(a.exec_time_ns, b.exec_time_ns, "{ctx}: exec time");
+        assert_eq!(a.init_time_ns, b.init_time_ns, "{ctx}: init time");
+        assert_eq!(a.supersteps, b.supersteps, "{ctx}: supersteps");
+        assert_eq!(a.iterations, b.iterations, "{ctx}: iterations");
+        assert_eq!(a.static_ops, b.static_ops, "{ctx}: static ops");
+        assert_eq!(a.dynamic_ops, b.dynamic_ops, "{ctx}: dynamic ops");
+        assert_eq!(a.dynamic_hits, b.dynamic_hits, "{ctx}: dynamic hits");
+        assert_eq!(
+            a.max_dynamic_cell_writes, b.max_dynamic_cell_writes,
+            "{ctx}: wear"
+        );
+        assert_eq!(a.engines, b.engines, "{ctx}: engine summaries");
+    }
+
+    fn run_both(
+        g: &Coo,
+        config: &ArchConfig,
+        program: &dyn VertexProgram,
+        threads: usize,
+    ) -> (RunResult, RunResult) {
+        let params = CostParams::default();
+        let plan = plan_for(g, config, program.needs_weights());
+        let seq = Scheduler::new(config, &params, &plan)
+            .run(program, &mut NativeExecutor)
+            .unwrap();
+        let par =
+            run_parallel(config, &params, &plan, program, &mut NativeExecutor, threads)
+                .unwrap();
+        (seq, par)
+    }
+
+    #[test]
+    fn lane_assignment_is_deterministic_and_balanced() {
+        // Seeding then greedy: e0→l0, e1→l1, then each next engine to the
+        // lighter lane (ties to lane 0).
+        assert_eq!(lane_assignment(&[5, 1, 1, 1, 5], 2), vec![0, 1, 1, 1, 1]);
+        // Never more lanes than engines; single engine → single lane.
+        assert_eq!(lane_assignment(&[3], 8), vec![0]);
+        // Every lane gets seeded before balancing kicks in.
+        assert_eq!(lane_assignment(&[1, 1, 1], 3), vec![0, 1, 2]);
+        // Deterministic: same input, same output.
+        assert_eq!(lane_assignment(&[2, 2, 2, 2], 2), lane_assignment(&[2, 2, 2, 2], 2));
+    }
+
+    #[test]
+    fn zero_dynamic_engines_all_ops_static() {
+        // Every pattern pinned (TopK, capacity >= patterns) and not a
+        // single dynamic engine: the dispatch pass must never touch the
+        // (empty) dynamic state and lanes carry only MVM records.
+        let g = Dataset::Tiny.load().unwrap();
+        let part = partition(&g, 4, false);
+        let patterns = PatternRanking::from_partitioned(&part).num_patterns() as u32;
+        let config = ArchConfig {
+            total_engines: patterns,
+            static_engines: patterns,
+            static_assignment: StaticAssignment::TopK,
+            ..ArchConfig::default()
+        };
+        let (seq, par) = run_both(&g, &config, &Bfs::new(0), 4);
+        assert_same(&seq, &par, "zero dynamic engines");
+        assert_eq!(par.dynamic_ops, 0);
+        assert!(par.static_ops > 0);
+    }
+
+    #[test]
+    fn more_threads_than_lanes_falls_back_to_available_engines() {
+        // 2 engines, 16 requested lanes: at most 2 lanes may run; the
+        // run must still be bit-identical.
+        let g = Dataset::Tiny.load().unwrap();
+        let config = ArchConfig {
+            total_engines: 2,
+            static_engines: 1,
+            ..ArchConfig::default()
+        };
+        let (seq, par) = run_both(&g, &config, &Bfs::new(0), 16);
+        assert_same(&seq, &par, "threads > lanes");
+    }
+
+    #[test]
+    fn only_dynamic_ops_superstep() {
+        // All-dynamic architecture: every superstep's lanes are pure
+        // replacement-policy traffic.
+        let g = Dataset::Tiny.load().unwrap();
+        let config = ArchConfig {
+            static_engines: 0,
+            total_engines: 8,
+            ..ArchConfig::default()
+        };
+        let (seq, par) = run_both(&g, &config, &Wcc, 4);
+        assert_same(&seq, &par, "only dynamic ops");
+        assert_eq!(par.static_ops, 0);
+        assert!(par.dynamic_ops > 0);
+    }
+
+    #[test]
+    fn empty_frontier_terminates_without_idle_scopes() {
+        // Source with no out-edges: the first superstep has an empty
+        // frontier, so no lanes spawn and the run ends after at most one
+        // superstep — identically to the sequential path.
+        let g = Coo::from_edges(8, vec![Edge::new(1, 2)]);
+        let config = ArchConfig::default();
+        let (seq, par) = run_both(&g, &config, &Bfs::new(7), 4);
+        assert_same(&seq, &par, "empty frontier");
+        assert!(par.supersteps <= 1);
+        assert_eq!(par.values[7], 0.0);
+    }
+
+    #[test]
+    fn pagerank_sum_prod_path_is_identical() {
+        let g = Dataset::Tiny.load().unwrap();
+        let config = ArchConfig::default();
+        let (seq, par) = run_both(&g, &config, &PageRank::new(0.85, 6), 8);
+        assert_same(&seq, &par, "pagerank");
+        assert_eq!(par.supersteps, 6);
+    }
+
+    #[test]
+    fn tracing_runs_take_the_sequential_path() {
+        // The activity trace needs per-group engine snapshots, so a
+        // tracing run delegates to the interpreter even with threads > 1.
+        let g = Dataset::Tiny.load().unwrap();
+        let config = ArchConfig::fig5();
+        let params = CostParams::default();
+        let plan = plan_for(&g, &config, false);
+        let par = run_parallel(&config, &params, &plan, &Bfs::new(0), &mut NativeExecutor, 4)
+            .unwrap();
+        let trace = par.activity.expect("trace recorded via the sequential path");
+        assert_eq!(trace.num_engines, 6);
+        let seq = Scheduler::new(&config, &params, &plan)
+            .run(&Bfs::new(0), &mut NativeExecutor)
+            .unwrap();
+        assert_same(&seq, &par, "tracing delegation");
+    }
+
+    #[test]
+    fn wearout_error_matches_sequential() {
+        // Endurance 1 with one dynamic slot: the dispatch pass must fail
+        // exactly like the interpreter's retire-then-repick.
+        let g = Coo::from_edges(4, vec![Edge::new(0, 1)]);
+        let config = ArchConfig {
+            crossbar_size: 2,
+            total_engines: 1,
+            static_engines: 0,
+            ..ArchConfig::default()
+        };
+        let params = CostParams { endurance_cycles: 1.0, ..CostParams::default() };
+        let plan = plan_for(&g, &config, false);
+        let err =
+            run_parallel(&config, &params, &plan, &Bfs::new(0), &mut NativeExecutor, 4)
+                .unwrap_err();
+        assert!(err.to_string().contains("retired"), "{err}");
+    }
+
+    #[test]
+    fn effective_threads_resolves_auto() {
+        assert!(effective_threads(0) >= 1);
+        assert_eq!(effective_threads(3), 3);
+    }
+}

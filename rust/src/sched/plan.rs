@@ -116,6 +116,8 @@ pub struct ExecutionPlan {
     pub groups: Vec<u32>,
     /// Flattened static-slot candidates (`PlanOp::slot_range` indexes here).
     slot_pool: Vec<EngineSlot>,
+    /// Precomputed lane partitioning for batch-parallel execution.
+    lanes: LaneTable,
     /// One-time static configuration (Alg. 2 ll. 6–8), in CT rank order.
     static_config: Vec<(EngineSlot, Pattern)>,
     /// rank → pattern, for dynamic `configure` (ll. 13–15).
@@ -128,6 +130,89 @@ pub struct ExecutionPlan {
     weights: Vec<f32>,
     /// Out-degree per vertex (PageRank wordline scaling), built once.
     out_degrees: Vec<u32>,
+}
+
+/// Sentinel in [`LaneTable`]: the op's engine is a runtime decision
+/// (multi-replica least-busy pick or the dynamic replacement policy).
+pub const LANE_RUNTIME: u32 = u32::MAX;
+
+/// Precomputed lane partitioning for batch-parallel superstep execution
+/// ([`sched::par`](super::par)): which ops have a compile-time-fixed home
+/// engine, and how many such ops each engine can ever receive.
+///
+/// Lane identity follows engines — an engine's entire per-superstep work
+/// queue replays on exactly one worker thread, so all engine-local state
+/// (busy time, event counters, crossbar contents, wear) stays
+/// thread-local. Single-replica static ops resolve their engine here, at
+/// compile time; multi-replica static ops (runtime least-busy) and
+/// dynamic ops (runtime replacement policy) are marked [`LANE_RUNTIME`]
+/// and resolved by the dispatch pass. Rebuilt alongside the static-slot
+/// section by [`ExecutionPlan::rebuild_static_slots`], since the
+/// static/dynamic split is exactly what decides op homes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LaneTable {
+    /// op index -> home engine, or [`LANE_RUNTIME`].
+    home: Vec<u32>,
+    /// Upper bound (frontier ignored) of compile-time-homed ops per
+    /// engine; lane work queues preallocate to this.
+    fixed_per_engine: Vec<u32>,
+    /// Static ops needing a runtime least-busy pick among replicas.
+    pub multi_replica_ops: u32,
+    /// Ops on the dynamic (replacement-policy) path.
+    pub dynamic_path_ops: u32,
+}
+
+impl LaneTable {
+    fn build(ops: &[PlanOp], slot_pool: &[EngineSlot], total_engines: u32) -> Self {
+        let mut home = Vec::with_capacity(ops.len());
+        let mut fixed_per_engine = vec![0u32; total_engines as usize];
+        let mut multi_replica_ops = 0u32;
+        let mut dynamic_path_ops = 0u32;
+        for op in ops {
+            let h = match op.slot_len {
+                0 => {
+                    dynamic_path_ops += 1;
+                    LANE_RUNTIME
+                }
+                1 => {
+                    let e = slot_pool[op.slot_start as usize].engine;
+                    fixed_per_engine[e as usize] += 1;
+                    e
+                }
+                _ => {
+                    multi_replica_ops += 1;
+                    LANE_RUNTIME
+                }
+            };
+            home.push(h);
+        }
+        Self { home, fixed_per_engine, multi_replica_ops, dynamic_path_ops }
+    }
+
+    /// Compile-time home engine of op `op`, if it has one.
+    #[inline]
+    pub fn home_of(&self, op: usize) -> Option<u32> {
+        (self.home[op] != LANE_RUNTIME).then_some(self.home[op])
+    }
+
+    /// Upper bound of compile-time-homed ops engine `engine` can receive
+    /// in one superstep (0 for engines outside the table's geometry).
+    pub fn fixed_ops_on(&self, engine: u32) -> u32 {
+        self.fixed_per_engine.get(engine as usize).copied().unwrap_or(0)
+    }
+
+    /// Ops whose home engine is fixed at compile time.
+    pub fn fixed_ops(&self) -> u32 {
+        self.home.len() as u32 - self.multi_replica_ops - self.dynamic_path_ops
+    }
+
+    pub fn len(&self) -> usize {
+        self.home.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.home.is_empty()
+    }
 }
 
 /// Static-slot sections derived from a config table: the slot pool,
@@ -195,6 +280,7 @@ impl ExecutionPlan {
             }
         }
 
+        let lanes = LaneTable::build(&ops, &slot_pool, arch.total_engines);
         Self {
             c,
             num_vertices: part.num_vertices,
@@ -209,6 +295,7 @@ impl ExecutionPlan {
             ops,
             groups: st.groups.clone(),
             slot_pool,
+            lanes,
             static_config,
             rank_pattern: ct.entries.iter().map(|e| e.pattern).collect(),
             op_bits,
@@ -255,6 +342,7 @@ impl ExecutionPlan {
                 weight_off.push(weights.len() as u32);
             }
         }
+        let lanes = LaneTable::build(&ops, &[], 0);
         Self {
             c,
             num_vertices: part.num_vertices,
@@ -269,6 +357,7 @@ impl ExecutionPlan {
             ops,
             groups: vec![0, n as u32],
             slot_pool: Vec::new(),
+            lanes,
             static_config: Vec::new(),
             rank_pattern: part.subgraphs.iter().map(|s| s.pattern).collect(),
             op_bits,
@@ -326,6 +415,9 @@ impl ExecutionPlan {
             op.slot_start = start;
             op.slot_len = len;
         }
+        // The lane table is a pure function of the slot section: op homes
+        // move with the static split, so it is rebuilt with it.
+        self.lanes = LaneTable::build(&self.ops, &slot_pool, arch.total_engines);
         self.slot_pool = slot_pool;
         self.static_config = static_config;
         self.static_engines = arch.static_engines;
@@ -367,6 +459,12 @@ impl ExecutionPlan {
     #[inline]
     pub fn slots_of(&self, op: &PlanOp) -> &[EngineSlot] {
         &self.slot_pool[op.slot_range()]
+    }
+
+    /// Precomputed lane partitioning (batch-parallel execution).
+    #[inline]
+    pub fn lanes(&self) -> &LaneTable {
+        &self.lanes
     }
 
     /// One-time static engine configuration (Alg. 2 ll. 6–8).
@@ -571,6 +669,55 @@ mod tests {
         // use a foreign ranking) is rejected, not silently applied.
         let rm = ArchConfig { order: ExecOrder::RowMajor, ..arch0 };
         assert!(plan.rebuild_static_slots(&ct0, &rm).is_err());
+    }
+
+    #[test]
+    fn lane_table_homes_single_replica_static_ops() {
+        let (part, ct, st, arch) = setup(false);
+        let plan = ExecutionPlan::build(&part, &ct, &st, &arch);
+        let lanes = plan.lanes();
+        assert_eq!(lanes.len(), plan.num_ops());
+        let mut fixed_seen = vec![0u32; arch.total_engines as usize];
+        for (k, op) in plan.ops.iter().enumerate() {
+            let slots = plan.slots_of(op);
+            match lanes.home_of(k) {
+                Some(e) => {
+                    assert_eq!(slots.len(), 1, "op {k}: home implies one replica");
+                    assert_eq!(e, slots[0].engine, "op {k}: wrong home engine");
+                    fixed_seen[e as usize] += 1;
+                }
+                None => assert_ne!(slots.len(), 1, "op {k}: single replica left unhomed"),
+            }
+        }
+        for (e, &n) in fixed_seen.iter().enumerate() {
+            assert_eq!(n, lanes.fixed_ops_on(e as u32), "engine {e} capacity");
+        }
+        assert_eq!(
+            lanes.fixed_ops() + lanes.multi_replica_ops + lanes.dynamic_path_ops,
+            plan.num_ops() as u32
+        );
+    }
+
+    #[test]
+    fn rebuild_static_slots_rebuilds_the_lane_table() {
+        let (part, ct, st, arch) = setup(false);
+        let mut plan = ExecutionPlan::build(&part, &ct, &st, &arch);
+        assert!(plan.lanes().fixed_ops() > 0, "setup has static slots");
+
+        // All-dynamic rebuild: every op loses its compile-time home.
+        let ranking = PatternRanking::from_partitioned(&part);
+        let arch0 = ArchConfig { static_engines: 0, ..arch.clone() };
+        let ct0 = ConfigTable::build(&ranking, 2, 0, 1, 4, arch0.static_assignment);
+        plan.rebuild_static_slots(&ct0, &arch0).unwrap();
+        let lanes = plan.lanes();
+        assert_eq!(lanes.fixed_ops(), 0);
+        assert_eq!(lanes.dynamic_path_ops, plan.num_ops() as u32);
+        assert!((0..plan.num_ops()).all(|k| lanes.home_of(k).is_none()));
+
+        // Restoring the original split restores the original lane table.
+        plan.rebuild_static_slots(&ct, &arch).unwrap();
+        let fresh = ExecutionPlan::build(&part, &ct, &st, &arch);
+        assert_eq!(plan.lanes(), fresh.lanes());
     }
 
     #[test]

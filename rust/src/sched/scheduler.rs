@@ -26,7 +26,7 @@ use anyhow::Result;
 
 use crate::accel::activity::ActivityTrace;
 use crate::accel::config::ArchConfig;
-use crate::algo::traits::{Semiring, VertexProgram, INF};
+use crate::algo::traits::{Semiring, StepKind, VertexProgram, INF};
 use crate::cost::{CostParams, EventCounts};
 use crate::engine::{EngineKind, GraphEngine};
 
@@ -35,10 +35,20 @@ use super::plan::ExecutionPlan;
 use super::replacement::{build_policy, ReplacementPolicy};
 
 /// Sentinel for "no rank / no slot" in the dense dynamic directory.
-const NONE: u32 = u32::MAX;
+pub(crate) const NONE: u32 = u32::MAX;
+
+/// Dynamic slot index -> (engine index, crossbar index). Dynamic slots
+/// spread over engines first so consecutive misses land on distinct
+/// engines. Shared by the sequential interpreter and the batch-parallel
+/// dispatcher (`sched::par`) so their slot geometry can never drift.
+#[inline]
+pub(crate) fn slot_pos(config: &ArchConfig, k: usize) -> (usize, usize) {
+    let n_dyn = config.dynamic_engines() as usize;
+    (config.static_engines as usize + k % n_dyn, k / n_dyn)
+}
 
 /// Per-engine summary for reports and the lifetime analysis.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct EngineSummary {
     pub id: u32,
     pub is_static: bool,
@@ -47,6 +57,22 @@ pub struct EngineSummary {
     pub mvm_ops: u64,
     pub reconfigs: u64,
     pub max_cell_writes: u32,
+}
+
+impl EngineSummary {
+    /// Snapshot an engine after a run (sequential, oracle, and lane
+    /// replay all reassemble engines into summaries through this).
+    pub fn of(e: &GraphEngine) -> Self {
+        Self {
+            id: e.id,
+            is_static: e.kind == EngineKind::Static,
+            read_bits: e.counts.read_bits,
+            write_bits: e.counts.write_bits,
+            mvm_ops: e.counts.mvm_ops,
+            reconfigs: e.counts.reconfigs,
+            max_cell_writes: e.max_cell_writes(),
+        }
+    }
 }
 
 /// Outcome of one accelerator run.
@@ -98,6 +124,95 @@ impl RunResult {
     }
 }
 
+/// Gather one superstep's wordline inputs: a C-vector per selected op,
+/// snapshot source values mapped through `VertexProgram::source_value`,
+/// identity-padded past the vertex count. Shared by the sequential
+/// interpreter and `sched::par` so the numeric operands can never drift
+/// between them (the oracle keeps its own copy by design).
+pub(crate) fn gather_sources(
+    plan: &ExecutionPlan,
+    program: &dyn VertexProgram,
+    kind: StepKind,
+    snapshot: &[f32],
+    outdeg: &[u32],
+    sup_ops: &[u32],
+    xs: &mut Vec<f32>,
+) {
+    let c = plan.c;
+    let n = plan.num_vertices as usize;
+    xs.clear();
+    xs.reserve(sup_ops.len() * c);
+    for &op in sup_ops {
+        let src_start = plan.ops[op as usize].src_start as usize;
+        for i in 0..c {
+            let v = src_start + i;
+            if v < n {
+                xs.push(program.source_value(snapshot[v], outdeg[v]));
+            } else {
+                xs.push(super::executor::identity(kind));
+            }
+        }
+    }
+}
+
+/// Reduce & apply one superstep's candidates (engine-ALU model; events
+/// are already accounted): min-plus programs apply per destination lane
+/// and rebuild the frontier bitmap, sum-product programs accumulate into
+/// `acc`. Returns whether anything changed. Shared by the sequential
+/// interpreter and `sched::par` — same caveat as [`gather_sources`].
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn reduce_apply(
+    plan: &ExecutionPlan,
+    program: &dyn VertexProgram,
+    semiring: Semiring,
+    sup_ops: &[u32],
+    cand: &[f32],
+    values: &mut [f32],
+    acc: &mut [f32],
+    active_block: &mut Vec<bool>,
+    next_active_block: &mut Vec<bool>,
+) -> bool {
+    let c = plan.c;
+    let n = values.len();
+    let mut any_changed = false;
+    match semiring {
+        Semiring::MinPlus => {
+            next_active_block.iter_mut().for_each(|b| *b = false);
+            for (k, &op) in sup_ops.iter().enumerate() {
+                let dst_start = plan.ops[op as usize].dst_start as usize;
+                for j in 0..c {
+                    let v = dst_start + j;
+                    if v >= n {
+                        break;
+                    }
+                    let old = values[v];
+                    let new = program.apply(old, cand[k * c + j]);
+                    if program.changed(old, new) {
+                        values[v] = new;
+                        next_active_block[v / c] = true;
+                        any_changed = true;
+                    }
+                }
+            }
+            std::mem::swap(active_block, next_active_block);
+        }
+        Semiring::SumProd => {
+            for (k, &op) in sup_ops.iter().enumerate() {
+                let dst_start = plan.ops[op as usize].dst_start as usize;
+                for j in 0..c {
+                    let v = dst_start + j;
+                    if v >= n {
+                        break;
+                    }
+                    acc[v] += cand[k * c + j];
+                }
+            }
+            any_changed = true;
+        }
+    }
+    any_changed
+}
+
 /// Algorithm 2 interpreter over a compiled execution plan.
 pub struct Scheduler<'a> {
     pub config: &'a ArchConfig,
@@ -110,12 +225,10 @@ impl<'a> Scheduler<'a> {
         Self { config, params, plan }
     }
 
-    /// Slot index -> (engine index, crossbar index). Dynamic slots spread
-    /// over engines first so consecutive misses land on distinct engines.
+    /// See the module-level [`slot_pos`].
     #[inline]
     fn slot_pos(&self, k: usize) -> (usize, usize) {
-        let n_dyn = self.config.dynamic_engines() as usize;
-        (self.config.static_engines as usize + k % n_dyn, k / n_dyn)
+        slot_pos(self.config, k)
     }
 
     /// Run `program` to convergence, computing values via `executor`.
@@ -362,58 +475,21 @@ impl<'a> Scheduler<'a> {
             }
 
             // --- numeric phase: edge compute through the executor ---
-            xs.clear();
-            xs.reserve(sup_ops.len() * c);
-            for &op in &sup_ops {
-                let src_start = plan.ops[op as usize].src_start as usize;
-                for i in 0..c {
-                    let v = src_start + i;
-                    if v < n {
-                        xs.push(program.source_value(snapshot[v], outdeg[v]));
-                    } else {
-                        xs.push(super::executor::identity(kind));
-                    }
-                }
-            }
+            gather_sources(plan, program, kind, &snapshot, outdeg, &sup_ops, &mut xs);
             executor.execute(kind, plan.batch(&sup_ops), &xs, &mut cand)?;
 
             // --- reduce & apply (engine ALU, modeled events already) ---
-            let mut any_changed = false;
-            match semiring {
-                Semiring::MinPlus => {
-                    next_active_block.iter_mut().for_each(|b| *b = false);
-                    for (k, &op) in sup_ops.iter().enumerate() {
-                        let dst_start = plan.ops[op as usize].dst_start as usize;
-                        for j in 0..c {
-                            let v = dst_start + j;
-                            if v >= n {
-                                break;
-                            }
-                            let old = values[v];
-                            let new = program.apply(old, cand[k * c + j]);
-                            if program.changed(old, new) {
-                                values[v] = new;
-                                next_active_block[v / c] = true;
-                                any_changed = true;
-                            }
-                        }
-                    }
-                    std::mem::swap(&mut active_block, &mut next_active_block);
-                }
-                Semiring::SumProd => {
-                    for (k, &op) in sup_ops.iter().enumerate() {
-                        let dst_start = plan.ops[op as usize].dst_start as usize;
-                        for j in 0..c {
-                            let v = dst_start + j;
-                            if v >= n {
-                                break;
-                            }
-                            acc[v] += cand[k * c + j];
-                        }
-                    }
-                    any_changed = true;
-                }
-            }
+            let any_changed = reduce_apply(
+                plan,
+                program,
+                semiring,
+                &sup_ops,
+                &cand,
+                &mut values,
+                &mut acc,
+                &mut active_block,
+                &mut next_active_block,
+            );
 
             supersteps = superstep + 1;
             if !program.post_superstep(superstep, &mut values, &mut acc, any_changed) {
@@ -430,26 +506,10 @@ impl<'a> Scheduler<'a> {
             if e.kind == EngineKind::Dynamic {
                 max_dyn_writes = max_dyn_writes.max(e.max_cell_writes());
             }
-            summaries.push(EngineSummary {
-                id: e.id,
-                is_static: e.kind == EngineKind::Static,
-                read_bits: e.counts.read_bits,
-                write_bits: e.counts.write_bits,
-                mvm_ops: e.counts.mvm_ops,
-                reconfigs: e.counts.reconfigs,
-                max_cell_writes: e.max_cell_writes(),
-            });
+            summaries.push(EngineSummary::of(e));
         }
         // Runtime counts exclude initialization.
-        counts.read_bits -= counts_baseline.read_bits;
-        counts.write_bits -= counts_baseline.write_bits;
-        counts.sense_ops -= counts_baseline.sense_ops;
-        counts.sram_accesses -= counts_baseline.sram_accesses;
-        counts.adc_ops -= counts_baseline.adc_ops;
-        counts.alu_ops -= counts_baseline.alu_ops;
-        counts.main_mem_accesses -= counts_baseline.main_mem_accesses;
-        counts.mvm_ops -= counts_baseline.mvm_ops;
-        counts.reconfigs -= counts_baseline.reconfigs;
+        counts.subtract(&counts_baseline);
 
         Ok(RunResult {
             values,

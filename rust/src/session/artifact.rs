@@ -88,6 +88,12 @@ pub struct ArtifactStats {
     pub hits: u64,
     pub misses: u64,
     pub entries: usize,
+    /// Requests that found their key's build already in flight (or its
+    /// slot otherwise contended) and blocked for the shared result
+    /// instead of starting a second preprocess. Always `<= hits + misses`;
+    /// under an N-thread stampede on one cold key, up to N−1 requests
+    /// coalesce behind the single builder.
+    pub coalesced: u64,
 }
 
 /// Concurrent map from [`ArtifactKey`] to preprocessed artifacts.
@@ -96,6 +102,7 @@ pub struct ArtifactStore {
     slots: Mutex<HashMap<ArtifactKey, Arc<Slot>>>,
     hits: AtomicU64,
     misses: AtomicU64,
+    coalesced: AtomicU64,
 }
 
 impl ArtifactStore {
@@ -136,7 +143,21 @@ impl ArtifactStore {
             let mut slots = self.slots.lock().unwrap();
             Arc::clone(slots.entry(key).or_default())
         };
-        let mut cell = slot.pre.lock().unwrap();
+        // A contended per-key lock means another caller holds the slot —
+        // almost always the in-flight first build; waiting here is what
+        // coalesces the stampede into exactly one preprocess.
+        let mut cell = match slot.pre.try_lock() {
+            Ok(cell) => cell,
+            Err(std::sync::TryLockError::WouldBlock) => {
+                self.coalesced.fetch_add(1, Ordering::Relaxed);
+                slot.pre.lock().unwrap()
+            }
+            // Same failure mode as the plain `.lock().unwrap()` before:
+            // a poisoned slot (builder panicked) is unrecoverable.
+            Err(e @ std::sync::TryLockError::Poisoned(_)) => {
+                panic!("artifact slot poisoned: {e}")
+            }
+        };
         if let Some(p) = cell.as_ref() {
             self.hits.fetch_add(1, Ordering::Relaxed);
             return Ok(Arc::clone(p));
@@ -176,6 +197,7 @@ impl ArtifactStore {
             hits: self.hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
             entries,
+            coalesced: self.coalesced.load(Ordering::Relaxed),
         }
     }
 

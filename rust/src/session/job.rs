@@ -21,6 +21,11 @@ pub struct JobSpec {
     pub scale: f64,
     pub algorithm: AlgorithmId,
     pub params: AlgoParams,
+    /// Per-job override of the session's superstep execution-lane count
+    /// (`None` = session default; `Some(0)` = one lane per hardware
+    /// thread). Purely a throughput knob — results are bit-identical for
+    /// every setting.
+    pub parallelism: Option<usize>,
 }
 
 impl JobSpec {
@@ -31,6 +36,7 @@ impl JobSpec {
             scale: 1.0,
             algorithm: algorithm.into(),
             params: AlgoParams::default(),
+            parallelism: None,
         }
     }
 
@@ -59,6 +65,12 @@ impl JobSpec {
         self
     }
 
+    /// Override the session's execution-lane count for this job alone.
+    pub fn with_parallelism(mut self, threads: usize) -> Self {
+        self.parallelism = Some(threads);
+        self
+    }
+
     /// Spec-level validation (algorithm existence and parameter checks
     /// happen against the session's registry at run time).
     pub fn validate(&self) -> Result<()> {
@@ -81,7 +93,9 @@ mod tests {
         assert_eq!(s.algorithm.as_str(), "bfs");
         assert_eq!(s.scale, 0.5);
         assert_eq!(s.params.source, 3);
+        assert_eq!(s.parallelism, None);
         assert!(s.validate().is_ok());
+        assert_eq!(s.with_parallelism(4).parallelism, Some(4));
     }
 
     #[test]

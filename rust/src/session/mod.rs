@@ -120,6 +120,7 @@ pub struct SessionBuilder {
     backend: Backend,
     registry: Option<AlgorithmRegistry>,
     artifacts: Option<Arc<ArtifactStore>>,
+    parallelism: usize,
 }
 
 impl Default for SessionBuilder {
@@ -130,6 +131,7 @@ impl Default for SessionBuilder {
             backend: Backend::Native,
             registry: None,
             artifacts: None,
+            parallelism: 1,
         }
     }
 }
@@ -168,6 +170,16 @@ impl SessionBuilder {
         self
     }
 
+    /// Batch-parallel execution lanes per superstep (default 1 — the
+    /// sequential interpreter; `0` = one lane per hardware thread).
+    /// Results are bit-identical for every setting, so this is purely a
+    /// throughput knob; a [`JobSpec::with_parallelism`] override wins per
+    /// job.
+    pub fn parallelism(mut self, threads: usize) -> Self {
+        self.parallelism = threads;
+        self
+    }
+
     /// Validate everything eagerly and assemble the session.
     pub fn build(self) -> Result<Session> {
         self.arch.validate().context("invalid architecture")?;
@@ -180,6 +192,7 @@ impl SessionBuilder {
             backend: self.backend,
             registry: Arc::new(registry),
             artifacts: self.artifacts.unwrap_or_default(),
+            parallelism: self.parallelism,
         })
     }
 }
@@ -193,6 +206,7 @@ pub struct Session {
     backend: Backend,
     registry: Arc<AlgorithmRegistry>,
     artifacts: Arc<ArtifactStore>,
+    parallelism: usize,
 }
 
 impl Session {
@@ -223,6 +237,16 @@ impl Session {
 
     pub fn artifacts(&self) -> &Arc<ArtifactStore> {
         &self.artifacts
+    }
+
+    /// The session's default superstep execution-lane count.
+    pub fn parallelism(&self) -> usize {
+        self.parallelism
+    }
+
+    /// Lanes for one job: the spec's override, else the session default.
+    fn threads_for(&self, spec: &JobSpec) -> usize {
+        spec.parallelism.unwrap_or(self.parallelism)
     }
 
     /// The accelerator model this session simulates.
@@ -292,7 +316,7 @@ impl Session {
         let acc = self.accelerator();
         let pre = self.artifacts.get_or_preprocess_from(key, &acc, graph)?;
         let mut exec = self.executor()?;
-        acc.run(&pre, program.as_ref(), exec.as_mut())
+        acc.run_threaded(&pre, program.as_ref(), exec.as_mut(), self.threads_for(spec))
     }
 
     /// Run a job on a caller-provided executor (the serve workers reuse
@@ -306,7 +330,7 @@ impl Session {
         let key = self.key_for(spec, program.needs_weights());
         let acc = self.accelerator();
         let pre = self.artifacts.get_or_preprocess(key, &acc)?;
-        acc.run(&pre, program.as_ref(), executor)
+        acc.run_threaded(&pre, program.as_ref(), executor, self.threads_for(spec))
     }
 
     /// DSE: best static/dynamic engine split for the job's algorithm on
@@ -394,6 +418,30 @@ mod tests {
         assert_eq!(Backend::parse("native").unwrap(), Backend::Native);
         assert_eq!(Backend::parse("PJRT").unwrap().name(), "pjrt");
         assert!(Backend::parse("tpu").is_err());
+    }
+
+    #[test]
+    fn parallel_session_is_bit_identical_to_sequential() {
+        let spec = JobSpec::new(Dataset::Tiny, "bfs").with_source(0);
+        let seq = Session::with_defaults().unwrap().run(&spec).unwrap();
+        let par = Session::builder()
+            .parallelism(4)
+            .build()
+            .unwrap()
+            .run(&spec)
+            .unwrap();
+        assert_eq!(seq.run.as_ref().unwrap().values, par.run.as_ref().unwrap().values);
+        assert_eq!(seq.counts, par.counts);
+        assert_eq!(seq.exec_time_ns, par.exec_time_ns);
+
+        // A per-job override wins over the session default — and stays
+        // bit-identical too.
+        let over = Session::with_defaults()
+            .unwrap()
+            .run(&spec.clone().with_parallelism(8))
+            .unwrap();
+        assert_eq!(seq.counts, over.counts);
+        assert_eq!(seq.exec_time_ns, over.exec_time_ns);
     }
 
     #[test]

@@ -1,6 +1,11 @@
-//! Helpers shared by the integration-test binaries.
+//! Helpers shared by the integration-test binaries. Each binary uses its
+//! own subset, so the module allows dead code as a whole.
+#![allow(dead_code)]
 
 use repro::algo::traits::INF;
+use repro::graph::coo::{Coo, Edge};
+use repro::graph::generator::{erdos_renyi, rmat, RmatParams};
+use repro::util::SplitMix64;
 
 /// Elementwise tolerance comparison treating any pair of values at or
 /// above the INF sentinel as equal (unreached vertices).
@@ -12,4 +17,42 @@ pub fn assert_close(got: &[f32], want: &[f32], tol: f32, what: &str) {
         }
         assert!((g - w).abs() <= tol, "{what}: vertex {i}: got {g}, want {w}");
     }
+}
+
+/// Seeded random graph for property sweeps: 32–512 vertices, R-MAT or
+/// Erdős–Rényi, average degree 1–8. Every assertion over one should print
+/// the seed (`"seed {seed}: ..."`) so failures are reproducible.
+pub fn random_graph(seed: u64) -> Coo {
+    let mut rng = SplitMix64::new(seed);
+    let n = 32 + rng.next_bounded(480) as u32;
+    let m = (n as usize) * (1 + rng.next_index(8));
+    if rng.next_bool(0.5) {
+        rmat(n, m, RmatParams::default(), rng.next_u64())
+    } else {
+        erdos_renyi(n, m, rng.next_u64())
+    }
+}
+
+/// Same topology with seeded random edge weights in [0.5, 4.5) — the
+/// SSSP cases need real weight data.
+pub fn with_random_weights(g: &Coo, rng: &mut SplitMix64) -> Coo {
+    Coo::from_edges(
+        g.num_vertices,
+        g.edges
+            .iter()
+            .map(|e| Edge::weighted(e.src, e.dst, 0.5 + rng.next_f32() * 4.0))
+            .collect(),
+    )
+}
+
+/// The harness-default superstep lane count: `REPRO_THREADS` if set (the
+/// CI matrix runs the whole suite at 1 and 4), else 2 so a plain
+/// `cargo test` still exercises the parallel path. Tests that sweep
+/// thread counts explicitly don't use this; tests that just need "the
+/// configured parallelism" do.
+pub fn default_threads() -> usize {
+    std::env::var("REPRO_THREADS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(2)
 }

@@ -15,7 +15,7 @@ use repro::session::{Backend, JobSpec, Session};
 use repro::util::SplitMix64;
 
 mod common;
-use common::assert_close;
+use common::{assert_close, default_threads};
 
 fn service(workers: usize) -> Service {
     Service::spawn(ServiceConfig {
@@ -23,6 +23,10 @@ fn service(workers: usize) -> Service {
         params: CostParams::default(),
         backend: Backend::Native,
         workers,
+        // The harness default (REPRO_THREADS): the whole coordinator
+        // suite runs against both the sequential and the parallel
+        // scheduler in CI, and every assertion must hold unchanged.
+        parallelism: default_threads(),
     })
     .unwrap()
 }
@@ -84,6 +88,56 @@ fn served_results_are_deterministic() {
         );
         assert_eq!(r.counts, first.counts);
         assert_eq!(r.exec_time_ns, first.exec_time_ns);
+    }
+}
+
+#[test]
+fn parallel_service_serves_bit_identical_reports() {
+    // Workers honoring the session's parallelism must change nothing
+    // observable: a REPRO_THREADS-parallel service and an explicitly
+    // sequential one return bit-identical reports for a mixed batch.
+    let seq = Service::spawn(ServiceConfig { parallelism: 1, ..ServiceConfig::default() })
+        .unwrap();
+    // .max(2): under the REPRO_THREADS=1 CI leg this comparison must not
+    // degenerate to sequential-vs-sequential.
+    let par = Service::spawn(ServiceConfig {
+        parallelism: default_threads().max(2),
+        ..ServiceConfig::default()
+    })
+    .unwrap();
+    let batch = || {
+        vec![
+            JobSpec::new(Dataset::Tiny, "bfs").with_source(2),
+            JobSpec::new(Dataset::Tiny, "sssp").with_source(0),
+            JobSpec::new(Dataset::Tiny, "pagerank").with_iterations(5),
+            JobSpec::new(Dataset::Tiny, "wcc"),
+        ]
+    };
+    let a: Vec<_> = seq
+        .submit_batch(batch())
+        .unwrap()
+        .into_iter()
+        .map(|p| p.wait().unwrap())
+        .collect();
+    let b: Vec<_> = par
+        .submit_batch(batch())
+        .unwrap()
+        .into_iter()
+        .map(|p| p.wait().unwrap())
+        .collect();
+    for (x, y) in a.iter().zip(&b) {
+        let algo = &x.report.algorithm;
+        assert_eq!(
+            x.report.run.as_ref().unwrap().values,
+            y.report.run.as_ref().unwrap().values,
+            "{algo}: values"
+        );
+        assert_eq!(x.report.counts, y.report.counts, "{algo}: counts");
+        assert_eq!(x.report.exec_time_ns, y.report.exec_time_ns, "{algo}: time");
+        assert_eq!(
+            x.report.static_hit_rate, y.report.static_hit_rate,
+            "{algo}: hit rate"
+        );
     }
 }
 

@@ -1,0 +1,186 @@
+//! Differential parallel-determinism suite — the lockdown for the
+//! batch-parallel scheduler (`sched::par`).
+//!
+//! For random graphs × all four algorithms × randomized architectures,
+//! the full [`RunResult`] (values, `EventCounts`, `init_counts`, timing,
+//! `static_hit_rate`, `max_dynamic_cell_writes`, per-engine summaries)
+//! must be **bit-identical** across `threads ∈ {1, 2, 4, 8}` *and* match
+//! the on-line differential oracle `sched::oracle::run_reference`. Any
+//! divergence — one ULP of timing, one event count — is a scheduler bug,
+//! not a tolerance question; assertions print the failing seed like
+//! `properties.rs` does.
+
+use repro::accel::{Accelerator, ArchConfig, PolicyKind};
+use repro::algo::traits::VertexProgram;
+use repro::algo::{Bfs, PageRank, Sssp, Wcc};
+use repro::cost::CostParams;
+use repro::graph::datasets::Dataset;
+use repro::pattern::tables::ExecOrder;
+use repro::sched::executor::NativeExecutor;
+use repro::sched::RunResult;
+use repro::session::{JobSpec, Session};
+use repro::util::SplitMix64;
+
+mod common;
+use common::{default_threads, random_graph, with_random_weights};
+
+/// Every observable field of a run, compared bit for bit.
+fn assert_bit_identical(got: &RunResult, want: &RunResult, ctx: &str) {
+    assert_eq!(got.values, want.values, "{ctx}: values diverge");
+    assert_eq!(got.counts, want.counts, "{ctx}: event counts diverge");
+    assert_eq!(got.init_counts, want.init_counts, "{ctx}: init counts diverge");
+    assert_eq!(got.exec_time_ns, want.exec_time_ns, "{ctx}: modeled time diverges");
+    assert_eq!(got.init_time_ns, want.init_time_ns, "{ctx}: init time diverges");
+    assert_eq!(got.supersteps, want.supersteps, "{ctx}: supersteps diverge");
+    assert_eq!(got.iterations, want.iterations, "{ctx}: iterations diverge");
+    assert_eq!(got.static_ops, want.static_ops, "{ctx}: static ops diverge");
+    assert_eq!(got.dynamic_ops, want.dynamic_ops, "{ctx}: dynamic ops diverge");
+    assert_eq!(got.dynamic_hits, want.dynamic_hits, "{ctx}: dynamic hits diverge");
+    assert_eq!(
+        got.static_hit_rate(),
+        want.static_hit_rate(),
+        "{ctx}: static hit rate diverges"
+    );
+    assert_eq!(
+        got.max_dynamic_cell_writes, want.max_dynamic_cell_writes,
+        "{ctx}: wear diverges"
+    );
+    assert_eq!(got.engines, want.engines, "{ctx}: per-engine summaries diverge");
+}
+
+/// A randomized-but-valid architecture, mirroring `properties.rs`.
+fn random_arch(rng: &mut SplitMix64) -> ArchConfig {
+    let cfg = ArchConfig {
+        crossbar_size: [2, 4, 8][rng.next_index(3)],
+        total_engines: 4 + rng.next_bounded(28) as u32,
+        policy: [
+            PolicyKind::Lru,
+            PolicyKind::RoundRobin,
+            PolicyKind::Lfu,
+            PolicyKind::Random,
+        ][rng.next_index(4)],
+        dynamic_reuse: rng.next_bool(0.5),
+        order: if rng.next_bool(0.5) { ExecOrder::ColumnMajor } else { ExecOrder::RowMajor },
+        ..ArchConfig::default()
+    };
+    ArchConfig {
+        static_engines: rng.next_bounded(cfg.total_engines as u64) as u32,
+        ..cfg
+    }
+}
+
+#[test]
+fn prop_parallel_runs_bit_identical_across_threads_and_oracle() {
+    // The PR-3 acceptance property.
+    for seed in 300..310u64 {
+        let g = random_graph(seed);
+        let mut rng = SplitMix64::new(seed ^ 0x9A55);
+        let source = rng.next_bounded(g.num_vertices as u64) as u32;
+        let cfg = random_arch(&mut rng);
+        let gw = with_random_weights(&g, &mut rng);
+        let bfs = Bfs::new(source);
+        let sssp = Sssp::new(source);
+        let pagerank = PageRank::new(0.85, 4);
+        let wcc = Wcc;
+        let programs: [(&dyn VertexProgram, bool); 4] =
+            [(&bfs, false), (&sssp, true), (&pagerank, false), (&wcc, false)];
+        let acc = Accelerator::new(cfg.clone(), CostParams::default());
+        for (program, weighted) in programs {
+            let pre = acc
+                .preprocess(if weighted { &gw } else { &g }, weighted)
+                .unwrap();
+            let base = acc
+                .run_threaded(&pre, program, &mut NativeExecutor, 1)
+                .unwrap()
+                .run
+                .unwrap();
+            let oracle = repro::sched::oracle::run_reference(
+                &cfg,
+                &CostParams::default(),
+                &pre,
+                program,
+                &mut NativeExecutor,
+            )
+            .unwrap();
+            let ctx = format!("seed {seed} algo {} cfg {cfg:?}", program.name());
+            assert_bit_identical(&base, &oracle, &format!("{ctx} [threads=1 vs oracle]"));
+            for threads in [2usize, 4, 8] {
+                let run = acc
+                    .run_threaded(&pre, program, &mut NativeExecutor, threads)
+                    .unwrap()
+                    .run
+                    .unwrap();
+                assert_bit_identical(
+                    &run,
+                    &base,
+                    &format!("{ctx} [threads={threads} vs threads=1]"),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_parallel_determinism_under_wear_pressure() {
+    // Tight endurance budgets drive the retire-then-repick path; the
+    // dispatch pass's shadow crossbars must reach wear-out on exactly the
+    // same op as the interpreter — or both runs must fail identically.
+    for seed in 310..316u64 {
+        let g = random_graph(seed);
+        let mut rng = SplitMix64::new(seed ^ 0xE4D);
+        let cfg = ArchConfig {
+            total_engines: 4 + rng.next_bounded(8) as u32,
+            static_engines: rng.next_bounded(3) as u32,
+            ..ArchConfig::default()
+        };
+        let params = CostParams {
+            endurance_cycles: 1.0 + rng.next_bounded(12) as f64,
+            ..CostParams::default()
+        };
+        let acc = Accelerator::new(cfg.clone(), params.clone());
+        let pre = acc.preprocess(&g, false).unwrap();
+        let seq = acc.run_threaded(&pre, &Wcc, &mut NativeExecutor, 1);
+        let par = acc.run_threaded(&pre, &Wcc, &mut NativeExecutor, 4);
+        let ctx = format!("seed {seed} cfg {cfg:?} endurance {}", params.endurance_cycles);
+        match (seq, par) {
+            (Ok(a), Ok(b)) => {
+                assert_bit_identical(&a.run.unwrap(), &b.run.unwrap(), &ctx)
+            }
+            (Err(ea), Err(eb)) => {
+                assert_eq!(ea.to_string(), eb.to_string(), "{ctx}: errors diverge")
+            }
+            (a, b) => panic!(
+                "{ctx}: one path failed, the other did not (seq ok = {}, par ok = {})",
+                a.is_ok(),
+                b.is_ok()
+            ),
+        }
+    }
+}
+
+#[test]
+fn session_jobs_honor_the_harness_thread_default() {
+    // The REPRO_THREADS-driven default (CI runs the suite at 1 and 4)
+    // must serve results bit-identical to an explicitly sequential
+    // session — through the full Session/ArtifactStore path. `.max(2)`
+    // keeps the comparison parallel-vs-sequential even in the
+    // REPRO_THREADS=1 leg.
+    let threads = default_threads().max(2);
+    let seq = Session::builder().parallelism(1).build().unwrap();
+    let par = Session::builder().parallelism(threads).build().unwrap();
+    for spec in [
+        JobSpec::new(Dataset::Tiny, "bfs").with_source(3),
+        JobSpec::new(Dataset::Tiny, "sssp").with_source(1),
+        JobSpec::new(Dataset::Tiny, "pagerank").with_iterations(6),
+        JobSpec::new(Dataset::Tiny, "wcc"),
+    ] {
+        let a = seq.run(&spec).unwrap();
+        let b = par.run(&spec).unwrap();
+        let ctx = format!("{} at {threads} threads", spec.algorithm.as_str());
+        assert_bit_identical(
+            &a.run.unwrap(),
+            &b.run.unwrap(),
+            &format!("session {ctx}"),
+        );
+    }
+}

@@ -6,8 +6,8 @@ use repro::accel::{Accelerator, ArchConfig, PolicyKind};
 use repro::algo::traits::{VertexProgram, INF};
 use repro::algo::{reference, Bfs, PageRank, Sssp, Wcc};
 use repro::cost::CostParams;
-use repro::graph::coo::{Coo, Edge};
-use repro::graph::generator::{erdos_renyi, rmat, RmatParams};
+use repro::graph::coo::Coo;
+use repro::graph::generator::erdos_renyi;
 use repro::graph::Csr;
 use repro::pattern::extract::partition;
 use repro::pattern::rank::PatternRanking;
@@ -15,16 +15,8 @@ use repro::pattern::tables::{ConfigTable, ExecOrder, SubgraphTable};
 use repro::sched::executor::NativeExecutor;
 use repro::util::SplitMix64;
 
-fn random_graph(seed: u64) -> Coo {
-    let mut rng = SplitMix64::new(seed);
-    let n = 32 + rng.next_bounded(480) as u32;
-    let m = (n as usize) * (1 + rng.next_index(8));
-    if rng.next_bool(0.5) {
-        rmat(n, m, RmatParams::default(), rng.next_u64())
-    } else {
-        erdos_renyi(n, m, rng.next_u64())
-    }
-}
+mod common;
+use common::{random_graph, with_random_weights};
 
 #[test]
 fn prop_partition_preserves_edges() {
@@ -234,13 +226,7 @@ fn prop_plan_interpreter_matches_reference_scheduler() {
             ..cfg
         };
         // Random edge weights so the SSSP case exercises real weight data.
-        let gw = Coo::from_edges(
-            g.num_vertices,
-            g.edges
-                .iter()
-                .map(|e| Edge::weighted(e.src, e.dst, 0.5 + rng.next_f32() * 4.0))
-                .collect(),
-        );
+        let gw = with_random_weights(&g, &mut rng);
         let bfs = Bfs::new(source);
         let sssp = Sssp::new(source);
         let pagerank = PageRank::new(0.85, 4);

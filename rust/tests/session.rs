@@ -11,7 +11,7 @@ use repro::algo::Bfs;
 use repro::graph::datasets::Dataset;
 use repro::graph::Csr;
 use repro::session::{
-    AlgorithmRegistry, ArtifactStore, Backend, JobSpec, Session,
+    AlgorithmRegistry, ArtifactKey, ArtifactStore, Backend, JobSpec, Session,
 };
 
 mod common;
@@ -132,6 +132,55 @@ fn artifact_store_shared_across_sessions() {
     c.run(&spec).unwrap();
     let s = store.stats();
     assert_eq!((s.misses, s.hits), (2, 1));
+}
+
+#[test]
+fn artifact_store_exactly_once_under_thread_hammering() {
+    // PR 1 claimed exactly-once preprocessing per key but only asserted
+    // it single-threaded through the Session. Hammer one cold key from N
+    // threads released together: exactly one Alg.-1 run may happen, every
+    // caller must receive the same Arc'd artifact, and the stats must
+    // conserve (hits + misses == N, coalesced callers are a subset of
+    // the non-builders).
+    use repro::accel::Accelerator;
+    use std::sync::Barrier;
+
+    const N: usize = 16;
+    let store = Arc::new(ArtifactStore::new());
+    let key = ArtifactKey::new(Dataset::Tiny, 1.0, false, &ArchConfig::default());
+    let barrier = Barrier::new(N);
+    let results: Vec<_> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..N)
+            .map(|_| {
+                let store = &store;
+                let barrier = &barrier;
+                s.spawn(move || {
+                    barrier.wait();
+                    store
+                        .get_or_preprocess(key, &Accelerator::with_defaults())
+                        .unwrap()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+
+    for (i, r) in results.iter().enumerate() {
+        assert!(
+            Arc::ptr_eq(&results[0], r),
+            "thread {i} got a different artifact instance"
+        );
+    }
+    let s = store.stats();
+    assert_eq!(s.misses, 1, "preprocessing must run exactly once, ran {}", s.misses);
+    assert_eq!(s.hits as usize, N - 1);
+    assert_eq!(s.entries, 1);
+    assert_eq!(s.hits + s.misses, N as u64, "every request must be accounted");
+    assert!(
+        s.coalesced <= s.hits + s.misses - 1,
+        "at most N-1 requests can wait behind the builder, got {}",
+        s.coalesced
+    );
 }
 
 #[test]
