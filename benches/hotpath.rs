@@ -1,12 +1,19 @@
 //! Bench: hot-path microbenchmarks — the components the performance pass
 //! (EXPERIMENTS.md §Perf) optimizes: plan compilation vs per-superstep
-//! interpretation, scheduler dispatch throughput, native executor, PJRT
-//! dispatch, partitioner, and the serving loop.
+//! interpretation (sequential vs the scoped-spawn baseline vs the
+//! persistent worker pool at threads=1/4), scheduler dispatch throughput,
+//! native executor, PJRT dispatch, partitioner, and the serving loop.
 //!
-//! Results are also written to `BENCH_hotpath.json` so the hot path is
-//! tracked across PRs.
+//! Results are written to `BENCH_hotpath.json` at the **repo root**
+//! (anchored on `CARGO_MANIFEST_DIR`, not the invocation cwd) so the hot
+//! path is tracked across PRs. The pooled-vs-scoped pair is the headline
+//! number: same dispatch, same bit-identical result, no per-superstep
+//! spawn/join tax.
 //!
 //! Run: `make artifacts && cargo bench --bench hotpath`
+//! CI smoke: `BENCH_SMOKE=1 cargo bench --bench hotpath` (tiny dataset,
+//! short target — keeps the harness compiling and running without
+//! burning minutes).
 
 use std::time::Duration;
 
@@ -18,66 +25,127 @@ use repro::coordinator::{Service, ServiceConfig};
 use repro::graph::datasets::Dataset;
 use repro::pattern::extract::partition;
 use repro::sched::executor::{NativeExecutor, StepExecutor};
-use repro::sched::ExecutionPlan;
+use repro::sched::{run_parallel_pooled, run_parallel_scoped, ExecutionPlan, WorkerPool};
 use repro::session::JobSpec;
 use repro::util::bench::{black_box, Bench};
 use repro::util::SplitMix64;
 
 fn main() {
-    let g = Dataset::WikiVote.load().unwrap();
+    // Truthy check: `BENCH_SMOKE=0` or empty means a full run.
+    let smoke = std::env::var("BENCH_SMOKE")
+        .map(|v| !v.is_empty() && v != "0")
+        .unwrap_or(false);
+    let dataset = if smoke { Dataset::Tiny } else { Dataset::WikiVote };
+    let g = dataset.load().unwrap();
+    let edges = g.edges.len() as u64;
     let arch = ArchConfig::default();
-    let acc = Accelerator::new(arch.clone(), CostParams::default());
+    let params = CostParams::default();
+    let acc = Accelerator::new(arch.clone(), params.clone());
     let pre = acc.preprocess(&g, false).unwrap();
     let ops = pre.part.num_subgraphs() as u64;
-    let mut b = Bench::new().with_target(Duration::from_secs(3)).with_max_iters(20);
+    let (target, max_iters) = if smoke {
+        (Duration::from_millis(50), 3)
+    } else {
+        (Duration::from_secs(3), 20)
+    };
+    let mut b = Bench::new().with_target(target).with_max_iters(max_iters);
 
     // Plan compilation: the one-time cost the ArtifactStore amortizes
     // across every run/serve/DSE caller of the same artifact key.
-    b.run("plan build WV", || {
+    b.run("plan build", || {
         black_box(ExecutionPlan::build(&pre.part, &pre.ct, &pre.st, &arch))
     });
 
     // Plan interpretation end to end (scheduler + native executor) — the
-    // per-job cost once the plan is compiled, sequential vs lane-parallel
-    // (results are bit-identical; only wall time may differ).
+    // per-job cost once the plan is compiled. Three mechanisms, one
+    // bit-identical result: sequential interpreter, the scoped-spawn
+    // baseline (spawn/join per superstep — what the pool replaced), and
+    // the persistent pool (spawned once, reused across every iteration
+    // below, exactly like a Session reuses it across jobs).
+    let mut pool = WorkerPool::new(4);
+    let bfs_run = acc.run(&pre, &Bfs::new(0), &mut NativeExecutor).unwrap();
+    let bfs_steps = bfs_run.supersteps as u64;
+
     let s = b
-        .run("plan interpret: BFS WV threads=1", || {
+        .run("interpret: BFS threads=1", || {
             black_box(acc.run(&pre, &Bfs::new(0), &mut NativeExecutor).unwrap())
         })
         .mean;
-    let run = acc.run(&pre, &Bfs::new(0), &mut NativeExecutor).unwrap();
+    // BFS relaxes each edge roughly once across the whole frontier-masked
+    // run (unlike PageRank's full sweep per superstep), so one iteration's
+    // edge work is ~`edges`, not edges × supersteps.
+    b.annotate_throughput(edges, bfs_steps);
     println!(
         "  -> {:.2} M subgraph-dispatches/s ({} ops per run, {:.1} µs/superstep over {})",
-        run.counts.mvm_ops as f64 / s.as_secs_f64() / 1e6,
-        run.counts.mvm_ops,
-        s.as_secs_f64() * 1e6 / run.supersteps.max(1) as f64,
-        run.supersteps,
+        bfs_run.counts.mvm_ops as f64 / s.as_secs_f64() / 1e6,
+        bfs_run.counts.mvm_ops,
+        s.as_secs_f64() * 1e6 / bfs_run.supersteps.max(1) as f64,
+        bfs_run.supersteps,
     );
 
-    let s4 = b
-        .run("plan interpret: BFS WV threads=4", || {
+    let s4s = b
+        .run("interpret: BFS threads=4 scoped", || {
             black_box(
-                acc.run_threaded(&pre, &Bfs::new(0), &mut NativeExecutor, 4)
+                run_parallel_scoped(&arch, &params, &pre.plan, &Bfs::new(0), &mut NativeExecutor, 4)
                     .unwrap(),
             )
         })
         .mean;
-    println!("  -> {:.2}x vs threads=1", s.as_secs_f64() / s4.as_secs_f64());
+    b.annotate_throughput(edges, bfs_steps);
+    let s4p = b
+        .run("interpret: BFS threads=4 pooled", || {
+            black_box(
+                run_parallel_pooled(
+                    &arch,
+                    &params,
+                    &pre.plan,
+                    &Bfs::new(0),
+                    &mut NativeExecutor,
+                    &mut pool,
+                )
+                .unwrap(),
+            )
+        })
+        .mean;
+    b.annotate_throughput(edges, bfs_steps);
+    println!(
+        "  -> scoped {:.2}x, pooled {:.2}x vs threads=1 (pool wins {:.2}x over scoped)",
+        s.as_secs_f64() / s4s.as_secs_f64(),
+        s.as_secs_f64() / s4p.as_secs_f64(),
+        s4s.as_secs_f64() / s4p.as_secs_f64(),
+    );
 
+    let pr = PageRank::new(0.85, 5);
     let sp = b
-        .run("plan interpret: PageRank(5) WV threads=1", || {
-            black_box(acc.run(&pre, &PageRank::new(0.85, 5), &mut NativeExecutor).unwrap())
+        .run("interpret: PageRank(5) threads=1", || {
+            black_box(acc.run(&pre, &pr, &mut NativeExecutor).unwrap())
         })
         .mean;
-    let sp4 = b
-        .run("plan interpret: PageRank(5) WV threads=4", || {
+    b.annotate_throughput(edges * 5, 5);
+    let sp4s = b
+        .run("interpret: PageRank(5) threads=4 scoped", || {
             black_box(
-                acc.run_threaded(&pre, &PageRank::new(0.85, 5), &mut NativeExecutor, 4)
+                run_parallel_scoped(&arch, &params, &pre.plan, &pr, &mut NativeExecutor, 4)
                     .unwrap(),
             )
         })
         .mean;
-    println!("  -> {:.2}x vs threads=1", sp.as_secs_f64() / sp4.as_secs_f64());
+    b.annotate_throughput(edges * 5, 5);
+    let sp4p = b
+        .run("interpret: PageRank(5) threads=4 pooled", || {
+            black_box(
+                run_parallel_pooled(&arch, &params, &pre.plan, &pr, &mut NativeExecutor, &mut pool)
+                    .unwrap(),
+            )
+        })
+        .mean;
+    b.annotate_throughput(edges * 5, 5);
+    println!(
+        "  -> scoped {:.2}x, pooled {:.2}x vs threads=1 (pool wins {:.2}x over scoped)",
+        sp.as_secs_f64() / sp4s.as_secs_f64(),
+        sp.as_secs_f64() / sp4p.as_secs_f64(),
+        sp4s.as_secs_f64() / sp4p.as_secs_f64(),
+    );
 
     // Native executor alone on a big batch.
     let part = partition(&g, 4, false);
@@ -101,7 +169,7 @@ fn main() {
     );
 
     // Partitioner.
-    b.run("partition WV c=4", || black_box(partition(&g, 4, false)));
+    b.run("partition c=4", || black_box(partition(&g, 4, false)));
 
     // PJRT dispatch path (needs `make artifacts` + `--features pjrt`).
     #[cfg(feature = "pjrt")]
@@ -125,7 +193,8 @@ fn main() {
     #[cfg(not(feature = "pjrt"))]
     println!("(pjrt bench skipped: built without the `pjrt` feature)");
 
-    // Serving loop throughput.
+    // Serving loop throughput (workers share the session's persistent
+    // pool through the coordinator).
     let st = b.run("serving loop: 16 mixed jobs (Tiny)", || {
         let svc =
             Service::spawn(ServiceConfig { workers: 4, ..ServiceConfig::default() }).unwrap();
@@ -144,10 +213,25 @@ fn main() {
     });
     println!("  -> {:.0} jobs/s", 16.0 / st.mean.as_secs_f64());
 
-    if let Err(e) = b.write_json("BENCH_hotpath.json") {
-        eprintln!("(could not write BENCH_hotpath.json: {e})");
+    // Land the trajectory at the repo root regardless of invocation cwd —
+    // but never from a smoke run: Tiny-scale timings under the real entry
+    // names would silently corrupt the cross-PR trajectory. The smoke
+    // still exercises the writer end to end against a throwaway path
+    // (and fails loudly if it breaks).
+    if smoke {
+        let tmp = std::env::temp_dir().join("BENCH_hotpath.smoke.json");
+        b.write_json(&tmp).expect("smoke write of bench JSON failed");
+        println!(
+            "(BENCH_SMOKE: wrote throwaway {} — repo trajectory untouched)",
+            tmp.display()
+        );
     } else {
-        println!("wrote BENCH_hotpath.json ({} entries)", b.results().len());
+        let out_path = concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_hotpath.json");
+        if let Err(e) = b.write_json(out_path) {
+            eprintln!("(could not write {out_path}: {e})");
+        } else {
+            println!("wrote {out_path} ({} entries)", b.results().len());
+        }
     }
     let _ = ops;
 }

@@ -117,9 +117,12 @@ impl Accelerator {
     }
 
     /// Like [`run`](Self::run) but with `threads` batch-parallel
-    /// execution lanes (`0` = one per hardware thread). Results are
-    /// bit-identical for every thread count — `threads <= 1` takes the
-    /// sequential interpreter verbatim.
+    /// execution lanes (`0` = one per hardware thread), served by a
+    /// transient per-run worker pool. Results are bit-identical for
+    /// every thread count — `threads <= 1` takes the sequential
+    /// interpreter verbatim. Repeated callers should hold a persistent
+    /// [`WorkerPool`](crate::sched::WorkerPool) and use
+    /// [`run_pooled`](Self::run_pooled) instead (the `Session` does).
     pub fn run_threaded(
         &self,
         pre: &Preprocessed,
@@ -135,8 +138,52 @@ impl Accelerator {
             executor,
             threads,
         )?;
+        Ok(self.report_of(program, run))
+    }
+
+    /// Like [`run_threaded`](Self::run_threaded) but on a caller-owned
+    /// persistent worker pool: zero thread spawns per superstep *and* per
+    /// run. The pool's worker count is the lane count; results stay
+    /// bit-identical to every other execution path.
+    pub fn run_pooled(
+        &self,
+        pre: &Preprocessed,
+        program: &dyn VertexProgram,
+        executor: &mut dyn StepExecutor,
+        pool: &mut crate::sched::WorkerPool,
+    ) -> Result<SimReport> {
+        let workers = pool.workers();
+        self.run_pooled_at(pre, program, executor, pool, workers)
+    }
+
+    /// Like [`run_pooled`](Self::run_pooled) but capping the lane count
+    /// at `threads` (`0` = auto; clamped to the pool size) — how a
+    /// per-job parallelism override smaller than the session pool is
+    /// honored without respawning workers.
+    pub fn run_pooled_at(
+        &self,
+        pre: &Preprocessed,
+        program: &dyn VertexProgram,
+        executor: &mut dyn StepExecutor,
+        pool: &mut crate::sched::WorkerPool,
+        threads: usize,
+    ) -> Result<SimReport> {
+        let run = crate::sched::par::run_parallel_pooled_at(
+            &self.config,
+            &self.params,
+            &pre.plan,
+            program,
+            executor,
+            pool,
+            threads,
+        )?;
+        Ok(self.report_of(program, run))
+    }
+
+    /// Summarize a finished run (shared by every execution path).
+    fn report_of(&self, program: &dyn VertexProgram, run: RunResult) -> SimReport {
         let total = run.total_counts();
-        Ok(SimReport {
+        SimReport {
             design: "Proposed".to_string(),
             algorithm: program.name().to_string(),
             counts: total,
@@ -147,7 +194,7 @@ impl Accelerator {
             static_hit_rate: run.static_hit_rate(),
             max_cell_writes: run.max_dynamic_cell_writes as u64,
             run: Some(run),
-        })
+        }
     }
 
     /// Convenience: preprocess + run in one call.
@@ -196,6 +243,23 @@ mod tests {
         assert_eq!(a.counts, b.counts);
         assert_eq!(a.exec_time_ns, b.exec_time_ns);
         assert_eq!(a.static_hit_rate, b.static_hit_rate);
+    }
+
+    #[test]
+    fn run_pooled_matches_sequential_run() {
+        let g = Dataset::Tiny.load().unwrap();
+        let acc = Accelerator::with_defaults();
+        let pre = acc.preprocess(&g, false).unwrap();
+        let a = acc.run(&pre, &Bfs::new(0), &mut NativeExecutor).unwrap();
+        let mut pool = crate::sched::WorkerPool::new(4);
+        for _ in 0..2 {
+            let b = acc
+                .run_pooled(&pre, &Bfs::new(0), &mut NativeExecutor, &mut pool)
+                .unwrap();
+            assert_eq!(a.run.as_ref().unwrap().values, b.run.as_ref().unwrap().values);
+            assert_eq!(a.counts, b.counts);
+            assert_eq!(a.exec_time_ns, b.exec_time_ns);
+        }
     }
 
     #[test]

@@ -36,8 +36,13 @@ pub struct ServiceConfig {
     pub backend: Backend,
     pub workers: usize,
     /// Superstep execution lanes per job, honored by every worker through
-    /// the shared session (default 1; `0` = one lane per hardware
-    /// thread). Served results are bit-identical for every setting.
+    /// the shared session (default 1; `0` = one lane per hardware thread,
+    /// resolved via [`resolve_threads`](crate::sched::resolve_threads)).
+    /// Parallel jobs check persistent lane-worker pools out of the
+    /// session's free list — concurrent workers each get their own pool,
+    /// spawned once and reused across jobs, so the steady state performs
+    /// zero thread spawns per superstep *and* per job. Served results
+    /// are bit-identical for every setting.
     pub parallelism: usize,
 }
 
@@ -104,6 +109,8 @@ impl Service {
             .arch(config.arch)
             .cost_params(config.params)
             .backend(config.backend)
+            // `0 = auto` resolves inside `SessionBuilder::build` (the one
+            // `resolve_threads` call site on this path).
             .parallelism(config.parallelism)
             .build()?;
         Ok(Self::with_session(Arc::new(session), config.workers))

@@ -53,7 +53,9 @@ ARCH OPTIONS:
   --static-engines N        static graph engines (default 16)
   --crossbars-per-engine M  crossbars per engine (default 1)
   --policy P                lru | rr | lfu | random (default lru)
-  --threads K               superstep execution lanes (default 1 =
+  --threads K               superstep execution lanes served by the
+                            session's persistent worker pool, spawned
+                            once and reused across jobs (default 1 =
                             sequential, 0 = one per hardware thread);
                             results are bit-identical for every K
 ";

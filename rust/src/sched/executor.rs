@@ -78,8 +78,14 @@ impl StepExecutor for NativeExecutor {
         if kind == StepKind::Sssp {
             anyhow::ensure!(batch.weighted(), "SSSP requires weighted partitioning");
         }
-        out.clear();
-        out.resize(batch.len() * c, identity(kind));
+        // Reinitialize in place, each lane written exactly once whether
+        // the batch shrank (`truncate` + `fill`) or grew (`resize` fills
+        // the tail); capacity is reused across calls either way.
+        let len = batch.len() * c;
+        let id = identity(kind);
+        out.truncate(len);
+        out.fill(id);
+        out.resize(len, id);
         for k in 0..batch.len() {
             let x = &xs[k * c..(k + 1) * c];
             let o = &mut out[k * c..(k + 1) * c];

@@ -1,20 +1,27 @@
 //! Graph processing & scheduling (paper Alg. 2): a schedule compiled once
 //! into an [`ExecutionPlan`] and interpreted per superstep — sequentially
 //! by [`Scheduler`] or across per-engine work lanes by
-//! [`par::run_parallel`] (bit-identical for every thread count) —
-//! static/dynamic engine dispatch, replacement policies, and the executor
-//! abstraction that routes numeric edge-compute either through the native
-//! mirror or the AOT-compiled PJRT artifact.
+//! [`par::run_parallel`] (bit-identical for every thread count), whose
+//! lanes run on a persistent channel-fed [`pool::WorkerPool`] (spawned
+//! once, zero per-superstep thread spawns) — static/dynamic engine
+//! dispatch, replacement policies, and the executor abstraction that
+//! routes numeric edge-compute either through the native mirror or the
+//! AOT-compiled PJRT artifact.
 
 pub mod executor;
 pub mod oracle;
 pub mod par;
 pub mod plan;
+pub mod pool;
 pub mod replacement;
 pub mod scheduler;
 
 pub use executor::{NativeExecutor, StepExecutor};
-pub use par::run_parallel;
-pub use plan::{ExecutionPlan, LaneTable, PlanOp, StepBatch};
+pub use par::{
+    resolve_threads, run_parallel, run_parallel_pooled, run_parallel_pooled_at,
+    run_parallel_scoped,
+};
+pub use plan::{ExecutionPlan, GatherTable, LaneTable, PlanOp, StepBatch};
+pub use pool::WorkerPool;
 pub use replacement::{build_policy, ReplacementPolicy};
 pub use scheduler::{EngineSummary, RunResult, Scheduler};

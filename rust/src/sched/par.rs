@@ -9,21 +9,39 @@
 //! 1. **Dispatch** (sequential, cheap): walk the ready ops in plan order
 //!    and resolve every scheduling decision into per-engine work lanes.
 //!    Single-replica static ops come pre-homed by the plan's
-//!    [`LaneTable`]; multi-replica static ops take the least-busy replica
-//!    against a shadow busy model that replays the interpreter's f64
-//!    accumulation bit-exactly; dynamic ops run the replacement policy
-//!    (plus retire-then-repick wear-out) against dispatcher-owned shadow
-//!    crossbars.
-//! 2. **Lane replay** (parallel, `std::thread::scope`): engines move into
-//!    lanes — each worker owns whole engines and replays their queued
-//!    records (configure / MVM counter arithmetic, crossbar wear) in
-//!    dispatch order. An engine's entire queue lives in one lane, so all
-//!    engine-local state stays thread-local.
-//! 3. **Numeric phase**: the gather runs on the calling thread, then the
-//!    edge-compute batch is chunked across forked executors
-//!    ([`StepExecutor::fork`]) when the backend supports it. Per-op
-//!    outputs are independent, so any chunking is bit-identical to one
-//!    sequential call.
+//!    [`LaneTable`](super::plan::LaneTable); multi-replica static ops take
+//!    the least-busy replica against a shadow busy model that replays the
+//!    interpreter's f64 accumulation bit-exactly; dynamic ops run the
+//!    replacement policy (plus retire-then-repick wear-out) against
+//!    dispatcher-owned shadow crossbars.
+//! 2. **Lane replay** (parallel): engines move into lanes — each worker
+//!    owns whole engines and replays their queued records (configure /
+//!    MVM counter arithmetic, crossbar wear) in dispatch order. An
+//!    engine's entire queue lives in one lane, so all engine-local state
+//!    stays thread-local.
+//! 3. **Numeric phase**: the gather runs on the calling thread (an
+//!    indexed copy through the plan's
+//!    [`GatherTable`](super::plan::GatherTable)), then the edge-compute
+//!    batch is chunked across executor forks when the backend supports
+//!    it. Per-op outputs are independent, so any chunking is
+//!    bit-identical to one sequential call.
+//!
+//! # Execution mechanisms: pooled (production) vs scoped (baseline)
+//!
+//! Phases 2 and 3 run on one of two mechanisms behind the same dispatch
+//! pass:
+//!
+//! * **Pooled** — a persistent [`WorkerPool`] (channel-fed, spawned once,
+//!   owned by the `Session` or transiently per run): zero thread spawns
+//!   and zero steady-state allocation per superstep. This is the
+//!   production path; [`run_parallel`] routes here.
+//! * **Scoped** — the pre-pool `std::thread::scope` baseline
+//!   ([`run_parallel_scoped`]), which pays a spawn/join per superstep.
+//!   Kept so `benches/hotpath.rs` can report the pool's win and the test
+//!   suite can differential-check both mechanisms forever.
+//!
+//! Both produce bit-identical `RunResult`s by construction: the dispatch
+//! pass is shared and merges are index-ordered (see below).
 //!
 //! # Why dynamic ops shard by pattern rank / slot, not round-robin
 //!
@@ -42,13 +60,15 @@
 //! # The bit-identical merge invariant
 //!
 //! Merge order is lane-indexed, then engine-indexed: lane results are
-//! joined in lane order and folded back into the engine vector by engine
-//! id, and the superstep latency is the max over per-engine busy times
-//! folded in engine-id order — the same order the sequential interpreter
-//! uses. Combined with the bit-exact dispatch shadow, a run's
+//! joined in lane order (pool replies are collected in worker-index
+//! order, which is lane order) and folded back into the engine vector by
+//! engine id, and the superstep latency is the max over per-engine busy
+//! times folded in engine-id order — the same order the sequential
+//! interpreter uses. Combined with the bit-exact dispatch shadow, a run's
 //! [`RunResult`] (values, `EventCounts`, timing, wear, per-engine
-//! summaries) is **bit-identical for every thread count**, and identical
-//! to [`Scheduler::run`] and to the differential oracle
+//! summaries) is **bit-identical for every thread count and both
+//! mechanisms**, and identical to [`Scheduler::run`] and to the
+//! differential oracle
 //! [`oracle::run_reference`](super::oracle::run_reference) —
 //! `rust/tests/parallel.rs` locks this down over randomized graphs and
 //! all four algorithms. The invariant is what makes the concurrent
@@ -69,15 +89,16 @@ use crate::engine::{Crossbar, EngineKind, GraphEngine};
 
 use super::executor::StepExecutor;
 use super::plan::ExecutionPlan;
+use super::pool::{LaneSlot, WorkerPool};
 use super::replacement::build_policy;
 use super::scheduler::{
     gather_sources, reduce_apply, slot_pos, EngineSummary, RunResult, Scheduler, NONE,
 };
 
-/// Below this many queued records a superstep replays inline: scoped
-/// thread spawn/join costs more than the counter arithmetic it would
-/// parallelize. Lane assignment never affects results (per-engine state
-/// is self-contained), so this is purely a throughput threshold.
+/// Below this many queued records a superstep replays inline: even a
+/// pooled channel round-trip costs more than the counter arithmetic it
+/// would parallelize. Lane assignment never affects results (per-engine
+/// state is self-contained), so this is purely a throughput threshold.
 const MIN_PARALLEL_RECORDS: usize = 512;
 
 /// Below this many ops the numeric batch runs on the calling thread for
@@ -89,7 +110,7 @@ const MIN_PARALLEL_NUMERIC_OPS: usize = 256;
 /// order. Records carry rank indices, not `Pattern`s — the lane resolves
 /// them through the shared plan.
 #[derive(Debug, Clone, Copy)]
-enum LaneRecord {
+pub(crate) enum LaneRecord {
     /// Reconfigure crossbar `crossbar` to the pattern of `rank`.
     Configure { crossbar: u32, rank: u32 },
     /// One in-situ MVM against `crossbar` reading `read_rows` wordlines.
@@ -97,8 +118,11 @@ enum LaneRecord {
 }
 
 /// Resolve a requested thread count: `0` means one lane per available
-/// hardware thread. Results never depend on the resolved value.
-pub fn effective_threads(threads: usize) -> usize {
+/// hardware thread. The one shared helper behind `--threads`,
+/// `SessionBuilder::parallelism`, `ServiceConfig.parallelism` and the
+/// test harness's `REPRO_THREADS` — results never depend on the resolved
+/// value.
+pub fn resolve_threads(threads: usize) -> usize {
     if threads == 0 {
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
     } else {
@@ -106,16 +130,96 @@ pub fn effective_threads(threads: usize) -> usize {
     }
 }
 
-/// Deterministic greedy lane assignment: engines (ascending id) go to the
-/// least-loaded lane, ties to the lowest lane index. `loads[i]` is the
-/// queued record count of the i-th active engine; returns the lane index
-/// per active engine. With `n_lanes >= 1` and at least one engine, every
-/// lane `0..min(n_lanes, loads.len())` receives work — no idle lanes are
-/// ever spawned.
-fn lane_assignment(loads: &[usize], n_lanes: usize) -> Vec<usize> {
+/// The pool a pooled run executes on: a caller-owned persistent pool,
+/// or a transient one spawned **lazily** — a run whose supersteps all
+/// stay under the inline thresholds never spawns a thread at all, same
+/// as the scoped baseline.
+enum PoolRef<'p> {
+    Borrowed(&'p mut WorkerPool),
+    Lazy { threads: usize, pool: Option<WorkerPool> },
+}
+
+impl PoolRef<'_> {
+    fn get(&mut self) -> &mut WorkerPool {
+        match self {
+            PoolRef::Borrowed(pool) => pool,
+            PoolRef::Lazy { threads, pool } => {
+                pool.get_or_insert_with(|| WorkerPool::new(*threads))
+            }
+        }
+    }
+}
+
+/// How phases 2/3 execute. The dispatch pass is identical either way —
+/// see the module docs.
+enum LaneMode<'p> {
+    /// Per-superstep `std::thread::scope` spawns (the pre-pool baseline,
+    /// kept for benches and differential tests).
+    Scoped { threads: usize },
+    /// Persistent channel-fed workers — zero per-superstep spawns.
+    /// `threads` caps the lanes actually used (≤ the pool's workers), so
+    /// a per-job override smaller than the pool is honored.
+    Pooled { pool: PoolRef<'p>, threads: usize },
+}
+
+impl LaneMode<'_> {
+    fn threads(&self) -> usize {
+        match self {
+            LaneMode::Scoped { threads } | LaneMode::Pooled { threads, .. } => *threads,
+        }
+    }
+}
+
+/// Run-lifetime scratch for phases 2/3: everything here is allocated
+/// once per run (plan-/engine-sized) and only cleared per superstep, so
+/// the steady-state hot loop performs no heap allocation.
+struct Scratch {
+    /// Engine indices with queued records this superstep.
+    active: Vec<usize>,
+    /// Queued record count per active engine (parallel to `active`).
+    loads: Vec<usize>,
+    /// Lane index per active engine (parallel to `active`).
+    assignment: Vec<usize>,
+    /// Greedy-balancer accumulator, one entry per lane.
+    lane_load: Vec<usize>,
+    /// Per-engine busy time of the current superstep (engine-id order).
+    busy_by_engine: Vec<f64>,
+    /// Pooled replay: one reusable lane buffer per worker.
+    lane_bufs: Vec<Vec<LaneSlot>>,
+    /// Pooled numeric: one reusable output buffer per worker,
+    /// double-buffered through the pool's channels.
+    chunk_bufs: Vec<Vec<f32>>,
+}
+
+impl Scratch {
+    fn new(n_engines: usize, workers: usize) -> Self {
+        Self {
+            active: Vec::with_capacity(n_engines),
+            loads: Vec::with_capacity(n_engines),
+            assignment: Vec::with_capacity(n_engines),
+            lane_load: Vec::with_capacity(workers),
+            busy_by_engine: vec![0f64; n_engines],
+            lane_bufs: (0..workers).map(|_| Vec::new()).collect(),
+            chunk_bufs: (0..workers).map(|_| Vec::new()).collect(),
+        }
+    }
+}
+
+/// Deterministic greedy lane assignment into `out`: engines (ascending
+/// id) go to the least-loaded lane, ties to the lowest lane index.
+/// `loads[i]` is the queued record count of the i-th active engine. With
+/// `n_lanes >= 1` and at least one engine, every lane
+/// `0..min(n_lanes, loads.len())` receives work — no idle lanes.
+fn lane_assignment_into(
+    loads: &[usize],
+    n_lanes: usize,
+    lane_load: &mut Vec<usize>,
+    out: &mut Vec<usize>,
+) {
     let n_lanes = n_lanes.min(loads.len()).max(1);
-    let mut lane_load = vec![0usize; n_lanes];
-    let mut assignment = Vec::with_capacity(loads.len());
+    lane_load.clear();
+    lane_load.resize(n_lanes, 0);
+    out.clear();
     for (i, &load) in loads.iter().enumerate() {
         let lane = if i < n_lanes {
             i // seed each lane before balancing
@@ -123,13 +227,20 @@ fn lane_assignment(loads: &[usize], n_lanes: usize) -> Vec<usize> {
             (0..n_lanes).min_by_key(|&l| lane_load[l]).unwrap()
         };
         lane_load[lane] += load;
-        assignment.push(lane);
+        out.push(lane);
     }
-    assignment
 }
 
-/// Replay one engine's queued records in dispatch order.
-fn replay_engine(
+#[cfg(test)]
+fn lane_assignment(loads: &[usize], n_lanes: usize) -> Vec<usize> {
+    let (mut lane_load, mut out) = (Vec::new(), Vec::new());
+    lane_assignment_into(loads, n_lanes, &mut lane_load, &mut out);
+    out
+}
+
+/// Replay one engine's queued records in dispatch order. Shared by the
+/// inline path, the scoped baseline, and the pool workers.
+pub(crate) fn replay_engine(
     e: &mut GraphEngine,
     records: &[LaneRecord],
     plan: &ExecutionPlan,
@@ -148,87 +259,123 @@ fn replay_engine(
     }
 }
 
-/// Phase 2: move record-bearing engines into lanes, replay them on scoped
-/// workers, and merge busy times back in engine-id order. Returns the
-/// superstep's max busy (ns). Falls back to an inline replay — no scope,
-/// no spawns — when a single lane would do all the work.
+/// Phase 2: move record-bearing engines into lanes, replay them on the
+/// mode's workers, and merge busy times back in engine-id order. Returns
+/// the superstep's max busy (ns). Falls back to an inline replay — no
+/// channel round-trip, no spawns — when a single lane would do all the
+/// work.
+#[allow(clippy::too_many_arguments)]
 fn replay_lanes(
     engines: &mut [Option<GraphEngine>],
-    records: &mut [Vec<LaneRecord>],
+    records: &[Vec<LaneRecord>],
+    scratch: &mut Scratch,
     plan: &ExecutionPlan,
     params: &CostParams,
     lat_mvm: f64,
-    threads: usize,
+    mode: &mut LaneMode<'_>,
 ) -> f64 {
-    let active: Vec<usize> =
-        (0..engines.len()).filter(|&e| !records[e].is_empty()).collect();
-    if active.is_empty() {
+    scratch.active.clear();
+    scratch.loads.clear();
+    for (e, recs) in records.iter().enumerate() {
+        if !recs.is_empty() {
+            scratch.active.push(e);
+            scratch.loads.push(recs.len());
+        }
+    }
+    if scratch.active.is_empty() {
         return 0.0;
     }
-    let total_records: usize = active.iter().map(|&e| records[e].len()).sum();
+    let total_records: usize = scratch.loads.iter().sum();
     let n_lanes = if total_records < MIN_PARALLEL_RECORDS {
         1
     } else {
-        threads.min(active.len())
+        mode.threads().min(scratch.active.len())
     };
-    let mut busy_by_engine = vec![0f64; engines.len()];
+    scratch.busy_by_engine.iter_mut().for_each(|b| *b = 0.0);
     if n_lanes <= 1 {
-        for &e in &active {
+        for &e in &scratch.active {
             let eng = engines[e].as_mut().expect("engine present");
             replay_engine(eng, &records[e], plan, params, lat_mvm);
             let (busy, _) = eng.end_iteration();
-            busy_by_engine[e] = busy;
+            scratch.busy_by_engine[e] = busy;
         }
     } else {
-        let assignment = lane_assignment(
-            &active.iter().map(|&e| records[e].len()).collect::<Vec<_>>(),
+        lane_assignment_into(
+            &scratch.loads,
             n_lanes,
+            &mut scratch.lane_load,
+            &mut scratch.assignment,
         );
-        let mut lanes: Vec<Vec<(usize, GraphEngine)>> =
-            (0..n_lanes).map(|_| Vec::new()).collect();
-        for (i, &e) in active.iter().enumerate() {
-            lanes[assignment[i]].push((e, engines[e].take().expect("engine present")));
-        }
-        let records: &[Vec<LaneRecord>] = records;
-        let lane_results: Vec<Vec<(usize, GraphEngine, f64)>> =
-            std::thread::scope(|s| {
-                let handles: Vec<_> = lanes
-                    .into_iter()
-                    .map(|lane| {
-                        s.spawn(move || {
-                            lane.into_iter()
-                                .map(|(e, mut eng)| {
-                                    replay_engine(
-                                        &mut eng, &records[e], plan, params, lat_mvm,
-                                    );
-                                    let (busy, _) = eng.end_iteration();
-                                    (e, eng, busy)
+        match mode {
+            LaneMode::Pooled { pool, .. } => {
+                let pool = pool.get();
+                let lanes = &mut scratch.lane_bufs[..n_lanes];
+                for (i, &e) in scratch.active.iter().enumerate() {
+                    lanes[scratch.assignment[i]].push((
+                        e,
+                        engines[e].take().expect("engine present"),
+                        0.0,
+                    ));
+                }
+                pool.replay(lanes, records, plan, params, lat_mvm);
+                // Lane- then engine-ordered merge (lanes arrive back in
+                // worker == lane order).
+                for lane in lanes.iter_mut() {
+                    for (e, eng, busy) in lane.drain(..) {
+                        scratch.busy_by_engine[e] = busy;
+                        engines[e] = Some(eng);
+                    }
+                }
+            }
+            LaneMode::Scoped { .. } => {
+                let mut lanes: Vec<Vec<(usize, GraphEngine)>> =
+                    (0..n_lanes).map(|_| Vec::new()).collect();
+                for (i, &e) in scratch.active.iter().enumerate() {
+                    lanes[scratch.assignment[i]]
+                        .push((e, engines[e].take().expect("engine present")));
+                }
+                let lane_results: Vec<Vec<(usize, GraphEngine, f64)>> =
+                    std::thread::scope(|s| {
+                        let handles: Vec<_> = lanes
+                            .into_iter()
+                            .map(|lane| {
+                                s.spawn(move || {
+                                    lane.into_iter()
+                                        .map(|(e, mut eng)| {
+                                            replay_engine(
+                                                &mut eng, &records[e], plan, params, lat_mvm,
+                                            );
+                                            let (busy, _) = eng.end_iteration();
+                                            (e, eng, busy)
+                                        })
+                                        .collect()
                                 })
-                                .collect()
-                        })
-                    })
-                    .collect();
-                // Merge in lane order — deterministic by construction.
-                handles
-                    .into_iter()
-                    .map(|h| h.join().expect("lane worker panicked"))
-                    .collect()
-            });
-        for lane in lane_results {
-            for (e, eng, busy) in lane {
-                busy_by_engine[e] = busy;
-                engines[e] = Some(eng);
+                            })
+                            .collect();
+                        // Merge in lane order — deterministic by construction.
+                        handles
+                            .into_iter()
+                            .map(|h| h.join().expect("lane worker panicked"))
+                            .collect()
+                    });
+                for lane in lane_results {
+                    for (e, eng, busy) in lane {
+                        scratch.busy_by_engine[e] = busy;
+                        engines[e] = Some(eng);
+                    }
+                }
             }
         }
     }
     // Engine-id fold order matches the sequential interpreter.
-    busy_by_engine.iter().fold(0f64, |a, &b| a.max(b))
+    scratch.busy_by_engine.iter().fold(0f64, |a, &b| a.max(b))
 }
 
-/// Phase 3: edge compute, chunked across forked executors when the
-/// backend supports concurrent evaluation; otherwise one sequential call
-/// on `executor`. Chunk boundaries never affect the result — each op's
+/// Phase 3: edge compute, chunked across executor forks when the backend
+/// supports concurrent evaluation; otherwise one sequential call on
+/// `executor`. Chunk boundaries never affect the result — each op's
 /// output lanes are an independent pure function of its operands.
+#[allow(clippy::too_many_arguments)]
 fn run_numeric(
     executor: &mut dyn StepExecutor,
     kind: crate::algo::traits::StepKind,
@@ -236,55 +383,76 @@ fn run_numeric(
     sup_ops: &[u32],
     xs: &[f32],
     cand: &mut Vec<f32>,
-    threads: usize,
+    chunk_bufs: &mut [Vec<f32>],
+    mode: &mut LaneMode<'_>,
 ) -> Result<()> {
     let c = plan.c;
+    let threads = mode.threads();
     if threads <= 1 || sup_ops.len() < MIN_PARALLEL_NUMERIC_OPS.max(2 * threads) {
         return executor.execute(kind, plan.batch(sup_ops), xs, cand);
     }
     let chunk = sup_ops.len().div_ceil(threads);
-    let n_chunks = sup_ops.len().div_ceil(chunk);
-    let mut forks: Vec<Box<dyn StepExecutor + Send>> = Vec::with_capacity(n_chunks);
-    for _ in 0..n_chunks {
-        match executor.fork() {
-            Some(f) => forks.push(f),
-            // Stateful backend (PJRT): the numeric phase stays sequential.
-            None => return executor.execute(kind, plan.batch(sup_ops), xs, cand),
+    match mode {
+        LaneMode::Pooled { pool, .. } => {
+            let pool = pool.get();
+            // Workers keep their forks across supersteps and runs —
+            // `ensure_forks` is a cached no-op after the first superstep.
+            if !pool.ensure_forks(executor) {
+                // Stateful backend (PJRT): the numeric phase stays
+                // sequential.
+                return executor.execute(kind, plan.batch(sup_ops), xs, cand);
+            }
+            pool.execute_chunks(kind, plan, sup_ops, xs, chunk, chunk_bufs, cand)
+        }
+        LaneMode::Scoped { .. } => {
+            let n_chunks = sup_ops.len().div_ceil(chunk);
+            let mut forks: Vec<Box<dyn StepExecutor + Send>> =
+                Vec::with_capacity(n_chunks);
+            for _ in 0..n_chunks {
+                match executor.fork() {
+                    Some(f) => forks.push(f),
+                    None => return executor.execute(kind, plan.batch(sup_ops), xs, cand),
+                }
+            }
+            let outputs: Vec<Result<Vec<f32>>> = std::thread::scope(|s| {
+                let handles: Vec<_> = sup_ops
+                    .chunks(chunk)
+                    .zip(xs.chunks(chunk * c))
+                    .zip(forks.into_iter())
+                    .map(|((ops_chunk, xs_chunk), mut exec)| {
+                        s.spawn(move || {
+                            let mut out = Vec::new();
+                            exec.execute(kind, plan.batch(ops_chunk), xs_chunk, &mut out)
+                                .map(|_| out)
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("numeric worker panicked"))
+                    .collect()
+            });
+            cand.clear();
+            cand.reserve(sup_ops.len() * c);
+            for out in outputs {
+                cand.extend_from_slice(&out?);
+            }
+            Ok(())
         }
     }
-    let outputs: Vec<Result<Vec<f32>>> = std::thread::scope(|s| {
-        let handles: Vec<_> = sup_ops
-            .chunks(chunk)
-            .zip(xs.chunks(chunk * c))
-            .zip(forks.into_iter())
-            .map(|((ops_chunk, xs_chunk), mut exec)| {
-                s.spawn(move || {
-                    let mut out = Vec::new();
-                    exec.execute(kind, plan.batch(ops_chunk), xs_chunk, &mut out)
-                        .map(|_| out)
-                })
-            })
-            .collect();
-        handles
-            .into_iter()
-            .map(|h| h.join().expect("numeric worker panicked"))
-            .collect()
-    });
-    cand.clear();
-    cand.reserve(sup_ops.len() * c);
-    for out in outputs {
-        cand.extend_from_slice(&out?);
-    }
-    Ok(())
 }
 
 /// Run `program` to convergence with `threads` execution lanes.
 ///
 /// `threads <= 1` (and any run recording the activity trace) takes the
 /// sequential interpreter verbatim; `threads == 0` resolves to the
-/// available hardware parallelism. Results are bit-identical to
-/// [`Scheduler::run`] for every thread count — see the module docs for
-/// the invariant and `rust/tests/parallel.rs` for the lockdown.
+/// available hardware parallelism. Otherwise a **transient**
+/// [`WorkerPool`] serves the run — one spawn set per run, never per
+/// superstep. Callers that run repeatedly should hold a persistent pool
+/// and use [`run_parallel_pooled`] (the `Session` does exactly that).
+/// Results are bit-identical to [`Scheduler::run`] for every thread
+/// count — see the module docs for the invariant and
+/// `rust/tests/parallel.rs` for the lockdown.
 pub fn run_parallel(
     config: &ArchConfig,
     params: &CostParams,
@@ -293,10 +461,97 @@ pub fn run_parallel(
     executor: &mut dyn StepExecutor,
     threads: usize,
 ) -> Result<RunResult> {
-    let threads = effective_threads(threads);
+    let threads = resolve_threads(threads);
     if threads <= 1 || config.trace_activity {
         return Scheduler::new(config, params, plan).run(program, executor);
     }
+    // Lazy: a run that never crosses the parallel thresholds spawns no
+    // thread at all, matching the old scoped behavior on tiny workloads.
+    run_pipeline(
+        config,
+        params,
+        plan,
+        program,
+        executor,
+        LaneMode::Pooled { pool: PoolRef::Lazy { threads, pool: None }, threads },
+    )
+}
+
+/// Run `program` on a caller-owned persistent [`WorkerPool`] — the
+/// zero-spawn production path. The pool's worker count is the lane
+/// count; a one-worker pool (and any tracing run) delegates to the
+/// sequential interpreter.
+pub fn run_parallel_pooled(
+    config: &ArchConfig,
+    params: &CostParams,
+    plan: &ExecutionPlan,
+    program: &dyn VertexProgram,
+    executor: &mut dyn StepExecutor,
+    pool: &mut WorkerPool,
+) -> Result<RunResult> {
+    let workers = pool.workers();
+    run_parallel_pooled_at(config, params, plan, program, executor, pool, workers)
+}
+
+/// Like [`run_parallel_pooled`] but capping the lane count at `threads`
+/// (`0` = auto): a per-job override smaller than the pool uses fewer
+/// lanes of the same workers; larger requests clamp to the pool size.
+/// An effective lane count of 1 (and any tracing run) delegates to the
+/// sequential interpreter. Bit-identical for every cap, as always.
+pub fn run_parallel_pooled_at(
+    config: &ArchConfig,
+    params: &CostParams,
+    plan: &ExecutionPlan,
+    program: &dyn VertexProgram,
+    executor: &mut dyn StepExecutor,
+    pool: &mut WorkerPool,
+    threads: usize,
+) -> Result<RunResult> {
+    let threads = resolve_threads(threads).min(pool.workers());
+    if threads <= 1 || config.trace_activity {
+        return Scheduler::new(config, params, plan).run(program, executor);
+    }
+    run_pipeline(
+        config,
+        params,
+        plan,
+        program,
+        executor,
+        LaneMode::Pooled { pool: PoolRef::Borrowed(pool), threads },
+    )
+}
+
+/// The pre-pool baseline: identical dispatch, but phases 2/3 spawn
+/// `std::thread::scope` workers **every superstep**. Kept so the hotpath
+/// bench can report the pool's win over the mechanism it replaced and so
+/// the determinism suite can cross-check both mechanisms; new callers
+/// should use [`run_parallel`] / [`run_parallel_pooled`].
+pub fn run_parallel_scoped(
+    config: &ArchConfig,
+    params: &CostParams,
+    plan: &ExecutionPlan,
+    program: &dyn VertexProgram,
+    executor: &mut dyn StepExecutor,
+    threads: usize,
+) -> Result<RunResult> {
+    let threads = resolve_threads(threads);
+    if threads <= 1 || config.trace_activity {
+        return Scheduler::new(config, params, plan).run(program, executor);
+    }
+    run_pipeline(config, params, plan, program, executor, LaneMode::Scoped { threads })
+}
+
+/// The shared three-phase pipeline (see the module docs). `mode` selects
+/// only the phase-2/3 mechanism; every decision is made here, in the
+/// sequential dispatch pass, exactly as the interpreter makes it.
+fn run_pipeline(
+    config: &ArchConfig,
+    params: &CostParams,
+    plan: &ExecutionPlan,
+    program: &dyn VertexProgram,
+    executor: &mut dyn StepExecutor,
+    mut mode: LaneMode<'_>,
+) -> Result<RunResult> {
     config.validate()?;
     anyhow::ensure!(
         plan.matches(config),
@@ -382,11 +637,13 @@ pub fn run_parallel(
         }
     }
 
-    // --- per-engine work lanes, preallocated from the plan's lane table ---
+    // --- per-engine work lanes + run-lifetime scratch, all preallocated
+    // --- (the lane queues to the plan's lane-table bounds) ---
     let lane_tab = plan.lanes();
     let mut records: Vec<Vec<LaneRecord>> = (0..n_total)
         .map(|e| Vec::with_capacity(lane_tab.fixed_ops_on(e as u32) as usize))
         .collect();
+    let mut scratch = Scratch::new(n_total, mode.threads());
 
     // --- main loop ---
     let kind = program.step_kind();
@@ -510,8 +767,15 @@ pub fn run_parallel(
         }
 
         // --- phase 2: parallel lane replay, engine-ordered timing merge ---
-        exec_time_ns +=
-            replay_lanes(&mut engines, &mut records, plan, params, lat_mvm, threads);
+        exec_time_ns += replay_lanes(
+            &mut engines,
+            &records,
+            &mut scratch,
+            plan,
+            params,
+            lat_mvm,
+            &mut mode,
+        );
 
         if sup_ops.is_empty() {
             break;
@@ -521,7 +785,16 @@ pub fn run_parallel(
         // Gather and reduce/apply are the interpreter's own helpers:
         // identical numeric semantics by construction, not by mirroring.
         gather_sources(plan, program, kind, &snapshot, outdeg, &sup_ops, &mut xs);
-        run_numeric(executor, kind, plan, &sup_ops, &xs, &mut cand, threads)?;
+        run_numeric(
+            executor,
+            kind,
+            plan,
+            &sup_ops,
+            &xs,
+            &mut cand,
+            &mut scratch.chunk_bufs,
+            &mut mode,
+        )?;
         let any_changed = reduce_apply(
             plan,
             program,
@@ -696,10 +969,10 @@ mod tests {
     }
 
     #[test]
-    fn empty_frontier_terminates_without_idle_scopes() {
+    fn empty_frontier_terminates_without_idle_lanes() {
         // Source with no out-edges: the first superstep has an empty
-        // frontier, so no lanes spawn and the run ends after at most one
-        // superstep — identically to the sequential path.
+        // frontier, so no lane work is submitted and the run ends after
+        // at most one superstep — identically to the sequential path.
         let g = Coo::from_edges(8, vec![Edge::new(1, 2)]);
         let config = ArchConfig::default();
         let (seq, par) = run_both(&g, &config, &Bfs::new(7), 4);
@@ -718,9 +991,50 @@ mod tests {
     }
 
     #[test]
+    fn scoped_and_pooled_mechanisms_agree() {
+        // The retained scoped baseline and the pooled production path
+        // must stay interchangeable bit for bit — on a fresh pool and on
+        // a pool reused across consecutive runs.
+        let g = Dataset::Tiny.load().unwrap();
+        let config = ArchConfig::default();
+        let params = CostParams::default();
+        for program in [&PageRank::new(0.85, 5) as &dyn VertexProgram, &Wcc] {
+            let plan = plan_for(&g, &config, false);
+            let seq = Scheduler::new(&config, &params, &plan)
+                .run(program, &mut NativeExecutor)
+                .unwrap();
+            let scoped = run_parallel_scoped(
+                &config, &params, &plan, program, &mut NativeExecutor, 4,
+            )
+            .unwrap();
+            assert_same(&seq, &scoped, "scoped vs sequential");
+            let mut pool = WorkerPool::new(4);
+            for round in 0..2 {
+                let pooled = run_parallel_pooled(
+                    &config, &params, &plan, program, &mut NativeExecutor, &mut pool,
+                )
+                .unwrap();
+                assert_same(&seq, &pooled, &format!("pooled round {round}"));
+            }
+            // A lane cap below the pool size uses fewer lanes of the same
+            // workers — still bit-identical, no respawn.
+            let ids = pool.worker_ids();
+            for cap in [1usize, 2, 16] {
+                let capped = run_parallel_pooled_at(
+                    &config, &params, &plan, program, &mut NativeExecutor, &mut pool, cap,
+                )
+                .unwrap();
+                assert_same(&seq, &capped, &format!("pooled cap {cap}"));
+            }
+            assert_eq!(pool.worker_ids(), ids, "caps never respawn workers");
+        }
+    }
+
+    #[test]
     fn tracing_runs_take_the_sequential_path() {
         // The activity trace needs per-group engine snapshots, so a
-        // tracing run delegates to the interpreter even with threads > 1.
+        // tracing run delegates to the interpreter even with threads > 1
+        // — on both the transient and the persistent-pool entry points.
         let g = Dataset::Tiny.load().unwrap();
         let config = ArchConfig::fig5();
         let params = CostParams::default();
@@ -733,6 +1047,12 @@ mod tests {
             .run(&Bfs::new(0), &mut NativeExecutor)
             .unwrap();
         assert_same(&seq, &par, "tracing delegation");
+        let mut pool = WorkerPool::new(4);
+        let pooled = run_parallel_pooled(
+            &config, &params, &plan, &Bfs::new(0), &mut NativeExecutor, &mut pool,
+        )
+        .unwrap();
+        assert!(pooled.activity.is_some(), "pooled tracing delegates too");
     }
 
     #[test]
@@ -755,8 +1075,8 @@ mod tests {
     }
 
     #[test]
-    fn effective_threads_resolves_auto() {
-        assert!(effective_threads(0) >= 1);
-        assert_eq!(effective_threads(3), 3);
+    fn resolve_threads_maps_zero_to_auto() {
+        assert!(resolve_threads(0) >= 1);
+        assert_eq!(resolve_threads(3), 3);
     }
 }

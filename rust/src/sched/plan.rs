@@ -118,6 +118,8 @@ pub struct ExecutionPlan {
     slot_pool: Vec<EngineSlot>,
     /// Precomputed lane partitioning for batch-parallel execution.
     lanes: LaneTable,
+    /// Flat CSR-style snapshot→`xs` gather table (see [`GatherTable`]).
+    gather: GatherTable,
     /// One-time static configuration (Alg. 2 ll. 6–8), in CT rank order.
     static_config: Vec<(EngineSlot, Pattern)>,
     /// rank → pattern, for dynamic `configure` (ll. 13–15).
@@ -215,6 +217,52 @@ impl LaneTable {
     }
 }
 
+/// Flat CSR-style per-op source-gather table: for op `k`,
+/// `off[k]..off[k+1]` delimits the source vertex indices feeding its C
+/// wordlines (clipped to the vertex count); the remaining
+/// `C - (off[k+1] - off[k])` wordlines are identity padding. Built once
+/// at plan compile time so the per-superstep snapshot→`xs` gather is an
+/// indexed copy — no bounds test per wordline, no re-derivation per
+/// superstep — and **preserved verbatim by
+/// [`ExecutionPlan::rebuild_static_slots`]** (gather sources are
+/// split-independent, like the op records they mirror).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct GatherTable {
+    off: Vec<u32>,
+    idx: Vec<u32>,
+}
+
+impl GatherTable {
+    fn build(ops: &[PlanOp], c: usize, num_vertices: u32) -> Self {
+        let mut off = Vec::with_capacity(ops.len() + 1);
+        off.push(0u32);
+        let mut idx = Vec::with_capacity(ops.len() * c);
+        for op in ops {
+            let valid = (num_vertices.saturating_sub(op.src_start) as usize).min(c);
+            idx.extend(op.src_start..op.src_start + valid as u32);
+            off.push(idx.len() as u32);
+        }
+        Self { off, idx }
+    }
+
+    /// Source vertex indices of op `k` plus the identity-padding count
+    /// filling the op's C wordlines.
+    #[inline]
+    pub fn sources_of(&self, k: usize, c: usize) -> (&[u32], usize) {
+        let s = &self.idx[self.off[k] as usize..self.off[k + 1] as usize];
+        (s, c - s.len())
+    }
+
+    /// Number of ops covered.
+    pub fn len(&self) -> usize {
+        self.off.len() - 1
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
 /// Static-slot sections derived from a config table: the slot pool,
 /// per-rank candidate ranges, and the init-time configuration list.
 fn slot_sections(
@@ -281,6 +329,7 @@ impl ExecutionPlan {
         }
 
         let lanes = LaneTable::build(&ops, &slot_pool, arch.total_engines);
+        let gather = GatherTable::build(&ops, c, part.num_vertices);
         Self {
             c,
             num_vertices: part.num_vertices,
@@ -296,6 +345,7 @@ impl ExecutionPlan {
             groups: st.groups.clone(),
             slot_pool,
             lanes,
+            gather,
             static_config,
             rank_pattern: ct.entries.iter().map(|e| e.pattern).collect(),
             op_bits,
@@ -343,6 +393,7 @@ impl ExecutionPlan {
             }
         }
         let lanes = LaneTable::build(&ops, &[], 0);
+        let gather = GatherTable::build(&ops, c, part.num_vertices);
         Self {
             c,
             num_vertices: part.num_vertices,
@@ -358,6 +409,7 @@ impl ExecutionPlan {
             groups: vec![0, n as u32],
             slot_pool: Vec::new(),
             lanes,
+            gather,
             static_config: Vec::new(),
             rank_pattern: part.subgraphs.iter().map(|s| s.pattern).collect(),
             op_bits,
@@ -370,7 +422,9 @@ impl ExecutionPlan {
     /// Recompile only the static-slot section against a new config table
     /// (same ranking — same graph). The DSE static-split sweep calls this
     /// per candidate N instead of recompiling the whole plan: op records,
-    /// gather data, and weights are split-independent. Errors (like the
+    /// the gather table, and weights are split-independent and preserved
+    /// verbatim (only the slot pool, static config, and lane table — the
+    /// sections the split decides — are rebuilt). Errors (like the
     /// interpreter's own mismatch guard) on a config table from another
     /// ranking or an architecture whose execution order differs from the
     /// one baked into the plan's groups.
@@ -465,6 +519,12 @@ impl ExecutionPlan {
     #[inline]
     pub fn lanes(&self) -> &LaneTable {
         &self.lanes
+    }
+
+    /// Precomputed snapshot→`xs` gather table (see [`GatherTable`]).
+    #[inline]
+    pub fn gather(&self) -> &GatherTable {
+        &self.gather
     }
 
     /// One-time static engine configuration (Alg. 2 ll. 6–8).
@@ -696,6 +756,36 @@ mod tests {
             lanes.fixed_ops() + lanes.multi_replica_ops + lanes.dynamic_path_ops,
             plan.num_ops() as u32
         );
+    }
+
+    #[test]
+    fn gather_table_lists_clipped_contiguous_sources() {
+        let (part, ct, st, arch) = setup(false);
+        let plan = ExecutionPlan::build(&part, &ct, &st, &arch);
+        let gather = plan.gather();
+        assert_eq!(gather.len(), plan.num_ops());
+        for (k, op) in plan.ops.iter().enumerate() {
+            let (src, pad) = gather.sources_of(k, plan.c);
+            assert_eq!(src.len() + pad, plan.c, "op {k}: always C wordlines");
+            // Exactly the in-range wordlines, in wordline order.
+            let want: Vec<u32> = (0..plan.c as u32)
+                .map(|i| op.src_start + i)
+                .filter(|&v| v < plan.num_vertices)
+                .collect();
+            assert_eq!(src, &want[..], "op {k}: clipped source range");
+        }
+    }
+
+    #[test]
+    fn rebuild_static_slots_preserves_the_gather_table() {
+        let (part, ct, st, arch) = setup(false);
+        let mut plan = ExecutionPlan::build(&part, &ct, &st, &arch);
+        let before = plan.gather().clone();
+        let ranking = PatternRanking::from_partitioned(&part);
+        let arch0 = ArchConfig { static_engines: 0, ..arch.clone() };
+        let ct0 = ConfigTable::build(&ranking, 2, 0, 1, 4, arch0.static_assignment);
+        plan.rebuild_static_slots(&ct0, &arch0).unwrap();
+        assert_eq!(plan.gather(), &before, "gather is split-independent");
     }
 
     #[test]

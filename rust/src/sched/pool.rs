@@ -1,0 +1,490 @@
+//! `sched::pool` — a persistent, channel-fed worker pool for the
+//! batch-parallel scheduler.
+//!
+//! The paper's whole premise is eliminating per-op reconfiguration cost;
+//! the simulator owes its own hot loop the same discipline. PR 3's lane
+//! replay and numeric chunking paid a `std::thread::scope` spawn/join
+//! round-trip on *every superstep* (twice). This pool is spawned **once**
+//! — by the [`Session`](crate::session::Session) that owns it, or
+//! transiently per run by the compat wrapper
+//! [`run_parallel`](super::par::run_parallel) — and fed work over
+//! per-worker mpsc channels, so the steady-state superstep performs zero
+//! thread spawns and zero heap allocation on the pool's side.
+//!
+//! # Ownership model
+//!
+//! * One pool per configured `parallelism`: the `Session` lazily spawns
+//!   `WorkerPool::new(threads)` on the first parallel job and reuses it
+//!   for every subsequent run; dropping the pool (or the session) closes
+//!   the task channels and joins every worker.
+//! * Each worker owns long-lived scratch: its cached
+//!   [`StepExecutor::fork`] (installed once per backend, not re-forked
+//!   every superstep) and whatever buffers ride the task messages.
+//! * Reusable buffers are double-buffered through the channels: the
+//!   caller moves lane/output buffers into a task, the worker fills them,
+//!   and the reply moves them back — capacity is never dropped.
+//!
+//! # Determinism contract
+//!
+//! The pool is a pure *mechanism*: every scheduling decision is already
+//! resolved by the sequential dispatch pass in [`super::par`], tasks are
+//! routed to workers by lane index, and replies are collected in worker
+//! index order — the same lane-then-engine merge order the scoped
+//! baseline and the sequential interpreter use. Which OS thread replays a
+//! lane can therefore never affect a `RunResult` bit. Any new pool
+//! feature must keep both properties: decisions stay in the dispatch
+//! pass, merges stay index-ordered.
+//!
+//! # Safety
+//!
+//! Tasks borrow run-local state (the plan, cost params, record queues,
+//! the gathered `xs`) across threads through lifetime-erased pointers.
+//! Every public method that submits tasks **blocks until all replies for
+//! those tasks are received before returning**, so the borrowed data
+//! strictly outlives worker access, and workers never retain a pointer
+//! past the task that carried it. The unsafety is fully contained in this
+//! module; the public API is safe.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Weak};
+use std::thread::{JoinHandle, ThreadId};
+
+use anyhow::Result;
+
+use crate::cost::CostParams;
+use crate::engine::GraphEngine;
+
+use super::executor::StepExecutor;
+use super::par::{replay_engine, LaneRecord};
+use super::plan::ExecutionPlan;
+
+/// One lane entry in flight: engine index, the engine itself, and the
+/// busy time its replay produced (filled in by the worker).
+pub(crate) type LaneSlot = (usize, GraphEngine, f64);
+
+/// Lifetime-erased shared reference. Safe to send because every pool
+/// method joins on its replies before the underlying borrow can end (see
+/// the module-level safety notes).
+struct SendConstPtr<T: ?Sized>(*const T);
+unsafe impl<T: ?Sized + Sync> Send for SendConstPtr<T> {}
+
+enum Task {
+    /// Replay the lane's engines against the shared record queues.
+    Replay {
+        lane: Vec<LaneSlot>,
+        records: SendConstPtr<[Vec<LaneRecord>]>,
+        plan: SendConstPtr<ExecutionPlan>,
+        params: SendConstPtr<CostParams>,
+        lat_mvm: f64,
+    },
+    /// Evaluate one numeric batch chunk on the worker's cached fork.
+    Numeric {
+        kind: crate::algo::traits::StepKind,
+        ops: SendConstPtr<[u32]>,
+        xs: SendConstPtr<[f32]>,
+        plan: SendConstPtr<ExecutionPlan>,
+        out: Vec<f32>,
+    },
+    /// Cache a forked executor for subsequent `Numeric` tasks (replaces
+    /// any previous fork). No reply; channel FIFO ordering guarantees the
+    /// fork is installed before any numeric task submitted after it.
+    InstallFork(Box<dyn StepExecutor + Send>),
+    /// Report the worker's index and OS thread id (test/diagnostic hook).
+    Probe,
+}
+
+enum Reply {
+    Replay(Vec<LaneSlot>),
+    Numeric { out: Vec<f32>, result: Result<()> },
+    Probe(ThreadId),
+}
+
+fn worker_loop(rx: Receiver<Task>, tx: Sender<Reply>, _alive: Arc<()>) {
+    let mut fork: Option<Box<dyn StepExecutor + Send>> = None;
+    while let Ok(task) = rx.recv() {
+        let reply = match task {
+            Task::InstallFork(exec) => {
+                fork = Some(exec);
+                continue;
+            }
+            Task::Replay { mut lane, records, plan, params, lat_mvm } => {
+                // SAFETY: the submitting call blocks on this reply before
+                // the borrowed dispatch state can move or drop, and no
+                // pointer outlives this match arm.
+                let (records, plan, params) =
+                    unsafe { (&*records.0, &*plan.0, &*params.0) };
+                for (e, eng, busy) in lane.iter_mut() {
+                    replay_engine(eng, &records[*e], plan, params, lat_mvm);
+                    let (b, _) = eng.end_iteration();
+                    *busy = b;
+                }
+                Reply::Replay(lane)
+            }
+            Task::Numeric { kind, ops, xs, plan, mut out } => {
+                // SAFETY: as above.
+                let (ops, xs, plan) = unsafe { (&*ops.0, &*xs.0, &*plan.0) };
+                let result = match fork.as_mut() {
+                    Some(exec) => exec.execute(kind, plan.batch(ops), xs, &mut out),
+                    None => Err(anyhow::anyhow!(
+                        "pool worker received a numeric chunk without a \
+                         cached executor fork"
+                    )),
+                };
+                Reply::Numeric { out, result }
+            }
+            Task::Probe => Reply::Probe(std::thread::current().id()),
+        };
+        if tx.send(reply).is_err() {
+            break; // pool dropped mid-reply; exit quietly
+        }
+    }
+}
+
+/// Persistent worker pool — see the module docs for the ownership model
+/// and the determinism contract.
+pub struct WorkerPool {
+    tx: Vec<Sender<Task>>,
+    rx: Vec<Receiver<Reply>>,
+    handles: Vec<JoinHandle<()>>,
+    /// Backend name whose forks the workers currently cache.
+    fork_backend: Option<&'static str>,
+    /// Each worker thread holds a strong clone for its lifetime; the
+    /// pool itself keeps only this `Weak`, so `liveness()` truly tracks
+    /// worker threads (it stops upgrading once every worker has exited,
+    /// even if the pool value still exists) — the "no leaked threads"
+    /// test hook.
+    alive: Weak<()>,
+}
+
+impl std::fmt::Debug for WorkerPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("WorkerPool")
+            .field("workers", &self.tx.len())
+            .field("fork_backend", &self.fork_backend)
+            .finish()
+    }
+}
+
+impl WorkerPool {
+    /// Spawn `workers` (min 1) persistent lane workers.
+    pub fn new(workers: usize) -> Self {
+        let workers = workers.max(1);
+        let alive = Arc::new(());
+        let mut tx = Vec::with_capacity(workers);
+        let mut rx = Vec::with_capacity(workers);
+        let mut handles = Vec::with_capacity(workers);
+        for i in 0..workers {
+            let (task_tx, task_rx) = channel::<Task>();
+            let (reply_tx, reply_rx) = channel::<Reply>();
+            let token = Arc::clone(&alive);
+            let handle = std::thread::Builder::new()
+                .name(format!("sched-pool-{i}"))
+                .spawn(move || worker_loop(task_rx, reply_tx, token))
+                .expect("spawn pool worker");
+            tx.push(task_tx);
+            rx.push(reply_rx);
+            handles.push(handle);
+        }
+        // Keep only a Weak: the workers' clones are the strong refs.
+        let alive = Arc::downgrade(&alive);
+        Self { tx, rx, handles, fork_backend: None, alive }
+    }
+
+    /// Number of persistent workers (== maximum lane count).
+    pub fn workers(&self) -> usize {
+        self.tx.len()
+    }
+
+    /// A `Weak` that upgrades iff at least one worker thread is still
+    /// alive — worker exits (even early, via panic) are observable, and
+    /// after the pool drops (joining its workers) it never upgrades
+    /// again.
+    pub fn liveness(&self) -> Weak<()> {
+        self.alive.clone()
+    }
+
+    /// OS thread ids of the workers, in worker-index order. Stable for
+    /// the pool's whole lifetime — the unit test for "zero per-superstep
+    /// thread spawns" asserts this set is identical before and after
+    /// full pooled runs.
+    pub fn worker_ids(&mut self) -> Vec<ThreadId> {
+        for tx in &self.tx {
+            tx.send(Task::Probe).expect("pool worker exited");
+        }
+        self.rx
+            .iter()
+            .map(|rx| match rx.recv().expect("pool worker panicked") {
+                Reply::Probe(id) => id,
+                _ => unreachable!("probe reply"),
+            })
+            .collect()
+    }
+
+    /// Ensure every worker caches a fork of `executor`'s backend; returns
+    /// whether the backend supports forking (`false` keeps the numeric
+    /// phase sequential, exactly like the scoped baseline). Idempotent
+    /// per backend name — forks survive across supersteps *and* runs,
+    /// which is sound because `StepExecutor::fork` promises pure,
+    /// position-independent numerics.
+    pub(crate) fn ensure_forks(&mut self, executor: &dyn StepExecutor) -> bool {
+        if self.fork_backend == Some(executor.name()) {
+            return true;
+        }
+        let mut forks = Vec::with_capacity(self.workers());
+        for _ in 0..self.workers() {
+            match executor.fork() {
+                Some(f) => forks.push(f),
+                None => return false,
+            }
+        }
+        for (tx, f) in self.tx.iter().zip(forks) {
+            tx.send(Task::InstallFork(f)).expect("pool worker exited");
+        }
+        self.fork_backend = Some(executor.name());
+        true
+    }
+
+    /// Phase 2 on the pool: lane `i` replays on worker `i`; blocks until
+    /// every lane is back (filled with per-engine busy times). Lane
+    /// buffers are moved out and back — capacity survives.
+    ///
+    /// Panic safety: the method never unwinds while a live worker still
+    /// holds a task pointer — every submitted task is drained first (a
+    /// worker either replies, having released its pointers, or has died,
+    /// holding none), *then* a worker failure panics the caller. This is
+    /// what keeps the lifetime erasure sound; `std::thread::scope` gave
+    /// the scoped baseline the same property via join-on-panic.
+    pub(crate) fn replay(
+        &mut self,
+        lanes: &mut [Vec<LaneSlot>],
+        records: &[Vec<LaneRecord>],
+        plan: &ExecutionPlan,
+        params: &CostParams,
+        lat_mvm: f64,
+    ) {
+        // Hard-checked before any task is in flight: an out-of-bounds
+        // panic mid-submission would unwind with pointers outstanding.
+        assert!(lanes.len() <= self.workers(), "more lanes than workers");
+        let mut sent = 0usize;
+        let mut failed = false;
+        for (w, lane) in lanes.iter_mut().enumerate() {
+            let task = Task::Replay {
+                lane: std::mem::take(lane),
+                records: SendConstPtr(records as *const _),
+                plan: SendConstPtr(plan as *const _),
+                params: SendConstPtr(params as *const _),
+                lat_mvm,
+            };
+            if self.tx[w].send(task).is_err() {
+                failed = true;
+                break;
+            }
+            sent += 1;
+        }
+        // Collect in worker order — the deterministic lane-order merge.
+        for (w, lane) in lanes.iter_mut().enumerate().take(sent) {
+            match self.rx[w].recv() {
+                Ok(Reply::Replay(l)) => *lane = l,
+                Ok(_) => unreachable!("replay reply"),
+                Err(_) => failed = true,
+            }
+        }
+        assert!(!failed, "pool worker panicked");
+    }
+
+    /// Phase 3 on the pool: chunk `i` of the numeric batch evaluates on
+    /// worker `i`'s cached fork; outputs concatenate into `cand` in chunk
+    /// order (bit-identical to one sequential call — each op's output
+    /// lanes are an independent pure function of its operands). `bufs`
+    /// cycle through the channels so the steady state allocates nothing.
+    /// The caller must have succeeded with [`ensure_forks`](Self::ensure_forks).
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn execute_chunks(
+        &mut self,
+        kind: crate::algo::traits::StepKind,
+        plan: &ExecutionPlan,
+        sup_ops: &[u32],
+        xs: &[f32],
+        chunk: usize,
+        bufs: &mut [Vec<f32>],
+        cand: &mut Vec<f32>,
+    ) -> Result<()> {
+        let c = plan.c;
+        let n_chunks = sup_ops.len().div_ceil(chunk);
+        // Hard-checked before any task is in flight (see `replay`).
+        assert!(
+            n_chunks <= self.workers() && n_chunks <= bufs.len(),
+            "more chunks than workers/buffers"
+        );
+        // Prepare `cand` BEFORE any task is in flight: `reserve` can
+        // panic (capacity overflow), and no unwind may happen while
+        // workers hold task pointers.
+        cand.clear();
+        cand.reserve(sup_ops.len() * c);
+        let mut sent = 0usize;
+        let mut failed = false;
+        for (w, (ops_chunk, xs_chunk)) in
+            sup_ops.chunks(chunk).zip(xs.chunks(chunk * c)).enumerate()
+        {
+            let task = Task::Numeric {
+                kind,
+                ops: SendConstPtr(ops_chunk as *const _),
+                xs: SendConstPtr(xs_chunk as *const _),
+                plan: SendConstPtr(plan as *const _),
+                out: std::mem::take(&mut bufs[w]),
+            };
+            if self.tx[w].send(task).is_err() {
+                failed = true;
+                break;
+            }
+            sent += 1;
+        }
+        let mut first_err = None;
+        // Drain every submitted chunk first — workers release their task
+        // pointers as they reply, and nothing in this loop can unwind
+        // (see `replay` on why that is load-bearing).
+        for (w, buf) in bufs.iter_mut().enumerate().take(sent) {
+            match self.rx[w].recv() {
+                Ok(Reply::Numeric { out, result }) => {
+                    if let Err(e) = result {
+                        first_err.get_or_insert(e);
+                    }
+                    *buf = out; // buffer returns to the caller's scratch
+                }
+                Ok(_) => unreachable!("numeric reply"),
+                Err(_) => failed = true,
+            }
+        }
+        // All tasks are accounted for; failures may surface now.
+        assert!(!failed, "pool worker panicked");
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+        // Concatenate in chunk order — exactly like one sequential call.
+        for buf in bufs.iter().take(sent) {
+            cand.extend_from_slice(buf);
+        }
+        Ok(())
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.tx.clear(); // close task channels; workers drain and exit
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::config::ArchConfig;
+    use crate::algo::traits::StepKind;
+    use crate::algo::Bfs;
+    use crate::cost::CostParams;
+    use crate::graph::datasets::Dataset;
+    use crate::pattern::extract::partition;
+    use crate::sched::executor::NativeExecutor;
+    use crate::sched::par::run_parallel_pooled;
+    use crate::sched::Scheduler;
+
+    /// Fork-less test executor: the pool must report `false` and leave
+    /// the numeric phase to the caller.
+    struct NoFork;
+    impl StepExecutor for NoFork {
+        fn name(&self) -> &'static str {
+            "nofork"
+        }
+        fn execute(
+            &mut self,
+            _kind: StepKind,
+            _batch: crate::sched::plan::StepBatch<'_>,
+            _xs: &[f32],
+            _out: &mut Vec<f32>,
+        ) -> Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn drop_joins_all_workers() {
+        let pool = WorkerPool::new(4);
+        let token = pool.liveness();
+        assert!(token.upgrade().is_some(), "workers alive while pool lives");
+        drop(pool);
+        assert!(token.upgrade().is_none(), "drop must join every worker");
+    }
+
+    #[test]
+    fn worker_ids_are_stable_across_full_runs() {
+        // The zero-per-superstep-spawn lockdown: the same OS threads must
+        // serve every superstep of every run on this pool.
+        let g = Dataset::Tiny.load().unwrap();
+        let config = ArchConfig::default();
+        let params = CostParams::default();
+        let acc = crate::accel::Accelerator::new(config.clone(), params.clone());
+        let pre = acc.preprocess(&g, false).unwrap();
+
+        let mut pool = WorkerPool::new(4);
+        let before = pool.worker_ids();
+        assert_eq!(before.len(), 4);
+        let unique: std::collections::HashSet<_> = before.iter().collect();
+        assert_eq!(unique.len(), 4, "worker threads are distinct");
+
+        let seq = Scheduler::new(&config, &params, &pre.plan)
+            .run(&Bfs::new(0), &mut NativeExecutor)
+            .unwrap();
+        for _ in 0..2 {
+            let run = run_parallel_pooled(
+                &config,
+                &params,
+                &pre.plan,
+                &Bfs::new(0),
+                &mut NativeExecutor,
+                &mut pool,
+            )
+            .unwrap();
+            assert_eq!(run.values, seq.values);
+            assert_eq!(run.exec_time_ns, seq.exec_time_ns);
+        }
+        assert_eq!(pool.worker_ids(), before, "runs must not spawn threads");
+    }
+
+    #[test]
+    fn ensure_forks_is_idempotent_and_backend_aware() {
+        let mut pool = WorkerPool::new(2);
+        assert!(pool.ensure_forks(&NativeExecutor));
+        assert!(pool.ensure_forks(&NativeExecutor), "cached forks reused");
+        assert!(!pool.ensure_forks(&NoFork), "fork-less backend stays sequential");
+        // The failed attempt must not clobber the cached native forks.
+        assert!(pool.ensure_forks(&NativeExecutor));
+    }
+
+    #[test]
+    fn execute_chunks_matches_one_sequential_call() {
+        let g = Dataset::Tiny.load().unwrap();
+        let part = partition(&g, 4, false);
+        let plan = ExecutionPlan::from_partitioned(&part);
+        let n = plan.num_ops();
+        let ids: Vec<u32> = (0..n as u32).collect();
+        let xs: Vec<f32> = (0..n * 4).map(|i| (i % 7) as f32).collect();
+
+        let mut want = Vec::new();
+        NativeExecutor
+            .execute(StepKind::PageRank, plan.batch(&ids), &xs, &mut want)
+            .unwrap();
+
+        let mut pool = WorkerPool::new(3);
+        assert!(pool.ensure_forks(&NativeExecutor));
+        let mut bufs = vec![Vec::new(); 3];
+        let mut got = Vec::new();
+        let chunk = n.div_ceil(3);
+        pool.execute_chunks(StepKind::PageRank, &plan, &ids, &xs, chunk, &mut bufs, &mut got)
+            .unwrap();
+        assert_eq!(got, want, "chunked == sequential, bit for bit");
+        // Buffers came back with retained capacity for the next call.
+        assert!(bufs.iter().take(n.div_ceil(chunk)).all(|b| b.capacity() > 0));
+    }
+}

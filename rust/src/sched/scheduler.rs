@@ -126,7 +126,9 @@ impl RunResult {
 
 /// Gather one superstep's wordline inputs: a C-vector per selected op,
 /// snapshot source values mapped through `VertexProgram::source_value`,
-/// identity-padded past the vertex count. Shared by the sequential
+/// identity-padded past the vertex count. An indexed copy through the
+/// plan's precompiled [`GatherTable`](super::plan::GatherTable) — no
+/// per-wordline bounds test in the hot loop. Shared by the sequential
 /// interpreter and `sched::par` so the numeric operands can never drift
 /// between them (the oracle keeps its own copy by design).
 pub(crate) fn gather_sources(
@@ -139,18 +141,17 @@ pub(crate) fn gather_sources(
     xs: &mut Vec<f32>,
 ) {
     let c = plan.c;
-    let n = plan.num_vertices as usize;
+    let gather = plan.gather();
+    let id = super::executor::identity(kind);
     xs.clear();
     xs.reserve(sup_ops.len() * c);
     for &op in sup_ops {
-        let src_start = plan.ops[op as usize].src_start as usize;
-        for i in 0..c {
-            let v = src_start + i;
-            if v < n {
-                xs.push(program.source_value(snapshot[v], outdeg[v]));
-            } else {
-                xs.push(super::executor::identity(kind));
-            }
+        let (src, pad) = gather.sources_of(op as usize, c);
+        for &v in src {
+            xs.push(program.source_value(snapshot[v as usize], outdeg[v as usize]));
+        }
+        for _ in 0..pad {
+            xs.push(id);
         }
     }
 }

@@ -42,16 +42,23 @@ pub use job::JobSpec;
 pub use crate::algo::registry::{AlgoParams, AlgorithmId, AlgorithmRegistry, BoxedProgram};
 
 use std::path::PathBuf;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{Context, Result};
 
 use crate::accel::{Accelerator, ArchConfig, Preprocessed, SimReport};
+use crate::algo::traits::VertexProgram;
 use crate::cost::CostParams;
 use crate::dse::SweepPoint;
 use crate::graph::Coo;
 use crate::sched::executor::NativeExecutor;
-use crate::sched::StepExecutor;
+use crate::sched::{resolve_threads, StepExecutor, WorkerPool};
+
+/// Upper bound on idle pools parked in a session's free list: enough
+/// that a typical serve deployment (workers ≤ 8) keeps one spawn-once
+/// pool per concurrent job, while a one-off concurrency burst beyond it
+/// can't hold worker threads for the session's whole lifetime.
+const MAX_FREE_POOLS: usize = 8;
 
 /// Which numeric edge-compute datapath a session drives.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -171,10 +178,15 @@ impl SessionBuilder {
     }
 
     /// Batch-parallel execution lanes per superstep (default 1 — the
-    /// sequential interpreter; `0` = one lane per hardware thread).
-    /// Results are bit-identical for every setting, so this is purely a
-    /// throughput knob; a [`JobSpec::with_parallelism`] override wins per
-    /// job.
+    /// sequential interpreter; `0` = one lane per hardware thread,
+    /// resolved eagerly at build time via
+    /// [`resolve_threads`](crate::sched::resolve_threads)). Parallel jobs
+    /// run on persistent [`WorkerPool`]s checked out of the session's
+    /// free list — spawned once per peak-concurrent job and reused until
+    /// the session drops. Results are bit-identical for every setting,
+    /// so this is purely a throughput knob; a
+    /// [`JobSpec::with_parallelism`] override wins per job (smaller
+    /// overrides cap the lanes used, larger ones spawn a bigger pool).
     pub fn parallelism(mut self, threads: usize) -> Self {
         self.parallelism = threads;
         self
@@ -192,7 +204,8 @@ impl SessionBuilder {
             backend: self.backend,
             registry: Arc::new(registry),
             artifacts: self.artifacts.unwrap_or_default(),
-            parallelism: self.parallelism,
+            parallelism: resolve_threads(self.parallelism),
+            pools: Mutex::new(Vec::new()),
         })
     }
 }
@@ -206,7 +219,15 @@ pub struct Session {
     backend: Backend,
     registry: Arc<AlgorithmRegistry>,
     artifacts: Arc<ArtifactStore>,
+    /// Resolved lane count (0-means-auto already applied).
     parallelism: usize,
+    /// Free list of persistent lane-worker pools. A parallel job checks
+    /// one out (spawning it on first need), runs on it with the lock
+    /// *released*, and checks it back in — so N concurrent serve workers
+    /// converge on N pools, each spawned once and reused for every later
+    /// job, and nobody falls back to per-run spawning under contention.
+    /// All pools (and their worker threads) join when the session drops.
+    pools: Mutex<Vec<WorkerPool>>,
 }
 
 impl Session {
@@ -239,14 +260,102 @@ impl Session {
         &self.artifacts
     }
 
-    /// The session's default superstep execution-lane count.
+    /// The session's default superstep execution-lane count (resolved:
+    /// never 0).
     pub fn parallelism(&self) -> usize {
         self.parallelism
     }
 
     /// Lanes for one job: the spec's override, else the session default.
     fn threads_for(&self, spec: &JobSpec) -> usize {
-        spec.parallelism.unwrap_or(self.parallelism)
+        spec.parallelism.map(resolve_threads).unwrap_or(self.parallelism)
+    }
+
+    /// Liveness probe of the session's persistent worker pools: `None`
+    /// until the first parallel job spawns one; afterwards a `Weak` (of
+    /// one idle pool's workers) that stops upgrading once the session —
+    /// and so every pool and its worker threads — is gone. The "no
+    /// leaked threads" test hook; probe it between jobs, not mid-run
+    /// (a checked-out pool is not in the free list).
+    pub fn pool_liveness(&self) -> Option<std::sync::Weak<()>> {
+        self.pool_list().first().map(|p| p.liveness())
+    }
+
+    /// Lock the pool free list, recovering from poisoning (only a
+    /// panicked check-in could poison it; the list itself is always
+    /// structurally sound).
+    fn pool_list(&self) -> std::sync::MutexGuard<'_, Vec<WorkerPool>> {
+        self.pools.lock().unwrap_or_else(|p| {
+            self.pools.clear_poison();
+            p.into_inner()
+        })
+    }
+
+    /// Check a pool with at least `threads` workers out of the free
+    /// list. Too-small pools (from a smaller earlier override) are left
+    /// in the list for jobs they still fit — never dropped under the
+    /// lock, whose hold time stays O(scan). With a uniform lane count
+    /// this spawns exactly once per peak-concurrent job.
+    fn checkout_pool(&self, threads: usize) -> WorkerPool {
+        let mut free = self.pool_list();
+        if let Some(i) = free.iter().position(|p| p.workers() >= threads) {
+            return free.swap_remove(i);
+        }
+        drop(free); // don't hold the lock across the spawn
+        WorkerPool::new(threads)
+    }
+
+    /// Execute a prepared job on the right scheduler path. Sequential
+    /// (and tracing) jobs take the interpreter; parallel jobs check a
+    /// persistent pool out of the session free list, run on it with no
+    /// lock held (concurrent jobs each get their own pooled workers,
+    /// spawned once and reused), and check it back in. Per-job overrides
+    /// smaller than a pool just cap the lanes they use.
+    fn dispatch(
+        &self,
+        acc: &Accelerator,
+        pre: &Preprocessed,
+        program: &dyn VertexProgram,
+        executor: &mut dyn StepExecutor,
+        threads: usize,
+    ) -> Result<SimReport> {
+        if threads <= 1 || self.arch.trace_activity {
+            // Sequential interpreter (also the tracing path — see
+            // `sched::par`); no pool involvement.
+            return acc.run_threaded(pre, program, executor, 1);
+        }
+        let mut pool = self.checkout_pool(threads);
+        let result = acc.run_pooled_at(pre, program, executor, &mut pool, threads);
+        // Check the pool back in even when the job failed — pool workers
+        // are job-agnostic. (If the run panicked, the pool unwinds and
+        // joins its workers instead.) The list is bounded so a one-off
+        // concurrency burst can't park worker threads forever; an
+        // overflow pool drops (joining its workers) outside the lock.
+        let overflow = {
+            let mut free = self.pool_list();
+            if free.len() < MAX_FREE_POOLS {
+                free.push(pool);
+                None
+            } else {
+                // Full: keep the most capable pools. Evict the smallest
+                // parked pool if the incoming one is larger, so a
+                // recurring large-override job class converges on a
+                // parked pool instead of respawning per job.
+                let smallest = free
+                    .iter()
+                    .enumerate()
+                    .min_by_key(|(_, p)| p.workers())
+                    .map(|(i, _)| i);
+                match smallest {
+                    Some(i) if free[i].workers() < pool.workers() => {
+                        Some(std::mem::replace(&mut free[i], pool))
+                    }
+                    _ => Some(pool),
+                }
+            }
+        };
+        drop(overflow);
+        result
     }
 
     /// The accelerator model this session simulates.
@@ -316,7 +425,7 @@ impl Session {
         let acc = self.accelerator();
         let pre = self.artifacts.get_or_preprocess_from(key, &acc, graph)?;
         let mut exec = self.executor()?;
-        acc.run_threaded(&pre, program.as_ref(), exec.as_mut(), self.threads_for(spec))
+        self.dispatch(&acc, &pre, program.as_ref(), exec.as_mut(), self.threads_for(spec))
     }
 
     /// Run a job on a caller-provided executor (the serve workers reuse
@@ -330,7 +439,7 @@ impl Session {
         let key = self.key_for(spec, program.needs_weights());
         let acc = self.accelerator();
         let pre = self.artifacts.get_or_preprocess(key, &acc)?;
-        acc.run_threaded(&pre, program.as_ref(), executor, self.threads_for(spec))
+        self.dispatch(&acc, &pre, program.as_ref(), executor, self.threads_for(spec))
     }
 
     /// DSE: best static/dynamic engine split for the job's algorithm on
@@ -442,6 +551,31 @@ mod tests {
             .unwrap();
         assert_eq!(seq.counts, over.counts);
         assert_eq!(seq.exec_time_ns, over.exec_time_ns);
+    }
+
+    #[test]
+    fn pool_is_lazy_reused_and_joined_on_drop() {
+        let session = Session::builder().parallelism(4).build().unwrap();
+        assert!(session.pool_liveness().is_none(), "pool spawns lazily");
+        let spec = JobSpec::new(Dataset::Tiny, "pagerank").with_iterations(5);
+        let a = session.run(&spec).unwrap();
+        let token = session
+            .pool_liveness()
+            .expect("first parallel job spawns the pool");
+        assert!(token.upgrade().is_some(), "workers alive with the session");
+        // Consecutive runs reuse the pool and stay bit-identical.
+        let b = session.run(&spec).unwrap();
+        assert_eq!(a.run.as_ref().unwrap().values, b.run.as_ref().unwrap().values);
+        assert_eq!(a.counts, b.counts);
+        assert_eq!(a.exec_time_ns, b.exec_time_ns);
+        drop(session);
+        assert!(token.upgrade().is_none(), "session drop joins every worker");
+    }
+
+    #[test]
+    fn zero_parallelism_resolves_to_hardware_threads_at_build() {
+        let session = Session::builder().parallelism(0).build().unwrap();
+        assert!(session.parallelism() >= 1, "0 = auto is resolved eagerly");
     }
 
     #[test]

@@ -11,6 +11,17 @@ pub fn black_box<T>(x: T) -> T {
     std_black_box(x)
 }
 
+/// Workload-derived throughput attached to a stat by
+/// [`Bench::annotate_throughput`]: how much graph work one iteration of
+/// the measured closure performed, divided by its mean time. Tracked in
+/// the `BENCH_*.json` trajectory so hot-path wins read as rates, not
+/// just durations.
+#[derive(Debug, Clone, Copy)]
+pub struct Throughput {
+    pub edges_per_sec: f64,
+    pub supersteps_per_sec: f64,
+}
+
 /// Timing statistics over the measured iterations.
 #[derive(Debug, Clone)]
 pub struct Stats {
@@ -20,6 +31,8 @@ pub struct Stats {
     pub min: Duration,
     pub max: Duration,
     pub stddev: Duration,
+    /// Optional throughput annotation (see [`Throughput`]).
+    pub throughput: Option<Throughput>,
 }
 
 impl Stats {
@@ -121,10 +134,31 @@ impl Bench {
             min,
             max,
             stddev: Duration::from_secs_f64(var.sqrt()),
+            throughput: None,
         };
         println!("{}", stats.report());
         self.results.push(stats);
         self.results.last().unwrap()
+    }
+
+    /// Attach edge/superstep throughput to the most recent result:
+    /// `edges` and `supersteps` are the work performed by **one**
+    /// iteration of the measured closure; rates are computed against its
+    /// mean time and land in the JSON trajectory.
+    pub fn annotate_throughput(&mut self, edges: u64, supersteps: u64) {
+        if let Some(r) = self.results.last_mut() {
+            let secs = r.mean.as_secs_f64().max(1e-12);
+            let t = Throughput {
+                edges_per_sec: edges as f64 / secs,
+                supersteps_per_sec: supersteps as f64 / secs,
+            };
+            println!(
+                "  -> {:.2} M edges/s, {:.0} supersteps/s",
+                t.edges_per_sec / 1e6,
+                t.supersteps_per_sec
+            );
+            r.throughput = Some(t);
+        }
     }
 
     pub fn results(&self) -> &[Stats] {
@@ -141,7 +175,7 @@ impl Bench {
             }
             s.push_str(&format!(
                 "  {{\"name\": \"{}\", \"iters\": {}, \"mean_ns\": {}, \
-                 \"min_ns\": {}, \"max_ns\": {}, \"stddev_ns\": {}}}",
+                 \"min_ns\": {}, \"max_ns\": {}, \"stddev_ns\": {}",
                 r.name.replace('\\', "\\\\").replace('"', "\\\""),
                 r.iters,
                 r.mean.as_nanos(),
@@ -149,6 +183,13 @@ impl Bench {
                 r.max.as_nanos(),
                 r.stddev.as_nanos(),
             ));
+            if let Some(t) = r.throughput {
+                s.push_str(&format!(
+                    ", \"edges_per_sec\": {:.1}, \"supersteps_per_sec\": {:.1}",
+                    t.edges_per_sec, t.supersteps_per_sec
+                ));
+            }
+            s.push('}');
         }
         s.push_str("\n]\n");
         s
@@ -202,5 +243,24 @@ mod tests {
         assert!(json.contains("\"mean_ns\""));
         assert!(json.trim_start().starts_with('['));
         assert!(json.trim_end().ends_with(']'));
+        // No annotation, no throughput fields.
+        assert!(!json.contains("edges_per_sec"));
+    }
+
+    #[test]
+    fn throughput_annotation_lands_in_json() {
+        let mut b = Bench::new()
+            .with_target(Duration::from_millis(1))
+            .with_max_iters(3);
+        b.run("annotated", || black_box(1 + 1));
+        b.annotate_throughput(1_000, 10);
+        let s = b.results().last().unwrap();
+        let t = s.throughput.expect("annotated");
+        assert!(t.edges_per_sec > 0.0);
+        assert!(t.supersteps_per_sec > 0.0);
+        assert!((t.edges_per_sec / t.supersteps_per_sec - 100.0).abs() < 1e-6);
+        let json = b.to_json();
+        assert!(json.contains("\"edges_per_sec\""));
+        assert!(json.contains("\"supersteps_per_sec\""));
     }
 }

@@ -46,13 +46,16 @@ pub fn with_random_weights(g: &Coo, rng: &mut SplitMix64) -> Coo {
 }
 
 /// The harness-default superstep lane count: `REPRO_THREADS` if set (the
-/// CI matrix runs the whole suite at 1 and 4), else 2 so a plain
-/// `cargo test` still exercises the parallel path. Tests that sweep
-/// thread counts explicitly don't use this; tests that just need "the
-/// configured parallelism" do.
+/// CI matrix runs the whole suite at 1 and 4; `0` = auto, mapped through
+/// the shared [`repro::sched::resolve_threads`] helper), else 2 so a
+/// plain `cargo test` still exercises the parallel path. Tests that
+/// sweep thread counts explicitly don't use this; tests that just need
+/// "the configured parallelism" do.
 pub fn default_threads() -> usize {
-    std::env::var("REPRO_THREADS")
-        .ok()
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(2)
+    repro::sched::resolve_threads(
+        std::env::var("REPRO_THREADS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(2),
+    )
 }

@@ -17,7 +17,7 @@ use repro::cost::CostParams;
 use repro::graph::datasets::Dataset;
 use repro::pattern::tables::ExecOrder;
 use repro::sched::executor::NativeExecutor;
-use repro::sched::RunResult;
+use repro::sched::{run_parallel_pooled, run_parallel_scoped, RunResult, WorkerPool};
 use repro::session::{JobSpec, Session};
 use repro::util::SplitMix64;
 
@@ -156,6 +156,88 @@ fn prop_parallel_determinism_under_wear_pressure() {
             ),
         }
     }
+}
+
+#[test]
+fn prop_pooled_path_bit_identical_across_pool_sizes_and_reuse() {
+    // The PR-4 acceptance property: a persistent pool must serve
+    // bit-identical results at every worker count, with zero thread
+    // spawns per superstep (worker ids stay fixed across whole runs) and
+    // across consecutive runs on the same pool — and agree with the
+    // scoped-spawn baseline it replaced.
+    for seed in 320..326u64 {
+        let g = random_graph(seed);
+        let mut rng = SplitMix64::new(seed ^ 0xB07);
+        let source = rng.next_bounded(g.num_vertices as u64) as u32;
+        let cfg = random_arch(&mut rng);
+        let acc = Accelerator::new(cfg.clone(), CostParams::default());
+        let pre = acc.preprocess(&g, false).unwrap();
+        let program = Bfs::new(source);
+        let base = acc
+            .run_threaded(&pre, &program, &mut NativeExecutor, 1)
+            .unwrap()
+            .run
+            .unwrap();
+        let scoped = run_parallel_scoped(
+            &cfg,
+            &CostParams::default(),
+            &pre.plan,
+            &program,
+            &mut NativeExecutor,
+            4,
+        )
+        .unwrap();
+        let ctx = format!("seed {seed} cfg {cfg:?}");
+        assert_bit_identical(&scoped, &base, &format!("{ctx} [scoped vs seq]"));
+        for threads in [1usize, 2, 4, 8] {
+            let mut pool = WorkerPool::new(threads);
+            let ids = pool.worker_ids();
+            for round in 0..2 {
+                let run = run_parallel_pooled(
+                    &cfg,
+                    &CostParams::default(),
+                    &pre.plan,
+                    &program,
+                    &mut NativeExecutor,
+                    &mut pool,
+                )
+                .unwrap();
+                assert_bit_identical(
+                    &run,
+                    &base,
+                    &format!("{ctx} [pool={threads} round={round}]"),
+                );
+            }
+            assert_eq!(
+                pool.worker_ids(),
+                ids,
+                "{ctx}: pooled runs must not spawn threads"
+            );
+        }
+    }
+}
+
+#[test]
+fn session_pool_spawns_once_and_joins_on_drop() {
+    // No leaked threads after Session drop, and consecutive runs reuse
+    // the same pool workers with bit-identical results.
+    let session = Session::builder().parallelism(4).build().unwrap();
+    assert!(session.pool_liveness().is_none(), "pool is lazy");
+    let spec = JobSpec::new(Dataset::Tiny, "pagerank").with_iterations(6);
+    let a = session.run(&spec).unwrap();
+    let token = session.pool_liveness().expect("pool spawned");
+    let b = session.run(&spec).unwrap();
+    assert_bit_identical(
+        &a.run.unwrap(),
+        &b.run.unwrap(),
+        "session pool reuse across consecutive runs",
+    );
+    assert!(token.upgrade().is_some(), "pool alive with the session");
+    drop(session);
+    assert!(
+        token.upgrade().is_none(),
+        "dropping the session must join every pool worker"
+    );
 }
 
 #[test]
