@@ -2,7 +2,9 @@
 //! (EXPERIMENTS.md §Perf) optimizes: plan compilation vs per-superstep
 //! interpretation (sequential vs the scoped-spawn baseline vs the
 //! persistent worker pool at threads=1/4), scheduler dispatch throughput,
-//! native executor, PJRT dispatch, partitioner, and the serving loop.
+//! native executor, PJRT dispatch, partitioner, cold preprocess vs
+//! on-disk artifact load (the `--artifact-dir` warm-start win), and the
+//! serving loop.
 //!
 //! Results are written to `BENCH_hotpath.json` at the **repo root**
 //! (anchored on `CARGO_MANIFEST_DIR`, not the invocation cwd) so the hot
@@ -26,7 +28,7 @@ use repro::graph::datasets::Dataset;
 use repro::pattern::extract::partition;
 use repro::sched::executor::{NativeExecutor, StepExecutor};
 use repro::sched::{run_parallel_pooled, run_parallel_scoped, ExecutionPlan, WorkerPool};
-use repro::session::JobSpec;
+use repro::session::{ArtifactKey, DiskStore, JobSpec};
 use repro::util::bench::{black_box, Bench};
 use repro::util::SplitMix64;
 
@@ -170,6 +172,32 @@ fn main() {
 
     // Partitioner.
     b.run("partition c=4", || black_box(partition(&g, 4, false)));
+
+    // Warm-start: full cold preprocess (dataset already in memory:
+    // partition + ranking + CT/ST + plan compile) vs deserializing the
+    // persisted artifact from the on-disk cache — the cost a restarted
+    // serve fleet pays per key with and without --artifact-dir.
+    let art_dir = std::env::temp_dir().join(format!("repro-hotpath-art-{}", std::process::id()));
+    let disk = DiskStore::open(&art_dir).unwrap();
+    disk.clear();
+    let art_key = ArtifactKey::new(dataset, 1.0, false, &arch);
+    let sc = b
+        .run("preprocess cold (Alg.1 + plan)", || {
+            black_box(acc.preprocess(&g, false).unwrap())
+        })
+        .mean;
+    assert!(disk.save(&art_key, &pre).unwrap(), "bench dir must start cold");
+    let sw = b
+        .run("artifact disk load (warm start)", || {
+            black_box(disk.load(&art_key, &arch).unwrap())
+        })
+        .mean;
+    println!(
+        "  -> warm start {:.2}x faster than cold preprocess ({} B on disk)",
+        sc.as_secs_f64() / sw.as_secs_f64(),
+        std::fs::metadata(disk.path_of(&art_key)).map(|m| m.len()).unwrap_or(0),
+    );
+    let _ = std::fs::remove_dir_all(&art_dir);
 
     // PJRT dispatch path (needs `make artifacts` + `--features pjrt`).
     #[cfg(feature = "pjrt")]

@@ -21,7 +21,7 @@ use super::config::ArchConfig;
 /// [`ExecutionPlan`], so the schedule itself is built exactly once per
 /// `(graph, architecture)` and shared by every run against this artifact
 /// (the session `ArtifactStore` caches `Preprocessed` whole).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Preprocessed {
     pub part: Partitioned,
     pub ranking: PatternRanking,

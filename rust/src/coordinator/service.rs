@@ -44,6 +44,12 @@ pub struct ServiceConfig {
     /// zero thread spawns per superstep *and* per job. Served results
     /// are bit-identical for every setting.
     pub parallelism: usize,
+    /// On-disk artifact cache directory (`None` = memory-only). A
+    /// redeployed service pointed at a warm directory deserializes its
+    /// compiled plans instead of re-running Alg. 1 — zero plan
+    /// compilations on restart, the serve-fleet warm start the on-disk
+    /// tier exists for. Pre-bake with `repro artifacts warm`.
+    pub artifact_dir: Option<std::path::PathBuf>,
 }
 
 impl Default for ServiceConfig {
@@ -54,6 +60,7 @@ impl Default for ServiceConfig {
             backend: Backend::Native,
             workers: 2,
             parallelism: 1,
+            artifact_dir: None,
         }
     }
 }
@@ -105,14 +112,17 @@ impl Service {
     /// worker threads. Fails eagerly on invalid arch or an unavailable
     /// backend (e.g. PJRT without artifacts).
     pub fn spawn(config: ServiceConfig) -> Result<Self> {
-        let session = Session::builder()
+        let mut builder = Session::builder()
             .arch(config.arch)
             .cost_params(config.params)
             .backend(config.backend)
             // `0 = auto` resolves inside `SessionBuilder::build` (the one
             // `resolve_threads` call site on this path).
-            .parallelism(config.parallelism)
-            .build()?;
+            .parallelism(config.parallelism);
+        if let Some(dir) = config.artifact_dir {
+            builder = builder.artifact_dir(dir);
+        }
+        let session = builder.build()?;
         Ok(Self::with_session(Arc::new(session), config.workers))
     }
 

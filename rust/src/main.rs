@@ -20,7 +20,7 @@ use repro::coordinator::Service;
 use repro::graph::datasets::{Dataset, ALL_DATASETS};
 use repro::graph::{Csr, GraphStats};
 use repro::report::{figures, Table};
-use repro::session::{Backend, JobSpec, Session};
+use repro::session::{Backend, DiskStore, JobSpec, Session};
 use repro::util::cli::Args;
 use repro::util::fmt;
 
@@ -37,6 +37,9 @@ USAGE:
   repro datasets
   repro serve [--jobs N] [--workers N] [--backend native|pjrt]
               [--dataset DATASET] [--scale F] [arch options]
+  repro artifacts warm <DATASET> --artifact-dir DIR [--algo NAME]
+                  [--scale F] [--assert-warm] [arch options]
+  repro artifacts ls --artifact-dir DIR
 
 Algorithms are session-registry entries (bfs sssp pagerank wcc built in;
 library users register more — no CLI change needed). `serve` submits one
@@ -44,6 +47,14 @@ mixed batch cycling through every registered algorithm and prints
 per-algorithm completion counters and queue depths on shutdown. Both
 `run` and `serve` honor --backend; a PJRT selection without artifacts
 fails loudly instead of falling back to native.
+
+Every pipeline command accepts --artifact-dir DIR: preprocessed
+artifacts — including the compiled execution plan — are serialized
+there (versioned + checksummed) and reloaded by later processes, so a
+warm start performs zero plan compilations. `artifacts warm` pre-bakes
+a directory (every registered algorithm unless --algo narrows it;
+--assert-warm exits nonzero if anything had to be compiled — the CI
+cache-reuse check), `artifacts ls` lists what a directory holds.
 
 DATASET: WG AZ SD EP PG WV TN (Table 2 presets; TN = tiny test graph)
 
@@ -80,11 +91,14 @@ fn arch_from(args: &Args) -> Result<ArchConfig> {
 /// validated `Session` out.
 fn session_from(args: &Args) -> Result<Session> {
     let backend_s: String = args.get_or("backend", "native".to_string())?;
-    Session::builder()
+    let mut builder = Session::builder()
         .arch(arch_from(args)?)
         .backend(Backend::parse(&backend_s)?)
-        .parallelism(args.get_or("threads", 1usize)?)
-        .build()
+        .parallelism(args.get_or("threads", 1usize)?);
+    if let Some(dir) = args.get_path("artifact-dir") {
+        builder = builder.artifact_dir(dir);
+    }
+    builder.build()
 }
 
 fn spec_from(args: &Args, dataset: Dataset) -> Result<JobSpec> {
@@ -114,7 +128,7 @@ fn scale_for(d: Dataset, args: &Args) -> Result<f64> {
 }
 
 fn main() -> Result<()> {
-    let args = Args::parse(std::env::args().skip(1), &["validate", "help"])?;
+    let args = Args::parse(std::env::args().skip(1), &["validate", "help", "assert-warm"])?;
     if args.flag("help") || args.positional.is_empty() {
         print!("{USAGE}");
         return Ok(());
@@ -127,6 +141,7 @@ fn main() -> Result<()> {
         "dse" => cmd_dse(&args),
         "datasets" => cmd_datasets(),
         "serve" => cmd_serve(&args),
+        "artifacts" => cmd_artifacts(&args),
         _ => {
             print!("{USAGE}");
             anyhow::bail!("unknown command {cmd:?}")
@@ -296,6 +311,98 @@ fn cmd_datasets() -> Result<()> {
     Ok(())
 }
 
+fn cmd_artifacts(args: &Args) -> Result<()> {
+    let sub = args
+        .positional
+        .get(1)
+        .map(String::as_str)
+        .ok_or_else(|| anyhow::anyhow!("missing artifacts subcommand (warm|ls)\n{USAGE}"))?;
+    match sub {
+        "warm" => cmd_artifacts_warm(args),
+        "ls" => cmd_artifacts_ls(args),
+        other => {
+            print!("{USAGE}");
+            anyhow::bail!("unknown artifacts subcommand {other:?} (warm|ls)")
+        }
+    }
+}
+
+/// Pre-bake the on-disk artifact cache: preprocess (and persist) every
+/// registered algorithm's key for the dataset, then report the cache
+/// counters. With `--assert-warm`, exit nonzero unless the whole pass
+/// performed zero plan compilations — the CI cache-reuse check.
+fn cmd_artifacts_warm(args: &Args) -> Result<()> {
+    let name = args
+        .positional
+        .get(2)
+        .ok_or_else(|| anyhow::anyhow!("missing <DATASET>\n{USAGE}"))?;
+    let d = parse_dataset(name)?;
+    let dir = args.require_path("artifact-dir")?;
+    let session = session_from(args)?; // consumes --artifact-dir
+    let scale = scale_for(d, args)?;
+    let algos: Vec<String> = match args.get("algo") {
+        Some(a) => vec![a.to_string()],
+        None => session.registry().ids().map(|id| id.as_str().to_string()).collect(),
+    };
+    for algo in &algos {
+        let spec = JobSpec::new(d, algo.as_str()).with_scale(scale);
+        let pre = session.preprocess(&spec)?;
+        println!(
+            "  {algo:>9}: {} plan ops, {} patterns, static coverage {:.1}%",
+            pre.plan.num_ops(),
+            pre.ranking.num_patterns(),
+            pre.static_coverage() * 100.0
+        );
+    }
+    let s = session.artifacts().stats();
+    println!(
+        "artifact cache {}: {} compiles, {} disk hits, {} disk misses, {} writes, {} resident",
+        dir.display(),
+        s.misses,
+        s.disk_hits,
+        s.disk_misses,
+        s.writes,
+        s.entries
+    );
+    if args.flag("assert-warm") {
+        anyhow::ensure!(
+            s.misses == 0 && s.disk_hits > 0,
+            "--assert-warm: cache was cold ({} compiles, {} disk hits) — pre-bake {} first",
+            s.misses,
+            s.disk_hits,
+            dir.display()
+        );
+        println!("warm: zero plan compilations — every plan loaded from disk");
+    }
+    Ok(())
+}
+
+/// List a directory's serialized artifacts (version, key, size).
+fn cmd_artifacts_ls(args: &Args) -> Result<()> {
+    let dir = args.require_path("artifact-dir")?;
+    // Inspection must not mutate: a typo'd path should error, not be
+    // silently created and reported as an empty (cold) cache.
+    anyhow::ensure!(
+        dir.is_dir(),
+        "no such artifact directory: {} (artifacts ls never creates one)",
+        dir.display()
+    );
+    let store = DiskStore::open(&dir)?;
+    let entries = store.entries();
+    for p in &entries {
+        let file = p
+            .file_name()
+            .map(|n| n.to_string_lossy().into_owned())
+            .unwrap_or_else(|| p.display().to_string());
+        match DiskStore::describe(p) {
+            Ok(line) => println!("{file}  {line}"),
+            Err(e) => println!("{file}  UNREADABLE: {e}"),
+        }
+    }
+    println!("{} artifact(s) in {}", entries.len(), dir.display());
+    Ok(())
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     let jobs: usize = args.get_or("jobs", 16usize)?;
     let workers: usize = args.get_or("workers", 2usize)?;
@@ -338,8 +445,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         fmt::count(s.subgraph_ops)
     );
     println!(
-        "artifact cache: {} preprocessing runs, {} hits, {} entries",
-        cache.misses, cache.hits, cache.entries
+        "artifact cache: {} preprocessing runs, {} hits, {} disk hits, {} disk writes, {} entries",
+        cache.misses, cache.hits, cache.disk_hits, cache.writes, cache.entries
     );
     for (algo, st) in &s.per_algorithm {
         println!(

@@ -34,7 +34,7 @@ impl Subgraph {
 /// Partitioning result: subgraphs (sorted row-major by (brow, bcol)) plus
 /// optional per-subgraph edge weights (aligned with `Pattern::cells`
 /// order) for weighted algorithms.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Partitioned {
     pub c: usize,
     pub num_vertices: u32,

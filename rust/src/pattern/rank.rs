@@ -10,7 +10,7 @@ use super::extract::Partitioned;
 use super::pattern::Pattern;
 
 /// Frequency-ranked patterns of a partitioned graph.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct PatternRanking {
     /// `(pattern, occurrences)` sorted by descending occurrence count,
     /// ties broken by pattern value for determinism.

@@ -40,8 +40,27 @@ pub enum StaticAssignment {
     Balanced,
 }
 
+impl StaticAssignment {
+    /// Stable wire code for the on-disk artifact format
+    /// (`session::store`) — variant order must never be relied on.
+    pub(crate) fn to_code(self) -> u8 {
+        match self {
+            StaticAssignment::TopK => 0,
+            StaticAssignment::Balanced => 1,
+        }
+    }
+
+    pub(crate) fn from_code(code: u8) -> Option<Self> {
+        match code {
+            0 => Some(StaticAssignment::TopK),
+            1 => Some(StaticAssignment::Balanced),
+            _ => None,
+        }
+    }
+}
+
 /// Configuration-table entry for one pattern.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct CtEntry {
     pub pattern: Pattern,
     pub occurrences: u32,
@@ -61,7 +80,7 @@ impl CtEntry {
 }
 
 /// Configuration table: rank-ordered patterns with static assignments.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct ConfigTable {
     pub entries: Vec<CtEntry>,
     index: HashMap<Pattern, u32>,
@@ -138,6 +157,23 @@ impl ConfigTable {
             crossbars_per_engine: m,
             assignment,
         }
+    }
+
+    /// Reassemble a table from decoded parts (`session::store`): the
+    /// pattern index is derived state and is rebuilt here rather than
+    /// persisted, so a loaded table can never carry an inconsistent one.
+    pub(crate) fn from_parts(
+        entries: Vec<CtEntry>,
+        num_static_engines: u32,
+        crossbars_per_engine: u32,
+        assignment: StaticAssignment,
+    ) -> Self {
+        let index = entries
+            .iter()
+            .enumerate()
+            .map(|(i, e)| (e.pattern, i as u32))
+            .collect();
+        Self { entries, index, num_static_engines, crossbars_per_engine, assignment }
     }
 
     pub fn len(&self) -> usize {
@@ -275,7 +311,7 @@ fn apportion_balanced(
 }
 
 /// Subgraph-table entry: compressed per-subgraph record.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct StEntry {
     /// Index into `Partitioned::subgraphs` (vertex data + weights live there).
     pub sg_idx: u32,
@@ -297,10 +333,29 @@ pub enum ExecOrder {
     RowMajor,
 }
 
+impl ExecOrder {
+    /// Stable wire code for the on-disk artifact format
+    /// (`session::store`) — variant order must never be relied on.
+    pub(crate) fn to_code(self) -> u8 {
+        match self {
+            ExecOrder::ColumnMajor => 0,
+            ExecOrder::RowMajor => 1,
+        }
+    }
+
+    pub(crate) fn from_code(code: u8) -> Option<Self> {
+        match code {
+            0 => Some(ExecOrder::ColumnMajor),
+            1 => Some(ExecOrder::RowMajor),
+            _ => None,
+        }
+    }
+}
+
 /// Subgraph table in execution order, with group boundaries: each group
 /// shares the same destination (column-major) or source (row-major)
 /// block — the "batch of subgraphs with same dest. vertices" of Alg. 2.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct SubgraphTable {
     pub order: ExecOrder,
     pub entries: Vec<StEntry>,

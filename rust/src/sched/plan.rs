@@ -44,11 +44,12 @@ use crate::accel::config::ArchConfig;
 use crate::pattern::extract::Partitioned;
 use crate::pattern::tables::{ConfigTable, EngineSlot, ExecOrder, StaticAssignment, SubgraphTable};
 use crate::pattern::Pattern;
+use crate::util::codec::{CodecError, Reader, Writer};
 
 /// One compiled per-op record: Algorithm 2's per-subgraph decisions
 /// resolved to indices. Laid out contiguously in execution order,
 /// grouped exactly like the subgraph table's destination (source) groups.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct PlanOp {
     /// Index into `Partitioned::subgraphs` (stable subgraph identity).
     pub sg_idx: u32,
@@ -88,7 +89,7 @@ impl PlanOp {
 }
 
 /// The compiled schedule for one `(graph, architecture)` pair.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct ExecutionPlan {
     /// Crossbar size C the plan was compiled for.
     pub c: usize,
@@ -550,6 +551,247 @@ impl ExecutionPlan {
     pub fn batch<'a>(&'a self, op_ids: &'a [u32]) -> StepBatch<'a> {
         StepBatch { plan: self, op_ids }
     }
+
+    /// Serialize the plan into the on-disk artifact format
+    /// (`session::store`): explicit little-endian framing of the op
+    /// records, groups, slot pool, static config, interned pattern
+    /// table, executor operands and out-degrees. The lane and gather
+    /// tables are **not** persisted — they are pure functions of the op
+    /// records and are rebuilt by [`decode_from`](Self::decode_from)
+    /// (derived state is never trusted from a file), so a decoded plan
+    /// is still field-for-field equal to the encoded one and
+    /// bit-identical in behaviour under every execution mechanism.
+    pub(crate) fn encode_into(&self, w: &mut Writer) {
+        w.put_u32(self.c as u32);
+        w.put_u32(self.num_vertices);
+        w.put_u32(self.num_blocks);
+        w.put_u8(self.weighted as u8);
+        w.put_u32(self.num_patterns);
+        w.put_u32(self.static_engines);
+        w.put_u32(self.total_engines);
+        w.put_u32(self.crossbars_per_engine);
+        w.put_u8(self.order.to_code());
+        w.put_u8(self.static_assignment.to_code());
+        w.put_u64(self.ops.len() as u64);
+        for op in &self.ops {
+            w.put_u32(op.sg_idx);
+            w.put_u32(op.src_start);
+            w.put_u32(op.dst_start);
+            w.put_u32(op.src_block);
+            w.put_u32(op.pattern_rank);
+            w.put_u32(op.rows);
+            w.put_u32(op.read_rows);
+            w.put_u32(op.slot_start);
+            w.put_u32(op.slot_len);
+        }
+        w.put_u32s(&self.groups);
+        w.put_u64(self.slot_pool.len() as u64);
+        for s in &self.slot_pool {
+            w.put_u32(s.engine);
+            w.put_u32(s.crossbar);
+        }
+        w.put_u64(self.static_config.len() as u64);
+        for (slot, pattern) in &self.static_config {
+            w.put_u32(slot.engine);
+            w.put_u32(slot.crossbar);
+            w.put_u64(pattern.0);
+        }
+        w.put_u64(self.rank_pattern.len() as u64);
+        for p in &self.rank_pattern {
+            w.put_u64(p.0);
+        }
+        w.put_u64s(&self.op_bits);
+        w.put_u32s(&self.weight_off);
+        w.put_f32s(&self.weights);
+        w.put_u32s(&self.out_degrees);
+    }
+
+    /// Decode a plan and validate every cross-section invariant the
+    /// interpreter and executors index by, so a logically-inconsistent
+    /// file (wrong schema, hand-edited bytes that still checksum) yields
+    /// a typed error here instead of a panic in the superstep hot loop.
+    pub(crate) fn decode_from(r: &mut Reader<'_>) -> Result<Self, CodecError> {
+        let c = r.u32()? as usize;
+        // Checked before anything derives from it (table capacities,
+        // gather spans): C bounds every per-op shape.
+        if !(1..=crate::pattern::pattern::MAX_C).contains(&c) {
+            return Err(CodecError::Invalid("crossbar size out of range"));
+        }
+        let num_vertices = r.u32()?;
+        let num_blocks = r.u32()?;
+        let weighted = r.u8()? != 0;
+        let num_patterns = r.u32()?;
+        let static_engines = r.u32()?;
+        let total_engines = r.u32()?;
+        let crossbars_per_engine = r.u32()?;
+        let order = ExecOrder::from_code(r.u8()?)
+            .ok_or(CodecError::Invalid("unknown execution-order code"))?;
+        let static_assignment = StaticAssignment::from_code(r.u8()?)
+            .ok_or(CodecError::Invalid("unknown static-assignment code"))?;
+        let n_ops = r.prefixed_count(36)?;
+        let mut ops = Vec::with_capacity(n_ops);
+        for _ in 0..n_ops {
+            ops.push(PlanOp {
+                sg_idx: r.u32()?,
+                src_start: r.u32()?,
+                dst_start: r.u32()?,
+                src_block: r.u32()?,
+                pattern_rank: r.u32()?,
+                rows: r.u32()?,
+                read_rows: r.u32()?,
+                slot_start: r.u32()?,
+                slot_len: r.u32()?,
+            });
+        }
+        let groups = r.u32s()?;
+        let n_slots = r.prefixed_count(8)?;
+        let mut slot_pool = Vec::with_capacity(n_slots);
+        for _ in 0..n_slots {
+            slot_pool.push(EngineSlot { engine: r.u32()?, crossbar: r.u32()? });
+        }
+        // Engine counts size per-engine vectors eagerly (the lane table
+        // below, the scheduler's engine array at run time). No real
+        // architecture is within orders of magnitude of this cap; a
+        // corrupt count must not become a multi-GiB allocation.
+        const MAX_DECODE_ENGINES: u32 = 1 << 20;
+        if total_engines > MAX_DECODE_ENGINES {
+            return Err(CodecError::Invalid("engine count implausibly large"));
+        }
+        // The lane and gather tables are derived state: never trusted
+        // from the file, always rebuilt from the decoded op records (the
+        // same rule the pattern-table hash indices follow). The builders
+        // index the slot pool and per-engine vectors, so their inputs
+        // are bounds-checked first.
+        for op in &ops {
+            if (op.slot_start as usize + op.slot_len as usize) > slot_pool.len() {
+                return Err(CodecError::Invalid("op slot range out of pool"));
+            }
+        }
+        if !slot_pool
+            .iter()
+            .all(|s| s.engine < total_engines && s.crossbar < crossbars_per_engine.max(1))
+        {
+            return Err(CodecError::Invalid("engine slot out of the plan's geometry"));
+        }
+        let lanes = LaneTable::build(&ops, &slot_pool, total_engines);
+        let gather = GatherTable::build(&ops, c, num_vertices);
+        let n_cfg = r.prefixed_count(16)?;
+        let mut static_config = Vec::with_capacity(n_cfg);
+        for _ in 0..n_cfg {
+            static_config.push((
+                EngineSlot { engine: r.u32()?, crossbar: r.u32()? },
+                Pattern(r.u64()?),
+            ));
+        }
+        let rank_pattern: Vec<Pattern> = r.u64s()?.into_iter().map(Pattern).collect();
+        let op_bits = r.u64s()?;
+        let weight_off = r.u32s()?;
+        let weights = r.f32s()?;
+        let out_degrees = r.u32s()?;
+
+        let plan = Self {
+            c,
+            num_vertices,
+            num_blocks,
+            weighted,
+            num_patterns,
+            static_engines,
+            total_engines,
+            crossbars_per_engine,
+            order,
+            static_assignment,
+            ops,
+            groups,
+            slot_pool,
+            lanes,
+            gather,
+            static_config,
+            rank_pattern,
+            op_bits,
+            weight_off,
+            weights,
+            out_degrees,
+        };
+        plan.validate_decoded()?;
+        Ok(plan)
+    }
+
+    /// Structural invariants every interpreter/executor access relies on
+    /// beyond what [`decode_from`](Self::decode_from) already checked
+    /// before rebuilding the derived tables (crossbar size, slot ranges,
+    /// slot-pool geometry).
+    fn validate_decoded(&self) -> Result<(), CodecError> {
+        let n = self.ops.len();
+        // The frontier bitmap is num_blocks long and reduce/apply indexes
+        // `bitmap[v / c]` for every vertex without a hot-loop bounds test.
+        if self.num_blocks != self.num_vertices.div_ceil(self.c as u32) {
+            return Err(CodecError::Invalid("block count inconsistent with vertices"));
+        }
+        if self.groups.first() != Some(&0)
+            || self.groups.last().copied() != Some(n as u32)
+            || self.groups.windows(2).any(|w| w[0] > w[1])
+        {
+            return Err(CodecError::Invalid("group bounds not a monotone cover of ops"));
+        }
+        if self.rank_pattern.len() as u32 != self.num_patterns {
+            return Err(CodecError::Invalid("pattern table length != num_patterns"));
+        }
+        if self.op_bits.len() != n {
+            return Err(CodecError::Invalid("per-op section lengths diverge"));
+        }
+        if self.weighted {
+            if self.weight_off.len() != n + 1
+                || self.weight_off.first().copied().unwrap_or(1) != 0
+                || self.weight_off.last().copied().unwrap_or(1) as usize != self.weights.len()
+                || self.weight_off.windows(2).any(|w| w[0] > w[1])
+            {
+                return Err(CodecError::Invalid("weight offsets inconsistent with ops"));
+            }
+        } else if !self.weight_off.is_empty() || !self.weights.is_empty() {
+            return Err(CodecError::Invalid("unweighted plan carries weight data"));
+        }
+        let cells = self.c * self.c;
+        for (k, op) in self.ops.iter().enumerate() {
+            if op.pattern_rank >= self.num_patterns {
+                return Err(CodecError::Invalid("op pattern rank out of table"));
+            }
+            if op.src_block >= self.num_blocks {
+                return Err(CodecError::Invalid("op source block out of bitmap"));
+            }
+            // Executors index `x[bit / c]` / `out[bit]` straight off the
+            // packed bits; a bit beyond the C×C window is a panic, not
+            // an edge. (C ≤ 8 was checked at decode, so cells ≤ 64.)
+            if cells < 64 && self.op_bits[k] >> cells != 0 {
+                return Err(CodecError::Invalid("op bits outside the C×C window"));
+            }
+            // The weighted kernel walks one weight per set bit.
+            if self.weighted
+                && self.weight_off[k + 1] - self.weight_off[k] != self.op_bits[k].count_ones()
+            {
+                return Err(CodecError::Invalid("op weight span != pattern edge count"));
+            }
+        }
+        // Static-config slots feed `engines[e].configure(m, ..)` at init.
+        let slot_ok = |s: &EngineSlot| {
+            s.engine < self.total_engines && s.crossbar < self.crossbars_per_engine.max(1)
+        };
+        if !self.static_config.iter().all(|(s, _)| slot_ok(s)) {
+            return Err(CodecError::Invalid("static config slot out of the plan's geometry"));
+        }
+        // Patterns from both tables are programmed into C×C crossbars
+        // (`Crossbar::configure` walks set bits into a cells-long wear
+        // vector with only a debug_assert) — same window rule as op_bits.
+        if cells < 64
+            && (self.rank_pattern.iter().any(|p| p.0 >> cells != 0)
+                || self.static_config.iter().any(|(_, p)| p.0 >> cells != 0))
+        {
+            return Err(CodecError::Invalid("table pattern outside the C×C window"));
+        }
+        if self.out_degrees.len() != self.num_vertices as usize {
+            return Err(CodecError::Invalid("out-degree table length != num_vertices"));
+        }
+        Ok(())
+    }
 }
 
 /// Out-degree per vertex, reconstructed from the partitioning (the ST is
@@ -870,6 +1112,41 @@ mod tests {
             ..arch.clone()
         };
         assert!(!plan.matches(&other_assign), "assignment shapes the slot section");
+    }
+
+    #[test]
+    fn encode_decode_is_field_identical() {
+        for weighted in [false, true] {
+            let (part, ct, st, arch) = setup(weighted);
+            let plan = ExecutionPlan::build(&part, &ct, &st, &arch);
+            let mut w = Writer::new();
+            plan.encode_into(&mut w);
+            let bytes = w.into_bytes();
+            let mut r = Reader::new(&bytes);
+            let decoded = ExecutionPlan::decode_from(&mut r).unwrap();
+            r.done().unwrap();
+            assert_eq!(plan, decoded, "weighted={weighted}");
+            assert!(decoded.matches(&arch));
+        }
+    }
+
+    #[test]
+    fn decode_rejects_inconsistent_sections() {
+        let (part, ct, st, arch) = setup(false);
+        let mut plan = ExecutionPlan::build(&part, &ct, &st, &arch);
+        // Point an op past the slot pool: still well-framed bytes, but an
+        // index the interpreter would chase — must be a typed error.
+        plan.ops[0].slot_start = plan.slot_pool.len() as u32;
+        plan.ops[0].slot_len = 2;
+        let mut w = Writer::new();
+        plan.encode_into(&mut w);
+        let bytes = w.into_bytes();
+        let err = ExecutionPlan::decode_from(&mut Reader::new(&bytes)).unwrap_err();
+        assert!(matches!(err, CodecError::Invalid(_)), "{err}");
+        // Truncation anywhere is typed too, never a panic.
+        for cut in [0, 1, bytes.len() / 2, bytes.len() - 1] {
+            assert!(ExecutionPlan::decode_from(&mut Reader::new(&bytes[..cut])).is_err());
+        }
     }
 
     #[test]

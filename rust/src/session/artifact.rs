@@ -15,6 +15,16 @@
 //! Exactly-once semantics per key: concurrent requesters of the *same*
 //! key block on a per-key slot while the first one preprocesses;
 //! different keys build in parallel.
+//!
+//! **Two-tier**: a store built with [`ArtifactStore::with_dir`] backs the
+//! in-memory `Arc` map with an on-disk [`DiskStore`](super::DiskStore) of
+//! serialized artifacts. Lookup order is memory → disk → recompute; a
+//! disk hit deserializes the compiled plan instead of rebuilding it
+//! (zero plan compilations on a warm start), a recompute persists its
+//! result for the next process. Any disk-tier failure — truncation, bit
+//! rot, version or architecture mismatch — is a typed
+//! [`StoreError`](super::StoreError) handled by falling back to
+//! recompute; a corrupt file is deleted and rewritten, never served.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -25,6 +35,9 @@ use anyhow::Result;
 use crate::accel::{Accelerator, ArchConfig, Preprocessed};
 use crate::graph::datasets::Dataset;
 use crate::pattern::tables::{ExecOrder, StaticAssignment};
+use crate::util::codec::{CodecError, Reader, Writer};
+
+use super::store::{DiskStore, StoreError};
 
 /// The architecture parameters an Alg.-1 output depends on: partition
 /// (crossbar size), config table (engine counts, assignment), subgraph
@@ -75,6 +88,68 @@ impl ArtifactKey {
     pub fn scale(&self) -> f64 {
         self.scale_micro as f64 * 1e-6
     }
+
+    /// Serialize the full key — dataset identity, fixed-point scale,
+    /// weighted flag, and every arch-signature field — into the on-disk
+    /// artifact header (`session::store`). The stored bytes are compared
+    /// against the requested key on load, so an `ArchConfig` mismatch is
+    /// a typed error even behind a colliding or copied filename.
+    pub(crate) fn encode_into(&self, w: &mut Writer) {
+        w.put_str(self.dataset.spec().short);
+        w.put_u64(self.scale_micro);
+        w.put_u8(self.weighted as u8);
+        w.put_u32(self.arch.crossbar_size as u32);
+        w.put_u32(self.arch.total_engines);
+        w.put_u32(self.arch.static_engines);
+        w.put_u32(self.arch.crossbars_per_engine);
+        w.put_u8(self.arch.order.to_code());
+        w.put_u8(self.arch.static_assignment.to_code());
+    }
+
+    pub(crate) fn decode_from(r: &mut Reader<'_>) -> Result<Self, CodecError> {
+        let short = r.str()?;
+        let dataset = Dataset::from_short(&short)
+            .ok_or(CodecError::Invalid("unknown dataset short name"))?;
+        let scale_micro = r.u64()?;
+        let weighted = r.u8()? != 0;
+        let arch = ArchSig {
+            crossbar_size: r.u32()? as usize,
+            total_engines: r.u32()?,
+            static_engines: r.u32()?,
+            crossbars_per_engine: r.u32()?,
+            order: ExecOrder::from_code(r.u8()?)
+                .ok_or(CodecError::Invalid("unknown execution-order code"))?,
+            static_assignment: StaticAssignment::from_code(r.u8()?)
+                .ok_or(CodecError::Invalid("unknown static-assignment code"))?,
+        };
+        Ok(Self { dataset, scale_micro, weighted, arch })
+    }
+
+    /// Stable 64-bit content address over the encoded key bytes — the
+    /// on-disk filename component. Deliberately *not* `std::hash::Hash`
+    /// (whose layout is an implementation detail): this value is part of
+    /// the persistent format.
+    pub fn fingerprint(&self) -> u64 {
+        let mut w = Writer::new();
+        self.encode_into(&mut w);
+        crate::util::codec::fnv1a64(w.as_bytes())
+    }
+
+    /// One-line human-readable identity (the `repro artifacts ls` view).
+    pub fn summary(&self) -> String {
+        format!(
+            "{} scale {:.3} {} | C={} T={} N={} M={} {:?} {:?}",
+            self.dataset.spec().short,
+            self.scale(),
+            if self.weighted { "weighted" } else { "unweighted" },
+            self.arch.crossbar_size,
+            self.arch.total_engines,
+            self.arch.static_engines,
+            self.arch.crossbars_per_engine,
+            self.arch.order,
+            self.arch.static_assignment,
+        )
+    }
 }
 
 #[derive(Debug, Default)]
@@ -82,32 +157,75 @@ struct Slot {
     pre: Mutex<Option<Arc<Preprocessed>>>,
 }
 
-/// Counters for cache behaviour (`misses` == preprocessing runs).
+/// Counters for cache behaviour (`misses` == preprocessing runs — a
+/// disk hit is *not* a miss, because nothing was compiled).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ArtifactStats {
+    /// In-memory hits (the artifact `Arc` was already resident).
     pub hits: u64,
+    /// Full misses: Alg. 1 + plan compilation actually ran. On a
+    /// two-tier store this stays 0 for every key already on disk — the
+    /// warm-start acceptance criterion.
     pub misses: u64,
     pub entries: usize,
     /// Requests that found their key's build already in flight (or its
     /// slot otherwise contended) and blocked for the shared result
-    /// instead of starting a second preprocess. Always `<= hits + misses`;
-    /// under an N-thread stampede on one cold key, up to N−1 requests
-    /// coalesce behind the single builder.
+    /// instead of starting a second preprocess. Always `<= hits + misses
+    /// + disk_hits`; under an N-thread stampede on one cold key, up to
+    /// N−1 requests coalesce behind the single builder.
     pub coalesced: u64,
+    /// Memory misses satisfied by deserializing an on-disk artifact
+    /// (no recompute). Always 0 on a memory-only store.
+    pub disk_hits: u64,
+    /// Memory misses that probed the disk tier and found nothing usable
+    /// (absent, stale, or corrupt file) and fell through to recompute.
+    pub disk_misses: u64,
+    /// Artifacts this store persisted to disk (another store winning the
+    /// publish race does not count — writes are exactly-once per key
+    /// across every store sharing the directory on any filesystem with
+    /// hard links; on the rare mount without them, racing writers of
+    /// identical bytes may each count one — see [`DiskStore::save`]).
+    pub writes: u64,
 }
 
-/// Concurrent map from [`ArtifactKey`] to preprocessed artifacts.
+/// Concurrent map from [`ArtifactKey`] to preprocessed artifacts,
+/// optionally backed by an on-disk [`DiskStore`] tier.
 #[derive(Debug, Default)]
 pub struct ArtifactStore {
     slots: Mutex<HashMap<ArtifactKey, Arc<Slot>>>,
+    /// Persistent tier; `None` = memory-only (the historical behaviour).
+    disk: Option<DiskStore>,
+    /// Bumped by [`clear`](Self::clear) *before* it starts deleting, so
+    /// an in-flight recompute (whose disk publish runs outside the slot
+    /// lock) can tell its artifact was cleared out from under it and
+    /// must not re-persist it.
+    clear_gen: AtomicU64,
     hits: AtomicU64,
     misses: AtomicU64,
     coalesced: AtomicU64,
+    disk_hits: AtomicU64,
+    disk_misses: AtomicU64,
+    writes: AtomicU64,
 }
 
 impl ArtifactStore {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// A two-tier store over `dir` (created if needed): memory misses
+    /// probe the directory for a serialized artifact before recomputing,
+    /// and recomputes persist their result. Any number of stores — in
+    /// this process or others — may share one directory; on-disk writes
+    /// are exactly-once per key across all of them.
+    pub fn with_dir(dir: impl Into<std::path::PathBuf>) -> Result<Self> {
+        let disk = DiskStore::open(dir)?;
+        Ok(Self { disk: Some(disk), ..Self::default() })
+    }
+
+    /// The on-disk tier's directory, if this store has one.
+    pub fn disk_dir(&self) -> Option<&std::path::Path> {
+        self.disk.as_ref().map(|d| d.dir())
     }
 
     /// Return the cached artifact for `key`, or load the dataset and run
@@ -162,7 +280,35 @@ impl ArtifactStore {
             self.hits.fetch_add(1, Ordering::Relaxed);
             return Ok(Arc::clone(p));
         }
+        // Disk tier: a serialized artifact skips the dataset load, Alg. 1
+        // *and* plan compilation. Every failure mode is typed and falls
+        // through to recompute — a corrupt file is removed (and rewritten
+        // below), never served.
+        if let Some(disk) = &self.disk {
+            match disk.load(&key, &acc.config) {
+                Ok(pre) => {
+                    self.disk_hits.fetch_add(1, Ordering::Relaxed);
+                    let p = Arc::new(pre);
+                    *cell = Some(Arc::clone(&p));
+                    return Ok(p);
+                }
+                // Nothing there, or a *transient* I/O failure (fd
+                // exhaustion, momentary permissions): recompute, but
+                // leave the file alone — it may be perfectly valid.
+                Err(StoreError::Missing) | Err(StoreError::Io(_)) => {
+                    self.disk_misses.fetch_add(1, Ordering::Relaxed);
+                }
+                // Structurally bad for this binary and this key
+                // (corrupt, stale version, foreign key): delete so the
+                // recompute below can republish a good file.
+                Err(_) => {
+                    self.disk_misses.fetch_add(1, Ordering::Relaxed);
+                    disk.remove(&key);
+                }
+            }
+        }
         self.misses.fetch_add(1, Ordering::Relaxed);
+        let generation = self.clear_gen.load(Ordering::Acquire);
         let loaded;
         let g = match graph {
             Some(g) => g,
@@ -177,6 +323,30 @@ impl ArtifactStore {
         };
         let p = Arc::new(acc.preprocess(g, key.weighted)?);
         *cell = Some(Arc::clone(&p));
+        // Release the per-key slot before serializing to disk: coalesced
+        // waiters only need the in-memory Arc, which is ready now — they
+        // must not stall behind a multi-MB file write. The on-disk
+        // publish is exactly-once on its own (temp-file + hard-link), so
+        // it needs no lock.
+        drop(cell);
+        if let Some(disk) = &self.disk {
+            // Persist for the next process. A lost publish race or an
+            // unwritable directory degrades to memory-only caching — the
+            // job itself must not fail on it. If `clear()` ran at any
+            // point since this build started (checked again *after* the
+            // publish, so a clear overlapping the file write is caught
+            // too), honor it: un-publish rather than resurrect an
+            // artifact the caller just wiped.
+            if self.clear_gen.load(Ordering::Acquire) == generation {
+                if let Ok(true) = disk.save(&key, &p) {
+                    if self.clear_gen.load(Ordering::Acquire) == generation {
+                        self.writes.fetch_add(1, Ordering::Relaxed);
+                    } else {
+                        disk.remove(&key);
+                    }
+                }
+            }
+        }
         Ok(p)
     }
 
@@ -198,12 +368,24 @@ impl ArtifactStore {
             misses: self.misses.load(Ordering::Relaxed),
             entries,
             coalesced: self.coalesced.load(Ordering::Relaxed),
+            disk_hits: self.disk_hits.load(Ordering::Relaxed),
+            disk_misses: self.disk_misses.load(Ordering::Relaxed),
+            writes: self.writes.load(Ordering::Relaxed),
         }
     }
 
-    /// Drop every cached artifact (counters keep accumulating).
+    /// Drop every cached artifact — **both tiers**: the in-memory map
+    /// and, on a two-tier store, every artifact file in the directory
+    /// (including orphans from older format versions). Counters keep
+    /// accumulating.
     pub fn clear(&self) {
+        // Before deleting anything: any recompute still in flight must
+        // see the bump and refrain from re-persisting its artifact.
+        self.clear_gen.fetch_add(1, Ordering::AcqRel);
         self.slots.lock().unwrap().clear();
+        if let Some(disk) = &self.disk {
+            disk.clear();
+        }
     }
 }
 
@@ -255,6 +437,59 @@ mod tests {
         store.get_or_preprocess(key(1.0, true), &acc).unwrap();
         let s = store.stats();
         assert_eq!((s.hits, s.misses, s.entries), (0, 3, 3));
+    }
+
+    #[test]
+    fn fingerprint_is_stable_and_key_sensitive() {
+        let a = key(1.0, false);
+        assert_eq!(a.fingerprint(), key(1.0, false).fingerprint());
+        assert_ne!(a.fingerprint(), key(0.5, false).fingerprint());
+        assert_ne!(a.fingerprint(), key(1.0, true).fingerprint());
+        let arch8 = ArchConfig { crossbar_size: 8, ..ArchConfig::default() };
+        assert_ne!(
+            a.fingerprint(),
+            ArtifactKey::new(Dataset::Tiny, 1.0, false, &arch8).fingerprint()
+        );
+    }
+
+    #[test]
+    fn key_encoding_roundtrips() {
+        let arch = ArchConfig { static_engines: 3, ..ArchConfig::default() };
+        let k = ArtifactKey::new(Dataset::WikiVote, 0.25, true, &arch);
+        let mut w = Writer::new();
+        k.encode_into(&mut w);
+        let bytes = w.into_bytes();
+        let got = ArtifactKey::decode_from(&mut Reader::new(&bytes)).unwrap();
+        assert_eq!(k, got);
+    }
+
+    #[test]
+    fn two_tier_store_round_trips_through_disk() {
+        let dir =
+            std::env::temp_dir().join(format!("repro-artifact-two-tier-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let acc = Accelerator::with_defaults();
+        let k = key(1.0, false);
+
+        let first = ArtifactStore::with_dir(&dir).unwrap();
+        let a = first.get_or_preprocess(k, &acc).unwrap();
+        let s = first.stats();
+        assert_eq!((s.misses, s.disk_hits, s.disk_misses, s.writes), (1, 0, 1, 1));
+
+        // A fresh store over the same directory warm-starts: zero
+        // compilations, one disk hit, and the identical artifact.
+        let second = ArtifactStore::with_dir(&dir).unwrap();
+        let b = second.get_or_preprocess(k, &acc).unwrap();
+        let s = second.stats();
+        assert_eq!((s.misses, s.disk_hits, s.writes), (0, 1, 0));
+        assert_eq!(*a, *b);
+
+        // clear() empties both tiers: the next fresh store recomputes.
+        second.clear();
+        let third = ArtifactStore::with_dir(&dir).unwrap();
+        third.get_or_preprocess(k, &acc).unwrap();
+        assert_eq!(third.stats().misses, 1);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

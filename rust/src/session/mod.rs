@@ -14,6 +14,24 @@
 //!   `(dataset, scale, weighted, arch)` key no matter how many callers
 //!   or worker threads submit jobs.
 //!
+//! # The two-tier artifact cache
+//!
+//! The [`ArtifactStore`] is **two-tier** when the session is built with
+//! [`SessionBuilder::artifact_dir`] (CLI `--artifact-dir`): tier 1 is the
+//! in-memory `Arc` map (exactly-once compilation per key per process),
+//! tier 2 an on-disk directory of versioned, checksummed serialized
+//! [`Preprocessed`] artifacts ([`DiskStore`]) — partitioning, pattern
+//! tables, *and the compiled `ExecutionPlan`*. Lookup is memory → disk →
+//! recompute(+persist), so a restarted process (e.g. a redeployed serve
+//! fleet) warm-starts with **zero plan compilations** for every key it
+//! has seen before, the software analogue of the paper's
+//! write-once-then-reuse static crossbars. Loaded plans are
+//! byte-validated and bit-identical in behaviour to freshly compiled
+//! ones (locked down by `rust/tests/artifact_io.rs`); any stale, corrupt
+//! or mismatched file is a typed [`StoreError`] that falls back to
+//! recompute. Pre-bake and inspect directories with the
+//! `repro artifacts warm|ls` subcommands.
+//!
 //! # Example
 //!
 //! ```no_run
@@ -35,9 +53,11 @@
 
 mod artifact;
 mod job;
+mod store;
 
 pub use artifact::{ArtifactKey, ArtifactStats, ArtifactStore};
 pub use job::JobSpec;
+pub use store::{DiskStore, StoreError, FORMAT_VERSION, SCHEMA_VERSION};
 
 pub use crate::algo::registry::{AlgoParams, AlgorithmId, AlgorithmRegistry, BoxedProgram};
 
@@ -127,6 +147,7 @@ pub struct SessionBuilder {
     backend: Backend,
     registry: Option<AlgorithmRegistry>,
     artifacts: Option<Arc<ArtifactStore>>,
+    artifact_dir: Option<PathBuf>,
     parallelism: usize,
 }
 
@@ -138,6 +159,7 @@ impl Default for SessionBuilder {
             backend: Backend::Native,
             registry: None,
             artifacts: None,
+            artifact_dir: None,
             parallelism: 1,
         }
     }
@@ -172,8 +194,22 @@ impl SessionBuilder {
     /// Share an existing artifact store across sessions instead of
     /// starting one fresh. Safe across differing architectures: the
     /// cache key includes the preprocessing-relevant arch parameters.
+    /// Mutually exclusive with [`artifact_dir`](Self::artifact_dir) —
+    /// give the shared store its own directory instead.
     pub fn artifacts(mut self, store: Arc<ArtifactStore>) -> Self {
         self.artifacts = Some(store);
+        self
+    }
+
+    /// Back the session's artifact store with an on-disk directory
+    /// (created if needed): preprocessed artifacts — including the
+    /// compiled `ExecutionPlan` — are serialized there and reloaded by
+    /// later sessions/processes, so a warm start performs zero plan
+    /// compilations. The CLI flag `--artifact-dir` and
+    /// `ServiceConfig::artifact_dir` route here; pre-bake with
+    /// `repro artifacts warm`.
+    pub fn artifact_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.artifact_dir = Some(dir.into());
         self
     }
 
@@ -198,12 +234,24 @@ impl SessionBuilder {
         self.backend.validate()?;
         let registry = self.registry.unwrap_or_default();
         anyhow::ensure!(!registry.is_empty(), "algorithm registry is empty");
+        let artifacts = match (self.artifacts, self.artifact_dir) {
+            (Some(_), Some(_)) => anyhow::bail!(
+                "artifacts() and artifact_dir() are mutually exclusive — \
+                 open the shared store with ArtifactStore::with_dir instead"
+            ),
+            (Some(store), None) => store,
+            (None, Some(dir)) => Arc::new(
+                ArtifactStore::with_dir(&dir)
+                    .with_context(|| format!("opening artifact dir {}", dir.display()))?,
+            ),
+            (None, None) => Arc::default(),
+        };
         Ok(Session {
             arch: self.arch,
             params: self.params,
             backend: self.backend,
             registry: Arc::new(registry),
-            artifacts: self.artifacts.unwrap_or_default(),
+            artifacts,
             parallelism: resolve_threads(self.parallelism),
             pools: Mutex::new(Vec::new()),
         })

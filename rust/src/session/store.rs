@@ -1,0 +1,689 @@
+//! `DiskStore` — the persistent tier of the artifact cache: a versioned,
+//! checksummed binary serialization of [`Preprocessed`] (the full Alg.-1
+//! output *including the compiled [`ExecutionPlan`]*), content-addressed
+//! by [`ArtifactKey`].
+//!
+//! The paper's premise is that preprocessing is an **offline, reusable**
+//! step (GraphR treats it so explicitly; AutoGMap persists the crossbar
+//! mapping as a compiled artifact): static pattern assignment only
+//! amortizes crossbar writes if the assignment itself survives process
+//! restarts. This module is the software analogue — a restarted serve
+//! fleet warm-starts from disk and performs **zero plan compilations**
+//! for every key already baked (asserted via
+//! [`ArtifactStats`](super::ArtifactStats) in the integration suite).
+//!
+//! # File format (`plan-v<FORMAT>.<SCHEMA>-<keyhash>.rpa`)
+//!
+//! Hand-rolled explicit little-endian framing ([`util::codec`]) — no
+//! serde, no `#[repr]` tricks, byte-stable across platforms and builds:
+//!
+//! ```text
+//! magic    8 B   b"RPREPROC"
+//! format   u32   envelope version (FORMAT_VERSION) — framing layout
+//! schema   u32   payload version (SCHEMA_VERSION) — bump whenever any
+//!                persisted in-memory type changes shape
+//! key      var   the full ArtifactKey (dataset short name, fixed-point
+//!                scale, weighted flag, arch signature) — compared, not
+//!                trusted, on load
+//! payload  var   Partitioned ▸ PatternRanking ▸ ConfigTable ▸
+//!                SubgraphTable ▸ ExecutionPlan (every section framed by
+//!                its own module; derived state — hash indices, the
+//!                plan's lane and gather tables — is rebuilt on decode,
+//!                never persisted or trusted from the file)
+//! checksum u64   FNV-1a over every preceding byte
+//! ```
+//!
+//! # Invalidation rules
+//!
+//! * **Envelope**: wrong magic / format version → typed error, caller
+//!   recomputes. The format version is also baked into the *filename*,
+//!   so a bumped binary simply misses old files (they become orphans
+//!   that [`DiskStore::clear`] still removes).
+//! * **Integrity**: any flipped byte or truncation → [`StoreError::Checksum`]
+//!   / [`StoreError::Truncated`]; the corrupt file is deleted by the
+//!   [`ArtifactStore`](super::ArtifactStore) fallback path and rewritten
+//!   after recompute. A corrupt plan is **never served** — decode
+//!   additionally re-validates every cross-section index the interpreter
+//!   would chase.
+//! * **Identity**: the embedded key must equal the requested key
+//!   byte-for-byte (covers `ArchConfig` mismatches even under filename
+//!   collisions or copied files), and the decoded plan must satisfy
+//!   [`ExecutionPlan::matches`] for the architecture in hand.
+//!
+//! # Concurrency
+//!
+//! Writers publish via write-to-temp + [`std::fs::hard_link`] to the
+//! final name: link creation is atomic and fails if the target exists,
+//! so N racing stores (threads *or* processes) produce exactly one
+//! on-disk write and readers only ever observe complete files.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::accel::{ArchConfig, Preprocessed};
+use crate::pattern::extract::{Partitioned, Subgraph};
+use crate::pattern::rank::PatternRanking;
+use crate::pattern::tables::{
+    ConfigTable, CtEntry, EngineSlot, ExecOrder, StEntry, StaticAssignment, SubgraphTable,
+};
+use crate::pattern::Pattern;
+use crate::sched::ExecutionPlan;
+use crate::util::codec::{fnv1a64, CodecError, Reader, Writer};
+
+use super::ArtifactKey;
+
+/// Envelope framing version (magic/version/key/checksum layout).
+pub const FORMAT_VERSION: u32 = 1;
+/// Payload schema version: bump whenever `Partitioned`, the ranking, the
+/// CT/ST, or the `ExecutionPlan` sections change shape.
+pub const SCHEMA_VERSION: u32 = 1;
+
+const MAGIC: [u8; 8] = *b"RPREPROC";
+const FILE_PREFIX: &str = "plan-v";
+const FILE_EXT: &str = "rpa";
+/// magic + format version — everything before the checksummed reader.
+const ENVELOPE_HEAD: usize = 8 + 4;
+/// Smallest structurally possible file: head + schema + checksum.
+const MIN_LEN: usize = ENVELOPE_HEAD + 4 + 8;
+
+/// Typed load/save failure. Every variant is a *fall back to recompute*
+/// signal for the cache — none of them is ever a panic.
+#[derive(Debug)]
+pub enum StoreError {
+    /// Underlying I/O failure other than file-not-found.
+    Io(std::io::Error),
+    /// No artifact on disk for the key (an ordinary cold miss).
+    Missing,
+    /// File shorter than its framing promises.
+    Truncated,
+    /// Not an artifact file at all.
+    BadMagic,
+    /// Written by a different envelope format.
+    FormatVersion { found: u32 },
+    /// Written by a different payload schema.
+    SchemaVersion { found: u32 },
+    /// FNV-1a integrity check failed (bit rot, partial write, tamper).
+    Checksum,
+    /// The embedded key differs from the requested one (e.g. an
+    /// `ArchConfig` mismatch behind a colliding or copied filename).
+    KeyMismatch,
+    /// The decoded plan does not match the architecture in hand.
+    ArchMismatch,
+    /// Framing was intact but a structural invariant of the payload was
+    /// violated.
+    Corrupt(&'static str),
+}
+
+impl std::fmt::Display for StoreError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StoreError::Io(e) => write!(f, "artifact I/O error: {e}"),
+            StoreError::Missing => write!(f, "no on-disk artifact for this key"),
+            StoreError::Truncated => write!(f, "artifact file truncated"),
+            StoreError::BadMagic => write!(f, "not an artifact file (bad magic)"),
+            StoreError::FormatVersion { found } => {
+                write!(f, "artifact format v{found} (this binary reads v{FORMAT_VERSION})")
+            }
+            StoreError::SchemaVersion { found } => {
+                write!(f, "artifact schema v{found} (this binary reads v{SCHEMA_VERSION})")
+            }
+            StoreError::Checksum => write!(f, "artifact checksum mismatch"),
+            StoreError::KeyMismatch => {
+                write!(f, "artifact was built for a different key (dataset/scale/arch)")
+            }
+            StoreError::ArchMismatch => {
+                write!(f, "artifact plan does not match the requested architecture")
+            }
+            StoreError::Corrupt(what) => write!(f, "artifact payload corrupt: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for StoreError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            StoreError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<CodecError> for StoreError {
+    fn from(e: CodecError) -> Self {
+        match e {
+            CodecError::Truncated => StoreError::Truncated,
+            CodecError::Invalid(what) => StoreError::Corrupt(what),
+        }
+    }
+}
+
+impl From<std::io::Error> for StoreError {
+    fn from(e: std::io::Error) -> Self {
+        if e.kind() == std::io::ErrorKind::NotFound {
+            StoreError::Missing
+        } else {
+            StoreError::Io(e)
+        }
+    }
+}
+
+/// The on-disk artifact directory. Cheap value type — all state lives in
+/// the filesystem, so any number of `DiskStore`s (across threads and
+/// processes) may point at one directory.
+#[derive(Debug, Clone)]
+pub struct DiskStore {
+    dir: PathBuf,
+}
+
+impl DiskStore {
+    /// Open (creating if needed) an artifact directory.
+    pub fn open(dir: impl Into<PathBuf>) -> Result<Self, StoreError> {
+        let dir = dir.into();
+        std::fs::create_dir_all(&dir).map_err(StoreError::Io)?;
+        Ok(Self { dir })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Content address of a key: format + schema version and the key
+    /// fingerprint are all in the name, so incompatible binaries never
+    /// even open each other's files.
+    pub fn path_of(&self, key: &ArtifactKey) -> PathBuf {
+        self.dir.join(format!(
+            "{FILE_PREFIX}{FORMAT_VERSION}.{SCHEMA_VERSION}-{:016x}.{FILE_EXT}",
+            key.fingerprint()
+        ))
+    }
+
+    /// Load and fully validate the artifact for `key`. `arch` is the
+    /// architecture the caller will run under — the decoded plan must
+    /// [`matches`](ExecutionPlan::matches) it.
+    pub fn load(&self, key: &ArtifactKey, arch: &ArchConfig) -> Result<Preprocessed, StoreError> {
+        let bytes = std::fs::read(self.path_of(key))?;
+        let pre = decode_artifact(&bytes, key)?;
+        if !pre.plan.matches(arch) {
+            return Err(StoreError::ArchMismatch);
+        }
+        Ok(pre)
+    }
+
+    /// Persist the artifact for `key`. Returns `Ok(false)` when another
+    /// writer already published this key (the exactly-once path under a
+    /// multi-store stampede); the existing file is left untouched.
+    ///
+    /// Exactly-once is guaranteed by the hard-link publish. On the rare
+    /// filesystem without hard links (exFAT, some network mounts) the
+    /// rename fallback keeps publishes *atomic* — readers never observe
+    /// a partial file — but two racing writers may each report
+    /// `Ok(true)` for identical bytes; `ArtifactStats::writes` can
+    /// over-count by the race width there, never under-count.
+    pub fn save(&self, key: &ArtifactKey, pre: &Preprocessed) -> Result<bool, StoreError> {
+        static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
+        let target = self.path_of(key);
+        if target.exists() {
+            return Ok(false);
+        }
+        let bytes = encode_artifact(key, pre);
+        let tmp = self.dir.join(format!(
+            ".tmp-{:016x}-{}-{}",
+            key.fingerprint(),
+            std::process::id(),
+            TMP_SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        if let Err(e) = std::fs::write(&tmp, &bytes) {
+            let _ = std::fs::remove_file(&tmp); // partial write: don't litter
+            return Err(StoreError::Io(e));
+        }
+        // Atomic publish: link-to-final fails iff somebody else already
+        // published, which is exactly the once-only semantics we want.
+        match std::fs::hard_link(&tmp, &target) {
+            Ok(()) => {
+                let _ = std::fs::remove_file(&tmp);
+                Ok(true)
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
+                let _ = std::fs::remove_file(&tmp);
+                Ok(false)
+            }
+            // Filesystems without hard links: atomic rename (replaces on
+            // a race, but both writers hold identical bytes).
+            Err(_) => match std::fs::rename(&tmp, &target) {
+                Ok(()) => Ok(true),
+                Err(e) => {
+                    let _ = std::fs::remove_file(&tmp);
+                    Err(StoreError::Io(e))
+                }
+            },
+        }
+    }
+
+    /// Remove the on-disk entry for `key` (if any). `true` if a file was
+    /// deleted.
+    pub fn remove(&self, key: &ArtifactKey) -> bool {
+        std::fs::remove_file(self.path_of(key)).is_ok()
+    }
+
+    /// Remove every artifact file in the directory — including orphans
+    /// written under older format/schema versions and stale `.tmp-*`
+    /// leftovers from interrupted publishes — and return how many
+    /// *artifacts* were deleted. Foreign files are left alone.
+    pub fn clear(&self) -> usize {
+        let mut removed = 0;
+        for path in self.entries() {
+            if std::fs::remove_file(&path).is_ok() {
+                removed += 1;
+            }
+        }
+        // A process killed between temp-write and publish leaves its
+        // temp file behind (the publish path can't clean up what it
+        // never reached); this is the one sweeper for those.
+        if let Ok(dir) = std::fs::read_dir(&self.dir) {
+            for path in dir.filter_map(|e| e.ok()).map(|e| e.path()) {
+                if path
+                    .file_name()
+                    .and_then(|n| n.to_str())
+                    .is_some_and(|n| n.starts_with(".tmp-"))
+                {
+                    let _ = std::fs::remove_file(&path);
+                }
+            }
+        }
+        removed
+    }
+
+    /// Every artifact file currently in the directory (any version),
+    /// sorted for deterministic listings.
+    pub fn entries(&self) -> Vec<PathBuf> {
+        let Ok(dir) = std::fs::read_dir(&self.dir) else {
+            return Vec::new();
+        };
+        let mut out: Vec<PathBuf> = dir
+            .filter_map(|e| e.ok())
+            .map(|e| e.path())
+            .filter(|p| {
+                p.file_name()
+                    .and_then(|n| n.to_str())
+                    .is_some_and(|n| n.starts_with(FILE_PREFIX) && n.ends_with(FILE_EXT))
+            })
+            .collect();
+        out.sort();
+        out
+    }
+
+    /// Human-readable one-line description of an artifact file (the
+    /// `repro artifacts ls` view): versions, embedded key, size. Never
+    /// decodes the payload.
+    pub fn describe(path: &Path) -> Result<String, StoreError> {
+        let bytes = std::fs::read(path)?;
+        let format = envelope_format(&bytes)?;
+        if format != FORMAT_VERSION {
+            return Ok(format!("format v{format} (stale; this binary reads v{FORMAT_VERSION})"));
+        }
+        let mut r = checked_payload(&bytes)?;
+        let schema = r.u32()?;
+        let key = ArtifactKey::decode_from(&mut r)?;
+        // "checksum ok", not "payload ok": this listing never decodes
+        // the payload, so it must not vouch for more than it verified.
+        Ok(format!(
+            "v{format}.{schema}  {}  {} B  checksum ok",
+            key.summary(),
+            bytes.len()
+        ))
+    }
+}
+
+/// Envelope step 1 — length, magic, and the format-version field. The
+/// format is returned (not judged): `decode_artifact` requires the
+/// current one, `describe` reports stale ones as information.
+fn envelope_format(bytes: &[u8]) -> Result<u32, StoreError> {
+    if bytes.len() < MIN_LEN {
+        return Err(StoreError::Truncated);
+    }
+    if bytes[..8] != MAGIC {
+        return Err(StoreError::BadMagic);
+    }
+    Ok(u32::from_le_bytes(bytes[8..12].try_into().unwrap()))
+}
+
+/// Envelope step 2 — verify the trailing FNV-1a checksum and hand back a
+/// reader positioned at the schema-version field. Only meaningful for
+/// the current format version (older formats may frame differently).
+fn checked_payload(bytes: &[u8]) -> Result<Reader<'_>, StoreError> {
+    let (body, tail) = bytes.split_at(bytes.len() - 8);
+    if fnv1a64(body) != u64::from_le_bytes(tail.try_into().unwrap()) {
+        return Err(StoreError::Checksum);
+    }
+    Ok(Reader::new(&body[ENVELOPE_HEAD..]))
+}
+
+/// Serialize `pre` under `key` into the full framed + checksummed file
+/// image.
+pub fn encode_artifact(key: &ArtifactKey, pre: &Preprocessed) -> Vec<u8> {
+    let mut w = Writer::new();
+    w.put_bytes(&MAGIC);
+    w.put_u32(FORMAT_VERSION);
+    w.put_u32(SCHEMA_VERSION);
+    key.encode_into(&mut w);
+    encode_partitioned(&mut w, &pre.part);
+    encode_ranking(&mut w, &pre.ranking);
+    encode_config_table(&mut w, &pre.ct);
+    encode_subgraph_table(&mut w, &pre.st);
+    pre.plan.encode_into(&mut w);
+    let sum = fnv1a64(w.as_bytes());
+    w.put_u64(sum);
+    w.into_bytes()
+}
+
+/// Decode and validate a file image: envelope (magic, versions,
+/// checksum), identity (embedded key == `expected`), then every payload
+/// section with its structural invariants, then cross-section
+/// consistency. Any failure is a typed [`StoreError`].
+pub fn decode_artifact(bytes: &[u8], expected: &ArtifactKey) -> Result<Preprocessed, StoreError> {
+    let format = envelope_format(bytes)?;
+    if format != FORMAT_VERSION {
+        return Err(StoreError::FormatVersion { found: format });
+    }
+    let mut r = checked_payload(bytes)?;
+    let schema = r.u32()?;
+    if schema != SCHEMA_VERSION {
+        return Err(StoreError::SchemaVersion { found: schema });
+    }
+    let key = ArtifactKey::decode_from(&mut r)?;
+    if key != *expected {
+        return Err(StoreError::KeyMismatch);
+    }
+    let part = decode_partitioned(&mut r)?;
+    let ranking = decode_ranking(&mut r)?;
+    let ct = decode_config_table(&mut r)?;
+    let st = decode_subgraph_table(&mut r)?;
+    let plan = ExecutionPlan::decode_from(&mut r)?;
+    r.done()?;
+
+    // Cross-section consistency: the sections must describe one another,
+    // or the scheduler would index across mismatched tables.
+    if plan.num_ops() != st.len() {
+        return Err(StoreError::Corrupt("plan ops != subgraph-table entries"));
+    }
+    if ct.len() != ranking.num_patterns() || ct.len() as u32 != plan.num_patterns {
+        return Err(StoreError::Corrupt("pattern table sizes diverge"));
+    }
+    if part.c != plan.c || part.num_vertices != plan.num_vertices {
+        return Err(StoreError::Corrupt("partitioning geometry diverges from plan"));
+    }
+    let nsub = part.subgraphs.len() as u32;
+    if st.entries.iter().any(|e| e.sg_idx >= nsub) {
+        return Err(StoreError::Corrupt("subgraph-table index out of partitioning"));
+    }
+    // Ranking/CT patterns reach `Crossbar::configure` through the DSE
+    // rebuild path (`build_config_table` → `rebuild_static_slots`), so
+    // they obey the same C×C window rule as the plan's own tables.
+    let cells = part.c * part.c;
+    if cells < 64
+        && (ranking.ranked.iter().any(|(p, _)| p.0 >> cells != 0)
+            || ct.entries.iter().any(|e| e.pattern.0 >> cells != 0))
+    {
+        return Err(StoreError::Corrupt("table pattern outside the C×C window"));
+    }
+    Ok(Preprocessed { part, ranking, ct, st, plan })
+}
+
+fn encode_partitioned(w: &mut Writer, part: &Partitioned) {
+    w.put_u32(part.c as u32);
+    w.put_u32(part.num_vertices);
+    w.put_u64(part.subgraphs.len() as u64);
+    for sg in &part.subgraphs {
+        w.put_u32(sg.brow);
+        w.put_u32(sg.bcol);
+        w.put_u64(sg.pattern.0);
+    }
+    match &part.weights {
+        None => w.put_u8(0),
+        Some(per_sub) => {
+            // Flattened in place (same bytes `put_f32s` of the
+            // concatenation would produce, without materializing a
+            // second copy of every edge weight); per-subgraph lengths
+            // are implied by each pattern's nnz, which the decoder
+            // re-splits on (and checks).
+            w.put_u8(1);
+            let total: usize = per_sub.iter().map(Vec::len).sum();
+            w.put_u64(total as u64);
+            for weights in per_sub {
+                for &x in weights {
+                    w.put_f32(x);
+                }
+            }
+        }
+    }
+}
+
+fn decode_partitioned(r: &mut Reader<'_>) -> Result<Partitioned, StoreError> {
+    let c = r.u32()? as usize;
+    if !(1..=crate::pattern::pattern::MAX_C).contains(&c) {
+        return Err(StoreError::Corrupt("partition window size out of range"));
+    }
+    let num_vertices = r.u32()?;
+    let n = r.prefixed_count(16)?;
+    let cells = c * c;
+    let mut subgraphs = Vec::with_capacity(n);
+    for _ in 0..n {
+        let sg = Subgraph { brow: r.u32()?, bcol: r.u32()?, pattern: Pattern(r.u64()?) };
+        // Dense-weight expansion indexes `out[bit]` over a C×C buffer.
+        if cells < 64 && sg.pattern.0 >> cells != 0 {
+            return Err(StoreError::Corrupt("subgraph pattern outside the C×C window"));
+        }
+        subgraphs.push(sg);
+    }
+    let weights = match r.u8()? {
+        0 => None,
+        1 => {
+            let flat = r.f32s()?;
+            let mut per_sub = Vec::with_capacity(subgraphs.len());
+            let mut at = 0usize;
+            for sg in &subgraphs {
+                let nnz = sg.pattern.nnz() as usize;
+                let end = at
+                    .checked_add(nnz)
+                    .filter(|&e| e <= flat.len())
+                    .ok_or(StoreError::Corrupt("weight data shorter than pattern nnz"))?;
+                per_sub.push(flat[at..end].to_vec());
+                at = end;
+            }
+            if at != flat.len() {
+                return Err(StoreError::Corrupt("weight data longer than pattern nnz"));
+            }
+            Some(per_sub)
+        }
+        _ => return Err(StoreError::Corrupt("bad weights flag")),
+    };
+    Ok(Partitioned { c, num_vertices, subgraphs, weights })
+}
+
+fn encode_ranking(w: &mut Writer, ranking: &PatternRanking) {
+    w.put_u64(ranking.ranked.len() as u64);
+    for &(pattern, count) in &ranking.ranked {
+        w.put_u64(pattern.0);
+        w.put_u32(count);
+    }
+    w.put_u64(ranking.total_subgraphs as u64);
+}
+
+fn decode_ranking(r: &mut Reader<'_>) -> Result<PatternRanking, StoreError> {
+    let n = r.prefixed_count(12)?;
+    let mut ranked = Vec::with_capacity(n);
+    for _ in 0..n {
+        ranked.push((Pattern(r.u64()?), r.u32()?));
+    }
+    let total_subgraphs = r.u64()? as usize;
+    // The rank index is derived state: rebuilt, never persisted.
+    let rank_of = ranked
+        .iter()
+        .enumerate()
+        .map(|(i, &(p, _))| (p, i as u32))
+        .collect();
+    Ok(PatternRanking { ranked, rank_of, total_subgraphs })
+}
+
+fn encode_config_table(w: &mut Writer, ct: &ConfigTable) {
+    w.put_u64(ct.entries.len() as u64);
+    for e in &ct.entries {
+        w.put_u64(e.pattern.0);
+        w.put_u32(e.occurrences);
+        w.put_u32(e.slots.len() as u32);
+        for s in &e.slots {
+            w.put_u32(s.engine);
+            w.put_u32(s.crossbar);
+        }
+        match e.row_addr {
+            None => w.put_u8(0xFF),
+            Some(row) => w.put_u8(row),
+        }
+        w.put_u32(e.active_rows);
+    }
+    w.put_u32(ct.num_static_engines);
+    w.put_u32(ct.crossbars_per_engine);
+    w.put_u8(ct.assignment.to_code());
+}
+
+fn decode_config_table(r: &mut Reader<'_>) -> Result<ConfigTable, StoreError> {
+    // Min entry size: pattern u64 + occurrences u32 + slot count u32 +
+    // row_addr u8 + active_rows u32 (slots themselves may be empty).
+    let n = r.prefixed_count(21)?;
+    let mut entries = Vec::with_capacity(n);
+    for _ in 0..n {
+        let pattern = Pattern(r.u64()?);
+        let occurrences = r.u32()?;
+        // The per-entry slot count is a u32 prefix (not codec's u64
+        // form), so it carries its own pre-allocation guard.
+        let n_slots = r.u32()? as usize;
+        let total = n_slots.checked_mul(8).ok_or(StoreError::Truncated)?;
+        if total > r.remaining() {
+            return Err(StoreError::Truncated);
+        }
+        let mut slots = Vec::with_capacity(n_slots);
+        for _ in 0..n_slots {
+            slots.push(EngineSlot { engine: r.u32()?, crossbar: r.u32()? });
+        }
+        let row_addr = match r.u8()? {
+            0xFF => None,
+            row => Some(row),
+        };
+        let active_rows = r.u32()?;
+        entries.push(CtEntry { pattern, occurrences, slots, row_addr, active_rows });
+    }
+    let num_static_engines = r.u32()?;
+    let crossbars_per_engine = r.u32()?;
+    let assignment = StaticAssignment::from_code(r.u8()?)
+        .ok_or(StoreError::Corrupt("unknown static-assignment code"))?;
+    Ok(ConfigTable::from_parts(entries, num_static_engines, crossbars_per_engine, assignment))
+}
+
+fn encode_subgraph_table(w: &mut Writer, st: &SubgraphTable) {
+    w.put_u8(st.order.to_code());
+    w.put_u64(st.entries.len() as u64);
+    for e in &st.entries {
+        w.put_u32(e.sg_idx);
+        w.put_u32(e.src_start);
+        w.put_u32(e.dst_start);
+        w.put_u32(e.pattern_rank);
+    }
+    w.put_u32s(&st.groups);
+}
+
+fn decode_subgraph_table(r: &mut Reader<'_>) -> Result<SubgraphTable, StoreError> {
+    let order =
+        ExecOrder::from_code(r.u8()?).ok_or(StoreError::Corrupt("unknown execution-order code"))?;
+    let n = r.prefixed_count(16)?;
+    let mut entries = Vec::with_capacity(n);
+    for _ in 0..n {
+        entries.push(StEntry {
+            sg_idx: r.u32()?,
+            src_start: r.u32()?,
+            dst_start: r.u32()?,
+            pattern_rank: r.u32()?,
+        });
+    }
+    let groups = r.u32s()?;
+    if groups.first() != Some(&0)
+        || groups.last().copied() != Some(entries.len() as u32)
+        || groups.windows(2).any(|w| w[0] > w[1])
+    {
+        return Err(StoreError::Corrupt("subgraph-table groups not a monotone cover"));
+    }
+    Ok(SubgraphTable { order, entries, groups })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::Accelerator;
+    use crate::graph::datasets::Dataset;
+
+    fn scratch(tag: &str) -> PathBuf {
+        static SEQ: AtomicU64 = AtomicU64::new(0);
+        let d = std::env::temp_dir().join(format!(
+            "repro-store-{tag}-{}-{}",
+            std::process::id(),
+            SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn baked(weighted: bool) -> (ArtifactKey, Preprocessed, ArchConfig) {
+        let acc = Accelerator::with_defaults();
+        let key = ArtifactKey::new(Dataset::Tiny, 1.0, weighted, &acc.config);
+        let g = if weighted {
+            Dataset::Tiny.load_weighted(1.0).unwrap()
+        } else {
+            Dataset::Tiny.load().unwrap()
+        };
+        let pre = acc.preprocess(&g, weighted).unwrap();
+        (key, pre, acc.config)
+    }
+
+    #[test]
+    fn bytes_roundtrip_whole_artifact() {
+        for weighted in [false, true] {
+            let (key, pre, _) = baked(weighted);
+            let bytes = encode_artifact(&key, &pre);
+            let decoded = decode_artifact(&bytes, &key).unwrap();
+            assert_eq!(pre, decoded, "weighted={weighted}");
+        }
+    }
+
+    #[test]
+    fn encoding_is_deterministic() {
+        let (key, pre, _) = baked(false);
+        assert_eq!(encode_artifact(&key, &pre), encode_artifact(&key, &pre));
+    }
+
+    #[test]
+    fn save_load_and_exactly_once_publish() {
+        let dir = scratch("once");
+        let store = DiskStore::open(&dir).unwrap();
+        let (key, pre, arch) = baked(false);
+        assert!(matches!(store.load(&key, &arch), Err(StoreError::Missing)));
+        assert!(store.save(&key, &pre).unwrap(), "first save writes");
+        assert!(!store.save(&key, &pre).unwrap(), "second save is a no-op");
+        let loaded = store.load(&key, &arch).unwrap();
+        assert_eq!(pre, loaded);
+        assert_eq!(store.entries().len(), 1);
+        assert_eq!(store.clear(), 1);
+        assert!(store.entries().is_empty());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn describe_names_version_and_key() {
+        let dir = scratch("describe");
+        let store = DiskStore::open(&dir).unwrap();
+        let (key, pre, _) = baked(false);
+        store.save(&key, &pre).unwrap();
+        let line = DiskStore::describe(&store.entries()[0]).unwrap();
+        assert!(line.contains("v1.1"), "{line}");
+        assert!(line.contains("TN"), "{line}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

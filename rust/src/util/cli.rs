@@ -64,6 +64,20 @@ impl Args {
     {
         Ok(self.get_parsed(name)?.unwrap_or(default))
     }
+
+    /// Option as a filesystem path (`--artifact-dir DIR` and friends) —
+    /// unlike [`get_parsed`](Self::get_parsed), never trips over
+    /// non-UTF-8-unfriendly characters `FromStr` impls reject.
+    pub fn get_path(&self, name: &str) -> Option<std::path::PathBuf> {
+        self.get(name).map(std::path::PathBuf::from)
+    }
+
+    /// Like [`get_path`](Self::get_path) but required: a missing option
+    /// is an error naming the flag.
+    pub fn require_path(&self, name: &str) -> Result<std::path::PathBuf> {
+        self.get_path(name)
+            .ok_or_else(|| anyhow::anyhow!("missing required option --{name} <DIR>"))
+    }
 }
 
 #[cfg(test)]
@@ -101,5 +115,16 @@ mod tests {
         let a = args("");
         assert_eq!(a.get_or("engines", 32u32).unwrap(), 32);
         assert!(a.get_parsed::<f64>("scale").unwrap().is_none());
+    }
+
+    #[test]
+    fn paths_parse_and_require() {
+        let a = args("artifacts warm TN --artifact-dir /tmp/cache");
+        assert_eq!(
+            a.require_path("artifact-dir").unwrap(),
+            std::path::PathBuf::from("/tmp/cache")
+        );
+        assert!(a.get_path("nope").is_none());
+        assert!(a.require_path("nope").unwrap_err().to_string().contains("--nope"));
     }
 }

@@ -1,0 +1,312 @@
+//! Hand-rolled little-endian framing primitives for the on-disk artifact
+//! format (`session::store`).
+//!
+//! The offline image vendors no serde, and the persisted
+//! [`Preprocessed`](crate::accel::Preprocessed) artifact must stay
+//! byte-stable across builds anyway (content-addressed cache files are
+//! diffed and shipped to CI), so the encoding is explicit: fixed-width
+//! little-endian scalars, `u64` length-prefixed slices, no padding, no
+//! implementation-defined layout. Every multi-byte value is LE regardless
+//! of host endianness.
+//!
+//! [`Reader`] is panic-free by construction: every read is bounds-checked
+//! and returns a typed [`CodecError`], and slice reads validate
+//! `len × size ≤ remaining` *before* allocating, so a corrupt or
+//! truncated length prefix can neither panic nor trigger an absurd
+//! allocation.
+
+use std::fmt;
+
+/// Decode failure. `Truncated` = ran off the end of the buffer (or a
+/// length prefix promises more bytes than remain); `Invalid` = bytes were
+/// present but violate a structural invariant of the type being decoded.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CodecError {
+    Truncated,
+    Invalid(&'static str),
+}
+
+impl fmt::Display for CodecError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CodecError::Truncated => write!(f, "unexpected end of input"),
+            CodecError::Invalid(what) => write!(f, "invalid encoding: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for CodecError {}
+
+/// Append-only little-endian encoder.
+#[derive(Debug, Default)]
+pub struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn as_bytes(&self) -> &[u8] {
+        &self.buf
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Raw bytes, no length prefix (fixed-size fields like magic).
+    pub fn put_bytes(&mut self, v: &[u8]) {
+        self.buf.extend_from_slice(v);
+    }
+
+    /// `u32` length-prefixed UTF-8 string.
+    pub fn put_str(&mut self, v: &str) {
+        self.put_u32(v.len() as u32);
+        self.buf.extend_from_slice(v.as_bytes());
+    }
+
+    /// `u64` length-prefixed `u32` slice.
+    pub fn put_u32s(&mut self, v: &[u32]) {
+        self.put_u64(v.len() as u64);
+        for &x in v {
+            self.put_u32(x);
+        }
+    }
+
+    /// `u64` length-prefixed `u64` slice.
+    pub fn put_u64s(&mut self, v: &[u64]) {
+        self.put_u64(v.len() as u64);
+        for &x in v {
+            self.put_u64(x);
+        }
+    }
+
+    /// `u64` length-prefixed `f32` slice (bit patterns preserved exactly).
+    pub fn put_f32s(&mut self, v: &[f32]) {
+        self.put_u64(v.len() as u64);
+        for &x in v {
+            self.put_f32(x);
+        }
+    }
+}
+
+/// Bounds-checked little-endian decoder over a borrowed buffer.
+#[derive(Debug)]
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Error unless every byte has been consumed — trailing garbage in a
+    /// cache file is corruption, not padding.
+    pub fn done(&self) -> Result<(), CodecError> {
+        if self.remaining() == 0 {
+            Ok(())
+        } else {
+            Err(CodecError::Invalid("trailing bytes"))
+        }
+    }
+
+    pub fn bytes(&mut self, n: usize) -> Result<&'a [u8], CodecError> {
+        if self.remaining() < n {
+            return Err(CodecError::Truncated);
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8, CodecError> {
+        Ok(self.bytes(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> Result<u32, CodecError> {
+        Ok(u32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64, CodecError> {
+        Ok(u64::from_le_bytes(self.bytes(8)?.try_into().unwrap()))
+    }
+
+    pub fn f32(&mut self) -> Result<f32, CodecError> {
+        Ok(f32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
+    }
+
+    pub fn str(&mut self) -> Result<String, CodecError> {
+        let n = self.u32()? as usize;
+        let raw = self.bytes(n)?;
+        String::from_utf8(raw.to_vec()).map_err(|_| CodecError::Invalid("non-UTF-8 string"))
+    }
+
+    /// Read a `u64` length prefix promising `n` records of at least
+    /// `min_record_size` bytes each, validated against the remaining
+    /// bytes **before** any allocation: a corrupt prefix can neither
+    /// panic nor trigger an absurd allocation. Record decoders share
+    /// this with the typed slice readers below — the one place the
+    /// guard lives.
+    pub fn prefixed_count(&mut self, min_record_size: usize) -> Result<usize, CodecError> {
+        let n = self.u64()?;
+        let total = (n as usize)
+            .checked_mul(min_record_size)
+            .ok_or(CodecError::Truncated)?;
+        if total > self.remaining() {
+            return Err(CodecError::Truncated);
+        }
+        Ok(n as usize)
+    }
+
+    pub fn u32s(&mut self) -> Result<Vec<u32>, CodecError> {
+        let n = self.prefixed_count(4)?;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.u32()?);
+        }
+        Ok(v)
+    }
+
+    pub fn u64s(&mut self) -> Result<Vec<u64>, CodecError> {
+        let n = self.prefixed_count(8)?;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.u64()?);
+        }
+        Ok(v)
+    }
+
+    pub fn f32s(&mut self) -> Result<Vec<f32>, CodecError> {
+        let n = self.prefixed_count(4)?;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.f32()?);
+        }
+        Ok(v)
+    }
+}
+
+/// FNV-1a 64-bit over `bytes` — the file integrity checksum. Non-crypto
+/// (the cache directory is a trust boundary the filesystem already
+/// enforces); what it must catch is truncation, bit rot, and partial
+/// writes, and it is stable across platforms and builds.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = OFFSET;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(PRIME);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_roundtrip_is_little_endian() {
+        let mut w = Writer::new();
+        w.put_u8(0xAB);
+        w.put_u32(0x1122_3344);
+        w.put_u64(0x5566_7788_99AA_BBCC);
+        w.put_f32(-1.5);
+        // Explicit LE layout: u32 low byte first.
+        assert_eq!(&w.as_bytes()[1..5], &[0x44, 0x33, 0x22, 0x11]);
+        let bytes = w.into_bytes();
+        let mut r = Reader::new(&bytes);
+        assert_eq!(r.u8().unwrap(), 0xAB);
+        assert_eq!(r.u32().unwrap(), 0x1122_3344);
+        assert_eq!(r.u64().unwrap(), 0x5566_7788_99AA_BBCC);
+        assert_eq!(r.f32().unwrap(), -1.5);
+        r.done().unwrap();
+    }
+
+    #[test]
+    fn slices_and_strings_roundtrip() {
+        let mut w = Writer::new();
+        w.put_str("artifact");
+        w.put_u32s(&[1, 2, 3]);
+        w.put_u64s(&[u64::MAX]);
+        w.put_f32s(&[0.5, f32::INFINITY]);
+        let bytes = w.into_bytes();
+        let mut r = Reader::new(&bytes);
+        assert_eq!(r.str().unwrap(), "artifact");
+        assert_eq!(r.u32s().unwrap(), vec![1, 2, 3]);
+        assert_eq!(r.u64s().unwrap(), vec![u64::MAX]);
+        let f = r.f32s().unwrap();
+        assert_eq!(f[0], 0.5);
+        assert!(f[1].is_infinite());
+        r.done().unwrap();
+    }
+
+    #[test]
+    fn truncation_is_typed_not_a_panic() {
+        let mut w = Writer::new();
+        w.put_u32s(&[7; 10]);
+        let bytes = w.into_bytes();
+        // Cut mid-slice: the length prefix promises more than remains.
+        let mut r = Reader::new(&bytes[..bytes.len() / 2]);
+        assert_eq!(r.u32s().unwrap_err(), CodecError::Truncated);
+        // Scalar off the end.
+        let mut r = Reader::new(&[0u8; 3]);
+        assert_eq!(r.u32().unwrap_err(), CodecError::Truncated);
+    }
+
+    #[test]
+    fn absurd_length_prefix_rejected_before_allocation() {
+        let mut w = Writer::new();
+        w.put_u64(u64::MAX); // claims u64::MAX elements
+        let bytes = w.into_bytes();
+        let mut r = Reader::new(&bytes);
+        assert_eq!(r.f32s().unwrap_err(), CodecError::Truncated);
+    }
+
+    #[test]
+    fn trailing_bytes_are_invalid() {
+        let mut r = Reader::new(&[1, 2]);
+        r.u8().unwrap();
+        assert!(matches!(r.done(), Err(CodecError::Invalid(_))));
+    }
+
+    #[test]
+    fn fnv_is_stable_and_sensitive() {
+        // Reference FNV-1a vectors.
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_ne!(fnv1a64(b"artifact"), fnv1a64(b"artifacu"));
+    }
+}

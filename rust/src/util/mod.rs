@@ -2,6 +2,7 @@
 
 pub mod bench;
 pub mod cli;
+pub mod codec;
 pub mod hash;
 pub mod fmt;
 pub mod rng;

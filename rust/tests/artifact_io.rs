@@ -1,0 +1,494 @@
+//! Round-trip + differential loaded-plan suite — the lockdown for the
+//! persistent on-disk artifact cache (`session::store`).
+//!
+//! Three contracts:
+//!
+//! 1. **Round trip**: `save(pre) → load` yields an artifact whose every
+//!    public accessor — plan ops, groups, slot candidates, lane tables,
+//!    gather table, static config, interned pattern table, executor
+//!    operands — equals the in-memory one, for random graphs × all four
+//!    algorithms × randomized architectures.
+//! 2. **Determinism extended to loaded plans**: a deserialized plan's
+//!    [`RunResult`] is **bit-identical** to the in-memory plan's under
+//!    the sequential interpreter, the scoped-spawn mechanism, and the
+//!    persistent worker pool, and feeds the DSE static-slot rebuild
+//!    identically.
+//! 3. **Negative paths are typed, never panics**: truncation, flipped
+//!    bytes, stale versions, and architecture mismatches each produce a
+//!    typed [`StoreError`], and the two-tier [`ArtifactStore`] falls back
+//!    to recompute (and repairs the file) instead of serving a corrupt
+//!    plan. Disk publishes are exactly-once across racing stores.
+
+use std::sync::Arc;
+
+use repro::accel::{Accelerator, ArchConfig};
+use repro::algo::traits::VertexProgram;
+use repro::algo::{Bfs, PageRank, Sssp, Wcc};
+use repro::cost::CostParams;
+use repro::graph::datasets::Dataset;
+use repro::sched::executor::NativeExecutor;
+use repro::sched::{run_parallel_pooled, run_parallel_scoped, WorkerPool};
+use repro::session::{
+    ArtifactKey, ArtifactStore, DiskStore, JobSpec, Session, StoreError, FORMAT_VERSION,
+};
+use repro::util::codec::fnv1a64;
+use repro::util::SplitMix64;
+
+mod common;
+use common::{
+    assert_bit_identical, random_arch, random_graph, scratch_dir, with_random_weights,
+};
+
+/// A disposable key for graphs that don't come from a `Dataset` preset:
+/// the key's dataset/scale identity is irrelevant to (de)serialization
+/// fidelity, which is what these tests exercise; only the arch part must
+/// be honest because `load` verifies `plan.matches`.
+fn test_key(seed: u64, weighted: bool, arch: &ArchConfig) -> ArtifactKey {
+    let scale = 1.0 - (seed % 7) as f64 * 1e-3;
+    ArtifactKey::new(Dataset::Tiny, scale, weighted, arch)
+}
+
+#[test]
+fn prop_roundtrip_preserves_every_public_accessor() {
+    for seed in 500..506u64 {
+        let g = random_graph(seed);
+        let mut rng = SplitMix64::new(seed ^ 0xA21F);
+        let arch = random_arch(&mut rng);
+        let gw = with_random_weights(&g, &mut rng);
+        for (graph, weighted) in [(&g, false), (&gw, true)] {
+            let acc = Accelerator::new(arch.clone(), CostParams::default());
+            let pre = acc.preprocess(graph, weighted).unwrap();
+            let dir = scratch_dir("roundtrip");
+            let store = DiskStore::open(&dir).unwrap();
+            let key = test_key(seed, weighted, &arch);
+            assert!(store.save(&key, &pre).unwrap(), "seed {seed}: first save writes");
+            let got = store.load(&key, &arch).unwrap();
+            let ctx = format!("seed {seed} weighted {weighted} arch {arch:?}");
+
+            // Whole-struct equality first (catches anything the explicit
+            // accessor walk below might miss)…
+            assert_eq!(pre.part, got.part, "{ctx}: Partitioned");
+            assert_eq!(pre.ranking, got.ranking, "{ctx}: PatternRanking");
+            assert_eq!(pre.ct, got.ct, "{ctx}: ConfigTable");
+            assert_eq!(pre.st, got.st, "{ctx}: SubgraphTable");
+            assert_eq!(pre.plan, got.plan, "{ctx}: ExecutionPlan");
+            assert_eq!(pre, got, "{ctx}: Preprocessed");
+
+            // …then the public plan accessors, one by one, the way the
+            // interpreter and executors actually consume them.
+            let (a, b) = (&pre.plan, &got.plan);
+            assert_eq!(a.num_ops(), b.num_ops(), "{ctx}: num_ops");
+            assert_eq!(a.num_groups(), b.num_groups(), "{ctx}: num_groups");
+            for grp in 0..a.num_groups() {
+                assert_eq!(a.group_bounds(grp), b.group_bounds(grp), "{ctx}: group {grp}");
+            }
+            assert_eq!(a.static_config(), b.static_config(), "{ctx}: static_config");
+            assert_eq!(a.lanes(), b.lanes(), "{ctx}: lane table");
+            assert_eq!(a.gather(), b.gather(), "{ctx}: gather table");
+            assert_eq!(a.out_degrees(), b.out_degrees(), "{ctx}: out_degrees");
+            assert!(b.matches(&arch), "{ctx}: loaded plan must match its arch");
+            for rank in 0..a.num_patterns {
+                assert_eq!(
+                    a.pattern_of_rank(rank),
+                    b.pattern_of_rank(rank),
+                    "{ctx}: pattern rank {rank}"
+                );
+            }
+            let ids: Vec<u32> = (0..a.num_ops() as u32).collect();
+            let (ba, bb) = (a.batch(&ids), b.batch(&ids));
+            assert_eq!(ba.weighted(), bb.weighted(), "{ctx}: batch weighted");
+            let c2 = a.c * a.c;
+            let mut da = vec![0f32; c2];
+            let mut db = vec![0f32; c2];
+            for (k, (opa, opb)) in a.ops.iter().zip(&b.ops).enumerate() {
+                assert_eq!(opa, opb, "{ctx}: op {k}");
+                assert_eq!(a.slots_of(opa), b.slots_of(opb), "{ctx}: slots of op {k}");
+                assert_eq!(
+                    a.lanes().home_of(k),
+                    b.lanes().home_of(k),
+                    "{ctx}: lane home of op {k}"
+                );
+                assert_eq!(
+                    a.gather().sources_of(k, a.c),
+                    b.gather().sources_of(k, b.c),
+                    "{ctx}: gather sources of op {k}"
+                );
+                assert_eq!(ba.bits(k), bb.bits(k), "{ctx}: bits of op {k}");
+                if weighted {
+                    assert_eq!(ba.weights_of(k), bb.weights_of(k), "{ctx}: weights of op {k}");
+                }
+                da.iter_mut().for_each(|x| *x = 0.0);
+                db.iter_mut().for_each(|x| *x = 0.0);
+                ba.dense_into(k, &mut da);
+                bb.dense_into(k, &mut db);
+                assert_eq!(da, db, "{ctx}: dense operand of op {k}");
+            }
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+    }
+}
+
+#[test]
+fn prop_loaded_plan_is_bit_identical_under_all_three_mechanisms() {
+    // The determinism contract extended to loaded plans: sequential
+    // interpreter, scoped spawns, and the persistent pool must all
+    // produce the same RunResult from a deserialized plan as from the
+    // in-memory one it was saved from.
+    for seed in 520..525u64 {
+        let g = random_graph(seed);
+        let mut rng = SplitMix64::new(seed ^ 0x10AD);
+        let source = rng.next_bounded(g.num_vertices as u64) as u32;
+        let arch = random_arch(&mut rng);
+        let gw = with_random_weights(&g, &mut rng);
+        let bfs = Bfs::new(source);
+        let sssp = Sssp::new(source);
+        let pagerank = PageRank::new(0.85, 4);
+        let wcc = Wcc;
+        let programs: [(&dyn VertexProgram, bool); 4] =
+            [(&bfs, false), (&sssp, true), (&pagerank, false), (&wcc, false)];
+        let acc = Accelerator::new(arch.clone(), CostParams::default());
+        let params = CostParams::default();
+        let dir = scratch_dir("mechanisms");
+        let store = DiskStore::open(&dir).unwrap();
+        for (program, weighted) in programs {
+            let pre = acc
+                .preprocess(if weighted { &gw } else { &g }, weighted)
+                .unwrap();
+            let key = test_key(seed, weighted, &arch);
+            store.save(&key, &pre).unwrap();
+            let loaded = store.load(&key, &arch).unwrap();
+            let ctx = format!("seed {seed} algo {} arch {arch:?}", program.name());
+
+            let want_seq = acc
+                .run_threaded(&pre, program, &mut NativeExecutor, 1)
+                .unwrap()
+                .run
+                .unwrap();
+            let got_seq = acc
+                .run_threaded(&loaded, program, &mut NativeExecutor, 1)
+                .unwrap()
+                .run
+                .unwrap();
+            assert_bit_identical(&got_seq, &want_seq, &format!("{ctx} [sequential]"));
+
+            let want_scoped =
+                run_parallel_scoped(&arch, &params, &pre.plan, program, &mut NativeExecutor, 4)
+                    .unwrap();
+            let got_scoped =
+                run_parallel_scoped(&arch, &params, &loaded.plan, program, &mut NativeExecutor, 4)
+                    .unwrap();
+            assert_bit_identical(&got_scoped, &want_scoped, &format!("{ctx} [scoped]"));
+            assert_bit_identical(&got_scoped, &want_seq, &format!("{ctx} [scoped vs seq]"));
+
+            let mut pool = WorkerPool::new(4);
+            for round in 0..2 {
+                let got_pooled = run_parallel_pooled(
+                    &arch,
+                    &params,
+                    &loaded.plan,
+                    program,
+                    &mut NativeExecutor,
+                    &mut pool,
+                )
+                .unwrap();
+                assert_bit_identical(
+                    &got_pooled,
+                    &want_seq,
+                    &format!("{ctx} [pooled round {round}]"),
+                );
+            }
+            store.remove(&key);
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+#[test]
+fn loaded_artifact_feeds_dse_rebuild_identically() {
+    // DSE sweeps call `rebuild_static_slots` on a scratch copy of the
+    // artifact; a loaded artifact must sweep to the identical optimum
+    // and identical per-point numbers.
+    let g = Dataset::Tiny.load().unwrap();
+    let arch = ArchConfig::default();
+    let params = CostParams::default();
+    let acc = Accelerator::new(arch.clone(), params.clone());
+    let pre = acc.preprocess(&g, false).unwrap();
+    let dir = scratch_dir("dse");
+    let store = DiskStore::open(&dir).unwrap();
+    let key = ArtifactKey::new(Dataset::Tiny, 1.0, false, &arch);
+    store.save(&key, &pre).unwrap();
+    let loaded = store.load(&key, &arch).unwrap();
+
+    let program = Bfs::new(0);
+    let mut scratch_a = pre.clone();
+    let mut scratch_b = loaded;
+    let (best_a, points_a) = repro::dse::find_best_static_split_with(
+        &mut scratch_a,
+        &arch,
+        &params,
+        &program,
+        None,
+    )
+    .unwrap();
+    let (best_b, points_b) = repro::dse::find_best_static_split_with(
+        &mut scratch_b,
+        &arch,
+        &params,
+        &program,
+        None,
+    )
+    .unwrap();
+    assert_eq!(best_a, best_b, "best split diverges");
+    assert_eq!(points_a.len(), points_b.len());
+    for (pa, pb) in points_a.iter().zip(&points_b) {
+        assert_eq!(pa.x, pb.x);
+        assert_eq!(pa.exec_time_ns, pb.exec_time_ns, "N={}: time", pa.x);
+        assert_eq!(pa.energy_j, pb.energy_j, "N={}: energy", pa.x);
+        assert_eq!(pa.write_bits, pb.write_bits, "N={}: writes", pa.x);
+        assert_eq!(pa.static_hit_rate, pb.static_hit_rate, "N={}: hit rate", pa.x);
+        assert_eq!(pa.speedup, pb.speedup, "N={}: speedup", pa.x);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Bake one Tiny artifact and return (dir, store, key, arch, bytes path).
+fn baked_tiny() -> (std::path::PathBuf, DiskStore, ArtifactKey, ArchConfig) {
+    let arch = ArchConfig::default();
+    let acc = Accelerator::new(arch.clone(), CostParams::default());
+    let g = Dataset::Tiny.load().unwrap();
+    let pre = acc.preprocess(&g, false).unwrap();
+    let dir = scratch_dir("negative");
+    let store = DiskStore::open(&dir).unwrap();
+    let key = ArtifactKey::new(Dataset::Tiny, 1.0, false, &arch);
+    assert!(store.save(&key, &pre).unwrap());
+    (dir, store, key, arch)
+}
+
+/// After corrupting the file, the two-tier store must recompute (typed
+/// fallback, no panic), repair the on-disk entry, and a later fresh
+/// store must warm-start from the repaired file.
+fn assert_recovers(dir: &std::path::Path, key: ArtifactKey, what: &str) {
+    let acc = Accelerator::with_defaults();
+    let store = ArtifactStore::with_dir(dir).unwrap();
+    let rebuilt = store.get_or_preprocess(key, &acc).unwrap();
+    let s = store.stats();
+    assert_eq!(s.misses, 1, "{what}: must fall back to recompute");
+    assert_eq!(s.disk_misses, 1, "{what}: the bad file is a disk miss");
+    assert_eq!(s.writes, 1, "{what}: the repaired artifact is rewritten");
+
+    let warm = ArtifactStore::with_dir(dir).unwrap();
+    let loaded = warm.get_or_preprocess(key, &acc).unwrap();
+    let s = warm.stats();
+    assert_eq!((s.misses, s.disk_hits), (0, 1), "{what}: repair must stick");
+    assert_eq!(*rebuilt, *loaded, "{what}: repaired artifact diverges");
+}
+
+#[test]
+fn truncated_file_is_typed_and_recomputed() {
+    let (dir, store, key, arch) = baked_tiny();
+    let path = store.path_of(&key);
+    let bytes = std::fs::read(&path).unwrap();
+    for cut in [0usize, 7, 11, bytes.len() / 2, bytes.len() - 1] {
+        std::fs::write(&path, &bytes[..cut]).unwrap();
+        let err = store.load(&key, &arch).unwrap_err();
+        // Cuts inside the fixed header are length errors; cuts inside the
+        // payload surface as a failed checksum over the shortened body.
+        // Both are typed, neither panics, neither ever yields a plan.
+        assert!(
+            matches!(err, StoreError::Truncated | StoreError::Checksum),
+            "cut at {cut}: unexpected {err:?}"
+        );
+    }
+    std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+    assert_recovers(&dir, key, "truncated");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn flipped_bytes_fail_the_checksum() {
+    let (dir, store, key, arch) = baked_tiny();
+    let path = store.path_of(&key);
+    let clean = std::fs::read(&path).unwrap();
+    // A flipped checksum byte (the ISSUE's literal case), a flipped
+    // payload byte, and a flipped key byte must all be caught.
+    for pos in [clean.len() - 1, clean.len() / 2, 20] {
+        let mut bad = clean.clone();
+        bad[pos] ^= 0x40;
+        std::fs::write(&path, &bad).unwrap();
+        let err = store.load(&key, &arch).unwrap_err();
+        assert!(matches!(err, StoreError::Checksum), "flip at {pos}: unexpected {err:?}");
+    }
+    assert_recovers(&dir, key, "checksum flip");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn stale_versions_are_typed_and_recomputed() {
+    let (dir, store, key, arch) = baked_tiny();
+    let path = store.path_of(&key);
+    let clean = std::fs::read(&path).unwrap();
+
+    // Stale envelope format (bytes 8..12): detected before the checksum.
+    let mut stale = clean.clone();
+    stale[8..12].copy_from_slice(&(FORMAT_VERSION + 1).to_le_bytes());
+    std::fs::write(&path, &stale).unwrap();
+    match store.load(&key, &arch).unwrap_err() {
+        StoreError::FormatVersion { found } => assert_eq!(found, FORMAT_VERSION + 1),
+        other => panic!("unexpected {other:?}"),
+    }
+
+    // Stale payload schema (bytes 12..16) with a *recomputed* checksum —
+    // a well-formed file from a binary with a different schema.
+    let mut stale = clean.clone();
+    stale[12..16].copy_from_slice(&(repro::session::SCHEMA_VERSION + 1).to_le_bytes());
+    let body_len = stale.len() - 8;
+    let sum = fnv1a64(&stale[..body_len]);
+    stale[body_len..].copy_from_slice(&sum.to_le_bytes());
+    std::fs::write(&path, &stale).unwrap();
+    match store.load(&key, &arch).unwrap_err() {
+        StoreError::SchemaVersion { found } => {
+            assert_eq!(found, repro::session::SCHEMA_VERSION + 1)
+        }
+        other => panic!("unexpected {other:?}"),
+    }
+    assert_recovers(&dir, key, "stale schema");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn arch_mismatch_is_typed_and_recomputed() {
+    let (dir, store, key, _arch) = baked_tiny();
+    // Same dataset, different static split: a different key, hence a
+    // different filename. Copy the existing artifact onto the other
+    // key's path — the embedded key bytes must still unmask it.
+    let arch_b = ArchConfig { static_engines: 4, ..ArchConfig::default() };
+    let key_b = ArtifactKey::new(Dataset::Tiny, 1.0, false, &arch_b);
+    std::fs::copy(store.path_of(&key), store.path_of(&key_b)).unwrap();
+    let err = store.load(&key_b, &arch_b).unwrap_err();
+    assert!(matches!(err, StoreError::KeyMismatch), "unexpected {err:?}");
+
+    // The two-tier store recomputes (and repairs) for the mismatched key…
+    let acc_b = Accelerator::new(arch_b.clone(), CostParams::default());
+    let two_tier = ArtifactStore::with_dir(&dir).unwrap();
+    two_tier.get_or_preprocess(key_b, &acc_b).unwrap();
+    let s = two_tier.stats();
+    assert_eq!((s.misses, s.disk_misses, s.writes), (1, 1, 1), "mismatch must recompute");
+    // …while the original key's artifact still disk-hits.
+    let acc = Accelerator::with_defaults();
+    two_tier.get_or_preprocess(key, &acc).unwrap();
+    assert_eq!(two_tier.stats().disk_hits, 1, "original artifact untouched");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn garbage_files_never_panic() {
+    let (dir, store, key, arch) = baked_tiny();
+    let path = store.path_of(&key);
+    let mut rng = SplitMix64::new(0xBAD);
+    for len in [0usize, 1, 8, 64, 4096] {
+        let junk: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+        std::fs::write(&path, &junk).unwrap();
+        assert!(store.load(&key, &arch).is_err(), "len {len}: junk must not load");
+    }
+    assert_recovers(&dir, key, "garbage");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn two_store_disk_stampede_publishes_exactly_once() {
+    // Two independent stores (e.g. two serve processes) sharing one cold
+    // directory: every thread gets a coherent artifact, and exactly one
+    // write reaches the disk across all of them.
+    let dir = scratch_dir("stampede");
+    let store_a = Arc::new(ArtifactStore::with_dir(&dir).unwrap());
+    let store_b = Arc::new(ArtifactStore::with_dir(&dir).unwrap());
+    let arch = ArchConfig::default();
+    let key = ArtifactKey::new(Dataset::Tiny, 1.0, false, &arch);
+    let handles: Vec<_> = (0..8)
+        .map(|i| {
+            let store = if i % 2 == 0 { Arc::clone(&store_a) } else { Arc::clone(&store_b) };
+            std::thread::spawn(move || {
+                store
+                    .get_or_preprocess(key, &Accelerator::with_defaults())
+                    .unwrap()
+            })
+        })
+        .collect();
+    let results: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    for r in &results {
+        assert_eq!(**r, *results[0], "stampede readers must agree");
+    }
+    let sa = store_a.stats();
+    let sb = store_b.stats();
+    // Each store compiles at most once (per-key slot coalescing); a
+    // store may even compile zero times if the other published to disk
+    // before its first probe — but *somebody* compiled, every request
+    // was answered from a compile or a disk hit…
+    assert!(sa.misses <= 1 && sb.misses <= 1, "per-store coalescing: {sa:?} {sb:?}");
+    assert!(sa.misses + sb.misses >= 1, "somebody must compile: {sa:?} {sb:?}");
+    assert_eq!(
+        sa.misses + sb.misses + sa.disk_hits + sb.disk_hits,
+        2,
+        "each store resolves its key exactly once beyond memory: {sa:?} {sb:?}"
+    );
+    // …and the disk sees exactly one publish across both.
+    assert_eq!(sa.writes + sb.writes, 1, "exactly-once on-disk write");
+    assert_eq!(DiskStore::open(&dir).unwrap().entries().len(), 1);
+
+    // A third store warm-starts without compiling anything.
+    let store_c = ArtifactStore::with_dir(&dir).unwrap();
+    let c = store_c.get_or_preprocess(key, &Accelerator::with_defaults()).unwrap();
+    let s = store_c.stats();
+    assert_eq!((s.misses, s.disk_hits), (0, 1));
+    assert_eq!(*c, *results[0]);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn warm_session_runs_with_zero_plan_compilations() {
+    // The acceptance criterion end to end: a session started over a warm
+    // artifact directory serves all four algorithms, at several thread
+    // counts, with zero plan compilations and reports bit-identical to a
+    // cold in-memory session.
+    let dir = scratch_dir("warm-session");
+    let specs = |p: usize| {
+        vec![
+            JobSpec::new(Dataset::Tiny, "bfs").with_source(3).with_parallelism(p),
+            JobSpec::new(Dataset::Tiny, "sssp").with_source(1).with_parallelism(p),
+            JobSpec::new(Dataset::Tiny, "pagerank").with_iterations(4).with_parallelism(p),
+            JobSpec::new(Dataset::Tiny, "wcc").with_parallelism(p),
+        ]
+    };
+
+    // Pass 1 (cold, persisting): compiles once per key and writes.
+    let cold = Session::builder().artifact_dir(&dir).build().unwrap();
+    let cold_reports: Vec<_> = specs(1).iter().map(|s| cold.run(s).unwrap()).collect();
+    let s = cold.artifacts().stats();
+    assert_eq!(s.misses, 2, "one unweighted + one weighted key");
+    assert_eq!(s.writes, 2);
+    drop(cold);
+
+    // Pass 2 (warm, a "restarted fleet"): zero compilations, and every
+    // report — across sequential and pooled parallel execution — is
+    // bit-identical to the cold pass.
+    let warm = Session::builder().artifact_dir(&dir).build().unwrap();
+    for threads in [1usize, 2, 4] {
+        for (spec, want) in specs(threads).iter().zip(&cold_reports) {
+            let got = warm.run(spec).unwrap();
+            let ctx = format!("threads {threads} algo {}", got.algorithm);
+            assert_bit_identical(
+                got.run.as_ref().unwrap(),
+                want.run.as_ref().unwrap(),
+                &ctx,
+            );
+            assert_eq!(got.counts, want.counts, "{ctx}: counts");
+            assert_eq!(got.exec_time_ns, want.exec_time_ns, "{ctx}: time");
+            assert_eq!(got.static_hit_rate, want.static_hit_rate, "{ctx}: hit rate");
+        }
+    }
+    let s = warm.artifacts().stats();
+    assert_eq!(s.misses, 0, "warm start must compile nothing");
+    assert_eq!(s.disk_hits, 2, "both keys load from disk");
+    assert_eq!(s.writes, 0, "nothing new to persist");
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -45,6 +45,79 @@ pub fn with_random_weights(g: &Coo, rng: &mut SplitMix64) -> Coo {
     )
 }
 
+/// A randomized-but-valid architecture for property sweeps: crossbar
+/// size, engine count, static split, replacement policy, reuse flag and
+/// execution order all vary with the seed. Shared by the
+/// parallel-determinism and artifact-IO suites so their coverage can
+/// never silently diverge.
+pub fn random_arch(rng: &mut SplitMix64) -> repro::accel::ArchConfig {
+    use repro::accel::{ArchConfig, PolicyKind};
+    use repro::pattern::tables::ExecOrder;
+    let cfg = ArchConfig {
+        crossbar_size: [2, 4, 8][rng.next_index(3)],
+        total_engines: 4 + rng.next_bounded(28) as u32,
+        policy: [
+            PolicyKind::Lru,
+            PolicyKind::RoundRobin,
+            PolicyKind::Lfu,
+            PolicyKind::Random,
+        ][rng.next_index(4)],
+        dynamic_reuse: rng.next_bool(0.5),
+        order: if rng.next_bool(0.5) { ExecOrder::ColumnMajor } else { ExecOrder::RowMajor },
+        ..ArchConfig::default()
+    };
+    ArchConfig {
+        static_engines: rng.next_bounded(cfg.total_engines as u64) as u32,
+        ..cfg
+    }
+}
+
+/// Fresh scratch directory under the system temp root (the offline image
+/// vendors no tempfile crate). Unique per process *and* call, so
+/// parallel tests never share one; callers remove it when done (leaks
+/// land in the OS temp dir, which is fine for CI).
+pub fn scratch_dir(tag: &str) -> std::path::PathBuf {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    let dir = std::env::temp_dir().join(format!(
+        "repro-test-{tag}-{}-{}",
+        std::process::id(),
+        SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Every observable field of a [`repro::sched::RunResult`], compared bit
+/// for bit — the determinism contract extended to loaded plans: one ULP
+/// of timing or one event count off is a bug, not a tolerance question.
+pub fn assert_bit_identical(
+    got: &repro::sched::RunResult,
+    want: &repro::sched::RunResult,
+    ctx: &str,
+) {
+    assert_eq!(got.values, want.values, "{ctx}: values diverge");
+    assert_eq!(got.counts, want.counts, "{ctx}: event counts diverge");
+    assert_eq!(got.init_counts, want.init_counts, "{ctx}: init counts diverge");
+    assert_eq!(got.exec_time_ns, want.exec_time_ns, "{ctx}: modeled time diverges");
+    assert_eq!(got.init_time_ns, want.init_time_ns, "{ctx}: init time diverges");
+    assert_eq!(got.supersteps, want.supersteps, "{ctx}: supersteps diverge");
+    assert_eq!(got.iterations, want.iterations, "{ctx}: iterations diverge");
+    assert_eq!(got.static_ops, want.static_ops, "{ctx}: static ops diverge");
+    assert_eq!(got.dynamic_ops, want.dynamic_ops, "{ctx}: dynamic ops diverge");
+    assert_eq!(got.dynamic_hits, want.dynamic_hits, "{ctx}: dynamic hits diverge");
+    assert_eq!(
+        got.static_hit_rate(),
+        want.static_hit_rate(),
+        "{ctx}: static hit rate diverges"
+    );
+    assert_eq!(
+        got.max_dynamic_cell_writes, want.max_dynamic_cell_writes,
+        "{ctx}: wear diverges"
+    );
+    assert_eq!(got.engines, want.engines, "{ctx}: per-engine summaries diverge");
+}
+
 /// The harness-default superstep lane count: `REPRO_THREADS` if set (the
 /// CI matrix runs the whole suite at 1 and 4; `0` = auto, mapped through
 /// the shared [`repro::sched::resolve_threads`] helper), else 2 so a

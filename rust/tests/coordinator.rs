@@ -15,7 +15,7 @@ use repro::session::{Backend, JobSpec, Session};
 use repro::util::SplitMix64;
 
 mod common;
-use common::{assert_close, default_threads};
+use common::{assert_close, default_threads, scratch_dir};
 
 fn service(workers: usize) -> Service {
     Service::spawn(ServiceConfig {
@@ -27,6 +27,7 @@ fn service(workers: usize) -> Service {
         // suite runs against both the sequential and the parallel
         // scheduler in CI, and every assertion must hold unchanged.
         parallelism: default_threads(),
+        artifact_dir: None,
     })
     .unwrap()
 }
@@ -260,6 +261,104 @@ fn serve_jobs_share_one_compiled_execution_plan() {
     assert!(Arc::ptr_eq(&a, &b), "artifact (and plan) instance must be shared");
     assert!(a.plan.num_ops() > 0);
     assert_eq!(a.plan.num_ops(), a.st.len(), "one plan op per ST entry");
+}
+
+#[test]
+fn serve_warm_start_performs_zero_plan_compilations() {
+    // The tentpole acceptance at the serving layer: a "redeployed" fleet
+    // (a second Service over the same --artifact-dir) deserializes its
+    // compiled plans instead of re-running Alg. 1, and serves reports
+    // bit-identical to the cold fleet's.
+    let dir = scratch_dir("serve-warm");
+    let batch = || {
+        vec![
+            JobSpec::new(Dataset::Tiny, "bfs").with_source(2),
+            JobSpec::new(Dataset::Tiny, "sssp").with_source(0),
+            JobSpec::new(Dataset::Tiny, "pagerank").with_iterations(5),
+            JobSpec::new(Dataset::Tiny, "wcc"),
+        ]
+    };
+    let config = || ServiceConfig {
+        workers: 4,
+        parallelism: default_threads(),
+        artifact_dir: Some(dir.clone()),
+        ..ServiceConfig::default()
+    };
+
+    let cold = Service::spawn(config()).unwrap();
+    let a: Vec<_> = cold
+        .submit_batch(batch())
+        .unwrap()
+        .into_iter()
+        .map(|p| p.wait().unwrap())
+        .collect();
+    let s = cold.session().artifacts().stats();
+    assert_eq!(s.misses, 2, "cold fleet compiles once per (weighted) key");
+    assert_eq!(s.writes, 2, "cold fleet persists both artifacts");
+    drop(cold);
+
+    let warm = Service::spawn(config()).unwrap();
+    let b: Vec<_> = warm
+        .submit_batch(batch())
+        .unwrap()
+        .into_iter()
+        .map(|p| p.wait().unwrap())
+        .collect();
+    let s = warm.session().artifacts().stats();
+    assert_eq!(s.misses, 0, "warm fleet must perform zero plan compilations");
+    assert_eq!(s.disk_hits, 2, "warm fleet loads both artifacts from disk");
+    for (x, y) in a.iter().zip(&b) {
+        let algo = &x.report.algorithm;
+        assert_eq!(
+            x.report.run.as_ref().unwrap().values,
+            y.report.run.as_ref().unwrap().values,
+            "{algo}: warm values diverge"
+        );
+        assert_eq!(x.report.counts, y.report.counts, "{algo}: warm counts diverge");
+        assert_eq!(x.report.exec_time_ns, y.report.exec_time_ns, "{algo}: warm time diverges");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn artifact_store_clear_removes_disk_entries_and_tracks_disk_stats() {
+    // ArtifactStats disk counters + the documented clear() contract:
+    // clearing a two-tier store empties the directory too, so the next
+    // session recomputes instead of resurrecting a cleared artifact.
+    let dir = scratch_dir("clear-disk");
+    let store = Arc::new(repro::session::ArtifactStore::with_dir(&dir).unwrap());
+    let session = Arc::new(
+        Session::builder().artifacts(Arc::clone(&store)).build().unwrap(),
+    );
+    let svc = Service::with_session(Arc::clone(&session), 2);
+    let pending = svc
+        .submit_batch((0..4u32).map(|i| JobSpec::new(Dataset::Tiny, "bfs").with_source(i)))
+        .unwrap();
+    for p in pending {
+        p.wait().unwrap();
+    }
+    let s = store.stats();
+    assert_eq!((s.misses, s.disk_misses, s.writes), (1, 1, 1));
+    assert_eq!(s.hits, 3);
+    assert_eq!(
+        repro::session::DiskStore::open(&dir).unwrap().entries().len(),
+        1,
+        "the artifact file must exist before clear()"
+    );
+
+    store.clear();
+    assert!(
+        repro::session::DiskStore::open(&dir).unwrap().entries().is_empty(),
+        "clear() must remove on-disk entries"
+    );
+    assert_eq!(store.stats().entries, 0);
+
+    // Post-clear: a fresh request is a full recompute (and re-persists).
+    svc.submit_blocking(JobSpec::new(Dataset::Tiny, "bfs")).unwrap();
+    let s = store.stats();
+    assert_eq!(s.misses, 2, "cleared artifact must be recompiled");
+    assert_eq!(s.writes, 2, "and persisted again");
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 #[test]

@@ -10,64 +10,20 @@
 //! not a tolerance question; assertions print the failing seed like
 //! `properties.rs` does.
 
-use repro::accel::{Accelerator, ArchConfig, PolicyKind};
+use repro::accel::{Accelerator, ArchConfig};
 use repro::algo::traits::VertexProgram;
 use repro::algo::{Bfs, PageRank, Sssp, Wcc};
 use repro::cost::CostParams;
 use repro::graph::datasets::Dataset;
-use repro::pattern::tables::ExecOrder;
 use repro::sched::executor::NativeExecutor;
-use repro::sched::{run_parallel_pooled, run_parallel_scoped, RunResult, WorkerPool};
+use repro::sched::{run_parallel_pooled, run_parallel_scoped, WorkerPool};
 use repro::session::{JobSpec, Session};
 use repro::util::SplitMix64;
 
 mod common;
-use common::{default_threads, random_graph, with_random_weights};
-
-/// Every observable field of a run, compared bit for bit.
-fn assert_bit_identical(got: &RunResult, want: &RunResult, ctx: &str) {
-    assert_eq!(got.values, want.values, "{ctx}: values diverge");
-    assert_eq!(got.counts, want.counts, "{ctx}: event counts diverge");
-    assert_eq!(got.init_counts, want.init_counts, "{ctx}: init counts diverge");
-    assert_eq!(got.exec_time_ns, want.exec_time_ns, "{ctx}: modeled time diverges");
-    assert_eq!(got.init_time_ns, want.init_time_ns, "{ctx}: init time diverges");
-    assert_eq!(got.supersteps, want.supersteps, "{ctx}: supersteps diverge");
-    assert_eq!(got.iterations, want.iterations, "{ctx}: iterations diverge");
-    assert_eq!(got.static_ops, want.static_ops, "{ctx}: static ops diverge");
-    assert_eq!(got.dynamic_ops, want.dynamic_ops, "{ctx}: dynamic ops diverge");
-    assert_eq!(got.dynamic_hits, want.dynamic_hits, "{ctx}: dynamic hits diverge");
-    assert_eq!(
-        got.static_hit_rate(),
-        want.static_hit_rate(),
-        "{ctx}: static hit rate diverges"
-    );
-    assert_eq!(
-        got.max_dynamic_cell_writes, want.max_dynamic_cell_writes,
-        "{ctx}: wear diverges"
-    );
-    assert_eq!(got.engines, want.engines, "{ctx}: per-engine summaries diverge");
-}
-
-/// A randomized-but-valid architecture, mirroring `properties.rs`.
-fn random_arch(rng: &mut SplitMix64) -> ArchConfig {
-    let cfg = ArchConfig {
-        crossbar_size: [2, 4, 8][rng.next_index(3)],
-        total_engines: 4 + rng.next_bounded(28) as u32,
-        policy: [
-            PolicyKind::Lru,
-            PolicyKind::RoundRobin,
-            PolicyKind::Lfu,
-            PolicyKind::Random,
-        ][rng.next_index(4)],
-        dynamic_reuse: rng.next_bool(0.5),
-        order: if rng.next_bool(0.5) { ExecOrder::ColumnMajor } else { ExecOrder::RowMajor },
-        ..ArchConfig::default()
-    };
-    ArchConfig {
-        static_engines: rng.next_bounded(cfg.total_engines as u64) as u32,
-        ..cfg
-    }
-}
+use common::{
+    assert_bit_identical, default_threads, random_arch, random_graph, with_random_weights,
+};
 
 #[test]
 fn prop_parallel_runs_bit_identical_across_threads_and_oracle() {
