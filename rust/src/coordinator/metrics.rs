@@ -7,6 +7,8 @@ use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
+use crate::session::DeltaReport;
+
 /// Per-algorithm counters plus the queue-depth gauge.
 #[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
 pub struct AlgoStats {
@@ -27,6 +29,16 @@ pub struct Metrics {
     max_latency_us: AtomicU64,
     /// Total subgraph ops processed across jobs.
     pub subgraph_ops: AtomicU64,
+    /// Streaming-mutation counters (fed by the service's `apply_delta`
+    /// entry point): delta batches accepted.
+    pub delta_batches: AtomicU64,
+    /// Dirty adjacency windows across all accepted batches.
+    pub delta_dirty_partitions: AtomicU64,
+    /// Plan ops re-emitted by incremental patching.
+    pub delta_patched_ops: AtomicU64,
+    /// Cached artifacts patched in place — each one a whole-plan
+    /// recompile the delta path avoided.
+    pub delta_avoided_recompiles: AtomicU64,
     per_algo: Mutex<BTreeMap<String, AlgoStats>>,
 }
 
@@ -38,6 +50,10 @@ pub struct MetricsSnapshot {
     pub mean_latency_us: f64,
     pub max_latency_us: u64,
     pub subgraph_ops: u64,
+    pub delta_batches: u64,
+    pub delta_dirty_partitions: u64,
+    pub delta_patched_ops: u64,
+    pub delta_avoided_recompiles: u64,
     /// Keyed by algorithm id, sorted.
     pub per_algorithm: BTreeMap<String, AlgoStats>,
 }
@@ -68,6 +84,18 @@ impl Metrics {
         e.queue_depth = e.queue_depth.saturating_sub(1);
     }
 
+    /// Fold one accepted delta batch's [`DeltaReport`] into the
+    /// streaming-mutation counters.
+    pub fn record_delta(&self, report: &DeltaReport) {
+        self.delta_batches.fetch_add(1, Ordering::Relaxed);
+        self.delta_dirty_partitions
+            .fetch_add(u64::from(report.stats.dirty_partitions), Ordering::Relaxed);
+        self.delta_patched_ops
+            .fetch_add(u64::from(report.stats.patched_ops), Ordering::Relaxed);
+        self.delta_avoided_recompiles
+            .fetch_add(u64::from(report.patched_artifacts), Ordering::Relaxed);
+    }
+
     /// Current in-flight gauge for one algorithm.
     pub fn queue_depth(&self, algo: &str) -> u64 {
         self.per_algo
@@ -87,6 +115,10 @@ impl Metrics {
             mean_latency_us: if completed > 0 { total as f64 / completed as f64 } else { 0.0 },
             max_latency_us: self.max_latency_us.load(Ordering::Relaxed),
             subgraph_ops: self.subgraph_ops.load(Ordering::Relaxed),
+            delta_batches: self.delta_batches.load(Ordering::Relaxed),
+            delta_dirty_partitions: self.delta_dirty_partitions.load(Ordering::Relaxed),
+            delta_patched_ops: self.delta_patched_ops.load(Ordering::Relaxed),
+            delta_avoided_recompiles: self.delta_avoided_recompiles.load(Ordering::Relaxed),
             per_algorithm: self.per_algo.lock().unwrap().clone(),
         }
     }
@@ -126,6 +158,29 @@ mod tests {
         assert_eq!(s.per_algorithm["bfs"], AlgoStats { completed: 1, failed: 0, queue_depth: 1 });
         assert_eq!(s.per_algorithm["sssp"], AlgoStats { completed: 0, failed: 1, queue_depth: 0 });
         assert_eq!(m.queue_depth("pagerank"), 0);
+    }
+
+    #[test]
+    fn delta_counters_accumulate_reports() {
+        use crate::sched::PatchStats;
+        let m = Metrics::default();
+        m.record_delta(&DeltaReport {
+            deltas: 2,
+            patched_artifacts: 2,
+            skipped_keys: 0,
+            stats: PatchStats { dirty_partitions: 3, patched_ops: 5, ..PatchStats::default() },
+        });
+        m.record_delta(&DeltaReport {
+            deltas: 1,
+            patched_artifacts: 0,
+            skipped_keys: 2,
+            stats: PatchStats { dirty_partitions: 1, patched_ops: 1, ..PatchStats::default() },
+        });
+        let s = m.snapshot();
+        assert_eq!(s.delta_batches, 2);
+        assert_eq!(s.delta_dirty_partitions, 4);
+        assert_eq!(s.delta_patched_ops, 6);
+        assert_eq!(s.delta_avoided_recompiles, 2);
     }
 
     #[test]

@@ -16,7 +16,8 @@ use anyhow::Result;
 use crate::accel::{ArchConfig, SimReport};
 use crate::cost::CostParams;
 use crate::sched::StepExecutor;
-use crate::session::{AlgorithmId, Backend, JobSpec, Session};
+use crate::graph::DeltaBatch;
+use crate::session::{AlgorithmId, Backend, DeltaReport, JobSpec, Session};
 
 use super::metrics::Metrics;
 
@@ -190,6 +191,20 @@ impl Service {
         &self.session
     }
 
+    /// Apply a streaming edge-delta batch to the spec's `(dataset,
+    /// scale)` pair through the shared session
+    /// ([`Session::apply_delta`]): every cached artifact is patched in
+    /// place, never recompiled, and later jobs — from any worker — serve
+    /// the mutated graph. Synchronous (it runs on the caller, not the
+    /// job queue): once it returns, every job submitted afterwards sees
+    /// the mutated graph; a job already mid-run keeps the artifact it
+    /// checked out. Accepted batches feed the `delta_*` metrics.
+    pub fn apply_delta(&self, spec: &JobSpec, batch: &DeltaBatch) -> Result<DeltaReport> {
+        let report = self.session.apply_delta(spec, batch)?;
+        self.metrics.record_delta(&report);
+        Ok(report)
+    }
+
     /// Submit a job; returns a handle resolving when a worker completes
     /// it.
     pub fn submit(&self, job: impl Into<JobSpec>) -> Result<Pending> {
@@ -320,6 +335,39 @@ mod tests {
         );
         assert_eq!(a.counts, b.counts);
         assert_eq!(a.exec_time_ns, b.exec_time_ns);
+    }
+
+    #[test]
+    fn apply_delta_patches_served_artifacts_and_counts() {
+        let svc = tiny_service(2);
+        let spec = JobSpec::new(Dataset::Tiny, "bfs").with_source(0);
+        svc.submit_blocking(spec.clone()).unwrap();
+
+        let g = svc.session().load_graph(&spec).unwrap();
+        let e = g.edges[0];
+        let batch = crate::graph::DeltaBatch::new(
+            g.num_vertices,
+            vec![crate::graph::EdgeDelta::remove(e.src, e.dst)],
+        )
+        .unwrap();
+        let report = svc.apply_delta(&spec, &batch).unwrap();
+        assert_eq!(report.patched_artifacts, 1);
+
+        // Served from the patched plan — no recompile — and bit-identical
+        // to a cold compile of the mutated graph.
+        let after = svc.submit_blocking(spec.clone()).unwrap().report;
+        assert_eq!(svc.session().artifacts().stats().misses, 1);
+        let cold = Session::with_defaults()
+            .unwrap()
+            .run_on(&spec, &svc.session().load_graph(&spec).unwrap())
+            .unwrap();
+        assert_eq!(after.counts, cold.counts);
+        assert_eq!(after.exec_time_ns, cold.exec_time_ns);
+
+        let snap = svc.metrics.snapshot();
+        assert_eq!(snap.delta_batches, 1);
+        assert_eq!(snap.delta_avoided_recompiles, 1);
+        assert!(snap.delta_dirty_partitions >= 1);
     }
 
     #[test]

@@ -3,7 +3,9 @@
 //! The paper stores input graphs in COO "to ensure efficient storage and
 //! sequential edge access, while utilizing adjacency matrix format in
 //! local memory" (§II.B). All preprocessing starts from a sorted,
-//! deduplicated COO.
+//! deduplicated, loop-free COO: `from_edges` is the single ingest
+//! choke point enforcing the canonical form, so delta application and a
+//! cold rebuild of the same mutated graph agree edge-for-edge.
 
 use std::cmp::Ordering;
 
@@ -39,10 +41,13 @@ pub struct Coo {
 }
 
 impl Coo {
-    /// Build from raw edges: clamps the vertex count, sorts row-major and
-    /// removes duplicate (src, dst) pairs (keeping the first weight).
+    /// Build from raw edges: drops out-of-range endpoints and self-loops
+    /// (the generators already reject loops; ingest must agree so every
+    /// path to a `Coo` yields the same canonical edge set), sorts
+    /// row-major and removes duplicate (src, dst) pairs (keeping the
+    /// first weight).
     pub fn from_edges(num_vertices: u32, mut edges: Vec<Edge>) -> Self {
-        edges.retain(|e| e.src < num_vertices && e.dst < num_vertices);
+        edges.retain(|e| e.src < num_vertices && e.dst < num_vertices && e.src != e.dst);
         edges.sort_unstable_by(|a, b| a.key().cmp(&b.key()));
         edges.dedup_by(|a, b| a.key() == b.key());
         Self { num_vertices, edges }
@@ -56,15 +61,14 @@ impl Coo {
         self.edges.is_empty()
     }
 
-    /// Make the graph undirected by mirroring every edge (self-loops kept
-    /// single). Paper benchmarks are undirected (§IV.A Table 2).
+    /// Make the graph undirected by mirroring every edge (a canonical
+    /// `Coo` holds no self-loops, so every edge mirrors). Paper
+    /// benchmarks are undirected (§IV.A Table 2).
     pub fn symmetrize(&self) -> Coo {
         let mut edges = Vec::with_capacity(self.edges.len() * 2);
         for e in &self.edges {
             edges.push(*e);
-            if e.src != e.dst {
-                edges.push(Edge::weighted(e.dst, e.src, e.weight));
-            }
+            edges.push(Edge::weighted(e.dst, e.src, e.weight));
         }
         Coo::from_edges(self.num_vertices, edges)
     }
@@ -143,9 +147,16 @@ mod tests {
     }
 
     #[test]
-    fn symmetrize_keeps_self_loops_single() {
-        let g = Coo::from_edges(2, vec![Edge::new(0, 0), Edge::new(0, 1)]).symmetrize();
-        assert_eq!(g.num_edges(), 3); // (0,0), (0,1), (1,0)
+    fn from_edges_rejects_self_loops() {
+        // Ingest agrees with the generators: no path produces a loop.
+        let g = Coo::from_edges(3, vec![Edge::new(0, 0), Edge::new(0, 1), Edge::new(2, 2)]);
+        assert_eq!(g.num_edges(), 1);
+        assert_eq!((g.edges[0].src, g.edges[0].dst), (0, 1));
+        assert!(g.is_canonical());
+        // ...and symmetrize can't reintroduce one.
+        let s = g.symmetrize();
+        assert_eq!(s.num_edges(), 2);
+        assert!(s.edges.iter().all(|e| e.src != e.dst));
     }
 
     #[test]

@@ -1,0 +1,406 @@
+//! Edge deltas — the typed mutation language of the streaming ingest
+//! path.
+//!
+//! A [`DeltaBatch`] is a validated, canonicalized set of edge mutations
+//! (add / remove / reweight) against one graph. Validation happens in
+//! two stages: graph-independent checks at construction (no self-loops —
+//! the same rule `Coo::from_edges` enforces — endpoints in range, finite
+//! weights, one op per (src, dst) pair with last-wins dedup), and
+//! graph-dependent checks at application time ([`DeltaBatch::apply_to_coo`]
+//! rejects adding an edge that exists or removing/reweighting one that
+//! doesn't). `apply_to_coo` is the semantic ground truth the incremental
+//! plan patcher (`sched::patch`) is differentially tested against: a
+//! patched plan must be bit-identical to a cold rebuild of
+//! `apply_to_coo`'s output.
+
+use std::fmt;
+
+use super::coo::{Coo, Edge};
+
+/// What a single delta does to its (src, dst) pair.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeltaOp {
+    /// Insert an edge that must not already exist.
+    Add,
+    /// Delete an edge that must exist.
+    Remove,
+    /// Replace the weight of an edge that must exist.
+    Reweight,
+}
+
+/// One validated edge mutation. `weight` is 1.0 for unweighted adds and
+/// ignored by `Remove`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EdgeDelta {
+    pub op: DeltaOp,
+    pub src: u32,
+    pub dst: u32,
+    pub weight: f32,
+}
+
+impl EdgeDelta {
+    pub fn add(src: u32, dst: u32) -> Self {
+        Self { op: DeltaOp::Add, src, dst, weight: 1.0 }
+    }
+
+    pub fn add_weighted(src: u32, dst: u32, weight: f32) -> Self {
+        Self { op: DeltaOp::Add, src, dst, weight }
+    }
+
+    pub fn remove(src: u32, dst: u32) -> Self {
+        Self { op: DeltaOp::Remove, src, dst, weight: 1.0 }
+    }
+
+    pub fn reweight(src: u32, dst: u32, weight: f32) -> Self {
+        Self { op: DeltaOp::Reweight, src, dst, weight }
+    }
+}
+
+/// Typed rejection — every invalid delta is a specific error, never a
+/// silently dropped edge (dropping would let the patched plan and the
+/// cold rebuild disagree about what the mutated graph *is*).
+#[derive(Debug, Clone, PartialEq)]
+pub enum DeltaError {
+    /// (v, v) edges are rejected everywhere (`Coo::from_edges`, the
+    /// generators, and here) so all paths agree on the edge set.
+    SelfLoop { vertex: u32 },
+    VertexOutOfRange { vertex: u32, num_vertices: u32 },
+    /// NaN / infinite weights would poison the numeric path.
+    BadWeight { src: u32, dst: u32, weight: f32 },
+    /// `Add` of an edge already present.
+    EdgeExists { src: u32, dst: u32 },
+    /// `Remove` / `Reweight` of an edge not present.
+    EdgeMissing { src: u32, dst: u32 },
+    /// Batch built against a different vertex count than the graph.
+    GraphMismatch { batch: u32, graph: u32 },
+    /// Text-format parse failure (1-based line number).
+    Parse { line: usize, what: &'static str },
+}
+
+impl fmt::Display for DeltaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DeltaError::SelfLoop { vertex } => {
+                write!(f, "self-loop ({vertex}, {vertex}) rejected")
+            }
+            DeltaError::VertexOutOfRange { vertex, num_vertices } => {
+                write!(f, "vertex {vertex} out of range (graph has {num_vertices})")
+            }
+            DeltaError::BadWeight { src, dst, weight } => {
+                write!(f, "non-finite weight {weight} on ({src}, {dst})")
+            }
+            DeltaError::EdgeExists { src, dst } => {
+                write!(f, "cannot add ({src}, {dst}): edge already exists")
+            }
+            DeltaError::EdgeMissing { src, dst } => {
+                write!(f, "cannot remove/reweight ({src}, {dst}): edge not present")
+            }
+            DeltaError::GraphMismatch { batch, graph } => {
+                write!(f, "batch built for {batch} vertices, graph has {graph}")
+            }
+            DeltaError::Parse { line, what } => write!(f, "line {line}: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for DeltaError {}
+
+/// A validated, canonicalized batch of edge mutations against a graph
+/// with a fixed vertex count. Deltas are stored sorted by (src, dst)
+/// with exactly one op per pair (last-wins), so identical mutation sets
+/// compare equal and application order within a batch can never matter.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeltaBatch {
+    num_vertices: u32,
+    deltas: Vec<EdgeDelta>,
+}
+
+impl DeltaBatch {
+    /// Validate and canonicalize. Graph-independent checks only; the
+    /// exists/missing checks happen against a concrete graph in
+    /// [`apply_to_coo`](Self::apply_to_coo).
+    pub fn new(num_vertices: u32, deltas: Vec<EdgeDelta>) -> Result<Self, DeltaError> {
+        for d in &deltas {
+            if d.src == d.dst {
+                return Err(DeltaError::SelfLoop { vertex: d.src });
+            }
+            for v in [d.src, d.dst] {
+                if v >= num_vertices {
+                    return Err(DeltaError::VertexOutOfRange { vertex: v, num_vertices });
+                }
+            }
+            if !d.weight.is_finite() {
+                return Err(DeltaError::BadWeight { src: d.src, dst: d.dst, weight: d.weight });
+            }
+        }
+        // Last-wins dedup per (src, dst): a stable sort on the pair keeps
+        // arrival order within a pair, then dedup keeps the final op.
+        let mut deltas = deltas;
+        deltas.sort_by_key(|d| (d.src, d.dst));
+        let mut out: Vec<EdgeDelta> = Vec::with_capacity(deltas.len());
+        for d in deltas {
+            match out.last_mut() {
+                Some(last) if (last.src, last.dst) == (d.src, d.dst) => *last = d,
+                _ => out.push(d),
+            }
+        }
+        Ok(Self { num_vertices, deltas: out })
+    }
+
+    /// An empty batch (applying it is the identity).
+    pub fn empty(num_vertices: u32) -> Self {
+        Self { num_vertices, deltas: Vec::new() }
+    }
+
+    pub fn num_vertices(&self) -> u32 {
+        self.num_vertices
+    }
+
+    pub fn len(&self) -> usize {
+        self.deltas.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.deltas.is_empty()
+    }
+
+    /// Canonical (src, dst)-sorted view of the mutations.
+    pub fn deltas(&self) -> &[EdgeDelta] {
+        &self.deltas
+    }
+
+    /// Apply to a canonical COO, producing the mutated graph — the
+    /// ground-truth semantics every incremental path is tested against.
+    /// `Add` requires the edge absent; `Remove` / `Reweight` require it
+    /// present; violations are typed errors and the input is untouched.
+    pub fn apply_to_coo(&self, g: &Coo) -> Result<Coo, DeltaError> {
+        if self.num_vertices != g.num_vertices {
+            return Err(DeltaError::GraphMismatch {
+                batch: self.num_vertices,
+                graph: g.num_vertices,
+            });
+        }
+        let find = |src: u32, dst: u32| {
+            g.edges.binary_search_by_key(&(src, dst), |e| (e.src, e.dst))
+        };
+        // Validate the whole batch before building anything, so a failed
+        // apply has no partial effect.
+        for d in &self.deltas {
+            let present = find(d.src, d.dst).is_ok();
+            match d.op {
+                DeltaOp::Add if present => {
+                    return Err(DeltaError::EdgeExists { src: d.src, dst: d.dst });
+                }
+                DeltaOp::Remove | DeltaOp::Reweight if !present => {
+                    return Err(DeltaError::EdgeMissing { src: d.src, dst: d.dst });
+                }
+                _ => {}
+            }
+        }
+        let mut edges = g.edges.clone();
+        for d in &self.deltas {
+            match d.op {
+                DeltaOp::Add => edges.push(Edge::weighted(d.src, d.dst, d.weight)),
+                DeltaOp::Remove => {
+                    let i = find(d.src, d.dst).expect("validated above");
+                    // Tombstone via an out-of-range endpoint: `from_edges`
+                    // drops it, and indices into `g.edges` stay stable.
+                    edges[i].src = u32::MAX;
+                }
+                DeltaOp::Reweight => {
+                    let i = find(d.src, d.dst).expect("validated above");
+                    edges[i].weight = d.weight;
+                }
+            }
+        }
+        Ok(Coo::from_edges(g.num_vertices, edges))
+    }
+
+    /// Parse the `repro mutate --deltas <file>` text format: one delta
+    /// per line, `#` comments and blank lines ignored.
+    ///
+    /// ```text
+    /// + src dst [weight]   add (weight defaults to 1.0)
+    /// - src dst            remove
+    /// = src dst weight     reweight
+    /// ```
+    pub fn parse(text: &str, num_vertices: u32) -> Result<Self, DeltaError> {
+        let mut deltas = Vec::new();
+        for (idx, raw) in text.lines().enumerate() {
+            let line = idx + 1;
+            let s = raw.trim();
+            if s.is_empty() || s.starts_with('#') {
+                continue;
+            }
+            let mut toks = s.split_whitespace();
+            let op = toks.next().expect("non-empty line has a token");
+            let mut vertex = |what| {
+                toks.next()
+                    .and_then(|t| t.parse::<u32>().ok())
+                    .ok_or(DeltaError::Parse { line, what })
+            };
+            let src = vertex("expected source vertex")?;
+            let dst = vertex("expected destination vertex")?;
+            let weight = toks.next().map(|t| {
+                t.parse::<f32>().map_err(|_| DeltaError::Parse { line, what: "bad weight" })
+            });
+            let d = match (op, weight) {
+                ("+", None) => EdgeDelta::add(src, dst),
+                ("+", Some(w)) => EdgeDelta::add_weighted(src, dst, w?),
+                ("-", None) => EdgeDelta::remove(src, dst),
+                ("=", Some(w)) => EdgeDelta::reweight(src, dst, w?),
+                ("=", None) => {
+                    return Err(DeltaError::Parse { line, what: "reweight needs a weight" })
+                }
+                ("-", Some(_)) => {
+                    return Err(DeltaError::Parse { line, what: "remove takes no weight" })
+                }
+                _ => return Err(DeltaError::Parse { line, what: "expected '+', '-' or '='" }),
+            };
+            if toks.next().is_some() {
+                return Err(DeltaError::Parse { line, what: "trailing tokens" });
+            }
+            deltas.push(d);
+        }
+        Self::new(num_vertices, deltas)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Coo {
+        Coo::from_edges(
+            4,
+            vec![
+                Edge::weighted(0, 1, 1.5),
+                Edge::weighted(1, 2, 2.5),
+                Edge::weighted(3, 0, 3.5),
+            ],
+        )
+    }
+
+    #[test]
+    fn construction_rejects_invalid_deltas() {
+        assert_eq!(
+            DeltaBatch::new(4, vec![EdgeDelta::add(2, 2)]),
+            Err(DeltaError::SelfLoop { vertex: 2 })
+        );
+        assert_eq!(
+            DeltaBatch::new(4, vec![EdgeDelta::add(0, 9)]),
+            Err(DeltaError::VertexOutOfRange { vertex: 9, num_vertices: 4 })
+        );
+        assert!(matches!(
+            DeltaBatch::new(4, vec![EdgeDelta::add_weighted(0, 2, f32::NAN)]),
+            Err(DeltaError::BadWeight { src: 0, dst: 2, .. })
+        ));
+    }
+
+    #[test]
+    fn dedup_is_last_wins_and_sorted() {
+        let b = DeltaBatch::new(
+            4,
+            vec![
+                EdgeDelta::add(2, 3),
+                EdgeDelta::add_weighted(0, 2, 9.0),
+                EdgeDelta::remove(2, 3), // supersedes the add above
+            ],
+        )
+        .unwrap();
+        assert_eq!(b.len(), 2);
+        assert_eq!((b.deltas()[0].src, b.deltas()[0].dst), (0, 2));
+        assert_eq!(b.deltas()[1].op, DeltaOp::Remove);
+    }
+
+    #[test]
+    fn apply_matches_manual_edge_set() {
+        let g = toy();
+        let b = DeltaBatch::new(
+            4,
+            vec![
+                EdgeDelta::add_weighted(2, 0, 7.0),
+                EdgeDelta::remove(1, 2),
+                EdgeDelta::reweight(0, 1, 8.0),
+            ],
+        )
+        .unwrap();
+        let m = b.apply_to_coo(&g).unwrap();
+        let want = Coo::from_edges(
+            4,
+            vec![
+                Edge::weighted(0, 1, 8.0),
+                Edge::weighted(2, 0, 7.0),
+                Edge::weighted(3, 0, 3.5),
+            ],
+        );
+        assert_eq!(m.edges, want.edges);
+        assert!(m.is_canonical());
+    }
+
+    #[test]
+    fn apply_errors_are_typed_and_leave_input_untouched() {
+        let g = toy();
+        let exists = DeltaBatch::new(4, vec![EdgeDelta::add(0, 1)]).unwrap();
+        assert_eq!(exists.apply_to_coo(&g), Err(DeltaError::EdgeExists { src: 0, dst: 1 }));
+        let missing = DeltaBatch::new(4, vec![EdgeDelta::remove(2, 3)]).unwrap();
+        assert_eq!(missing.apply_to_coo(&g), Err(DeltaError::EdgeMissing { src: 2, dst: 3 }));
+        let mismatch = DeltaBatch::empty(5);
+        assert_eq!(
+            mismatch.apply_to_coo(&g),
+            Err(DeltaError::GraphMismatch { batch: 5, graph: 4 })
+        );
+    }
+
+    #[test]
+    fn empty_batch_is_identity() {
+        let g = toy();
+        let m = DeltaBatch::empty(4).apply_to_coo(&g).unwrap();
+        assert_eq!(m.edges, g.edges);
+    }
+
+    #[test]
+    fn remove_then_re_add_round_trips_topology() {
+        let g = toy();
+        let removed = DeltaBatch::new(4, vec![EdgeDelta::remove(1, 2)])
+            .unwrap()
+            .apply_to_coo(&g)
+            .unwrap();
+        let back = DeltaBatch::new(4, vec![EdgeDelta::add_weighted(1, 2, 2.5)])
+            .unwrap()
+            .apply_to_coo(&removed)
+            .unwrap();
+        assert_eq!(back.edges, g.edges);
+    }
+
+    #[test]
+    fn parse_text_format() {
+        let text = "# churn\n+ 2 0 7.0\n\n- 1 2\n= 0 1 8.0\n+ 2 3\n";
+        let b = DeltaBatch::parse(text, 4).unwrap();
+        assert_eq!(b.len(), 4);
+        let add = b.deltas().iter().find(|d| (d.src, d.dst) == (2, 3)).unwrap();
+        assert_eq!((add.op, add.weight), (DeltaOp::Add, 1.0));
+    }
+
+    #[test]
+    fn parse_rejects_malformed_lines() {
+        for (text, line) in [
+            ("x 1 2", 1),
+            ("+ 1", 1),
+            ("+ 1 2 3 4", 1),
+            ("- 1 2 3.0", 1),
+            ("= 1 2", 1),
+            ("+ 0 1\n+ a b", 2),
+        ] {
+            match DeltaBatch::parse(text, 9) {
+                Err(DeltaError::Parse { line: l, .. }) => assert_eq!(l, line, "{text:?}"),
+                other => panic!("{text:?}: expected parse error, got {other:?}"),
+            }
+        }
+        // Validation still runs after parsing.
+        assert!(matches!(
+            DeltaBatch::parse("+ 3 3", 9),
+            Err(DeltaError::SelfLoop { vertex: 3 })
+        ));
+    }
+}

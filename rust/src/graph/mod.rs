@@ -7,6 +7,7 @@
 pub mod coo;
 pub mod csr;
 pub mod datasets;
+pub mod delta;
 pub mod generator;
 pub mod loader;
 pub mod stats;
@@ -14,4 +15,5 @@ pub mod stats;
 pub use coo::{Coo, Edge};
 pub use csr::Csr;
 pub use datasets::Dataset;
+pub use delta::{DeltaBatch, DeltaError, DeltaOp, EdgeDelta};
 pub use stats::GraphStats;

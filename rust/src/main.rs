@@ -18,7 +18,7 @@ use repro::accel::{ArchConfig, PolicyKind};
 use repro::algo::reference;
 use repro::coordinator::Service;
 use repro::graph::datasets::{Dataset, ALL_DATASETS};
-use repro::graph::{Csr, GraphStats};
+use repro::graph::{Csr, DeltaBatch, EdgeDelta, GraphStats};
 use repro::report::{figures, Table};
 use repro::session::{Backend, DiskStore, JobSpec, Session};
 use repro::util::cli::Args;
@@ -40,6 +40,8 @@ USAGE:
   repro artifacts warm <DATASET> --artifact-dir DIR [--algo NAME]
                   [--scale F] [--assert-warm] [arch options]
   repro artifacts ls --artifact-dir DIR
+  repro mutate <DATASET> [--deltas FILE] [--scale F]
+               [--artifact-dir DIR] [arch options]
 
 Algorithms are session-registry entries (bfs sssp pagerank wcc built in;
 library users register more — no CLI change needed). `serve` submits one
@@ -55,6 +57,15 @@ warm start performs zero plan compilations. `artifacts warm` pre-bakes
 a directory (every registered algorithm unless --algo narrows it;
 --assert-warm exits nonzero if anything had to be compiled — the CI
 cache-reuse check), `artifacts ls` lists what a directory holds.
+
+`mutate` streams edge deltas into the dataset's cached artifacts:
+every cached plan (memory and --artifact-dir tiers, weighted and
+unweighted) is patched in place — dirty adjacency windows only, never
+a recompile — and patched files are re-persisted with their delta
+provenance (visible in `artifacts ls`). --deltas FILE holds one
+mutation per line (`+ src dst [weight]` add, `- src dst` remove,
+`= src dst weight` reweight, `#` comments); without it a demo churn
+removes the first edge and re-adds it in a second batch.
 
 DATASET: WG AZ SD EP PG WV TN (Table 2 presets; TN = tiny test graph)
 
@@ -142,6 +153,7 @@ fn main() -> Result<()> {
         "datasets" => cmd_datasets(),
         "serve" => cmd_serve(&args),
         "artifacts" => cmd_artifacts(&args),
+        "mutate" => cmd_mutate(&args),
         _ => {
             print!("{USAGE}");
             anyhow::bail!("unknown command {cmd:?}")
@@ -400,6 +412,63 @@ fn cmd_artifacts_ls(args: &Args) -> Result<()> {
         }
     }
     println!("{} artifact(s) in {}", entries.len(), dir.display());
+    Ok(())
+}
+
+/// Stream edge deltas into a dataset's cached artifacts. With
+/// `--deltas FILE` one parsed batch is applied; without it, a demo
+/// churn runs as two sequential batches — remove the dataset's first
+/// edge, then re-add it — leaving the topology net-unchanged while
+/// patching every cached plan twice. (Two batches, not one: within a
+/// single batch, remove + add of the same pair would dedup last-wins
+/// into a bare add of an existing edge, which is invalid.)
+fn cmd_mutate(args: &Args) -> Result<()> {
+    let d = dataset_arg(args)?;
+    let session = session_from(args)?;
+    let spec = JobSpec::new(d, "bfs").with_scale(scale_for(d, args)?);
+    let g = session.load_graph(&spec)?;
+
+    let batches = match args.get_path("deltas") {
+        Some(path) => {
+            let text = std::fs::read_to_string(&path)
+                .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+            vec![DeltaBatch::parse(&text, g.num_vertices)?]
+        }
+        None => {
+            let e = g
+                .edges
+                .first()
+                .copied()
+                .ok_or_else(|| anyhow::anyhow!("dataset has no edges to churn"))?;
+            vec![
+                DeltaBatch::new(g.num_vertices, vec![EdgeDelta::remove(e.src, e.dst)])?,
+                DeltaBatch::new(
+                    g.num_vertices,
+                    vec![EdgeDelta::add_weighted(e.src, e.dst, e.weight)],
+                )?,
+            ]
+        }
+    };
+    for (i, batch) in batches.iter().enumerate() {
+        let r = session.apply_delta(&spec, batch)?;
+        println!(
+            "batch {}: {} delta(s) → {} artifact(s) patched, {} skipped; \
+             {} dirty window(s), {} plan op(s) re-emitted, {} crossbar write(s) ({} bits)",
+            i + 1,
+            r.deltas,
+            r.patched_artifacts,
+            r.skipped_keys,
+            r.stats.dirty_partitions,
+            r.stats.patched_ops,
+            r.stats.crossbar_writes,
+            r.stats.write_bits
+        );
+    }
+    let s = session.artifacts().stats();
+    println!(
+        "artifact cache: {} compiles, {} disk hits, {} disk writes, {} resident",
+        s.misses, s.disk_hits, s.writes, s.entries
+    );
     Ok(())
 }
 

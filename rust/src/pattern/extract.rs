@@ -220,9 +220,9 @@ mod tests {
         let g = Coo::from_edges(
             4,
             vec![
-                Edge::weighted(0, 0, 3.0),
-                Edge::weighted(0, 1, 5.0),
-                Edge::weighted(1, 0, 7.0),
+                Edge::weighted(0, 2, 3.0),
+                Edge::weighted(0, 3, 5.0),
+                Edge::weighted(1, 2, 7.0),
             ],
         );
         let p = partition(&g, 2, true);

@@ -89,7 +89,7 @@ mod tests {
                 Edge::new(0, 1),
                 Edge::new(2, 3),
                 Edge::new(4, 5),
-                Edge::new(6, 6), // different local structure: (0,0)
+                Edge::new(7, 6), // different local structure: (1,0)
             ],
         );
         PatternRanking::from_partitioned(&partition(&g, 2, false))
@@ -131,7 +131,7 @@ mod tests {
     #[test]
     fn deterministic_tie_break() {
         // Two patterns with equal counts must rank by pattern value.
-        let g = Coo::from_edges(4, vec![Edge::new(0, 1), Edge::new(2, 2)]);
+        let g = Coo::from_edges(4, vec![Edge::new(0, 1), Edge::new(3, 2)]);
         let r = PatternRanking::from_partitioned(&partition(&g, 2, false));
         assert_eq!(r.ranked.len(), 2);
         assert!(r.ranked[0].0 < r.ranked[1].0);

@@ -440,7 +440,7 @@ mod tests {
                 Edge::new(0, 1),
                 Edge::new(2, 3),
                 Edge::new(4, 5),
-                Edge::new(6, 6),
+                Edge::new(7, 6),
                 Edge::new(0, 5),
                 Edge::new(1, 4),
             ],

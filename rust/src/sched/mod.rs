@@ -11,6 +11,7 @@
 pub mod executor;
 pub mod oracle;
 pub mod par;
+pub mod patch;
 pub mod plan;
 pub mod pool;
 pub mod replacement;
@@ -21,7 +22,8 @@ pub use par::{
     resolve_threads, run_parallel, run_parallel_pooled, run_parallel_pooled_at,
     run_parallel_scoped,
 };
-pub use plan::{ExecutionPlan, GatherTable, LaneTable, PlanOp, StepBatch};
+pub use patch::{patch_preprocessed, PatchStats};
+pub use plan::{ExecutionPlan, GatherTable, LaneTable, PlanOp, SectionRebuild, StepBatch};
 pub use pool::WorkerPool;
 pub use replacement::{build_policy, ReplacementPolicy};
 pub use scheduler::{EngineSummary, RunResult, Scheduler};

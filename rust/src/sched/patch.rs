@@ -1,0 +1,399 @@
+//! Incremental plan patching for streaming graph mutation (the delta
+//! path). A validated [`DeltaBatch`] touches only the C×C adjacency
+//! windows its edges fall in, so instead of re-running Alg. 1 from the
+//! raw graph, [`patch_preprocessed`] edits exactly those windows of the
+//! cached [`Partitioned`](crate::pattern::extract::Partitioned),
+//! re-derives the pattern ranking from
+//! incrementally-maintained occurrence counts, rebuilds the (cheap,
+//! ranking-sized) config and subgraph tables, and re-emits the execution
+//! plan's graph-derived sections in place through the same emission path
+//! a cold compile uses.
+//!
+//! The correctness contract is *bit-identity*: a patched `Preprocessed`
+//! compares equal (`PartialEq`, every field) to a cold
+//! `Accelerator::preprocess` of the mutated graph, so every downstream
+//! run — sequential, scoped, pooled, any thread count — is bit-identical
+//! too. This holds because the patched `Partitioned` is reproduced
+//! window-for-window (same sort order, same weight alignment as
+//! `partition`), and everything downstream of `Partitioned` is a pure
+//! deterministic function of it.
+//!
+//! Atomicity: all delta validation happens against the *current*
+//! artifact before anything is mutated, so a rejected batch (duplicate
+//! add, missing remove, vertex-count mismatch) leaves the artifact
+//! exactly as it was.
+
+use std::collections::{BTreeMap, HashMap};
+
+use anyhow::Result;
+
+use crate::accel::config::ArchConfig;
+use crate::accel::simulator::Preprocessed;
+use crate::graph::delta::{DeltaBatch, DeltaError, DeltaOp};
+use crate::pattern::extract::Subgraph;
+use crate::pattern::pattern::Pattern;
+use crate::pattern::rank::PatternRanking;
+use crate::pattern::tables::{ConfigTable, SubgraphTable};
+
+/// What one [`patch_preprocessed`] call did, for the session's delta
+/// report and the coordinator's streaming-mutation counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PatchStats {
+    /// Adjacency windows (subgraph partitions) the batch touched —
+    /// created, mutated, or emptied.
+    pub dirty_partitions: u32,
+    /// Plan ops re-emitted against a mutated subgraph (dirty windows
+    /// still non-empty after the batch; emptied windows emit no op).
+    pub patched_ops: u32,
+    /// Edge additions applied.
+    pub adds: u32,
+    /// Edge removals applied.
+    pub removes: u32,
+    /// Weight updates applied.
+    pub reweights: u32,
+    /// Crossbar writes a live accelerator would pay to morph the old
+    /// static-slot section into the patched one.
+    pub crossbar_writes: u64,
+    /// ReRAM cells toggled across those writes.
+    pub write_bits: u64,
+}
+
+impl PatchStats {
+    /// Fold another patch's stats into this one (session-lifetime
+    /// accumulation across batches).
+    pub fn absorb(&mut self, other: &PatchStats) {
+        self.dirty_partitions += other.dirty_partitions;
+        self.patched_ops += other.patched_ops;
+        self.adds += other.adds;
+        self.removes += other.removes;
+        self.reweights += other.reweights;
+        self.crossbar_writes += other.crossbar_writes;
+        self.write_bits += other.write_bits;
+    }
+}
+
+/// The patched state of one dirty window, staged during validation and
+/// committed only after the whole batch checks out.
+struct DirtyWindow {
+    brow: u32,
+    bcol: u32,
+    /// `Ok(k)` if the window already exists at `part.subgraphs[k]`,
+    /// `Err(k)` if it would be inserted at `k` (standard binary-search
+    /// convention).
+    site: std::result::Result<usize, usize>,
+    pattern: Pattern,
+    /// Weights aligned with `pattern`'s set-bit order; empty when the
+    /// partitioning is unweighted.
+    weights: Vec<f32>,
+}
+
+/// Apply `batch` to a cached preprocessing artifact in place,
+/// re-deriving only what the dirty windows invalidate. `arch` must be
+/// the architecture the artifact was compiled for (the plan's geometry
+/// guards enforce this). On any error the artifact is untouched.
+pub fn patch_preprocessed(
+    pre: &mut Preprocessed,
+    batch: &DeltaBatch,
+    arch: &ArchConfig,
+) -> Result<PatchStats> {
+    let part = &pre.part;
+    let c = part.c;
+    let cu = c as u32;
+    if batch.num_vertices() != part.num_vertices {
+        return Err(DeltaError::GraphMismatch {
+            batch: batch.num_vertices(),
+            graph: part.num_vertices,
+        }
+        .into());
+    }
+    let mut stats = PatchStats::default();
+    if batch.is_empty() {
+        return Ok(stats);
+    }
+
+    // ── Stage 1: validate the whole batch against the current windows,
+    // computing each dirty window's post-batch pattern and weights
+    // without mutating anything. Deltas arrive sorted by (src, dst), so
+    // grouping by window keeps a deterministic order.
+    let mut dirty: BTreeMap<(u32, u32), DirtyWindow> = BTreeMap::new();
+    for d in batch.deltas() {
+        let (brow, bcol) = (d.src / cu, d.dst / cu);
+        let win = dirty.entry((brow, bcol)).or_insert_with(|| {
+            let site = part
+                .subgraphs
+                .binary_search_by_key(&(brow, bcol), |s| (s.brow, s.bcol));
+            match site {
+                Ok(k) => DirtyWindow {
+                    brow,
+                    bcol,
+                    site,
+                    pattern: part.subgraphs[k].pattern,
+                    weights: match &part.weights {
+                        Some(w) => w[k].clone(),
+                        None => Vec::new(),
+                    },
+                },
+                Err(_) => DirtyWindow {
+                    brow,
+                    bcol,
+                    site,
+                    pattern: Pattern::EMPTY,
+                    weights: Vec::new(),
+                },
+            }
+        });
+        let bit = (d.src % cu) as usize * c + (d.dst % cu) as usize;
+        let mask = 1u64 << bit;
+        let present = win.pattern.0 & mask != 0;
+        // Index of this cell among the pattern's set bits — where its
+        // weight lives (or would live) in the aligned weight vector.
+        let pos = (win.pattern.0 & (mask - 1)).count_ones() as usize;
+        let weighted = part.weights.is_some();
+        match d.op {
+            DeltaOp::Add => {
+                if present {
+                    return Err(DeltaError::EdgeExists { src: d.src, dst: d.dst }.into());
+                }
+                win.pattern = Pattern(win.pattern.0 | mask);
+                if weighted {
+                    win.weights.insert(pos, d.weight);
+                }
+                stats.adds += 1;
+            }
+            DeltaOp::Remove => {
+                if !present {
+                    return Err(DeltaError::EdgeMissing { src: d.src, dst: d.dst }.into());
+                }
+                win.pattern = Pattern(win.pattern.0 & !mask);
+                if weighted {
+                    win.weights.remove(pos);
+                }
+                stats.removes += 1;
+            }
+            DeltaOp::Reweight => {
+                if !present {
+                    return Err(DeltaError::EdgeMissing { src: d.src, dst: d.dst }.into());
+                }
+                if weighted {
+                    win.weights[pos] = d.weight;
+                }
+                stats.reweights += 1;
+            }
+        }
+    }
+    stats.dirty_partitions = dirty.len() as u32;
+    stats.patched_ops = dirty.values().filter(|w| !w.pattern.is_empty()).count() as u32;
+
+    // ── Stage 2: commit. Splice the staged windows into a patched
+    // `Partitioned`. Removals and insertions shift indices, so windows
+    // are applied in reverse key order (sites were computed against the
+    // unmodified vector and stay valid from the back).
+    let mut patched = pre.part.clone();
+    for win in dirty.values().rev() {
+        match (win.site, win.pattern.is_empty()) {
+            (Ok(k), true) => {
+                patched.subgraphs.remove(k);
+                if let Some(w) = &mut patched.weights {
+                    w.remove(k);
+                }
+            }
+            (Ok(k), false) => {
+                patched.subgraphs[k].pattern = win.pattern;
+                if let Some(w) = &mut patched.weights {
+                    w[k] = win.weights.clone();
+                }
+            }
+            (Err(k), false) => {
+                patched.subgraphs.insert(
+                    k,
+                    Subgraph { brow: win.brow, bcol: win.bcol, pattern: win.pattern },
+                );
+                if let Some(w) = &mut patched.weights {
+                    w.insert(k, win.weights.clone());
+                }
+            }
+            // Dirty-but-still-absent can't happen: reaching it would
+            // need a remove/reweight on an absent window (rejected in
+            // stage 1) or an add immediately removed (deduped away).
+            (Err(_), true) => unreachable!("window neither existed nor was created"),
+        }
+    }
+
+    // ── Stage 3: re-derive the ranking from incrementally-maintained
+    // occurrence counts (only dirty windows change a count), then
+    // rebuild the ranking-sized tables and re-emit the plan sections.
+    let mut counts: HashMap<Pattern, u32> = pre.ranking.ranked.iter().copied().collect();
+    for win in dirty.values() {
+        if let Ok(k) = win.site {
+            let old = pre.part.subgraphs[k].pattern;
+            let n = counts.get_mut(&old).expect("counted pattern");
+            *n -= 1;
+            if *n == 0 {
+                counts.remove(&old);
+            }
+        }
+        if !win.pattern.is_empty() {
+            *counts.entry(win.pattern).or_insert(0) += 1;
+        }
+    }
+    let ranking = PatternRanking::from_counts(counts, patched.num_subgraphs());
+    // Mirrors `Accelerator::build_config_table` — the patched CT must be
+    // the one a cold compile under `arch` would produce.
+    let ct = ConfigTable::build(
+        &ranking,
+        arch.crossbar_size,
+        arch.static_engines,
+        arch.crossbars_per_engine,
+        arch.dynamic_engines() * arch.crossbars_per_engine,
+        arch.static_assignment,
+    );
+    let st = SubgraphTable::build(&patched, &ranking, arch.order);
+    let rebuild = pre.plan.patch_sections(&patched, &ct, &st, arch)?;
+    stats.crossbar_writes = rebuild.crossbar_writes;
+    stats.write_bits = rebuild.write_bits;
+
+    pre.part = patched;
+    pre.ranking = ranking;
+    pre.ct = ct;
+    pre.st = st;
+    Ok(stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::simulator::Accelerator;
+    use crate::graph::coo::{Coo, Edge};
+    use crate::graph::delta::EdgeDelta;
+    use crate::graph::Dataset;
+
+    fn tiny() -> Coo {
+        Dataset::Tiny.load().unwrap()
+    }
+
+    /// First (src, dst) pair absent from `g` — a guaranteed-valid Add.
+    fn absent_pair(g: &Coo) -> (u32, u32) {
+        for src in 0..g.num_vertices {
+            for dst in 0..g.num_vertices {
+                let absent = g
+                    .edges
+                    .binary_search_by_key(&(src, dst), |e| (e.src, e.dst))
+                    .is_err();
+                if src != dst && absent {
+                    return (src, dst);
+                }
+            }
+        }
+        unreachable!("complete graph");
+    }
+
+    fn assert_patch_matches_cold(g: &Coo, batch: &DeltaBatch, weighted: bool) -> PatchStats {
+        let acc = Accelerator::with_defaults();
+        let mut pre = acc.preprocess(g, weighted).unwrap();
+        let stats = patch_preprocessed(&mut pre, batch, &acc.config).unwrap();
+        let mutated = batch.apply_to_coo(g).unwrap();
+        let cold = acc.preprocess(&mutated, weighted).unwrap();
+        assert_eq!(pre, cold, "patched artifact must equal cold recompile");
+        stats
+    }
+
+    #[test]
+    fn patched_equals_cold_recompile_unweighted() {
+        let g = tiny();
+        let e = g.edges[0];
+        let (src, dst) = absent_pair(&g);
+        let batch = DeltaBatch::new(
+            g.num_vertices,
+            vec![EdgeDelta::remove(e.src, e.dst), EdgeDelta::add(src, dst)],
+        )
+        .unwrap();
+        let stats = assert_patch_matches_cold(&g, &batch, false);
+        assert!(stats.dirty_partitions >= 1);
+        assert_eq!((stats.adds, stats.removes), (1, 1));
+    }
+
+    #[test]
+    fn patched_equals_cold_recompile_weighted() {
+        let g = tiny().with_random_weights(7, 0.5, 2.0);
+        let e0 = g.edges[0];
+        let e1 = g.edges[g.num_edges() / 2];
+        let batch = DeltaBatch::new(
+            g.num_vertices,
+            vec![
+                EdgeDelta::reweight(e0.src, e0.dst, 9.25),
+                EdgeDelta::remove(e1.src, e1.dst),
+            ],
+        )
+        .unwrap();
+        let stats = assert_patch_matches_cold(&g, &batch, true);
+        assert_eq!(stats.reweights, 1);
+        assert_eq!(stats.removes, 1);
+    }
+
+    #[test]
+    fn empty_batch_is_identity_with_zero_stats() {
+        let g = tiny();
+        let acc = Accelerator::with_defaults();
+        let mut pre = acc.preprocess(&g, false).unwrap();
+        let before = pre.clone();
+        let stats =
+            patch_preprocessed(&mut pre, &DeltaBatch::empty(g.num_vertices), &acc.config)
+                .unwrap();
+        assert_eq!(stats, PatchStats::default());
+        assert_eq!(pre, before);
+    }
+
+    #[test]
+    fn rejected_batch_leaves_artifact_untouched() {
+        let g = tiny();
+        let acc = Accelerator::with_defaults();
+        let mut pre = acc.preprocess(&g, false).unwrap();
+        let before = pre.clone();
+        let e = g.edges[0];
+        // Second delta is invalid (edge already present) — the valid
+        // remove staged before it must not leak into the artifact.
+        let batch = DeltaBatch::new(
+            g.num_vertices,
+            vec![
+                EdgeDelta::remove(e.src, e.dst),
+                EdgeDelta::add(g.edges[1].src, g.edges[1].dst),
+            ],
+        )
+        .unwrap();
+        assert!(patch_preprocessed(&mut pre, &batch, &acc.config).is_err());
+        assert_eq!(pre, before);
+
+        let wrong = DeltaBatch::empty(g.num_vertices + 1);
+        assert!(patch_preprocessed(&mut pre, &wrong, &acc.config).is_err());
+        assert_eq!(pre, before);
+    }
+
+    #[test]
+    fn window_creation_and_deletion_round_trip() {
+        // A graph where a batch empties one window and creates another.
+        let g = Coo::from_edges(
+            8,
+            vec![Edge::new(0, 1), Edge::new(2, 3), Edge::new(4, 5)],
+        );
+        let batch = DeltaBatch::new(
+            8,
+            vec![EdgeDelta::remove(4, 5), EdgeDelta::add(6, 7)],
+        )
+        .unwrap();
+        let stats = assert_patch_matches_cold(&g, &batch, false);
+        assert_eq!(stats.dirty_partitions, 2);
+        assert_eq!(stats.patched_ops, 1); // (4,5)'s window emptied, (6,7)'s created
+        assert_eq!((stats.adds, stats.removes), (1, 1));
+    }
+
+    #[test]
+    fn stats_absorb_accumulates() {
+        let mut a = PatchStats { adds: 1, crossbar_writes: 2, ..PatchStats::default() };
+        let b = PatchStats { adds: 3, removes: 1, write_bits: 5, ..PatchStats::default() };
+        a.absorb(&b);
+        assert_eq!(a.adds, 4);
+        assert_eq!(a.removes, 1);
+        assert_eq!(a.crossbar_writes, 2);
+        assert_eq!(a.write_bits, 5);
+    }
+}

@@ -41,6 +41,7 @@
 //! alongside the `Partitioned` kept in the same cached artifact.
 
 use crate::accel::config::ArchConfig;
+use crate::cost::EventCounts;
 use crate::pattern::extract::Partitioned;
 use crate::pattern::tables::{ConfigTable, EngineSlot, ExecOrder, StaticAssignment, SubgraphTable};
 use crate::pattern::Pattern;
@@ -264,6 +265,57 @@ impl GatherTable {
     }
 }
 
+/// Reconfiguration cost of a plan-section rebuild: what a live
+/// accelerator pays to morph the old static configuration into the new
+/// one, counted by diffing occupancy per physical crossbar. A pattern
+/// re-homed to a different crossbar is exactly **one** crossbar write
+/// (programming its new home — the vacated crossbar is abandoned, not
+/// erased), never zero (the new home must be programmed) and never two.
+/// Returned by [`ExecutionPlan::rebuild_static_slots`] and
+/// [`ExecutionPlan::patch_sections`] to feed `sched::patch` stats and
+/// the coordinator's delta metrics; run-level `RunResult` accounting is
+/// untouched (every run models init from scratch, which is what keeps a
+/// patched plan bit-identical to a cold recompile).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SectionRebuild {
+    /// Crossbars whose occupant changed (including empty → occupied).
+    pub crossbar_writes: u64,
+    /// ReRAM cells toggled across those writes (SET + RESET).
+    pub write_bits: u64,
+}
+
+impl SectionRebuild {
+    /// Diff two static configurations by physical crossbar.
+    fn between(old: &[(EngineSlot, Pattern)], new: &[(EngineSlot, Pattern)]) -> Self {
+        let prior: std::collections::HashMap<(u32, u32), Pattern> =
+            old.iter().map(|&(s, p)| ((s.engine, s.crossbar), p)).collect();
+        let mut out = Self::default();
+        for &(slot, pattern) in new {
+            let was = prior
+                .get(&(slot.engine, slot.crossbar))
+                .copied()
+                .unwrap_or(Pattern::EMPTY);
+            if pattern != was {
+                out.crossbar_writes += 1;
+                out.write_bits += pattern.write_cost_from(was) as u64;
+            }
+        }
+        out
+    }
+
+    /// The rebuild as hardware events, mirroring what a dynamic-engine
+    /// `configure` counts per crossbar write: one reconfiguration, the
+    /// toggled cells, and the CT fetch + buffer store pair.
+    pub fn event_counts(&self) -> EventCounts {
+        EventCounts {
+            write_bits: self.write_bits,
+            sram_accesses: 2 * self.crossbar_writes,
+            reconfigs: self.crossbar_writes,
+            ..EventCounts::default()
+        }
+    }
+}
+
 /// Static-slot sections derived from a config table: the slot pool,
 /// per-rank candidate ranges, and the init-time configuration list.
 fn slot_sections(
@@ -294,24 +346,63 @@ impl ExecutionPlan {
         st: &SubgraphTable,
         arch: &ArchConfig,
     ) -> Self {
+        let mut plan = Self {
+            c: part.c,
+            num_vertices: part.num_vertices,
+            num_blocks: part.num_blocks(),
+            weighted: part.weights.is_some(),
+            num_patterns: 0,
+            static_engines: arch.static_engines,
+            total_engines: arch.total_engines,
+            crossbars_per_engine: arch.crossbars_per_engine,
+            order: st.order,
+            static_assignment: arch.static_assignment,
+            ops: Vec::new(),
+            groups: vec![0, 0],
+            slot_pool: Vec::new(),
+            lanes: LaneTable::build(&[], &[], arch.total_engines),
+            gather: GatherTable::build(&[], part.c, part.num_vertices),
+            static_config: Vec::new(),
+            rank_pattern: Vec::new(),
+            op_bits: Vec::new(),
+            weight_off: Vec::new(),
+            weights: Vec::new(),
+            out_degrees: Vec::new(),
+        };
+        plan.emit_sections(part, ct, st);
+        plan
+    }
+
+    /// Clear and refill every graph-derived section in place — op
+    /// records, executor operands (packed bits, flattened weights),
+    /// groups, slot pool, static config, interned patterns, lane +
+    /// gather tables, out-degrees — from fresh Alg.-1 outputs. The one
+    /// emission path shared by [`build`](Self::build) and
+    /// [`patch_sections`](Self::patch_sections): compile and patch can
+    /// never drift, because there is no second code path to drift.
+    /// Geometry fields (C, vertex count, engine counts, order, policy)
+    /// are the caller's responsibility and are not touched.
+    fn emit_sections(&mut self, part: &Partitioned, ct: &ConfigTable, st: &SubgraphTable) {
         let c = part.c;
         let weighted = part.weights.is_some();
         let (slot_pool, rank_slots, static_config) = slot_sections(ct);
 
-        let mut ops = Vec::with_capacity(st.len());
-        let mut op_bits = Vec::with_capacity(st.len());
-        let mut weight_off = Vec::new();
-        let mut weights = Vec::new();
+        self.ops.clear();
+        self.ops.reserve(st.len());
+        self.op_bits.clear();
+        self.op_bits.reserve(st.len());
+        self.weight_off.clear();
+        self.weights.clear();
         if weighted {
-            weight_off.reserve(st.len() + 1);
-            weight_off.push(0);
+            self.weight_off.reserve(st.len() + 1);
+            self.weight_off.push(0);
         }
         for e in &st.entries {
             let sg = &part.subgraphs[e.sg_idx as usize];
             let entry = ct.entry_at(e.pattern_rank);
             let rows = entry.active_rows.max(1);
             let (slot_start, slot_len) = rank_slots[e.pattern_rank as usize];
-            ops.push(PlanOp {
+            self.ops.push(PlanOp {
                 sg_idx: e.sg_idx,
                 src_start: e.src_start,
                 dst_start: e.dst_start,
@@ -322,38 +413,85 @@ impl ExecutionPlan {
                 slot_start,
                 slot_len,
             });
-            op_bits.push(sg.pattern.0);
+            self.op_bits.push(sg.pattern.0);
             if weighted {
-                weights.extend_from_slice(&part.weights.as_ref().unwrap()[e.sg_idx as usize]);
-                weight_off.push(weights.len() as u32);
+                self.weights
+                    .extend_from_slice(&part.weights.as_ref().unwrap()[e.sg_idx as usize]);
+                self.weight_off.push(self.weights.len() as u32);
             }
         }
 
-        let lanes = LaneTable::build(&ops, &slot_pool, arch.total_engines);
-        let gather = GatherTable::build(&ops, c, part.num_vertices);
-        Self {
-            c,
-            num_vertices: part.num_vertices,
-            num_blocks: part.num_blocks(),
-            weighted,
-            num_patterns: ct.len() as u32,
-            static_engines: arch.static_engines,
-            total_engines: arch.total_engines,
-            crossbars_per_engine: arch.crossbars_per_engine,
-            order: st.order,
-            static_assignment: arch.static_assignment,
-            ops,
-            groups: st.groups.clone(),
-            slot_pool,
-            lanes,
-            gather,
-            static_config,
-            rank_pattern: ct.entries.iter().map(|e| e.pattern).collect(),
-            op_bits,
-            weight_off,
-            weights,
-            out_degrees: out_degrees(part),
-        }
+        self.lanes = LaneTable::build(&self.ops, &slot_pool, self.total_engines);
+        self.gather = GatherTable::build(&self.ops, c, part.num_vertices);
+        self.weighted = weighted;
+        self.num_patterns = ct.len() as u32;
+        self.groups = st.groups.clone();
+        self.slot_pool = slot_pool;
+        self.static_config = static_config;
+        self.rank_pattern = ct.entries.iter().map(|e| e.pattern).collect();
+        self.out_degrees = out_degrees(part);
+    }
+
+    /// Re-emit every graph-derived section against the *mutated* Alg.-1
+    /// outputs while keeping the compiled geometry — the delta-patch
+    /// path (`sched::patch`). The caller re-runs ranking/CT/ST over the
+    /// patched `Partitioned` (cheap; partitioning itself is what the
+    /// delta path avoids redoing from the raw graph) and this re-emits
+    /// through the same code path `build` uses, so the patched plan is
+    /// field-for-field identical to a cold compile of the mutated graph
+    /// by construction. Errors on anything that is not a pure content
+    /// update: changed geometry, vertex count, window size, execution
+    /// order, weightedness, or a config table that does not encode
+    /// `arch`'s layout. Returns the static-reconfiguration cost
+    /// ([`SectionRebuild`]) of morphing the old slot section into the
+    /// new one.
+    pub(crate) fn patch_sections(
+        &mut self,
+        part: &Partitioned,
+        ct: &ConfigTable,
+        st: &SubgraphTable,
+        arch: &ArchConfig,
+    ) -> anyhow::Result<SectionRebuild> {
+        anyhow::ensure!(
+            self.matches(arch),
+            "section patch cannot change the plan's compiled geometry"
+        );
+        anyhow::ensure!(
+            part.c == self.c && part.num_vertices == self.num_vertices,
+            "section patch requires the same window size and vertex count \
+             (plan C={} V={}, partitioning C={} V={})",
+            self.c,
+            self.num_vertices,
+            part.c,
+            part.num_vertices
+        );
+        anyhow::ensure!(
+            st.order == self.order,
+            "section patch cannot change the execution order (plan {:?}, table {:?})",
+            self.order,
+            st.order
+        );
+        anyhow::ensure!(
+            part.weights.is_some() == self.weighted,
+            "section patch cannot change weightedness (plan weighted={})",
+            self.weighted
+        );
+        anyhow::ensure!(
+            ct.assignment == arch.static_assignment
+                && ct.num_static_engines == arch.static_engines
+                && ct.crossbars_per_engine == arch.crossbars_per_engine,
+            "config table ({:?}, N={}, M={}) does not match the plan's \
+             architecture ({:?}, N={}, M={})",
+            ct.assignment,
+            ct.num_static_engines,
+            ct.crossbars_per_engine,
+            arch.static_assignment,
+            arch.static_engines,
+            arch.crossbars_per_engine
+        );
+        let old_config = std::mem::take(&mut self.static_config);
+        self.emit_sections(part, ct, st);
+        Ok(SectionRebuild::between(&old_config, &self.static_config))
     }
 
     /// An executor-only plan straight from a partitioning: one op per
@@ -428,12 +566,15 @@ impl ExecutionPlan {
     /// sections the split decides — are rebuilt). Errors (like the
     /// interpreter's own mismatch guard) on a config table from another
     /// ranking or an architecture whose execution order differs from the
-    /// one baked into the plan's groups.
+    /// one baked into the plan's groups. Returns the
+    /// [`SectionRebuild`] cost of morphing the old static configuration
+    /// into the new one (what a live accelerator would pay to follow the
+    /// move).
     pub fn rebuild_static_slots(
         &mut self,
         ct: &ConfigTable,
         arch: &ArchConfig,
-    ) -> anyhow::Result<()> {
+    ) -> anyhow::Result<SectionRebuild> {
         anyhow::ensure!(
             ct.len() as u32 == self.num_patterns,
             "static-slot rebuild requires the plan's own pattern ranking \
@@ -465,6 +606,7 @@ impl ExecutionPlan {
             arch.crossbars_per_engine
         );
         let (slot_pool, rank_slots, static_config) = slot_sections(ct);
+        let rebuild = SectionRebuild::between(&self.static_config, &static_config);
         for op in &mut self.ops {
             let (start, len) = rank_slots[op.pattern_rank as usize];
             op.slot_start = start;
@@ -479,7 +621,7 @@ impl ExecutionPlan {
         self.total_engines = arch.total_engines;
         self.crossbars_per_engine = arch.crossbars_per_engine;
         self.static_assignment = arch.static_assignment;
-        Ok(())
+        Ok(rebuild)
     }
 
     /// Does the plan's compiled geometry and schedule shape match
@@ -903,7 +1045,7 @@ mod tests {
                 Edge::weighted(0, 1, 2.0),
                 Edge::weighted(2, 3, 3.0),
                 Edge::weighted(4, 5, 4.0),
-                Edge::weighted(6, 6, 5.0),
+                Edge::weighted(7, 6, 5.0),
                 Edge::weighted(0, 5, 6.0),
                 Edge::weighted(1, 4, 7.0),
             ],
@@ -971,6 +1113,48 @@ mod tests {
         // use a foreign ranking) is rejected, not silently applied.
         let rm = ArchConfig { order: ExecOrder::RowMajor, ..arch0 };
         assert!(plan.rebuild_static_slots(&ct0, &rm).is_err());
+    }
+
+    #[test]
+    fn rebuild_reports_rehomes_as_single_writes() {
+        // setup() yields static_config [((e0,x0), P_a), ((e1,x0), P_b)]
+        // under the 2-static-engine split. Folding both statics onto one
+        // engine with two crossbars re-homes rank 1 from (1,0) to (0,1):
+        // exactly ONE crossbar write (programming the new home), never
+        // zero and never two — the vacated crossbar is abandoned in
+        // place, not erased.
+        let (part, ct, st, arch) = setup(false);
+        let mut plan = ExecutionPlan::build(&part, &ct, &st, &arch);
+        assert_eq!(plan.static_config().len(), 2);
+        let rank1_pattern = plan.static_config()[1].1;
+
+        // Rebuilding against the identical layout is a no-op: no writes.
+        let same = plan.rebuild_static_slots(&ct, &arch).unwrap();
+        assert_eq!(same, SectionRebuild::default());
+        assert_eq!(same.event_counts(), EventCounts::default());
+
+        let ranking = PatternRanking::from_partitioned(&part);
+        let arch2 = ArchConfig {
+            static_engines: 1,
+            crossbars_per_engine: 2,
+            ..arch.clone()
+        };
+        // Same dynamic capacity (2 slots) so the apportionment — and
+        // therefore which ranks are static — is unchanged; only homes move.
+        let ct2 = ConfigTable::build(&ranking, 2, 1, 2, 2, arch2.static_assignment);
+        let moved = plan.rebuild_static_slots(&ct2, &arch2).unwrap();
+        assert_eq!(moved.crossbar_writes, 1, "one re-home = one write");
+        assert_eq!(moved.write_bits, rank1_pattern.nnz() as u64);
+        let ev = moved.event_counts();
+        assert_eq!(ev.reconfigs, 1);
+        assert_eq!(ev.sram_accesses, 2); // row read + write per crossbar write
+        assert_eq!(ev.write_bits, moved.write_bits);
+
+        // Moving back is symmetric: (1,0) is empty after the fold, so
+        // re-homing rank 1 there is again exactly one write.
+        let back = plan.rebuild_static_slots(&ct, &arch).unwrap();
+        assert_eq!(back.crossbar_writes, 1);
+        assert_eq!(back.write_bits, rank1_pattern.nnz() as u64);
     }
 
     #[test]
@@ -1096,7 +1280,7 @@ mod tests {
         let deg = plan.out_degrees();
         assert_eq!(deg.len(), 8);
         assert_eq!(deg[0], 2); // edges (0,1) and (0,5)
-        assert_eq!(deg[6], 1); // self-loop (6,6)
+        assert_eq!(deg[7], 1); // edge (7,6)
         assert_eq!(deg.iter().sum::<u32>(), 6);
     }
 

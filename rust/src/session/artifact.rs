@@ -25,6 +25,14 @@
 //! rot, version or architecture mismatch — is a typed
 //! [`StoreError`](super::StoreError) handled by falling back to
 //! recompute; a corrupt file is deleted and rewritten, never served.
+//!
+//! **Streaming mutation**: [`ArtifactStore::patch`] applies an edge
+//! [`DeltaBatch`](crate::graph::DeltaBatch) to a cached artifact in
+//! place — only the batch's dirty adjacency windows are re-derived, the
+//! plan is section-patched rather than recompiled, and the disk tier is
+//! republished under a bumped [`DeltaProvenance`] stamp. The patched
+//! artifact is bit-identical to a cold recompile of the mutated graph
+//! (the delta property suite's central assertion).
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -34,10 +42,12 @@ use anyhow::Result;
 
 use crate::accel::{Accelerator, ArchConfig, Preprocessed};
 use crate::graph::datasets::Dataset;
+use crate::graph::DeltaBatch;
 use crate::pattern::tables::{ExecOrder, StaticAssignment};
+use crate::sched::{patch_preprocessed, PatchStats};
 use crate::util::codec::{CodecError, Reader, Writer};
 
-use super::store::{DiskStore, StoreError};
+use super::store::{DeltaProvenance, DiskStore, StoreError};
 
 /// The architecture parameters an Alg.-1 output depends on: partition
 /// (crossbar size), config table (engine counts, assignment), subgraph
@@ -78,11 +88,17 @@ pub struct ArtifactKey {
     arch: ArchSig,
 }
 
+/// The fixed-point (microunit) image of a scale factor — the form in
+/// which scale participates in key identity. Shared with the session's
+/// delta log so "same scale" means the same thing in both maps.
+pub(crate) fn scale_micro(scale: f64) -> u64 {
+    // .max(1): a denormal-small scale must stay a loadable key.
+    ((scale * 1e6).round() as u64).max(1)
+}
+
 impl ArtifactKey {
     pub fn new(dataset: Dataset, scale: f64, weighted: bool, arch: &ArchConfig) -> Self {
-        // .max(1): a denormal-small scale must stay a loadable key.
-        let scale_micro = ((scale * 1e6).round() as u64).max(1);
-        Self { dataset, scale_micro, weighted, arch: ArchSig::of(arch) }
+        Self { dataset, scale_micro: scale_micro(scale), weighted, arch: ArchSig::of(arch) }
     }
 
     pub fn scale(&self) -> f64 {
@@ -154,7 +170,9 @@ impl ArtifactKey {
 
 #[derive(Debug, Default)]
 struct Slot {
-    pre: Mutex<Option<Arc<Preprocessed>>>,
+    /// The artifact plus its accumulated delta provenance (zeroed for a
+    /// cold compile, carried across the disk tier for a patched entry).
+    pre: Mutex<Option<(Arc<Preprocessed>, DeltaProvenance)>>,
 }
 
 /// Counters for cache behaviour (`misses` == preprocessing runs — a
@@ -276,7 +294,7 @@ impl ArtifactStore {
                 panic!("artifact slot poisoned: {e}")
             }
         };
-        if let Some(p) = cell.as_ref() {
+        if let Some((p, _)) = cell.as_ref() {
             self.hits.fetch_add(1, Ordering::Relaxed);
             return Ok(Arc::clone(p));
         }
@@ -285,11 +303,11 @@ impl ArtifactStore {
         // through to recompute — a corrupt file is removed (and rewritten
         // below), never served.
         if let Some(disk) = &self.disk {
-            match disk.load(&key, &acc.config) {
-                Ok(pre) => {
+            match disk.load_with(&key, &acc.config) {
+                Ok((pre, prov)) => {
                     self.disk_hits.fetch_add(1, Ordering::Relaxed);
                     let p = Arc::new(pre);
-                    *cell = Some(Arc::clone(&p));
+                    *cell = Some((Arc::clone(&p), prov));
                     return Ok(p);
                 }
                 // Nothing there, or a *transient* I/O failure (fd
@@ -322,7 +340,7 @@ impl ArtifactStore {
             }
         };
         let p = Arc::new(acc.preprocess(g, key.weighted)?);
-        *cell = Some(Arc::clone(&p));
+        *cell = Some((Arc::clone(&p), DeltaProvenance::default()));
         // Release the per-key slot before serializing to disk: coalesced
         // waiters only need the in-memory Arc, which is ready now — they
         // must not stall behind a multi-MB file write. The on-disk
@@ -350,11 +368,97 @@ impl ArtifactStore {
         Ok(p)
     }
 
+    /// Apply a validated [`DeltaBatch`] to the cached artifact for
+    /// `key`, patching it **in place** (dirty adjacency windows only —
+    /// never a whole-plan recompile; see
+    /// [`patch_preprocessed`](crate::sched::patch_preprocessed)).
+    ///
+    /// Lookup order mirrors [`build`](Self::get_or_preprocess): a
+    /// memory-resident artifact is patched directly; otherwise a
+    /// disk-tier artifact is deserialized, patched, and promoted to
+    /// memory. A key cached in *neither* tier returns `Ok(None)` — there
+    /// is nothing to invalidate, and the next `get_or_preprocess`
+    /// compiles against the already-mutated graph, so patching it here
+    /// would only duplicate work.
+    ///
+    /// On success the on-disk entry (if any) is republished with the
+    /// patched payload and accumulated [`DeltaProvenance`]; on any
+    /// failure both tiers keep serving the pre-batch artifact untouched.
+    pub fn patch(
+        &self,
+        key: ArtifactKey,
+        arch: &ArchConfig,
+        batch: &DeltaBatch,
+    ) -> Result<Option<PatchStats>> {
+        let slot = {
+            let mut slots = self.slots.lock().unwrap();
+            Arc::clone(slots.entry(key).or_default())
+        };
+        let mut cell = match slot.pre.try_lock() {
+            Ok(cell) => cell,
+            Err(std::sync::TryLockError::WouldBlock) => {
+                self.coalesced.fetch_add(1, Ordering::Relaxed);
+                slot.pre.lock().unwrap()
+            }
+            Err(e @ std::sync::TryLockError::Poisoned(_)) => {
+                panic!("artifact slot poisoned: {e}")
+            }
+        };
+        let generation = self.clear_gen.load(Ordering::Acquire);
+        // Non-destructive read: the cached value stays in place until the
+        // patched replacement is ready, so a failed patch leaves every
+        // tier serving the pre-batch artifact.
+        let (mut pre, mut prov) = match cell.as_ref() {
+            Some((p, prov)) => ((**p).clone(), *prov),
+            None => match &self.disk {
+                Some(disk) => match disk.load_with(&key, arch) {
+                    Ok((pre, prov)) => {
+                        self.disk_hits.fetch_add(1, Ordering::Relaxed);
+                        (pre, prov)
+                    }
+                    Err(StoreError::Missing) | Err(StoreError::Io(_)) => {
+                        self.disk_misses.fetch_add(1, Ordering::Relaxed);
+                        return Ok(None);
+                    }
+                    Err(_) => {
+                        self.disk_misses.fetch_add(1, Ordering::Relaxed);
+                        disk.remove(&key);
+                        return Ok(None);
+                    }
+                },
+                None => return Ok(None),
+            },
+        };
+        let stats = patch_preprocessed(&mut pre, batch, arch)?;
+        prov.batches += 1;
+        prov.dirty_partitions += u64::from(stats.dirty_partitions);
+        prov.patched_ops += u64::from(stats.patched_ops);
+        let p = Arc::new(pre);
+        *cell = Some((Arc::clone(&p), prov));
+        drop(cell);
+        // Republish the patched generation of this key: the stale file
+        // must go first, because `save_with` is once-only per existing
+        // target. Same clear()-race discipline as `build`'s publish.
+        if let Some(disk) = &self.disk {
+            if self.clear_gen.load(Ordering::Acquire) == generation {
+                disk.remove(&key);
+                if let Ok(true) = disk.save_with(&key, &p, &prov) {
+                    if self.clear_gen.load(Ordering::Acquire) == generation {
+                        self.writes.fetch_add(1, Ordering::Relaxed);
+                    } else {
+                        disk.remove(&key);
+                    }
+                }
+            }
+        }
+        Ok(Some(stats))
+    }
+
     /// Peek without building (does not count as a hit).
     pub fn get(&self, key: &ArtifactKey) -> Option<Arc<Preprocessed>> {
         let slot = self.slots.lock().unwrap().get(key).cloned()?;
         let cell = slot.pre.lock().unwrap();
-        cell.clone()
+        cell.as_ref().map(|(p, _)| Arc::clone(p))
     }
 
     pub fn stats(&self) -> ArtifactStats {
@@ -490,6 +594,32 @@ mod tests {
         third.get_or_preprocess(k, &acc).unwrap();
         assert_eq!(third.stats().misses, 1);
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn patch_rewrites_cached_artifact_and_skips_absent_keys() {
+        let store = ArtifactStore::new();
+        let acc = Accelerator::with_defaults();
+        let k = key(1.0, false);
+
+        // Nothing cached yet: a patch has nothing to invalidate.
+        let g = Dataset::Tiny.load().unwrap();
+        let e = g.edges[0];
+        let batch = DeltaBatch::new(
+            g.num_vertices,
+            vec![crate::graph::EdgeDelta::remove(e.src, e.dst)],
+        )
+        .unwrap();
+        assert!(store.patch(k, &acc.config, &batch).unwrap().is_none());
+
+        // Cached: the patched artifact must equal a cold recompile of
+        // the mutated graph, served from memory without a new miss.
+        store.get_or_preprocess(k, &acc).unwrap();
+        let stats = store.patch(k, &acc.config, &batch).unwrap().unwrap();
+        assert_eq!(stats.removes, 1);
+        let cold = acc.preprocess(&batch.apply_to_coo(&g).unwrap(), false).unwrap();
+        assert_eq!(*store.get(&k).unwrap(), cold);
+        assert_eq!(store.stats().misses, 1, "patch never recompiles");
     }
 
     #[test]

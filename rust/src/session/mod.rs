@@ -32,6 +32,25 @@
 //! recompute. Pre-bake and inspect directories with the
 //! `repro artifacts warm|ls` subcommands.
 //!
+//! # Streaming mutation
+//!
+//! [`Session::apply_delta`] is the write path of the streaming-ingest
+//! subsystem: a validated [`DeltaBatch`](crate::graph::DeltaBatch) of
+//! edge mutations (add / remove / reweight) is applied to the session's
+//! view of a `(dataset, scale)` pair. Cached artifacts — both tiers,
+//! weighted and unweighted — are **patched in place**: only the batch's
+//! dirty adjacency windows are re-derived and the compiled plan is
+//! section-patched, never recompiled
+//! ([`sched::patch`](crate::sched::patch)); the on-disk copy is
+//! republished under an accumulated [`DeltaProvenance`] stamp. The batch
+//! is then appended to the session's delta log, so any key *not* cached
+//! at patch time (skipped, not cold-compiled) is compiled against the
+//! mutated graph on its next request. Determinism contract: a patched
+//! artifact is bit-identical to a cold recompile of the mutated graph —
+//! run results cannot depend on *how* the plan was produced (locked
+//! down by `rust/tests/delta.rs` across algorithms, schedulers, and
+//! thread counts).
+//!
 //! # Example
 //!
 //! ```no_run
@@ -57,10 +76,11 @@ mod store;
 
 pub use artifact::{ArtifactKey, ArtifactStats, ArtifactStore};
 pub use job::JobSpec;
-pub use store::{DiskStore, StoreError, FORMAT_VERSION, SCHEMA_VERSION};
+pub use store::{DeltaProvenance, DiskStore, StoreError, FORMAT_VERSION, SCHEMA_VERSION};
 
 pub use crate::algo::registry::{AlgoParams, AlgorithmId, AlgorithmRegistry, BoxedProgram};
 
+use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::{Arc, Mutex};
 
@@ -70,15 +90,32 @@ use crate::accel::{Accelerator, ArchConfig, Preprocessed, SimReport};
 use crate::algo::traits::VertexProgram;
 use crate::cost::CostParams;
 use crate::dse::SweepPoint;
-use crate::graph::Coo;
+use crate::graph::datasets::Dataset;
+use crate::graph::{Coo, DeltaBatch};
 use crate::sched::executor::NativeExecutor;
-use crate::sched::{resolve_threads, StepExecutor, WorkerPool};
+use crate::sched::{resolve_threads, PatchStats, StepExecutor, WorkerPool};
 
 /// Upper bound on idle pools parked in a session's free list: enough
 /// that a typical serve deployment (workers ≤ 8) keeps one spawn-once
 /// pool per concurrent job, while a one-off concurrency burst beyond it
 /// can't hold worker threads for the session's whole lifetime.
 const MAX_FREE_POOLS: usize = 8;
+
+/// What one [`Session::apply_delta`] call did across the session's
+/// cached artifacts.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DeltaReport {
+    /// Mutations in the batch after canonicalization (last-wins dedup).
+    pub deltas: usize,
+    /// Cached artifacts (memory or disk tier) patched in place — each
+    /// one a whole-plan recompile avoided.
+    pub patched_artifacts: u32,
+    /// Artifact keys with nothing cached in either tier: skipped, not
+    /// compiled — their next request builds from the mutated graph.
+    pub skipped_keys: u32,
+    /// Patch work accumulated across the patched artifacts.
+    pub stats: PatchStats,
+}
 
 /// Which numeric edge-compute datapath a session drives.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -254,6 +291,7 @@ impl SessionBuilder {
             artifacts,
             parallelism: resolve_threads(self.parallelism),
             pools: Mutex::new(Vec::new()),
+            delta_log: Mutex::new(HashMap::new()),
         })
     }
 }
@@ -276,6 +314,13 @@ pub struct Session {
     /// job, and nobody falls back to per-run spawning under contention.
     /// All pools (and their worker threads) join when the session drops.
     pools: Mutex<Vec<WorkerPool>>,
+    /// The streaming-mutation log: every [`DeltaBatch`] applied via
+    /// [`apply_delta`](Self::apply_delta), keyed by `(dataset,
+    /// fixed-point scale)` — the same microunit image the
+    /// [`ArtifactKey`] uses, so "same scale" can never diverge between
+    /// the log and the cache. Cache misses for a logged pair fold these
+    /// batches into the dataset load before compiling.
+    delta_log: Mutex<HashMap<(Dataset, u64), Vec<DeltaBatch>>>,
 }
 
 impl Session {
@@ -429,13 +474,51 @@ impl Session {
         self.registry.resolve(&spec.algorithm)?.instantiate(&spec.params)
     }
 
-    /// Load the job's input graph (weighted iff the algorithm requires it).
+    /// Load the job's input graph (weighted iff the algorithm requires
+    /// it), with every delta batch this session has applied to the
+    /// spec's `(dataset, scale)` folded in.
     pub fn load_graph(&self, spec: &JobSpec) -> Result<Coo> {
         let program = self.program_for(spec)?;
-        if program.needs_weights() {
-            spec.dataset.load_weighted(spec.scale)
+        self.mutated_graph(spec.dataset, spec.scale, program.needs_weights())
+    }
+
+    /// The current graph for `(dataset, scale)`: the dataset load with
+    /// the session's delta log applied on top, batch by batch, in
+    /// arrival order. With an empty log this is exactly the dataset
+    /// load.
+    fn mutated_graph(&self, dataset: Dataset, scale: f64, weighted: bool) -> Result<Coo> {
+        let mut g =
+            if weighted { dataset.load_weighted(scale)? } else { dataset.load_scaled(scale)? };
+        // Clone the batches out so the lock is not held across the folds.
+        let batches = {
+            let log = self.delta_log.lock().unwrap();
+            log.get(&(dataset, artifact::scale_micro(scale))).cloned().unwrap_or_default()
+        };
+        for batch in &batches {
+            g = batch.apply_to_coo(&g)?;
+        }
+        Ok(g)
+    }
+
+    fn has_mutations(&self, dataset: Dataset, scale: f64) -> bool {
+        self.delta_log
+            .lock()
+            .unwrap()
+            .contains_key(&(dataset, artifact::scale_micro(scale)))
+    }
+
+    /// Route one artifact request: a key whose `(dataset, scale)` has
+    /// logged mutations must compile (on a full miss) from the mutated
+    /// graph, never the pristine dataset load — a patched cache hit and
+    /// a post-mutation cold compile must be the same artifact.
+    fn artifact_for(&self, spec: &JobSpec, weighted: bool) -> Result<Arc<Preprocessed>> {
+        let key = self.key_for(spec, weighted);
+        let acc = self.accelerator();
+        if self.has_mutations(spec.dataset, spec.scale) {
+            let g = self.mutated_graph(spec.dataset, spec.scale, weighted)?;
+            self.artifacts.get_or_preprocess_from(key, &acc, &g)
         } else {
-            spec.dataset.load_scaled(spec.scale)
+            self.artifacts.get_or_preprocess(key, &acc)
         }
     }
 
@@ -444,8 +527,42 @@ impl Session {
     /// callers.
     pub fn preprocess(&self, spec: &JobSpec) -> Result<Arc<Preprocessed>> {
         let program = self.program_for(spec)?;
-        let key = self.key_for(spec, program.needs_weights());
-        self.artifacts.get_or_preprocess(key, &self.accelerator())
+        self.artifact_for(spec, program.needs_weights())
+    }
+
+    /// Apply a batch of streaming edge mutations to the spec's
+    /// `(dataset, scale)` pair. The batch is validated against the
+    /// current (already-mutated) topology first — a rejected batch has
+    /// no effect on any tier or the log. On success every cached
+    /// artifact for the pair (weighted and unweighted; the algorithm in
+    /// `spec` does not narrow the invalidation) is patched in place via
+    /// [`ArtifactStore::patch`], and the batch joins the session's delta
+    /// log so uncached keys compile against the mutated graph later.
+    pub fn apply_delta(&self, spec: &JobSpec, batch: &DeltaBatch) -> Result<DeltaReport> {
+        spec.validate()?;
+        // Weighted and unweighted loads share one topology, so one
+        // unweighted dry-run validates the batch for both keys.
+        let current = self.mutated_graph(spec.dataset, spec.scale, false)?;
+        batch.apply_to_coo(&current)?;
+        let mut report = DeltaReport { deltas: batch.len(), ..DeltaReport::default() };
+        for weighted in [false, true] {
+            match self.artifacts.patch(self.key_for(spec, weighted), &self.arch, batch)? {
+                Some(stats) => {
+                    report.patched_artifacts += 1;
+                    report.stats.absorb(&stats);
+                }
+                None => report.skipped_keys += 1,
+            }
+        }
+        if !batch.is_empty() {
+            self.delta_log
+                .lock()
+                .unwrap()
+                .entry((spec.dataset, artifact::scale_micro(spec.scale)))
+                .or_default()
+                .push(batch.clone());
+        }
+        Ok(report)
     }
 
     /// Like [`preprocess`](Self::preprocess) but from a caller-loaded
@@ -484,9 +601,8 @@ impl Session {
         executor: &mut dyn StepExecutor,
     ) -> Result<SimReport> {
         let program = self.program_for(spec)?;
-        let key = self.key_for(spec, program.needs_weights());
         let acc = self.accelerator();
-        let pre = self.artifacts.get_or_preprocess(key, &acc)?;
+        let pre = self.artifact_for(spec, program.needs_weights())?;
         self.dispatch(&acc, &pre, program.as_ref(), executor, self.threads_for(spec))
     }
 
@@ -624,6 +740,58 @@ mod tests {
     fn zero_parallelism_resolves_to_hardware_threads_at_build() {
         let session = Session::builder().parallelism(0).build().unwrap();
         assert!(session.parallelism() >= 1, "0 = auto is resolved eagerly");
+    }
+
+    #[test]
+    fn apply_delta_patches_cache_and_routes_later_runs() {
+        let session = Session::with_defaults().unwrap();
+        let spec = JobSpec::new(Dataset::Tiny, "bfs").with_source(0);
+        session.run(&spec).unwrap();
+
+        let g = session.load_graph(&spec).unwrap();
+        let e = g.edges[0];
+        let batch = DeltaBatch::new(
+            g.num_vertices,
+            vec![crate::graph::EdgeDelta::remove(e.src, e.dst)],
+        )
+        .unwrap();
+        let report = session.apply_delta(&spec, &batch).unwrap();
+        // bfs is unweighted, so only that key was cached; the weighted
+        // key had nothing to invalidate.
+        assert_eq!((report.patched_artifacts, report.skipped_keys), (1, 1));
+        assert_eq!(report.stats.removes, 1);
+
+        // The next run serves the patched artifact (no recompile) and is
+        // bit-identical to a fresh session run on the mutated graph.
+        let patched = session.run(&spec).unwrap();
+        assert_eq!(session.artifacts().stats().misses, 1, "patch avoided a recompile");
+        let fresh = Session::with_defaults().unwrap();
+        let cold = fresh.run_on(&spec, &session.load_graph(&spec).unwrap()).unwrap();
+        assert_eq!(
+            patched.run.as_ref().unwrap().values,
+            cold.run.as_ref().unwrap().values
+        );
+        assert_eq!(patched.counts, cold.counts);
+        assert_eq!(patched.exec_time_ns, cold.exec_time_ns);
+    }
+
+    #[test]
+    fn rejected_delta_has_no_effect() {
+        let session = Session::with_defaults().unwrap();
+        let spec = JobSpec::new(Dataset::Tiny, "bfs").with_source(0);
+        let before = session.run(&spec).unwrap();
+        let g = session.load_graph(&spec).unwrap();
+        let e = g.edges[0];
+        // Adding an existing edge is rejected up front: no artifact is
+        // patched and the log stays empty.
+        let bad =
+            DeltaBatch::new(g.num_vertices, vec![crate::graph::EdgeDelta::add(e.src, e.dst)])
+                .unwrap();
+        assert!(session.apply_delta(&spec, &bad).is_err());
+        assert!(!session.has_mutations(spec.dataset, spec.scale));
+        let after = session.run(&spec).unwrap();
+        assert_eq!(before.counts, after.counts);
+        assert_eq!(before.exec_time_ns, after.exec_time_ns);
     }
 
     #[test]

@@ -25,6 +25,9 @@
 //! key      var   the full ArtifactKey (dataset short name, fixed-point
 //!                scale, weighted flag, arch signature) — compared, not
 //!                trusted, on load
+//! deltas   24 B  DeltaProvenance (schema ≥ 2): batches / dirty
+//!                partitions / patched ops absorbed since the last cold
+//!                compile — all zero for a cold save
 //! payload  var   Partitioned ▸ PatternRanking ▸ ConfigTable ▸
 //!                SubgraphTable ▸ ExecutionPlan (every section framed by
 //!                its own module; derived state — hash indices, the
@@ -76,7 +79,9 @@ use super::ArtifactKey;
 pub const FORMAT_VERSION: u32 = 1;
 /// Payload schema version: bump whenever `Partitioned`, the ranking, the
 /// CT/ST, or the `ExecutionPlan` sections change shape.
-pub const SCHEMA_VERSION: u32 = 1;
+/// v2: a [`DeltaProvenance`] section follows the key — how much streaming
+/// mutation the artifact has absorbed since its last cold compile.
+pub const SCHEMA_VERSION: u32 = 2;
 
 const MAGIC: [u8; 8] = *b"RPREPROC";
 const FILE_PREFIX: &str = "plan-v";
@@ -167,6 +172,35 @@ impl From<std::io::Error> for StoreError {
     }
 }
 
+/// Streaming-mutation provenance of a persisted artifact: how much
+/// delta patching ([`sched::patch`](crate::sched::patch)) it has
+/// absorbed since its last cold compile. Purely informational — a
+/// patched artifact is bit-identical to a cold recompile of the mutated
+/// graph, so nothing downstream branches on these counters; they exist
+/// so `repro artifacts ls` can tell a live-mutated cache entry from a
+/// freshly baked one. All zero on a cold save.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DeltaProvenance {
+    /// Delta batches applied to this artifact.
+    pub batches: u64,
+    /// Total dirty adjacency windows across those batches.
+    pub dirty_partitions: u64,
+    /// Total plan ops re-emitted across those batches.
+    pub patched_ops: u64,
+}
+
+impl DeltaProvenance {
+    fn encode_into(&self, w: &mut Writer) {
+        w.put_u64(self.batches);
+        w.put_u64(self.dirty_partitions);
+        w.put_u64(self.patched_ops);
+    }
+
+    fn decode_from(r: &mut Reader<'_>) -> Result<Self, CodecError> {
+        Ok(Self { batches: r.u64()?, dirty_partitions: r.u64()?, patched_ops: r.u64()? })
+    }
+}
+
 /// The on-disk artifact directory. Cheap value type — all state lives in
 /// the filesystem, so any number of `DiskStore`s (across threads and
 /// processes) may point at one directory.
@@ -201,12 +235,23 @@ impl DiskStore {
     /// architecture the caller will run under — the decoded plan must
     /// [`matches`](ExecutionPlan::matches) it.
     pub fn load(&self, key: &ArtifactKey, arch: &ArchConfig) -> Result<Preprocessed, StoreError> {
+        self.load_with(key, arch).map(|(pre, _)| pre)
+    }
+
+    /// Like [`load`](Self::load) but also returns the artifact's
+    /// accumulated [`DeltaProvenance`] (the delta-patch path carries the
+    /// counters across a disk round trip).
+    pub fn load_with(
+        &self,
+        key: &ArtifactKey,
+        arch: &ArchConfig,
+    ) -> Result<(Preprocessed, DeltaProvenance), StoreError> {
         let bytes = std::fs::read(self.path_of(key))?;
-        let pre = decode_artifact(&bytes, key)?;
+        let (pre, prov) = decode_artifact_with(&bytes, key)?;
         if !pre.plan.matches(arch) {
             return Err(StoreError::ArchMismatch);
         }
-        Ok(pre)
+        Ok((pre, prov))
     }
 
     /// Persist the artifact for `key`. Returns `Ok(false)` when another
@@ -220,12 +265,25 @@ impl DiskStore {
     /// `Ok(true)` for identical bytes; `ArtifactStats::writes` can
     /// over-count by the race width there, never under-count.
     pub fn save(&self, key: &ArtifactKey, pre: &Preprocessed) -> Result<bool, StoreError> {
+        self.save_with(key, pre, &DeltaProvenance::default())
+    }
+
+    /// Like [`save`](Self::save) but stamping the artifact with its
+    /// accumulated [`DeltaProvenance`] — the delta-patch republish path
+    /// (which [`remove`](Self::remove)s the stale file first, so the
+    /// exactly-once publish applies to each *generation* of the key).
+    pub fn save_with(
+        &self,
+        key: &ArtifactKey,
+        pre: &Preprocessed,
+        prov: &DeltaProvenance,
+    ) -> Result<bool, StoreError> {
         static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
         let target = self.path_of(key);
         if target.exists() {
             return Ok(false);
         }
-        let bytes = encode_artifact(key, pre);
+        let bytes = encode_artifact_with(key, pre, prov);
         let tmp = self.dir.join(format!(
             ".tmp-{:016x}-{}-{}",
             key.fingerprint(),
@@ -324,10 +382,23 @@ impl DiskStore {
         let mut r = checked_payload(&bytes)?;
         let schema = r.u32()?;
         let key = ArtifactKey::decode_from(&mut r)?;
+        let deltas = if schema >= 2 {
+            let prov = DeltaProvenance::decode_from(&mut r)?;
+            if prov.batches > 0 {
+                format!(
+                    "  deltas {} ({} dirty, {} ops)",
+                    prov.batches, prov.dirty_partitions, prov.patched_ops
+                )
+            } else {
+                String::new()
+            }
+        } else {
+            String::new()
+        };
         // "checksum ok", not "payload ok": this listing never decodes
         // the payload, so it must not vouch for more than it verified.
         Ok(format!(
-            "v{format}.{schema}  {}  {} B  checksum ok",
+            "v{format}.{schema}  {}  {} B{deltas}  checksum ok",
             key.summary(),
             bytes.len()
         ))
@@ -359,13 +430,23 @@ fn checked_payload(bytes: &[u8]) -> Result<Reader<'_>, StoreError> {
 }
 
 /// Serialize `pre` under `key` into the full framed + checksummed file
-/// image.
+/// image, with zeroed (cold-compile) provenance.
 pub fn encode_artifact(key: &ArtifactKey, pre: &Preprocessed) -> Vec<u8> {
+    encode_artifact_with(key, pre, &DeltaProvenance::default())
+}
+
+/// Serialize `pre` under `key`, stamped with its delta provenance.
+pub fn encode_artifact_with(
+    key: &ArtifactKey,
+    pre: &Preprocessed,
+    prov: &DeltaProvenance,
+) -> Vec<u8> {
     let mut w = Writer::new();
     w.put_bytes(&MAGIC);
     w.put_u32(FORMAT_VERSION);
     w.put_u32(SCHEMA_VERSION);
     key.encode_into(&mut w);
+    prov.encode_into(&mut w);
     encode_partitioned(&mut w, &pre.part);
     encode_ranking(&mut w, &pre.ranking);
     encode_config_table(&mut w, &pre.ct);
@@ -376,11 +457,20 @@ pub fn encode_artifact(key: &ArtifactKey, pre: &Preprocessed) -> Vec<u8> {
     w.into_bytes()
 }
 
+/// Decode and validate a file image, discarding the provenance stamp.
+pub fn decode_artifact(bytes: &[u8], expected: &ArtifactKey) -> Result<Preprocessed, StoreError> {
+    decode_artifact_with(bytes, expected).map(|(pre, _)| pre)
+}
+
 /// Decode and validate a file image: envelope (magic, versions,
 /// checksum), identity (embedded key == `expected`), then every payload
 /// section with its structural invariants, then cross-section
-/// consistency. Any failure is a typed [`StoreError`].
-pub fn decode_artifact(bytes: &[u8], expected: &ArtifactKey) -> Result<Preprocessed, StoreError> {
+/// consistency. Any failure is a typed [`StoreError`]. Returns the
+/// artifact together with the [`DeltaProvenance`] it was saved under.
+pub fn decode_artifact_with(
+    bytes: &[u8],
+    expected: &ArtifactKey,
+) -> Result<(Preprocessed, DeltaProvenance), StoreError> {
     let format = envelope_format(bytes)?;
     if format != FORMAT_VERSION {
         return Err(StoreError::FormatVersion { found: format });
@@ -394,6 +484,7 @@ pub fn decode_artifact(bytes: &[u8], expected: &ArtifactKey) -> Result<Preproces
     if key != *expected {
         return Err(StoreError::KeyMismatch);
     }
+    let prov = DeltaProvenance::decode_from(&mut r)?;
     let part = decode_partitioned(&mut r)?;
     let ranking = decode_ranking(&mut r)?;
     let ct = decode_config_table(&mut r)?;
@@ -426,7 +517,7 @@ pub fn decode_artifact(bytes: &[u8], expected: &ArtifactKey) -> Result<Preproces
     {
         return Err(StoreError::Corrupt("table pattern outside the C×C window"));
     }
-    Ok(Preprocessed { part, ranking, ct, st, plan })
+    Ok((Preprocessed { part, ranking, ct, st, plan }, prov))
 }
 
 fn encode_partitioned(w: &mut Writer, part: &Partitioned) {
@@ -682,8 +773,28 @@ mod tests {
         let (key, pre, _) = baked(false);
         store.save(&key, &pre).unwrap();
         let line = DiskStore::describe(&store.entries()[0]).unwrap();
-        assert!(line.contains("v1.1"), "{line}");
+        assert!(line.contains("v1.2"), "{line}");
         assert!(line.contains("TN"), "{line}");
+        // A cold save carries zero provenance and the listing stays quiet
+        // about it.
+        assert!(!line.contains("deltas"), "{line}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn provenance_round_trips_and_shows_in_describe() {
+        let dir = scratch("prov");
+        let store = DiskStore::open(&dir).unwrap();
+        let (key, pre, arch) = baked(false);
+        let prov = DeltaProvenance { batches: 3, dirty_partitions: 7, patched_ops: 41 };
+        assert!(store.save_with(&key, &pre, &prov).unwrap());
+        let (loaded, got) = store.load_with(&key, &arch).unwrap();
+        assert_eq!(pre, loaded);
+        assert_eq!(prov, got);
+        // Plain `load` still works and simply drops the stamp.
+        assert_eq!(pre, store.load(&key, &arch).unwrap());
+        let line = DiskStore::describe(&store.entries()[0]).unwrap();
+        assert!(line.contains("deltas 3 (7 dirty, 41 ops)"), "{line}");
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -45,6 +45,43 @@ pub fn with_random_weights(g: &Coo, rng: &mut SplitMix64) -> Coo {
     )
 }
 
+/// Seeded random [`DeltaBatch`](repro::graph::DeltaBatch) valid against
+/// `g`: removes and reweights target existing edges, adds target
+/// rejection-sampled absent pairs, so the batch always applies cleanly.
+/// Category overlap is impossible (adds are absent pairs, the rest are
+/// present pairs) and same-pair repeats collapse under the batch's
+/// last-wins dedup — the result is valid by construction.
+pub fn random_delta_batch(g: &Coo, rng: &mut SplitMix64) -> repro::graph::DeltaBatch {
+    use repro::graph::{DeltaBatch, EdgeDelta};
+    let mut deltas = Vec::new();
+    for _ in 0..1 + rng.next_index(6) {
+        let e = g.edges[rng.next_index(g.edges.len())];
+        if rng.next_bool(0.5) {
+            deltas.push(EdgeDelta::remove(e.src, e.dst));
+        } else {
+            deltas.push(EdgeDelta::reweight(e.src, e.dst, 0.5 + rng.next_f32() * 4.0));
+        }
+    }
+    for _ in 0..1 + rng.next_index(6) {
+        // Rejection sampling; these graphs are sparse, so a valid pair
+        // lands almost immediately (the cap only guards a pathological
+        // near-complete graph).
+        for _ in 0..64 {
+            let src = rng.next_bounded(g.num_vertices as u64) as u32;
+            let dst = rng.next_bounded(g.num_vertices as u64) as u32;
+            let present = g
+                .edges
+                .binary_search_by_key(&(src, dst), |e| (e.src, e.dst))
+                .is_ok();
+            if src != dst && !present {
+                deltas.push(EdgeDelta::add_weighted(src, dst, 0.5 + rng.next_f32() * 4.0));
+                break;
+            }
+        }
+    }
+    DeltaBatch::new(g.num_vertices, deltas).expect("constructed deltas are valid")
+}
+
 /// A randomized-but-valid architecture for property sweeps: crossbar
 /// size, engine count, static split, replacement policy, reuse flag and
 /// execution order all vary with the seed. Shared by the

@@ -1,0 +1,237 @@
+//! Streaming-mutation property suite — the lockdown for the edge-delta
+//! ingest path (`graph::delta` → `sched::patch` → `Session::apply_delta`).
+//!
+//! The central contract is **bit-identity**: a patched artifact must
+//! compare equal (`PartialEq`, every field) to a cold
+//! `Accelerator::preprocess` of the mutated graph, and every execution
+//! mechanism — sequential interpreter, scoped spawns, persistent worker
+//! pool, threads 1–8 — must produce bit-identical `RunResult`s from the
+//! patched plan. Random graphs × random architectures × random delta
+//! batches × all four algorithms; every assertion carries its seed.
+//!
+//! The disk legs extend the contract across processes: a patched
+//! artifact republished to a shared directory warm-serves (zero
+//! compilations) into a fresh store/session, carrying its accumulated
+//! [`DeltaProvenance`](repro::session::DeltaProvenance) stamp.
+
+use repro::accel::{Accelerator, ArchConfig};
+use repro::algo::traits::VertexProgram;
+use repro::algo::{Bfs, PageRank, Sssp, Wcc};
+use repro::cost::CostParams;
+use repro::graph::datasets::Dataset;
+use repro::graph::{DeltaBatch, EdgeDelta};
+use repro::sched::executor::NativeExecutor;
+use repro::sched::{
+    patch_preprocessed, run_parallel_pooled, run_parallel_scoped, PatchStats, WorkerPool,
+};
+use repro::session::{ArtifactKey, ArtifactStore, DiskStore, JobSpec, Session};
+use repro::util::SplitMix64;
+
+mod common;
+use common::{
+    assert_bit_identical, default_threads, random_arch, random_delta_batch, random_graph,
+    scratch_dir, with_random_weights,
+};
+
+/// One-delta batch against an `n`-vertex graph.
+fn single(n: u32, delta: EdgeDelta) -> DeltaBatch {
+    DeltaBatch::new(n, vec![delta]).unwrap()
+}
+
+#[test]
+fn prop_patched_artifact_equals_cold_recompile() {
+    for seed in 600..608u64 {
+        let g = random_graph(seed);
+        let mut rng = SplitMix64::new(seed ^ 0xDE17A);
+        let arch = random_arch(&mut rng);
+        let gw = with_random_weights(&g, &mut rng);
+        for (graph, weighted) in [(&g, false), (&gw, true)] {
+            let batch = random_delta_batch(graph, &mut rng);
+            let acc = Accelerator::new(arch.clone(), CostParams::default());
+            let mut patched = acc.preprocess(graph, weighted).unwrap();
+            let stats = patch_preprocessed(&mut patched, &batch, &acc.config).unwrap();
+            let cold = acc.preprocess(&batch.apply_to_coo(graph).unwrap(), weighted).unwrap();
+            assert_eq!(
+                patched, cold,
+                "seed {seed} weighted {weighted} arch {arch:?}: patched != cold recompile"
+            );
+            // Every delta in the canonical batch was applied exactly once.
+            assert_eq!(
+                (stats.adds + stats.removes + stats.reweights) as usize,
+                batch.len(),
+                "seed {seed} weighted {weighted}: op accounting"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_patched_plan_runs_bit_identical_for_every_algorithm_and_mechanism() {
+    for seed in 620..624u64 {
+        let g = random_graph(seed);
+        let mut rng = SplitMix64::new(seed ^ 0x0D17);
+        let source = rng.next_bounded(g.num_vertices as u64) as u32;
+        let arch = random_arch(&mut rng);
+        let gw = with_random_weights(&g, &mut rng);
+        let bfs = Bfs::new(source);
+        let sssp = Sssp::new(source);
+        let pagerank = PageRank::new(0.85, 4);
+        let wcc = Wcc;
+        let programs: [(&dyn VertexProgram, bool); 4] =
+            [(&bfs, false), (&sssp, true), (&pagerank, false), (&wcc, false)];
+        let acc = Accelerator::new(arch.clone(), CostParams::default());
+        let params = CostParams::default();
+        for (program, weighted) in programs {
+            let graph = if weighted { &gw } else { &g };
+            let batch = random_delta_batch(graph, &mut rng);
+            let mut patched = acc.preprocess(graph, weighted).unwrap();
+            patch_preprocessed(&mut patched, &batch, &acc.config).unwrap();
+            let cold = acc.preprocess(&batch.apply_to_coo(graph).unwrap(), weighted).unwrap();
+            let ctx = format!("seed {seed} algo {} arch {arch:?}", program.name());
+
+            let want = acc
+                .run_threaded(&cold, program, &mut NativeExecutor, 1)
+                .unwrap()
+                .run
+                .unwrap();
+            let got_seq = acc
+                .run_threaded(&patched, program, &mut NativeExecutor, 1)
+                .unwrap()
+                .run
+                .unwrap();
+            assert_bit_identical(&got_seq, &want, &format!("{ctx} [sequential]"));
+            for threads in [2usize, 4, 8] {
+                let got_scoped = run_parallel_scoped(
+                    &arch,
+                    &params,
+                    &patched.plan,
+                    program,
+                    &mut NativeExecutor,
+                    threads,
+                )
+                .unwrap();
+                assert_bit_identical(&got_scoped, &want, &format!("{ctx} [scoped x{threads}]"));
+                let mut pool = WorkerPool::new(threads);
+                let got_pooled = run_parallel_pooled(
+                    &arch,
+                    &params,
+                    &patched.plan,
+                    program,
+                    &mut NativeExecutor,
+                    &mut pool,
+                )
+                .unwrap();
+                assert_bit_identical(&got_pooled, &want, &format!("{ctx} [pooled x{threads}]"));
+            }
+        }
+    }
+}
+
+#[test]
+fn empty_batch_is_identity_through_the_session() {
+    let session = Session::with_defaults().unwrap();
+    let spec = JobSpec::new(Dataset::Tiny, "bfs").with_source(0);
+    let before = session.run(&spec).unwrap();
+    let n = session.load_graph(&spec).unwrap().num_vertices;
+    let report = session.apply_delta(&spec, &DeltaBatch::empty(n)).unwrap();
+    assert_eq!(report.deltas, 0);
+    assert_eq!(report.stats, PatchStats::default());
+    let after = session.run(&spec).unwrap();
+    assert_bit_identical(after.run.as_ref().unwrap(), before.run.as_ref().unwrap(), "empty batch");
+    assert_eq!(before.counts, after.counts);
+    assert_eq!(before.exec_time_ns, after.exec_time_ns);
+}
+
+#[test]
+fn remove_then_re_add_restores_the_artifact_bit_for_bit() {
+    for (weighted, seed) in [(false, 700u64), (true, 701)] {
+        let g0 = random_graph(seed);
+        let mut rng = SplitMix64::new(seed ^ 0xAB);
+        let g = if weighted {
+            with_random_weights(&g0, &mut rng)
+        } else {
+            g0
+        };
+        let acc = Accelerator::with_defaults();
+        let mut pre = acc.preprocess(&g, weighted).unwrap();
+        let original = pre.clone();
+        let e = g.edges[rng.next_index(g.edges.len())];
+        let remove = single(g.num_vertices, EdgeDelta::remove(e.src, e.dst));
+        patch_preprocessed(&mut pre, &remove, &acc.config).unwrap();
+        assert_ne!(pre.part, original.part, "seed {seed}: removal must change the partitioning");
+        // Two sequential batches, not one: in a single batch the pair
+        // would dedup last-wins into a bare add of an existing edge.
+        let readd = single(g.num_vertices, EdgeDelta::add_weighted(e.src, e.dst, e.weight));
+        patch_preprocessed(&mut pre, &readd, &acc.config).unwrap();
+        assert_eq!(
+            pre, original,
+            "seed {seed} weighted {weighted}: remove + re-add must restore the artifact"
+        );
+    }
+}
+
+#[test]
+fn patched_artifact_warm_serves_across_stores_with_provenance() {
+    let dir = scratch_dir("delta-warm");
+    let arch = ArchConfig::default();
+    let acc = Accelerator::with_defaults();
+    let key = ArtifactKey::new(Dataset::Tiny, 1.0, false, &arch);
+    let g = Dataset::Tiny.load().unwrap();
+    let e = g.edges[0];
+    let batch = single(g.num_vertices, EdgeDelta::remove(e.src, e.dst));
+
+    let first = ArtifactStore::with_dir(&dir).unwrap();
+    first.get_or_preprocess(key, &acc).unwrap();
+    let stats = first.patch(key, &arch, &batch).unwrap().expect("cached key patches");
+    assert_eq!(stats.removes, 1);
+    let patched = first.get(&key).unwrap();
+
+    // A fresh store over the same directory serves the *patched*
+    // artifact warm — zero compilations — and it equals both the
+    // in-memory patched copy and a cold recompile of the mutated graph.
+    let second = ArtifactStore::with_dir(&dir).unwrap();
+    let served = second.get_or_preprocess(key, &acc).unwrap();
+    let s = second.stats();
+    assert_eq!((s.misses, s.disk_hits), (0, 1), "patched artifact must warm-serve");
+    assert_eq!(*served, *patched);
+    let cold = acc.preprocess(&batch.apply_to_coo(&g).unwrap(), false).unwrap();
+    assert_eq!(*served, cold);
+
+    // The provenance stamp survived the disk round trip.
+    let (_, prov) = DiskStore::open(&dir).unwrap().load_with(&key, &arch).unwrap();
+    assert_eq!(prov.batches, 1);
+    assert_eq!(prov.dirty_partitions, u64::from(stats.dirty_partitions));
+    assert_eq!(prov.patched_ops, u64::from(stats.patched_ops));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn mutated_session_warm_restarts_from_patched_disk_artifacts() {
+    let dir = scratch_dir("delta-session");
+    let spec = JobSpec::new(Dataset::Tiny, "sssp")
+        .with_source(0)
+        .with_parallelism(default_threads());
+    let first = Session::builder().artifact_dir(&dir).build().unwrap();
+    first.run(&spec).unwrap();
+
+    let g = first.load_graph(&spec).unwrap();
+    let e = g.edges[0];
+    let batch = single(g.num_vertices, EdgeDelta::reweight(e.src, e.dst, 9.5));
+    let report = first.apply_delta(&spec, &batch).unwrap();
+    // sssp caches only the weighted key; the unweighted one is skipped.
+    assert_eq!((report.patched_artifacts, report.skipped_keys), (1, 1));
+    let want = first.run(&spec).unwrap();
+    drop(first);
+
+    // A restarted process: fresh session, empty delta log, warm
+    // directory — the patched plan is served with zero compilations and
+    // runs bit-identical to the pre-restart mutated result.
+    let second = Session::builder().artifact_dir(&dir).build().unwrap();
+    let got = second.run(&spec).unwrap();
+    let s = second.artifacts().stats();
+    assert_eq!((s.misses, s.disk_hits), (0, 1), "restart must warm-serve the patched plan");
+    assert_bit_identical(got.run.as_ref().unwrap(), want.run.as_ref().unwrap(), "restart");
+    assert_eq!(got.counts, want.counts);
+    assert_eq!(got.exec_time_ns, want.exec_time_ns);
+    let _ = std::fs::remove_dir_all(&dir);
+}
