@@ -26,7 +26,7 @@ use repro::cost::CostParams;
 use repro::coordinator::{Service, ServiceConfig};
 use repro::graph::datasets::Dataset;
 use repro::graph::{DeltaBatch, EdgeDelta};
-use repro::pattern::extract::partition;
+use repro::pattern::extract::{partition, partition_chunked};
 use repro::sched::executor::{NativeExecutor, StepExecutor};
 use repro::sched::{
     patch_preprocessed, run_parallel_pooled, run_parallel_scoped, ExecutionPlan, WorkerPool,
@@ -173,8 +173,13 @@ fn main() {
         n as f64 / st.mean.as_secs_f64() / 1e6
     );
 
-    // Partitioner.
+    // Partitioner: monolithic vs the chunked build the parallel
+    // preprocess path merges from (4096-edge chunks — the merge overhead
+    // the determinism contract pays for, measured on one thread).
     b.run("partition c=4", || black_box(partition(&g, 4, false)));
+    b.run("partition chunked c=4", || {
+        black_box(partition_chunked(&g, 4, false, 4096))
+    });
 
     // Warm-start: full cold preprocess (dataset already in memory:
     // partition + ranking + CT/ST + plan compile) vs deserializing the
@@ -185,10 +190,22 @@ fn main() {
     disk.clear();
     let art_key = ArtifactKey::new(dataset, 1.0, false, &arch);
     let sc = b
-        .run("preprocess cold (Alg.1 + plan)", || {
+        .run("preprocess cold threads=1", || {
             black_box(acc.preprocess(&g, false).unwrap())
         })
         .mean;
+    // Same compile fanned out over the persistent pool — the cold-miss
+    // path a `--threads 4` session actually takes (bit-identical result,
+    // see tests/preprocess_par.rs).
+    let sc4 = b
+        .run("preprocess cold threads=4", || {
+            black_box(acc.preprocess_pooled(&g, false, &mut pool).unwrap())
+        })
+        .mean;
+    println!(
+        "  -> parallel cold preprocess {:.2}x vs threads=1",
+        sc.as_secs_f64() / sc4.as_secs_f64(),
+    );
     assert!(disk.save(&art_key, &pre).unwrap(), "bench dir must start cold");
     let sw = b
         .run("artifact disk load (warm start)", || {

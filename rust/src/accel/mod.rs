@@ -7,4 +7,4 @@ pub mod simulator;
 
 pub use activity::ActivityTrace;
 pub use config::{ArchConfig, PolicyKind};
-pub use simulator::{Accelerator, Preprocessed, SimReport};
+pub use simulator::{Accelerator, Preprocessed, PreprocessTiming, SimReport};

@@ -2,19 +2,57 @@
 //! graph against an architecture model, then execute vertex programs and
 //! report energy/latency/lifetime.
 
+use std::collections::HashMap;
+use std::time::Instant;
+
 use anyhow::Result;
 
 use crate::algo::traits::VertexProgram;
 use crate::cost::{CostParams, EnergyBreakdown, EventCounts};
 use crate::graph::Coo;
-use crate::pattern::extract::{partition, Partitioned};
-use crate::pattern::rank::PatternRanking;
+use crate::pattern::extract::{
+    finalize_windows, merge_windows, partition, Partitioned, WindowMap,
+};
+use crate::pattern::rank::{merge_counts, PatternRanking};
 use crate::pattern::tables::{ConfigTable, SubgraphTable};
+use crate::pattern::Pattern;
 use crate::sched::executor::StepExecutor;
 use crate::sched::plan::ExecutionPlan;
 use crate::sched::scheduler::RunResult;
+use crate::sched::WorkerPool;
 
 use super::config::ArchConfig;
+
+/// Wall-clock of one cold preprocess, split by Alg.-1 phase — recorded
+/// per compile by the session's `ArtifactStore`, aggregated into
+/// min/mean/max by `coordinator::metrics`, and persisted in the artifact
+/// envelope so `repro artifacts ls` surfaces warm-vs-cold regressions
+/// across processes.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PreprocessTiming {
+    /// Phase ①: edge bucketing + window merge (`pattern::extract`).
+    pub partition_ns: u64,
+    /// Phase ②: pattern occurrence counting + ranking.
+    pub rank_ns: u64,
+    /// Phase ③a: config + subgraph table build.
+    pub tables_ns: u64,
+    /// Phase ③b: execution-plan section emission.
+    pub plan_ns: u64,
+    /// Worker threads the compile fanned out over (1 = sequential).
+    pub threads: u32,
+}
+
+impl PreprocessTiming {
+    pub fn total_ns(&self) -> u64 {
+        self.partition_ns + self.rank_ns + self.tables_ns + self.plan_ns
+    }
+}
+
+/// Split `xs` into at most `n` contiguous chunks (none empty) — the
+/// deterministic shard shape of every parallel preprocess phase.
+fn chunk_slices<T>(xs: &[T], n: usize) -> Vec<&[T]> {
+    xs.chunks(xs.len().div_ceil(n.max(1)).max(1)).collect()
+}
 
 /// Output of the preprocessing stage (Alg. 1): everything the runtime
 /// needs, resident in main memory — including the compiled
@@ -80,14 +118,103 @@ impl Accelerator {
     }
 
     /// Alg. 1: partition, rank, build CT/ST, compile the execution plan.
+    /// Sequential — the differential oracle for the parallel variants.
     pub fn preprocess(&self, graph: &Coo, weighted: bool) -> Result<Preprocessed> {
+        Ok(self.preprocess_timed(graph, weighted, None)?.0)
+    }
+
+    /// [`preprocess`](Self::preprocess) fanned out over `threads` workers
+    /// (`0` = one per hardware thread) on a transient pool; `<= 1` takes
+    /// the sequential path verbatim. The result is whole-struct-equal to
+    /// the sequential preprocess for every thread count. Repeated
+    /// callers should hold a persistent pool and use
+    /// [`preprocess_pooled`](Self::preprocess_pooled) instead (the
+    /// `Session` checks one out of its free list).
+    pub fn preprocess_threaded(
+        &self,
+        graph: &Coo,
+        weighted: bool,
+        threads: usize,
+    ) -> Result<Preprocessed> {
+        let threads = crate::sched::resolve_threads(threads);
+        if threads <= 1 {
+            return self.preprocess(graph, weighted);
+        }
+        let mut pool = WorkerPool::new(threads);
+        self.preprocess_pooled(graph, weighted, &mut pool)
+    }
+
+    /// [`preprocess_threaded`](Self::preprocess_threaded) on a
+    /// caller-owned persistent pool (its worker count is the fan-out).
+    pub fn preprocess_pooled(
+        &self,
+        graph: &Coo,
+        weighted: bool,
+        pool: &mut WorkerPool,
+    ) -> Result<Preprocessed> {
+        Ok(self.preprocess_timed(graph, weighted, Some(pool))?.0)
+    }
+
+    /// Alg. 1 with per-phase wall times, optionally fanned out over a
+    /// worker pool (`None` = sequential). Bit-identity is structural:
+    /// each parallel phase merges worker results in chunk/range order
+    /// into the same finalize / `from_counts` / emission code the
+    /// sequential path uses, so chunk boundaries never change an
+    /// artifact byte (see ROADMAP's chunk-merge determinism rule).
+    pub fn preprocess_timed(
+        &self,
+        graph: &Coo,
+        weighted: bool,
+        mut pool: Option<&mut WorkerPool>,
+    ) -> Result<(Preprocessed, PreprocessTiming)> {
         self.config.validate()?;
-        let part = partition(graph, self.config.crossbar_size, weighted);
-        let ranking = PatternRanking::from_partitioned(&part);
+        let threads = pool.as_ref().map_or(1, |p| p.workers());
+        let mut timing = PreprocessTiming { threads: threads as u32, ..Default::default() };
+        let c = self.config.crossbar_size;
+
+        let t = Instant::now();
+        let part = match pool.as_deref_mut() {
+            Some(pool) if threads > 1 => {
+                let chunks = chunk_slices(&graph.edges, threads);
+                let mut merged = WindowMap::default();
+                for m in pool.bucket_chunks(&chunks, c, weighted) {
+                    merge_windows(&mut merged, m);
+                }
+                finalize_windows(merged, c, graph.num_vertices, weighted)
+            }
+            _ => partition(graph, c, weighted),
+        };
+        timing.partition_ns = t.elapsed().as_nanos() as u64;
+
+        let t = Instant::now();
+        let ranking = match pool.as_deref_mut() {
+            Some(pool) if threads > 1 => {
+                let chunks = chunk_slices(&part.subgraphs, threads);
+                let mut counts: HashMap<Pattern, u32> = HashMap::new();
+                for m in pool.count_chunks(&chunks) {
+                    merge_counts(&mut counts, m.into_iter().map(|(p, n)| (p, i64::from(n))));
+                }
+                PatternRanking::from_counts(counts, part.num_subgraphs())
+            }
+            _ => PatternRanking::from_partitioned(&part),
+        };
+        timing.rank_ns = t.elapsed().as_nanos() as u64;
+
+        let t = Instant::now();
         let ct = self.build_config_table(&ranking);
         let st = SubgraphTable::build(&part, &ranking, self.config.order);
-        let plan = ExecutionPlan::build(&part, &ct, &st, &self.config);
-        Ok(Preprocessed { part, ranking, ct, st, plan })
+        timing.tables_ns = t.elapsed().as_nanos() as u64;
+
+        let t = Instant::now();
+        let plan = match pool {
+            Some(pool) if threads > 1 => {
+                ExecutionPlan::build_pooled(&part, &ct, &st, &self.config, pool)
+            }
+            _ => ExecutionPlan::build(&part, &ct, &st, &self.config),
+        };
+        timing.plan_ns = t.elapsed().as_nanos() as u64;
+
+        Ok((Preprocessed { part, ranking, ct, st, plan }, timing))
     }
 
     /// Build just the engine config table for `ranking` under this
@@ -260,6 +387,40 @@ mod tests {
             assert_eq!(a.counts, b.counts);
             assert_eq!(a.exec_time_ns, b.exec_time_ns);
         }
+    }
+
+    #[test]
+    fn preprocess_threaded_is_whole_struct_equal_to_sequential() {
+        let g = Dataset::Tiny.load().unwrap();
+        let acc = Accelerator::with_defaults();
+        for weighted in [false, true] {
+            let want = acc.preprocess(&g, weighted).unwrap();
+            for threads in [1usize, 2, 4, 8] {
+                let got = acc.preprocess_threaded(&g, weighted, threads).unwrap();
+                assert_eq!(got, want, "threads {threads} weighted {weighted}");
+            }
+            // Pool reuse across compiles must not leak state between them.
+            let mut pool = crate::sched::WorkerPool::new(3);
+            for _ in 0..2 {
+                let got = acc.preprocess_pooled(&g, weighted, &mut pool).unwrap();
+                assert_eq!(got, want, "pooled weighted {weighted}");
+            }
+        }
+    }
+
+    #[test]
+    fn preprocess_timed_records_every_phase() {
+        let g = Dataset::Tiny.load().unwrap();
+        let acc = Accelerator::with_defaults();
+        let (_, t) = acc.preprocess_timed(&g, false, None).unwrap();
+        assert_eq!(t.threads, 1);
+        assert_eq!(
+            t.total_ns(),
+            t.partition_ns + t.rank_ns + t.tables_ns + t.plan_ns
+        );
+        let mut pool = crate::sched::WorkerPool::new(4);
+        let (_, t4) = acc.preprocess_timed(&g, false, Some(&mut pool)).unwrap();
+        assert_eq!(t4.threads, 4);
     }
 
     #[test]

@@ -7,7 +7,79 @@ use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
+use crate::accel::PreprocessTiming;
 use crate::session::DeltaReport;
+
+/// Min/mean/max accumulator for one preprocess phase (nanoseconds).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct PhaseStat {
+    pub count: u64,
+    pub total_ns: u64,
+    pub min_ns: u64,
+    pub max_ns: u64,
+}
+
+impl PhaseStat {
+    pub fn record(&mut self, ns: u64) {
+        self.min_ns = if self.count == 0 { ns } else { self.min_ns.min(ns) };
+        self.max_ns = self.max_ns.max(ns);
+        self.count += 1;
+        self.total_ns += ns;
+    }
+
+    pub fn mean_ns(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.total_ns / self.count
+        }
+    }
+}
+
+/// Cold-preprocess wall time split into partition / rank / tables / plan
+/// phases, min/mean/max per compile. The session's `ArtifactStore`
+/// records one entry per cold compile (the single source of truth);
+/// [`Service::metrics`](crate::coordinator::Service::metrics) copies it
+/// into the snapshot and `repro artifacts warm|ls` prints it, so
+/// warm-vs-cold regressions are visible in serve fleets.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct PreprocessPhases {
+    /// Cold compiles recorded.
+    pub compiles: u64,
+    pub partition: PhaseStat,
+    pub rank: PhaseStat,
+    pub tables: PhaseStat,
+    pub plan: PhaseStat,
+    pub total: PhaseStat,
+}
+
+impl PreprocessPhases {
+    pub fn record(&mut self, t: &PreprocessTiming) {
+        self.compiles += 1;
+        self.partition.record(t.partition_ns);
+        self.rank.record(t.rank_ns);
+        self.tables.record(t.tables_ns);
+        self.plan.record(t.plan_ns);
+        self.total.record(t.total_ns());
+    }
+
+    /// One-line human summary for the CLI: per-phase mean with the
+    /// total's min/mean/max, microseconds.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} compiles: partition {}us / rank {}us / tables {}us / plan {}us \
+             (total min {}us mean {}us max {}us)",
+            self.compiles,
+            self.partition.mean_ns() / 1_000,
+            self.rank.mean_ns() / 1_000,
+            self.tables.mean_ns() / 1_000,
+            self.plan.mean_ns() / 1_000,
+            self.total.min_ns / 1_000,
+            self.total.mean_ns() / 1_000,
+            self.total.max_ns / 1_000,
+        )
+    }
+}
 
 /// Per-algorithm counters plus the queue-depth gauge.
 #[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
@@ -54,6 +126,11 @@ pub struct MetricsSnapshot {
     pub delta_dirty_partitions: u64,
     pub delta_patched_ops: u64,
     pub delta_avoided_recompiles: u64,
+    /// Cold-preprocess phase timing, copied from the session's
+    /// `ArtifactStore` by [`Service::metrics`](crate::coordinator::Service::metrics)
+    /// (zeroed in a bare [`Metrics::snapshot`] — the store is the single
+    /// source of truth for compile timing).
+    pub preprocess: PreprocessPhases,
     /// Keyed by algorithm id, sorted.
     pub per_algorithm: BTreeMap<String, AlgoStats>,
 }
@@ -119,6 +196,7 @@ impl Metrics {
             delta_dirty_partitions: self.delta_dirty_partitions.load(Ordering::Relaxed),
             delta_patched_ops: self.delta_patched_ops.load(Ordering::Relaxed),
             delta_avoided_recompiles: self.delta_avoided_recompiles.load(Ordering::Relaxed),
+            preprocess: PreprocessPhases::default(),
             per_algorithm: self.per_algo.lock().unwrap().clone(),
         }
     }
@@ -195,5 +273,37 @@ mod tests {
         let s = Metrics::default().snapshot();
         assert_eq!(s.mean_latency_us, 0.0);
         assert!(s.per_algorithm.is_empty());
+        assert_eq!(s.preprocess, PreprocessPhases::default());
+    }
+
+    #[test]
+    fn phase_stats_track_min_mean_max() {
+        let mut p = PhaseStat::default();
+        assert_eq!(p.mean_ns(), 0);
+        p.record(100);
+        p.record(300);
+        p.record(200);
+        assert_eq!((p.count, p.min_ns, p.mean_ns(), p.max_ns), (3, 100, 200, 300));
+
+        let mut agg = PreprocessPhases::default();
+        agg.record(&PreprocessTiming {
+            partition_ns: 10,
+            rank_ns: 20,
+            tables_ns: 30,
+            plan_ns: 40,
+            threads: 4,
+        });
+        agg.record(&PreprocessTiming {
+            partition_ns: 30,
+            rank_ns: 40,
+            tables_ns: 50,
+            plan_ns: 60,
+            threads: 4,
+        });
+        assert_eq!(agg.compiles, 2);
+        assert_eq!(agg.partition.mean_ns(), 20);
+        assert_eq!(agg.total.min_ns, 100);
+        assert_eq!(agg.total.max_ns, 180);
+        assert!(agg.summary().contains("2 compiles"));
     }
 }

@@ -7,5 +7,5 @@
 pub mod metrics;
 pub mod service;
 
-pub use metrics::{AlgoStats, Metrics, MetricsSnapshot};
+pub use metrics::{AlgoStats, Metrics, MetricsSnapshot, PhaseStat, PreprocessPhases};
 pub use service::{JobResult, Pending, Service, ServiceConfig};

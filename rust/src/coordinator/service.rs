@@ -45,6 +45,13 @@ pub struct ServiceConfig {
     /// zero thread spawns per superstep *and* per job. Served results
     /// are bit-identical for every setting.
     pub parallelism: usize,
+    /// Worker threads a cold preprocess (Alg. 1 + plan compilation) fans
+    /// out over on a cache miss (`Some(0)` = one per hardware thread).
+    /// `None` inherits each job's lane count; the
+    /// `REPRO_PREPROCESS_THREADS` environment variable overrides that
+    /// default. The compile runs on the session's pooled workers and is
+    /// whole-struct-equal to a sequential compile for every setting.
+    pub preprocess_parallelism: Option<usize>,
     /// On-disk artifact cache directory (`None` = memory-only). A
     /// redeployed service pointed at a warm directory deserializes its
     /// compiled plans instead of re-running Alg. 1 — zero plan
@@ -61,6 +68,7 @@ impl Default for ServiceConfig {
             backend: Backend::Native,
             workers: 2,
             parallelism: 1,
+            preprocess_parallelism: None,
             artifact_dir: None,
         }
     }
@@ -120,6 +128,9 @@ impl Service {
             // `0 = auto` resolves inside `SessionBuilder::build` (the one
             // `resolve_threads` call site on this path).
             .parallelism(config.parallelism);
+        if let Some(threads) = config.preprocess_parallelism {
+            builder = builder.preprocess_parallelism(threads);
+        }
         if let Some(dir) = config.artifact_dir {
             builder = builder.artifact_dir(dir);
         }
@@ -189,6 +200,16 @@ impl Service {
     /// The shared session (inspect the registry, artifact-cache stats…).
     pub fn session(&self) -> &Arc<Session> {
         &self.session
+    }
+
+    /// A metrics snapshot with the session store's cold-preprocess phase
+    /// timing folded in (a bare `metrics.snapshot()` leaves that field
+    /// zeroed — the store, not the `Metrics` counters, is the single
+    /// source of truth for compile cost).
+    pub fn snapshot(&self) -> super::MetricsSnapshot {
+        let mut snap = self.metrics.snapshot();
+        snap.preprocess = self.session.preprocess_phases();
+        snap
     }
 
     /// Apply a streaming edge-delta batch to the spec's `(dataset,
@@ -268,6 +289,19 @@ mod tests {
         assert_eq!(snap.jobs_failed, 0);
         assert_eq!(snap.per_algorithm["bfs"].completed, 1);
         assert_eq!(snap.per_algorithm["bfs"].queue_depth, 0);
+    }
+
+    #[test]
+    fn snapshot_carries_preprocess_phase_timing() {
+        let svc = tiny_service(2);
+        assert_eq!(svc.snapshot().preprocess.compiles, 0);
+        svc.submit_blocking(JobSpec::new(Dataset::Tiny, "bfs")).unwrap();
+        let snap = svc.snapshot();
+        assert_eq!(snap.preprocess.compiles, 1, "one cold compile served the job");
+        assert!(snap.preprocess.total.max_ns > 0);
+        // The bare Metrics snapshot stays zeroed — the session store is
+        // the single source of truth for compile timing.
+        assert_eq!(svc.metrics.snapshot().preprocess.compiles, 0);
     }
 
     #[test]

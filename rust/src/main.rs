@@ -79,7 +79,12 @@ ARCH OPTIONS:
                             session's persistent worker pool, spawned
                             once and reused across jobs (default 1 =
                             sequential, 0 = one per hardware thread);
-                            results are bit-identical for every K
+                            cold preprocessing (Alg. 1 + plan
+                            compilation) fans out over the same pooled
+                            workers on a cache miss, overridable via
+                            REPRO_PREPROCESS_THREADS; results and
+                            compiled artifacts are bit-identical for
+                            every K
 ";
 
 fn arch_from(args: &Args) -> Result<ArchConfig> {
@@ -376,6 +381,10 @@ fn cmd_artifacts_warm(args: &Args) -> Result<()> {
         s.writes,
         s.entries
     );
+    let ph = session.preprocess_phases();
+    if ph.compiles > 0 {
+        println!("preprocess phases: {}", ph.summary());
+    }
     if args.flag("assert-warm") {
         anyhow::ensure!(
             s.misses == 0 && s.disk_hits > 0,
@@ -503,7 +512,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         );
     }
 
-    let s = svc.metrics.snapshot();
+    let s = svc.snapshot();
     let cache = session.artifacts().stats();
     println!(
         "served {} jobs on {} backend, mean latency {:.0} µs, max {} µs, {} total subgraph ops",
@@ -517,6 +526,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "artifact cache: {} preprocessing runs, {} hits, {} disk hits, {} disk writes, {} entries",
         cache.misses, cache.hits, cache.disk_hits, cache.writes, cache.entries
     );
+    if s.preprocess.compiles > 0 {
+        println!("preprocess phases: {}", s.preprocess.summary());
+    }
     for (algo, st) in &s.per_algorithm {
         println!(
             "  {algo:>9}: {} completed, {} failed, queue depth {}",

@@ -4,9 +4,10 @@
 //! approach viable for graphs at 99.99 % sparsity: we bucket *edges* into
 //! windows rather than scanning the dense matrix.
 
+use std::collections::hash_map::Entry;
 use std::collections::HashMap;
 
-use crate::graph::coo::Coo;
+use crate::graph::coo::{Coo, Edge};
 
 use super::pattern::{Pattern, MAX_C};
 
@@ -90,52 +91,118 @@ impl Partitioned {
     }
 }
 
-/// Partition `g` with a C×C window. `weighted` keeps edge weights (SSSP);
-/// BFS/PageRank only need the 0/1 structure.
-pub fn partition(g: &Coo, c: usize, weighted: bool) -> Partitioned {
-    assert!((1..=MAX_C).contains(&c), "window size must be 1..=8, got {c}");
+/// Per-window accumulator shared by the monolithic, chunked, and pooled
+/// bucketing passes: the 0/1 pattern plus (for weighted graphs) the edge
+/// weights staged as `(bit, weight)` pairs in arrival order. Weights are
+/// sorted by bit once at finalize time, which matches `cells()` order
+/// without the second full edge scan the old weighted path paid.
+#[derive(Debug, Clone)]
+pub(crate) struct WindowAccum {
+    pattern: Pattern,
+    staged: Vec<(u8, f32)>,
+}
+
+impl WindowAccum {
+    fn new() -> Self {
+        Self { pattern: Pattern::EMPTY, staged: Vec::new() }
+    }
+}
+
+/// Window key (`(brow, bcol)` packed into u64) → accumulator.
+pub(crate) type WindowMap = HashMap<u64, WindowAccum>;
+
+/// Bucket a contiguous edge slice into `windows`. Chunk-invariance is
+/// structural: `Coo` canonical form guarantees each `(window, bit)` pair
+/// occurs at most once across the whole edge list, so bucketing any
+/// partition of the edges into per-chunk maps and merging yields the
+/// same per-window pattern (bitwise OR) and staged weight set.
+pub(crate) fn bucket_edges(edges: &[Edge], c: usize, weighted: bool, windows: &mut WindowMap) {
     let cu = c as u32;
-    // Bucket edges by window. Key packs (brow, bcol) into u64.
-    let mut windows: HashMap<u64, Pattern> = HashMap::new();
-    for e in &g.edges {
+    for e in edges {
+        // Key packs (brow, bcol) into u64.
         let key = ((e.src / cu) as u64) << 32 | (e.dst / cu) as u64;
         let (i, j) = ((e.src % cu) as usize, (e.dst % cu) as usize);
-        let p = windows.entry(key).or_insert(Pattern::EMPTY);
-        *p = p.with_edge(i, j, c);
+        let w = windows.entry(key).or_insert_with(WindowAccum::new);
+        w.pattern = w.pattern.with_edge(i, j, c);
+        if weighted {
+            w.staged.push(((i * c + j) as u8, e.weight));
+        }
     }
+}
 
-    let mut subgraphs: Vec<Subgraph> = windows
+/// Merge `from` into `into`: pattern OR, staged-weight concatenation.
+/// Merge order never reaches the finalized artifact — patterns OR
+/// commutatively and staged weights are re-sorted by their (globally
+/// unique) bit at finalize time.
+pub(crate) fn merge_windows(into: &mut WindowMap, from: WindowMap) {
+    for (key, mut w) in from {
+        match into.entry(key) {
+            Entry::Occupied(mut o) => {
+                let acc = o.get_mut();
+                acc.pattern = Pattern(acc.pattern.0 | w.pattern.0);
+                acc.staged.append(&mut w.staged);
+            }
+            Entry::Vacant(v) => {
+                v.insert(w);
+            }
+        }
+    }
+}
+
+/// Turn an accumulated window map into the canonical [`Partitioned`]:
+/// subgraphs sorted row-major by `(brow, bcol)`, weights sorted into
+/// `cells()` (bit) order. Every partition entry point funnels through
+/// here, so chunk boundaries can never change a merged artifact byte.
+pub(crate) fn finalize_windows(
+    windows: WindowMap,
+    c: usize,
+    num_vertices: u32,
+    weighted: bool,
+) -> Partitioned {
+    let mut entries: Vec<(u32, u32, WindowAccum)> = windows
         .into_iter()
-        .map(|(key, pattern)| Subgraph {
-            brow: (key >> 32) as u32,
-            bcol: key as u32,
-            pattern,
-        })
+        .map(|(key, w)| ((key >> 32) as u32, key as u32, w))
         .collect();
-    subgraphs.sort_unstable_by_key(|s| (s.brow, s.bcol));
-
-    let weights = weighted.then(|| {
-        // Second pass: gather weights per window in cells() (bit) order.
-        let mut index: HashMap<(u32, u32), usize> = HashMap::with_capacity(subgraphs.len());
-        for (k, s) in subgraphs.iter().enumerate() {
-            index.insert((s.brow, s.bcol), k);
+    entries.sort_unstable_by_key(|&(brow, bcol, _)| (brow, bcol));
+    let mut subgraphs = Vec::with_capacity(entries.len());
+    let mut weights = weighted.then(|| Vec::with_capacity(entries.len()));
+    for (brow, bcol, mut w) in entries {
+        subgraphs.push(Subgraph { brow, bcol, pattern: w.pattern });
+        if let Some(out) = &mut weights {
+            // Unstable sort on globally unique keys is deterministic.
+            w.staged.sort_unstable_by_key(|&(bit, _)| bit);
+            out.push(w.staged.iter().map(|&(_, wt)| wt).collect());
         }
-        let mut out: Vec<Vec<f32>> = subgraphs
-            .iter()
-            .map(|s| vec![0f32; s.pattern.nnz() as usize])
-            .collect();
-        for e in &g.edges {
-            let k = index[&(e.src / cu, e.dst / cu)];
-            let s = &subgraphs[k];
-            let bit = (e.src % cu) as usize * c + (e.dst % cu) as usize;
-            // Position of this bit among the pattern's set bits.
-            let below = s.pattern.0 & ((1u64 << bit) - 1);
-            out[k][below.count_ones() as usize] = e.weight;
-        }
-        out
-    });
+    }
+    Partitioned { c, num_vertices, subgraphs, weights }
+}
 
-    Partitioned { c, num_vertices: g.num_vertices, subgraphs, weights }
+/// Partition `g` with a C×C window. `weighted` keeps edge weights (SSSP);
+/// BFS/PageRank only need the 0/1 structure. Single pass over the edges
+/// either way; this sequential function is the differential oracle for
+/// the chunked and pooled paths.
+pub fn partition(g: &Coo, c: usize, weighted: bool) -> Partitioned {
+    assert!((1..=MAX_C).contains(&c), "window size must be 1..=8, got {c}");
+    let mut windows = WindowMap::default();
+    bucket_edges(&g.edges, c, weighted, &mut windows);
+    finalize_windows(windows, c, g.num_vertices, weighted)
+}
+
+/// Chunked variant: bucket `chunk_edges`-sized contiguous edge ranges
+/// independently and merge in range order — the sequential reference for
+/// the pooled preprocess path, exposed so tests can sweep chunk
+/// boundaries. Equal to [`partition`] for every chunk size by
+/// construction (all paths share [`finalize_windows`]).
+pub fn partition_chunked(g: &Coo, c: usize, weighted: bool, chunk_edges: usize) -> Partitioned {
+    assert!((1..=MAX_C).contains(&c), "window size must be 1..=8, got {c}");
+    assert!(chunk_edges > 0, "chunk size must be positive");
+    let mut merged = WindowMap::default();
+    for chunk in g.edges.chunks(chunk_edges) {
+        let mut local = WindowMap::default();
+        bucket_edges(chunk, c, weighted, &mut local);
+        merge_windows(&mut merged, local);
+    }
+    finalize_windows(merged, c, g.num_vertices, weighted)
 }
 
 #[cfg(test)]
@@ -260,5 +327,39 @@ mod tests {
     #[should_panic]
     fn rejects_oversized_window() {
         partition(&fig3_graph(), 9, false);
+    }
+
+    #[test]
+    fn chunked_partition_matches_monolithic_for_every_chunk_size() {
+        let g = crate::graph::generator::rmat(
+            256,
+            2_000,
+            crate::graph::generator::RmatParams::default(),
+            11,
+        );
+        let gw = Coo::from_edges(
+            g.num_vertices,
+            g.edges
+                .iter()
+                .enumerate()
+                .map(|(i, e)| Edge::weighted(e.src, e.dst, 0.5 + (i % 17) as f32))
+                .collect(),
+        );
+        for (graph, weighted) in [(&g, false), (&gw, true)] {
+            let want = partition(graph, 4, weighted);
+            for chunk in [1usize, 7, 64, graph.num_edges()] {
+                assert_eq!(
+                    partition_chunked(graph, 4, weighted, chunk),
+                    want,
+                    "chunk {chunk} weighted {weighted}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn chunked_partition_rejects_zero_chunk() {
+        partition_chunked(&fig3_graph(), 2, false, 0);
     }
 }

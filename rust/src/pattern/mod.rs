@@ -6,7 +6,7 @@ pub mod pattern;
 pub mod rank;
 pub mod tables;
 
-pub use extract::{partition, Partitioned, Subgraph};
+pub use extract::{partition, partition_chunked, Partitioned, Subgraph};
 pub use pattern::Pattern;
-pub use rank::PatternRanking;
+pub use rank::{count_patterns, merge_counts, PatternRanking};
 pub use tables::{ConfigTable, EngineSlot, SubgraphTable};

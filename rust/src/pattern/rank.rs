@@ -6,8 +6,44 @@
 
 use std::collections::HashMap;
 
-use super::extract::Partitioned;
+use super::extract::{Partitioned, Subgraph};
 use super::pattern::Pattern;
+
+/// Count pattern occurrences over a subgraph slice into a pre-sized map
+/// — the per-chunk unit of the pooled miner, and the whole-graph fold of
+/// [`PatternRanking::from_partitioned`]. Distinct patterns are far fewer
+/// than subgraphs on power-law graphs (Fig. 1a), so the pre-size is
+/// capped rather than proportional.
+pub fn count_patterns(subgraphs: &[Subgraph]) -> HashMap<Pattern, u32> {
+    let mut counts: HashMap<Pattern, u32> = HashMap::with_capacity(subgraphs.len().min(1 << 12));
+    for s in subgraphs {
+        *counts.entry(s.pattern).or_insert(0) += 1;
+    }
+    counts
+}
+
+/// Apply signed occurrence deltas onto `counts`, dropping entries that
+/// reach zero — the single merge path shared by the pooled miner
+/// (per-chunk counts, all positive) and `sched::patch`'s incremental
+/// re-rank (−1 old / +1 new per dirty window). Panics on underflow: a
+/// decrement of an uncounted pattern is a caller bug.
+pub fn merge_counts(
+    counts: &mut HashMap<Pattern, u32>,
+    deltas: impl IntoIterator<Item = (Pattern, i64)>,
+) {
+    for (p, d) in deltas {
+        if d == 0 {
+            continue;
+        }
+        let n = i64::from(counts.get(&p).copied().unwrap_or(0)) + d;
+        assert!(n >= 0, "pattern count underflow: {p:?} by {d}");
+        if n == 0 {
+            counts.remove(&p);
+        } else {
+            counts.insert(p, n as u32);
+        }
+    }
+}
 
 /// Frequency-ranked patterns of a partitioned graph.
 #[derive(Debug, Clone, PartialEq)]
@@ -23,11 +59,7 @@ pub struct PatternRanking {
 
 impl PatternRanking {
     pub fn from_partitioned(p: &Partitioned) -> Self {
-        let mut counts: HashMap<Pattern, u32> = HashMap::new();
-        for s in &p.subgraphs {
-            *counts.entry(s.pattern).or_insert(0) += 1;
-        }
-        Self::from_counts(counts, p.num_subgraphs())
+        Self::from_counts(count_patterns(&p.subgraphs), p.num_subgraphs())
     }
 
     pub fn from_counts(counts: impl IntoIterator<Item = (Pattern, u32)>, total: usize) -> Self {
@@ -135,6 +167,50 @@ mod tests {
         let r = PatternRanking::from_partitioned(&partition(&g, 2, false));
         assert_eq!(r.ranked.len(), 2);
         assert!(r.ranked[0].0 < r.ranked[1].0);
+    }
+
+    #[test]
+    fn merge_counts_applies_signed_deltas_and_drops_zeros() {
+        let mut counts = HashMap::new();
+        merge_counts(&mut counts, [(Pattern(1), 3), (Pattern(2), 1)]);
+        merge_counts(
+            &mut counts,
+            [(Pattern(1), -2), (Pattern(2), -1), (Pattern(4), 2), (Pattern(8), 0)],
+        );
+        assert_eq!(counts.get(&Pattern(1)), Some(&1));
+        assert!(!counts.contains_key(&Pattern(2)));
+        assert_eq!(counts.get(&Pattern(4)), Some(&2));
+        assert!(!counts.contains_key(&Pattern(8)));
+    }
+
+    #[test]
+    #[should_panic]
+    fn merge_counts_panics_on_underflow() {
+        let mut counts = HashMap::new();
+        merge_counts(&mut counts, [(Pattern(1), -1)]);
+    }
+
+    #[test]
+    fn chunked_counts_merge_to_the_monolithic_fold() {
+        let g = crate::graph::generator::rmat(
+            256,
+            2_000,
+            crate::graph::generator::RmatParams::default(),
+            5,
+        );
+        let p = partition(&g, 4, false);
+        let want = PatternRanking::from_partitioned(&p);
+        for chunk in [1usize, 7, 64, p.num_subgraphs()] {
+            let mut counts = HashMap::new();
+            for range in p.subgraphs.chunks(chunk) {
+                merge_counts(
+                    &mut counts,
+                    count_patterns(range).into_iter().map(|(pat, n)| (pat, i64::from(n))),
+                );
+            }
+            let got = PatternRanking::from_counts(counts, p.num_subgraphs());
+            assert_eq!(got, want, "chunk {chunk}");
+        }
     }
 
     #[test]

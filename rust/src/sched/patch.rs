@@ -32,7 +32,7 @@ use crate::accel::simulator::Preprocessed;
 use crate::graph::delta::{DeltaBatch, DeltaError, DeltaOp};
 use crate::pattern::extract::Subgraph;
 use crate::pattern::pattern::Pattern;
-use crate::pattern::rank::PatternRanking;
+use crate::pattern::rank::{merge_counts, PatternRanking};
 use crate::pattern::tables::{ConfigTable, SubgraphTable};
 
 /// What one [`patch_preprocessed`] call did, for the session's delta
@@ -220,22 +220,21 @@ pub fn patch_preprocessed(
     }
 
     // ── Stage 3: re-derive the ranking from incrementally-maintained
-    // occurrence counts (only dirty windows change a count), then
+    // occurrence counts (only dirty windows change a count), folded
+    // through the same `merge_counts` path the pooled miner uses, then
     // rebuild the ranking-sized tables and re-emit the plan sections.
     let mut counts: HashMap<Pattern, u32> = pre.ranking.ranked.iter().copied().collect();
-    for win in dirty.values() {
-        if let Ok(k) = win.site {
-            let old = pre.part.subgraphs[k].pattern;
-            let n = counts.get_mut(&old).expect("counted pattern");
-            *n -= 1;
-            if *n == 0 {
-                counts.remove(&old);
-            }
-        }
-        if !win.pattern.is_empty() {
-            *counts.entry(win.pattern).or_insert(0) += 1;
-        }
-    }
+    merge_counts(
+        &mut counts,
+        dirty.values().flat_map(|win| {
+            let old = win
+                .site
+                .ok()
+                .map(|k| (pre.part.subgraphs[k].pattern, -1i64));
+            let new = (!win.pattern.is_empty()).then_some((win.pattern, 1i64));
+            old.into_iter().chain(new)
+        }),
+    );
     let ranking = PatternRanking::from_counts(counts, patched.num_subgraphs());
     // Mirrors `Accelerator::build_config_table` — the patched CT must be
     // the one a cold compile under `arch` would produce.

@@ -335,18 +335,49 @@ fn slot_sections(
     (pool, ranges, init)
 }
 
+/// Contiguous, group-aligned subgraph-table entry ranges for parallel
+/// emission: walk the group boundaries greedily so each of at most `n`
+/// ranges holds roughly `st.len() / n` entries. The split can never
+/// change the emitted bytes — ranges concatenate in entry order — so
+/// balance is purely a latency knob; group alignment keeps each worker
+/// on whole destination (source) groups.
+fn entry_ranges(st: &SubgraphTable, n: usize) -> Vec<std::ops::Range<usize>> {
+    let total = st.len();
+    let target = total.div_ceil(n.max(1)).max(1);
+    let mut ranges = Vec::new();
+    let mut start = 0usize;
+    for gw in st.groups.windows(2) {
+        let end = gw[1] as usize;
+        if end - start >= target {
+            ranges.push(start..end);
+            start = end;
+        }
+    }
+    if start < total || ranges.is_empty() {
+        ranges.push(start..total);
+    }
+    ranges
+}
+
+/// The op/operand records emitted for one contiguous subgraph-table
+/// entry range — the unit of parallel plan emission. Ranges
+/// concatenated in entry order reproduce the sequential emission byte
+/// for byte; `weight_off` holds range-local end offsets, rebased onto
+/// the plan-global section at append time.
+#[derive(Debug)]
+pub(crate) struct EmittedOps {
+    ops: Vec<PlanOp>,
+    op_bits: Vec<u64>,
+    weights: Vec<f32>,
+    weight_off: Vec<u32>,
+}
+
 impl ExecutionPlan {
-    /// Compile the schedule from the Alg.-1 outputs and the architecture.
-    /// Op order mirrors `st.entries` exactly (one op per subgraph, in
-    /// execution order), so plan op index g equals subgraph-table entry
-    /// index g — the differential oracle relies on this.
-    pub fn build(
-        part: &Partitioned,
-        ct: &ConfigTable,
-        st: &SubgraphTable,
-        arch: &ArchConfig,
-    ) -> Self {
-        let mut plan = Self {
+    /// Empty plan carrying only compiled geometry — the shared starting
+    /// point of [`build`](Self::build) and
+    /// [`build_pooled`](Self::build_pooled) before section emission.
+    fn shell(part: &Partitioned, st: &SubgraphTable, arch: &ArchConfig) -> Self {
+        Self {
             c: part.c,
             num_vertices: part.num_vertices,
             num_blocks: part.num_blocks(),
@@ -368,9 +399,84 @@ impl ExecutionPlan {
             weight_off: Vec::new(),
             weights: Vec::new(),
             out_degrees: Vec::new(),
-        };
+        }
+    }
+
+    /// Compile the schedule from the Alg.-1 outputs and the architecture.
+    /// Op order mirrors `st.entries` exactly (one op per subgraph, in
+    /// execution order), so plan op index g equals subgraph-table entry
+    /// index g — the differential oracle relies on this.
+    pub fn build(
+        part: &Partitioned,
+        ct: &ConfigTable,
+        st: &SubgraphTable,
+        arch: &ArchConfig,
+    ) -> Self {
+        let mut plan = Self::shell(part, st, arch);
         plan.emit_sections(part, ct, st);
         plan
+    }
+
+    /// [`build`](Self::build) with the per-entry emission fanned out over
+    /// `pool`: group-aligned entry ranges emit on workers and
+    /// concatenate in range order, so the result is field-for-field
+    /// identical to the sequential build by construction (both funnel
+    /// through [`emit_entry_range`](Self::emit_entry_range)).
+    pub fn build_pooled(
+        part: &Partitioned,
+        ct: &ConfigTable,
+        st: &SubgraphTable,
+        arch: &ArchConfig,
+        pool: &mut super::pool::WorkerPool,
+    ) -> Self {
+        let mut plan = Self::shell(part, st, arch);
+        plan.emit_sections_with(part, ct, st, Some(pool));
+        plan
+    }
+
+    /// Emit the op/operand records for one contiguous subgraph-table
+    /// entry range. Every emission path — sequential build, delta patch,
+    /// pooled build — runs entries through this one loop.
+    pub(crate) fn emit_entry_range(
+        part: &Partitioned,
+        ct: &ConfigTable,
+        st: &SubgraphTable,
+        rank_slots: &[(u32, u32)],
+        entries: std::ops::Range<usize>,
+        weighted: bool,
+    ) -> EmittedOps {
+        let c = part.c;
+        let n = entries.len();
+        let mut out = EmittedOps {
+            ops: Vec::with_capacity(n),
+            op_bits: Vec::with_capacity(n),
+            weights: Vec::new(),
+            weight_off: Vec::with_capacity(if weighted { n } else { 0 }),
+        };
+        for e in &st.entries[entries] {
+            let sg = &part.subgraphs[e.sg_idx as usize];
+            let entry = ct.entry_at(e.pattern_rank);
+            let rows = entry.active_rows.max(1);
+            let (slot_start, slot_len) = rank_slots[e.pattern_rank as usize];
+            out.ops.push(PlanOp {
+                sg_idx: e.sg_idx,
+                src_start: e.src_start,
+                dst_start: e.dst_start,
+                src_block: e.src_start / c as u32,
+                pattern_rank: e.pattern_rank,
+                rows,
+                read_rows: if entry.row_addr.is_some() { 1 } else { rows },
+                slot_start,
+                slot_len,
+            });
+            out.op_bits.push(sg.pattern.0);
+            if weighted {
+                out.weights
+                    .extend_from_slice(&part.weights.as_ref().unwrap()[e.sg_idx as usize]);
+                out.weight_off.push(out.weights.len() as u32);
+            }
+        }
+        out
     }
 
     /// Clear and refill every graph-derived section in place — op
@@ -383,6 +489,24 @@ impl ExecutionPlan {
     /// Geometry fields (C, vertex count, engine counts, order, policy)
     /// are the caller's responsibility and are not touched.
     fn emit_sections(&mut self, part: &Partitioned, ct: &ConfigTable, st: &SubgraphTable) {
+        self.emit_sections_with(part, ct, st, None);
+    }
+
+    /// [`emit_sections`](Self::emit_sections) with the per-entry loop
+    /// optionally fanned out over a worker pool. With `None` the whole
+    /// entry span emits inline (one range); with a pool, group-aligned
+    /// ranges emit on workers and concatenate in range order. Either
+    /// way the emitted sections are identical — the split is a latency
+    /// knob that can never reach the artifact bytes. Derived tables
+    /// (lanes, gather, out-degrees, slot sections) build after
+    /// concatenation, identically on both paths.
+    fn emit_sections_with(
+        &mut self,
+        part: &Partitioned,
+        ct: &ConfigTable,
+        st: &SubgraphTable,
+        pool: Option<&mut super::pool::WorkerPool>,
+    ) {
         let c = part.c;
         let weighted = part.weights.is_some();
         let (slot_pool, rank_slots, static_config) = slot_sections(ct);
@@ -397,27 +521,20 @@ impl ExecutionPlan {
             self.weight_off.reserve(st.len() + 1);
             self.weight_off.push(0);
         }
-        for e in &st.entries {
-            let sg = &part.subgraphs[e.sg_idx as usize];
-            let entry = ct.entry_at(e.pattern_rank);
-            let rows = entry.active_rows.max(1);
-            let (slot_start, slot_len) = rank_slots[e.pattern_rank as usize];
-            self.ops.push(PlanOp {
-                sg_idx: e.sg_idx,
-                src_start: e.src_start,
-                dst_start: e.dst_start,
-                src_block: e.src_start / c as u32,
-                pattern_rank: e.pattern_rank,
-                rows,
-                read_rows: if entry.row_addr.is_some() { 1 } else { rows },
-                slot_start,
-                slot_len,
-            });
-            self.op_bits.push(sg.pattern.0);
+        let emitted = match pool {
+            Some(pool) => {
+                let ranges = entry_ranges(st, pool.workers());
+                pool.emit_ranges(part, ct, st, &rank_slots, &ranges, weighted)
+            }
+            None => vec![Self::emit_entry_range(part, ct, st, &rank_slots, 0..st.len(), weighted)],
+        };
+        for e in emitted {
+            self.ops.extend(e.ops);
+            self.op_bits.extend(e.op_bits);
             if weighted {
-                self.weights
-                    .extend_from_slice(&part.weights.as_ref().unwrap()[e.sg_idx as usize]);
-                self.weight_off.push(self.weights.len() as u32);
+                let base = self.weights.len() as u32;
+                self.weight_off.extend(e.weight_off.iter().map(|&end| base + end));
+                self.weights.extend(e.weights);
             }
         }
 

@@ -51,12 +51,19 @@ use std::thread::{JoinHandle, ThreadId};
 
 use anyhow::Result;
 
+use std::collections::HashMap;
+
 use crate::cost::CostParams;
 use crate::engine::GraphEngine;
+use crate::graph::coo::Edge;
+use crate::pattern::extract::{bucket_edges, Partitioned, Subgraph, WindowMap};
+use crate::pattern::rank::count_patterns;
+use crate::pattern::tables::{ConfigTable, SubgraphTable};
+use crate::pattern::Pattern;
 
 use super::executor::StepExecutor;
 use super::par::{replay_engine, LaneRecord};
-use super::plan::ExecutionPlan;
+use super::plan::{EmittedOps, ExecutionPlan};
 
 /// One lane entry in flight: engine index, the engine itself, and the
 /// busy time its replay produced (filled in by the worker).
@@ -91,12 +98,35 @@ enum Task {
     InstallFork(Box<dyn StepExecutor + Send>),
     /// Report the worker's index and OS thread id (test/diagnostic hook).
     Probe,
+    /// Cold-preprocess phase ①: bucket a contiguous edge range into a
+    /// per-chunk window map.
+    Bucket {
+        edges: SendConstPtr<[Edge]>,
+        c: usize,
+        weighted: bool,
+    },
+    /// Cold-preprocess phase ②: count pattern occurrences over a
+    /// contiguous subgraph range.
+    Count { subgraphs: SendConstPtr<[Subgraph]> },
+    /// Cold-preprocess phase ③: emit plan sections for a contiguous
+    /// subgraph-table entry range.
+    Emit {
+        part: SendConstPtr<Partitioned>,
+        ct: SendConstPtr<ConfigTable>,
+        st: SendConstPtr<SubgraphTable>,
+        rank_slots: SendConstPtr<[(u32, u32)]>,
+        entries: std::ops::Range<usize>,
+        weighted: bool,
+    },
 }
 
 enum Reply {
     Replay(Vec<LaneSlot>),
     Numeric { out: Vec<f32>, result: Result<()> },
     Probe(ThreadId),
+    Windows(WindowMap),
+    Counts(HashMap<Pattern, u32>),
+    Emitted(EmittedOps),
 }
 
 fn worker_loop(rx: Receiver<Task>, tx: Sender<Reply>, _alive: Arc<()>) {
@@ -133,6 +163,25 @@ fn worker_loop(rx: Receiver<Task>, tx: Sender<Reply>, _alive: Arc<()>) {
                 Reply::Numeric { out, result }
             }
             Task::Probe => Reply::Probe(std::thread::current().id()),
+            Task::Bucket { edges, c, weighted } => {
+                // SAFETY: as above.
+                let edges = unsafe { &*edges.0 };
+                let mut map = WindowMap::default();
+                bucket_edges(edges, c, weighted, &mut map);
+                Reply::Windows(map)
+            }
+            Task::Count { subgraphs } => {
+                // SAFETY: as above.
+                Reply::Counts(count_patterns(unsafe { &*subgraphs.0 }))
+            }
+            Task::Emit { part, ct, st, rank_slots, entries, weighted } => {
+                // SAFETY: as above.
+                let (part, ct, st, rank_slots) =
+                    unsafe { (&*part.0, &*ct.0, &*st.0, &*rank_slots.0) };
+                Reply::Emitted(ExecutionPlan::emit_entry_range(
+                    part, ct, st, rank_slots, entries, weighted,
+                ))
+            }
         };
         if tx.send(reply).is_err() {
             break; // pool dropped mid-reply; exit quietly
@@ -365,6 +414,111 @@ impl WorkerPool {
             cand.extend_from_slice(buf);
         }
         Ok(())
+    }
+
+    /// Cold-preprocess phase ① on the pool: chunk `i` buckets on worker
+    /// `i`; per-chunk window maps return in chunk order. The caller's
+    /// merge is chunk-ordered and (structurally) chunk-invariant — see
+    /// `pattern::extract`. Panic safety mirrors [`replay`](Self::replay):
+    /// every submitted task drains before any failure surfaces.
+    pub(crate) fn bucket_chunks(
+        &mut self,
+        chunks: &[&[Edge]],
+        c: usize,
+        weighted: bool,
+    ) -> Vec<WindowMap> {
+        // Hard-checked (and allocated) before any task is in flight.
+        assert!(chunks.len() <= self.workers(), "more chunks than workers");
+        let mut out = Vec::with_capacity(chunks.len());
+        let mut sent = 0usize;
+        let mut failed = false;
+        for (w, edges) in chunks.iter().enumerate() {
+            let task = Task::Bucket { edges: SendConstPtr(*edges as *const _), c, weighted };
+            if self.tx[w].send(task).is_err() {
+                failed = true;
+                break;
+            }
+            sent += 1;
+        }
+        for w in 0..sent {
+            match self.rx[w].recv() {
+                Ok(Reply::Windows(m)) => out.push(m),
+                Ok(_) => unreachable!("bucket reply"),
+                Err(_) => failed = true,
+            }
+        }
+        assert!(!failed, "pool worker panicked");
+        out
+    }
+
+    /// Cold-preprocess phase ② on the pool: subgraph range `i` counts on
+    /// worker `i`; per-chunk pattern counts return in chunk order for a
+    /// `merge_counts` fold. Panic safety as in [`replay`](Self::replay).
+    pub(crate) fn count_chunks(&mut self, chunks: &[&[Subgraph]]) -> Vec<HashMap<Pattern, u32>> {
+        assert!(chunks.len() <= self.workers(), "more chunks than workers");
+        let mut out = Vec::with_capacity(chunks.len());
+        let mut sent = 0usize;
+        let mut failed = false;
+        for (w, subgraphs) in chunks.iter().enumerate() {
+            let task = Task::Count { subgraphs: SendConstPtr(*subgraphs as *const _) };
+            if self.tx[w].send(task).is_err() {
+                failed = true;
+                break;
+            }
+            sent += 1;
+        }
+        for w in 0..sent {
+            match self.rx[w].recv() {
+                Ok(Reply::Counts(m)) => out.push(m),
+                Ok(_) => unreachable!("count reply"),
+                Err(_) => failed = true,
+            }
+        }
+        assert!(!failed, "pool worker panicked");
+        out
+    }
+
+    /// Cold-preprocess phase ③ on the pool: entry range `i` emits on
+    /// worker `i`; emitted sections return in range order for the
+    /// plan's concatenation. Panic safety as in [`replay`](Self::replay).
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn emit_ranges(
+        &mut self,
+        part: &Partitioned,
+        ct: &ConfigTable,
+        st: &SubgraphTable,
+        rank_slots: &[(u32, u32)],
+        ranges: &[std::ops::Range<usize>],
+        weighted: bool,
+    ) -> Vec<EmittedOps> {
+        assert!(ranges.len() <= self.workers(), "more ranges than workers");
+        let mut out = Vec::with_capacity(ranges.len());
+        let mut sent = 0usize;
+        let mut failed = false;
+        for (w, entries) in ranges.iter().enumerate() {
+            let task = Task::Emit {
+                part: SendConstPtr(part as *const _),
+                ct: SendConstPtr(ct as *const _),
+                st: SendConstPtr(st as *const _),
+                rank_slots: SendConstPtr(rank_slots as *const _),
+                entries: entries.clone(),
+                weighted,
+            };
+            if self.tx[w].send(task).is_err() {
+                failed = true;
+                break;
+            }
+            sent += 1;
+        }
+        for w in 0..sent {
+            match self.rx[w].recv() {
+                Ok(Reply::Emitted(e)) => out.push(e),
+                Ok(_) => unreachable!("emit reply"),
+                Err(_) => failed = true,
+            }
+        }
+        assert!(!failed, "pool worker panicked");
+        out
     }
 }
 

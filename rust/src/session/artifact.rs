@@ -40,14 +40,24 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
 
-use crate::accel::{Accelerator, ArchConfig, Preprocessed};
+use crate::accel::{Accelerator, ArchConfig, Preprocessed, PreprocessTiming};
+use crate::coordinator::metrics::PreprocessPhases;
 use crate::graph::datasets::Dataset;
-use crate::graph::DeltaBatch;
+use crate::graph::{Coo, DeltaBatch};
 use crate::pattern::tables::{ExecOrder, StaticAssignment};
 use crate::sched::{patch_preprocessed, PatchStats};
 use crate::util::codec::{CodecError, Reader, Writer};
 
 use super::store::{DeltaProvenance, DiskStore, StoreError};
+
+/// A cold-compile strategy injected by the caller (graph + weighted in,
+/// artifact + phase timing out). The session passes one that checks a
+/// pooled worker set out of its free list and runs
+/// [`Accelerator::preprocess_timed`] over it, so cold misses — including
+/// the `repro artifacts warm` CLI and delta-log replay — compile in
+/// parallel without the store knowing anything about thread pools.
+pub type CompileFn<'a> =
+    dyn Fn(&Accelerator, &Coo, bool) -> Result<(Preprocessed, PreprocessTiming)> + 'a;
 
 /// The architecture parameters an Alg.-1 output depends on: partition
 /// (crossbar size), config table (engine counts, assignment), subgraph
@@ -171,8 +181,10 @@ impl ArtifactKey {
 #[derive(Debug, Default)]
 struct Slot {
     /// The artifact plus its accumulated delta provenance (zeroed for a
-    /// cold compile, carried across the disk tier for a patched entry).
-    pre: Mutex<Option<(Arc<Preprocessed>, DeltaProvenance)>>,
+    /// cold compile, carried across the disk tier for a patched entry)
+    /// and the phase timing of the cold compile that produced it
+    /// (carried verbatim across patches and disk round trips).
+    pre: Mutex<Option<(Arc<Preprocessed>, DeltaProvenance, PreprocessTiming)>>,
 }
 
 /// Counters for cache behaviour (`misses` == preprocessing runs — a
@@ -224,6 +236,11 @@ pub struct ArtifactStore {
     disk_hits: AtomicU64,
     disk_misses: AtomicU64,
     writes: AtomicU64,
+    /// Phase-split wall time of every cold compile this store ran — the
+    /// single source of truth `Service::snapshot` and the `artifacts
+    /// warm` CLI read. Disk hits and patches record nothing here:
+    /// `compiles` counts actual preprocess runs, exactly like `misses`.
+    phases: Mutex<PreprocessPhases>,
 }
 
 impl ArtifactStore {
@@ -254,7 +271,7 @@ impl ArtifactStore {
         key: ArtifactKey,
         acc: &Accelerator,
     ) -> Result<Arc<Preprocessed>> {
-        self.build(key, acc, None)
+        self.build(key, acc, None, None)
     }
 
     /// Like [`get_or_preprocess`](Self::get_or_preprocess) but builds
@@ -264,16 +281,39 @@ impl ArtifactStore {
         &self,
         key: ArtifactKey,
         acc: &Accelerator,
-        graph: &crate::graph::Coo,
+        graph: &Coo,
     ) -> Result<Arc<Preprocessed>> {
-        self.build(key, acc, Some(graph))
+        self.build(key, acc, Some(graph), None)
+    }
+
+    /// The fully general entry point: optional pre-loaded graph, and an
+    /// optional [`CompileFn`] that replaces the sequential
+    /// `acc.preprocess` on a full miss (the session's pooled parallel
+    /// compile). Cache semantics are identical on every path — the
+    /// strategy only changes *how* a miss compiles, never what it
+    /// produces (parallel preprocess is whole-struct-equal to
+    /// sequential; see `rust/tests/preprocess_par.rs`).
+    pub fn get_or_preprocess_with(
+        &self,
+        key: ArtifactKey,
+        acc: &Accelerator,
+        graph: Option<&Coo>,
+        compile: &CompileFn<'_>,
+    ) -> Result<Arc<Preprocessed>> {
+        self.build(key, acc, graph, Some(compile))
+    }
+
+    /// Phase timing accumulated over this store's cold compiles.
+    pub fn preprocess_phases(&self) -> PreprocessPhases {
+        *self.phases.lock().unwrap()
     }
 
     fn build(
         &self,
         key: ArtifactKey,
         acc: &Accelerator,
-        graph: Option<&crate::graph::Coo>,
+        graph: Option<&Coo>,
+        compile: Option<&CompileFn<'_>>,
     ) -> Result<Arc<Preprocessed>> {
         let slot = {
             let mut slots = self.slots.lock().unwrap();
@@ -294,7 +334,7 @@ impl ArtifactStore {
                 panic!("artifact slot poisoned: {e}")
             }
         };
-        if let Some((p, _)) = cell.as_ref() {
+        if let Some((p, ..)) = cell.as_ref() {
             self.hits.fetch_add(1, Ordering::Relaxed);
             return Ok(Arc::clone(p));
         }
@@ -304,10 +344,10 @@ impl ArtifactStore {
         // below), never served.
         if let Some(disk) = &self.disk {
             match disk.load_with(&key, &acc.config) {
-                Ok((pre, prov)) => {
+                Ok((pre, prov, timing)) => {
                     self.disk_hits.fetch_add(1, Ordering::Relaxed);
                     let p = Arc::new(pre);
-                    *cell = Some((Arc::clone(&p), prov));
+                    *cell = Some((Arc::clone(&p), prov, timing));
                     return Ok(p);
                 }
                 // Nothing there, or a *transient* I/O failure (fd
@@ -339,8 +379,13 @@ impl ArtifactStore {
                 &loaded
             }
         };
-        let p = Arc::new(acc.preprocess(g, key.weighted)?);
-        *cell = Some((Arc::clone(&p), DeltaProvenance::default()));
+        let (pre, timing) = match compile {
+            Some(f) => f(acc, g, key.weighted)?,
+            None => acc.preprocess_timed(g, key.weighted, None)?,
+        };
+        let p = Arc::new(pre);
+        self.phases.lock().unwrap().record(&timing);
+        *cell = Some((Arc::clone(&p), DeltaProvenance::default(), timing));
         // Release the per-key slot before serializing to disk: coalesced
         // waiters only need the in-memory Arc, which is ready now — they
         // must not stall behind a multi-MB file write. The on-disk
@@ -356,7 +401,7 @@ impl ArtifactStore {
             // too), honor it: un-publish rather than resurrect an
             // artifact the caller just wiped.
             if self.clear_gen.load(Ordering::Acquire) == generation {
-                if let Ok(true) = disk.save(&key, &p) {
+                if let Ok(true) = disk.save_with(&key, &p, &DeltaProvenance::default(), &timing) {
                     if self.clear_gen.load(Ordering::Acquire) == generation {
                         self.writes.fetch_add(1, Ordering::Relaxed);
                     } else {
@@ -408,13 +453,13 @@ impl ArtifactStore {
         // Non-destructive read: the cached value stays in place until the
         // patched replacement is ready, so a failed patch leaves every
         // tier serving the pre-batch artifact.
-        let (mut pre, mut prov) = match cell.as_ref() {
-            Some((p, prov)) => ((**p).clone(), *prov),
+        let (mut pre, mut prov, timing) = match cell.as_ref() {
+            Some((p, prov, timing)) => ((**p).clone(), *prov, *timing),
             None => match &self.disk {
                 Some(disk) => match disk.load_with(&key, arch) {
-                    Ok((pre, prov)) => {
+                    Ok((pre, prov, timing)) => {
                         self.disk_hits.fetch_add(1, Ordering::Relaxed);
-                        (pre, prov)
+                        (pre, prov, timing)
                     }
                     Err(StoreError::Missing) | Err(StoreError::Io(_)) => {
                         self.disk_misses.fetch_add(1, Ordering::Relaxed);
@@ -434,7 +479,7 @@ impl ArtifactStore {
         prov.dirty_partitions += u64::from(stats.dirty_partitions);
         prov.patched_ops += u64::from(stats.patched_ops);
         let p = Arc::new(pre);
-        *cell = Some((Arc::clone(&p), prov));
+        *cell = Some((Arc::clone(&p), prov, timing));
         drop(cell);
         // Republish the patched generation of this key: the stale file
         // must go first, because `save_with` is once-only per existing
@@ -442,7 +487,7 @@ impl ArtifactStore {
         if let Some(disk) = &self.disk {
             if self.clear_gen.load(Ordering::Acquire) == generation {
                 disk.remove(&key);
-                if let Ok(true) = disk.save_with(&key, &p, &prov) {
+                if let Ok(true) = disk.save_with(&key, &p, &prov, &timing) {
                     if self.clear_gen.load(Ordering::Acquire) == generation {
                         self.writes.fetch_add(1, Ordering::Relaxed);
                     } else {
@@ -458,7 +503,7 @@ impl ArtifactStore {
     pub fn get(&self, key: &ArtifactKey) -> Option<Arc<Preprocessed>> {
         let slot = self.slots.lock().unwrap().get(key).cloned()?;
         let cell = slot.pre.lock().unwrap();
-        cell.as_ref().map(|(p, _)| Arc::clone(p))
+        cell.as_ref().map(|(p, ..)| Arc::clone(p))
     }
 
     pub fn stats(&self) -> ArtifactStats {
@@ -530,6 +575,11 @@ mod tests {
         assert!(Arc::ptr_eq(&a, &b));
         let s = store.stats();
         assert_eq!((s.hits, s.misses, s.entries), (1, 1, 1));
+        // Exactly one compile recorded phase timing; the hit recorded
+        // nothing (compiles mirrors misses by construction).
+        let ph = store.preprocess_phases();
+        assert_eq!(ph.compiles, 1);
+        assert!(ph.total.max_ns > 0);
     }
 
     #[test]
@@ -587,6 +637,7 @@ mod tests {
         let s = second.stats();
         assert_eq!((s.misses, s.disk_hits, s.writes), (0, 1, 0));
         assert_eq!(*a, *b);
+        assert_eq!(second.preprocess_phases().compiles, 0, "disk hit compiled nothing");
 
         // clear() empties both tiers: the next fresh store recomputes.
         second.clear();

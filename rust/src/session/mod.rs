@@ -74,7 +74,7 @@ mod artifact;
 mod job;
 mod store;
 
-pub use artifact::{ArtifactKey, ArtifactStats, ArtifactStore};
+pub use artifact::{ArtifactKey, ArtifactStats, ArtifactStore, CompileFn};
 pub use job::JobSpec;
 pub use store::{DeltaProvenance, DiskStore, StoreError, FORMAT_VERSION, SCHEMA_VERSION};
 
@@ -88,6 +88,7 @@ use anyhow::{Context, Result};
 
 use crate::accel::{Accelerator, ArchConfig, Preprocessed, SimReport};
 use crate::algo::traits::VertexProgram;
+use crate::coordinator::metrics::PreprocessPhases;
 use crate::cost::CostParams;
 use crate::dse::SweepPoint;
 use crate::graph::datasets::Dataset;
@@ -186,6 +187,7 @@ pub struct SessionBuilder {
     artifacts: Option<Arc<ArtifactStore>>,
     artifact_dir: Option<PathBuf>,
     parallelism: usize,
+    preprocess_parallelism: Option<usize>,
 }
 
 impl Default for SessionBuilder {
@@ -198,6 +200,7 @@ impl Default for SessionBuilder {
             artifacts: None,
             artifact_dir: None,
             parallelism: 1,
+            preprocess_parallelism: None,
         }
     }
 }
@@ -265,6 +268,20 @@ impl SessionBuilder {
         self
     }
 
+    /// Worker threads for **cold preprocessing** — chunked partitioning,
+    /// parallel pattern mining, and plan-section emission all fan out
+    /// over the session's pooled workers on a full cache miss (`0` = one
+    /// per hardware thread). Default: inherit the job's execution-lane
+    /// count ([`parallelism`](Self::parallelism) /
+    /// [`JobSpec::with_parallelism`]); the `REPRO_PREPROCESS_THREADS`
+    /// environment variable overrides that default when no builder value
+    /// is set. Purely a throughput knob: the parallel compile is
+    /// whole-struct-equal to the sequential one for every thread count.
+    pub fn preprocess_parallelism(mut self, threads: usize) -> Self {
+        self.preprocess_parallelism = Some(threads);
+        self
+    }
+
     /// Validate everything eagerly and assemble the session.
     pub fn build(self) -> Result<Session> {
         self.arch.validate().context("invalid architecture")?;
@@ -283,6 +300,17 @@ impl SessionBuilder {
             ),
             (None, None) => Arc::default(),
         };
+        // Builder override → environment → inherit the job lane count
+        // (the `None` arm of `preprocess_threads_for`), resolved eagerly
+        // so `0 = auto` never reaches the checkout path.
+        let preprocess_parallelism = self
+            .preprocess_parallelism
+            .or_else(|| {
+                std::env::var("REPRO_PREPROCESS_THREADS")
+                    .ok()
+                    .and_then(|s| s.trim().parse::<usize>().ok())
+            })
+            .map(resolve_threads);
         Ok(Session {
             arch: self.arch,
             params: self.params,
@@ -290,6 +318,7 @@ impl SessionBuilder {
             registry: Arc::new(registry),
             artifacts,
             parallelism: resolve_threads(self.parallelism),
+            preprocess_parallelism,
             pools: Mutex::new(Vec::new()),
             delta_log: Mutex::new(HashMap::new()),
         })
@@ -307,6 +336,10 @@ pub struct Session {
     artifacts: Arc<ArtifactStore>,
     /// Resolved lane count (0-means-auto already applied).
     parallelism: usize,
+    /// Cold-preprocess worker count override (builder or
+    /// `REPRO_PREPROCESS_THREADS`; resolved, never 0). `None` = inherit
+    /// the job's lane count per compile.
+    preprocess_parallelism: Option<usize>,
     /// Free list of persistent lane-worker pools. A parallel job checks
     /// one out (spawning it on first need), runs on it with the lock
     /// *released*, and checks it back in — so N concurrent serve workers
@@ -398,32 +431,12 @@ impl Session {
         WorkerPool::new(threads)
     }
 
-    /// Execute a prepared job on the right scheduler path. Sequential
-    /// (and tracing) jobs take the interpreter; parallel jobs check a
-    /// persistent pool out of the session free list, run on it with no
-    /// lock held (concurrent jobs each get their own pooled workers,
-    /// spawned once and reused), and check it back in. Per-job overrides
-    /// smaller than a pool just cap the lanes they use.
-    fn dispatch(
-        &self,
-        acc: &Accelerator,
-        pre: &Preprocessed,
-        program: &dyn VertexProgram,
-        executor: &mut dyn StepExecutor,
-        threads: usize,
-    ) -> Result<SimReport> {
-        if threads <= 1 || self.arch.trace_activity {
-            // Sequential interpreter (also the tracing path — see
-            // `sched::par`); no pool involvement.
-            return acc.run_threaded(pre, program, executor, 1);
-        }
-        let mut pool = self.checkout_pool(threads);
-        let result = acc.run_pooled_at(pre, program, executor, &mut pool, threads);
-        // Check the pool back in even when the job failed — pool workers
-        // are job-agnostic. (If the run panicked, the pool unwinds and
-        // joins its workers instead.) The list is bounded so a one-off
-        // concurrency burst can't park worker threads forever; an
-        // overflow pool drops (joining its workers) outside the lock.
+    /// Return a checked-out pool to the bounded free list (shared by the
+    /// run dispatch and the pooled cold-compile path). The list is
+    /// bounded so a one-off concurrency burst can't park worker threads
+    /// forever; an overflow pool drops — joining its workers — outside
+    /// the lock.
+    fn checkin_pool(&self, pool: WorkerPool) {
         let overflow = {
             let mut free = self.pool_list();
             if free.len() < MAX_FREE_POOLS {
@@ -448,6 +461,33 @@ impl Session {
             }
         };
         drop(overflow);
+    }
+
+    /// Execute a prepared job on the right scheduler path. Sequential
+    /// (and tracing) jobs take the interpreter; parallel jobs check a
+    /// persistent pool out of the session free list, run on it with no
+    /// lock held (concurrent jobs each get their own pooled workers,
+    /// spawned once and reused), and check it back in. Per-job overrides
+    /// smaller than a pool just cap the lanes they use.
+    fn dispatch(
+        &self,
+        acc: &Accelerator,
+        pre: &Preprocessed,
+        program: &dyn VertexProgram,
+        executor: &mut dyn StepExecutor,
+        threads: usize,
+    ) -> Result<SimReport> {
+        if threads <= 1 || self.arch.trace_activity {
+            // Sequential interpreter (also the tracing path — see
+            // `sched::par`); no pool involvement.
+            return acc.run_threaded(pre, program, executor, 1);
+        }
+        let mut pool = self.checkout_pool(threads);
+        let result = acc.run_pooled_at(pre, program, executor, &mut pool, threads);
+        // Check the pool back in even when the job failed — pool workers
+        // are job-agnostic. (If the run panicked, the pool unwinds and
+        // joins its workers instead.)
+        self.checkin_pool(pool);
         result
     }
 
@@ -507,18 +547,53 @@ impl Session {
             .contains_key(&(dataset, artifact::scale_micro(scale)))
     }
 
+    /// Worker threads a cold compile for `spec` fans out over: the
+    /// session override (builder / `REPRO_PREPROCESS_THREADS`), else the
+    /// job's execution-lane count.
+    fn preprocess_threads_for(&self, spec: &JobSpec) -> usize {
+        self.preprocess_parallelism.unwrap_or_else(|| self.threads_for(spec))
+    }
+
+    /// Compile-or-fetch one key through the shared store. With more than
+    /// one preprocess thread, a full-miss compile runs on pooled workers
+    /// checked out of the session free list — the same spawn-once pools
+    /// the run dispatch uses, never ad-hoc threads — and is
+    /// whole-struct-equal to the sequential compile (the
+    /// `rust/tests/preprocess_par.rs` contract).
+    fn compile_artifact(
+        &self,
+        key: ArtifactKey,
+        graph: Option<&Coo>,
+        threads: usize,
+    ) -> Result<Arc<Preprocessed>> {
+        let acc = self.accelerator();
+        if threads <= 1 {
+            return match graph {
+                Some(g) => self.artifacts.get_or_preprocess_from(key, &acc, g),
+                None => self.artifacts.get_or_preprocess(key, &acc),
+            };
+        }
+        self.artifacts
+            .get_or_preprocess_with(key, &acc, graph, &|acc, g, weighted| {
+                let mut pool = self.checkout_pool(threads);
+                let result = acc.preprocess_timed(g, weighted, Some(&mut pool));
+                self.checkin_pool(pool);
+                result
+            })
+    }
+
     /// Route one artifact request: a key whose `(dataset, scale)` has
     /// logged mutations must compile (on a full miss) from the mutated
     /// graph, never the pristine dataset load — a patched cache hit and
     /// a post-mutation cold compile must be the same artifact.
     fn artifact_for(&self, spec: &JobSpec, weighted: bool) -> Result<Arc<Preprocessed>> {
         let key = self.key_for(spec, weighted);
-        let acc = self.accelerator();
+        let threads = self.preprocess_threads_for(spec);
         if self.has_mutations(spec.dataset, spec.scale) {
             let g = self.mutated_graph(spec.dataset, spec.scale, weighted)?;
-            self.artifacts.get_or_preprocess_from(key, &acc, &g)
+            self.compile_artifact(key, Some(&g), threads)
         } else {
-            self.artifacts.get_or_preprocess(key, &acc)
+            self.compile_artifact(key, None, threads)
         }
     }
 
@@ -571,8 +646,14 @@ impl Session {
     pub fn preprocess_on(&self, spec: &JobSpec, graph: &Coo) -> Result<Arc<Preprocessed>> {
         let program = self.program_for(spec)?;
         let key = self.key_for(spec, program.needs_weights());
-        self.artifacts
-            .get_or_preprocess_from(key, &self.accelerator(), graph)
+        self.compile_artifact(key, Some(graph), self.preprocess_threads_for(spec))
+    }
+
+    /// Phase-split wall time of every cold compile this session's store
+    /// has run (partition / rank / tables / plan, min/mean/max) — what
+    /// `repro artifacts warm` prints and `Service::snapshot` surfaces.
+    pub fn preprocess_phases(&self) -> PreprocessPhases {
+        self.artifacts.preprocess_phases()
     }
 
     /// Run a job end to end on a fresh backend executor.
@@ -588,7 +669,7 @@ impl Session {
         let program = self.program_for(spec)?;
         let key = self.key_for(spec, program.needs_weights());
         let acc = self.accelerator();
-        let pre = self.artifacts.get_or_preprocess_from(key, &acc, graph)?;
+        let pre = self.compile_artifact(key, Some(graph), self.preprocess_threads_for(spec))?;
         let mut exec = self.executor()?;
         self.dispatch(&acc, &pre, program.as_ref(), exec.as_mut(), self.threads_for(spec))
     }
@@ -734,6 +815,24 @@ mod tests {
         assert_eq!(a.exec_time_ns, b.exec_time_ns);
         drop(session);
         assert!(token.upgrade().is_none(), "session drop joins every worker");
+    }
+
+    #[test]
+    fn pooled_cold_compile_matches_sequential_and_parks_its_pool() {
+        let spec = JobSpec::new(Dataset::Tiny, "pagerank").with_iterations(3);
+        let seq = Session::with_defaults().unwrap().preprocess(&spec).unwrap();
+        let par_session = Session::builder().preprocess_parallelism(4).build().unwrap();
+        let par = par_session.preprocess(&spec).unwrap();
+        assert_eq!(*seq, *par, "pooled compile must be whole-struct-equal");
+        let ph = par_session.preprocess_phases();
+        assert_eq!(ph.compiles, 1);
+        assert!(ph.total.max_ns > 0);
+        // The compile went through the session free list: its pool is
+        // parked for reuse, not torn down (no ad-hoc threads).
+        assert!(par_session.pool_liveness().is_some(), "compile pool joins the free list");
+        // A second, already-cached preprocess records no new compile.
+        par_session.preprocess(&spec).unwrap();
+        assert_eq!(par_session.preprocess_phases().compiles, 1);
     }
 
     #[test]

@@ -28,6 +28,10 @@
 //! deltas   24 B  DeltaProvenance (schema ≥ 2): batches / dirty
 //!                partitions / patched ops absorbed since the last cold
 //!                compile — all zero for a cold save
+//! timing   36 B  PreprocessTiming (schema ≥ 3): phase-split wall clock
+//!                of the cold compile that produced this artifact and
+//!                the thread count it fanned out over (informational —
+//!                carried across patch republishes unchanged)
 //! payload  var   Partitioned ▸ PatternRanking ▸ ConfigTable ▸
 //!                SubgraphTable ▸ ExecutionPlan (every section framed by
 //!                its own module; derived state — hash indices, the
@@ -63,7 +67,7 @@
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 
-use crate::accel::{ArchConfig, Preprocessed};
+use crate::accel::{ArchConfig, Preprocessed, PreprocessTiming};
 use crate::pattern::extract::{Partitioned, Subgraph};
 use crate::pattern::rank::PatternRanking;
 use crate::pattern::tables::{
@@ -81,7 +85,11 @@ pub const FORMAT_VERSION: u32 = 1;
 /// CT/ST, or the `ExecutionPlan` sections change shape.
 /// v2: a [`DeltaProvenance`] section follows the key — how much streaming
 /// mutation the artifact has absorbed since its last cold compile.
-pub const SCHEMA_VERSION: u32 = 2;
+/// v3: a [`PreprocessTiming`] section follows the provenance — the
+/// phase-split wall clock of the artifact's cold compile (and the thread
+/// count it fanned out over), so `repro artifacts ls` can show what each
+/// cached plan cost to build, cross-process.
+pub const SCHEMA_VERSION: u32 = 3;
 
 const MAGIC: [u8; 8] = *b"RPREPROC";
 const FILE_PREFIX: &str = "plan-v";
@@ -201,6 +209,27 @@ impl DeltaProvenance {
     }
 }
 
+/// Schema-v3 timing section: phase-split compile cost, stamped at cold
+/// compile and carried verbatim across delta republishes. Local codec —
+/// `PreprocessTiming` itself lives in `accel` and stays format-agnostic.
+fn encode_timing(w: &mut Writer, t: &PreprocessTiming) {
+    w.put_u64(t.partition_ns);
+    w.put_u64(t.rank_ns);
+    w.put_u64(t.tables_ns);
+    w.put_u64(t.plan_ns);
+    w.put_u32(t.threads);
+}
+
+fn decode_timing(r: &mut Reader<'_>) -> Result<PreprocessTiming, CodecError> {
+    Ok(PreprocessTiming {
+        partition_ns: r.u64()?,
+        rank_ns: r.u64()?,
+        tables_ns: r.u64()?,
+        plan_ns: r.u64()?,
+        threads: r.u32()?,
+    })
+}
+
 /// The on-disk artifact directory. Cheap value type — all state lives in
 /// the filesystem, so any number of `DiskStore`s (across threads and
 /// processes) may point at one directory.
@@ -235,23 +264,24 @@ impl DiskStore {
     /// architecture the caller will run under — the decoded plan must
     /// [`matches`](ExecutionPlan::matches) it.
     pub fn load(&self, key: &ArtifactKey, arch: &ArchConfig) -> Result<Preprocessed, StoreError> {
-        self.load_with(key, arch).map(|(pre, _)| pre)
+        self.load_with(key, arch).map(|(pre, _, _)| pre)
     }
 
     /// Like [`load`](Self::load) but also returns the artifact's
-    /// accumulated [`DeltaProvenance`] (the delta-patch path carries the
-    /// counters across a disk round trip).
+    /// accumulated [`DeltaProvenance`] and the [`PreprocessTiming`] of
+    /// its cold compile (the delta-patch path carries both across a disk
+    /// round trip).
     pub fn load_with(
         &self,
         key: &ArtifactKey,
         arch: &ArchConfig,
-    ) -> Result<(Preprocessed, DeltaProvenance), StoreError> {
+    ) -> Result<(Preprocessed, DeltaProvenance, PreprocessTiming), StoreError> {
         let bytes = std::fs::read(self.path_of(key))?;
-        let (pre, prov) = decode_artifact_with(&bytes, key)?;
+        let (pre, prov, timing) = decode_artifact_with(&bytes, key)?;
         if !pre.plan.matches(arch) {
             return Err(StoreError::ArchMismatch);
         }
-        Ok((pre, prov))
+        Ok((pre, prov, timing))
     }
 
     /// Persist the artifact for `key`. Returns `Ok(false)` when another
@@ -265,25 +295,27 @@ impl DiskStore {
     /// `Ok(true)` for identical bytes; `ArtifactStats::writes` can
     /// over-count by the race width there, never under-count.
     pub fn save(&self, key: &ArtifactKey, pre: &Preprocessed) -> Result<bool, StoreError> {
-        self.save_with(key, pre, &DeltaProvenance::default())
+        self.save_with(key, pre, &DeltaProvenance::default(), &PreprocessTiming::default())
     }
 
     /// Like [`save`](Self::save) but stamping the artifact with its
-    /// accumulated [`DeltaProvenance`] — the delta-patch republish path
-    /// (which [`remove`](Self::remove)s the stale file first, so the
+    /// accumulated [`DeltaProvenance`] and compile [`PreprocessTiming`] —
+    /// the cold-compile persist and the delta-patch republish path (which
+    /// [`remove`](Self::remove)s the stale file first, so the
     /// exactly-once publish applies to each *generation* of the key).
     pub fn save_with(
         &self,
         key: &ArtifactKey,
         pre: &Preprocessed,
         prov: &DeltaProvenance,
+        timing: &PreprocessTiming,
     ) -> Result<bool, StoreError> {
         static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
         let target = self.path_of(key);
         if target.exists() {
             return Ok(false);
         }
-        let bytes = encode_artifact_with(key, pre, prov);
+        let bytes = encode_artifact_with(key, pre, prov, timing);
         let tmp = self.dir.join(format!(
             ".tmp-{:016x}-{}-{}",
             key.fingerprint(),
@@ -395,10 +427,20 @@ impl DiskStore {
         } else {
             String::new()
         };
+        let compiled = if schema >= 3 {
+            let t = decode_timing(&mut r)?;
+            if t.total_ns() > 0 {
+                format!("  compiled {}us on {} thread(s)", t.total_ns() / 1_000, t.threads.max(1))
+            } else {
+                String::new()
+            }
+        } else {
+            String::new()
+        };
         // "checksum ok", not "payload ok": this listing never decodes
         // the payload, so it must not vouch for more than it verified.
         Ok(format!(
-            "v{format}.{schema}  {}  {} B{deltas}  checksum ok",
+            "v{format}.{schema}  {}  {} B{deltas}{compiled}  checksum ok",
             key.summary(),
             bytes.len()
         ))
@@ -430,16 +472,18 @@ fn checked_payload(bytes: &[u8]) -> Result<Reader<'_>, StoreError> {
 }
 
 /// Serialize `pre` under `key` into the full framed + checksummed file
-/// image, with zeroed (cold-compile) provenance.
+/// image, with zeroed (cold-compile) provenance and timing.
 pub fn encode_artifact(key: &ArtifactKey, pre: &Preprocessed) -> Vec<u8> {
-    encode_artifact_with(key, pre, &DeltaProvenance::default())
+    encode_artifact_with(key, pre, &DeltaProvenance::default(), &PreprocessTiming::default())
 }
 
-/// Serialize `pre` under `key`, stamped with its delta provenance.
+/// Serialize `pre` under `key`, stamped with its delta provenance and
+/// the compile timing that produced it.
 pub fn encode_artifact_with(
     key: &ArtifactKey,
     pre: &Preprocessed,
     prov: &DeltaProvenance,
+    timing: &PreprocessTiming,
 ) -> Vec<u8> {
     let mut w = Writer::new();
     w.put_bytes(&MAGIC);
@@ -447,6 +491,7 @@ pub fn encode_artifact_with(
     w.put_u32(SCHEMA_VERSION);
     key.encode_into(&mut w);
     prov.encode_into(&mut w);
+    encode_timing(&mut w, timing);
     encode_partitioned(&mut w, &pre.part);
     encode_ranking(&mut w, &pre.ranking);
     encode_config_table(&mut w, &pre.ct);
@@ -457,20 +502,22 @@ pub fn encode_artifact_with(
     w.into_bytes()
 }
 
-/// Decode and validate a file image, discarding the provenance stamp.
+/// Decode and validate a file image, discarding the provenance and
+/// timing stamps.
 pub fn decode_artifact(bytes: &[u8], expected: &ArtifactKey) -> Result<Preprocessed, StoreError> {
-    decode_artifact_with(bytes, expected).map(|(pre, _)| pre)
+    decode_artifact_with(bytes, expected).map(|(pre, _, _)| pre)
 }
 
 /// Decode and validate a file image: envelope (magic, versions,
 /// checksum), identity (embedded key == `expected`), then every payload
 /// section with its structural invariants, then cross-section
 /// consistency. Any failure is a typed [`StoreError`]. Returns the
-/// artifact together with the [`DeltaProvenance`] it was saved under.
+/// artifact together with the [`DeltaProvenance`] and compile
+/// [`PreprocessTiming`] it was saved under.
 pub fn decode_artifact_with(
     bytes: &[u8],
     expected: &ArtifactKey,
-) -> Result<(Preprocessed, DeltaProvenance), StoreError> {
+) -> Result<(Preprocessed, DeltaProvenance, PreprocessTiming), StoreError> {
     let format = envelope_format(bytes)?;
     if format != FORMAT_VERSION {
         return Err(StoreError::FormatVersion { found: format });
@@ -485,6 +532,7 @@ pub fn decode_artifact_with(
         return Err(StoreError::KeyMismatch);
     }
     let prov = DeltaProvenance::decode_from(&mut r)?;
+    let timing = decode_timing(&mut r)?;
     let part = decode_partitioned(&mut r)?;
     let ranking = decode_ranking(&mut r)?;
     let ct = decode_config_table(&mut r)?;
@@ -517,7 +565,7 @@ pub fn decode_artifact_with(
     {
         return Err(StoreError::Corrupt("table pattern outside the C×C window"));
     }
-    Ok((Preprocessed { part, ranking, ct, st, plan }, prov))
+    Ok((Preprocessed { part, ranking, ct, st, plan }, prov, timing))
 }
 
 fn encode_partitioned(w: &mut Writer, part: &Partitioned) {
@@ -773,11 +821,12 @@ mod tests {
         let (key, pre, _) = baked(false);
         store.save(&key, &pre).unwrap();
         let line = DiskStore::describe(&store.entries()[0]).unwrap();
-        assert!(line.contains("v1.2"), "{line}");
+        assert!(line.contains("v1.3"), "{line}");
         assert!(line.contains("TN"), "{line}");
-        // A cold save carries zero provenance and the listing stays quiet
-        // about it.
+        // A plain save carries zero provenance and timing and the
+        // listing stays quiet about both.
         assert!(!line.contains("deltas"), "{line}");
+        assert!(!line.contains("compiled"), "{line}");
         let _ = std::fs::remove_dir_all(&dir);
     }
 
@@ -787,14 +836,23 @@ mod tests {
         let store = DiskStore::open(&dir).unwrap();
         let (key, pre, arch) = baked(false);
         let prov = DeltaProvenance { batches: 3, dirty_partitions: 7, patched_ops: 41 };
-        assert!(store.save_with(&key, &pre, &prov).unwrap());
-        let (loaded, got) = store.load_with(&key, &arch).unwrap();
+        let timing = PreprocessTiming {
+            partition_ns: 2_000_000,
+            rank_ns: 1_000_000,
+            tables_ns: 500_000,
+            plan_ns: 1_500_000,
+            threads: 4,
+        };
+        assert!(store.save_with(&key, &pre, &prov, &timing).unwrap());
+        let (loaded, got, t) = store.load_with(&key, &arch).unwrap();
         assert_eq!(pre, loaded);
         assert_eq!(prov, got);
-        // Plain `load` still works and simply drops the stamp.
+        assert_eq!(timing, t);
+        // Plain `load` still works and simply drops the stamps.
         assert_eq!(pre, store.load(&key, &arch).unwrap());
         let line = DiskStore::describe(&store.entries()[0]).unwrap();
         assert!(line.contains("deltas 3 (7 dirty, 41 ops)"), "{line}");
+        assert!(line.contains("compiled 5000us on 4 thread(s)"), "{line}");
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

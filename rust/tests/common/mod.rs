@@ -155,6 +155,26 @@ pub fn assert_bit_identical(
     assert_eq!(got.engines, want.engines, "{ctx}: per-engine summaries diverge");
 }
 
+/// The chunk-size axis of the parallel-preprocess property suite:
+/// degenerate (1 edge per chunk), two awkward interior sizes, and the
+/// whole edge list in one chunk. Every merged artifact must be
+/// byte-identical across all of them — chunk boundaries are an
+/// implementation detail that may never leak into any output.
+pub fn chunk_sizes_for(g: &Coo) -> Vec<usize> {
+    vec![1, 7, 64, g.edges.len().max(1)]
+}
+
+/// [`repro::pattern::partition_chunked`] at every chunk size in
+/// [`chunk_sizes_for`], each asserted whole-struct-equal to the
+/// monolithic [`repro::pattern::partition`] oracle.
+pub fn assert_chunked_partition_matches(g: &Coo, c: usize, weighted: bool, ctx: &str) {
+    let want = repro::pattern::partition(g, c, weighted);
+    for chunk in chunk_sizes_for(g) {
+        let got = repro::pattern::partition_chunked(g, c, weighted, chunk);
+        assert_eq!(got, want, "{ctx}: chunk_edges={chunk} diverges from monolithic partition");
+    }
+}
+
 /// The harness-default superstep lane count: `REPRO_THREADS` if set (the
 /// CI matrix runs the whole suite at 1 and 4; `0` = auto, mapped through
 /// the shared [`repro::sched::resolve_threads`] helper), else 2 so a

@@ -27,6 +27,7 @@ fn service(workers: usize) -> Service {
         // suite runs against both the sequential and the parallel
         // scheduler in CI, and every assertion must hold unchanged.
         parallelism: default_threads(),
+        preprocess_parallelism: None,
         artifact_dir: None,
     })
     .unwrap()

@@ -198,7 +198,7 @@ fn patched_artifact_warm_serves_across_stores_with_provenance() {
     assert_eq!(*served, cold);
 
     // The provenance stamp survived the disk round trip.
-    let (_, prov) = DiskStore::open(&dir).unwrap().load_with(&key, &arch).unwrap();
+    let (_, prov, _) = DiskStore::open(&dir).unwrap().load_with(&key, &arch).unwrap();
     assert_eq!(prov.batches, 1);
     assert_eq!(prov.dirty_partitions, u64::from(stats.dirty_partitions));
     assert_eq!(prov.patched_ops, u64::from(stats.patched_ops));

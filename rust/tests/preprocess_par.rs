@@ -1,0 +1,200 @@
+//! Property suite for the parallel cold-preprocess pipeline
+//! (`Accelerator::preprocess_threaded` / `preprocess_pooled` and the
+//! chunked partition underneath it).
+//!
+//! The contract under test: **chunk boundaries and thread counts are
+//! implementation details that may never leak into any output.** The
+//! parallel [`Preprocessed`] must be whole-struct `PartialEq`-equal to
+//! the sequential one for every thread count and chunk size; a
+//! parallel-compiled artifact must survive the disk round trip, feed
+//! the DSE static-slot rebuild, and accept delta patches exactly as a
+//! sequentially compiled one does.
+
+use repro::accel::Accelerator;
+use repro::accel::ArchConfig;
+use repro::algo::{Bfs, PageRank, Sssp, Wcc};
+use repro::cost::CostParams;
+use repro::graph::datasets::Dataset;
+use repro::sched::{patch_preprocessed, WorkerPool};
+use repro::session::{ArtifactKey, DiskStore};
+use repro::util::SplitMix64;
+
+mod common;
+use common::{
+    assert_chunked_partition_matches, random_arch, random_delta_batch, random_graph, scratch_dir,
+    with_random_weights,
+};
+
+/// A disposable key for graphs that don't come from a `Dataset` preset
+/// (same rationale as the artifact-IO suite: only the arch part must be
+/// honest because `load` verifies `plan.matches`).
+fn test_key(seed: u64, weighted: bool, arch: &ArchConfig) -> ArtifactKey {
+    let scale = 1.0 - (seed % 7) as f64 * 1e-3;
+    ArtifactKey::new(Dataset::Tiny, scale, weighted, arch)
+}
+
+/// The thread-count axis: sequential baseline, the two CI lane counts,
+/// and an oversubscribed count (more workers than chunks on the small
+/// graphs — exercises the empty-chunk edge).
+const THREADS: [usize; 4] = [1, 2, 4, 8];
+
+#[test]
+fn prop_parallel_preprocess_matches_sequential_for_every_thread_and_chunk_count() {
+    for seed in 540..546u64 {
+        let g = random_graph(seed);
+        let mut rng = SplitMix64::new(seed ^ 0x9A11);
+        let arch = random_arch(&mut rng);
+        let gw = with_random_weights(&g, &mut rng);
+        let acc = Accelerator::new(arch.clone(), CostParams::default());
+        for (graph, weighted) in [(&g, false), (&gw, true)] {
+            let ctx = format!("seed {seed} weighted {weighted} arch {arch:?}");
+
+            // The partition layer first: every chunk size against the
+            // monolithic oracle.
+            assert_chunked_partition_matches(graph, arch.crossbar_size, weighted, &ctx);
+
+            // Then the full pipeline at every thread count.
+            let want = acc.preprocess(graph, weighted).unwrap();
+            for threads in THREADS {
+                let got = acc.preprocess_threaded(graph, weighted, threads).unwrap();
+                assert_eq!(got.part, want.part, "{ctx} threads {threads}: Partitioned");
+                assert_eq!(got.ranking, want.ranking, "{ctx} threads {threads}: PatternRanking");
+                assert_eq!(got.ct, want.ct, "{ctx} threads {threads}: ConfigTable");
+                assert_eq!(got.st, want.st, "{ctx} threads {threads}: SubgraphTable");
+                assert_eq!(got.plan, want.plan, "{ctx} threads {threads}: ExecutionPlan");
+                assert_eq!(got, want, "{ctx} threads {threads}: Preprocessed");
+            }
+
+            // And the pooled entry point: one long-lived pool across
+            // both weighted variants and repeated compiles, the way the
+            // session's free list actually reuses workers.
+            let mut pool = WorkerPool::new(4);
+            for round in 0..2 {
+                let got = acc.preprocess_pooled(graph, weighted, &mut pool).unwrap();
+                assert_eq!(got, want, "{ctx} pooled round {round}: Preprocessed");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_parallel_compiled_artifact_round_trips_identically() {
+    // Disk parity: an artifact compiled on 4 workers, saved, and loaded
+    // back must equal the sequential compile — the serialized bytes
+    // carry no trace of how the compile was parallelized.
+    for seed in 546..550u64 {
+        let g = random_graph(seed);
+        let mut rng = SplitMix64::new(seed ^ 0xD15C);
+        let arch = random_arch(&mut rng);
+        let gw = with_random_weights(&g, &mut rng);
+        let acc = Accelerator::new(arch.clone(), CostParams::default());
+        let dir = scratch_dir("par-roundtrip");
+        let store = DiskStore::open(&dir).unwrap();
+        for (graph, weighted) in [(&g, false), (&gw, true)] {
+            let ctx = format!("seed {seed} weighted {weighted} arch {arch:?}");
+            let want = acc.preprocess(graph, weighted).unwrap();
+            let par = acc.preprocess_threaded(graph, weighted, 4).unwrap();
+            let key = test_key(seed, weighted, &arch);
+            assert!(store.save(&key, &par).unwrap(), "{ctx}: first save writes");
+            let loaded = store.load(&key, &arch).unwrap();
+            assert_eq!(loaded, want, "{ctx}: loaded parallel artifact vs sequential compile");
+            store.remove(&key);
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+#[test]
+fn parallel_artifact_feeds_dse_rebuild_identically() {
+    // DSE sweeps call `rebuild_static_slots` on a scratch copy of the
+    // artifact across every candidate static split N; a parallel-compiled
+    // artifact must sweep to the identical optimum and identical
+    // per-point numbers.
+    let g = Dataset::Tiny.load().unwrap();
+    let arch = ArchConfig::default();
+    let params = CostParams::default();
+    let acc = Accelerator::new(arch.clone(), params.clone());
+    let seq = acc.preprocess(&g, false).unwrap();
+    let par = acc.preprocess_threaded(&g, false, 4).unwrap();
+    assert_eq!(par, seq, "parallel compile diverges before the sweep even starts");
+
+    let program = Bfs::new(0);
+    let mut scratch_a = seq;
+    let mut scratch_b = par;
+    let (best_a, points_a) =
+        repro::dse::find_best_static_split_with(&mut scratch_a, &arch, &params, &program, None)
+            .unwrap();
+    let (best_b, points_b) =
+        repro::dse::find_best_static_split_with(&mut scratch_b, &arch, &params, &program, None)
+            .unwrap();
+    assert_eq!(best_a, best_b, "best split diverges");
+    assert_eq!(points_a.len(), points_b.len());
+    for (pa, pb) in points_a.iter().zip(&points_b) {
+        assert_eq!(pa.x, pb.x);
+        assert_eq!(pa.exec_time_ns, pb.exec_time_ns, "N={}: time", pa.x);
+        assert_eq!(pa.energy_j, pb.energy_j, "N={}: energy", pa.x);
+        assert_eq!(pa.write_bits, pb.write_bits, "N={}: writes", pa.x);
+        assert_eq!(pa.static_hit_rate, pb.static_hit_rate, "N={}: hit rate", pa.x);
+        assert_eq!(pa.speedup, pb.speedup, "N={}: speedup", pa.x);
+    }
+}
+
+#[test]
+fn prop_delta_patch_after_parallel_compile_is_bit_identical_to_cold_recompile() {
+    // The streaming-mutation path composed with the parallel compile:
+    // patching a parallel-compiled artifact must land on exactly the
+    // artifact a cold (sequential) recompile of the mutated graph
+    // produces — same whole-struct equality the delta suite enforces for
+    // sequential compiles.
+    for seed in 550..556u64 {
+        let g = random_graph(seed);
+        let mut rng = SplitMix64::new(seed ^ 0xDE17A);
+        let arch = random_arch(&mut rng);
+        let gw = with_random_weights(&g, &mut rng);
+        let acc = Accelerator::new(arch.clone(), CostParams::default());
+        for (graph, weighted) in [(&g, false), (&gw, true)] {
+            let ctx = format!("seed {seed} weighted {weighted} arch {arch:?}");
+            let mut patched = acc.preprocess_threaded(graph, weighted, 4).unwrap();
+            let batch = random_delta_batch(graph, &mut rng);
+            patch_preprocessed(&mut patched, &batch, &acc.config).unwrap();
+            let cold = acc
+                .preprocess(&batch.apply_to_coo(graph).unwrap(), weighted)
+                .unwrap();
+            assert_eq!(patched, cold, "{ctx}: patched parallel artifact vs cold recompile");
+        }
+    }
+}
+
+#[test]
+fn parallel_preprocess_runs_all_four_algorithms_identically() {
+    // End-to-end sanity: the plan a parallel compile produces drives all
+    // four vertex programs to bit-identical results. Whole-struct
+    // equality already implies this; this test pins the user-visible
+    // consequence so a future relaxation of `PartialEq` on
+    // `Preprocessed` can't silently weaken the contract.
+    use repro::algo::traits::VertexProgram;
+    use repro::sched::executor::NativeExecutor;
+
+    let seed = 560u64;
+    let g = random_graph(seed);
+    let mut rng = SplitMix64::new(seed ^ 0xA160);
+    let arch = random_arch(&mut rng);
+    let gw = with_random_weights(&g, &mut rng);
+    let source = rng.next_bounded(g.num_vertices as u64) as u32;
+    let acc = Accelerator::new(arch.clone(), CostParams::default());
+    let bfs = Bfs::new(source);
+    let sssp = Sssp::new(source);
+    let pagerank = PageRank::new(0.85, 4);
+    let wcc = Wcc;
+    let programs: [(&dyn VertexProgram, bool); 4] =
+        [(&bfs, false), (&sssp, true), (&pagerank, false), (&wcc, false)];
+    for (program, weighted) in programs {
+        let graph = if weighted { &gw } else { &g };
+        let want = acc.preprocess(graph, weighted).unwrap();
+        let par = acc.preprocess_threaded(graph, weighted, 4).unwrap();
+        let ctx = format!("seed {seed} algo {}", program.name());
+        let a = acc.run_threaded(&want, program, &mut NativeExecutor, 1).unwrap().run.unwrap();
+        let b = acc.run_threaded(&par, program, &mut NativeExecutor, 1).unwrap().run.unwrap();
+        common::assert_bit_identical(&b, &a, &ctx);
+    }
+}
