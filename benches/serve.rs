@@ -1,0 +1,117 @@
+//! Bench: serving-tier load studies through `coordinator::loadgen` —
+//! the three traffic shapes the production queue is built for:
+//!
+//! 1. **Closed-loop mixed burst** — the throughput ceiling: N virtual
+//!    clients drive a 4-worker service as fast as completions allow.
+//! 2. **Coalesce burst** — every job of an algorithm shares one
+//!    `CoalesceKey` (`sources: 1`), so queued duplicates ride one
+//!    execution; the `coalesced` count against `subgraph_ops` is the
+//!    amortization win, the paper's thesis applied to the serve queue.
+//! 3. **Open-loop overload** — arrivals at a fixed rate a single worker
+//!    cannot sustain, with a per-job deadline: queue-wait percentiles
+//!    grow and expired jobs are load-shed instead of executed.
+//!
+//! Results are written to `BENCH_serve.json` at the **repo root**
+//! (anchored on `CARGO_MANIFEST_DIR`, not the invocation cwd) so serve
+//! latency/throughput is tracked across PRs next to the hotpath
+//! trajectory.
+//!
+//! Run: `cargo bench --bench serve`
+//! CI smoke: `BENCH_SMOKE=1 cargo bench --bench serve` (tiny dataset,
+//! few jobs, throwaway output path — keeps the harness compiling and
+//! running without burning minutes).
+
+use std::time::Duration;
+
+use repro::coordinator::{loadgen, LoadMode, LoadgenConfig, Service, ServiceConfig};
+use repro::graph::datasets::Dataset;
+
+fn service(workers: usize, queue_depth: usize) -> Service {
+    Service::spawn(ServiceConfig { workers, queue_depth, ..ServiceConfig::default() }).unwrap()
+}
+
+fn main() {
+    // Truthy check: `BENCH_SMOKE=0` or empty means a full run.
+    let smoke = std::env::var("BENCH_SMOKE")
+        .map(|v| !v.is_empty() && v != "0")
+        .unwrap_or(false);
+    let dataset = if smoke { Dataset::Tiny } else { Dataset::WikiVote };
+    let jobs = if smoke { 8 } else { 256 };
+    let mut reports = Vec::new();
+
+    // 1. Closed-loop throughput ceiling: 8 clients, 4 workers, wide
+    // key space (little coalescing — this measures raw serve capacity).
+    {
+        let svc = service(4, 0);
+        let cfg = LoadgenConfig {
+            name: "closed-loop mixed".to_string(),
+            dataset,
+            jobs,
+            mode: LoadMode::Closed { concurrency: 8 },
+            sources: 64,
+            ..LoadgenConfig::default()
+        };
+        let r = loadgen::run(&svc, &cfg).expect("closed-loop run");
+        println!("{}\n", r.render());
+        reports.push(r);
+    }
+
+    // 2. Coalesce burst: one source per algorithm — queued duplicates
+    // share executions; `completed - subgraph-op-weighted executions`
+    // is work the queue amortized away.
+    {
+        let svc = service(2, 0);
+        let cfg = LoadgenConfig {
+            name: "coalesce burst".to_string(),
+            dataset,
+            jobs,
+            mode: LoadMode::Closed { concurrency: 8 },
+            sources: 1,
+            ..LoadgenConfig::default()
+        };
+        let r = loadgen::run(&svc, &cfg).expect("coalesce run");
+        println!("{}\n", r.render());
+        reports.push(r);
+    }
+
+    // 3. Open-loop overload + deadlines: arrivals outpace one worker,
+    // queue-wait tails grow, expired jobs are shed unexecuted. The
+    // queue stays unbounded so arrival pacing is never backpressured —
+    // the open-loop contract.
+    {
+        let svc = service(1, 0);
+        let cfg = LoadgenConfig {
+            name: "open-loop overload".to_string(),
+            dataset,
+            jobs,
+            mode: LoadMode::Open { rate_per_s: if smoke { 100_000.0 } else { 2_000.0 } },
+            deadline: Some(Duration::from_millis(if smoke { 50 } else { 20 })),
+            sources: 64,
+            ..LoadgenConfig::default()
+        };
+        let r = loadgen::run(&svc, &cfg).expect("open-loop run");
+        println!("{}\n", r.render());
+        reports.push(r);
+    }
+
+    // Land the trajectory at the repo root regardless of invocation cwd —
+    // but never from a smoke run: Tiny-scale numbers under the real
+    // scenario names would silently corrupt the cross-PR trajectory. The
+    // smoke still exercises the writer end to end against a throwaway
+    // path (and fails loudly if it breaks).
+    if smoke {
+        let tmp = std::env::temp_dir().join("BENCH_serve.smoke.json");
+        loadgen::write_json(&tmp, &reports).expect("smoke write of serve JSON failed");
+        println!(
+            "(BENCH_SMOKE: wrote throwaway {} — repo trajectory untouched)",
+            tmp.display()
+        );
+    } else {
+        let out_path = concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_serve.json");
+        if let Err(e) = loadgen::write_json(out_path, &reports) {
+            eprintln!("(could not write {out_path}: {e})");
+        } else {
+            println!("wrote {out_path} ({} scenarios)", reports.len());
+        }
+    }
+}

@@ -54,8 +54,13 @@ fn main() -> Result<()> {
         fmt::count(s.subgraph_ops),
         s.subgraph_ops as f64 / wall / 1e6,
     );
+    println!("  queue-wait {}", s.queue_wait.render());
+    println!("  execution  {}", s.execution.render());
     for (algo, st) in &s.per_algorithm {
-        println!("  {algo:>9}: {} completed, queue depth {}", st.completed, st.queue_depth);
+        println!(
+            "  {algo:>9}: {} completed, queue depth {}, exec p99 {} µs",
+            st.completed, st.queue_depth, st.execution.p99_us
+        );
     }
     let cache = svc.session().artifacts().stats();
     println!(

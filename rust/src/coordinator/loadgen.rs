@@ -1,0 +1,342 @@
+//! Scripted open/closed-loop load generation against a [`Service`] —
+//! the reproducible traffic-study harness the serving tier is measured
+//! with (`repro loadgen` and `benches/serve.rs` both drive it).
+//!
+//! Two classic load models:
+//!
+//! - **Open loop**: jobs arrive on a fixed schedule (`rate_per_s`)
+//!   regardless of completions — the honest way to measure queueing
+//!   behavior under overload (closed loops self-throttle and hide it).
+//! - **Closed loop**: a fixed number of virtual clients each submit
+//!   their next job when the previous one resolves — the throughput
+//!   ceiling view.
+//!
+//! The generated trace is deterministic (seeded [`SplitMix64`] over a
+//! configured algorithm mix and source-vertex spread), so runs are
+//! comparable across machines and commits; results land as
+//! `BENCH_serve.json` rows next to the hotpath trajectory.
+
+use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::graph::datasets::Dataset;
+use crate::session::JobSpec;
+use crate::util::SplitMix64;
+
+use super::metrics::LatencySummary;
+use super::Service;
+
+/// Arrival model for a load run.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LoadMode {
+    /// Fixed arrival rate, independent of completions.
+    Open { rate_per_s: f64 },
+    /// Fixed in-flight concurrency: each virtual client submits its
+    /// next job when the previous one resolves.
+    Closed { concurrency: usize },
+}
+
+/// One load scenario. `Default` is a small closed-loop mixed burst.
+#[derive(Debug, Clone)]
+pub struct LoadgenConfig {
+    /// Scenario label (lands in the JSON trajectory).
+    pub name: String,
+    pub dataset: Dataset,
+    pub scale: f64,
+    /// Total jobs in the trace.
+    pub jobs: usize,
+    pub mode: LoadMode,
+    /// Optional per-job latency budget — expired jobs are load-shed by
+    /// the service, which is exactly what an overload study wants to
+    /// count.
+    pub deadline: Option<Duration>,
+    /// Algorithm mix, cycled per job (empty falls back to the builtin
+    /// bfs/pagerank/wcc/sssp rotation).
+    pub algorithms: Vec<String>,
+    /// Iteration count stamped on every job (pagerank honors it; for
+    /// the rest it only widens the coalesce-key space).
+    pub iterations: usize,
+    /// Distinct source vertices the trace cycles through: `1` makes
+    /// every job of an algorithm identical (maximum coalescing
+    /// pressure), large values spread the key space.
+    pub sources: u32,
+    /// Trace seed — same seed, same job sequence.
+    pub seed: u64,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> Self {
+        Self {
+            name: "loadgen".to_string(),
+            dataset: Dataset::Tiny,
+            scale: 1.0,
+            jobs: 32,
+            mode: LoadMode::Closed { concurrency: 4 },
+            deadline: None,
+            algorithms: Vec::new(),
+            iterations: 5,
+            sources: 8,
+            seed: 42,
+        }
+    }
+}
+
+const DEFAULT_MIX: [&str; 4] = ["bfs", "pagerank", "wcc", "sssp"];
+
+/// The deterministic job trace a config expands to.
+pub fn traffic(cfg: &LoadgenConfig) -> Vec<JobSpec> {
+    let mix: Vec<&str> = if cfg.algorithms.is_empty() {
+        DEFAULT_MIX.to_vec()
+    } else {
+        cfg.algorithms.iter().map(String::as_str).collect()
+    };
+    let mut rng = SplitMix64::new(cfg.seed);
+    (0..cfg.jobs)
+        .map(|i| {
+            let source = (rng.next_u64() % u64::from(cfg.sources.max(1))) as u32;
+            let mut spec = JobSpec::new(cfg.dataset, mix[i % mix.len()])
+                .with_scale(cfg.scale)
+                .with_source(source)
+                .with_iterations(cfg.iterations);
+            if let Some(d) = cfg.deadline {
+                spec = spec.with_deadline(d);
+            }
+            spec
+        })
+        .collect()
+}
+
+/// Outcome of one load run, read from the service's cumulative metrics
+/// — run scenarios against a **fresh** [`Service`] so counters belong
+/// to this trace alone.
+#[derive(Debug, Clone)]
+pub struct LoadgenReport {
+    pub name: String,
+    /// Human form of the arrival model, e.g. `open@500/s`.
+    pub mode: String,
+    pub jobs: usize,
+    pub elapsed_s: f64,
+    /// Completions per second of wall time.
+    pub throughput_jobs_per_s: f64,
+    pub completed: u64,
+    pub failed: u64,
+    pub shed: u64,
+    pub coalesced: u64,
+    /// Hardware work actually performed (counted once per execution —
+    /// the gap against `completed` is the coalescing win).
+    pub subgraph_ops: u64,
+    pub queue_wait: LatencySummary,
+    pub execution: LatencySummary,
+}
+
+impl LoadgenReport {
+    /// Multi-line human summary for the CLI.
+    pub fn render(&self) -> String {
+        format!(
+            "{} [{}]: {} jobs in {:.3}s -> {:.1} jobs/s\n\
+             \x20 completed {} / failed {} / shed {} / coalesced {} (ops {})\n\
+             \x20 queue-wait {}\n\
+             \x20 execution  {}",
+            self.name,
+            self.mode,
+            self.jobs,
+            self.elapsed_s,
+            self.throughput_jobs_per_s,
+            self.completed,
+            self.failed,
+            self.shed,
+            self.coalesced,
+            self.subgraph_ops,
+            self.queue_wait.render(),
+            self.execution.render(),
+        )
+    }
+}
+
+/// Drive one scenario against `svc` and fold the resulting metrics into
+/// a [`LoadgenReport`].
+pub fn run(svc: &Service, cfg: &LoadgenConfig) -> Result<LoadgenReport> {
+    let specs = traffic(cfg);
+    let started = Instant::now();
+    match cfg.mode {
+        LoadMode::Closed { concurrency } => {
+            let next = AtomicUsize::new(0);
+            std::thread::scope(|scope| {
+                for _ in 0..concurrency.max(1) {
+                    scope.spawn(|| loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        let Some(spec) = specs.get(i) else { break };
+                        // Failures/sheds are the study's data, not this
+                        // driver's problem — the metrics count them.
+                        let _ = svc.submit_blocking(spec.clone());
+                    });
+                }
+            });
+        }
+        LoadMode::Open { rate_per_s } => {
+            let rate = rate_per_s.max(1e-9);
+            let mut pending = Vec::with_capacity(specs.len());
+            for (i, spec) in specs.iter().enumerate() {
+                let due = started + Duration::from_secs_f64(i as f64 / rate);
+                let now = Instant::now();
+                if due > now {
+                    std::thread::sleep(due - now);
+                }
+                if let Ok(p) = svc.submit(spec.clone()) {
+                    pending.push(p);
+                }
+            }
+            for p in pending {
+                let _ = p.wait();
+            }
+        }
+    }
+    let elapsed_s = started.elapsed().as_secs_f64().max(1e-9);
+    let snap = svc.snapshot();
+    Ok(LoadgenReport {
+        name: cfg.name.clone(),
+        mode: match cfg.mode {
+            LoadMode::Open { rate_per_s } => format!("open@{rate_per_s:.0}/s"),
+            LoadMode::Closed { concurrency } => format!("closed@c={concurrency}"),
+        },
+        jobs: cfg.jobs,
+        elapsed_s,
+        throughput_jobs_per_s: snap.jobs_completed as f64 / elapsed_s,
+        completed: snap.jobs_completed,
+        failed: snap.jobs_failed,
+        shed: snap.jobs_shed,
+        coalesced: snap.jobs_coalesced,
+        subgraph_ops: snap.subgraph_ops,
+        queue_wait: snap.queue_wait,
+        execution: snap.execution,
+    })
+}
+
+fn esc(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+/// Serialize reports as a JSON array (hand-rolled — the offline image
+/// vendors no serde), one row per scenario, mirroring the
+/// `BENCH_hotpath.json` trajectory format.
+pub fn reports_to_json(reports: &[LoadgenReport]) -> String {
+    let mut s = String::from("[\n");
+    for (i, r) in reports.iter().enumerate() {
+        if i > 0 {
+            s.push_str(",\n");
+        }
+        s.push_str(&format!(
+            "  {{\"name\": \"{}\", \"mode\": \"{}\", \"jobs\": {}, \"elapsed_s\": {:.6}, \
+             \"throughput_jobs_per_s\": {:.2}, \"completed\": {}, \"failed\": {}, \
+             \"shed\": {}, \"coalesced\": {}, \"subgraph_ops\": {}, \
+             \"queue_wait_p50_us\": {}, \"queue_wait_p99_us\": {}, \
+             \"queue_wait_p999_us\": {}, \"queue_wait_max_us\": {}, \
+             \"exec_p50_us\": {}, \"exec_p99_us\": {}, \"exec_p999_us\": {}, \
+             \"exec_max_us\": {}}}",
+            esc(&r.name),
+            esc(&r.mode),
+            r.jobs,
+            r.elapsed_s,
+            r.throughput_jobs_per_s,
+            r.completed,
+            r.failed,
+            r.shed,
+            r.coalesced,
+            r.subgraph_ops,
+            r.queue_wait.p50_us,
+            r.queue_wait.p99_us,
+            r.queue_wait.p999_us,
+            r.queue_wait.max_us,
+            r.execution.p50_us,
+            r.execution.p99_us,
+            r.execution.p999_us,
+            r.execution.max_us,
+        ));
+    }
+    s.push_str("\n]\n");
+    s
+}
+
+/// Write [`reports_to_json`] to `path`.
+pub fn write_json(path: impl AsRef<Path>, reports: &[LoadgenReport]) -> std::io::Result<()> {
+    std::fs::write(path, reports_to_json(reports))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{Service, ServiceConfig};
+
+    #[test]
+    fn traffic_is_deterministic_and_mixed() {
+        let cfg = LoadgenConfig { jobs: 12, ..LoadgenConfig::default() };
+        let a = traffic(&cfg);
+        let b = traffic(&cfg);
+        assert_eq!(a, b, "same seed, same trace");
+        assert_eq!(a.len(), 12);
+        assert_eq!(a[0].algorithm.as_str(), "bfs");
+        assert_eq!(a[1].algorithm.as_str(), "pagerank");
+        let other = traffic(&LoadgenConfig { jobs: 12, seed: 7, ..LoadgenConfig::default() });
+        assert_ne!(a, other, "different seed, different sources");
+    }
+
+    #[test]
+    fn closed_loop_conserves_jobs() {
+        let svc =
+            Service::spawn(ServiceConfig { workers: 2, ..ServiceConfig::default() }).unwrap();
+        let cfg = LoadgenConfig {
+            jobs: 8,
+            mode: LoadMode::Closed { concurrency: 2 },
+            sources: 2,
+            ..LoadgenConfig::default()
+        };
+        let r = run(&svc, &cfg).unwrap();
+        assert_eq!(r.completed + r.failed + r.shed, 8);
+        assert_eq!(r.failed, 0);
+        assert!(r.throughput_jobs_per_s > 0.0);
+        assert_eq!(r.execution.count, r.completed);
+    }
+
+    #[test]
+    fn open_loop_submits_the_whole_trace() {
+        let svc =
+            Service::spawn(ServiceConfig { workers: 2, ..ServiceConfig::default() }).unwrap();
+        let cfg = LoadgenConfig {
+            jobs: 6,
+            // Effectively "as fast as possible" — the paced sleep is ~0.
+            mode: LoadMode::Open { rate_per_s: 1e6 },
+            ..LoadgenConfig::default()
+        };
+        let r = run(&svc, &cfg).unwrap();
+        assert_eq!(r.completed + r.failed + r.shed, 6);
+        assert!(r.elapsed_s > 0.0);
+    }
+
+    #[test]
+    fn json_rows_carry_percentiles_and_escape_names() {
+        let report = LoadgenReport {
+            name: "a \"quoted\" scenario".to_string(),
+            mode: "closed@c=2".to_string(),
+            jobs: 4,
+            elapsed_s: 0.5,
+            throughput_jobs_per_s: 8.0,
+            completed: 4,
+            failed: 0,
+            shed: 0,
+            coalesced: 1,
+            subgraph_ops: 99,
+            queue_wait: LatencySummary::default(),
+            execution: LatencySummary::default(),
+        };
+        let json = reports_to_json(&[report]);
+        assert!(json.contains("a \\\"quoted\\\" scenario"));
+        assert!(json.contains("\"queue_wait_p999_us\""));
+        assert!(json.contains("\"exec_p50_us\""));
+        assert!(json.contains("\"coalesced\": 1"));
+        assert!(json.trim_start().starts_with('['));
+        assert!(json.trim_end().ends_with(']'));
+    }
+}

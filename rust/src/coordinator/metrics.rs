@@ -1,11 +1,18 @@
-//! Lightweight service metrics: global counters + latency summary stay
-//! lock-free on the hot path (atomics); per-algorithm counters and the
-//! in-flight gauge live behind a short-critical-section mutex, keyed by
-//! the algorithm id from the job's `JobSpec`.
+//! Lightweight service metrics: global counters stay lock-free on the
+//! hot path (atomics); per-algorithm counters, the in-flight gauge, and
+//! the latency histograms live behind a short-critical-section mutex,
+//! keyed by the algorithm id from the job's `JobSpec`.
+//!
+//! Latency is recorded **split**: queue-wait (submit → dequeue) and
+//! execution (dequeue → completion) feed separate fixed-bucket
+//! log-scale [`Histogram`]s, so tail percentiles can't hide scheduling
+//! delay inside compute time (or vice versa). Conservation invariant,
+//! enforced by `rust/tests/serve.rs`:
+//! `jobs_submitted == jobs_completed + jobs_failed + jobs_shed`.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Mutex, MutexGuard};
 
 use crate::accel::PreprocessTiming;
 use crate::session::DeltaReport;
@@ -81,13 +88,170 @@ impl PreprocessPhases {
     }
 }
 
-/// Per-algorithm counters plus the queue-depth gauge.
-#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+/// Power-of-two bucket count: bucket `i` covers `[2^i, 2^(i+1))` µs
+/// (bucket 0 covers `[0, 2)`), so 40 buckets span sub-microsecond to
+/// ~12.7 days — any realistic serve latency without per-request
+/// allocation.
+const HISTOGRAM_BUCKETS: usize = 40;
+
+/// Fixed-bucket log-scale latency histogram (microseconds).
+///
+/// Recording is O(1) into a flat array — no allocation, no resize — and
+/// percentile queries interpolate linearly inside the hit bucket, giving
+/// ~1-bucket relative error at any quantile. By construction
+/// `percentile(q)` is monotone in `q` and clamped to the observed max,
+/// so `p50 ≤ p99 ≤ p999 ≤ max` always holds.
+#[derive(Clone, PartialEq, Eq)]
+pub struct Histogram {
+    counts: [u64; HISTOGRAM_BUCKETS],
+    count: u64,
+    sum_us: u64,
+    max_us: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self { counts: [0; HISTOGRAM_BUCKETS], count: 0, sum_us: 0, max_us: 0 }
+    }
+}
+
+impl std::fmt::Debug for Histogram {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Histogram")
+            .field("count", &self.count)
+            .field("mean_us", &self.mean_us())
+            .field("max_us", &self.max_us)
+            .finish()
+    }
+}
+
+impl Histogram {
+    fn bucket_of(us: u64) -> usize {
+        // floor(log2(us)) with 0 mapped into bucket 0; giants clamp into
+        // the last bucket (the percentile cap below keeps them honest).
+        ((63 - (us | 1).leading_zeros()) as usize).min(HISTOGRAM_BUCKETS - 1)
+    }
+
+    pub fn record(&mut self, us: u64) {
+        self.counts[Self::bucket_of(us)] += 1;
+        self.count += 1;
+        self.sum_us = self.sum_us.saturating_add(us);
+        self.max_us = self.max_us.max(us);
+    }
+
+    /// Fold another histogram in (used to derive the global summary from
+    /// the per-algorithm histograms at snapshot time).
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_us = self.sum_us.saturating_add(other.sum_us);
+        self.max_us = self.max_us.max(other.max_us);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn max_us(&self) -> u64 {
+        self.max_us
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_us as f64 / self.count as f64
+        }
+    }
+
+    /// Estimated latency at quantile `q` in `[0, 1]`, microseconds.
+    pub fn percentile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            if seen + c >= rank {
+                let lo = if i == 0 { 0u64 } else { 1u64 << i };
+                let hi = 1u64 << (i + 1);
+                let frac = (rank - seen) as f64 / c as f64;
+                let est = lo as f64 + frac * (hi - lo) as f64;
+                return (est as u64).min(self.max_us);
+            }
+            seen += c;
+        }
+        self.max_us
+    }
+
+    pub fn summary(&self) -> LatencySummary {
+        LatencySummary {
+            count: self.count,
+            mean_us: self.mean_us(),
+            max_us: self.max_us,
+            p50_us: self.percentile(0.50),
+            p99_us: self.percentile(0.99),
+            p999_us: self.percentile(0.999),
+        }
+    }
+}
+
+/// Snapshot view of one latency [`Histogram`].
+#[derive(Debug, Default, Clone, Copy, PartialEq)]
+pub struct LatencySummary {
+    pub count: u64,
+    pub mean_us: f64,
+    pub max_us: u64,
+    pub p50_us: u64,
+    pub p99_us: u64,
+    pub p999_us: u64,
+}
+
+impl LatencySummary {
+    /// One-line human summary for the CLI (microseconds).
+    pub fn render(&self) -> String {
+        format!(
+            "n={} mean {:.0}us p50 {}us p99 {}us p999 {}us max {}us",
+            self.count, self.mean_us, self.p50_us, self.p99_us, self.p999_us, self.max_us
+        )
+    }
+}
+
+/// Per-algorithm counters, gauge, and split latency histograms.
+#[derive(Debug, Default, Clone, PartialEq)]
+struct AlgoEntry {
+    completed: u64,
+    failed: u64,
+    shed: u64,
+    coalesced: u64,
+    queue_depth: u64,
+    queue_wait: Histogram,
+    execution: Histogram,
+}
+
+/// Per-algorithm snapshot: counters plus the queue-depth gauge and split
+/// queue-wait / execution latency summaries.
+#[derive(Debug, Default, Clone, PartialEq)]
 pub struct AlgoStats {
     pub completed: u64,
     pub failed: u64,
-    /// Jobs submitted but not yet finished (queued or running).
+    /// Jobs shed unexecuted because their deadline expired in the queue.
+    pub shed: u64,
+    /// Follower jobs that shared another job's execution (the leader is
+    /// not counted — N identical jobs record N-1 here).
+    pub coalesced: u64,
+    /// Jobs submitted but not yet finished (queued or running; a
+    /// backpressured `submit` counts too — it is in flight for callers).
     pub queue_depth: u64,
+    /// Submit → dequeue latency (recorded for completions and sheds).
+    pub queue_wait: LatencySummary,
+    /// Dequeue → completion latency.
+    pub execution: LatencySummary,
 }
 
 #[derive(Debug, Default)]
@@ -95,11 +259,17 @@ pub struct Metrics {
     pub jobs_submitted: AtomicU64,
     pub jobs_completed: AtomicU64,
     pub jobs_failed: AtomicU64,
-    /// Total wall-clock job latency, microseconds.
+    /// Jobs load-shed unexecuted (deadline already expired at dequeue).
+    pub jobs_shed: AtomicU64,
+    /// Follower jobs coalesced onto another queued job's execution.
+    pub jobs_coalesced: AtomicU64,
+    /// Total wall-clock job latency (queue-wait + execution), µs.
     total_latency_us: AtomicU64,
-    /// Max single-job latency, microseconds.
+    /// Max single-job latency (queue-wait + execution), µs.
     max_latency_us: AtomicU64,
-    /// Total subgraph ops processed across jobs.
+    /// Total subgraph ops processed across jobs. Counted once per
+    /// *execution* — coalesced followers add completions but no ops;
+    /// the gap between the two is the coalescing win made visible.
     pub subgraph_ops: AtomicU64,
     /// Streaming-mutation counters (fed by the service's `apply_delta`
     /// entry point): delta batches accepted.
@@ -111,7 +281,7 @@ pub struct Metrics {
     /// Cached artifacts patched in place — each one a whole-plan
     /// recompile the delta path avoided.
     pub delta_avoided_recompiles: AtomicU64,
-    per_algo: Mutex<BTreeMap<String, AlgoStats>>,
+    per_algo: Mutex<BTreeMap<String, AlgoEntry>>,
 }
 
 #[derive(Debug, Clone, PartialEq)]
@@ -119,8 +289,14 @@ pub struct MetricsSnapshot {
     pub jobs_submitted: u64,
     pub jobs_completed: u64,
     pub jobs_failed: u64,
+    pub jobs_shed: u64,
+    pub jobs_coalesced: u64,
     pub mean_latency_us: f64,
     pub max_latency_us: u64,
+    /// Global submit → dequeue latency, merged across algorithms.
+    pub queue_wait: LatencySummary,
+    /// Global dequeue → completion latency, merged across algorithms.
+    pub execution: LatencySummary,
     pub subgraph_ops: u64,
     pub delta_batches: u64,
     pub delta_dirty_partitions: u64,
@@ -136,29 +312,64 @@ pub struct MetricsSnapshot {
 }
 
 impl Metrics {
-    pub fn record_submitted(&self, algo: &str) {
-        self.jobs_submitted.fetch_add(1, Ordering::Relaxed);
-        let mut m = self.per_algo.lock().unwrap();
-        m.entry(algo.to_string()).or_default().queue_depth += 1;
+    /// Poison-safe per-algo table access: every mutation under this lock
+    /// is a couple of counter bumps with no intermediate invalid state,
+    /// so if a panicking holder ever poisons it we clear the flag and
+    /// keep serving instead of cascading the panic through every worker.
+    fn algos(&self) -> MutexGuard<'_, BTreeMap<String, AlgoEntry>> {
+        self.per_algo.lock().unwrap_or_else(|poisoned| {
+            self.per_algo.clear_poison();
+            poisoned.into_inner()
+        })
     }
 
-    pub fn record_completion(&self, algo: &str, latency_us: u64, ops: u64) {
+    pub fn record_submitted(&self, algo: &str) {
+        self.jobs_submitted.fetch_add(1, Ordering::Relaxed);
+        self.algos().entry(algo.to_string()).or_default().queue_depth += 1;
+    }
+
+    /// A submitted job joined an already-queued identical job instead of
+    /// taking its own queue slot (it still resolves through
+    /// `record_completion`/`record_failure`/`record_shed` like any
+    /// other, so the conservation invariant is untouched).
+    pub fn record_coalesced(&self, algo: &str) {
+        self.jobs_coalesced.fetch_add(1, Ordering::Relaxed);
+        self.algos().entry(algo.to_string()).or_default().coalesced += 1;
+    }
+
+    pub fn record_completion(&self, algo: &str, queue_wait_us: u64, exec_us: u64, ops: u64) {
+        let latency_us = queue_wait_us + exec_us;
         self.jobs_completed.fetch_add(1, Ordering::Relaxed);
         self.total_latency_us.fetch_add(latency_us, Ordering::Relaxed);
         self.max_latency_us.fetch_max(latency_us, Ordering::Relaxed);
         self.subgraph_ops.fetch_add(ops, Ordering::Relaxed);
-        let mut m = self.per_algo.lock().unwrap();
+        let mut m = self.algos();
         let e = m.entry(algo.to_string()).or_default();
         e.completed += 1;
         e.queue_depth = e.queue_depth.saturating_sub(1);
+        e.queue_wait.record(queue_wait_us);
+        e.execution.record(exec_us);
     }
 
     pub fn record_failure(&self, algo: &str) {
         self.jobs_failed.fetch_add(1, Ordering::Relaxed);
-        let mut m = self.per_algo.lock().unwrap();
+        let mut m = self.algos();
         let e = m.entry(algo.to_string()).or_default();
         e.failed += 1;
         e.queue_depth = e.queue_depth.saturating_sub(1);
+    }
+
+    /// A job was load-shed at dequeue: its deadline expired while queued,
+    /// so it never executed. The time it wasted waiting still feeds the
+    /// queue-wait histogram — shed jobs are exactly the ones whose wait
+    /// you need to see.
+    pub fn record_shed(&self, algo: &str, queue_wait_us: u64) {
+        self.jobs_shed.fetch_add(1, Ordering::Relaxed);
+        let mut m = self.algos();
+        let e = m.entry(algo.to_string()).or_default();
+        e.shed += 1;
+        e.queue_depth = e.queue_depth.saturating_sub(1);
+        e.queue_wait.record(queue_wait_us);
     }
 
     /// Fold one accepted delta batch's [`DeltaReport`] into the
@@ -175,29 +386,50 @@ impl Metrics {
 
     /// Current in-flight gauge for one algorithm.
     pub fn queue_depth(&self, algo: &str) -> u64 {
-        self.per_algo
-            .lock()
-            .unwrap()
-            .get(algo)
-            .map_or(0, |e| e.queue_depth)
+        self.algos().get(algo).map_or(0, |e| e.queue_depth)
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
         let completed = self.jobs_completed.load(Ordering::Relaxed);
         let total = self.total_latency_us.load(Ordering::Relaxed);
+        let algos = self.algos();
+        let mut queue_wait = Histogram::default();
+        let mut execution = Histogram::default();
+        let mut per_algorithm = BTreeMap::new();
+        for (name, e) in algos.iter() {
+            queue_wait.merge(&e.queue_wait);
+            execution.merge(&e.execution);
+            per_algorithm.insert(
+                name.clone(),
+                AlgoStats {
+                    completed: e.completed,
+                    failed: e.failed,
+                    shed: e.shed,
+                    coalesced: e.coalesced,
+                    queue_depth: e.queue_depth,
+                    queue_wait: e.queue_wait.summary(),
+                    execution: e.execution.summary(),
+                },
+            );
+        }
+        drop(algos);
         MetricsSnapshot {
             jobs_submitted: self.jobs_submitted.load(Ordering::Relaxed),
             jobs_completed: completed,
             jobs_failed: self.jobs_failed.load(Ordering::Relaxed),
+            jobs_shed: self.jobs_shed.load(Ordering::Relaxed),
+            jobs_coalesced: self.jobs_coalesced.load(Ordering::Relaxed),
             mean_latency_us: if completed > 0 { total as f64 / completed as f64 } else { 0.0 },
             max_latency_us: self.max_latency_us.load(Ordering::Relaxed),
+            queue_wait: queue_wait.summary(),
+            execution: execution.summary(),
             subgraph_ops: self.subgraph_ops.load(Ordering::Relaxed),
             delta_batches: self.delta_batches.load(Ordering::Relaxed),
             delta_dirty_partitions: self.delta_dirty_partitions.load(Ordering::Relaxed),
             delta_patched_ops: self.delta_patched_ops.load(Ordering::Relaxed),
             delta_avoided_recompiles: self.delta_avoided_recompiles.load(Ordering::Relaxed),
             preprocess: PreprocessPhases::default(),
-            per_algorithm: self.per_algo.lock().unwrap().clone(),
+            per_algorithm,
         }
     }
 }
@@ -212,14 +444,17 @@ mod tests {
         m.record_submitted("bfs");
         m.record_submitted("bfs");
         m.record_submitted("wcc");
-        m.record_completion("bfs", 100, 10);
-        m.record_completion("wcc", 300, 20);
+        m.record_completion("bfs", 40, 60, 10);
+        m.record_completion("wcc", 100, 200, 20);
         let s = m.snapshot();
         assert_eq!(s.jobs_submitted, 3);
         assert_eq!(s.jobs_completed, 2);
         assert_eq!(s.mean_latency_us, 200.0);
         assert_eq!(s.max_latency_us, 300);
         assert_eq!(s.subgraph_ops, 30);
+        assert_eq!(s.queue_wait.count, 2);
+        assert_eq!(s.execution.count, 2);
+        assert_eq!(s.execution.max_us, 200);
     }
 
     #[test]
@@ -230,12 +465,46 @@ mod tests {
         m.record_submitted("sssp");
         assert_eq!(m.queue_depth("bfs"), 2);
         assert_eq!(m.queue_depth("sssp"), 1);
-        m.record_completion("bfs", 50, 5);
+        m.record_completion("bfs", 20, 30, 5);
         m.record_failure("sssp");
         let s = m.snapshot();
-        assert_eq!(s.per_algorithm["bfs"], AlgoStats { completed: 1, failed: 0, queue_depth: 1 });
-        assert_eq!(s.per_algorithm["sssp"], AlgoStats { completed: 0, failed: 1, queue_depth: 0 });
+        let bfs = &s.per_algorithm["bfs"];
+        assert_eq!((bfs.completed, bfs.failed, bfs.queue_depth), (1, 0, 1));
+        assert_eq!(bfs.queue_wait.count, 1);
+        assert_eq!(bfs.execution.max_us, 30);
+        let sssp = &s.per_algorithm["sssp"];
+        assert_eq!((sssp.completed, sssp.failed, sssp.queue_depth), (0, 1, 0));
+        // Failures record no latency — there is no completion to time.
+        assert_eq!(sssp.execution.count, 0);
         assert_eq!(m.queue_depth("pagerank"), 0);
+    }
+
+    #[test]
+    fn shed_and_coalesced_feed_conservation() {
+        let m = Metrics::default();
+        for _ in 0..4 {
+            m.record_submitted("bfs");
+        }
+        m.record_coalesced("bfs"); // rider: extra to submit, resolves below
+        m.record_completion("bfs", 10, 20, 5); // leader
+        m.record_completion("bfs", 10, 20, 0); // follower: no ops
+        m.record_shed("bfs", 500);
+        m.record_failure("bfs");
+        let s = m.snapshot();
+        assert_eq!(
+            s.jobs_submitted,
+            s.jobs_completed + s.jobs_failed + s.jobs_shed
+        );
+        assert_eq!(s.jobs_coalesced, 1);
+        assert_eq!(s.jobs_shed, 1);
+        assert_eq!(s.subgraph_ops, 5, "ops counted once per execution");
+        let bfs = &s.per_algorithm["bfs"];
+        assert_eq!((bfs.shed, bfs.coalesced, bfs.queue_depth), (1, 1, 0));
+        // Shed jobs feed the queue-wait histogram (their wait is the
+        // signal) but not the execution one (they never ran).
+        assert_eq!(bfs.queue_wait.count, 3);
+        assert_eq!(bfs.execution.count, 2);
+        assert_eq!(bfs.queue_wait.max_us, 500);
     }
 
     #[test]
@@ -264,7 +533,9 @@ mod tests {
     #[test]
     fn gauge_never_underflows() {
         let m = Metrics::default();
-        m.record_completion("bfs", 10, 1); // completion without a submit
+        m.record_completion("bfs", 5, 5, 1); // completion without a submit
+        assert_eq!(m.queue_depth("bfs"), 0);
+        m.record_shed("bfs", 5); // shed without a submit
         assert_eq!(m.queue_depth("bfs"), 0);
     }
 
@@ -274,6 +545,72 @@ mod tests {
         assert_eq!(s.mean_latency_us, 0.0);
         assert!(s.per_algorithm.is_empty());
         assert_eq!(s.preprocess, PreprocessPhases::default());
+        assert_eq!(s.queue_wait, LatencySummary::default());
+        assert_eq!(s.execution.mean_us, 0.0);
+    }
+
+    #[test]
+    fn histogram_percentiles_monotone_and_capped() {
+        let mut h = Histogram::default();
+        for us in [0u64, 1, 3, 7, 12, 100, 101, 5_000, 80_000, 1_234_567] {
+            h.record(us);
+        }
+        let p50 = h.percentile(0.50);
+        let p99 = h.percentile(0.99);
+        let p999 = h.percentile(0.999);
+        assert!(p50 <= p99, "p50 {p50} > p99 {p99}");
+        assert!(p99 <= p999, "p99 {p99} > p999 {p999}");
+        assert!(p999 <= h.max_us(), "p999 {p999} > max {}", h.max_us());
+        assert_eq!(h.max_us(), 1_234_567);
+        assert_eq!(h.count(), 10);
+        // Exhaustive monotonicity sweep across the quantile range.
+        let mut prev = 0;
+        for i in 0..=1000 {
+            let p = h.percentile(i as f64 / 1000.0);
+            assert!(p >= prev, "percentile not monotone at q={i}/1000");
+            prev = p;
+        }
+    }
+
+    #[test]
+    fn histogram_single_value_degenerates_cleanly() {
+        let mut h = Histogram::default();
+        h.record(42);
+        assert_eq!(h.percentile(0.5), 42);
+        assert_eq!(h.percentile(0.999), 42);
+        let s = h.summary();
+        assert_eq!((s.p50_us, s.p99_us, s.p999_us, s.max_us), (42, 42, 42, 42));
+        assert_eq!(s.mean_us, 42.0);
+    }
+
+    #[test]
+    fn histogram_merge_matches_combined_recording() {
+        let mut a = Histogram::default();
+        let mut b = Histogram::default();
+        let mut combined = Histogram::default();
+        for us in [1u64, 10, 100, 1000] {
+            a.record(us);
+            combined.record(us);
+        }
+        for us in [5u64, 50, 500, 50_000] {
+            b.record(us);
+            combined.record(us);
+        }
+        a.merge(&b);
+        assert_eq!(a, combined);
+        assert_eq!(a.summary(), combined.summary());
+    }
+
+    #[test]
+    fn histogram_clamps_giants_into_last_bucket() {
+        let mut h = Histogram::default();
+        h.record(u64::MAX);
+        h.record(u64::MAX);
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.max_us(), u64::MAX);
+        // The interpolated estimate is capped by the observed max, and
+        // stays in range (no overflow panics from the clamped bucket).
+        assert!(h.percentile(0.5) <= u64::MAX);
     }
 
     #[test]

@@ -1,11 +1,19 @@
-//! Serving layer: a leader/worker queue that accepts graph-processing
-//! jobs, runs them through a shared [`Session`](crate::session::Session)
-//! on worker threads, and exposes metrics. This is the deployment shell
-//! around the accelerator — the CLI `serve` command and the
-//! `serving_loop` example drive it.
+//! Serving layer: a leader/worker ordered queue that accepts
+//! graph-processing jobs, coalesces identical requests onto one
+//! execution, sheds expired-deadline work, runs the rest through a
+//! shared [`Session`](crate::session::Session) on worker threads, and
+//! exposes split queue-wait/execution latency histograms. This is the
+//! deployment shell around the accelerator — the CLI `serve`/`loadgen`
+//! commands, the `serve` bench, and the `serving_loop` example drive it.
 
+pub mod loadgen;
 pub mod metrics;
 pub mod service;
 
-pub use metrics::{AlgoStats, Metrics, MetricsSnapshot, PhaseStat, PreprocessPhases};
-pub use service::{JobResult, Pending, Service, ServiceConfig};
+pub use loadgen::{LoadMode, LoadgenConfig, LoadgenReport};
+pub use metrics::{
+    AlgoStats, Histogram, LatencySummary, Metrics, MetricsSnapshot, PhaseStat, PreprocessPhases,
+};
+pub use service::{
+    BatchSubmitError, JobError, JobResult, Pending, Service, ServiceConfig, DEFAULT_QUEUE_DEPTH,
+};

@@ -1,32 +1,93 @@
-//! The serving loop: a leader owns a job queue; worker threads pull
-//! [`JobSpec`]s and run them through a shared [`Session`] — same
+//! The serving loop: a leader owns an ordered job queue; worker threads
+//! pull [`JobSpec`]s and run them through a shared [`Session`] — same
 //! registry, same backend, same preprocessed-artifact cache as the CLI
 //! and DSE paths. Python is never on this path — numeric edge-compute
 //! goes through the native mirror or the AOT PJRT artifact, both pure
 //! rust at runtime.
 //!
-//! Implemented on std threads + mpsc (this image vendors no async
-//! runtime offline; the architecture is the same leader/worker queue).
+//! Production-tier queue semantics (all enforced by `rust/tests/serve.rs`):
+//!
+//! - **Request coalescing.** Identical queued jobs (equal
+//!   [`CoalesceKey`] — the result identity; scheduling knobs excluded)
+//!   share one execution: followers ride the leader's entry and receive
+//!   bit-identical clones of its report. This is the `ArtifactStore`'s
+//!   stampede coalescing lifted one level up — the store dedupes the
+//!   *compile*, the queue dedupes the *run*.
+//! - **Ordered dequeue.** Workers pop the highest-priority entry;
+//!   ties break earliest-deadline-first, then FIFO by submission order.
+//! - **Bounded depth + backpressure.** The queue holds at most
+//!   `queue_depth` entries; `submit` blocks until a slot frees (a
+//!   coalesced follower never occupies a slot — it is pure win).
+//! - **Load shedding.** A job whose deadline expired while queued is
+//!   shed at dequeue with a typed [`JobError::DeadlineExceeded`] —
+//!   counted per algorithm, never executed.
+//! - **Panic isolation.** A panicking job is caught with
+//!   `catch_unwind`, reported as a failed job ([`JobError::Panicked`]),
+//!   and the worker stays alive (its executor is rebuilt — post-unwind
+//!   state is suspect). A one-worker service keeps serving after a
+//!   poisoned job.
+//!
+//! Implemented on std threads + a Mutex/Condvar queue (this image
+//! vendors no async runtime offline; the architecture is the same
+//! leader/worker queue).
 
-use std::sync::{mpsc, Arc, Mutex};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard};
 use std::time::Instant;
 
 use anyhow::Result;
 
 use crate::accel::{ArchConfig, SimReport};
 use crate::cost::CostParams;
-use crate::sched::StepExecutor;
 use crate::graph::DeltaBatch;
-use crate::session::{AlgorithmId, Backend, DeltaReport, JobSpec, Session};
+use crate::sched::StepExecutor;
+use crate::session::{Backend, CoalesceKey, DeltaReport, JobSpec, Session};
 
 use super::metrics::Metrics;
 
 /// Completed job.
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct JobResult {
     pub report: SimReport,
+    /// Submit → completion, µs (`queue_wait_us + exec_us`).
     pub wall_time_us: u64,
+    /// Submit → dequeue, µs — the scheduling share of the latency.
+    pub queue_wait_us: u64,
+    /// Dequeue → completion, µs — the compute share.
+    pub exec_us: u64,
+    /// True when this job rode another identical job's execution (its
+    /// report is a bit-identical clone of the leader's).
+    pub coalesced: bool,
 }
+
+/// Typed serve-queue outcomes that are not execution errors. Carried
+/// inside the `anyhow::Error` a [`Pending::wait`] resolves to —
+/// downcast to tell a shed or panicked job from an algorithm failure.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum JobError {
+    /// The job's deadline expired while it sat in the queue; it was
+    /// load-shed at dequeue without executing.
+    DeadlineExceeded {
+        /// How long the job waited before being shed, µs.
+        waited_us: u64,
+    },
+    /// The job panicked mid-execution. The worker survived (the panic
+    /// was caught and its executor rebuilt); the payload rides along.
+    Panicked(String),
+}
+
+impl std::fmt::Display for JobError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            JobError::DeadlineExceeded { waited_us } => {
+                write!(f, "deadline exceeded: shed unexecuted after {waited_us}us in queue")
+            }
+            JobError::Panicked(msg) => write!(f, "job panicked: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for JobError {}
 
 #[derive(Debug, Clone)]
 pub struct ServiceConfig {
@@ -58,7 +119,14 @@ pub struct ServiceConfig {
     /// compilations on restart, the serve-fleet warm start the on-disk
     /// tier exists for. Pre-bake with `repro artifacts warm`.
     pub artifact_dir: Option<std::path::PathBuf>,
+    /// Maximum queued entries before `submit` blocks (backpressure).
+    /// Coalesced followers ride existing entries and are never counted
+    /// against the bound. `0` = unbounded.
+    pub queue_depth: usize,
 }
+
+/// Default bound on queued entries (see [`ServiceConfig::queue_depth`]).
+pub const DEFAULT_QUEUE_DEPTH: usize = 1024;
 
 impl Default for ServiceConfig {
     fn default() -> Self {
@@ -70,33 +138,185 @@ impl Default for ServiceConfig {
             parallelism: 1,
             preprocess_parallelism: None,
             artifact_dir: None,
+            queue_depth: DEFAULT_QUEUE_DEPTH,
         }
     }
 }
 
 type Reply = mpsc::Sender<Result<JobResult>>;
 
-/// Balances `record_submitted` even if the worker panics mid-job: unless
-/// disarmed by a normal completion/failure record, dropping the guard
-/// records a failure, so the per-algorithm queue-depth gauge and the
-/// `submitted == completed + failed` invariant survive unwinding.
-struct CompletionGuard<'m> {
-    metrics: &'m Metrics,
-    algo: AlgorithmId,
-    armed: bool,
+/// One submission riding a queue entry: where to send the result, and
+/// the per-submission scheduling stamps (satellite fix: submit time is
+/// stamped *in `submit`*, so queue-wait is part of every reported
+/// latency — a worker-side clock can't see time spent queued).
+struct Rider {
+    reply: Reply,
+    submitted_at: Instant,
+    deadline: Option<Instant>,
+    coalesced: bool,
 }
 
-impl Drop for CompletionGuard<'_> {
-    fn drop(&mut self) {
-        if self.armed {
-            self.metrics.record_failure(self.algo.as_str());
+/// A queued execution: one spec, one eventual run, N riders.
+struct QueueEntry {
+    spec: JobSpec,
+    key: CoalesceKey,
+    /// Max over riders' priorities — a high-priority follower promotes
+    /// the whole entry (it shares the execution either way).
+    priority: i8,
+    /// FIFO tiebreaker.
+    seq: u64,
+    riders: Vec<Rider>,
+}
+
+impl QueueEntry {
+    /// Earliest hard deadline among riders (`None` = no rider is
+    /// deadline-bound). Drives earliest-deadline-first ordering within a
+    /// priority class.
+    fn order_deadline(&self) -> Option<Instant> {
+        self.riders.iter().filter_map(|r| r.deadline).min()
+    }
+
+    /// Strict "dequeue `a` before `b`" ordering: priority desc, then
+    /// earliest-deadline-first (deadline-free entries last), then FIFO.
+    fn before(a: &QueueEntry, b: &QueueEntry) -> bool {
+        if a.priority != b.priority {
+            return a.priority > b.priority;
         }
+        match (a.order_deadline(), b.order_deadline()) {
+            (Some(x), Some(y)) if x != y => x < y,
+            (Some(_), None) => true,
+            (None, Some(_)) => false,
+            _ => a.seq < b.seq,
+        }
+    }
+}
+
+struct QueueState {
+    entries: Vec<QueueEntry>,
+    open: bool,
+    next_seq: u64,
+}
+
+/// How a submission landed in the queue.
+enum Submitted {
+    /// Took its own entry (and queue slot).
+    Queued,
+    /// Joined an already-queued identical entry.
+    Coalesced,
+}
+
+/// The ordered serve queue: bounded, coalescing, priority/deadline-aware.
+struct JobQueue {
+    state: Mutex<QueueState>,
+    /// Signaled when an entry is pushed (workers wait here).
+    available: Condvar,
+    /// Signaled when an entry is popped (backpressured submitters wait
+    /// here).
+    space: Condvar,
+    capacity: usize,
+}
+
+impl JobQueue {
+    fn new(queue_depth: usize) -> Self {
+        Self {
+            state: Mutex::new(QueueState { entries: Vec::new(), open: true, next_seq: 0 }),
+            available: Condvar::new(),
+            space: Condvar::new(),
+            capacity: if queue_depth == 0 { usize::MAX } else { queue_depth },
+        }
+    }
+
+    /// Poison-safe lock (satellite fix for the poisoned-lock cascade):
+    /// every mutation under this lock is a single push/remove that
+    /// leaves the queue structurally sound, so if a panicking holder
+    /// ever poisons it we clear the flag and keep serving instead of
+    /// unwinding every other worker.
+    fn lock(&self) -> MutexGuard<'_, QueueState> {
+        self.state.lock().unwrap_or_else(|poisoned| {
+            self.state.clear_poison();
+            poisoned.into_inner()
+        })
+    }
+
+    fn wait<'a>(
+        &self,
+        cv: &Condvar,
+        guard: MutexGuard<'a, QueueState>,
+    ) -> MutexGuard<'a, QueueState> {
+        cv.wait(guard).unwrap_or_else(|poisoned| {
+            self.state.clear_poison();
+            poisoned.into_inner()
+        })
+    }
+
+    /// Enqueue a submission. Coalesces onto an identical queued entry
+    /// when one exists; otherwise takes a slot, blocking while the queue
+    /// is full. Fails only when the queue has closed.
+    fn push(&self, spec: JobSpec, reply: Reply, submitted_at: Instant) -> Result<Submitted> {
+        let key = spec.coalesce_key();
+        let deadline = spec.deadline.map(|d| submitted_at + d);
+        let priority = spec.priority;
+        let mut st = self.lock();
+        loop {
+            anyhow::ensure!(st.open, "service stopped");
+            if let Some(e) = st.entries.iter_mut().find(|e| e.key == key) {
+                e.priority = e.priority.max(priority);
+                e.riders.push(Rider { reply, submitted_at, deadline, coalesced: true });
+                return Ok(Submitted::Coalesced);
+            }
+            if st.entries.len() < self.capacity {
+                let seq = st.next_seq;
+                st.next_seq += 1;
+                st.entries.push(QueueEntry {
+                    spec,
+                    key,
+                    priority,
+                    seq,
+                    riders: vec![Rider { reply, submitted_at, deadline, coalesced: false }],
+                });
+                self.available.notify_one();
+                return Ok(Submitted::Queued);
+            }
+            // Backpressure: block until a worker pops an entry, then
+            // rescan — the spec may now coalesce with a later arrival.
+            st = self.wait(&self.space, st);
+        }
+    }
+
+    /// Dequeue the best entry ([`QueueEntry::before`] order). Blocks
+    /// while the queue is open and empty; drains remaining entries after
+    /// close; returns `None` once closed *and* empty.
+    fn pop(&self) -> Option<QueueEntry> {
+        let mut st = self.lock();
+        loop {
+            if !st.entries.is_empty() {
+                let mut best = 0;
+                for i in 1..st.entries.len() {
+                    if QueueEntry::before(&st.entries[i], &st.entries[best]) {
+                        best = i;
+                    }
+                }
+                let entry = st.entries.swap_remove(best);
+                self.space.notify_one();
+                return Some(entry);
+            }
+            if !st.open {
+                return None;
+            }
+            st = self.wait(&self.available, st);
+        }
+    }
+
+    fn close(&self) {
+        self.lock().open = false;
+        self.available.notify_all();
+        self.space.notify_all();
     }
 }
 
 /// Handle to a running service. Dropping it shuts the workers down.
 pub struct Service {
-    tx: Option<mpsc::Sender<(JobSpec, Reply)>>,
+    queue: Arc<JobQueue>,
     workers: Vec<std::thread::JoinHandle<()>>,
     session: Arc<Session>,
     pub metrics: Arc<Metrics>,
@@ -113,6 +333,61 @@ impl Pending {
         self.rx
             .recv()
             .map_err(|_| anyhow::anyhow!("worker dropped job"))?
+    }
+}
+
+/// A batch submission that failed partway: the jobs submitted before
+/// the failing one are *not* lost (satellite fix — the old
+/// `collect::<Result<_>>` dropped their handles, leaving queued jobs
+/// running with unobservable results). Take them back with
+/// [`take_submitted`](BatchSubmitError::take_submitted) and wait them
+/// out (or drop them knowingly).
+pub struct BatchSubmitError {
+    /// Behind a mutex only to keep this type `Sync` (mpsc receivers are
+    /// not) so it can ride an `anyhow::Error`.
+    submitted: Mutex<Vec<Pending>>,
+    /// Index of the job whose submit failed.
+    pub index: usize,
+    source: anyhow::Error,
+}
+
+impl BatchSubmitError {
+    /// The handles submitted before the failure, in submission order.
+    /// Idempotent — the second call returns an empty vec.
+    pub fn take_submitted(&self) -> Vec<Pending> {
+        let mut guard = self.submitted.lock().unwrap_or_else(|poisoned| {
+            self.submitted.clear_poison();
+            poisoned.into_inner()
+        });
+        std::mem::take(&mut *guard)
+    }
+
+    /// The underlying submit error.
+    pub fn source_error(&self) -> &anyhow::Error {
+        &self.source
+    }
+}
+
+impl std::fmt::Debug for BatchSubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let pending = self.submitted.lock().map(|v| v.len()).unwrap_or(0);
+        f.debug_struct("BatchSubmitError")
+            .field("index", &self.index)
+            .field("pending_submitted", &pending)
+            .field("source", &self.source)
+            .finish()
+    }
+}
+
+impl std::fmt::Display for BatchSubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "batch submit failed at job {}: {:#}", self.index, self.source)
+    }
+}
+
+impl std::error::Error for BatchSubmitError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        Some(self.source.as_ref())
     }
 }
 
@@ -135,18 +410,24 @@ impl Service {
             builder = builder.artifact_dir(dir);
         }
         let session = builder.build()?;
-        Ok(Self::with_session(Arc::new(session), config.workers))
+        Ok(Self::with_session_depth(Arc::new(session), config.workers, config.queue_depth))
     }
 
     /// Spawn workers over an existing session (sharing its registry and
-    /// artifact store with other callers — CLI, DSE, other services).
+    /// artifact store with other callers — CLI, DSE, other services),
+    /// with the default queue bound.
     pub fn with_session(session: Arc<Session>, workers: usize) -> Self {
-        let (tx, rx) = mpsc::channel::<(JobSpec, Reply)>();
-        let rx = Arc::new(Mutex::new(rx));
+        Self::with_session_depth(session, workers, DEFAULT_QUEUE_DEPTH)
+    }
+
+    /// [`with_session`](Service::with_session) with an explicit queue
+    /// bound (`0` = unbounded).
+    pub fn with_session_depth(session: Arc<Session>, workers: usize, queue_depth: usize) -> Self {
+        let queue = Arc::new(JobQueue::new(queue_depth));
         let metrics = Arc::new(Metrics::default());
         let handles = (0..workers.max(1))
             .map(|_| {
-                let rx = Arc::clone(&rx);
+                let queue = Arc::clone(&queue);
                 let metrics = Arc::clone(&metrics);
                 let session = Arc::clone(&session);
                 std::thread::spawn(move || {
@@ -155,42 +436,111 @@ impl Service {
                     // across the worker's lifetime. A construction error
                     // fails the job (loudly) — there is no fallback.
                     let mut exec: Option<Box<dyn StepExecutor>> = None;
-                    loop {
-                        let item = { rx.lock().unwrap().recv() };
-                        let Ok((spec, reply)) = item else { break };
-                        let mut guard = CompletionGuard {
-                            metrics: &metrics,
-                            algo: spec.algorithm.clone(),
-                            armed: true,
-                        };
-                        let started = Instant::now();
-                        let result =
-                            Self::run_job(&session, &mut exec, &spec).map(|report| JobResult {
-                                wall_time_us: started.elapsed().as_micros() as u64,
-                                report,
-                            });
-                        guard.armed = false;
-                        match &result {
-                            Ok(r) => metrics.record_completion(
-                                guard.algo.as_str(),
-                                r.wall_time_us,
-                                r.report.counts.mvm_ops,
-                            ),
-                            Err(_) => metrics.record_failure(guard.algo.as_str()),
-                        }
-                        let _ = reply.send(result);
+                    while let Some(entry) = queue.pop() {
+                        Self::serve_entry(&session, &metrics, &mut exec, entry);
                     }
                 })
             })
             .collect();
-        Self { tx: Some(tx), workers: handles, session, metrics }
+        Self { queue, workers: handles, session, metrics }
+    }
+
+    /// Run one dequeued entry: shed expired riders, execute once behind
+    /// a panic guard, fan the result out to every surviving rider.
+    fn serve_entry(
+        session: &Session,
+        metrics: &Metrics,
+        exec: &mut Option<Box<dyn StepExecutor>>,
+        entry: QueueEntry,
+    ) {
+        let QueueEntry { spec, riders, .. } = entry;
+        let algo = spec.algorithm.as_str();
+        let dequeued = Instant::now();
+
+        // Load shedding: a rider whose deadline passed while queued gets
+        // a typed error instead of an executor. If *every* rider
+        // expired, the execution is skipped entirely.
+        let mut live = Vec::with_capacity(riders.len());
+        for r in riders {
+            match r.deadline {
+                Some(d) if d <= dequeued => {
+                    let waited_us =
+                        dequeued.saturating_duration_since(r.submitted_at).as_micros() as u64;
+                    metrics.record_shed(algo, waited_us);
+                    let _ = r.reply.send(Err(JobError::DeadlineExceeded { waited_us }.into()));
+                }
+                _ => live.push(r),
+            }
+        }
+        if live.is_empty() {
+            return;
+        }
+
+        // Panic isolation (satellite fix for worker death): a panicking
+        // job must cost the service one job, not one worker.
+        let outcome = catch_unwind(AssertUnwindSafe(|| Self::run_job(session, exec, &spec)));
+        let exec_us = dequeued.elapsed().as_micros() as u64;
+
+        match outcome {
+            Ok(Ok(report)) => {
+                let mut report = Some(report);
+                let n = live.len();
+                for (i, r) in live.into_iter().enumerate() {
+                    let queue_wait_us =
+                        dequeued.saturating_duration_since(r.submitted_at).as_micros() as u64;
+                    // Hardware work is counted once per *execution*: the
+                    // leader carries the ops, followers ride free — the
+                    // completed-vs-ops gap is the coalescing win.
+                    let ops = if r.coalesced { 0 } else { report.as_ref().unwrap().counts.mvm_ops };
+                    metrics.record_completion(algo, queue_wait_us, exec_us, ops);
+                    let rep = if i + 1 == n {
+                        report.take().unwrap()
+                    } else {
+                        report.as_ref().unwrap().clone()
+                    };
+                    let _ = r.reply.send(Ok(JobResult {
+                        report: rep,
+                        wall_time_us: queue_wait_us + exec_us,
+                        queue_wait_us,
+                        exec_us,
+                        coalesced: r.coalesced,
+                    }));
+                }
+            }
+            Ok(Err(err)) => {
+                let msg = format!("{err:#}");
+                let mut original = Some(err);
+                let n = live.len();
+                for r in live {
+                    metrics.record_failure(algo);
+                    // A lone rider gets the original error (downcastable
+                    // chain intact); fan-out riders get formatted copies.
+                    let e = if n == 1 {
+                        original.take().unwrap()
+                    } else {
+                        anyhow::anyhow!(msg.clone())
+                    };
+                    let _ = r.reply.send(Err(e));
+                }
+            }
+            Err(payload) => {
+                // Post-unwind executor state is suspect — rebuild lazily
+                // on the next job rather than trusting it.
+                *exec = None;
+                let msg = panic_message(payload);
+                for r in live {
+                    metrics.record_failure(algo);
+                    let _ = r.reply.send(Err(JobError::Panicked(msg.clone()).into()));
+                }
+            }
+        }
     }
 
     fn run_job(
         session: &Session,
         exec: &mut Option<Box<dyn StepExecutor>>,
         spec: &JobSpec,
-    ) -> Result<crate::accel::SimReport> {
+    ) -> Result<SimReport> {
         if exec.is_none() {
             *exec = Some(session.executor()?);
         }
@@ -227,29 +577,57 @@ impl Service {
     }
 
     /// Submit a job; returns a handle resolving when a worker completes
-    /// it.
+    /// it. Blocks while the queue is at `queue_depth` (backpressure);
+    /// identical queued jobs coalesce instead of queueing twice.
     pub fn submit(&self, job: impl Into<JobSpec>) -> Result<Pending> {
         let spec: JobSpec = job.into();
-        self.metrics.record_submitted(spec.algorithm.as_str());
+        // Fail-fast before anything is recorded: an invalid spec never
+        // occupies a slot and never skews the gauges.
+        spec.validate()?;
+        let algo = spec.algorithm.clone();
+        self.metrics.record_submitted(algo.as_str());
         let (tx, rx) = mpsc::channel();
-        let sender = self.tx.as_ref().expect("service running");
-        if let Err(mpsc::SendError((spec, _))) = sender.send((spec, tx)) {
-            // Balance the submit record so the gauges stay conserved.
-            self.metrics.record_failure(spec.algorithm.as_str());
-            anyhow::bail!("service stopped");
+        match self.queue.push(spec, tx, Instant::now()) {
+            Ok(Submitted::Queued) => Ok(Pending { rx }),
+            Ok(Submitted::Coalesced) => {
+                self.metrics.record_coalesced(algo.as_str());
+                Ok(Pending { rx })
+            }
+            Err(err) => {
+                // Balance the submit record so the gauges stay conserved.
+                self.metrics.record_failure(algo.as_str());
+                Err(err)
+            }
         }
-        Ok(Pending { rx })
     }
 
     /// Submit a batch of jobs in order; pending handles come back in the
     /// same order. The batch shares preprocessing through the session's
-    /// artifact store — one Alg.-1 run per distinct dataset key.
-    pub fn submit_batch<I>(&self, jobs: I) -> Result<Vec<Pending>>
+    /// artifact store — one Alg.-1 run per distinct dataset key — and
+    /// identical specs coalesce into one execution.
+    ///
+    /// On a mid-batch failure the already-submitted handles are returned
+    /// inside the [`BatchSubmitError`] — they are live jobs whose
+    /// results remain observable, not leaked work.
+    pub fn submit_batch<I>(&self, jobs: I) -> Result<Vec<Pending>, BatchSubmitError>
     where
         I: IntoIterator,
         I::Item: Into<JobSpec>,
     {
-        jobs.into_iter().map(|j| self.submit(j)).collect()
+        let mut submitted = Vec::new();
+        for (index, job) in jobs.into_iter().enumerate() {
+            match self.submit(job) {
+                Ok(p) => submitted.push(p),
+                Err(source) => {
+                    return Err(BatchSubmitError {
+                        submitted: Mutex::new(submitted),
+                        index,
+                        source,
+                    })
+                }
+            }
+        }
+        Ok(submitted)
     }
 
     /// Submit and wait.
@@ -260,10 +638,20 @@ impl Service {
 
 impl Drop for Service {
     fn drop(&mut self) {
-        self.tx.take(); // close queue; workers drain and exit
+        self.queue.close(); // workers drain the queue and exit
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
+    }
+}
+
+fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
     }
 }
 
@@ -271,6 +659,7 @@ impl Drop for Service {
 mod tests {
     use super::*;
     use crate::graph::datasets::Dataset;
+    use std::time::Duration;
 
     fn tiny_service(workers: usize) -> Service {
         Service::spawn(ServiceConfig { workers, ..ServiceConfig::default() }).unwrap()
@@ -284,11 +673,15 @@ mod tests {
             .unwrap();
         assert_eq!(res.report.algorithm, "bfs");
         assert!(res.report.counts.mvm_ops > 0);
+        assert!(!res.coalesced);
+        assert_eq!(res.wall_time_us, res.queue_wait_us + res.exec_us);
         let snap = svc.metrics.snapshot();
         assert_eq!(snap.jobs_completed, 1);
         assert_eq!(snap.jobs_failed, 0);
         assert_eq!(snap.per_algorithm["bfs"].completed, 1);
         assert_eq!(snap.per_algorithm["bfs"].queue_depth, 0);
+        assert_eq!(snap.per_algorithm["bfs"].execution.count, 1);
+        assert_eq!(snap.per_algorithm["bfs"].queue_wait.count, 1);
     }
 
     #[test]
@@ -325,6 +718,19 @@ mod tests {
         let snap = svc.metrics.snapshot();
         assert_eq!(snap.jobs_failed, 1);
         assert_eq!(snap.jobs_completed, 1);
+    }
+
+    #[test]
+    fn invalid_spec_rejected_before_queueing() {
+        let svc = tiny_service(1);
+        let err = svc
+            .submit(JobSpec::new(Dataset::Tiny, "bfs").with_scale(2.0))
+            .unwrap_err();
+        assert!(err.to_string().contains("scale"), "{err}");
+        // Nothing recorded — the spec never reached the queue.
+        let snap = svc.metrics.snapshot();
+        assert_eq!(snap.jobs_submitted, 0);
+        assert_eq!(snap.jobs_failed, 0);
     }
 
     #[test]
@@ -409,5 +815,84 @@ mod tests {
         let svc = tiny_service(2);
         svc.submit_blocking(JobSpec::new(Dataset::Tiny, "wcc")).unwrap();
         drop(svc); // must not hang
+    }
+
+    #[test]
+    fn generous_deadline_jobs_complete_normally() {
+        let svc = tiny_service(1);
+        let res = svc
+            .submit_blocking(
+                JobSpec::new(Dataset::Tiny, "bfs").with_deadline(Duration::from_secs(3600)),
+            )
+            .unwrap();
+        assert!(!res.coalesced);
+        let snap = svc.metrics.snapshot();
+        assert_eq!((snap.jobs_completed, snap.jobs_shed), (1, 0));
+    }
+
+    // -- queue-unit tests (no workers: poke the JobQueue directly) ------
+
+    fn entry_for(queue: &JobQueue, spec: JobSpec) -> Submitted {
+        let (tx, _rx) = mpsc::channel();
+        queue.push(spec, tx, Instant::now()).unwrap()
+    }
+
+    #[test]
+    fn queue_coalesces_identical_specs() {
+        let q = JobQueue::new(16);
+        assert!(matches!(entry_for(&q, JobSpec::new(Dataset::Tiny, "bfs")), Submitted::Queued));
+        assert!(matches!(
+            entry_for(&q, JobSpec::new(Dataset::Tiny, "bfs")),
+            Submitted::Coalesced
+        ));
+        // A different source is a different result — no coalescing.
+        assert!(matches!(
+            entry_for(&q, JobSpec::new(Dataset::Tiny, "bfs").with_source(7)),
+            Submitted::Queued
+        ));
+        let first = q.pop().unwrap();
+        assert_eq!(first.riders.len(), 2);
+        assert!(!first.riders[0].coalesced);
+        assert!(first.riders[1].coalesced);
+        let second = q.pop().unwrap();
+        assert_eq!(second.riders.len(), 1);
+    }
+
+    #[test]
+    fn queue_orders_priority_then_deadline_then_fifo() {
+        let q = JobQueue::new(16);
+        let d = Dataset::Tiny;
+        entry_for(&q, JobSpec::new(d, "bfs")); // seq 0, pri 0
+        entry_for(&q, JobSpec::new(d, "wcc").with_priority(5)); // pri 5
+        entry_for(&q, JobSpec::new(d, "sssp").with_deadline(Duration::from_secs(60))); // pri 0, deadlined
+        entry_for(&q, JobSpec::new(d, "pagerank")); // seq 3, pri 0
+        q.close();
+        let order: Vec<String> =
+            std::iter::from_fn(|| q.pop().map(|e| e.spec.algorithm.as_str().to_string()))
+                .collect();
+        // Highest priority first; then the deadlined entry beats the
+        // deadline-free ones; then FIFO.
+        assert_eq!(order, ["wcc", "sssp", "bfs", "pagerank"]);
+    }
+
+    #[test]
+    fn queue_promotes_entry_to_max_rider_priority() {
+        let q = JobQueue::new(16);
+        let d = Dataset::Tiny;
+        entry_for(&q, JobSpec::new(d, "wcc")); // pri 0
+        entry_for(&q, JobSpec::new(d, "bfs")); // pri 0, leader
+        entry_for(&q, JobSpec::new(d, "bfs").with_priority(9)); // follower promotes
+        q.close();
+        assert_eq!(q.pop().unwrap().spec.algorithm.as_str(), "bfs");
+        assert_eq!(q.pop().unwrap().spec.algorithm.as_str(), "wcc");
+    }
+
+    #[test]
+    fn queue_rejects_after_close() {
+        let q = JobQueue::new(16);
+        q.close();
+        let (tx, _rx) = mpsc::channel();
+        assert!(q.push(JobSpec::new(Dataset::Tiny, "bfs"), tx, Instant::now()).is_err());
+        assert!(q.pop().is_none());
     }
 }

@@ -3,7 +3,8 @@
 //! Subcommands map onto the paper's artifacts: `preprocess` (Alg. 1),
 //! `run` (Alg. 2 on a dataset/algorithm), `figure` (regenerate any
 //! table/figure of the evaluation), `dse` (best static split),
-//! `datasets` (Table 2), and `serve` (the leader/worker serving loop).
+//! `datasets` (Table 2), `serve` (the leader/worker serving loop), and
+//! `loadgen` (scripted open/closed-loop traffic studies against it).
 //!
 //! Every pipeline-building command is a thin adapter over
 //! [`Session`](repro::session::Session): one facade wires architecture,
@@ -16,7 +17,7 @@ use anyhow::Result;
 
 use repro::accel::{ArchConfig, PolicyKind};
 use repro::algo::reference;
-use repro::coordinator::Service;
+use repro::coordinator::{loadgen, LoadMode, LoadgenConfig, Service, ServiceConfig};
 use repro::graph::datasets::{Dataset, ALL_DATASETS};
 use repro::graph::{Csr, DeltaBatch, EdgeDelta, GraphStats};
 use repro::report::{figures, Table};
@@ -37,6 +38,11 @@ USAGE:
   repro datasets
   repro serve [--jobs N] [--workers N] [--backend native|pjrt]
               [--dataset DATASET] [--scale F] [arch options]
+  repro loadgen [--dataset DATASET] [--jobs N] [--workers N]
+                [--mode closed|open] [--concurrency C] [--rate R]
+                [--deadline-ms MS] [--queue-depth Q] [--sources S]
+                [--seed N] [--algo NAME] [--scale F] [--out FILE]
+                [arch options]
   repro artifacts warm <DATASET> --artifact-dir DIR [--algo NAME]
                   [--scale F] [--assert-warm] [arch options]
   repro artifacts ls --artifact-dir DIR
@@ -46,9 +52,21 @@ USAGE:
 Algorithms are session-registry entries (bfs sssp pagerank wcc built in;
 library users register more — no CLI change needed). `serve` submits one
 mixed batch cycling through every registered algorithm and prints
-per-algorithm completion counters and queue depths on shutdown. Both
-`run` and `serve` honor --backend; a PJRT selection without artifacts
-fails loudly instead of falling back to native.
+per-algorithm completion/shed/coalesced counters, queue depths, and
+split queue-wait vs execution latency percentiles (p50/p99/p999) on
+shutdown. Both `run` and `serve` honor --backend; a PJRT selection
+without artifacts fails loudly instead of falling back to native.
+
+`loadgen` replays a deterministic seeded mixed-algorithm trace against
+a fresh service in open-loop (--mode open --rate R jobs/s, arrivals
+independent of completions — the overload view) or closed-loop
+(--mode closed --concurrency C virtual clients — the throughput view),
+optionally with a per-job deadline budget (--deadline-ms, expired jobs
+are load-shed and counted) and a bounded queue (--queue-depth, submit
+blocks when full). --sources 1 makes every job of an algorithm
+identical — maximum request-coalescing pressure. The scenario report
+(throughput, shed/coalesced counts, latency percentiles) prints and
+lands as JSON at --out (default BENCH_serve.json).
 
 Every pipeline command accepts --artifact-dir DIR: preprocessed
 artifacts — including the compiled execution plan — are serialized
@@ -157,6 +175,7 @@ fn main() -> Result<()> {
         "dse" => cmd_dse(&args),
         "datasets" => cmd_datasets(),
         "serve" => cmd_serve(&args),
+        "loadgen" => cmd_loadgen(&args),
         "artifacts" => cmd_artifacts(&args),
         "mutate" => cmd_mutate(&args),
         _ => {
@@ -523,6 +542,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         fmt::count(s.subgraph_ops)
     );
     println!(
+        "shed {} (expired deadlines), coalesced {} (shared executions)",
+        s.jobs_shed, s.jobs_coalesced
+    );
+    println!("queue-wait {}", s.queue_wait.render());
+    println!("execution  {}", s.execution.render());
+    println!(
         "artifact cache: {} preprocessing runs, {} hits, {} disk hits, {} disk writes, {} entries",
         cache.misses, cache.hits, cache.disk_hits, cache.writes, cache.entries
     );
@@ -531,9 +556,71 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     for (algo, st) in &s.per_algorithm {
         println!(
-            "  {algo:>9}: {} completed, {} failed, queue depth {}",
-            st.completed, st.failed, st.queue_depth
+            "  {algo:>9}: {} completed, {} failed, {} shed, {} coalesced, queue depth {} \
+             | wait p50/p99/p999 {}/{}/{} µs | exec p50/p99/p999 {}/{}/{} µs",
+            st.completed,
+            st.failed,
+            st.shed,
+            st.coalesced,
+            st.queue_depth,
+            st.queue_wait.p50_us,
+            st.queue_wait.p99_us,
+            st.queue_wait.p999_us,
+            st.execution.p50_us,
+            st.execution.p99_us,
+            st.execution.p999_us,
         );
     }
+    Ok(())
+}
+
+/// Drive a scripted open/closed-loop traffic study against a fresh
+/// service and write the scenario report as `BENCH_serve.json` rows.
+fn cmd_loadgen(args: &Args) -> Result<()> {
+    let dataset_s: String = args.get_or("dataset", "TN".to_string())?;
+    let d = parse_dataset(&dataset_s)?;
+    let mode_s: String = args.get_or("mode", "closed".to_string())?;
+    let mode = match mode_s.as_str() {
+        "closed" => LoadMode::Closed { concurrency: args.get_or("concurrency", 4usize)? },
+        "open" => LoadMode::Open { rate_per_s: args.get_or("rate", 500.0f64)? },
+        other => anyhow::bail!("unknown --mode {other:?} (closed|open)"),
+    };
+    let backend_s: String = args.get_or("backend", "native".to_string())?;
+
+    let mut cfg = ServiceConfig {
+        arch: arch_from(args)?,
+        backend: Backend::parse(&backend_s)?,
+        workers: args.get_or("workers", 2usize)?,
+        parallelism: args.get_or("threads", 1usize)?,
+        queue_depth: args.get_or("queue-depth", repro::coordinator::DEFAULT_QUEUE_DEPTH)?,
+        ..ServiceConfig::default()
+    };
+    if let Some(dir) = args.get_path("artifact-dir") {
+        cfg.artifact_dir = Some(dir);
+    }
+    let svc = Service::spawn(cfg)?;
+
+    let lg = LoadgenConfig {
+        name: format!("{}-{}", dataset_s.to_lowercase(), mode_s),
+        dataset: d,
+        scale: scale_for(d, args)?,
+        jobs: args.get_or("jobs", 64usize)?,
+        mode,
+        deadline: args
+            .get_parsed::<u64>("deadline-ms")?
+            .map(std::time::Duration::from_millis),
+        algorithms: args.get("algo").map(|a| vec![a.to_string()]).unwrap_or_default(),
+        iterations: args.get_or("iterations", 5usize)?,
+        sources: args.get_or("sources", 8u32)?,
+        seed: args.get_or("seed", 42u64)?,
+    };
+    let report = loadgen::run(&svc, &lg)?;
+    println!("{}", report.render());
+
+    let out = args
+        .get_path("out")
+        .unwrap_or_else(|| std::path::PathBuf::from("BENCH_serve.json"));
+    loadgen::write_json(&out, &[report])?;
+    println!("wrote {}", out.display());
     Ok(())
 }

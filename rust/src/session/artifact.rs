@@ -100,7 +100,8 @@ pub struct ArtifactKey {
 
 /// The fixed-point (microunit) image of a scale factor — the form in
 /// which scale participates in key identity. Shared with the session's
-/// delta log so "same scale" means the same thing in both maps.
+/// delta log and the serve queue's `CoalesceKey` so "same scale" means
+/// the same thing in every map that keys on it.
 pub(crate) fn scale_micro(scale: f64) -> u64 {
     // .max(1): a denormal-small scale must stay a loadable key.
     ((scale * 1e6).round() as u64).max(1)

@@ -7,10 +7,14 @@
 //! the session's registry, and per-algorithm knobs ride in one open
 //! [`AlgoParams`] bag.
 
+use std::time::Duration;
+
 use anyhow::Result;
 
 use crate::algo::registry::{AlgoParams, AlgorithmId};
 use crate::graph::datasets::Dataset;
+
+use super::artifact::scale_micro;
 
 /// A graph-processing request: which input, at which scale, through which
 /// registered algorithm, with which parameters.
@@ -26,6 +30,36 @@ pub struct JobSpec {
     /// thread). Purely a throughput knob — results are bit-identical for
     /// every setting.
     pub parallelism: Option<usize>,
+    /// Dequeue priority: higher runs first within the serve queue
+    /// (default 0; ties break earliest-deadline, then FIFO). Scheduling
+    /// only — never part of the result or the coalesce identity.
+    pub priority: i8,
+    /// Optional latency budget, measured from `Service::submit`. A job
+    /// still queued when its deadline passes is load-shed at dequeue
+    /// (typed `JobError::DeadlineExceeded`) instead of wasting an
+    /// executor on an answer nobody is waiting for. `None` = run
+    /// whenever.
+    pub deadline: Option<Duration>,
+}
+
+/// The result-identity of a [`JobSpec`]: two specs with equal keys are
+/// guaranteed — by the determinism contract (see ROADMAP standing
+/// invariants) — to produce bit-identical `SimReport`s, so the serve
+/// queue lets them share one execution (request coalescing).
+///
+/// Deliberately *excludes* `parallelism` (a pure throughput knob —
+/// results are bit-identical for every lane count), `priority`, and
+/// `deadline` (scheduling inputs, not result inputs). Scale enters in
+/// the same fixed-point microunit image the `ArtifactKey` uses, so
+/// "same scale" means the same thing at both cache levels.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct CoalesceKey {
+    dataset: Dataset,
+    scale_micro: u64,
+    algorithm: AlgorithmId,
+    source: u32,
+    iterations: usize,
+    damping_bits: u32,
 }
 
 impl JobSpec {
@@ -37,6 +71,8 @@ impl JobSpec {
             algorithm: algorithm.into(),
             params: AlgoParams::default(),
             parallelism: None,
+            priority: 0,
+            deadline: None,
         }
     }
 
@@ -71,6 +107,33 @@ impl JobSpec {
         self
     }
 
+    /// Dequeue priority (higher first; default 0).
+    pub fn with_priority(mut self, priority: i8) -> Self {
+        self.priority = priority;
+        self
+    }
+
+    /// Latency budget measured from submission; expired jobs are shed.
+    pub fn with_deadline(mut self, deadline: Duration) -> Self {
+        self.deadline = Some(deadline);
+        self
+    }
+
+    /// The result-identity this spec coalesces under (see
+    /// [`CoalesceKey`]).
+    pub fn coalesce_key(&self) -> CoalesceKey {
+        CoalesceKey {
+            dataset: self.dataset,
+            scale_micro: scale_micro(self.scale),
+            algorithm: self.algorithm.clone(),
+            source: self.params.source,
+            iterations: self.params.iterations,
+            // f32 is not Hash/Eq; the bit image is (NaN damping never
+            // coalesces with anything but the same NaN bits — fine).
+            damping_bits: self.params.damping.to_bits(),
+        }
+    }
+
     /// Spec-level validation (algorithm existence and parameter checks
     /// happen against the session's registry at run time).
     pub fn validate(&self) -> Result<()> {
@@ -94,8 +157,15 @@ mod tests {
         assert_eq!(s.scale, 0.5);
         assert_eq!(s.params.source, 3);
         assert_eq!(s.parallelism, None);
+        assert_eq!(s.priority, 0);
+        assert_eq!(s.deadline, None);
         assert!(s.validate().is_ok());
-        assert_eq!(s.with_parallelism(4).parallelism, Some(4));
+        assert_eq!(s.clone().with_parallelism(4).parallelism, Some(4));
+        assert_eq!(s.clone().with_priority(7).priority, 7);
+        assert_eq!(
+            s.with_deadline(Duration::from_millis(5)).deadline,
+            Some(Duration::from_millis(5))
+        );
     }
 
     #[test]
@@ -103,5 +173,29 @@ mod tests {
         assert!(JobSpec::new(Dataset::Tiny, "bfs").with_scale(0.0).validate().is_err());
         assert!(JobSpec::new(Dataset::Tiny, "bfs").with_scale(1.5).validate().is_err());
         assert!(JobSpec::new(Dataset::Tiny, "bfs").with_scale(f64::NAN).validate().is_err());
+    }
+
+    #[test]
+    fn coalesce_key_tracks_result_identity_only() {
+        let base = || JobSpec::new(Dataset::Tiny, "bfs").with_source(3);
+        assert_eq!(base().coalesce_key(), base().coalesce_key());
+        // Scheduling knobs don't change the key...
+        assert_eq!(
+            base().coalesce_key(),
+            base()
+                .with_parallelism(8)
+                .with_priority(5)
+                .with_deadline(Duration::from_secs(1))
+                .coalesce_key()
+        );
+        // ...result-determining inputs do.
+        assert_ne!(base().coalesce_key(), base().with_source(4).coalesce_key());
+        assert_ne!(base().coalesce_key(), base().with_scale(0.5).coalesce_key());
+        assert_ne!(base().coalesce_key(), base().with_iterations(9).coalesce_key());
+        assert_ne!(base().coalesce_key(), base().with_damping(0.9).coalesce_key());
+        assert_ne!(
+            base().coalesce_key(),
+            JobSpec::new(Dataset::Tiny, "sssp").with_source(3).coalesce_key()
+        );
     }
 }

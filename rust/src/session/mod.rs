@@ -75,7 +75,7 @@ mod job;
 mod store;
 
 pub use artifact::{ArtifactKey, ArtifactStats, ArtifactStore, CompileFn};
-pub use job::JobSpec;
+pub use job::{CoalesceKey, JobSpec};
 pub use store::{DeltaProvenance, DiskStore, StoreError, FORMAT_VERSION, SCHEMA_VERSION};
 
 pub use crate::algo::registry::{AlgoParams, AlgorithmId, AlgorithmRegistry, BoxedProgram};

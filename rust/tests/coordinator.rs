@@ -29,6 +29,7 @@ fn service(workers: usize) -> Service {
         parallelism: default_threads(),
         preprocess_parallelism: None,
         artifact_dir: None,
+        queue_depth: repro::coordinator::DEFAULT_QUEUE_DEPTH,
     })
     .unwrap()
 }

@@ -1,0 +1,398 @@
+//! Integration suite for the hardened serve queue: panic isolation,
+//! request coalescing (bit-identity + the execution-count proof),
+//! deadline load-shedding, priority ordering, bounded-queue
+//! backpressure, batch-submit handle recovery, and the metrics
+//! conservation invariant `submitted == completed + failed + shed`
+//! under hostile randomized bursts.
+//!
+//! The instruments are registry entries, not mocks of the service:
+//! a `gate` program that parks the worker on a barrier mid-execution
+//! (so the test controls exactly what is queued behind it), a `count`
+//! program whose factory counts instantiations (executions, not
+//! completions — the coalescing discriminator), order-recording `lo`/
+//! `hi` programs, and a `boom` factory that panics. All of them
+//! delegate the actual graph work to the builtin BFS program, so every
+//! result stays reference-checked by the rest of the suite.
+
+mod common;
+use common::default_threads;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Barrier, Mutex};
+use std::time::Duration;
+
+use repro::algo::{AlgoParams, AlgorithmRegistry, Bfs, BoxedProgram, Semiring, StepKind, VertexProgram};
+use repro::coordinator::{JobError, LatencySummary, Service};
+use repro::graph::datasets::Dataset;
+use repro::session::{JobSpec, Session};
+use repro::util::SplitMix64;
+
+/// BFS that parks the executing worker on a shared barrier at `init`
+/// time. The test thread releases it with `gate.wait()` — until then
+/// the worker is provably mid-execution and everything submitted after
+/// it is provably queued.
+struct GateBfs {
+    inner: Bfs,
+    gate: Arc<Barrier>,
+}
+
+impl VertexProgram for GateBfs {
+    fn name(&self) -> &'static str {
+        "gate-bfs"
+    }
+
+    fn semiring(&self) -> Semiring {
+        self.inner.semiring()
+    }
+
+    fn step_kind(&self) -> StepKind {
+        self.inner.step_kind()
+    }
+
+    fn init(&self, num_vertices: u32) -> Vec<f32> {
+        self.gate.wait();
+        self.inner.init(num_vertices)
+    }
+
+    fn apply(&self, old: f32, reduced: f32) -> f32 {
+        self.inner.apply(old, reduced)
+    }
+}
+
+struct Harness {
+    svc: Service,
+    /// Executions of the `count` program (factory instantiations).
+    runs: Arc<AtomicU64>,
+    /// Two-party barrier shared with the `gate` program.
+    gate: Arc<Barrier>,
+    /// Execution order of the `lo`/`hi` programs.
+    order: Arc<Mutex<Vec<&'static str>>>,
+}
+
+fn harness(workers: usize, queue_depth: usize) -> Harness {
+    let runs = Arc::new(AtomicU64::new(0));
+    let gate = Arc::new(Barrier::new(2));
+    let order = Arc::new(Mutex::new(Vec::new()));
+
+    let mut reg = AlgorithmRegistry::with_builtins();
+    reg.register("boom", |_: &AlgoParams| -> anyhow::Result<BoxedProgram> {
+        panic!("boom: injected test panic")
+    });
+    {
+        let runs = Arc::clone(&runs);
+        reg.register("count", move |p: &AlgoParams| -> anyhow::Result<BoxedProgram> {
+            runs.fetch_add(1, Ordering::SeqCst);
+            Ok(Box::new(Bfs::new(p.source)))
+        });
+    }
+    {
+        let gate = Arc::clone(&gate);
+        reg.register("gate", move |p: &AlgoParams| -> anyhow::Result<BoxedProgram> {
+            Ok(Box::new(GateBfs { inner: Bfs::new(p.source), gate: Arc::clone(&gate) }))
+        });
+    }
+    for name in ["lo", "hi"] {
+        let order = Arc::clone(&order);
+        reg.register(name, move |p: &AlgoParams| -> anyhow::Result<BoxedProgram> {
+            order.lock().unwrap().push(name);
+            Ok(Box::new(Bfs::new(p.source)))
+        });
+    }
+
+    let session = Session::builder()
+        .registry(reg)
+        .parallelism(default_threads())
+        .build()
+        .unwrap();
+    let svc = Service::with_session_depth(Arc::new(session), workers, queue_depth);
+    Harness { svc, runs, gate, order }
+}
+
+#[test]
+fn panicking_job_costs_one_job_not_one_worker() {
+    // The original bug: a panicking job killed its worker thread; at
+    // workers=1 the service then hung forever. Now the panic is caught,
+    // typed, and the same single worker keeps serving — twice over, so
+    // the post-panic executor rebuild is exercised repeatedly.
+    let h = harness(1, 0);
+    for round in 0..2 {
+        let err = h
+            .svc
+            .submit_blocking(JobSpec::new(Dataset::Tiny, "boom"))
+            .unwrap_err();
+        match err.downcast_ref::<JobError>() {
+            Some(JobError::Panicked(msg)) => {
+                assert!(msg.contains("boom"), "round {round}: payload lost: {msg}")
+            }
+            other => panic!("round {round}: expected Panicked, got {other:?} ({err:#})"),
+        }
+        let res = h.svc.submit_blocking(JobSpec::new(Dataset::Tiny, "bfs")).unwrap();
+        assert_eq!(res.report.algorithm, "bfs", "round {round}");
+        assert!(res.report.counts.mvm_ops > 0, "round {round}");
+    }
+    let snap = h.svc.snapshot();
+    assert_eq!(snap.jobs_submitted, 4);
+    assert_eq!((snap.jobs_completed, snap.jobs_failed, snap.jobs_shed), (2, 2, 0));
+    assert_eq!(snap.per_algorithm["boom"].failed, 2);
+    assert!(snap.per_algorithm.values().all(|s| s.queue_depth == 0));
+}
+
+#[test]
+fn queued_duplicates_share_one_execution_bit_identically() {
+    // Four identical specs queued behind the gate must produce ONE
+    // factory instantiation (one execution) and four bit-identical
+    // results, three of them marked coalesced.
+    let h = harness(1, 0);
+    let gate_pending = h.svc.submit(JobSpec::new(Dataset::Tiny, "gate")).unwrap();
+    let dup = || JobSpec::new(Dataset::Tiny, "count").with_source(1);
+    let pending: Vec<_> = (0..4).map(|_| h.svc.submit(dup()).unwrap()).collect();
+    h.gate.wait(); // release the worker
+    gate_pending.wait().unwrap();
+    let results: Vec<_> = pending.into_iter().map(|p| p.wait().unwrap()).collect();
+
+    assert_eq!(h.runs.load(Ordering::SeqCst), 1, "one execution must serve all four");
+    assert_eq!(
+        results.iter().filter(|r| !r.coalesced).count(),
+        1,
+        "exactly one leader among the four"
+    );
+    let first = &results[0].report;
+    for (i, r) in results.iter().enumerate() {
+        assert_eq!(
+            r.report.run.as_ref().unwrap().values,
+            first.run.as_ref().unwrap().values,
+            "rider {i}: values diverge"
+        );
+        assert_eq!(r.report.counts, first.counts, "rider {i}: counts diverge");
+        assert_eq!(r.report.exec_time_ns, first.exec_time_ns, "rider {i}: time diverges");
+        assert_eq!(r.wall_time_us, r.queue_wait_us + r.exec_us, "rider {i}: latency split");
+    }
+
+    let snap = h.svc.snapshot();
+    assert_eq!(snap.jobs_completed, 5, "gate + all four riders complete");
+    assert_eq!(snap.jobs_coalesced, 3);
+    assert_eq!(snap.per_algorithm["count"].completed, 4);
+    assert_eq!(snap.per_algorithm["count"].coalesced, 3);
+    assert!(snap.per_algorithm.values().all(|s| s.queue_depth == 0));
+    // gate + count both map to the unweighted Tiny artifact: one Alg.-1
+    // run total, so the coalesced jobs added zero preprocessing too.
+    assert_eq!(h.svc.session().artifacts().stats().misses, 1);
+}
+
+#[test]
+fn expired_deadline_jobs_are_shed_without_executing() {
+    let h = harness(1, 0);
+    let gate_pending = h.svc.submit(JobSpec::new(Dataset::Tiny, "gate")).unwrap();
+    // Zero budget: already expired by the time the worker can dequeue it.
+    let doomed = h
+        .svc
+        .submit(
+            JobSpec::new(Dataset::Tiny, "count")
+                .with_source(2)
+                .with_deadline(Duration::ZERO),
+        )
+        .unwrap();
+    h.gate.wait();
+    gate_pending.wait().unwrap();
+
+    let err = doomed.wait().unwrap_err();
+    match err.downcast_ref::<JobError>() {
+        Some(JobError::DeadlineExceeded { .. }) => {}
+        other => panic!("expected DeadlineExceeded, got {other:?} ({err:#})"),
+    }
+    assert_eq!(h.runs.load(Ordering::SeqCst), 0, "shed job must never execute");
+
+    let snap = h.svc.snapshot();
+    assert_eq!(snap.jobs_submitted, 2);
+    assert_eq!((snap.jobs_completed, snap.jobs_failed, snap.jobs_shed), (1, 0, 1));
+    let count = &snap.per_algorithm["count"];
+    assert_eq!(count.shed, 1);
+    assert_eq!(count.queue_wait.count, 1, "shed jobs still report their queue wait");
+    assert_eq!(count.execution.count, 0, "…but no execution sample");
+    assert!(snap.per_algorithm.values().all(|s| s.queue_depth == 0));
+}
+
+#[test]
+fn higher_priority_jobs_dequeue_first() {
+    // Submission order lo-then-hi, execution order hi-then-lo: the
+    // queue is ordered, not FIFO, once priorities differ.
+    let h = harness(1, 0);
+    let gate_pending = h.svc.submit(JobSpec::new(Dataset::Tiny, "gate")).unwrap();
+    let lo = h.svc.submit(JobSpec::new(Dataset::Tiny, "lo")).unwrap();
+    let hi = h.svc.submit(JobSpec::new(Dataset::Tiny, "hi").with_priority(5)).unwrap();
+    h.gate.wait();
+    gate_pending.wait().unwrap();
+    lo.wait().unwrap();
+    hi.wait().unwrap();
+    assert_eq!(*h.order.lock().unwrap(), ["hi", "lo"]);
+}
+
+#[test]
+fn coalesced_followers_bypass_the_queue_bound() {
+    // queue_depth=1 and the single worker parked: the one slot is taken
+    // by the leader, yet three identical followers still submit without
+    // blocking — coalesced riders never occupy a slot. (If they did,
+    // this test would deadlock, not merely fail.)
+    let h = harness(1, 1);
+    let gate_pending = h.svc.submit(JobSpec::new(Dataset::Tiny, "gate")).unwrap();
+    let dup = || JobSpec::new(Dataset::Tiny, "count").with_source(5);
+    let leader = h.svc.submit(dup()).unwrap();
+    let followers: Vec<_> = (0..3).map(|_| h.svc.submit(dup()).unwrap()).collect();
+    h.gate.wait();
+    gate_pending.wait().unwrap();
+    leader.wait().unwrap();
+    for f in followers {
+        f.wait().unwrap();
+    }
+    assert_eq!(h.runs.load(Ordering::SeqCst), 1);
+    let snap = h.svc.snapshot();
+    assert_eq!(snap.jobs_coalesced, 3);
+    assert_eq!(snap.jobs_completed, 5);
+}
+
+#[test]
+fn bounded_queue_backpressures_submitters_without_deadlock() {
+    // Eight distinct jobs through a depth-1 queue and one worker: every
+    // submit after the first blocks until the worker frees the slot.
+    // The run completing at all proves the space-condvar handshake;
+    // the counters prove nothing was dropped on the way.
+    let h = harness(1, 1);
+    let specs: Vec<_> =
+        (0..8u32).map(|i| JobSpec::new(Dataset::Tiny, "bfs").with_source(i)).collect();
+    std::thread::scope(|scope| {
+        let svc = &h.svc;
+        let submitter =
+            scope.spawn(move || specs.into_iter().map(|s| svc.submit(s).unwrap()).collect::<Vec<_>>());
+        for p in submitter.join().unwrap() {
+            p.wait().unwrap();
+        }
+    });
+    let snap = h.svc.snapshot();
+    assert_eq!(snap.jobs_submitted, 8);
+    assert_eq!(snap.jobs_completed, 8);
+}
+
+#[test]
+fn failed_batch_submit_returns_live_handles() {
+    // The original bug: a mid-batch submit failure dropped the handles
+    // of already-queued jobs — live executions with unobservable
+    // results. Now they come back inside the error.
+    let h = harness(1, 0);
+    let batch = vec![
+        JobSpec::new(Dataset::Tiny, "bfs"),
+        JobSpec::new(Dataset::Tiny, "bfs").with_scale(2.0), // invalid: scale > 1
+        JobSpec::new(Dataset::Tiny, "wcc"),
+    ];
+    let err = h.svc.submit_batch(batch).err().expect("batch must fail at the invalid spec");
+    assert_eq!(err.index, 1);
+    assert!(format!("{err}").contains("scale"), "error must surface the cause: {err}");
+
+    let handles = err.take_submitted();
+    assert_eq!(handles.len(), 1, "job 0 was already queued and must come back");
+    assert!(err.take_submitted().is_empty(), "take_submitted is idempotent");
+    let res = handles.into_iter().next().unwrap().wait().unwrap();
+    assert_eq!(res.report.algorithm, "bfs");
+
+    // The invalid spec was rejected before any recording; the metrics
+    // see exactly one job, completed.
+    let snap = h.svc.snapshot();
+    assert_eq!((snap.jobs_submitted, snap.jobs_completed, snap.jobs_failed), (1, 1, 0));
+}
+
+#[test]
+fn metrics_conserve_under_hostile_mixed_bursts() {
+    // Property: submitted == completed + failed + shed — globally and
+    // per algorithm — across random mixes of healthy jobs, duplicates
+    // (coalescing), unknown algorithms (failures), panicking jobs
+    // (caught failures) and zero-deadline jobs (sheds), at random
+    // worker counts.
+    let algos = ["bfs", "wcc", "nope", "count", "boom", "sssp"];
+    for seed in 0..5u64 {
+        let mut rng = SplitMix64::new(seed);
+        let workers = 1 + rng.next_index(4);
+        let h = harness(workers, 0);
+        let njobs = 6 + rng.next_index(18);
+        let pending: Vec<_> = (0..njobs)
+            .map(|_| {
+                let mut spec = JobSpec::new(Dataset::Tiny, algos[rng.next_index(algos.len())])
+                    .with_source(rng.next_index(3) as u32)
+                    .with_iterations(3);
+                if rng.next_bool(0.25) {
+                    // Already expired at submit: guaranteed shed.
+                    spec = spec.with_deadline(Duration::ZERO);
+                }
+                if rng.next_bool(0.3) {
+                    spec = spec.with_priority(rng.next_index(5) as i8);
+                }
+                h.svc.submit(spec).unwrap()
+            })
+            .collect();
+        let mut completed = 0u64;
+        for p in pending {
+            if p.wait().is_ok() {
+                completed += 1;
+            }
+        }
+        let snap = h.svc.snapshot();
+        assert_eq!(snap.jobs_submitted, njobs as u64, "seed {seed}");
+        assert_eq!(snap.jobs_completed, completed, "seed {seed}");
+        assert_eq!(
+            snap.jobs_completed + snap.jobs_failed + snap.jobs_shed,
+            njobs as u64,
+            "seed {seed}: conservation"
+        );
+        let per: u64 =
+            snap.per_algorithm.values().map(|s| s.completed + s.failed + s.shed).sum();
+        assert_eq!(per, njobs as u64, "seed {seed}: per-algo conservation");
+        assert!(
+            snap.per_algorithm.values().all(|s| s.queue_depth == 0),
+            "seed {seed}: in-flight gauge must drain: {:?}",
+            snap.per_algorithm
+        );
+        // Histogram conservation: completions and sheds each leave a
+        // queue-wait sample; only completions leave an execution sample.
+        assert_eq!(
+            snap.queue_wait.count,
+            snap.jobs_completed + snap.jobs_shed,
+            "seed {seed}: queue-wait samples"
+        );
+        assert_eq!(snap.execution.count, snap.jobs_completed, "seed {seed}: execution samples");
+    }
+}
+
+#[test]
+fn latency_percentiles_are_monotone_and_bounded() {
+    let h = harness(2, 0);
+    let mix = ["bfs", "wcc", "pagerank", "sssp"];
+    let pending: Vec<_> = (0..24)
+        .map(|i| {
+            h.svc
+                .submit(
+                    JobSpec::new(Dataset::Tiny, mix[i % mix.len()])
+                        .with_source((i / mix.len()) as u32)
+                        .with_iterations(3),
+                )
+                .unwrap()
+        })
+        .collect();
+    for p in pending {
+        p.wait().unwrap();
+    }
+    let snap = h.svc.snapshot();
+    assert_eq!(snap.jobs_completed, 24);
+
+    fn check(s: &LatencySummary, what: &str) {
+        assert!(s.count > 0, "{what}: no samples");
+        assert!(s.p50_us <= s.p99_us, "{what}: p50 {} > p99 {}", s.p50_us, s.p99_us);
+        assert!(s.p99_us <= s.p999_us, "{what}: p99 {} > p999 {}", s.p99_us, s.p999_us);
+        assert!(s.p999_us <= s.max_us, "{what}: p999 {} > max {}", s.p999_us, s.max_us);
+        assert!(s.mean_us <= s.max_us as f64, "{what}: mean {} > max {}", s.mean_us, s.max_us);
+    }
+    check(&snap.queue_wait, "global queue-wait");
+    check(&snap.execution, "global execution");
+    for (algo, st) in &snap.per_algorithm {
+        check(&st.queue_wait, &format!("{algo} queue-wait"));
+        check(&st.execution, &format!("{algo} execution"));
+        assert_eq!(st.execution.count, st.completed, "{algo}: one execution sample per completion");
+    }
+}
