@@ -152,6 +152,51 @@ fn main() {
         sp4s.as_secs_f64() / sp4p.as_secs_f64(),
     );
 
+    // Sharded scale-out: the same workload decomposed across 4 simulated
+    // accelerators running lockstep supersteps with cross-shard frontier
+    // exchange (bit-identical result — tests/shard.rs). shards=1 routes
+    // through the exchange entry point but delegates to the single-plan
+    // path, so the pair isolates the exchange layer's own cost; the
+    // pooled row is the serve-fleet shape (one persistent pool per
+    // shard from the session free list).
+    let sharded = acc.preprocess_sharded(&g, false, 4, None).unwrap();
+    let refs: Vec<&_> = sharded.iter().collect();
+    let one_shard = acc.preprocess_sharded(&g, false, 1, None).unwrap();
+    let one_ref: Vec<&_> = one_shard.iter().collect();
+    let sh1 = b
+        .run("interpret: BFS shards=1 threads=4", || {
+            black_box(acc.run_sharded(&one_ref, &Bfs::new(0), &mut NativeExecutor, 4).unwrap())
+        })
+        .mean;
+    b.annotate_throughput(edges, bfs_steps);
+    let sh4 = b
+        .run("interpret: BFS shards=4 threads=4", || {
+            black_box(acc.run_sharded(&refs, &Bfs::new(0), &mut NativeExecutor, 4).unwrap())
+        })
+        .mean;
+    b.annotate_throughput(edges, bfs_steps);
+    let mut shard_pools: Vec<WorkerPool> = (0..4).map(|_| WorkerPool::new(4)).collect();
+    let sh4p = b
+        .run("interpret: BFS shards=4 threads=4 pooled", || {
+            black_box(
+                acc.run_sharded_pooled(
+                    &refs,
+                    &Bfs::new(0),
+                    &mut NativeExecutor,
+                    &mut shard_pools,
+                    4,
+                )
+                .unwrap(),
+            )
+        })
+        .mean;
+    b.annotate_throughput(edges, bfs_steps);
+    println!(
+        "  -> 4-shard exchange {:.2}x vs shards=1 (pooled {:.2}x; overhead is the scale-out tax one box pays to rehearse a fleet)",
+        sh1.as_secs_f64() / sh4.as_secs_f64(),
+        sh1.as_secs_f64() / sh4p.as_secs_f64(),
+    );
+
     // Native executor alone on a big batch.
     let part = partition(&g, 4, false);
     let exec_plan = ExecutionPlan::from_partitioned(&part);

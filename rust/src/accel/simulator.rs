@@ -217,6 +217,151 @@ impl Accelerator {
         Ok((Preprocessed { part, ranking, ct, st, plan }, timing))
     }
 
+    /// Sharded Alg. 1: split `graph` by contiguous block rows
+    /// ([`graph::shard::split`](crate::graph::shard::split)) and compile
+    /// one [`Preprocessed`] per shard under a **global** pattern ranking
+    /// — per-shard occurrence counts merge shard-ascending into one
+    /// ranking/config table (the chunk-merge determinism rule applied at
+    /// shard granularity), then each shard builds its own subgraph table
+    /// and execution plan. Every shard artifact therefore carries the
+    /// same rank→pattern map and static configuration, which is what
+    /// [`ShardPlans`](crate::sched::ShardPlans) validates before a
+    /// sharded run. `shards <= 1` delegates to
+    /// [`preprocess_timed`](Self::preprocess_timed), so a 1-shard
+    /// compile is whole-struct-equal to the unsharded compile.
+    ///
+    /// Per-shard timings cover that shard's partition / count / ST+plan
+    /// phases; the two global phases (ranking finalize, config table)
+    /// are accounted to shard 0.
+    pub fn preprocess_sharded_timed(
+        &self,
+        graph: &Coo,
+        weighted: bool,
+        shards: usize,
+        mut pool: Option<&mut WorkerPool>,
+    ) -> Result<Vec<(Preprocessed, PreprocessTiming)>> {
+        if shards <= 1 {
+            return Ok(vec![self.preprocess_timed(graph, weighted, pool.take())?]);
+        }
+        self.config.validate()?;
+        let shard_graphs =
+            crate::graph::shard::split(graph, self.config.crossbar_size, shards);
+        self.preprocess_shard_graphs_timed(&shard_graphs, weighted, pool)
+    }
+
+    /// Compile an already-bucketed shard set — the streaming path: a
+    /// [`Sharder`](crate::graph::shard::Sharder) fed by
+    /// [`rmat_stream`](crate::graph::generator::rmat_stream) (or any
+    /// edge source) hands its `ShardGraph`s straight here, so the global
+    /// edge list is never materialized in one `Vec`. Identical merge
+    /// discipline to [`preprocess_sharded_timed`](Self::preprocess_sharded_timed)
+    /// (which delegates here after `split`): per-shard counts fold
+    /// shard-ascending into one global ranking, so a streamed compile of
+    /// a shard set equals the materialized compile of its `unshard`.
+    pub fn preprocess_shard_graphs_timed(
+        &self,
+        shard_graphs: &[crate::graph::shard::ShardGraph],
+        weighted: bool,
+        mut pool: Option<&mut WorkerPool>,
+    ) -> Result<Vec<(Preprocessed, PreprocessTiming)>> {
+        self.config.validate()?;
+        let threads = pool.as_ref().map_or(1, |p| p.workers());
+        let c = self.config.crossbar_size;
+        let mut timings =
+            vec![
+                PreprocessTiming { threads: threads as u32, ..Default::default() };
+                shard_graphs.len()
+            ];
+
+        // Phase ①: per-shard partition (chunk-parallel within a shard).
+        let mut parts = Vec::with_capacity(shard_graphs.len());
+        for (s, sg) in shard_graphs.iter().enumerate() {
+            let t = Instant::now();
+            let part = match pool.as_deref_mut() {
+                Some(pool) if threads > 1 && !sg.graph.edges.is_empty() => {
+                    let chunks = chunk_slices(&sg.graph.edges, threads);
+                    let mut merged = WindowMap::default();
+                    for m in pool.bucket_chunks(&chunks, c, weighted) {
+                        merge_windows(&mut merged, m);
+                    }
+                    finalize_windows(merged, c, sg.graph.num_vertices, weighted)
+                }
+                _ => partition(&sg.graph, c, weighted),
+            };
+            timings[s].partition_ns = t.elapsed().as_nanos() as u64;
+            parts.push(part);
+        }
+
+        // Phase ②: per-shard counts, merged shard-ascending into the
+        // global ranking (counts are additive over the block-row split).
+        let mut counts: HashMap<Pattern, u32> = HashMap::new();
+        let mut total_subgraphs = 0usize;
+        for (s, part) in parts.iter().enumerate() {
+            let t = Instant::now();
+            match pool.as_deref_mut() {
+                Some(pool) if threads > 1 && !part.subgraphs.is_empty() => {
+                    let chunks = chunk_slices(&part.subgraphs, threads);
+                    for m in pool.count_chunks(&chunks) {
+                        merge_counts(
+                            &mut counts,
+                            m.into_iter().map(|(p, n)| (p, i64::from(n))),
+                        );
+                    }
+                }
+                _ => merge_counts(
+                    &mut counts,
+                    crate::pattern::rank::count_patterns(&part.subgraphs)
+                        .into_iter()
+                        .map(|(p, n)| (p, i64::from(n))),
+                ),
+            }
+            total_subgraphs += part.num_subgraphs();
+            timings[s].rank_ns = t.elapsed().as_nanos() as u64;
+        }
+        let t = Instant::now();
+        let ranking = PatternRanking::from_counts(counts, total_subgraphs);
+        let ct = self.build_config_table(&ranking);
+        timings[0].rank_ns += t.elapsed().as_nanos() as u64;
+
+        // Phase ③: per-shard subgraph table + plan against the shared
+        // ranking/CT.
+        let mut out = Vec::with_capacity(parts.len());
+        for (s, part) in parts.into_iter().enumerate() {
+            let t = Instant::now();
+            let st = SubgraphTable::build(&part, &ranking, self.config.order);
+            timings[s].tables_ns = t.elapsed().as_nanos() as u64;
+            let t = Instant::now();
+            let plan = match pool.as_deref_mut() {
+                Some(pool) if threads > 1 => {
+                    ExecutionPlan::build_pooled(&part, &ct, &st, &self.config, pool)
+                }
+                _ => ExecutionPlan::build(&part, &ct, &st, &self.config),
+            };
+            timings[s].plan_ns = t.elapsed().as_nanos() as u64;
+            out.push((
+                Preprocessed { part, ranking: ranking.clone(), ct: ct.clone(), st, plan },
+                timings[s],
+            ));
+        }
+        Ok(out)
+    }
+
+    /// [`preprocess_sharded_timed`](Self::preprocess_sharded_timed)
+    /// without the timings, on an optional pool.
+    pub fn preprocess_sharded(
+        &self,
+        graph: &Coo,
+        weighted: bool,
+        shards: usize,
+        pool: Option<&mut WorkerPool>,
+    ) -> Result<Vec<Preprocessed>> {
+        Ok(self
+            .preprocess_sharded_timed(graph, weighted, shards, pool)?
+            .into_iter()
+            .map(|(p, _)| p)
+            .collect())
+    }
+
     /// Build just the engine config table for `ranking` under this
     /// architecture. The CT is the only Alg.-1 output that depends on the
     /// static/dynamic split, so sweeps over N rebuild this table against
@@ -302,6 +447,57 @@ impl Accelerator {
             program,
             executor,
             pool,
+            threads,
+        )?;
+        Ok(self.report_of(program, run))
+    }
+
+    /// Sharded Alg. 2: lockstep supersteps across a per-shard artifact
+    /// set (one [`preprocess_sharded_timed`](Self::preprocess_sharded_timed)
+    /// output) with the deterministic cross-shard frontier exchange
+    /// ([`sched::exchange`](crate::sched::exchange)), on a transient
+    /// worker pool. Bit-identical to every unsharded execution path for
+    /// every shard count.
+    pub fn run_sharded(
+        &self,
+        shards: &[&Preprocessed],
+        program: &dyn VertexProgram,
+        executor: &mut dyn StepExecutor,
+        threads: usize,
+    ) -> Result<SimReport> {
+        let sp = crate::sched::ShardPlans::new(shards.iter().map(|p| &p.plan).collect())?;
+        let run = crate::sched::run_sharded(
+            &self.config,
+            &self.params,
+            &sp,
+            program,
+            executor,
+            threads,
+        )?;
+        Ok(self.report_of(program, run))
+    }
+
+    /// Like [`run_sharded`](Self::run_sharded) but on caller-owned
+    /// persistent pools — one per shard (`pools[shard % len]` serves
+    /// each shard's numeric phase, `pools[0]` the global lane replay);
+    /// the lane count caps at the smallest pool. This is the `Session`
+    /// production path.
+    pub fn run_sharded_pooled(
+        &self,
+        shards: &[&Preprocessed],
+        program: &dyn VertexProgram,
+        executor: &mut dyn StepExecutor,
+        pools: &mut [crate::sched::WorkerPool],
+        threads: usize,
+    ) -> Result<SimReport> {
+        let sp = crate::sched::ShardPlans::new(shards.iter().map(|p| &p.plan).collect())?;
+        let run = crate::sched::run_sharded_pooled(
+            &self.config,
+            &self.params,
+            &sp,
+            program,
+            executor,
+            pools,
             threads,
         )?;
         Ok(self.report_of(program, run))
@@ -421,6 +617,59 @@ mod tests {
         let mut pool = crate::sched::WorkerPool::new(4);
         let (_, t4) = acc.preprocess_timed(&g, false, Some(&mut pool)).unwrap();
         assert_eq!(t4.threads, 4);
+    }
+
+    #[test]
+    fn preprocess_sharded_shares_one_global_ranking() {
+        let g = Dataset::Tiny.load().unwrap();
+        let acc = Accelerator::with_defaults();
+        let want = acc.preprocess(&g, false).unwrap();
+        // One shard is the unsharded compile, whole-struct.
+        let one = acc.preprocess_sharded(&g, false, 1, None).unwrap();
+        assert_eq!(one.len(), 1);
+        assert_eq!(one[0], want);
+        for shards in [2usize, 3] {
+            let pre = acc.preprocess_sharded(&g, false, shards, None).unwrap();
+            assert_eq!(pre.len(), shards);
+            for p in &pre {
+                assert_eq!(p.ranking, want.ranking, "global ranking");
+                assert_eq!(p.ct, want.ct, "global config table");
+            }
+            let total: usize = pre.iter().map(|p| p.part.num_subgraphs()).sum();
+            assert_eq!(total, want.part.num_subgraphs());
+            // Pooled sharded compile is whole-struct-equal per shard.
+            let mut pool = crate::sched::WorkerPool::new(4);
+            let pooled =
+                acc.preprocess_sharded(&g, false, shards, Some(&mut pool)).unwrap();
+            assert_eq!(pooled, pre, "pooled sharded compile");
+        }
+    }
+
+    #[test]
+    fn run_sharded_matches_run() {
+        let g = Dataset::Tiny.load().unwrap();
+        let acc = Accelerator::with_defaults();
+        let pre = acc.preprocess(&g, false).unwrap();
+        let want = acc.run(&pre, &Bfs::new(0), &mut NativeExecutor).unwrap();
+        let sharded = acc.preprocess_sharded(&g, false, 3, None).unwrap();
+        let refs: Vec<&Preprocessed> = sharded.iter().collect();
+        let got = acc
+            .run_sharded(&refs, &Bfs::new(0), &mut NativeExecutor, 4)
+            .unwrap();
+        assert_eq!(want.run.as_ref().unwrap().values, got.run.as_ref().unwrap().values);
+        assert_eq!(want.counts, got.counts);
+        assert_eq!(want.exec_time_ns, got.exec_time_ns);
+        assert_eq!(want.static_hit_rate, got.static_hit_rate);
+        // Pooled mechanism, pool-per-shard, reused across rounds.
+        let mut pools: Vec<crate::sched::WorkerPool> =
+            (0..3).map(|_| crate::sched::WorkerPool::new(4)).collect();
+        for round in 0..2 {
+            let pooled = acc
+                .run_sharded_pooled(&refs, &Bfs::new(0), &mut NativeExecutor, &mut pools, 4)
+                .unwrap();
+            assert_eq!(want.counts, pooled.counts, "round {round}");
+            assert_eq!(want.exec_time_ns, pooled.exec_time_ns, "round {round}");
+        }
     }
 
     #[test]

@@ -282,6 +282,14 @@ pub struct Metrics {
     /// recompile the delta path avoided.
     pub delta_avoided_recompiles: AtomicU64,
     per_algo: Mutex<BTreeMap<String, AlgoEntry>>,
+    /// Completed executions keyed by resolved shard count — the serve
+    /// view of the scale-out knob. Purely a placement/throughput
+    /// statistic: results are bit-identical for every shard count, so
+    /// this never keys anything, it only makes the deployment shape
+    /// visible. (Per-shard *compile* cost is visible separately: a
+    /// sharded cold compile records one [`PreprocessPhases`] entry per
+    /// shard through the session store.)
+    runs_by_shards: Mutex<BTreeMap<u32, u64>>,
 }
 
 #[derive(Debug, Clone, PartialEq)]
@@ -309,6 +317,12 @@ pub struct MetricsSnapshot {
     pub preprocess: PreprocessPhases,
     /// Keyed by algorithm id, sorted.
     pub per_algorithm: BTreeMap<String, AlgoStats>,
+    /// Completed executions keyed by the shard count they resolved to
+    /// (session default unless the job overrode it). Results are
+    /// bit-identical across shard counts, so this is pure deployment
+    /// visibility; compile-side cost shows up as one `preprocess`
+    /// entry per shard artifact instead.
+    pub runs_by_shards: BTreeMap<u32, u64>,
 }
 
 impl Metrics {
@@ -372,6 +386,19 @@ impl Metrics {
         e.queue_wait.record(queue_wait_us);
     }
 
+    /// A job finished executing with the given resolved shard count.
+    /// Recorded alongside `record_completion` by the serve loop; kept
+    /// separate because coalesced followers share one execution (and
+    /// therefore one shard-count sample) while each resolves its own
+    /// completion.
+    pub fn record_sharded_run(&self, shards: u32) {
+        let mut m = self.runs_by_shards.lock().unwrap_or_else(|poisoned| {
+            self.runs_by_shards.clear_poison();
+            poisoned.into_inner()
+        });
+        *m.entry(shards.max(1)).or_default() += 1;
+    }
+
     /// Fold one accepted delta batch's [`DeltaReport`] into the
     /// streaming-mutation counters.
     pub fn record_delta(&self, report: &DeltaReport) {
@@ -430,6 +457,14 @@ impl Metrics {
             delta_avoided_recompiles: self.delta_avoided_recompiles.load(Ordering::Relaxed),
             preprocess: PreprocessPhases::default(),
             per_algorithm,
+            runs_by_shards: self
+                .runs_by_shards
+                .lock()
+                .unwrap_or_else(|poisoned| {
+                    self.runs_by_shards.clear_poison();
+                    poisoned.into_inner()
+                })
+                .clone(),
         }
     }
 }
@@ -547,6 +582,20 @@ mod tests {
         assert_eq!(s.preprocess, PreprocessPhases::default());
         assert_eq!(s.queue_wait, LatencySummary::default());
         assert_eq!(s.execution.mean_us, 0.0);
+        assert!(s.runs_by_shards.is_empty());
+    }
+
+    #[test]
+    fn runs_by_shards_bucket_resolved_counts() {
+        let m = Metrics::default();
+        m.record_sharded_run(1);
+        m.record_sharded_run(4);
+        m.record_sharded_run(4);
+        m.record_sharded_run(0); // defensive clamp: 0 resolves to 1
+        let s = m.snapshot();
+        assert_eq!(s.runs_by_shards[&1], 2);
+        assert_eq!(s.runs_by_shards[&4], 2);
+        assert_eq!(s.runs_by_shards.len(), 2);
     }
 
     #[test]

@@ -113,6 +113,14 @@ pub struct ServiceConfig {
     /// default. The compile runs on the session's pooled workers and is
     /// whole-struct-equal to a sequential compile for every setting.
     pub preprocess_parallelism: Option<usize>,
+    /// Default shard count for every served job (must be >= 1; default
+    /// 1 — unsharded). With `N > 1` each graph splits into `N`
+    /// contiguous block-row shards, each compiled and cached under its
+    /// own shard-stamped artifact key and run through the deterministic
+    /// cross-shard exchange. A scheduling knob like `parallelism`:
+    /// served results are bit-identical for every setting, and a
+    /// [`JobSpec::with_shards`] override wins per job. CLI: `--shards`.
+    pub shards: u32,
     /// On-disk artifact cache directory (`None` = memory-only). A
     /// redeployed service pointed at a warm directory deserializes its
     /// compiled plans instead of re-running Alg. 1 — zero plan
@@ -137,6 +145,7 @@ impl Default for ServiceConfig {
             workers: 2,
             parallelism: 1,
             preprocess_parallelism: None,
+            shards: 1,
             artifact_dir: None,
             queue_depth: DEFAULT_QUEUE_DEPTH,
         }
@@ -402,7 +411,8 @@ impl Service {
             .backend(config.backend)
             // `0 = auto` resolves inside `SessionBuilder::build` (the one
             // `resolve_threads` call site on this path).
-            .parallelism(config.parallelism);
+            .parallelism(config.parallelism)
+            .shards(config.shards);
         if let Some(threads) = config.preprocess_parallelism {
             builder = builder.preprocess_parallelism(threads);
         }
@@ -483,6 +493,9 @@ impl Service {
 
         match outcome {
             Ok(Ok(report)) => {
+                // One execution → one shard-count sample, regardless of
+                // how many coalesced riders it resolves.
+                metrics.record_sharded_run(spec.shards.unwrap_or_else(|| session.shards()));
                 let mut report = Some(report);
                 let n = live.len();
                 for (i, r) in live.into_iter().enumerate() {
@@ -775,6 +788,31 @@ mod tests {
         );
         assert_eq!(a.counts, b.counts);
         assert_eq!(a.exec_time_ns, b.exec_time_ns);
+    }
+
+    #[test]
+    fn sharded_workers_serve_identical_results() {
+        let seq = tiny_service(2);
+        let sharded = Service::spawn(ServiceConfig {
+            workers: 2,
+            parallelism: 4,
+            shards: 2,
+            ..ServiceConfig::default()
+        })
+        .unwrap();
+        let job = || JobSpec::new(Dataset::Tiny, "wcc");
+        let a = seq.submit_blocking(job()).unwrap().report;
+        let b = sharded.submit_blocking(job()).unwrap().report;
+        assert_eq!(a.run.as_ref().unwrap().values, b.run.as_ref().unwrap().values);
+        assert_eq!(a.counts, b.counts);
+        assert_eq!(a.exec_time_ns, b.exec_time_ns);
+        // One artifact per shard behind the served job, and the shard
+        // count surfaces in the metrics snapshot.
+        assert_eq!(sharded.session().artifacts().stats().entries, 2);
+        assert_eq!(sharded.metrics.snapshot().runs_by_shards[&2], 1);
+        assert_eq!(seq.metrics.snapshot().runs_by_shards[&1], 1);
+        // Zero shards fails service spawn eagerly, like a bad arch.
+        assert!(Service::spawn(ServiceConfig { shards: 0, ..ServiceConfig::default() }).is_err());
     }
 
     #[test]

@@ -30,6 +30,17 @@ impl Default for RmatParams {
 /// Generate an R-MAT graph with ~`num_edges` distinct edges over
 /// `num_vertices` vertices (rounded up to the next power of two
 /// internally; out-of-range endpoints are redrawn).
+///
+/// # Shortfall
+///
+/// The retry loop is bounded (`20 × num_edges` draws, min 1024): when a
+/// tiny, dense ask approaches the graph's distinct-edge capacity —
+/// R-MAT's skew revisits the same hot cells, so near `n·(n-1)` the
+/// marginal draw almost never lands on a fresh cell — the generator
+/// **returns fewer edges than requested** rather than spinning
+/// unboundedly. The shortfall is logged to stderr; callers that need an
+/// exact count must check `num_edges()` on the result. This is a
+/// documented contract, not a silent truncation.
 pub fn rmat(num_vertices: u32, num_edges: usize, params: RmatParams, seed: u64) -> Coo {
     assert!(num_vertices > 0);
     let scale = 32 - (num_vertices.max(2) - 1).leading_zeros(); // ceil(log2 n)
@@ -57,7 +68,75 @@ pub fn rmat(num_vertices: u32, num_edges: usize, params: RmatParams, seed: u64) 
         g = Coo::from_edges(num_vertices, all);
     }
     g.edges.truncate(num_edges);
+    if g.num_edges() < num_edges {
+        eprintln!(
+            "rmat: retry budget exhausted after {attempts} draws; returning \
+             {} of {num_edges} requested distinct edges (n={num_vertices})",
+            g.num_edges()
+        );
+    }
     g
+}
+
+/// Streaming R-MAT emitter: draws the same candidate sequence as
+/// [`rmat`]'s inner loop but hands edges to `sink` in batches of
+/// `batch_size` instead of materializing one giant Vec — the 100M+-edge
+/// path, fed straight into per-shard bucketing
+/// ([`shard::Sharder::push`](super::shard::Sharder::push)).
+///
+/// Contract:
+///
+/// * **Batch-invariant:** the concatenated stream is a pure function of
+///   `(num_vertices, num_edges, params, seed)` — `batch_size` only
+///   changes where the stream is cut, never its content.
+/// * **Candidates, not distinct edges:** self-loops and out-of-range
+///   endpoints are dropped, but *duplicates pass through* — dedup
+///   happens at `Coo::from_edges` in the consumer. Because shards own
+///   disjoint source ranges, per-shard dedup equals global dedup, so
+///   streaming into a `Sharder` matches splitting the materialized
+///   graph edge-for-edge.
+/// * **Bounded:** emits up to `num_edges` accepted candidates under the
+///   same `20 × num_edges` draw budget as [`rmat`]; after consumer
+///   dedup the distinct count may be lower (see [`rmat`]'s shortfall
+///   note). Returns the number of candidates emitted.
+pub fn rmat_stream<F: FnMut(&[Edge])>(
+    num_vertices: u32,
+    num_edges: usize,
+    params: RmatParams,
+    seed: u64,
+    batch_size: usize,
+    mut sink: F,
+) -> usize {
+    assert!(num_vertices > 0);
+    assert!(batch_size >= 1);
+    let scale = 32 - (num_vertices.max(2) - 1).leading_zeros(); // ceil(log2 n)
+    let mut rng = SplitMix64::new(seed);
+    let max_attempts = num_edges.saturating_mul(20).max(1024);
+    let mut batch = Vec::with_capacity(batch_size.min(num_edges.max(1)));
+    let mut emitted = 0usize;
+    let mut attempts = 0usize;
+    while emitted < num_edges && attempts < max_attempts {
+        let (src, dst) = rmat_edge(scale, params, &mut rng);
+        attempts += 1;
+        if src < num_vertices && dst < num_vertices && src != dst {
+            batch.push(Edge::new(src, dst));
+            emitted += 1;
+            if batch.len() == batch_size {
+                sink(&batch);
+                batch.clear();
+            }
+        }
+    }
+    if !batch.is_empty() {
+        sink(&batch);
+    }
+    if emitted < num_edges {
+        eprintln!(
+            "rmat_stream: retry budget exhausted after {attempts} draws; \
+             emitted {emitted} of {num_edges} candidates (n={num_vertices})"
+        );
+    }
+    emitted
 }
 
 fn rmat_edge(scale: u32, p: RmatParams, rng: &mut SplitMix64) -> (u32, u32) {
@@ -140,6 +219,45 @@ mod tests {
         let g = rmat(1 << 10, 5_000, RmatParams::default(), 1);
         assert_eq!(g.num_edges(), 5_000);
         assert!(g.is_canonical());
+    }
+
+    #[test]
+    fn rmat_tiny_dense_ask_logs_shortfall_instead_of_spinning() {
+        // 4 vertices hold at most 12 directed non-loop edges; R-MAT's
+        // skew makes even that unreachable within the retry budget.
+        // The documented contract: return what was found, never hang.
+        let g = rmat(4, 1_000, RmatParams::default(), 2);
+        assert!(g.num_edges() < 1_000, "shortfall expected");
+        assert!(g.num_edges() <= 12, "capacity bound");
+        assert!(g.is_canonical());
+        // Deterministic shortfall: the same ask yields the same edges.
+        let h = rmat(4, 1_000, RmatParams::default(), 2);
+        assert_eq!(g.edges, h.edges);
+    }
+
+    #[test]
+    fn rmat_stream_is_batch_invariant() {
+        let collect = |batch_size: usize| {
+            let mut all = Vec::new();
+            let n = rmat_stream(512, 3_000, RmatParams::default(), 13, batch_size, |b| {
+                all.extend_from_slice(b)
+            });
+            assert_eq!(n, all.len());
+            all
+        };
+        let want = collect(3_000);
+        assert_eq!(want.len(), 3_000);
+        for batch_size in [1usize, 7, 64, 1024, 10_000] {
+            assert_eq!(collect(batch_size), want, "batch {batch_size}");
+        }
+    }
+
+    #[test]
+    fn rmat_stream_respects_draw_budget_on_dense_asks() {
+        let mut total = 0usize;
+        let n = rmat_stream(4, 1_000, RmatParams::default(), 2, 64, |b| total += b.len());
+        assert_eq!(n, total);
+        assert!(n < 1_000, "budget must cap a saturated ask");
     }
 
     #[test]

@@ -10,10 +10,12 @@ pub mod datasets;
 pub mod delta;
 pub mod generator;
 pub mod loader;
+pub mod shard;
 pub mod stats;
 
 pub use coo::{Coo, Edge};
 pub use csr::Csr;
 pub use datasets::Dataset;
 pub use delta::{DeltaBatch, DeltaError, DeltaOp, EdgeDelta};
+pub use shard::{ShardGraph, Sharder};
 pub use stats::GraphStats;

@@ -1,0 +1,317 @@
+//! Block-row sharding of the edge set across N simulated accelerators.
+//!
+//! # The block-row split
+//!
+//! The partitioner (`pattern::extract`) buckets edges into C×C adjacency
+//! windows keyed by `(brow, bcol) = (src/C, dst/C)`. A shard owns a
+//! **contiguous range of block rows**, so every window — and therefore
+//! every subgraph op — lands in exactly one shard, and the union of the
+//! shards' window sets is byte-identical to the unsharded partition.
+//! Contiguity is what makes the cross-shard merge deterministic (see
+//! `sched::exchange`): the subgraph table sorts column-major groups by
+//! `(bcol, brow)`, so concatenating the shards' same-`bcol` groups in
+//! shard order reproduces the global within-group op order exactly, and
+//! row-major groups (keyed by `brow`) each live wholly inside one shard.
+//!
+//! Every [`ShardGraph`] keeps the **global** vertex space
+//! (`graph.num_vertices` is the full graph's): block coordinates,
+//! `src_start`/`dst_start` and the frontier bitmap stay global indices,
+//! which is what lets per-shard plans drive one shared set of vertex
+//! values without any index translation at the exchange boundary.
+//!
+//! Two construction paths agree edge-for-edge:
+//!
+//! * [`split`] slices an already-canonical [`Coo`] — the row-major edge
+//!   sort means each shard's edges are one contiguous slice, found by
+//!   binary search, with zero re-sorting.
+//! * [`Sharder`] ingests raw edge *batches* (e.g. straight from
+//!   [`generator::rmat_stream`](super::generator::rmat_stream)) into
+//!   per-shard buckets and canonicalizes each bucket independently —
+//!   never materializing (or sorting) one giant global edge Vec. Because
+//!   shards own disjoint `src` ranges, per-shard dedup/sort equals the
+//!   global dedup/sort restricted to the shard: `Sharder` output is
+//!   independent of batch boundaries and equal to [`split`] of the
+//!   materialized graph.
+
+use super::coo::{Coo, Edge};
+
+/// One shard: a contiguous block-row slice of the edge set over the
+/// global vertex space.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardGraph {
+    pub shard_id: u32,
+    pub shard_count: u32,
+    /// Owned block rows `[brow_start, brow_end)` (window size C).
+    pub brow_start: u32,
+    pub brow_end: u32,
+    /// Shard-local edges, canonical, with **global** vertex ids and the
+    /// global `num_vertices`.
+    pub graph: Coo,
+}
+
+impl ShardGraph {
+    /// Source-vertex range `[lo, hi)` owned by this shard.
+    pub fn src_range(&self, c: usize) -> (u32, u32) {
+        (
+            self.brow_start * c as u32,
+            (self.brow_end * c as u32).min(self.graph.num_vertices),
+        )
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.graph.num_edges()
+    }
+}
+
+/// Contiguous near-equal apportionment of `num_blocks` block rows over
+/// `shards` shards: shard `i` gets `num_blocks/shards` rows plus one of
+/// the `num_blocks % shards` remainder rows (lowest ids first). Shards
+/// past the block count own empty ranges — legal, they just idle.
+pub fn brow_ranges(num_blocks: u32, shards: u32) -> Vec<(u32, u32)> {
+    let shards = shards.max(1);
+    let base = num_blocks / shards;
+    let rem = num_blocks % shards;
+    let mut out = Vec::with_capacity(shards as usize);
+    let mut start = 0u32;
+    for i in 0..shards {
+        let len = base + u32::from(i < rem);
+        out.push((start, start + len));
+        start += len;
+    }
+    out
+}
+
+/// Shard index owning block row `brow` under [`brow_ranges`]'s
+/// apportionment — closed-form, no range scan in the bucketing hot loop.
+#[inline]
+fn shard_of(brow: u32, base: u32, rem: u32) -> u32 {
+    let pivot = rem * (base + 1);
+    if brow < pivot {
+        brow / (base + 1)
+    } else {
+        rem + (brow - pivot) / base.max(1)
+    }
+}
+
+/// Split a canonical [`Coo`] into `shards` [`ShardGraph`]s by contiguous
+/// block-row ranges (window size `c`). The row-major edge sort makes
+/// each shard a contiguous slice of `g.edges`, located by binary search
+/// at the range's first source vertex.
+pub fn split(g: &Coo, c: usize, shards: usize) -> Vec<ShardGraph> {
+    assert!(c >= 1, "window size must be >= 1");
+    debug_assert!(g.is_canonical(), "split requires a canonical Coo");
+    let num_blocks = g.num_vertices.div_ceil(c as u32);
+    let ranges = brow_ranges(num_blocks, shards as u32);
+    let mut out = Vec::with_capacity(ranges.len());
+    let mut lo = 0usize;
+    for (i, &(bs, be)) in ranges.iter().enumerate() {
+        let src_end = (be as u64 * c as u64).min(g.num_vertices as u64) as u32;
+        let hi = lo + g.edges[lo..].partition_point(|e| e.src < src_end);
+        out.push(ShardGraph {
+            shard_id: i as u32,
+            shard_count: ranges.len() as u32,
+            brow_start: bs,
+            brow_end: be,
+            graph: Coo {
+                num_vertices: g.num_vertices,
+                edges: g.edges[lo..hi].to_vec(),
+            },
+        });
+        lo = hi;
+    }
+    debug_assert_eq!(lo, g.edges.len(), "every edge belongs to a shard");
+    out
+}
+
+/// Reassemble the global graph from a shard set (test/diagnostic
+/// inverse of [`split`]): shard edge slices are disjoint and ascending
+/// in `src`, so concatenation in shard order is already canonical.
+pub fn unshard(shards: &[ShardGraph]) -> Coo {
+    let num_vertices = shards.first().map_or(0, |s| s.graph.num_vertices);
+    let mut edges = Vec::with_capacity(shards.iter().map(ShardGraph::num_edges).sum());
+    for s in shards {
+        edges.extend_from_slice(&s.graph.edges);
+    }
+    let g = Coo { num_vertices, edges };
+    debug_assert!(g.is_canonical());
+    g
+}
+
+/// Streaming shard builder: ingests raw edge batches into per-shard
+/// buckets and canonicalizes each bucket at [`finish`](Self::finish) —
+/// the 100M+-edge path where one global sorted edge Vec would not fit
+/// the budget. See the module docs for why the result is independent of
+/// batch boundaries and equal to [`split`].
+#[derive(Debug)]
+pub struct Sharder {
+    num_vertices: u32,
+    c: usize,
+    base: u32,
+    rem: u32,
+    ranges: Vec<(u32, u32)>,
+    buckets: Vec<Vec<Edge>>,
+}
+
+impl Sharder {
+    pub fn new(num_vertices: u32, c: usize, shards: usize) -> Self {
+        assert!(c >= 1, "window size must be >= 1");
+        let num_blocks = num_vertices.div_ceil(c as u32);
+        let shards = shards.max(1) as u32;
+        let ranges = brow_ranges(num_blocks, shards);
+        Self {
+            num_vertices,
+            c,
+            base: num_blocks / shards,
+            rem: num_blocks % shards,
+            ranges: ranges.clone(),
+            buckets: vec![Vec::new(); ranges.len()],
+        }
+    }
+
+    /// Bucket one edge batch. Out-of-range endpoints and self-loops are
+    /// dropped here (cheaper than carrying them to `from_edges`, and it
+    /// keeps bucket sizes honest for the memory budget).
+    pub fn push(&mut self, edges: &[Edge]) {
+        let c = self.c as u32;
+        for e in edges {
+            if e.src >= self.num_vertices || e.dst >= self.num_vertices || e.src == e.dst {
+                continue;
+            }
+            let s = shard_of(e.src / c, self.base, self.rem) as usize;
+            self.buckets[s].push(*e);
+        }
+    }
+
+    /// Edges buckets currently hold (post-filter, pre-dedup).
+    pub fn buffered_edges(&self) -> usize {
+        self.buckets.iter().map(Vec::len).sum()
+    }
+
+    /// Canonicalize every bucket into its [`ShardGraph`].
+    pub fn finish(self) -> Vec<ShardGraph> {
+        let n = self.num_vertices;
+        let count = self.ranges.len() as u32;
+        self.buckets
+            .into_iter()
+            .zip(self.ranges)
+            .enumerate()
+            .map(|(i, (bucket, (bs, be)))| ShardGraph {
+                shard_id: i as u32,
+                shard_count: count,
+                brow_start: bs,
+                brow_end: be,
+                graph: Coo::from_edges(n, bucket),
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generator::{rmat, rmat_stream, RmatParams};
+
+    #[test]
+    fn brow_ranges_cover_contiguously() {
+        for (blocks, shards) in [(10u32, 3u32), (4, 4), (2, 5), (0, 3), (7, 1)] {
+            let r = brow_ranges(blocks, shards);
+            assert_eq!(r.len(), shards as usize);
+            assert_eq!(r[0].0, 0);
+            assert_eq!(r.last().unwrap().1, blocks);
+            for w in r.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "ranges must be contiguous");
+            }
+            // Near-equal: sizes differ by at most one block.
+            let sizes: Vec<u32> = r.iter().map(|&(a, b)| b - a).collect();
+            let (min, max) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+            assert!(max - min <= 1);
+        }
+    }
+
+    #[test]
+    fn shard_of_matches_ranges() {
+        for (blocks, shards) in [(10u32, 3u32), (4, 4), (2, 5), (13, 6)] {
+            let ranges = brow_ranges(blocks, shards);
+            let (base, rem) = (blocks / shards, blocks % shards);
+            for brow in 0..blocks {
+                let s = shard_of(brow, base, rem);
+                let (lo, hi) = ranges[s as usize];
+                assert!((lo..hi).contains(&brow), "brow {brow} shard {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn split_partitions_every_edge_exactly_once() {
+        let g = rmat(512, 4_000, RmatParams::default(), 9);
+        for shards in [1usize, 2, 3, 4, 7] {
+            let sh = split(&g, 4, shards);
+            assert_eq!(sh.len(), shards);
+            let total: usize = sh.iter().map(ShardGraph::num_edges).sum();
+            assert_eq!(total, g.num_edges());
+            for s in &sh {
+                assert_eq!(s.graph.num_vertices, g.num_vertices, "global vertex space");
+                assert!(s.graph.is_canonical());
+                let (lo, hi) = s.src_range(4);
+                assert!(s.graph.edges.iter().all(|e| (lo..hi.max(lo)).contains(&e.src)));
+            }
+            assert_eq!(unshard(&sh).edges, g.edges, "unshard inverts split");
+        }
+    }
+
+    #[test]
+    fn split_one_shard_is_the_whole_graph() {
+        let g = rmat(256, 2_000, RmatParams::default(), 3);
+        let sh = split(&g, 4, 1);
+        assert_eq!(sh.len(), 1);
+        assert_eq!(sh[0].graph.edges, g.edges);
+        assert_eq!((sh[0].brow_start, sh[0].brow_end), (0, 256u32.div_ceil(4)));
+    }
+
+    #[test]
+    fn more_shards_than_blocks_idle_harmlessly() {
+        let g = rmat(8, 20, RmatParams::default(), 1);
+        let sh = split(&g, 4, 5); // 2 block rows, 5 shards
+        assert_eq!(sh.len(), 5);
+        let total: usize = sh.iter().map(ShardGraph::num_edges).sum();
+        assert_eq!(total, g.num_edges());
+        assert!(sh[2..].iter().all(|s| s.graph.is_empty()));
+    }
+
+    #[test]
+    fn sharder_is_batch_invariant_and_equals_split() {
+        // Stream the same candidate sequence at several batch sizes; all
+        // must equal split() of the materialized graph.
+        let (n, edges, seed) = (512u32, 6_000usize, 17u64);
+        let mut all = Vec::new();
+        rmat_stream(n, edges, RmatParams::default(), seed, 256, |b| {
+            all.extend_from_slice(b)
+        });
+        let g = Coo::from_edges(n, all);
+        for shards in [1usize, 2, 4] {
+            let want = split(&g, 4, shards);
+            for batch in [1usize, 97, 1024, edges] {
+                let mut sharder = Sharder::new(n, 4, shards);
+                rmat_stream(n, edges, RmatParams::default(), seed, batch, |b| {
+                    sharder.push(b)
+                });
+                let got = sharder.finish();
+                assert_eq!(got, want, "shards {shards} batch {batch}");
+            }
+        }
+    }
+
+    #[test]
+    fn sharder_filters_invalid_edges() {
+        let mut s = Sharder::new(8, 2, 2);
+        s.push(&[
+            Edge::new(0, 1),
+            Edge::new(3, 3),  // self-loop
+            Edge::new(9, 1),  // out of range
+            Edge::new(1, 20), // out of range
+        ]);
+        assert_eq!(s.buffered_edges(), 1);
+        let sh = s.finish();
+        assert_eq!(sh.iter().map(ShardGraph::num_edges).sum::<usize>(), 1);
+    }
+}

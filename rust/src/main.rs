@@ -44,7 +44,7 @@ USAGE:
                 [--seed N] [--algo NAME] [--scale F] [--out FILE]
                 [arch options]
   repro artifacts warm <DATASET> --artifact-dir DIR [--algo NAME]
-                  [--scale F] [--assert-warm] [arch options]
+                  [--scale F] [--shards N] [--assert-warm] [arch options]
   repro artifacts ls --artifact-dir DIR
   repro mutate <DATASET> [--deltas FILE] [--scale F]
                [--artifact-dir DIR] [arch options]
@@ -103,6 +103,14 @@ ARCH OPTIONS:
                             REPRO_PREPROCESS_THREADS; results and
                             compiled artifacts are bit-identical for
                             every K
+  --shards N                split the graph into N contiguous block-row
+                            shards, each compiled and cached as its own
+                            artifact and executed in lockstep supersteps
+                            with deterministic cross-shard frontier
+                            exchange (default 1); a scheduling knob like
+                            --threads — results are bit-identical for
+                            every N and identical jobs still coalesce
+                            across different shard counts
 ";
 
 fn arch_from(args: &Args) -> Result<ArchConfig> {
@@ -128,7 +136,8 @@ fn session_from(args: &Args) -> Result<Session> {
     let mut builder = Session::builder()
         .arch(arch_from(args)?)
         .backend(Backend::parse(&backend_s)?)
-        .parallelism(args.get_or("threads", 1usize)?);
+        .parallelism(args.get_or("threads", 1usize)?)
+        .shards(args.get_or("shards", 1u32)?);
     if let Some(dir) = args.get_path("artifact-dir") {
         builder = builder.artifact_dir(dir);
     }
@@ -243,6 +252,9 @@ fn cmd_run(args: &Args) -> Result<()> {
     t.row(["static hit rate", &format!("{:.1}%", report.static_hit_rate * 100.0)]);
     t.row(["ReRAM write bits", &fmt::count(report.counts.write_bits)]);
     t.row(["max cell writes", &fmt::count(report.max_cell_writes)]);
+    if session.shards() > 1 {
+        t.row(["shards", &session.shards().to_string()]);
+    }
     print!("{}", t.render());
 
     if args.flag("validate") {
@@ -382,13 +394,26 @@ fn cmd_artifacts_warm(args: &Args) -> Result<()> {
     };
     for algo in &algos {
         let spec = JobSpec::new(d, algo.as_str()).with_scale(scale);
-        let pre = session.preprocess(&spec)?;
-        println!(
-            "  {algo:>9}: {} plan ops, {} patterns, static coverage {:.1}%",
-            pre.plan.num_ops(),
-            pre.ranking.num_patterns(),
-            pre.static_coverage() * 100.0
-        );
+        if session.shards() > 1 {
+            // Warm the whole shard set: one artifact per shard, all
+            // persisted, so a later sharded serve is a pure disk-hit.
+            let pres = session.preprocess_sharded(&spec)?;
+            let ops: usize = pres.iter().map(|p| p.plan.num_ops()).sum();
+            println!(
+                "  {algo:>9}: {} shard artifact(s), {} plan ops total, {} patterns",
+                pres.len(),
+                ops,
+                pres[0].ranking.num_patterns()
+            );
+        } else {
+            let pre = session.preprocess(&spec)?;
+            println!(
+                "  {algo:>9}: {} plan ops, {} patterns, static coverage {:.1}%",
+                pre.plan.num_ops(),
+                pre.ranking.num_patterns(),
+                pre.static_coverage() * 100.0
+            );
+        }
     }
     let s = session.artifacts().stats();
     println!(
@@ -554,6 +579,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if s.preprocess.compiles > 0 {
         println!("preprocess phases: {}", s.preprocess.summary());
     }
+    for (shards, runs) in s.runs_by_shards.iter().filter(|(n, _)| **n > 1) {
+        println!("{runs} execution(s) served across {shards} shards (bit-identical results)");
+    }
     for (algo, st) in &s.per_algorithm {
         println!(
             "  {algo:>9}: {} completed, {} failed, {} shed, {} coalesced, queue depth {} \
@@ -592,6 +620,7 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         backend: Backend::parse(&backend_s)?,
         workers: args.get_or("workers", 2usize)?,
         parallelism: args.get_or("threads", 1usize)?,
+        shards: args.get_or("shards", 1u32)?,
         queue_depth: args.get_or("queue-depth", repro::coordinator::DEFAULT_QUEUE_DEPTH)?,
         ..ServiceConfig::default()
     };

@@ -1,0 +1,973 @@
+//! Lockstep superstep execution across N graph shards with a
+//! deterministic cross-shard frontier/value exchange — the scale-out
+//! layer over [`graph::shard`](crate::graph::shard)'s block-row split.
+//!
+//! # The exchange protocol
+//!
+//! Shards are a **data decomposition, not a hardware decomposition**:
+//! all shards drive one global engine array (the same `total_engines`
+//! the unsharded run uses), one global replacement policy, one global
+//! frontier bitmap and one global vertex-value vector. Each superstep
+//! runs three lockstep phases:
+//!
+//! 1. **Global dispatch** (sequential): one pass over the *merged group
+//!    schedule* — per-shard plan groups interleaved back into the exact
+//!    global group order (see below) — resolving every scheduling
+//!    decision (least-busy replica picks, replacement-policy evictions,
+//!    retire-then-repick wear-out) against global state, exactly as the
+//!    unsharded dispatcher does. Decisions queue into per-engine lanes;
+//!    each accepted op is also appended to its shard's superstep batch
+//!    and its shard id to the global merge sequence.
+//! 2. **Lane replay** (parallel): identical to [`super::par`] — engines
+//!    replay their queued records on worker lanes; merges stay lane-
+//!    then engine-ordered.
+//! 3. **Numeric + exchange**: each shard gathers its sources from the
+//!    shared value snapshot and runs its edge-compute batch (shards in
+//!    shard order, chunk-parallel within a shard on the shard's worker
+//!    pool). The per-shard candidate buffers are the **outgoing update
+//!    buckets**; the exchange merge then applies them in the recorded
+//!    merge sequence — shard- then destination-group ordered, i.e. the
+//!    byte-exact global reduce order — onto the shared values/frontier.
+//!    Ordered application is what keeps `SumProd` (`f32` accumulation
+//!    is not associative) bit-identical; the rebuilt frontier bitmap is
+//!    global, so next superstep's masking needs no broadcast step.
+//!
+//! # Why the merged schedule reproduces the global order
+//!
+//! The subgraph table sorts column-major schedules by `(bcol, brow)`
+//! and groups on `bcol`; shards own contiguous disjoint `brow` ranges.
+//! So the global `bcol` group is exactly the concatenation of the
+//! shards' same-`bcol` groups in shard order — which is how
+//! [`ShardPlans`] merges them. Row-major groups key on `brow`, so each
+//! lives wholly inside one shard and the merge is a plain key-ordered
+//! interleave. Both properties are validated at [`ShardPlans::new`],
+//! not assumed.
+//!
+//! # Determinism contract (extended)
+//!
+//! `RunResult` is bit-identical for every shard count × thread count ×
+//! execution mechanism (sequential / scoped / pooled) and equal to
+//! [`oracle::run_reference`](super::oracle::run_reference) — shard
+//! count never changes a result byte. `rust/tests/shard.rs` enforces
+//! the whole matrix. The one unsupported combination is the activity
+//! trace with more than one shard (the trace wants per-group engine
+//! snapshots of the sequential interpreter); it is a typed error, never
+//! silently wrong.
+
+use anyhow::Result;
+
+use crate::accel::config::ArchConfig;
+use crate::algo::traits::{Semiring, StepKind, VertexProgram, INF};
+use crate::cost::{CostParams, EventCounts};
+use crate::engine::{Crossbar, EngineKind, GraphEngine};
+use crate::pattern::tables::ExecOrder;
+
+use super::executor::StepExecutor;
+use super::par::{
+    self, replay_lanes, resolve_threads, run_numeric, LaneMode, LaneRecord, PoolRef, Scratch,
+};
+use super::plan::ExecutionPlan;
+use super::pool::WorkerPool;
+use super::replacement::build_policy;
+use super::scheduler::{gather_sources, slot_pos, EngineSummary, RunResult, Scheduler, NONE};
+
+/// One shard's contiguous op range inside a merged group.
+#[derive(Debug, Clone, Copy)]
+struct ShardRange {
+    shard: u32,
+    start: u32,
+    end: u32,
+}
+
+/// The merged group schedule: per-shard plan groups interleaved back
+/// into global group order. `groups[g]` delimits a contiguous span of
+/// `ranges`; ranges within a span are shard-ascending.
+#[derive(Debug)]
+struct MergedSchedule {
+    groups: Vec<(u32, u32)>,
+    ranges: Vec<ShardRange>,
+}
+
+/// A validated set of per-shard execution plans plus the precomputed
+/// merged schedule and global out-degree table. Construction proves the
+/// cross-shard invariants the exchange relies on; the run loop then
+/// only interprets.
+pub struct ShardPlans<'a> {
+    plans: Vec<&'a ExecutionPlan>,
+    merged: MergedSchedule,
+    out_degrees: Vec<u32>,
+}
+
+impl<'a> ShardPlans<'a> {
+    /// Validate and merge per-shard plans. Errors when the plans were
+    /// not compiled as one shard set: diverging geometry, diverging
+    /// global pattern ranking / static configuration, a block row owned
+    /// by two shards (row-major), or out-of-order block rows inside a
+    /// merged column group.
+    pub fn new(plans: Vec<&'a ExecutionPlan>) -> Result<Self> {
+        anyhow::ensure!(!plans.is_empty(), "shard set is empty");
+        let p0 = plans[0];
+        for (s, p) in plans.iter().enumerate().skip(1) {
+            anyhow::ensure!(
+                p.c == p0.c
+                    && p.num_vertices == p0.num_vertices
+                    && p.num_blocks == p0.num_blocks
+                    && p.weighted == p0.weighted
+                    && p.static_engines == p0.static_engines
+                    && p.total_engines == p0.total_engines
+                    && p.crossbars_per_engine == p0.crossbars_per_engine
+                    && p.order == p0.order
+                    && p.static_assignment == p0.static_assignment,
+                "shard {s}'s plan geometry diverges from shard 0's \
+                 (plans must come from one sharded compile)"
+            );
+            anyhow::ensure!(
+                p.num_patterns == p0.num_patterns
+                    && (0..p0.num_patterns).all(|r| p.pattern_of_rank(r) == p0.pattern_of_rank(r)),
+                "shard {s}'s pattern ranking diverges from shard 0's \
+                 (the ranking must be global across the shard set)"
+            );
+            anyhow::ensure!(
+                p.static_config() == p0.static_config(),
+                "shard {s}'s static configuration diverges from shard 0's"
+            );
+        }
+        let merged = build_merged(&plans)?;
+        // Global out-degrees: shards own disjoint source ranges, so the
+        // per-shard tables sum elementwise to the unsharded table.
+        let mut out_degrees = vec![0u32; p0.num_vertices as usize];
+        for p in &plans {
+            for (d, &x) in out_degrees.iter_mut().zip(p.out_degrees()) {
+                *d += x;
+            }
+        }
+        Ok(Self { plans, merged, out_degrees })
+    }
+
+    /// Number of shards in the set.
+    pub fn len(&self) -> usize {
+        self.plans.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.plans.is_empty()
+    }
+
+    /// The validated per-shard plans, in shard order.
+    pub fn plans(&self) -> &[&'a ExecutionPlan] {
+        &self.plans
+    }
+}
+
+/// Interleave per-shard groups into global group order, validating the
+/// block-row-split contract as it goes (see the module docs).
+fn build_merged(plans: &[&ExecutionPlan]) -> Result<MergedSchedule> {
+    let order = plans[0].order;
+    let c = plans[0].c as u32;
+    // (group key, shard, start, end) for every non-empty shard group.
+    // A shard's groups have unique keys (the ST groups on the major
+    // key), so (key, shard) sorts ranges into merged-group order with
+    // shard-ascending runs per key.
+    let mut keyed: Vec<(u32, u32, u32, u32)> = Vec::new();
+    for (s, plan) in plans.iter().enumerate() {
+        for g in 0..plan.num_groups() {
+            let (start, end) = plan.group_bounds(g);
+            if start == end {
+                continue; // empty shard/group — legal, it just idles
+            }
+            let key = match order {
+                ExecOrder::ColumnMajor => plan.ops[start].dst_start / c,
+                ExecOrder::RowMajor => plan.ops[start].src_block,
+            };
+            keyed.push((key, s as u32, start as u32, end as u32));
+        }
+    }
+    keyed.sort_unstable();
+    let mut groups = Vec::new();
+    let mut ranges: Vec<ShardRange> = Vec::with_capacity(keyed.len());
+    let mut i = 0usize;
+    while i < keyed.len() {
+        let key = keyed[i].0;
+        let first = ranges.len() as u32;
+        while i < keyed.len() && keyed[i].0 == key {
+            let (_, shard, start, end) = keyed[i];
+            if let Some(prev) = ranges.get(first as usize..).and_then(|r| r.last()) {
+                match order {
+                    ExecOrder::RowMajor => anyhow::bail!(
+                        "block row {key} appears in shards {} and {shard} — \
+                         shards must own disjoint block-row ranges",
+                        prev.shard
+                    ),
+                    ExecOrder::ColumnMajor => {
+                        // Concatenation must reproduce the global
+                        // within-group (brow-ascending) order.
+                        let prev_plan = plans[prev.shard as usize];
+                        let last_block = prev_plan.ops[prev.end as usize - 1].src_block;
+                        let next_block = plans[shard as usize].ops[start as usize].src_block;
+                        anyhow::ensure!(
+                            last_block < next_block,
+                            "column group {key}: shard {shard} starts at block row \
+                             {next_block}, not after shard {}'s last block row \
+                             {last_block} — shards are not a contiguous block-row split",
+                            prev.shard
+                        );
+                    }
+                }
+            }
+            ranges.push(ShardRange { shard, start, end });
+            i += 1;
+        }
+        groups.push((first, ranges.len() as u32));
+    }
+    Ok(MergedSchedule { groups, ranges })
+}
+
+/// Phase-2/3 mechanism of a sharded run. Decisions never live here —
+/// phase 1 is always the one global sequential pass.
+enum Mech<'p> {
+    /// `std::thread::scope` workers per superstep; `threads == 1` is the
+    /// sequential mechanism (both phase helpers run inline below their
+    /// parallel thresholds).
+    Scoped { threads: usize },
+    /// Persistent pools, one per shard (`pools[shard % len]` serves the
+    /// shard's numeric phase; `pools[0]` replays the global lanes).
+    Pooled { pools: &'p mut [WorkerPool], threads: usize },
+}
+
+impl Mech<'_> {
+    fn threads(&self) -> usize {
+        match self {
+            Mech::Scoped { threads } | Mech::Pooled { threads, .. } => *threads,
+        }
+    }
+
+    /// Lane mode for the global phase-2 replay.
+    fn replay_mode(&mut self) -> LaneMode<'_> {
+        match self {
+            Mech::Scoped { threads } => LaneMode::Scoped { threads: *threads },
+            Mech::Pooled { pools, threads } => LaneMode::Pooled {
+                pool: PoolRef::Borrowed(&mut pools[0]),
+                threads: *threads,
+            },
+        }
+    }
+
+    /// Lane mode for one shard's phase-3 numeric batch.
+    fn numeric_mode(&mut self, shard: usize) -> LaneMode<'_> {
+        match self {
+            Mech::Scoped { threads } => LaneMode::Scoped { threads: *threads },
+            Mech::Pooled { pools, threads } => {
+                let idx = shard % pools.len();
+                LaneMode::Pooled { pool: PoolRef::Borrowed(&mut pools[idx]), threads: *threads }
+            }
+        }
+    }
+}
+
+/// Run `program` across the shard set with `threads` execution lanes on
+/// a transient pool. One shard delegates to [`par::run_parallel`]
+/// (which itself delegates to the sequential interpreter at
+/// `threads <= 1` or under tracing) — a 1-shard "sharded" run *is* the
+/// unsharded run, by construction rather than by test.
+pub fn run_sharded(
+    config: &ArchConfig,
+    params: &CostParams,
+    shards: &ShardPlans<'_>,
+    program: &dyn VertexProgram,
+    executor: &mut dyn StepExecutor,
+    threads: usize,
+) -> Result<RunResult> {
+    let threads = resolve_threads(threads);
+    if shards.len() == 1 {
+        return par::run_parallel(config, params, shards.plans[0], program, executor, threads);
+    }
+    if threads <= 1 {
+        return run_exchange(config, params, shards, program, executor, Mech::Scoped { threads: 1 });
+    }
+    let mut pools = [WorkerPool::new(threads)];
+    run_exchange(
+        config,
+        params,
+        shards,
+        program,
+        executor,
+        Mech::Pooled { pools: &mut pools, threads },
+    )
+}
+
+/// The scoped-mechanism baseline of [`run_sharded`] — kept so the
+/// determinism suite can cross-check all three mechanisms forever.
+pub fn run_sharded_scoped(
+    config: &ArchConfig,
+    params: &CostParams,
+    shards: &ShardPlans<'_>,
+    program: &dyn VertexProgram,
+    executor: &mut dyn StepExecutor,
+    threads: usize,
+) -> Result<RunResult> {
+    let threads = resolve_threads(threads);
+    if shards.len() == 1 {
+        return par::run_parallel_scoped(config, params, shards.plans[0], program, executor, threads);
+    }
+    run_exchange(
+        config,
+        params,
+        shards,
+        program,
+        executor,
+        Mech::Scoped { threads: threads.max(1) },
+    )
+}
+
+/// [`run_sharded`] on caller-owned persistent pools — the production
+/// path (`Session` checks one pool per shard out of its free list).
+/// `pools[shard % pools.len()]` serves each shard's numeric phase and
+/// `pools[0]` the global lane replay; the lane count caps at the
+/// smallest pool. One shard delegates to
+/// [`par::run_parallel_pooled_at`] on `pools[0]`.
+pub fn run_sharded_pooled(
+    config: &ArchConfig,
+    params: &CostParams,
+    shards: &ShardPlans<'_>,
+    program: &dyn VertexProgram,
+    executor: &mut dyn StepExecutor,
+    pools: &mut [WorkerPool],
+    threads: usize,
+) -> Result<RunResult> {
+    anyhow::ensure!(!pools.is_empty(), "sharded pooled run needs at least one pool");
+    let workers = pools.iter().map(|p| p.workers()).min().unwrap_or(1);
+    let threads = resolve_threads(threads).min(workers);
+    if shards.len() == 1 {
+        return par::run_parallel_pooled_at(
+            config,
+            params,
+            shards.plans[0],
+            program,
+            executor,
+            &mut pools[0],
+            threads,
+        );
+    }
+    if threads <= 1 {
+        return run_exchange(config, params, shards, program, executor, Mech::Scoped { threads: 1 });
+    }
+    run_exchange(config, params, shards, program, executor, Mech::Pooled { pools, threads })
+}
+
+/// The sharded three-phase pipeline (see the module docs): global
+/// dispatch over the merged schedule, global lane replay, per-shard
+/// numeric with the merged-order exchange reduce.
+fn run_exchange(
+    config: &ArchConfig,
+    params: &CostParams,
+    sp: &ShardPlans<'_>,
+    program: &dyn VertexProgram,
+    executor: &mut dyn StepExecutor,
+    mut mech: Mech<'_>,
+) -> Result<RunResult> {
+    config.validate()?;
+    anyhow::ensure!(
+        !config.trace_activity,
+        "activity tracing is not supported across shards — run with --shards 1 to trace"
+    );
+    let nshards = sp.plans.len();
+    let plan0 = sp.plans[0];
+    anyhow::ensure!(
+        plan0.matches(config),
+        "shard plans were compiled for a different architecture \
+         (plan C={} N={} T={} M={})",
+        plan0.c,
+        plan0.static_engines,
+        plan0.total_engines,
+        plan0.crossbars_per_engine
+    );
+    if program.needs_weights() {
+        anyhow::ensure!(
+            plan0.weighted,
+            "{} requires weighted partitioning",
+            program.name()
+        );
+    }
+    let c = plan0.c;
+    let n = plan0.num_vertices as usize;
+    let num_blocks = plan0.num_blocks as usize;
+    let n_static = config.static_engines;
+    let n_total = config.total_engines as usize;
+    let m = config.crossbars_per_engine as usize;
+
+    // --- one GLOBAL engine array + dispatch state: shards are a data
+    // --- decomposition, the simulated hardware is shared ---
+    let mut engines: Vec<Option<GraphEngine>> = (0..n_total)
+        .map(|i| {
+            let kind =
+                if (i as u32) < n_static { EngineKind::Static } else { EngineKind::Dynamic };
+            Some(GraphEngine::new(i as u32, kind, c, m as u32))
+        })
+        .collect();
+    let n_dyn_slots = config.dynamic_engines() as usize * m;
+    let mut policy = build_policy(config.policy, n_dyn_slots);
+    let mut dyn_dir: Vec<u32> = vec![NONE; plan0.num_patterns as usize];
+    let mut slot_rank: Vec<u32> = vec![NONE; n_dyn_slots];
+    let mut retired: Vec<bool> = vec![false; n_dyn_slots];
+    let mut shadow: Vec<Crossbar> = (0..n_dyn_slots).map(|_| Crossbar::new(c)).collect();
+    let mut shadow_busy = vec![0f64; n_total];
+
+    // --- initialization: the static configuration is identical across
+    // --- the shard set (validated), configured once globally ---
+    for &(slot, pattern) in plan0.static_config() {
+        engines[slot.engine as usize]
+            .as_mut()
+            .expect("engine present")
+            .configure(slot.crossbar as usize, pattern, params);
+    }
+    let mut init_counts = EventCounts::default();
+    let mut init_time_ns = 0f64;
+    for e in engines.iter_mut() {
+        let e = e.as_mut().expect("engine present");
+        init_counts.add(&e.counts);
+        let (busy, _) = e.end_iteration();
+        init_time_ns = init_time_ns.max(busy);
+    }
+    let counts_baseline = init_counts;
+
+    // --- GLOBAL vertex state: values, accumulator and frontier bitmap
+    // --- are shared by all shards (plan coordinates are global) ---
+    let mut values = program.init(plan0.num_vertices);
+    anyhow::ensure!(values.len() == n, "program init length mismatch");
+    let mut snapshot = values.clone();
+    let semiring = program.semiring();
+    let mut acc = match semiring {
+        Semiring::SumProd => vec![0f32; n],
+        Semiring::MinPlus => Vec::new(),
+    };
+    let outdeg = &sp.out_degrees;
+
+    let all_blocks = program.processes_all_blocks();
+    let mut active_block = vec![false; num_blocks];
+    let mut next_active_block = vec![false; num_blocks];
+    if !all_blocks {
+        for (v, &val) in values.iter().enumerate() {
+            if val < INF {
+                active_block[v / c] = true;
+            }
+        }
+    }
+
+    // --- per-engine lanes sized for the whole shard set ---
+    let mut records: Vec<Vec<LaneRecord>> = (0..n_total)
+        .map(|e| {
+            let cap: u32 = sp.plans.iter().map(|p| p.lanes().fixed_ops_on(e as u32)).sum();
+            Vec::with_capacity(cap as usize)
+        })
+        .collect();
+    let mut scratch = Scratch::new(n_total, mech.threads());
+
+    // --- main loop ---
+    let kind: StepKind = program.step_kind();
+    let mut exec_time_ns = 0f64;
+    let mut sys_counts = EventCounts::default();
+    let mut iterations = 0u64;
+    let mut static_ops = 0u64;
+    let mut dynamic_ops = 0u64;
+    let mut dynamic_hits = 0u64;
+    let mut supersteps = 0usize;
+
+    // Per-shard superstep batches (the outgoing update buckets) plus the
+    // merge sequence: one shard id per accepted op, in global dispatch
+    // order — the exchange's application order.
+    let mut sup_ops: Vec<Vec<u32>> = vec![Vec::new(); nshards];
+    let mut merged_seq: Vec<u32> = Vec::new();
+    let mut xs: Vec<f32> = Vec::new();
+    let mut cands: Vec<Vec<f32>> = vec![Vec::new(); nshards];
+
+    let lat_mvm = crate::cost::timing::mvm_latency_ns(params, c as u32, c as u32)
+        + crate::cost::timing::reduce_latency_ns(params, c as u32);
+
+    for superstep in 0..program.max_supersteps() {
+        snapshot.copy_from_slice(&values);
+        for ops in sup_ops.iter_mut() {
+            ops.clear();
+        }
+        merged_seq.clear();
+        for r in records.iter_mut() {
+            r.clear();
+        }
+        shadow_busy.iter_mut().for_each(|b| *b = 0.0);
+
+        // --- phase 1: ONE global dispatch pass over the merged groups ---
+        for &(gs, ge) in &sp.merged.groups {
+            let mut ops_in_group = 0u64;
+            for r in &sp.merged.ranges[gs as usize..ge as usize] {
+                let shard = r.shard as usize;
+                let plan = sp.plans[shard];
+                let lane_tab = plan.lanes();
+                let (start, end) = (r.start as usize, r.end as usize);
+                for (off, op) in plan.ops[start..end].iter().enumerate() {
+                    if !all_blocks && !active_block[op.src_block as usize] {
+                        continue;
+                    }
+                    ops_in_group += 1;
+                    if op.is_static() {
+                        let slots = plan.slots_of(op);
+                        let slot = if lane_tab.home_of(start + off).is_some() {
+                            slots[0]
+                        } else {
+                            *slots
+                                .iter()
+                                .min_by(|a, b| {
+                                    shadow_busy[a.engine as usize]
+                                        .total_cmp(&shadow_busy[b.engine as usize])
+                                })
+                                .expect("static op has a slot")
+                        };
+                        shadow_busy[slot.engine as usize] += lat_mvm;
+                        records[slot.engine as usize].push(LaneRecord::Mvm {
+                            crossbar: slot.crossbar,
+                            read_rows: op.read_rows,
+                        });
+                        static_ops += 1;
+                    } else {
+                        let rank = op.pattern_rank as usize;
+                        let hit = if config.dynamic_reuse {
+                            let k = dyn_dir[rank];
+                            (k != NONE && !retired[k as usize]).then_some(k as usize)
+                        } else {
+                            None
+                        };
+                        let k = match hit {
+                            Some(k) => {
+                                dynamic_hits += 1;
+                                k
+                            }
+                            None => {
+                                let pattern = plan.pattern_of_rank(op.pattern_rank);
+                                loop {
+                                    let k = policy.pick(&retired).ok_or_else(|| {
+                                        anyhow::anyhow!(
+                                            "all dynamic crossbars retired (wear-out)"
+                                        )
+                                    })?;
+                                    let (ei, cb) = slot_pos(config, k);
+                                    let old = slot_rank[k];
+                                    if old != NONE {
+                                        dyn_dir[old as usize] = NONE;
+                                        slot_rank[k] = NONE;
+                                    }
+                                    shadow[k].configure(pattern);
+                                    records[ei].push(LaneRecord::Configure {
+                                        crossbar: cb as u32,
+                                        rank: op.pattern_rank,
+                                    });
+                                    if shadow[k].worn_out(params.endurance_cycles) {
+                                        retired[k] = true;
+                                        continue;
+                                    }
+                                    slot_rank[k] = rank as u32;
+                                    dyn_dir[rank] = k as u32;
+                                    break k;
+                                }
+                            }
+                        };
+                        let (ei, cb) = slot_pos(config, k);
+                        records[ei].push(LaneRecord::Mvm {
+                            crossbar: cb as u32,
+                            read_rows: op.rows,
+                        });
+                        policy.touch(k);
+                        dynamic_ops += 1;
+                    }
+                    sup_ops[shard].push((start + off) as u32);
+                    merged_seq.push(r.shard);
+                }
+            }
+            if ops_in_group == 0 {
+                continue;
+            }
+            iterations += 1;
+            sys_counts.main_mem_accesses += 2 * ops_in_group.div_ceil(16);
+        }
+
+        // --- phase 2: one global lane replay (pattern ranks resolve
+        // --- identically through any shard's plan — validated) ---
+        {
+            let mut lm = mech.replay_mode();
+            exec_time_ns += replay_lanes(
+                &mut engines,
+                &records,
+                &mut scratch,
+                plan0,
+                params,
+                lat_mvm,
+                &mut lm,
+            );
+        }
+
+        if merged_seq.is_empty() {
+            break;
+        }
+
+        // --- phase 3: per-shard numeric (shard order, chunk-parallel
+        // --- within a shard), then the merged-order exchange reduce ---
+        for (s, plan) in sp.plans.iter().enumerate() {
+            cands[s].clear();
+            if sup_ops[s].is_empty() {
+                continue;
+            }
+            gather_sources(plan, program, kind, &snapshot, outdeg, &sup_ops[s], &mut xs);
+            let mut lm = mech.numeric_mode(s);
+            run_numeric(
+                executor,
+                kind,
+                plan,
+                &sup_ops[s],
+                &xs,
+                &mut cands[s],
+                &mut scratch.chunk_bufs,
+                &mut lm,
+            )?;
+        }
+        let any_changed = reduce_apply_merged(
+            &sp.plans,
+            program,
+            semiring,
+            &sup_ops,
+            &cands,
+            &merged_seq,
+            &mut values,
+            &mut acc,
+            &mut active_block,
+            &mut next_active_block,
+        );
+
+        supersteps = superstep + 1;
+        if !program.post_superstep(superstep, &mut values, &mut acc, any_changed) {
+            break;
+        }
+    }
+
+    // --- final accounting, identical to the unsharded paths ---
+    let mut counts = sys_counts;
+    let mut summaries = Vec::with_capacity(engines.len());
+    let mut max_dyn_writes = 0u32;
+    for e in &engines {
+        let e = e.as_ref().expect("engine present");
+        counts.add(&e.counts);
+        if e.kind == EngineKind::Dynamic {
+            max_dyn_writes = max_dyn_writes.max(e.max_cell_writes());
+        }
+        summaries.push(EngineSummary::of(e));
+    }
+    counts.subtract(&counts_baseline);
+
+    Ok(RunResult {
+        values,
+        counts,
+        init_counts,
+        exec_time_ns,
+        init_time_ns,
+        supersteps,
+        iterations,
+        static_ops,
+        dynamic_ops,
+        dynamic_hits,
+        max_dynamic_cell_writes: max_dyn_writes,
+        engines: summaries,
+        activity: None,
+    })
+}
+
+/// The exchange merge: apply the per-shard candidate buckets onto the
+/// shared values/accumulator **in the recorded merge sequence** (shard-
+/// then destination-group ordered — the byte-exact global reduce
+/// order), advancing one cursor per shard. Mirrors
+/// [`scheduler::reduce_apply`](super::scheduler) op for op; ordered
+/// application is load-bearing for `SumProd` (`f32` accumulation is not
+/// associative) and kept uniform for `MinPlus`.
+#[allow(clippy::too_many_arguments)]
+fn reduce_apply_merged(
+    plans: &[&ExecutionPlan],
+    program: &dyn VertexProgram,
+    semiring: Semiring,
+    sup_ops: &[Vec<u32>],
+    cands: &[Vec<f32>],
+    merged_seq: &[u32],
+    values: &mut [f32],
+    acc: &mut [f32],
+    active_block: &mut Vec<bool>,
+    next_active_block: &mut Vec<bool>,
+) -> bool {
+    let c = plans[0].c;
+    let n = values.len();
+    let mut cursor = vec![0usize; plans.len()];
+    let mut any_changed = false;
+    match semiring {
+        Semiring::MinPlus => {
+            next_active_block.iter_mut().for_each(|b| *b = false);
+            for &sraw in merged_seq {
+                let s = sraw as usize;
+                let k = cursor[s];
+                cursor[s] += 1;
+                let op = sup_ops[s][k] as usize;
+                let dst_start = plans[s].ops[op].dst_start as usize;
+                for j in 0..c {
+                    let v = dst_start + j;
+                    if v >= n {
+                        break;
+                    }
+                    let old = values[v];
+                    let new = program.apply(old, cands[s][k * c + j]);
+                    if program.changed(old, new) {
+                        values[v] = new;
+                        next_active_block[v / c] = true;
+                        any_changed = true;
+                    }
+                }
+            }
+            std::mem::swap(active_block, next_active_block);
+        }
+        Semiring::SumProd => {
+            for &sraw in merged_seq {
+                let s = sraw as usize;
+                let k = cursor[s];
+                cursor[s] += 1;
+                let op = sup_ops[s][k] as usize;
+                let dst_start = plans[s].ops[op].dst_start as usize;
+                for j in 0..c {
+                    let v = dst_start + j;
+                    if v >= n {
+                        break;
+                    }
+                    acc[v] += cands[s][k * c + j];
+                }
+            }
+            any_changed = true;
+        }
+    }
+    any_changed
+}
+
+/// Compile per-shard plans for `g` under a **global** pattern ranking:
+/// per-shard partition → per-shard counts merged shard-ascending →
+/// one `PatternRanking`/`ConfigTable` → per-shard ST + plan. This is
+/// the reference compile the simulator's sharded preprocess and the
+/// test suites share; count additivity (the chunk-merge invariant)
+/// makes the 1-shard output whole-struct-equal to the unsharded
+/// compile.
+pub(crate) fn compile_shard_plans(
+    g: &crate::graph::Coo,
+    config: &ArchConfig,
+    weighted: bool,
+    shards: usize,
+) -> Vec<ExecutionPlan> {
+    use crate::pattern::extract::partition;
+    use crate::pattern::rank::{count_patterns, merge_counts, PatternRanking};
+    use crate::pattern::tables::{ConfigTable, SubgraphTable};
+
+    let sh = crate::graph::shard::split(g, config.crossbar_size, shards);
+    let parts: Vec<_> =
+        sh.iter().map(|s| partition(&s.graph, config.crossbar_size, weighted)).collect();
+    let mut counts = std::collections::HashMap::new();
+    let mut total = 0usize;
+    for p in &parts {
+        merge_counts(
+            &mut counts,
+            count_patterns(&p.subgraphs).into_iter().map(|(k, v)| (k, v as i64)),
+        );
+        total += p.num_subgraphs();
+    }
+    let ranking = PatternRanking::from_counts(counts, total);
+    let ct = ConfigTable::build(
+        &ranking,
+        config.crossbar_size,
+        config.static_engines,
+        config.crossbars_per_engine,
+        config.dynamic_engines() * config.crossbars_per_engine,
+        config.static_assignment,
+    );
+    parts
+        .iter()
+        .map(|p| {
+            let st = SubgraphTable::build(p, &ranking, config.order);
+            ExecutionPlan::build(p, &ct, &st, config)
+        })
+        .collect()
+}
+
+/// Convenience: run sequentially (one lane) across the shard set —
+/// the "sequential mechanism" leg of the determinism matrix.
+pub fn run_sharded_sequential(
+    config: &ArchConfig,
+    params: &CostParams,
+    shards: &ShardPlans<'_>,
+    program: &dyn VertexProgram,
+    executor: &mut dyn StepExecutor,
+) -> Result<RunResult> {
+    if shards.len() == 1 {
+        return Scheduler::new(config, params, shards.plans[0]).run(program, executor);
+    }
+    run_exchange(config, params, shards, program, executor, Mech::Scoped { threads: 1 })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::{Bfs, PageRank, Wcc};
+    use crate::graph::datasets::Dataset;
+    use crate::sched::executor::NativeExecutor;
+
+    fn assert_same(a: &RunResult, b: &RunResult, ctx: &str) {
+        assert_eq!(a.values, b.values, "{ctx}: values");
+        assert_eq!(a.counts, b.counts, "{ctx}: counts");
+        assert_eq!(a.init_counts, b.init_counts, "{ctx}: init counts");
+        assert_eq!(a.exec_time_ns, b.exec_time_ns, "{ctx}: exec time");
+        assert_eq!(a.init_time_ns, b.init_time_ns, "{ctx}: init time");
+        assert_eq!(a.supersteps, b.supersteps, "{ctx}: supersteps");
+        assert_eq!(a.iterations, b.iterations, "{ctx}: iterations");
+        assert_eq!(a.static_ops, b.static_ops, "{ctx}: static ops");
+        assert_eq!(a.dynamic_ops, b.dynamic_ops, "{ctx}: dynamic ops");
+        assert_eq!(a.dynamic_hits, b.dynamic_hits, "{ctx}: dynamic hits");
+        assert_eq!(
+            a.max_dynamic_cell_writes, b.max_dynamic_cell_writes,
+            "{ctx}: wear"
+        );
+        assert_eq!(a.engines, b.engines, "{ctx}: engine summaries");
+    }
+
+    fn unsharded_reference(
+        g: &crate::graph::Coo,
+        config: &ArchConfig,
+        program: &dyn VertexProgram,
+    ) -> RunResult {
+        let params = CostParams::default();
+        let plans = compile_shard_plans(g, config, program.needs_weights(), 1);
+        Scheduler::new(config, &params, &plans[0])
+            .run(program, &mut NativeExecutor)
+            .unwrap()
+    }
+
+    #[test]
+    fn sharded_runs_match_the_sequential_interpreter() {
+        let g = Dataset::Tiny.load().unwrap();
+        let config = ArchConfig::default();
+        let params = CostParams::default();
+        for program in
+            [&Bfs::new(0) as &dyn VertexProgram, &Wcc, &PageRank::new(0.85, 5)]
+        {
+            let want = unsharded_reference(&g, &config, program);
+            for shards in [1usize, 2, 3, 4] {
+                let plans = compile_shard_plans(&g, &config, program.needs_weights(), shards);
+                let sp = ShardPlans::new(plans.iter().collect()).unwrap();
+                for threads in [1usize, 2, 4] {
+                    let got = run_sharded(
+                        &config, &params, &sp, program, &mut NativeExecutor, threads,
+                    )
+                    .unwrap();
+                    assert_same(
+                        &want,
+                        &got,
+                        &format!("{} shards={shards} threads={threads}", program.name()),
+                    );
+                }
+                let seq = run_sharded_sequential(
+                    &config, &params, &sp, program, &mut NativeExecutor,
+                )
+                .unwrap();
+                assert_same(&want, &seq, &format!("sequential shards={shards}"));
+            }
+        }
+    }
+
+    #[test]
+    fn row_major_order_shards_identically() {
+        let g = Dataset::Tiny.load().unwrap();
+        let config = ArchConfig { order: ExecOrder::RowMajor, ..ArchConfig::default() };
+        let params = CostParams::default();
+        let want = unsharded_reference(&g, &config, &Wcc);
+        for shards in [2usize, 4] {
+            let plans = compile_shard_plans(&g, &config, false, shards);
+            let sp = ShardPlans::new(plans.iter().collect()).unwrap();
+            let got =
+                run_sharded(&config, &params, &sp, &Wcc, &mut NativeExecutor, 4).unwrap();
+            assert_same(&want, &got, &format!("row-major shards={shards}"));
+        }
+    }
+
+    #[test]
+    fn scoped_and_pooled_mechanisms_agree_across_shards() {
+        let g = Dataset::Tiny.load().unwrap();
+        let config = ArchConfig::default();
+        let params = CostParams::default();
+        let program = PageRank::new(0.85, 4);
+        let want = unsharded_reference(&g, &config, &program);
+        let plans = compile_shard_plans(&g, &config, false, 3);
+        let sp = ShardPlans::new(plans.iter().collect()).unwrap();
+        let scoped =
+            run_sharded_scoped(&config, &params, &sp, &program, &mut NativeExecutor, 4)
+                .unwrap();
+        assert_same(&want, &scoped, "scoped");
+        let mut pools: Vec<WorkerPool> = (0..3).map(|_| WorkerPool::new(4)).collect();
+        for round in 0..2 {
+            let pooled = run_sharded_pooled(
+                &config, &params, &sp, &program, &mut NativeExecutor, &mut pools, 4,
+            )
+            .unwrap();
+            assert_same(&want, &pooled, &format!("pooled round {round}"));
+        }
+    }
+
+    #[test]
+    fn more_shards_than_blocks_still_bit_identical() {
+        // Shards past the block count compile empty plans (one empty
+        // group) — they idle through the merge without a byte of drift.
+        let g = crate::graph::generator::rmat(
+            16,
+            60,
+            crate::graph::generator::RmatParams::default(),
+            5,
+        );
+        let config = ArchConfig::default();
+        let params = CostParams::default();
+        let want = unsharded_reference(&g, &config, &Wcc);
+        let blocks = 16u32.div_ceil(config.crossbar_size as u32);
+        let shards = blocks as usize + 3;
+        let plans = compile_shard_plans(&g, &config, false, shards);
+        let sp = ShardPlans::new(plans.iter().collect()).unwrap();
+        let got = run_sharded(&config, &params, &sp, &Wcc, &mut NativeExecutor, 4).unwrap();
+        assert_same(&want, &got, "shards > blocks");
+    }
+
+    #[test]
+    fn tracing_multi_shard_is_a_typed_error_and_single_shard_delegates() {
+        let g = Dataset::Tiny.load().unwrap();
+        let config = ArchConfig { trace_activity: true, ..ArchConfig::fig5() };
+        let params = CostParams::default();
+        let plans = compile_shard_plans(&g, &config, false, 2);
+        let sp = ShardPlans::new(plans.iter().collect()).unwrap();
+        let err = run_sharded(&config, &params, &sp, &Bfs::new(0), &mut NativeExecutor, 4)
+            .unwrap_err();
+        assert!(err.to_string().contains("tracing"), "{err}");
+
+        let plans1 = compile_shard_plans(&g, &config, false, 1);
+        let sp1 = ShardPlans::new(plans1.iter().collect()).unwrap();
+        let traced =
+            run_sharded(&config, &params, &sp1, &Bfs::new(0), &mut NativeExecutor, 4)
+                .unwrap();
+        assert!(traced.activity.is_some(), "one shard traces via the interpreter");
+    }
+
+    #[test]
+    fn shard_plans_reject_foreign_plan_sets() {
+        let g = Dataset::Tiny.load().unwrap();
+        let a = ArchConfig::default();
+        let b = ArchConfig { crossbar_size: 2, ..ArchConfig::default() };
+        let pa = compile_shard_plans(&g, &a, false, 2);
+        let pb = compile_shard_plans(&g, &b, false, 2);
+        // Mixing geometries across "shards" must be rejected up front.
+        let err = ShardPlans::new(vec![&pa[0], &pb[1]]).unwrap_err();
+        assert!(err.to_string().contains("diverges"), "{err}");
+        assert!(ShardPlans::new(vec![]).is_err());
+        // Duplicating one shard's plan presents the same block rows
+        // twice — caught by the merge validation, not a wrong answer.
+        assert!(ShardPlans::new(vec![&pa[0], &pa[0]]).is_err());
+    }
+}

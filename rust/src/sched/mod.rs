@@ -8,6 +8,7 @@
 //! routes numeric edge-compute either through the native mirror or the
 //! AOT-compiled PJRT artifact.
 
+pub mod exchange;
 pub mod executor;
 pub mod oracle;
 pub mod par;
@@ -17,6 +18,7 @@ pub mod pool;
 pub mod replacement;
 pub mod scheduler;
 
+pub use exchange::{run_sharded, run_sharded_pooled, run_sharded_scoped, ShardPlans};
 pub use executor::{NativeExecutor, StepExecutor};
 pub use par::{
     resolve_threads, run_parallel, run_parallel_pooled, run_parallel_pooled_at,

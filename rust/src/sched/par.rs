@@ -134,13 +134,13 @@ pub fn resolve_threads(threads: usize) -> usize {
 /// or a transient one spawned **lazily** — a run whose supersteps all
 /// stay under the inline thresholds never spawns a thread at all, same
 /// as the scoped baseline.
-enum PoolRef<'p> {
+pub(crate) enum PoolRef<'p> {
     Borrowed(&'p mut WorkerPool),
     Lazy { threads: usize, pool: Option<WorkerPool> },
 }
 
 impl PoolRef<'_> {
-    fn get(&mut self) -> &mut WorkerPool {
+    pub(crate) fn get(&mut self) -> &mut WorkerPool {
         match self {
             PoolRef::Borrowed(pool) => pool,
             PoolRef::Lazy { threads, pool } => {
@@ -152,7 +152,7 @@ impl PoolRef<'_> {
 
 /// How phases 2/3 execute. The dispatch pass is identical either way —
 /// see the module docs.
-enum LaneMode<'p> {
+pub(crate) enum LaneMode<'p> {
     /// Per-superstep `std::thread::scope` spawns (the pre-pool baseline,
     /// kept for benches and differential tests).
     Scoped { threads: usize },
@@ -163,7 +163,7 @@ enum LaneMode<'p> {
 }
 
 impl LaneMode<'_> {
-    fn threads(&self) -> usize {
+    pub(crate) fn threads(&self) -> usize {
         match self {
             LaneMode::Scoped { threads } | LaneMode::Pooled { threads, .. } => *threads,
         }
@@ -173,7 +173,7 @@ impl LaneMode<'_> {
 /// Run-lifetime scratch for phases 2/3: everything here is allocated
 /// once per run (plan-/engine-sized) and only cleared per superstep, so
 /// the steady-state hot loop performs no heap allocation.
-struct Scratch {
+pub(crate) struct Scratch {
     /// Engine indices with queued records this superstep.
     active: Vec<usize>,
     /// Queued record count per active engine (parallel to `active`).
@@ -188,11 +188,11 @@ struct Scratch {
     lane_bufs: Vec<Vec<LaneSlot>>,
     /// Pooled numeric: one reusable output buffer per worker,
     /// double-buffered through the pool's channels.
-    chunk_bufs: Vec<Vec<f32>>,
+    pub(crate) chunk_bufs: Vec<Vec<f32>>,
 }
 
 impl Scratch {
-    fn new(n_engines: usize, workers: usize) -> Self {
+    pub(crate) fn new(n_engines: usize, workers: usize) -> Self {
         Self {
             active: Vec::with_capacity(n_engines),
             loads: Vec::with_capacity(n_engines),
@@ -265,7 +265,7 @@ pub(crate) fn replay_engine(
 /// channel round-trip, no spawns — when a single lane would do all the
 /// work.
 #[allow(clippy::too_many_arguments)]
-fn replay_lanes(
+pub(crate) fn replay_lanes(
     engines: &mut [Option<GraphEngine>],
     records: &[Vec<LaneRecord>],
     scratch: &mut Scratch,
@@ -376,7 +376,7 @@ fn replay_lanes(
 /// `executor`. Chunk boundaries never affect the result — each op's
 /// output lanes are an independent pure function of its operands.
 #[allow(clippy::too_many_arguments)]
-fn run_numeric(
+pub(crate) fn run_numeric(
     executor: &mut dyn StepExecutor,
     kind: crate::algo::traits::StepKind,
     plan: &ExecutionPlan,

@@ -96,6 +96,12 @@ pub struct ArtifactKey {
     scale_micro: u64,
     pub weighted: bool,
     arch: ArchSig,
+    /// Shard stamp: which block-row shard of a `shard_count`-way split
+    /// this artifact compiles. The default (`0` of `1`) is the unsharded
+    /// artifact, so single-shard sessions keep their historical keys —
+    /// and their already-published `.rpa` files — byte-for-byte.
+    shard_id: u32,
+    shard_count: u32,
 }
 
 /// The fixed-point (microunit) image of a scale factor — the form in
@@ -109,7 +115,32 @@ pub(crate) fn scale_micro(scale: f64) -> u64 {
 
 impl ArtifactKey {
     pub fn new(dataset: Dataset, scale: f64, weighted: bool, arch: &ArchConfig) -> Self {
-        Self { dataset, scale_micro: scale_micro(scale), weighted, arch: ArchSig::of(arch) }
+        Self {
+            dataset,
+            scale_micro: scale_micro(scale),
+            weighted,
+            arch: ArchSig::of(arch),
+            shard_id: 0,
+            shard_count: 1,
+        }
+    }
+
+    /// Stamp this key as shard `shard_id` of a `shard_count`-way
+    /// block-row split. `with_shard(0, 1)` is the identity — a 1-shard
+    /// key equals (and hashes/fingerprints as) the unsharded key.
+    pub fn with_shard(mut self, shard_id: u32, shard_count: u32) -> Self {
+        assert!(shard_count >= 1 && shard_id < shard_count, "shard id out of range");
+        self.shard_id = shard_id;
+        self.shard_count = shard_count;
+        self
+    }
+
+    pub fn shard_id(&self) -> u32 {
+        self.shard_id
+    }
+
+    pub fn shard_count(&self) -> u32 {
+        self.shard_count
     }
 
     pub fn scale(&self) -> f64 {
@@ -131,6 +162,8 @@ impl ArtifactKey {
         w.put_u32(self.arch.crossbars_per_engine);
         w.put_u8(self.arch.order.to_code());
         w.put_u8(self.arch.static_assignment.to_code());
+        w.put_u32(self.shard_id);
+        w.put_u32(self.shard_count);
     }
 
     pub(crate) fn decode_from(r: &mut Reader<'_>) -> Result<Self, CodecError> {
@@ -149,7 +182,12 @@ impl ArtifactKey {
             static_assignment: StaticAssignment::from_code(r.u8()?)
                 .ok_or(CodecError::Invalid("unknown static-assignment code"))?,
         };
-        Ok(Self { dataset, scale_micro, weighted, arch })
+        let shard_id = r.u32()?;
+        let shard_count = r.u32()?;
+        if shard_count == 0 || shard_id >= shard_count {
+            return Err(CodecError::Invalid("shard id out of range"));
+        }
+        Ok(Self { dataset, scale_micro, weighted, arch, shard_id, shard_count })
     }
 
     /// Stable 64-bit content address over the encoded key bytes — the
@@ -165,7 +203,7 @@ impl ArtifactKey {
     /// One-line human-readable identity (the `repro artifacts ls` view).
     pub fn summary(&self) -> String {
         format!(
-            "{} scale {:.3} {} | C={} T={} N={} M={} {:?} {:?}",
+            "{} scale {:.3} {} | C={} T={} N={} M={} {:?} {:?} | shard {}/{}",
             self.dataset.spec().short,
             self.scale(),
             if self.weighted { "weighted" } else { "unweighted" },
@@ -175,6 +213,8 @@ impl ArtifactKey {
             self.arch.crossbars_per_engine,
             self.arch.order,
             self.arch.static_assignment,
+            self.shard_id,
+            self.shard_count,
         )
     }
 }
@@ -500,6 +540,40 @@ impl ArtifactStore {
         Ok(Some(stats))
     }
 
+    /// Drop every cached **sharded** variant of `base` from both tiers
+    /// (shard stamps ignored in the match; `base` itself — the
+    /// unsharded key — is left alone). The streaming-mutation path
+    /// calls this instead of patching per-shard plans in place: the
+    /// patch kernel stays single-plan, and because the session's delta
+    /// log routes the next sharded compile to the mutated graph — and
+    /// the determinism contract makes that recompile bit-identical to
+    /// a patch — invalidate-to-recompile is an equivalent, simpler
+    /// policy. Returns the number of distinct shard keys dropped.
+    pub fn invalidate_sharded(&self, base: ArtifactKey) -> u32 {
+        let base = base.with_shard(0, 1);
+        let matches = |k: &ArtifactKey| k.shard_count() > 1 && k.with_shard(0, 1) == base;
+        let mut stale: std::collections::HashSet<ArtifactKey> = {
+            let mut slots = self.slots.lock().unwrap();
+            let keys: Vec<ArtifactKey> = slots.keys().filter(|k| matches(k)).copied().collect();
+            for k in &keys {
+                slots.remove(k);
+            }
+            keys.into_iter().collect()
+        };
+        // Disk files can outlive the memory tier (written by an earlier
+        // process), so sweep the directory by embedded key too.
+        if let Some(disk) = &self.disk {
+            for path in disk.entries() {
+                if let Ok(key) = DiskStore::embedded_key(&path) {
+                    if matches(&key) && disk.remove(&key) {
+                        stale.insert(key);
+                    }
+                }
+            }
+        }
+        stale.len() as u32
+    }
+
     /// Peek without building (does not count as a hit).
     pub fn get(&self, key: &ArtifactKey) -> Option<Arc<Preprocessed>> {
         let slot = self.slots.lock().unwrap().get(key).cloned()?;
@@ -610,12 +684,32 @@ mod tests {
     #[test]
     fn key_encoding_roundtrips() {
         let arch = ArchConfig { static_engines: 3, ..ArchConfig::default() };
-        let k = ArtifactKey::new(Dataset::WikiVote, 0.25, true, &arch);
+        let k = ArtifactKey::new(Dataset::WikiVote, 0.25, true, &arch).with_shard(2, 4);
         let mut w = Writer::new();
         k.encode_into(&mut w);
         let bytes = w.into_bytes();
         let got = ArtifactKey::decode_from(&mut Reader::new(&bytes)).unwrap();
         assert_eq!(k, got);
+        assert_eq!((got.shard_id(), got.shard_count()), (2, 4));
+    }
+
+    #[test]
+    fn shard_stamp_is_part_of_key_identity_and_defaults_to_unsharded() {
+        let a = key(1.0, false);
+        // The 1-shard stamp is the identity: same key, same fingerprint,
+        // so single-shard sessions keep serving their historical files.
+        assert_eq!(a, a.with_shard(0, 1));
+        assert_eq!(a.fingerprint(), a.with_shard(0, 1).fingerprint());
+        // Any real shard stamp is a distinct artifact.
+        assert_ne!(a, a.with_shard(0, 2));
+        assert_ne!(a.with_shard(0, 2), a.with_shard(1, 2));
+        assert_ne!(a.fingerprint(), a.with_shard(0, 2).fingerprint());
+        assert_ne!(
+            a.with_shard(0, 2).fingerprint(),
+            a.with_shard(1, 2).fingerprint()
+        );
+        assert!(a.summary().contains("shard 0/1"));
+        assert!(a.with_shard(1, 4).summary().contains("shard 1/4"));
     }
 
     #[test]

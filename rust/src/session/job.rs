@@ -30,6 +30,11 @@ pub struct JobSpec {
     /// thread). Purely a throughput knob — results are bit-identical for
     /// every setting.
     pub parallelism: Option<usize>,
+    /// Per-job override of the session's shard count (`None` = session
+    /// default). A scheduling knob exactly like `parallelism`: the shard
+    /// merge determinism invariant guarantees bit-identical results for
+    /// every shard count, so it never enters [`CoalesceKey`].
+    pub shards: Option<u32>,
     /// Dequeue priority: higher runs first within the serve queue
     /// (default 0; ties break earliest-deadline, then FIFO). Scheduling
     /// only — never part of the result or the coalesce identity.
@@ -47,9 +52,10 @@ pub struct JobSpec {
 /// invariants) — to produce bit-identical `SimReport`s, so the serve
 /// queue lets them share one execution (request coalescing).
 ///
-/// Deliberately *excludes* `parallelism` (a pure throughput knob —
-/// results are bit-identical for every lane count), `priority`, and
-/// `deadline` (scheduling inputs, not result inputs). Scale enters in
+/// Deliberately *excludes* `parallelism` and `shards` (pure throughput
+/// knobs — results are bit-identical for every lane count and every
+/// shard count), `priority`, and `deadline` (scheduling inputs, not
+/// result inputs). Scale enters in
 /// the same fixed-point microunit image the `ArtifactKey` uses, so
 /// "same scale" means the same thing at both cache levels.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
@@ -71,6 +77,7 @@ impl JobSpec {
             algorithm: algorithm.into(),
             params: AlgoParams::default(),
             parallelism: None,
+            shards: None,
             priority: 0,
             deadline: None,
         }
@@ -104,6 +111,14 @@ impl JobSpec {
     /// Override the session's execution-lane count for this job alone.
     pub fn with_parallelism(mut self, threads: usize) -> Self {
         self.parallelism = Some(threads);
+        self
+    }
+
+    /// Override the session's shard count for this job alone (must be
+    /// >= 1). A scheduling knob — shard count never changes a result
+    /// byte.
+    pub fn with_shards(mut self, shards: u32) -> Self {
+        self.shards = Some(shards);
         self
     }
 
@@ -142,6 +157,7 @@ impl JobSpec {
             "scale must be in (0, 1], got {}",
             self.scale
         );
+        anyhow::ensure!(self.shards != Some(0), "shard count must be >= 1");
         Ok(())
     }
 }
@@ -160,6 +176,9 @@ mod tests {
         assert_eq!(s.priority, 0);
         assert_eq!(s.deadline, None);
         assert!(s.validate().is_ok());
+        assert_eq!(s.shards, None);
+        assert_eq!(s.clone().with_shards(2).shards, Some(2));
+        assert!(s.clone().with_shards(0).validate().is_err());
         assert_eq!(s.clone().with_parallelism(4).parallelism, Some(4));
         assert_eq!(s.clone().with_priority(7).priority, 7);
         assert_eq!(
@@ -184,6 +203,7 @@ mod tests {
             base().coalesce_key(),
             base()
                 .with_parallelism(8)
+                .with_shards(4)
                 .with_priority(5)
                 .with_deadline(Duration::from_secs(1))
                 .coalesce_key()

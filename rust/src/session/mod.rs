@@ -86,7 +86,7 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::{Context, Result};
 
-use crate::accel::{Accelerator, ArchConfig, Preprocessed, SimReport};
+use crate::accel::{Accelerator, ArchConfig, Preprocessed, PreprocessTiming, SimReport};
 use crate::algo::traits::VertexProgram;
 use crate::coordinator::metrics::PreprocessPhases;
 use crate::cost::CostParams;
@@ -111,8 +111,10 @@ pub struct DeltaReport {
     /// Cached artifacts (memory or disk tier) patched in place — each
     /// one a whole-plan recompile avoided.
     pub patched_artifacts: u32,
-    /// Artifact keys with nothing cached in either tier: skipped, not
-    /// compiled — their next request builds from the mutated graph.
+    /// Artifact keys not patched in place: keys with nothing cached in
+    /// either tier, plus shard-stamped variants dropped from the cache
+    /// (sharded plans invalidate-to-recompile rather than patch) —
+    /// either way the next request builds from the mutated graph.
     pub skipped_keys: u32,
     /// Patch work accumulated across the patched artifacts.
     pub stats: PatchStats,
@@ -188,6 +190,7 @@ pub struct SessionBuilder {
     artifact_dir: Option<PathBuf>,
     parallelism: usize,
     preprocess_parallelism: Option<usize>,
+    shards: u32,
 }
 
 impl Default for SessionBuilder {
@@ -201,6 +204,7 @@ impl Default for SessionBuilder {
             artifact_dir: None,
             parallelism: 1,
             preprocess_parallelism: None,
+            shards: 1,
         }
     }
 }
@@ -268,6 +272,21 @@ impl SessionBuilder {
         self
     }
 
+    /// Default shard count for every job (default 1 — unsharded; must
+    /// be >= 1). With `N > 1` each graph is split into `N` contiguous
+    /// block-row shards ([`graph::shard`](crate::graph::shard)), each
+    /// compiled to its own artifact under a shard-stamped
+    /// [`ArtifactKey`] and run in lockstep through the deterministic
+    /// cross-shard exchange
+    /// ([`sched::exchange`](crate::sched::exchange)). Purely a
+    /// scheduling knob: results are bit-identical for every shard
+    /// count; a [`JobSpec::with_shards`] override wins per job. CLI
+    /// flag: `--shards`.
+    pub fn shards(mut self, shards: u32) -> Self {
+        self.shards = shards;
+        self
+    }
+
     /// Worker threads for **cold preprocessing** — chunked partitioning,
     /// parallel pattern mining, and plan-section emission all fan out
     /// over the session's pooled workers on a full cache miss (`0` = one
@@ -286,6 +305,7 @@ impl SessionBuilder {
     pub fn build(self) -> Result<Session> {
         self.arch.validate().context("invalid architecture")?;
         self.backend.validate()?;
+        anyhow::ensure!(self.shards >= 1, "session shard count must be >= 1");
         let registry = self.registry.unwrap_or_default();
         anyhow::ensure!(!registry.is_empty(), "algorithm registry is empty");
         let artifacts = match (self.artifacts, self.artifact_dir) {
@@ -319,6 +339,7 @@ impl SessionBuilder {
             artifacts,
             parallelism: resolve_threads(self.parallelism),
             preprocess_parallelism,
+            shards: self.shards,
             pools: Mutex::new(Vec::new()),
             delta_log: Mutex::new(HashMap::new()),
         })
@@ -340,6 +361,11 @@ pub struct Session {
     /// `REPRO_PREPROCESS_THREADS`; resolved, never 0). `None` = inherit
     /// the job's lane count per compile.
     preprocess_parallelism: Option<usize>,
+    /// Default shard count (>= 1; a per-job [`JobSpec::with_shards`]
+    /// override wins). A scheduling knob — never part of any cache or
+    /// coalesce identity except the shard-stamped `ArtifactKey`s the
+    /// sharded compile itself publishes under.
+    shards: u32,
     /// Free list of persistent lane-worker pools. A parallel job checks
     /// one out (spawning it on first need), runs on it with the lock
     /// *released*, and checks it back in — so N concurrent serve workers
@@ -395,6 +421,17 @@ impl Session {
     /// Lanes for one job: the spec's override, else the session default.
     fn threads_for(&self, spec: &JobSpec) -> usize {
         spec.parallelism.map(resolve_threads).unwrap_or(self.parallelism)
+    }
+
+    /// The session's default shard count (>= 1).
+    pub fn shards(&self) -> u32 {
+        self.shards
+    }
+
+    /// Shard count for one job: the spec's override, else the session
+    /// default.
+    fn shards_for(&self, spec: &JobSpec) -> u32 {
+        spec.shards.unwrap_or(self.shards).max(1)
     }
 
     /// Liveness probe of the session's persistent worker pools: `None`
@@ -491,6 +528,32 @@ impl Session {
         result
     }
 
+    /// Sharded counterpart of [`dispatch`](Self::dispatch): one worker
+    /// pool per shard checked out of the same free list (`pools[0]`
+    /// doubles as the global lane-replay pool). Sequential and tracing
+    /// jobs take the transient path — multi-shard tracing is a typed
+    /// error raised by the exchange itself, never a silent fallback.
+    fn dispatch_sharded(
+        &self,
+        acc: &Accelerator,
+        pres: &[Arc<Preprocessed>],
+        program: &dyn VertexProgram,
+        executor: &mut dyn StepExecutor,
+        threads: usize,
+    ) -> Result<SimReport> {
+        let shards: Vec<&Preprocessed> = pres.iter().map(|p| &**p).collect();
+        if threads <= 1 || self.arch.trace_activity {
+            return acc.run_sharded(&shards, program, executor, 1);
+        }
+        let mut pools: Vec<WorkerPool> =
+            (0..shards.len()).map(|_| self.checkout_pool(threads)).collect();
+        let result = acc.run_sharded_pooled(&shards, program, executor, &mut pools, threads);
+        for pool in pools {
+            self.checkin_pool(pool);
+        }
+        result
+    }
+
     /// The accelerator model this session simulates.
     pub fn accelerator(&self) -> Accelerator {
         Accelerator::new(self.arch.clone(), self.params.clone())
@@ -582,6 +645,78 @@ impl Session {
             })
     }
 
+    /// Compile-or-fetch a whole shard set: shard `s` lives under
+    /// `base.with_shard(s, n)` — its own `.rpa` file on the disk tier —
+    /// and any shard's full miss runs **one** global sharded compile
+    /// ([`Accelerator::preprocess_sharded_timed`]) memoized across the
+    /// set, so a cold start compiles each shard exactly once no matter
+    /// how many shards miss. Warm starts load per-shard files with zero
+    /// compiles, exactly like the unsharded tier-2 path.
+    fn compile_sharded_artifacts(
+        &self,
+        base: ArtifactKey,
+        shards: u32,
+        graph: Option<&Coo>,
+        threads: usize,
+    ) -> Result<Vec<Arc<Preprocessed>>> {
+        debug_assert!(shards > 1);
+        let acc = self.accelerator();
+        let compiled: Mutex<Option<Vec<(Preprocessed, PreprocessTiming)>>> = Mutex::new(None);
+        let mut out = Vec::with_capacity(shards as usize);
+        for s in 0..shards {
+            let key = base.with_shard(s, shards);
+            let pre =
+                self.artifacts.get_or_preprocess_with(key, &acc, graph, &|acc, g, weighted| {
+                    let mut cache = compiled.lock().unwrap();
+                    if cache.is_none() {
+                        let mut pool = (threads > 1).then(|| self.checkout_pool(threads));
+                        let result = acc.preprocess_sharded_timed(
+                            g,
+                            weighted,
+                            shards as usize,
+                            pool.as_mut(),
+                        );
+                        if let Some(pool) = pool {
+                            self.checkin_pool(pool);
+                        }
+                        *cache = Some(result?);
+                    }
+                    Ok(cache.as_ref().expect("memoized sharded compile")[s as usize].clone())
+                })?;
+            out.push(pre);
+        }
+        Ok(out)
+    }
+
+    /// Route one sharded artifact-set request with the same
+    /// mutated-graph discipline as [`artifact_for`](Self::artifact_for);
+    /// `shards == 1` is exactly the unsharded single-artifact path (the
+    /// unstamped key — cache-compatible with artifacts written before
+    /// sharding existed).
+    fn sharded_artifacts_for(
+        &self,
+        spec: &JobSpec,
+        weighted: bool,
+        shards: u32,
+        graph: Option<&Coo>,
+    ) -> Result<Vec<Arc<Preprocessed>>> {
+        let base = self.key_for(spec, weighted);
+        let threads = self.preprocess_threads_for(spec);
+        let owned;
+        let graph = match graph {
+            Some(g) => Some(g),
+            None if self.has_mutations(spec.dataset, spec.scale) => {
+                owned = self.mutated_graph(spec.dataset, spec.scale, weighted)?;
+                Some(&owned)
+            }
+            None => None,
+        };
+        if shards <= 1 {
+            return Ok(vec![self.compile_artifact(base, graph, threads)?]);
+        }
+        self.compile_sharded_artifacts(base, shards, graph, threads)
+    }
+
     /// Route one artifact request: a key whose `(dataset, scale)` has
     /// logged mutations must compile (on a full miss) from the mutated
     /// graph, never the pristine dataset load — a patched cache hit and
@@ -603,6 +738,18 @@ impl Session {
     pub fn preprocess(&self, spec: &JobSpec) -> Result<Arc<Preprocessed>> {
         let program = self.program_for(spec)?;
         self.artifact_for(spec, program.needs_weights())
+    }
+
+    /// Sharded Alg. 1 through the shared store: the job's shard count
+    /// (`spec.shards`, else the session default) decides the set; each
+    /// shard caches under its own shard-stamped [`ArtifactKey`] — its
+    /// own `.rpa` file on the disk tier — so `repro artifacts warm
+    /// --shards N` pre-bakes a whole scale-out deployment. One shard is
+    /// exactly [`preprocess`](Self::preprocess): the unstamped key,
+    /// cache-compatible with artifacts written before sharding existed.
+    pub fn preprocess_sharded(&self, spec: &JobSpec) -> Result<Vec<Arc<Preprocessed>>> {
+        let program = self.program_for(spec)?;
+        self.sharded_artifacts_for(spec, program.needs_weights(), self.shards_for(spec), None)
     }
 
     /// Apply a batch of streaming edge mutations to the spec's
@@ -628,6 +775,11 @@ impl Session {
                 }
                 None => report.skipped_keys += 1,
             }
+            // Shard-stamped variants are invalidated-to-recompile rather
+            // than patched: the delta log routes their next compile to
+            // the mutated graph, which the determinism contract makes
+            // bit-identical to an in-place patch.
+            report.skipped_keys += self.artifacts.invalidate_sharded(self.key_for(spec, weighted));
         }
         if !batch.is_empty() {
             self.delta_log
@@ -667,11 +819,24 @@ impl Session {
     /// also needs the graph, e.g. the CLI's `--validate` path.
     pub fn run_on(&self, spec: &JobSpec, graph: &Coo) -> Result<SimReport> {
         let program = self.program_for(spec)?;
-        let key = self.key_for(spec, program.needs_weights());
         let acc = self.accelerator();
-        let pre = self.compile_artifact(key, Some(graph), self.preprocess_threads_for(spec))?;
+        let shards = self.shards_for(spec);
         let mut exec = self.executor()?;
-        self.dispatch(&acc, &pre, program.as_ref(), exec.as_mut(), self.threads_for(spec))
+        if shards <= 1 {
+            let key = self.key_for(spec, program.needs_weights());
+            let pre =
+                self.compile_artifact(key, Some(graph), self.preprocess_threads_for(spec))?;
+            return self.dispatch(
+                &acc,
+                &pre,
+                program.as_ref(),
+                exec.as_mut(),
+                self.threads_for(spec),
+            );
+        }
+        let pres =
+            self.sharded_artifacts_for(spec, program.needs_weights(), shards, Some(graph))?;
+        self.dispatch_sharded(&acc, &pres, program.as_ref(), exec.as_mut(), self.threads_for(spec))
     }
 
     /// Run a job on a caller-provided executor (the serve workers reuse
@@ -683,8 +848,13 @@ impl Session {
     ) -> Result<SimReport> {
         let program = self.program_for(spec)?;
         let acc = self.accelerator();
-        let pre = self.artifact_for(spec, program.needs_weights())?;
-        self.dispatch(&acc, &pre, program.as_ref(), executor, self.threads_for(spec))
+        let shards = self.shards_for(spec);
+        if shards <= 1 {
+            let pre = self.artifact_for(spec, program.needs_weights())?;
+            return self.dispatch(&acc, &pre, program.as_ref(), executor, self.threads_for(spec));
+        }
+        let pres = self.sharded_artifacts_for(spec, program.needs_weights(), shards, None)?;
+        self.dispatch_sharded(&acc, &pres, program.as_ref(), executor, self.threads_for(spec))
     }
 
     /// DSE: best static/dynamic engine split for the job's algorithm on
@@ -796,6 +966,65 @@ mod tests {
             .unwrap();
         assert_eq!(seq.counts, over.counts);
         assert_eq!(seq.exec_time_ns, over.exec_time_ns);
+    }
+
+    #[test]
+    fn sharded_session_is_bit_identical_to_unsharded() {
+        let spec = JobSpec::new(Dataset::Tiny, "bfs").with_source(0);
+        let seq = Session::with_defaults().unwrap().run(&spec).unwrap();
+        let sharded = Session::builder().shards(3).parallelism(4).build().unwrap();
+        let a = sharded.run(&spec).unwrap();
+        assert_eq!(seq.run.as_ref().unwrap().values, a.run.as_ref().unwrap().values);
+        assert_eq!(seq.counts, a.counts);
+        assert_eq!(seq.exec_time_ns, a.exec_time_ns);
+        // One cached artifact per shard; a second run recompiles nothing
+        // and stays bit-identical.
+        assert_eq!(sharded.artifacts().stats().entries, 3);
+        let misses = sharded.artifacts().stats().misses;
+        let b = sharded.run(&spec).unwrap();
+        assert_eq!(sharded.artifacts().stats().misses, misses);
+        assert_eq!(a.counts, b.counts);
+        assert_eq!(a.exec_time_ns, b.exec_time_ns);
+        // A per-job shard override wins over the session default — and
+        // is a pure scheduling knob too.
+        let over = Session::with_defaults()
+            .unwrap()
+            .run(&spec.clone().with_shards(2).with_parallelism(4))
+            .unwrap();
+        assert_eq!(seq.counts, over.counts);
+        assert_eq!(seq.exec_time_ns, over.exec_time_ns);
+        // Zero shards is rejected at build time like any bad config.
+        assert!(Session::builder().shards(0).build().is_err());
+    }
+
+    #[test]
+    fn apply_delta_invalidates_sharded_variants() {
+        let session = Session::builder().shards(2).build().unwrap();
+        let spec = JobSpec::new(Dataset::Tiny, "bfs").with_source(0);
+        session.run(&spec).unwrap();
+        let g = session.load_graph(&spec).unwrap();
+        let e = g.edges[0];
+        let batch = DeltaBatch::new(
+            g.num_vertices,
+            vec![crate::graph::EdgeDelta::remove(e.src, e.dst)],
+        )
+        .unwrap();
+        let report = session.apply_delta(&spec, &batch).unwrap();
+        // Nothing was patched in place — only shard-stamped keys were
+        // cached, and those invalidate-to-recompile: 2 empty base keys
+        // plus the 2 dropped shard variants.
+        assert_eq!(report.patched_artifacts, 0);
+        assert_eq!(report.skipped_keys, 4);
+        // The post-delta sharded run compiles from the mutated graph and
+        // matches a cold unsharded run on the same graph byte for byte.
+        let after = session.run(&spec).unwrap();
+        let cold = Session::with_defaults()
+            .unwrap()
+            .run_on(&spec, &session.load_graph(&spec).unwrap())
+            .unwrap();
+        assert_eq!(after.run.as_ref().unwrap().values, cold.run.as_ref().unwrap().values);
+        assert_eq!(after.counts, cold.counts);
+        assert_eq!(after.exec_time_ns, cold.exec_time_ns);
     }
 
     #[test]

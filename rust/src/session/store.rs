@@ -23,8 +23,8 @@
 //! schema   u32   payload version (SCHEMA_VERSION) — bump whenever any
 //!                persisted in-memory type changes shape
 //! key      var   the full ArtifactKey (dataset short name, fixed-point
-//!                scale, weighted flag, arch signature) — compared, not
-//!                trusted, on load
+//!                scale, weighted flag, arch signature, shard stamp —
+//!                schema ≥ 4) — compared, not trusted, on load
 //! deltas   24 B  DeltaProvenance (schema ≥ 2): batches / dirty
 //!                partitions / patched ops absorbed since the last cold
 //!                compile — all zero for a cold save
@@ -89,7 +89,12 @@ pub const FORMAT_VERSION: u32 = 1;
 /// phase-split wall clock of the artifact's cold compile (and the thread
 /// count it fanned out over), so `repro artifacts ls` can show what each
 /// cached plan cost to build, cross-process.
-pub const SCHEMA_VERSION: u32 = 3;
+/// v4: the embedded [`ArtifactKey`] grew a shard stamp (`shard_id` of
+/// `shard_count`) — per-shard artifacts of a block-row split persist
+/// under distinct keys; a 1-shard key encodes as `0/1` so unsharded
+/// sessions keep their key identity (but v3 files lack the two fields
+/// entirely, hence the bump).
+pub const SCHEMA_VERSION: u32 = 4;
 
 const MAGIC: [u8; 8] = *b"RPREPROC";
 const FILE_PREFIX: &str = "plan-v";
@@ -402,6 +407,25 @@ impl DiskStore {
         out
     }
 
+    /// The [`ArtifactKey`] embedded in an artifact file's header, when
+    /// the file is readable under the current format and schema (stale
+    /// files carry no key this binary can decode). Never decodes the
+    /// payload. The streaming-mutation path uses this to sweep the
+    /// shard-stamped variants of a patched key.
+    pub fn embedded_key(path: &Path) -> Result<ArtifactKey, StoreError> {
+        let bytes = std::fs::read(path)?;
+        let format = envelope_format(&bytes)?;
+        if format != FORMAT_VERSION {
+            return Err(StoreError::FormatVersion { found: format });
+        }
+        let mut r = checked_payload(&bytes)?;
+        let schema = r.u32()?;
+        if schema != SCHEMA_VERSION {
+            return Err(StoreError::SchemaVersion { found: schema });
+        }
+        Ok(ArtifactKey::decode_from(&mut r)?)
+    }
+
     /// Human-readable one-line description of an artifact file (the
     /// `repro artifacts ls` view): versions, embedded key, size. Never
     /// decodes the payload.
@@ -413,27 +437,26 @@ impl DiskStore {
         }
         let mut r = checked_payload(&bytes)?;
         let schema = r.u32()?;
+        // The v4 key codec grew a shard stamp, so older keys no longer
+        // parse with it — stale schemas are reported, never decoded.
+        if schema != SCHEMA_VERSION {
+            return Ok(format!(
+                "schema v{schema} (stale; this binary reads v{SCHEMA_VERSION})"
+            ));
+        }
         let key = ArtifactKey::decode_from(&mut r)?;
-        let deltas = if schema >= 2 {
-            let prov = DeltaProvenance::decode_from(&mut r)?;
-            if prov.batches > 0 {
-                format!(
-                    "  deltas {} ({} dirty, {} ops)",
-                    prov.batches, prov.dirty_partitions, prov.patched_ops
-                )
-            } else {
-                String::new()
-            }
+        let prov = DeltaProvenance::decode_from(&mut r)?;
+        let deltas = if prov.batches > 0 {
+            format!(
+                "  deltas {} ({} dirty, {} ops)",
+                prov.batches, prov.dirty_partitions, prov.patched_ops
+            )
         } else {
             String::new()
         };
-        let compiled = if schema >= 3 {
-            let t = decode_timing(&mut r)?;
-            if t.total_ns() > 0 {
-                format!("  compiled {}us on {} thread(s)", t.total_ns() / 1_000, t.threads.max(1))
-            } else {
-                String::new()
-            }
+        let t = decode_timing(&mut r)?;
+        let compiled = if t.total_ns() > 0 {
+            format!("  compiled {}us on {} thread(s)", t.total_ns() / 1_000, t.threads.max(1))
         } else {
             String::new()
         };
@@ -821,12 +844,38 @@ mod tests {
         let (key, pre, _) = baked(false);
         store.save(&key, &pre).unwrap();
         let line = DiskStore::describe(&store.entries()[0]).unwrap();
-        assert!(line.contains("v1.3"), "{line}");
+        assert!(line.contains("v1.4"), "{line}");
         assert!(line.contains("TN"), "{line}");
+        assert!(line.contains("shard 0/1"), "{line}");
         // A plain save carries zero provenance and timing and the
         // listing stays quiet about both.
         assert!(!line.contains("deltas"), "{line}");
         assert!(!line.contains("compiled"), "{line}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn sharded_artifacts_persist_under_distinct_files() {
+        let dir = scratch("shard");
+        let store = DiskStore::open(&dir).unwrap();
+        let (key, pre, arch) = baked(false);
+        let k0 = key.with_shard(0, 2);
+        let k1 = key.with_shard(1, 2);
+        assert_ne!(store.path_of(&k0), store.path_of(&k1));
+        assert_ne!(store.path_of(&key), store.path_of(&k0));
+        assert!(store.save(&k0, &pre).unwrap());
+        assert!(store.save(&k1, &pre).unwrap());
+        assert_eq!(store.entries().len(), 2);
+        assert_eq!(store.load(&k0, &arch).unwrap(), pre);
+        // A differently-stamped key never serves another shard's file.
+        assert!(matches!(store.load(&key, &arch), Err(StoreError::Missing)));
+        let lines: Vec<String> = store
+            .entries()
+            .iter()
+            .map(|p| DiskStore::describe(p).unwrap())
+            .collect();
+        assert!(lines.iter().any(|l| l.contains("shard 0/2")), "{lines:?}");
+        assert!(lines.iter().any(|l| l.contains("shard 1/2")), "{lines:?}");
         let _ = std::fs::remove_dir_all(&dir);
     }
 

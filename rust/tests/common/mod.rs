@@ -189,3 +189,16 @@ pub fn default_threads() -> usize {
             .unwrap_or(2),
     )
 }
+
+/// The harness-default shard count: `REPRO_SHARDS` if set (the CI matrix
+/// adds a 2-shard leg), else 1 so a plain `cargo test` runs unsharded.
+/// Like `REPRO_THREADS`, this is consumed only here — library code never
+/// reads the environment. Tests that sweep shard counts explicitly don't
+/// use this; tests that just need "the configured decomposition" do.
+pub fn default_shards() -> u32 {
+    std::env::var("REPRO_SHARDS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .filter(|&s| s >= 1)
+        .unwrap_or(1)
+}

@@ -1,0 +1,373 @@
+//! Differential sharded-execution suite — the lockdown for the
+//! cross-shard frontier-exchange scheduler (`sched::exchange`) and the
+//! shard-stamped artifact tier.
+//!
+//! For random graphs × all four algorithms × randomized architectures,
+//! the full [`RunResult`] must be **bit-identical** across
+//! `shards ∈ {1, 2, 4}` × `threads ∈ {1, 4}` × execution mechanism
+//! (sequential delegate, scoped spawn, persistent pools) *and* match the
+//! unsharded on-line oracle `sched::oracle::run_reference`. Shards are a
+//! data decomposition, never a result dimension — one ULP of divergence
+//! is a scheduler bug, not a tolerance question.
+//!
+//! The persistence half extends the artifact-IO contract: every shard's
+//! `.rpa` file round-trips whole-struct-equal under its shard-stamped
+//! key, and a warm restart serves a sharded session with zero plan
+//! compilations.
+
+use std::sync::Arc;
+
+use repro::accel::{Accelerator, Preprocessed};
+use repro::algo::traits::VertexProgram;
+use repro::algo::{Bfs, PageRank, Sssp, Wcc};
+use repro::cost::CostParams;
+use repro::graph::datasets::Dataset;
+use repro::graph::generator::{rmat_stream, RmatParams};
+use repro::graph::shard::{split, unshard, Sharder};
+use repro::graph::Coo;
+use repro::sched::executor::NativeExecutor;
+use repro::sched::WorkerPool;
+use repro::session::{ArtifactKey, DiskStore, JobSpec, Session};
+use repro::util::SplitMix64;
+
+mod common;
+use common::{
+    assert_bit_identical, default_shards, default_threads, random_arch, random_graph,
+    with_random_weights,
+};
+
+fn shard_refs(pres: &[Preprocessed]) -> Vec<&Preprocessed> {
+    pres.iter().collect()
+}
+
+#[test]
+fn prop_sharded_runs_bit_identical_across_shards_threads_and_oracle() {
+    // The PR-9 acceptance property: shard count × thread count is a pure
+    // scheduling choice — every combination reproduces the unsharded
+    // oracle bit for bit.
+    for seed in 900..906u64 {
+        let g = random_graph(seed);
+        let mut rng = SplitMix64::new(seed ^ 0x5AAD);
+        let source = rng.next_bounded(g.num_vertices as u64) as u32;
+        let cfg = random_arch(&mut rng);
+        let gw = with_random_weights(&g, &mut rng);
+        let bfs = Bfs::new(source);
+        let sssp = Sssp::new(source);
+        let pagerank = PageRank::new(0.85, 4);
+        let wcc = Wcc;
+        let programs: [(&dyn VertexProgram, bool); 4] =
+            [(&bfs, false), (&sssp, true), (&pagerank, false), (&wcc, false)];
+        let acc = Accelerator::new(cfg.clone(), CostParams::default());
+        for (program, weighted) in programs {
+            let graph = if weighted { &gw } else { &g };
+            let pre = acc.preprocess(graph, weighted).unwrap();
+            let oracle = repro::sched::oracle::run_reference(
+                &cfg,
+                &CostParams::default(),
+                &pre,
+                program,
+                &mut NativeExecutor,
+            )
+            .unwrap();
+            for shards in [1usize, 2, 4] {
+                let pres = acc.preprocess_sharded(graph, weighted, shards, None).unwrap();
+                let refs = shard_refs(&pres);
+                for threads in [1usize, 4] {
+                    let run = acc
+                        .run_sharded(&refs, program, &mut NativeExecutor, threads)
+                        .unwrap()
+                        .run
+                        .unwrap();
+                    assert_bit_identical(
+                        &run,
+                        &oracle,
+                        &format!(
+                            "seed {seed} algo {} shards={shards} threads={threads} vs oracle",
+                            program.name()
+                        ),
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_sharded_pools_bit_identical_and_reusable() {
+    // The pooled mechanism (one persistent pool per shard) agrees with
+    // the transient path, and reusing the same pools across consecutive
+    // runs changes nothing — the serve-loop steady state.
+    for seed in 910..914u64 {
+        let g = random_graph(seed);
+        let mut rng = SplitMix64::new(seed ^ 0x9001);
+        let source = rng.next_bounded(g.num_vertices as u64) as u32;
+        let cfg = random_arch(&mut rng);
+        let acc = Accelerator::new(cfg.clone(), CostParams::default());
+        let program = Bfs::new(source);
+        let base = acc
+            .run_threaded(&acc.preprocess(&g, false).unwrap(), &program, &mut NativeExecutor, 1)
+            .unwrap()
+            .run
+            .unwrap();
+        for shards in [2usize, 4] {
+            let pres = acc.preprocess_sharded(&g, false, shards, None).unwrap();
+            let refs = shard_refs(&pres);
+            let mut pools: Vec<WorkerPool> =
+                (0..shards).map(|_| WorkerPool::new(4)).collect();
+            for round in 0..2 {
+                let run = acc
+                    .run_sharded_pooled(&refs, &program, &mut NativeExecutor, &mut pools, 4)
+                    .unwrap()
+                    .run
+                    .unwrap();
+                assert_bit_identical(
+                    &run,
+                    &base,
+                    &format!("seed {seed} shards={shards} round={round} [pooled vs seq]"),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_shard_rpa_files_roundtrip_and_serve_identically() {
+    // Persistence parity per shard: each shard's artifact round-trips
+    // whole-struct-equal under its shard-stamped key, the file's embedded
+    // key carries the stamp, and the loaded set replays bit-identically.
+    for seed in 920..924u64 {
+        let g = random_graph(seed);
+        let mut rng = SplitMix64::new(seed ^ 0xD15C);
+        let arch = random_arch(&mut rng);
+        let source = rng.next_bounded(g.num_vertices as u64) as u32;
+        let acc = Accelerator::new(arch.clone(), CostParams::default());
+        let shards = 3usize;
+        let pres = acc.preprocess_sharded(&g, false, shards, None).unwrap();
+        let dir = common::scratch_dir("shard-rpa");
+        let store = DiskStore::open(&dir).unwrap();
+        let base = ArtifactKey::new(Dataset::Tiny, 1.0, false, &arch);
+        let mut loaded = Vec::with_capacity(shards);
+        for (s, pre) in pres.iter().enumerate() {
+            let key = base.with_shard(s as u32, shards as u32);
+            assert!(store.save(&key, pre).unwrap(), "seed {seed}: shard {s} first save writes");
+            let got = store.load(&key, &arch).unwrap();
+            assert_eq!(pre, &got, "seed {seed}: shard {s} round trip");
+            loaded.push(got);
+        }
+        // Every persisted file self-describes its shard stamp.
+        let mut stamps: Vec<(u32, u32)> = store
+            .entries()
+            .iter()
+            .map(|p| {
+                let k = DiskStore::embedded_key(p).unwrap();
+                (k.shard_id(), k.shard_count())
+            })
+            .collect();
+        stamps.sort_unstable();
+        assert_eq!(stamps, vec![(0, 3), (1, 3), (2, 3)], "seed {seed}: embedded stamps");
+        let program = Bfs::new(source);
+        let a = acc
+            .run_sharded(&shard_refs(&pres), &program, &mut NativeExecutor, 2)
+            .unwrap()
+            .run
+            .unwrap();
+        let b = acc
+            .run_sharded(&shard_refs(&loaded), &program, &mut NativeExecutor, 2)
+            .unwrap()
+            .run
+            .unwrap();
+        assert_bit_identical(&a, &b, &format!("seed {seed}: loaded shard set vs in-memory"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+#[test]
+fn warm_restart_serves_sharded_session_with_zero_compiles() {
+    // A second process pointed at the same artifact directory must serve
+    // a sharded session purely from disk — the `artifacts warm --shards`
+    // contract — and reproduce the cold run bit for bit.
+    let dir = common::scratch_dir("shard-warm");
+    let spec = JobSpec::new(Dataset::Tiny, "pagerank").with_iterations(5);
+    let cold = Session::builder()
+        .shards(2)
+        .parallelism(2)
+        .artifact_dir(dir.clone())
+        .build()
+        .unwrap();
+    let a = cold.run(&spec).unwrap();
+    assert_eq!(cold.artifacts().stats().misses, 2, "cold: one compile per shard");
+    drop(cold);
+    let warm = Session::builder()
+        .shards(2)
+        .parallelism(2)
+        .artifact_dir(dir.clone())
+        .build()
+        .unwrap();
+    let b = warm.run(&spec).unwrap();
+    let s = warm.artifacts().stats();
+    assert_eq!(s.misses, 0, "warm restart must not compile any shard");
+    assert_eq!(s.disk_hits, 2, "both shard artifacts load from disk");
+    assert_bit_identical(
+        &a.run.unwrap(),
+        &b.run.unwrap(),
+        "warm sharded restart vs cold run",
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn session_jobs_honor_the_harness_shard_default() {
+    // The REPRO_SHARDS-driven default (CI adds a 2-shard leg) must serve
+    // results bit-identical to an explicitly unsharded session through
+    // the full Session/ArtifactStore path. `.max(2)` keeps the comparison
+    // sharded-vs-unsharded even in the default leg.
+    let shards = default_shards().max(2);
+    let plain = Session::builder().parallelism(1).build().unwrap();
+    let sharded = Session::builder()
+        .shards(shards)
+        .parallelism(default_threads())
+        .build()
+        .unwrap();
+    for spec in [
+        JobSpec::new(Dataset::Tiny, "bfs").with_source(3),
+        JobSpec::new(Dataset::Tiny, "sssp").with_source(1),
+        JobSpec::new(Dataset::Tiny, "pagerank").with_iterations(6),
+        JobSpec::new(Dataset::Tiny, "wcc"),
+    ] {
+        let a = plain.run(&spec).unwrap();
+        let b = sharded.run(&spec).unwrap();
+        assert_bit_identical(
+            &a.run.unwrap(),
+            &b.run.unwrap(),
+            &format!("{} at {shards} shards", spec.algorithm.as_str()),
+        );
+    }
+}
+
+#[test]
+fn streamed_rmat_shards_match_the_materialized_split() {
+    // `rmat_stream` → `Sharder` must equal materialize-then-`split`, and
+    // the batch size may only change where the stream is cut — never any
+    // shard's content. The streamed shard set then runs end to end,
+    // bit-identical to its own unsharded oracle.
+    let (n, m, seed) = (512u32, 4096usize, 0xF00Du64);
+    let c = 4usize;
+    let shards = 4usize;
+    for batch in [1usize, 7, 64, 4096] {
+        let mut sharder = Sharder::new(n, c, shards);
+        let mut all: Vec<repro::graph::coo::Edge> = Vec::new();
+        rmat_stream(n, m, RmatParams::default(), seed, batch, |edges| {
+            sharder.push(edges);
+            all.extend_from_slice(edges);
+        });
+        let streamed = sharder.finish();
+        let want = split(&Coo::from_edges(n, all), c, shards);
+        assert_eq!(streamed.len(), want.len(), "batch {batch}: shard count");
+        for (got, want) in streamed.iter().zip(&want) {
+            assert_eq!(got.shard_id, want.shard_id, "batch {batch}: shard id");
+            assert_eq!(
+                (got.brow_start, got.brow_end),
+                (want.brow_start, want.brow_end),
+                "batch {batch}: shard {} brow range",
+                got.shard_id
+            );
+            assert_eq!(
+                got.graph.num_vertices, want.graph.num_vertices,
+                "batch {batch}: shard {} vertex space",
+                got.shard_id
+            );
+            assert_eq!(
+                got.graph.edges, want.graph.edges,
+                "batch {batch}: shard {} edges diverge from materialized split",
+                got.shard_id
+            );
+        }
+        if batch == 64 {
+            // The streaming compile (never materializing the global edge
+            // list) must equal the materialized compile of its unshard,
+            // and its run must reproduce the unsharded oracle.
+            let g = unshard(&streamed);
+            let cfg = repro::accel::ArchConfig { crossbar_size: c, ..Default::default() };
+            let acc = Accelerator::new(cfg.clone(), CostParams::default());
+            let pre = acc.preprocess(&g, false).unwrap();
+            let oracle = repro::sched::oracle::run_reference(
+                &cfg,
+                &CostParams::default(),
+                &pre,
+                &Wcc,
+                &mut NativeExecutor,
+            )
+            .unwrap();
+            let from_stream: Vec<Preprocessed> = acc
+                .preprocess_shard_graphs_timed(&streamed, false, None)
+                .unwrap()
+                .into_iter()
+                .map(|(p, _)| p)
+                .collect();
+            let from_coo = acc.preprocess_sharded(&g, false, shards, None).unwrap();
+            assert_eq!(
+                from_stream, from_coo,
+                "streamed shard compile diverges from the materialized one"
+            );
+            let run = acc
+                .run_sharded(&shard_refs(&from_stream), &Wcc, &mut NativeExecutor, 2)
+                .unwrap()
+                .run
+                .unwrap();
+            assert_bit_identical(&run, &oracle, "streamed sharded wcc vs oracle");
+        }
+    }
+}
+
+#[test]
+#[ignore = "100M-edge stream; minutes of CPU and several GB of RAM — run explicitly with --ignored"]
+fn huge_streamed_rmat_runs_end_to_end_sharded_without_materializing() {
+    // The scale target behind `rmat_stream` + `Sharder`: a 100M-edge
+    // R-MAT graph (beyond every SNAP preset) streams in bounded batches
+    // straight into per-shard buckets — the global edge list never
+    // exists in one `Vec` — then compiles through the streaming shard
+    // entry and runs WCC end to end through the exchange scheduler.
+    let (n, m, seed) = (1u32 << 24, 100_000_000usize, 42u64);
+    let shards = 4usize;
+    let c = 4usize;
+    let mut sharder = Sharder::new(n, c, shards);
+    let emitted = rmat_stream(n, m, RmatParams::default(), seed, 1 << 20, |edges| {
+        sharder.push(edges);
+    });
+    assert!(emitted >= m / 2, "retry budget should cover most of the request");
+    let shard_graphs = sharder.finish();
+    assert_eq!(shard_graphs.len(), shards);
+    let total: usize = shard_graphs.iter().map(|s| s.num_edges()).sum();
+    assert!(total > 10_000_000, "dedup should still leave a huge graph, got {total}");
+    let cfg = repro::accel::ArchConfig { crossbar_size: c, ..Default::default() };
+    let acc = Accelerator::new(cfg, CostParams::default());
+    let pres: Vec<Preprocessed> = acc
+        .preprocess_shard_graphs_timed(&shard_graphs, false, None)
+        .unwrap()
+        .into_iter()
+        .map(|(p, _)| p)
+        .collect();
+    drop(shard_graphs);
+    let report = acc
+        .run_sharded(&shard_refs(&pres), &Wcc, &mut NativeExecutor, 4)
+        .unwrap();
+    let run = report.run.unwrap();
+    assert_eq!(run.values.len(), n as usize, "one label per vertex");
+    assert!(run.supersteps > 0 && run.counts.mvm_ops > 0, "the sharded run did real work");
+}
+
+#[test]
+fn sharded_session_runs_are_arc_shared_not_recompiled() {
+    // Repeat jobs on a sharded session hit the memory tier: the second
+    // run adds no misses and the artifacts are the same Arc allocations.
+    let session = Session::builder().shards(3).build().unwrap();
+    let spec = JobSpec::new(Dataset::Tiny, "wcc");
+    let first = session.preprocess_sharded(&spec).unwrap();
+    let misses = session.artifacts().stats().misses;
+    assert_eq!(misses, 3, "one compile per shard");
+    let second = session.preprocess_sharded(&spec).unwrap();
+    assert_eq!(session.artifacts().stats().misses, misses, "no recompiles");
+    for (a, b) in first.iter().zip(&second) {
+        assert!(Arc::ptr_eq(a, b), "memory tier must share the same artifact");
+    }
+}
