@@ -10,6 +10,12 @@
 //! 3. **Open-loop overload** — arrivals at a fixed rate a single worker
 //!    cannot sustain, with a per-job deadline: queue-wait percentiles
 //!    grow and expired jobs are load-shed instead of executed.
+//! 4. **Compatible burst, batched** — one algorithm over a wide source
+//!    spread against a single batching worker (`max_batch`): queued
+//!    batch-compatible jobs run as multi-source batches, paying the
+//!    plan walk / crossbar replay / pool dispatch once per batch. The
+//!    `batched` count against `completed` is the formation rate; every
+//!    report stays bit-identical to its solo run.
 //!
 //! Results are written to `BENCH_serve.json` at the **repo root**
 //! (anchored on `CARGO_MANIFEST_DIR`, not the invocation cwd) so serve
@@ -90,6 +96,35 @@ fn main() {
             ..LoadgenConfig::default()
         };
         let r = loadgen::run(&svc, &cfg).expect("open-loop run");
+        println!("{}\n", r.render());
+        reports.push(r);
+    }
+
+    // 4. Compatible burst + batching: a deep closed loop over one
+    // algorithm keeps batch-compatible work queued at the single
+    // worker, whose execution lanes make the batched pipeline pass
+    // eligible (`threads > 1`). Compare against scenario 2: coalescing
+    // dedupes identical results, batching shares the walk across
+    // *different* sources.
+    {
+        let svc = Service::spawn(ServiceConfig {
+            workers: 1,
+            parallelism: 4,
+            max_batch: 8,
+            queue_depth: 0,
+            ..ServiceConfig::default()
+        })
+        .expect("batched service");
+        let cfg = LoadgenConfig {
+            name: "compatible burst batched".to_string(),
+            dataset,
+            jobs,
+            mode: LoadMode::Closed { concurrency: 8 },
+            algorithms: vec!["bfs".to_string()],
+            sources: 64,
+            ..LoadgenConfig::default()
+        };
+        let r = loadgen::run(&svc, &cfg).expect("batched run");
         println!("{}\n", r.render());
         reports.push(r);
     }

@@ -452,6 +452,39 @@ impl Accelerator {
         Ok(self.report_of(program, run))
     }
 
+    /// Multi-job batch variant of [`run_pooled_at`](Self::run_pooled_at):
+    /// runs every program against the same artifact in one lane-interleaved
+    /// pipeline pass, paying the plan walk, crossbar replay, and pool
+    /// dispatch once per batch. Each returned report is bit-identical to
+    /// the one [`run_pooled_at`](Self::run_pooled_at) would produce for
+    /// that program alone ([`sched::par::run_parallel_pooled_batch`]
+    /// carries the determinism proof obligations).
+    ///
+    /// [`sched::par::run_parallel_pooled_batch`]: crate::sched::par::run_parallel_pooled_batch
+    pub fn run_batch_pooled_at(
+        &self,
+        pre: &Preprocessed,
+        programs: &[&dyn VertexProgram],
+        executor: &mut dyn StepExecutor,
+        pool: &mut crate::sched::WorkerPool,
+        threads: usize,
+    ) -> Result<Vec<SimReport>> {
+        let runs = crate::sched::par::run_parallel_pooled_batch(
+            &self.config,
+            &self.params,
+            &pre.plan,
+            programs,
+            executor,
+            pool,
+            threads,
+        )?;
+        Ok(programs
+            .iter()
+            .zip(runs)
+            .map(|(p, run)| self.report_of(*p, run))
+            .collect())
+    }
+
     /// Sharded Alg. 2: lockstep supersteps across a per-shard artifact
     /// set (one [`preprocess_sharded_timed`](Self::preprocess_sharded_timed)
     /// output) with the deterministic cross-shard frontier exchange

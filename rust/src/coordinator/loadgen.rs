@@ -128,6 +128,10 @@ pub struct LoadgenReport {
     /// Hardware work actually performed (counted once per execution —
     /// the gap against `completed` is the coalescing win).
     pub subgraph_ops: u64,
+    /// Jobs that ran inside a multi-job batch (size ≥ 2) — nonzero only
+    /// when the service was spawned with `max_batch > 1` and the trace
+    /// queued batch-compatible work.
+    pub batched: u64,
     pub queue_wait: LatencySummary,
     pub execution: LatencySummary,
 }
@@ -137,7 +141,7 @@ impl LoadgenReport {
     pub fn render(&self) -> String {
         format!(
             "{} [{}]: {} jobs in {:.3}s -> {:.1} jobs/s\n\
-             \x20 completed {} / failed {} / shed {} / coalesced {} (ops {})\n\
+             \x20 completed {} / failed {} / shed {} / coalesced {} / batched {} (ops {})\n\
              \x20 queue-wait {}\n\
              \x20 execution  {}",
             self.name,
@@ -149,6 +153,7 @@ impl LoadgenReport {
             self.failed,
             self.shed,
             self.coalesced,
+            self.batched,
             self.subgraph_ops,
             self.queue_wait.render(),
             self.execution.render(),
@@ -210,6 +215,7 @@ pub fn run(svc: &Service, cfg: &LoadgenConfig) -> Result<LoadgenReport> {
         shed: snap.jobs_shed,
         coalesced: snap.jobs_coalesced,
         subgraph_ops: snap.subgraph_ops,
+        batched: snap.jobs_batched,
         queue_wait: snap.queue_wait,
         execution: snap.execution,
     })
@@ -231,7 +237,7 @@ pub fn reports_to_json(reports: &[LoadgenReport]) -> String {
         s.push_str(&format!(
             "  {{\"name\": \"{}\", \"mode\": \"{}\", \"jobs\": {}, \"elapsed_s\": {:.6}, \
              \"throughput_jobs_per_s\": {:.2}, \"completed\": {}, \"failed\": {}, \
-             \"shed\": {}, \"coalesced\": {}, \"subgraph_ops\": {}, \
+             \"shed\": {}, \"coalesced\": {}, \"batched\": {}, \"subgraph_ops\": {}, \
              \"queue_wait_p50_us\": {}, \"queue_wait_p99_us\": {}, \
              \"queue_wait_p999_us\": {}, \"queue_wait_max_us\": {}, \
              \"exec_p50_us\": {}, \"exec_p99_us\": {}, \"exec_p999_us\": {}, \
@@ -245,6 +251,7 @@ pub fn reports_to_json(reports: &[LoadgenReport]) -> String {
             r.failed,
             r.shed,
             r.coalesced,
+            r.batched,
             r.subgraph_ops,
             r.queue_wait.p50_us,
             r.queue_wait.p99_us,
@@ -301,6 +308,29 @@ mod tests {
     }
 
     #[test]
+    fn batched_service_conserves_jobs() {
+        // One worker + deep closed loop so batch-compatible work queues
+        // up; conservation must hold whether or not batches formed.
+        let svc = Service::spawn(ServiceConfig {
+            workers: 1,
+            max_batch: 4,
+            ..ServiceConfig::default()
+        })
+        .unwrap();
+        let cfg = LoadgenConfig {
+            jobs: 16,
+            mode: LoadMode::Closed { concurrency: 8 },
+            algorithms: vec!["bfs".to_string()],
+            sources: 16,
+            ..LoadgenConfig::default()
+        };
+        let r = run(&svc, &cfg).unwrap();
+        assert_eq!(r.completed + r.failed + r.shed, 16);
+        assert_eq!(r.failed, 0);
+        assert!(r.batched <= r.completed, "batched jobs are completed jobs");
+    }
+
+    #[test]
     fn open_loop_submits_the_whole_trace() {
         let svc =
             Service::spawn(ServiceConfig { workers: 2, ..ServiceConfig::default() }).unwrap();
@@ -328,6 +358,7 @@ mod tests {
             shed: 0,
             coalesced: 1,
             subgraph_ops: 99,
+            batched: 3,
             queue_wait: LatencySummary::default(),
             execution: LatencySummary::default(),
         };
@@ -336,6 +367,7 @@ mod tests {
         assert!(json.contains("\"queue_wait_p999_us\""));
         assert!(json.contains("\"exec_p50_us\""));
         assert!(json.contains("\"coalesced\": 1"));
+        assert!(json.contains("\"batched\": 3"));
         assert!(json.trim_start().starts_with('['));
         assert!(json.trim_end().ends_with(']'));
     }

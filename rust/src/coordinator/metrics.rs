@@ -271,6 +271,12 @@ pub struct Metrics {
     /// *execution* — coalesced followers add completions but no ops;
     /// the gap between the two is the coalescing win made visible.
     pub subgraph_ops: AtomicU64,
+    /// Jobs that executed as part of a multi-job batch (batch size ≥ 2;
+    /// solo runs add nothing). Each batched job still records its own
+    /// completion and its own ops, so conservation is untouched — this
+    /// counter only makes the batching win visible:
+    /// `jobs_batched / jobs_completed` is the batched fraction.
+    pub jobs_batched: AtomicU64,
     /// Streaming-mutation counters (fed by the service's `apply_delta`
     /// entry point): delta batches accepted.
     pub delta_batches: AtomicU64,
@@ -281,6 +287,10 @@ pub struct Metrics {
     /// Cached artifacts patched in place — each one a whole-plan
     /// recompile the delta path avoided.
     pub delta_avoided_recompiles: AtomicU64,
+    /// Distribution of formed batch sizes (the [`Histogram`] buckets
+    /// hold job counts, not microseconds — same log-bucket layout).
+    /// One sample per formed batch, recorded alongside `jobs_batched`.
+    batch_sizes: Mutex<Histogram>,
     per_algo: Mutex<BTreeMap<String, AlgoEntry>>,
     /// Completed executions keyed by resolved shard count — the serve
     /// view of the scale-out knob. Purely a placement/throughput
@@ -306,6 +316,12 @@ pub struct MetricsSnapshot {
     /// Global dequeue → completion latency, merged across algorithms.
     pub execution: LatencySummary,
     pub subgraph_ops: u64,
+    /// Jobs that ran as part of a multi-job batch (size ≥ 2).
+    pub jobs_batched: u64,
+    /// Distribution of formed batch sizes — `count` is the number of
+    /// batches formed, and the `*_us` fields hold *job counts* (the
+    /// summary reuses the log-bucket latency histogram shape).
+    pub batch_size: LatencySummary,
     pub delta_batches: u64,
     pub delta_dirty_partitions: u64,
     pub delta_patched_ops: u64,
@@ -399,6 +415,20 @@ impl Metrics {
         *m.entry(shards.max(1)).or_default() += 1;
     }
 
+    /// A worker formed and successfully executed a multi-job batch of
+    /// `size` jobs in one pipeline pass. Only real batches count — the
+    /// serve loop never records `size < 2` (a batch of one is a solo
+    /// run). Each member job still records its own completion/ops.
+    pub fn record_batch(&self, size: usize) {
+        debug_assert!(size >= 2, "a batch of {size} is not a batch");
+        self.jobs_batched.fetch_add(size as u64, Ordering::Relaxed);
+        let mut h = self.batch_sizes.lock().unwrap_or_else(|poisoned| {
+            self.batch_sizes.clear_poison();
+            poisoned.into_inner()
+        });
+        h.record(size as u64);
+    }
+
     /// Fold one accepted delta batch's [`DeltaReport`] into the
     /// streaming-mutation counters.
     pub fn record_delta(&self, report: &DeltaReport) {
@@ -451,6 +481,15 @@ impl Metrics {
             queue_wait: queue_wait.summary(),
             execution: execution.summary(),
             subgraph_ops: self.subgraph_ops.load(Ordering::Relaxed),
+            jobs_batched: self.jobs_batched.load(Ordering::Relaxed),
+            batch_size: self
+                .batch_sizes
+                .lock()
+                .unwrap_or_else(|poisoned| {
+                    self.batch_sizes.clear_poison();
+                    poisoned.into_inner()
+                })
+                .summary(),
             delta_batches: self.delta_batches.load(Ordering::Relaxed),
             delta_dirty_partitions: self.delta_dirty_partitions.load(Ordering::Relaxed),
             delta_patched_ops: self.delta_patched_ops.load(Ordering::Relaxed),
@@ -540,6 +579,27 @@ mod tests {
         assert_eq!(bfs.queue_wait.count, 3);
         assert_eq!(bfs.execution.count, 2);
         assert_eq!(bfs.queue_wait.max_us, 500);
+    }
+
+    #[test]
+    fn batch_counters_track_batched_jobs_and_sizes() {
+        let m = Metrics::default();
+        assert_eq!(m.snapshot().jobs_batched, 0);
+        assert_eq!(m.snapshot().batch_size, LatencySummary::default());
+        m.record_batch(2);
+        m.record_batch(4);
+        // Each batched job still records its own completion + ops, so
+        // conservation and per-execution ops accounting are unchanged.
+        for _ in 0..6 {
+            m.record_submitted("bfs");
+            m.record_completion("bfs", 10, 20, 7);
+        }
+        let s = m.snapshot();
+        assert_eq!(s.jobs_batched, 6);
+        assert_eq!(s.batch_size.count, 2, "one sample per formed batch");
+        assert_eq!(s.batch_size.max_us, 4, "field holds a job count here");
+        assert_eq!(s.jobs_submitted, s.jobs_completed + s.jobs_failed + s.jobs_shed);
+        assert_eq!(s.subgraph_ops, 6 * 7, "ops once per batched execution");
     }
 
     #[test]

@@ -13,8 +13,23 @@
 //!   bit-identical clones of its report. This is the `ArtifactStore`'s
 //!   stampede coalescing lifted one level up — the store dedupes the
 //!   *compile*, the queue dedupes the *run*.
+//! - **Batch formation.** At dequeue a worker also claims queued
+//!   entries that are *batch-compatible* with the popped one — equal
+//!   [`JobSpec::batch_key`] (dataset, scale, algorithm kind, and every
+//!   result-determining parameter except the source) and equal
+//!   `parallelism`/`shards` overrides — and runs them as one
+//!   multi-source batch through the lane-interleaved pipeline
+//!   ([`Session::run_batch_with`]), paying the plan walk, crossbar
+//!   replay, and pool dispatch once per batch. Batching is **pure
+//!   scheduling**: every job's report is bit-identical to its solo
+//!   run, the batch key never feeds the coalesce key, and a failing or
+//!   panicking batch falls back to per-entry solo execution (so error
+//!   chains are solo-identical too). Off by default
+//!   ([`ServiceConfig::max_batch`] = 1).
 //! - **Ordered dequeue.** Workers pop the highest-priority entry;
 //!   ties break earliest-deadline-first, then FIFO by submission order.
+//!   Batch claiming never reorders the leader choice — compatible
+//!   followers are claimed *after* the best entry is selected.
 //! - **Bounded depth + backpressure.** The queue holds at most
 //!   `queue_depth` entries; `submit` blocks until a slot frees (a
 //!   coalesced follower never occupies a slot — it is pure win).
@@ -41,7 +56,7 @@ use crate::accel::{ArchConfig, SimReport};
 use crate::cost::CostParams;
 use crate::graph::DeltaBatch;
 use crate::sched::StepExecutor;
-use crate::session::{Backend, CoalesceKey, DeltaReport, JobSpec, Session};
+use crate::session::{Backend, BatchKey, CoalesceKey, DeltaReport, JobSpec, Session};
 
 use super::metrics::Metrics;
 
@@ -131,6 +146,15 @@ pub struct ServiceConfig {
     /// Coalesced followers ride existing entries and are never counted
     /// against the bound. `0` = unbounded.
     pub queue_depth: usize,
+    /// Most jobs one worker runs as a single multi-source batch: at
+    /// dequeue it claims up to `max_batch - 1` additional queued entries
+    /// batch-compatible with the popped one (equal
+    /// [`JobSpec::batch_key`] and equal scheduling overrides) and
+    /// executes them in one lane-interleaved pipeline pass. Purely a
+    /// scheduling knob — every job's report stays bit-identical to its
+    /// solo run. `0` or `1` disables batching (the default). CLI:
+    /// `--max-batch`.
+    pub max_batch: usize,
 }
 
 /// Default bound on queued entries (see [`ServiceConfig::queue_depth`]).
@@ -148,6 +172,7 @@ impl Default for ServiceConfig {
             shards: 1,
             artifact_dir: None,
             queue_depth: DEFAULT_QUEUE_DEPTH,
+            max_batch: 1,
         }
     }
 }
@@ -169,11 +194,19 @@ struct Rider {
 struct QueueEntry {
     spec: JobSpec,
     key: CoalesceKey,
+    /// Batch compatibility class (scheduling only — see
+    /// [`JobSpec::batch_key`]); computed once at push so `pop_batch`
+    /// claims are hash-free comparisons.
+    bkey: BatchKey,
     /// Max over riders' priorities — a high-priority follower promotes
     /// the whole entry (it shares the execution either way).
     priority: i8,
     /// FIFO tiebreaker.
     seq: u64,
+    /// Cached min over riders' deadlines (`None` = no rider is
+    /// deadline-bound), min-merged as followers coalesce on — so the
+    /// dequeue scan is O(entries), not O(entries × riders).
+    min_deadline: Option<Instant>,
     riders: Vec<Rider>,
 }
 
@@ -182,7 +215,26 @@ impl QueueEntry {
     /// deadline-bound). Drives earliest-deadline-first ordering within a
     /// priority class.
     fn order_deadline(&self) -> Option<Instant> {
-        self.riders.iter().filter_map(|r| r.deadline).min()
+        self.min_deadline
+    }
+
+    /// Fold one more rider's deadline into the cached minimum.
+    fn merge_deadline(&mut self, deadline: Option<Instant>) {
+        self.min_deadline = match (self.min_deadline, deadline) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        };
+    }
+
+    /// Whether `other` can run in the same multi-source batch as
+    /// `self`: same execution artifact and result-determining params
+    /// (the batch key) *and* the same scheduling overrides, so one
+    /// pooled pipeline pass serves both. Never consults the coalesce
+    /// key — batching shares the walk, not the result.
+    fn batch_compatible(&self, other: &QueueEntry) -> bool {
+        self.bkey == other.bkey
+            && self.spec.parallelism == other.spec.parallelism
+            && self.spec.shards == other.spec.shards
     }
 
     /// Strict "dequeue `a` before `b`" ordering: priority desc, then
@@ -261,16 +313,38 @@ impl JobQueue {
     /// Enqueue a submission. Coalesces onto an identical queued entry
     /// when one exists; otherwise takes a slot, blocking while the queue
     /// is full. Fails only when the queue has closed.
+    ///
+    /// Wake-token discipline (regression-locked by
+    /// `woken_submitter_that_coalesces_passes_the_slot_token_on`): each
+    /// `pop` signals `space` once — one freed slot, one woken submitter.
+    /// A woken submitter that then exits *without consuming the slot*
+    /// (it coalesced onto a later identical arrival, or the queue
+    /// closed) must pass the token on with another `notify_one`, or a
+    /// still-blocked submitter is stranded with a free slot it never
+    /// hears about.
     fn push(&self, spec: JobSpec, reply: Reply, submitted_at: Instant) -> Result<Submitted> {
         let key = spec.coalesce_key();
+        let bkey = spec.batch_key();
         let deadline = spec.deadline.map(|d| submitted_at + d);
         let priority = spec.priority;
         let mut st = self.lock();
+        let mut waited = false;
         loop {
-            anyhow::ensure!(st.open, "service stopped");
+            if !st.open {
+                if waited {
+                    self.space.notify_one();
+                }
+                anyhow::bail!("service stopped");
+            }
             if let Some(e) = st.entries.iter_mut().find(|e| e.key == key) {
                 e.priority = e.priority.max(priority);
+                e.merge_deadline(deadline);
                 e.riders.push(Rider { reply, submitted_at, deadline, coalesced: true });
+                // Coalescing consumes no slot: hand the wake token to
+                // the next blocked submitter instead of swallowing it.
+                if waited {
+                    self.space.notify_one();
+                }
                 return Ok(Submitted::Coalesced);
             }
             if st.entries.len() < self.capacity {
@@ -279,8 +353,10 @@ impl JobQueue {
                 st.entries.push(QueueEntry {
                     spec,
                     key,
+                    bkey,
                     priority,
                     seq,
+                    min_deadline: deadline,
                     riders: vec![Rider { reply, submitted_at, deadline, coalesced: false }],
                 });
                 self.available.notify_one();
@@ -289,13 +365,26 @@ impl JobQueue {
             // Backpressure: block until a worker pops an entry, then
             // rescan — the spec may now coalesce with a later arrival.
             st = self.wait(&self.space, st);
+            waited = true;
         }
     }
 
     /// Dequeue the best entry ([`QueueEntry::before`] order). Blocks
     /// while the queue is open and empty; drains remaining entries after
     /// close; returns `None` once closed *and* empty.
+    #[cfg(test)]
     fn pop(&self) -> Option<QueueEntry> {
+        self.pop_batch(1).map(|mut batch| batch.remove(0))
+    }
+
+    /// Dequeue the best entry ([`QueueEntry::before`] order) plus up to
+    /// `max - 1` queued entries batch-compatible with it, all claimed
+    /// under one lock hold — the leader is first in the returned vec.
+    /// Each claimed entry frees a queue slot (`space` is signaled once
+    /// per removal, exactly like a solo pop). Blocks while the queue is
+    /// open and empty; drains after close; `None` once closed and empty.
+    fn pop_batch(&self, max: usize) -> Option<Vec<QueueEntry>> {
+        debug_assert!(max >= 1);
         let mut st = self.lock();
         loop {
             if !st.entries.is_empty() {
@@ -305,9 +394,20 @@ impl JobQueue {
                         best = i;
                     }
                 }
-                let entry = st.entries.swap_remove(best);
+                let leader = st.entries.swap_remove(best);
                 self.space.notify_one();
-                return Some(entry);
+                let mut batch = vec![leader];
+                while batch.len() < max {
+                    let claim = st.entries.iter().position(|e| batch[0].batch_compatible(e));
+                    match claim {
+                        Some(i) => {
+                            batch.push(st.entries.swap_remove(i));
+                            self.space.notify_one();
+                        }
+                        None => break,
+                    }
+                }
+                return Some(batch);
             }
             if !st.open {
                 return None;
@@ -420,7 +520,12 @@ impl Service {
             builder = builder.artifact_dir(dir);
         }
         let session = builder.build()?;
-        Ok(Self::with_session_depth(Arc::new(session), config.workers, config.queue_depth))
+        Ok(Self::with_session_batch(
+            Arc::new(session),
+            config.workers,
+            config.queue_depth,
+            config.max_batch,
+        ))
     }
 
     /// Spawn workers over an existing session (sharing its registry and
@@ -431,10 +536,23 @@ impl Service {
     }
 
     /// [`with_session`](Service::with_session) with an explicit queue
-    /// bound (`0` = unbounded).
+    /// bound (`0` = unbounded). Batching stays off.
     pub fn with_session_depth(session: Arc<Session>, workers: usize, queue_depth: usize) -> Self {
+        Self::with_session_batch(session, workers, queue_depth, 1)
+    }
+
+    /// [`with_session_depth`](Service::with_session_depth) with an
+    /// explicit batch bound ([`ServiceConfig::max_batch`]; `0` or `1` =
+    /// no batching).
+    pub fn with_session_batch(
+        session: Arc<Session>,
+        workers: usize,
+        queue_depth: usize,
+        max_batch: usize,
+    ) -> Self {
         let queue = Arc::new(JobQueue::new(queue_depth));
         let metrics = Arc::new(Metrics::default());
+        let max_batch = max_batch.max(1);
         let handles = (0..workers.max(1))
             .map(|_| {
                 let queue = Arc::clone(&queue);
@@ -446,8 +564,8 @@ impl Service {
                     // across the worker's lifetime. A construction error
                     // fails the job (loudly) — there is no fallback.
                     let mut exec: Option<Box<dyn StepExecutor>> = None;
-                    while let Some(entry) = queue.pop() {
-                        Self::serve_entry(&session, &metrics, &mut exec, entry);
+                    while let Some(batch) = queue.pop_batch(max_batch) {
+                        Self::serve_batch(&session, &metrics, &mut exec, batch);
                     }
                 })
             })
@@ -455,21 +573,85 @@ impl Service {
         Self { queue, workers: handles, session, metrics }
     }
 
-    /// Run one dequeued entry: shed expired riders, execute once behind
-    /// a panic guard, fan the result out to every surviving rider.
-    fn serve_entry(
+    /// Run one dequeued batch. A single entry is exactly the solo path;
+    /// two or more live entries execute as one multi-source pipeline
+    /// pass ([`Session::run_batch_with`]) with per-job results fanned
+    /// out exactly as solo runs would be. A failing or panicking batch
+    /// falls back to per-entry solo execution so callers always observe
+    /// solo-identical results *and* error chains.
+    fn serve_batch(
         session: &Session,
         metrics: &Metrics,
         exec: &mut Option<Box<dyn StepExecutor>>,
-        entry: QueueEntry,
+        entries: Vec<QueueEntry>,
     ) {
-        let QueueEntry { spec, riders, .. } = entry;
-        let algo = spec.algorithm.as_str();
         let dequeued = Instant::now();
+        // Load shedding runs per entry first — batch claiming must not
+        // resurrect a rider whose deadline already passed.
+        let mut live_entries: Vec<(JobSpec, Vec<Rider>)> = Vec::with_capacity(entries.len());
+        for entry in entries {
+            let QueueEntry { spec, riders, .. } = entry;
+            let live = Self::shed_expired(metrics, spec.algorithm.as_str(), dequeued, riders);
+            if !live.is_empty() {
+                live_entries.push((spec, live));
+            }
+        }
+        if live_entries.len() <= 1 {
+            // 0 live jobs: nothing to run. 1: solo semantics, no batch
+            // metrics — a batch of one is not a batch.
+            if let Some((spec, live)) = live_entries.pop() {
+                Self::execute_and_fanout(session, metrics, exec, &spec, live, dequeued);
+            }
+            return;
+        }
 
-        // Load shedding: a rider whose deadline passed while queued gets
-        // a typed error instead of an executor. If *every* rider
-        // expired, the execution is skipped entirely.
+        let specs: Vec<JobSpec> = live_entries.iter().map(|(s, _)| s.clone()).collect();
+        let outcome = catch_unwind(AssertUnwindSafe(|| Self::run_jobs(session, exec, &specs)));
+        let exec_us = dequeued.elapsed().as_micros() as u64;
+        match outcome {
+            Ok(Ok(reports)) if reports.len() == live_entries.len() => {
+                metrics.record_batch(live_entries.len());
+                for ((spec, live), report) in live_entries.into_iter().zip(reports) {
+                    // Each batched job is its own execution: one
+                    // shard-count sample and one ops record per job,
+                    // exactly like its solo run.
+                    metrics.record_sharded_run(spec.shards.unwrap_or_else(|| session.shards()));
+                    Self::fanout_success(
+                        metrics,
+                        spec.algorithm.as_str(),
+                        dequeued,
+                        exec_us,
+                        live,
+                        report,
+                    );
+                }
+            }
+            other => {
+                // The batch pass failed as a whole (or returned a
+                // malformed shape). Post-unwind executor state is
+                // suspect — drop it before the retries. Then run every
+                // entry solo: per-job errors come from the job's own
+                // run, bit-identical chains included, and a healthy job
+                // sharing a batch with a poisoned one still completes.
+                if other.is_err() {
+                    *exec = None;
+                }
+                for (spec, live) in live_entries {
+                    Self::execute_and_fanout(session, metrics, exec, &spec, live, dequeued);
+                }
+            }
+        }
+    }
+
+    /// Load shedding: a rider whose deadline passed while queued gets a
+    /// typed error instead of an executor. Returns the survivors; when
+    /// every rider expired the execution is skipped entirely.
+    fn shed_expired(
+        metrics: &Metrics,
+        algo: &str,
+        dequeued: Instant,
+        riders: Vec<Rider>,
+    ) -> Vec<Rider> {
         let mut live = Vec::with_capacity(riders.len());
         for r in riders {
             match r.deadline {
@@ -482,13 +664,24 @@ impl Service {
                 _ => live.push(r),
             }
         }
-        if live.is_empty() {
-            return;
-        }
+        live
+    }
 
+    /// Execute one spec behind a panic guard and fan the outcome out to
+    /// its surviving riders — the solo execution path (and the per-entry
+    /// fallback when a batch pass fails).
+    fn execute_and_fanout(
+        session: &Session,
+        metrics: &Metrics,
+        exec: &mut Option<Box<dyn StepExecutor>>,
+        spec: &JobSpec,
+        live: Vec<Rider>,
+        dequeued: Instant,
+    ) {
+        let algo = spec.algorithm.as_str();
         // Panic isolation (satellite fix for worker death): a panicking
         // job must cost the service one job, not one worker.
-        let outcome = catch_unwind(AssertUnwindSafe(|| Self::run_job(session, exec, &spec)));
+        let outcome = catch_unwind(AssertUnwindSafe(|| Self::run_job(session, exec, spec)));
         let exec_us = dequeued.elapsed().as_micros() as u64;
 
         match outcome {
@@ -496,29 +689,7 @@ impl Service {
                 // One execution → one shard-count sample, regardless of
                 // how many coalesced riders it resolves.
                 metrics.record_sharded_run(spec.shards.unwrap_or_else(|| session.shards()));
-                let mut report = Some(report);
-                let n = live.len();
-                for (i, r) in live.into_iter().enumerate() {
-                    let queue_wait_us =
-                        dequeued.saturating_duration_since(r.submitted_at).as_micros() as u64;
-                    // Hardware work is counted once per *execution*: the
-                    // leader carries the ops, followers ride free — the
-                    // completed-vs-ops gap is the coalescing win.
-                    let ops = if r.coalesced { 0 } else { report.as_ref().unwrap().counts.mvm_ops };
-                    metrics.record_completion(algo, queue_wait_us, exec_us, ops);
-                    let rep = if i + 1 == n {
-                        report.take().unwrap()
-                    } else {
-                        report.as_ref().unwrap().clone()
-                    };
-                    let _ = r.reply.send(Ok(JobResult {
-                        report: rep,
-                        wall_time_us: queue_wait_us + exec_us,
-                        queue_wait_us,
-                        exec_us,
-                        coalesced: r.coalesced,
-                    }));
-                }
+                Self::fanout_success(metrics, algo, dequeued, exec_us, live, report);
             }
             Ok(Err(err)) => {
                 let msg = format!("{err:#}");
@@ -549,6 +720,44 @@ impl Service {
         }
     }
 
+    /// Fan one successful execution's report out to every surviving
+    /// rider. Hardware work is counted **once per execution**, carried
+    /// by whichever rider is delivered first — *not* keyed off the
+    /// `coalesced` flag: when the submitting leader was shed at dequeue,
+    /// every survivor is a coalesced follower, and the old
+    /// leader-carries-the-ops rule dropped the execution's ops on the
+    /// floor (the leader-shed accounting hole).
+    fn fanout_success(
+        metrics: &Metrics,
+        algo: &str,
+        dequeued: Instant,
+        exec_us: u64,
+        live: Vec<Rider>,
+        report: SimReport,
+    ) {
+        let mut ops_once = report.counts.mvm_ops;
+        let mut report = Some(report);
+        let n = live.len();
+        for (i, r) in live.into_iter().enumerate() {
+            let queue_wait_us =
+                dequeued.saturating_duration_since(r.submitted_at).as_micros() as u64;
+            let ops = std::mem::take(&mut ops_once);
+            metrics.record_completion(algo, queue_wait_us, exec_us, ops);
+            let rep = if i + 1 == n {
+                report.take().unwrap()
+            } else {
+                report.as_ref().unwrap().clone()
+            };
+            let _ = r.reply.send(Ok(JobResult {
+                report: rep,
+                wall_time_us: queue_wait_us + exec_us,
+                queue_wait_us,
+                exec_us,
+                coalesced: r.coalesced,
+            }));
+        }
+    }
+
     fn run_job(
         session: &Session,
         exec: &mut Option<Box<dyn StepExecutor>>,
@@ -558,6 +767,19 @@ impl Service {
             *exec = Some(session.executor()?);
         }
         session.run_with(spec, exec.as_mut().unwrap().as_mut())
+    }
+
+    /// Batch counterpart of [`run_job`](Self::run_job): one worker
+    /// executor, one lane-interleaved pipeline pass over every spec.
+    fn run_jobs(
+        session: &Session,
+        exec: &mut Option<Box<dyn StepExecutor>>,
+        specs: &[JobSpec],
+    ) -> Result<Vec<SimReport>> {
+        if exec.is_none() {
+            *exec = Some(session.executor()?);
+        }
+        session.run_batch_with(specs, exec.as_mut().unwrap().as_mut())
     }
 
     /// The shared session (inspect the registry, artifact-cache stats…).
@@ -932,5 +1154,106 @@ mod tests {
         let (tx, _rx) = mpsc::channel();
         assert!(q.push(JobSpec::new(Dataset::Tiny, "bfs"), tx, Instant::now()).is_err());
         assert!(q.pop().is_none());
+    }
+
+    /// Regression (backpressure-wake hole): a submitter woken from the
+    /// `space` condvar that then *coalesces* consumes the pop's wake
+    /// token without taking the freed slot. Pre-fix, a third blocked
+    /// submitter was stranded forever next to a free slot; the fix
+    /// re-signals `space` whenever a woken submitter exits without
+    /// consuming a slot.
+    #[test]
+    fn woken_submitter_that_coalesces_passes_the_slot_token_on() {
+        let q = Arc::new(JobQueue::new(2));
+        // Fill both slots with distinct entries.
+        entry_for(&q, JobSpec::new(Dataset::Tiny, "bfs").with_source(1));
+        entry_for(&q, JobSpec::new(Dataset::Tiny, "bfs").with_source(2));
+        // Three submitters of one identical spec all block on `space`.
+        let (done_tx, done_rx) = mpsc::channel();
+        let handles: Vec<_> = (0..3)
+            .map(|_| {
+                let q = Arc::clone(&q);
+                let done = done_tx.clone();
+                std::thread::spawn(move || {
+                    let (tx, _rx) = mpsc::channel();
+                    let spec = JobSpec::new(Dataset::Tiny, "bfs").with_source(7);
+                    q.push(spec, tx, Instant::now()).unwrap();
+                    done.send(()).unwrap();
+                })
+            })
+            .collect();
+        std::thread::sleep(Duration::from_millis(100));
+        // Two pops → two wake tokens. The first woken submitter inserts
+        // the shared spec (taking a slot); every later one coalesces and
+        // must pass its token on so the last submitter unblocks too.
+        q.pop().unwrap();
+        q.pop().unwrap();
+        for i in 0..3 {
+            done_rx.recv_timeout(Duration::from_secs(10)).unwrap_or_else(|_| {
+                panic!(
+                    "submitter {i} stranded: a woken submitter that \
+                     coalesced swallowed the wake token"
+                )
+            });
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let merged = q.pop().unwrap();
+        assert_eq!(merged.riders.len(), 3);
+        assert_eq!(merged.riders.iter().filter(|r| !r.coalesced).count(), 1);
+    }
+
+    #[test]
+    fn pop_batch_claims_only_batch_compatible_entries() {
+        let q = JobQueue::new(16);
+        let d = Dataset::Tiny;
+        entry_for(&q, JobSpec::new(d, "bfs").with_source(0)); // leader (FIFO)
+        entry_for(&q, JobSpec::new(d, "bfs").with_source(1)); // claimable
+        entry_for(&q, JobSpec::new(d, "wcc")); // different algorithm
+        entry_for(&q, JobSpec::new(d, "bfs").with_source(2).with_parallelism(4)); // override differs
+        entry_for(&q, JobSpec::new(d, "bfs").with_source(3)); // claimable
+        let batch = q.pop_batch(8).unwrap();
+        assert_eq!(batch[0].spec.params.source, 0, "claiming never reorders the leader choice");
+        let mut claimed: Vec<u32> = batch[1..].iter().map(|e| e.spec.params.source).collect();
+        claimed.sort_unstable();
+        assert_eq!(claimed, [1, 3], "only equal batch key + equal overrides are claimed");
+        // The incompatible entries still serve normally afterwards.
+        assert_eq!(q.pop_batch(8).unwrap().len(), 1);
+        assert_eq!(q.pop_batch(8).unwrap().len(), 1);
+    }
+
+    #[test]
+    fn pop_batch_respects_the_batch_bound() {
+        let q = JobQueue::new(16);
+        for s in 0..5u32 {
+            entry_for(&q, JobSpec::new(Dataset::Tiny, "bfs").with_source(s));
+        }
+        assert_eq!(q.pop_batch(3).unwrap().len(), 3);
+        assert_eq!(q.pop_batch(3).unwrap().len(), 2);
+        // Solo pops are exactly pop_batch(1).
+        for s in 5..7u32 {
+            entry_for(&q, JobSpec::new(Dataset::Tiny, "bfs").with_source(s));
+        }
+        assert_eq!(q.pop_batch(1).unwrap().len(), 1);
+        assert_eq!(q.pop().unwrap().riders.len(), 1);
+    }
+
+    #[test]
+    fn pop_batch_frees_a_slot_per_claimed_entry() {
+        // Capacity 3, full; one pop_batch(3) drains every compatible
+        // entry and must free *all three* slots — three more submits go
+        // through without blocking.
+        let q = JobQueue::new(3);
+        for s in 0..3u32 {
+            entry_for(&q, JobSpec::new(Dataset::Tiny, "bfs").with_source(s));
+        }
+        assert_eq!(q.pop_batch(3).unwrap().len(), 3);
+        for s in 10..13u32 {
+            assert!(matches!(
+                entry_for(&q, JobSpec::new(Dataset::Tiny, "bfs").with_source(s)),
+                Submitted::Queued
+            ));
+        }
     }
 }

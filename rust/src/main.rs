@@ -37,12 +37,13 @@ USAGE:
   repro dse <DATASET> [--algo NAME] [--scale F] [arch options]
   repro datasets
   repro serve [--jobs N] [--workers N] [--backend native|pjrt]
-              [--dataset DATASET] [--scale F] [arch options]
+              [--dataset DATASET] [--scale F] [--max-batch B]
+              [arch options]
   repro loadgen [--dataset DATASET] [--jobs N] [--workers N]
                 [--mode closed|open] [--concurrency C] [--rate R]
-                [--deadline-ms MS] [--queue-depth Q] [--sources S]
-                [--seed N] [--algo NAME] [--scale F] [--out FILE]
-                [arch options]
+                [--deadline-ms MS] [--queue-depth Q] [--max-batch B]
+                [--sources S] [--seed N] [--algo NAME] [--scale F]
+                [--out FILE] [arch options]
   repro artifacts warm <DATASET> --artifact-dir DIR [--algo NAME]
                   [--scale F] [--shards N] [--assert-warm] [arch options]
   repro artifacts ls --artifact-dir DIR
@@ -65,8 +66,16 @@ optionally with a per-job deadline budget (--deadline-ms, expired jobs
 are load-shed and counted) and a bounded queue (--queue-depth, submit
 blocks when full). --sources 1 makes every job of an algorithm
 identical — maximum request-coalescing pressure. The scenario report
-(throughput, shed/coalesced counts, latency percentiles) prints and
-lands as JSON at --out (default BENCH_serve.json).
+(throughput, shed/coalesced/batched counts, latency percentiles) prints
+and lands as JSON at --out (default BENCH_serve.json).
+
+--max-batch B (serve and loadgen, default 1 = off) lets each worker
+claim up to B batch-compatible queued jobs — same dataset, scale,
+algorithm and result-determining params, differing only in source —
+at dequeue and run them as one multi-source batch, paying the plan
+walk and crossbar replay once per batch. Purely a scheduling knob:
+every job's result is bit-identical to its solo run, and batching
+never widens coalescing (batch key and coalesce key are distinct).
 
 Every pipeline command accepts --artifact-dir DIR: preprocessed
 artifacts — including the compiled execution plan — are serialized
@@ -532,8 +541,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let d = parse_dataset(&dataset_s)?;
     let scale = scale_for(d, args)?;
 
+    let max_batch: usize = args.get_or("max-batch", 1usize)?;
+
     let session = Arc::new(session_from(args)?);
-    let svc = Service::with_session(Arc::clone(&session), workers);
+    let svc = Service::with_session_batch(
+        Arc::clone(&session),
+        workers,
+        repro::coordinator::DEFAULT_QUEUE_DEPTH,
+        max_batch,
+    );
 
     // One mixed batch cycling through every registered algorithm.
     let algos: Vec<_> = session.registry().ids().cloned().collect();
@@ -567,9 +583,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
         fmt::count(s.subgraph_ops)
     );
     println!(
-        "shed {} (expired deadlines), coalesced {} (shared executions)",
-        s.jobs_shed, s.jobs_coalesced
+        "shed {} (expired deadlines), coalesced {} (shared executions), \
+         batched {} (multi-source batches)",
+        s.jobs_shed, s.jobs_coalesced, s.jobs_batched
     );
+    if s.batch_size.count > 0 {
+        // The batch-size histogram's buckets hold job counts, not µs —
+        // render the unitless fields by hand.
+        println!(
+            "batch sizes (jobs per formed batch) n={} mean {:.1} p50 {} max {}",
+            s.batch_size.count, s.batch_size.mean_us, s.batch_size.p50_us, s.batch_size.max_us
+        );
+    }
     println!("queue-wait {}", s.queue_wait.render());
     println!("execution  {}", s.execution.render());
     println!(
@@ -622,6 +647,7 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         parallelism: args.get_or("threads", 1usize)?,
         shards: args.get_or("shards", 1u32)?,
         queue_depth: args.get_or("queue-depth", repro::coordinator::DEFAULT_QUEUE_DEPTH)?,
+        max_batch: args.get_or("max-batch", 1usize)?,
         ..ServiceConfig::default()
     };
     if let Some(dir) = args.get_path("artifact-dir") {

@@ -179,6 +179,68 @@ impl StepExecutor for PjrtExecutor {
         }
         Ok(())
     }
+
+    /// Batched variant: the dense (B, C, C) matrix packing — the
+    /// expensive per-op decode on this backend — is done once per chunk
+    /// and reused for every lane's dispatch. Each lane's dispatch is the
+    /// same padded execution its solo [`execute`](StepExecutor::execute)
+    /// would issue (same chunk boundaries, same matrices, same padded
+    /// inputs), so per-lane outputs are bit-identical to solo.
+    fn execute_multi(
+        &mut self,
+        kind: StepKind,
+        batch: StepBatch<'_>,
+        lanes: usize,
+        xs: &[f32],
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        anyhow::ensure!(lanes >= 1, "execute_multi requires at least one lane");
+        if lanes == 1 {
+            return self.execute(kind, batch, xs, out);
+        }
+        let c = batch.c();
+        anyhow::ensure!(xs.len() == batch.len() * lanes * c, "xs length mismatch");
+        if kind == StepKind::Sssp {
+            anyhow::ensure!(batch.weighted(), "SSSP requires weighted partitioning");
+        }
+        let b = self.runtime.load(kind, c)?.batch;
+        anyhow::ensure!(b > 0, "artifact for {kind:?} at C={c} declares batch size 0");
+        let ident = identity(kind);
+        let cc = c * c;
+        let len = batch.len() * lanes * c;
+        out.truncate(len);
+        out.fill(ident);
+        out.resize(len, ident);
+
+        let mut chunk_start = 0usize;
+        while chunk_start < batch.len() {
+            let chunk_len = b.min(batch.len() - chunk_start);
+            self.mats.clear();
+            self.mats.resize(b * cc, 0.0);
+            for k in 0..chunk_len {
+                batch.dense_into(chunk_start + k, &mut self.mats[k * cc..(k + 1) * cc]);
+            }
+            let mats = std::mem::take(&mut self.mats);
+            for l in 0..lanes {
+                self.xvec.clear();
+                self.xvec.resize(b * c, ident);
+                for k in 0..chunk_len {
+                    let src = ((chunk_start + k) * lanes + l) * c;
+                    self.xvec[k * c..(k + 1) * c].copy_from_slice(&xs[src..src + c]);
+                }
+                let xvec = std::mem::take(&mut self.xvec);
+                let res = self.runtime.dispatch(kind, c, &mats, &xvec)?;
+                self.xvec = xvec;
+                for k in 0..chunk_len {
+                    let dst = ((chunk_start + k) * lanes + l) * c;
+                    out[dst..dst + c].copy_from_slice(&res[k * c..(k + 1) * c]);
+                }
+            }
+            self.mats = mats;
+            chunk_start += chunk_len;
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]

@@ -50,6 +50,60 @@ pub trait StepExecutor {
     fn fork(&self) -> Option<Box<dyn StepExecutor + Send>> {
         None
     }
+
+    /// Multi-job (multi-source) variant of [`execute`](Self::execute):
+    /// the same op batch evaluated against `lanes` independent input
+    /// vectors at once, so per-op operand decode — packed pattern bits,
+    /// weight slices — is paid once per op instead of once per job.
+    ///
+    /// `xs` and `out` are **op-major lane-interleaved**: the C-vector for
+    /// union-op index `k` and lane `l` lives at
+    /// `[(k * lanes + l) * c .. (k * lanes + l + 1) * c]`. This keeps a
+    /// contiguous chunk of ops `[a, b)` owning the contiguous slice
+    /// `xs[a * lanes * c .. b * lanes * c]`, so the fork/chunk pipeline
+    /// splits batched work exactly like solo work.
+    ///
+    /// Determinism contract: lane `l`'s outputs must be bit-identical to
+    /// a solo [`execute`](Self::execute) over the same batch with lane
+    /// `l`'s inputs — batching changes *when* lanes are evaluated, never
+    /// the per-lane float op sequence. The default implementation
+    /// guarantees this trivially by deinterleaving each lane into a
+    /// scratch buffer and delegating to `execute`; backends override it
+    /// to share per-op decode across lanes (see [`NativeExecutor`]).
+    fn execute_multi(
+        &mut self,
+        kind: StepKind,
+        batch: StepBatch<'_>,
+        lanes: usize,
+        xs: &[f32],
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        anyhow::ensure!(lanes >= 1, "execute_multi requires at least one lane");
+        if lanes == 1 {
+            return self.execute(kind, batch, xs, out);
+        }
+        let c = batch.c();
+        let n = batch.len();
+        anyhow::ensure!(xs.len() == n * lanes * c, "xs length mismatch");
+        let id = identity(kind);
+        out.truncate(n * lanes * c);
+        out.fill(id);
+        out.resize(n * lanes * c, id);
+        let mut lane_xs = vec![0.0f32; n * c];
+        let mut lane_out = Vec::with_capacity(n * c);
+        for l in 0..lanes {
+            for k in 0..n {
+                let src = (k * lanes + l) * c;
+                lane_xs[k * c..(k + 1) * c].copy_from_slice(&xs[src..src + c]);
+            }
+            self.execute(kind, batch, &lane_xs, &mut lane_out)?;
+            for k in 0..n {
+                let dst = (k * lanes + l) * c;
+                out[dst..dst + c].copy_from_slice(&lane_out[k * c..(k + 1) * c]);
+            }
+        }
+        Ok(())
+    }
 }
 
 /// Pure-rust mirror of the Pallas kernels (bit loops over packed
@@ -122,6 +176,88 @@ impl StepExecutor for NativeExecutor {
                         let j = bit % c;
                         if cand < o[j] {
                             o[j] = cand;
+                        }
+                        bits &= bits - 1;
+                        nth += 1;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Decode-once batched variant: each op's packed bits are walked a
+    /// single time with the lane loop *inside* the bit loop, so every
+    /// lane still sees the bits in the same increasing `trailing_zeros`
+    /// order as a solo [`execute`](StepExecutor::execute) — the per-lane
+    /// float op sequence (and so the result) is bit-identical, while the
+    /// decode cost is paid once per op instead of once per lane.
+    fn execute_multi(
+        &mut self,
+        kind: StepKind,
+        batch: StepBatch<'_>,
+        lanes: usize,
+        xs: &[f32],
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        anyhow::ensure!(lanes >= 1, "execute_multi requires at least one lane");
+        if lanes == 1 {
+            return self.execute(kind, batch, xs, out);
+        }
+        let c = batch.c();
+        anyhow::ensure!(xs.len() == batch.len() * lanes * c, "xs length mismatch");
+        if kind == StepKind::Sssp {
+            anyhow::ensure!(batch.weighted(), "SSSP requires weighted partitioning");
+        }
+        let len = batch.len() * lanes * c;
+        let id = identity(kind);
+        out.truncate(len);
+        out.fill(id);
+        out.resize(len, id);
+        for k in 0..batch.len() {
+            // Op-major lane-interleaved: lane l of op k spans
+            // [(k*lanes + l)*c, (k*lanes + l + 1)*c).
+            let x_all = &xs[k * lanes * c..(k + 1) * lanes * c];
+            let o_all = &mut out[k * lanes * c..(k + 1) * lanes * c];
+            match kind {
+                StepKind::PageRank | StepKind::Mvm => {
+                    let mut bits = batch.bits(k);
+                    while bits != 0 {
+                        let bit = bits.trailing_zeros() as usize;
+                        let (i, j) = (bit / c, bit % c);
+                        for l in 0..lanes {
+                            o_all[l * c + j] += x_all[l * c + i];
+                        }
+                        bits &= bits - 1;
+                    }
+                }
+                StepKind::Bfs | StepKind::Wcc => {
+                    let cost = if kind == StepKind::Bfs { 1.0 } else { 0.0 };
+                    let mut bits = batch.bits(k);
+                    while bits != 0 {
+                        let bit = bits.trailing_zeros() as usize;
+                        let (i, j) = (bit / c, bit % c);
+                        for l in 0..lanes {
+                            let cand = x_all[l * c + i] + cost;
+                            if cand < o_all[l * c + j] {
+                                o_all[l * c + j] = cand;
+                            }
+                        }
+                        bits &= bits - 1;
+                    }
+                }
+                StepKind::Sssp => {
+                    let w = batch.weights_of(k);
+                    let mut bits = batch.bits(k);
+                    let mut nth = 0usize;
+                    while bits != 0 {
+                        let bit = bits.trailing_zeros() as usize;
+                        let (i, j) = (bit / c, bit % c);
+                        for l in 0..lanes {
+                            let cand = x_all[l * c + i] + w[nth];
+                            if cand < o_all[l * c + j] {
+                                o_all[l * c + j] = cand;
+                            }
                         }
                         bits &= bits - 1;
                         nth += 1;
@@ -236,6 +372,108 @@ mod tests {
         let mut out = Vec::new();
         assert!(NativeExecutor
             .execute(StepKind::Bfs, plan.batch(&[0]), &[0.0], &mut out)
+            .is_err());
+    }
+
+    /// Interleave per-lane solo inputs into the op-major lane-interleaved
+    /// layout `execute_multi` consumes.
+    fn interleave(lane_xs: &[Vec<f32>], n_ops: usize, c: usize) -> Vec<f32> {
+        let lanes = lane_xs.len();
+        let mut xs = vec![0.0f32; n_ops * lanes * c];
+        for (l, lx) in lane_xs.iter().enumerate() {
+            for k in 0..n_ops {
+                xs[(k * lanes + l) * c..(k * lanes + l + 1) * c]
+                    .copy_from_slice(&lx[k * c..(k + 1) * c]);
+            }
+        }
+        xs
+    }
+
+    #[test]
+    fn execute_multi_is_bit_identical_to_solo_lanes() {
+        let plan = ExecutionPlan::from_partitioned(&part2());
+        let ops = [0u32];
+        let c = 2;
+        for kind in [StepKind::Bfs, StepKind::Wcc, StepKind::Sssp, StepKind::PageRank] {
+            let lane_inputs = vec![
+                vec![0.0, INF],
+                vec![INF, 0.0],
+                vec![1.5, 2.5],
+                vec![7.0, 0.25],
+            ];
+            for lanes in [1usize, 2, 3, 4] {
+                let lane_xs = &lane_inputs[..lanes];
+                let xs = interleave(lane_xs, ops.len(), c);
+                let mut multi = Vec::new();
+                NativeExecutor
+                    .execute_multi(kind, plan.batch(&ops), lanes, &xs, &mut multi)
+                    .unwrap();
+                assert_eq!(multi.len(), ops.len() * lanes * c);
+                for (l, lx) in lane_xs.iter().enumerate() {
+                    let mut solo = Vec::new();
+                    NativeExecutor.execute(kind, plan.batch(&ops), lx, &mut solo).unwrap();
+                    for k in 0..ops.len() {
+                        assert_eq!(
+                            multi[(k * lanes + l) * c..(k * lanes + l + 1) * c].to_vec(),
+                            solo[k * c..(k + 1) * c].to_vec(),
+                            "{kind:?} lanes={lanes} lane={l} op={k}",
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// The trait's default (deinterleave-and-delegate) implementation
+    /// must agree with the native decode-once override bit for bit — it
+    /// is the correctness baseline every backend inherits.
+    #[test]
+    fn default_execute_multi_matches_native_override() {
+        // A shim that suppresses the override, exposing the trait default.
+        struct DefaultMulti(NativeExecutor);
+        impl StepExecutor for DefaultMulti {
+            fn name(&self) -> &'static str {
+                "default-multi"
+            }
+            fn execute(
+                &mut self,
+                kind: StepKind,
+                batch: StepBatch<'_>,
+                xs: &[f32],
+                out: &mut Vec<f32>,
+            ) -> Result<()> {
+                self.0.execute(kind, batch, xs, out)
+            }
+        }
+        let plan = ExecutionPlan::from_partitioned(&part2());
+        let ops = [0u32];
+        let lanes = 3;
+        let xs = interleave(
+            &[vec![0.0, INF], vec![4.0, 1.0], vec![INF, 2.0]],
+            ops.len(),
+            2,
+        );
+        for kind in [StepKind::Bfs, StepKind::Sssp, StepKind::PageRank] {
+            let (mut a, mut b) = (Vec::new(), Vec::new());
+            NativeExecutor
+                .execute_multi(kind, plan.batch(&ops), lanes, &xs, &mut a)
+                .unwrap();
+            DefaultMulti(NativeExecutor)
+                .execute_multi(kind, plan.batch(&ops), lanes, &xs, &mut b)
+                .unwrap();
+            assert_eq!(a, b, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn execute_multi_checks_lanes_and_length() {
+        let plan = ExecutionPlan::from_partitioned(&part2());
+        let mut out = Vec::new();
+        assert!(NativeExecutor
+            .execute_multi(StepKind::Bfs, plan.batch(&[0]), 0, &[], &mut out)
+            .is_err());
+        assert!(NativeExecutor
+            .execute_multi(StepKind::Bfs, plan.batch(&[0]), 2, &[0.0; 3], &mut out)
             .is_err());
     }
 }

@@ -22,7 +22,7 @@ pub use exchange::{run_sharded, run_sharded_pooled, run_sharded_scoped, ShardPla
 pub use executor::{NativeExecutor, StepExecutor};
 pub use par::{
     resolve_threads, run_parallel, run_parallel_pooled, run_parallel_pooled_at,
-    run_parallel_scoped,
+    run_parallel_pooled_batch, run_parallel_scoped,
 };
 pub use patch::{patch_preprocessed, PatchStats};
 pub use plan::{ExecutionPlan, GatherTable, LaneTable, PlanOp, SectionRebuild, StepBatch};

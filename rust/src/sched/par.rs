@@ -90,7 +90,7 @@ use crate::engine::{Crossbar, EngineKind, GraphEngine};
 use super::executor::StepExecutor;
 use super::plan::ExecutionPlan;
 use super::pool::{LaneSlot, WorkerPool};
-use super::replacement::build_policy;
+use super::replacement::{build_policy, ReplacementPolicy};
 use super::scheduler::{
     gather_sources, reduce_apply, slot_pos, EngineSummary, RunResult, Scheduler, NONE,
 };
@@ -402,7 +402,7 @@ pub(crate) fn run_numeric(
                 // sequential.
                 return executor.execute(kind, plan.batch(sup_ops), xs, cand);
             }
-            pool.execute_chunks(kind, plan, sup_ops, xs, chunk, chunk_bufs, cand)
+            pool.execute_chunks(kind, plan, sup_ops, 1, xs, chunk, chunk_bufs, cand)
         }
         LaneMode::Scoped { .. } => {
             let n_chunks = sup_ops.len().div_ceil(chunk);
@@ -438,6 +438,48 @@ pub(crate) fn run_numeric(
                 cand.extend_from_slice(&out?);
             }
             Ok(())
+        }
+    }
+}
+
+/// Batched phase 3: the union op batch evaluated against `lanes`
+/// interleaved per-job input vectors through the executor's
+/// `execute_multi` surface, chunked across pool forks exactly like
+/// [`run_numeric`]. `xs`/`cand` are op-major lane-interleaved (see
+/// [`StepExecutor::execute_multi`]); chunk boundaries sit on op
+/// boundaries, so every lane's per-op outputs are bit-identical to its
+/// solo run regardless of chunking.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_numeric_multi(
+    executor: &mut dyn StepExecutor,
+    kind: crate::algo::traits::StepKind,
+    plan: &ExecutionPlan,
+    union_ops: &[u32],
+    lanes: usize,
+    xs: &[f32],
+    cand: &mut Vec<f32>,
+    chunk_bufs: &mut [Vec<f32>],
+    mode: &mut LaneMode<'_>,
+) -> Result<()> {
+    let threads = mode.threads();
+    if threads <= 1 || union_ops.len() < MIN_PARALLEL_NUMERIC_OPS.max(2 * threads) {
+        return executor.execute_multi(kind, plan.batch(union_ops), lanes, xs, cand);
+    }
+    let chunk = union_ops.len().div_ceil(threads);
+    match mode {
+        LaneMode::Pooled { pool, .. } => {
+            let pool = pool.get();
+            if !pool.ensure_forks(executor) {
+                // Stateful backend (PJRT): batched numerics stay on the
+                // calling thread, same as the solo path.
+                return executor.execute_multi(kind, plan.batch(union_ops), lanes, xs, cand);
+            }
+            pool.execute_chunks(kind, plan, union_ops, lanes, xs, chunk, chunk_bufs, cand)
+        }
+        // The batch driver always runs pooled; an inline call keeps the
+        // scoped arm correct anyway (bit-identical at any chunking).
+        LaneMode::Scoped { .. } => {
+            executor.execute_multi(kind, plan.batch(union_ops), lanes, xs, cand)
         }
     }
 }
@@ -519,6 +561,501 @@ pub fn run_parallel_pooled_at(
         executor,
         LaneMode::Pooled { pool: PoolRef::Borrowed(pool), threads },
     )
+}
+
+/// Run a batch of programs over **one shared plan** on a caller-owned
+/// persistent pool, amortizing the per-superstep plan walk, the pool
+/// checkout, and per-op operand decode across all of them — the serve
+/// tier's multi-job batch formation rides this.
+///
+/// Every program must drive the same [`StepKind`](crate::algo::traits::StepKind)
+/// (the service's `batch_key` guarantees it; enforced here). Per-job
+/// *state* — engines, crossbar shadows, replacement policy, vertex
+/// values, frontiers, every counter — is fully replicated, so each job's
+/// scheduling decisions are exactly the decisions its solo run makes;
+/// only the plan traversal and the numeric evaluation are shared.
+/// Result: element `i` of the returned vector is **bit-identical** to
+/// `run_parallel_pooled_at` on `programs[i]` alone, for every batch
+/// composition, thread count, and mechanism (the batch determinism
+/// contract; locked down by the in-module tests and
+/// `rust/tests/serve.rs`).
+///
+/// `threads <= 1`, tracing runs, and single-program batches delegate to
+/// the solo path per program.
+pub fn run_parallel_pooled_batch(
+    config: &ArchConfig,
+    params: &CostParams,
+    plan: &ExecutionPlan,
+    programs: &[&dyn VertexProgram],
+    executor: &mut dyn StepExecutor,
+    pool: &mut WorkerPool,
+    threads: usize,
+) -> Result<Vec<RunResult>> {
+    anyhow::ensure!(!programs.is_empty(), "empty program batch");
+    let threads = resolve_threads(threads).min(pool.workers());
+    if programs.len() == 1 || threads <= 1 || config.trace_activity {
+        return programs
+            .iter()
+            .map(|p| run_parallel_pooled_at(config, params, plan, *p, executor, pool, threads))
+            .collect();
+    }
+    run_pipeline_batch(
+        config,
+        params,
+        plan,
+        programs,
+        executor,
+        LaneMode::Pooled { pool: PoolRef::Borrowed(pool), threads },
+    )
+}
+
+/// Per-job replicated state for the batched pipeline: everything the
+/// solo [`run_pipeline`] keeps as locals, one copy per job, so no
+/// scheduling decision or hardware-model effect can leak between jobs.
+struct BatchJob<'a> {
+    program: &'a dyn VertexProgram,
+    semiring: Semiring,
+    all_blocks: bool,
+    max_supersteps: usize,
+    engines: Vec<Option<GraphEngine>>,
+    policy: Box<dyn ReplacementPolicy>,
+    dyn_dir: Vec<u32>,
+    slot_rank: Vec<u32>,
+    retired: Vec<bool>,
+    shadow: Vec<Crossbar>,
+    shadow_busy: Vec<f64>,
+    values: Vec<f32>,
+    snapshot: Vec<f32>,
+    acc: Vec<f32>,
+    active_block: Vec<bool>,
+    next_active_block: Vec<bool>,
+    records: Vec<Vec<LaneRecord>>,
+    sup_ops: Vec<u32>,
+    xs: Vec<f32>,
+    cand: Vec<f32>,
+    init_counts: EventCounts,
+    counts_baseline: EventCounts,
+    init_time_ns: f64,
+    exec_time_ns: f64,
+    sys_counts: EventCounts,
+    iterations: u64,
+    static_ops: u64,
+    dynamic_ops: u64,
+    dynamic_hits: u64,
+    supersteps: usize,
+    /// Per-group dispatch accumulator (reset at each group boundary).
+    ops_in_group: u64,
+    /// The job's main loop has exited (empty frontier, `post_superstep`
+    /// false, or its superstep budget ran out).
+    done: bool,
+}
+
+/// The batched three-phase pipeline. Structure per superstep:
+///
+/// 1. **Dispatch** — ONE op-major plan walk (`for group, for op, for
+///    live job`): each live job makes its own decisions against its own
+///    shadows in the same op order as its solo dispatch, so the decision
+///    sequence — and every resulting record — is identical to solo.
+/// 2. **Lane replay** — per job on the shared scratch/mode (the lane
+///    merge is per-engine state, so sharing workers is free).
+/// 3. **Numeric** — the live jobs' `sup_ops` union into one sorted op
+///    list; each job gathers its own inputs over the union, the lanes
+///    interleave op-major, and one `execute_multi` pass evaluates every
+///    (op, job) pair. Per-job candidates extract by a sorted two-pointer
+///    walk; reduce/apply runs per job. Ops a job did not select are
+///    computed and discarded for that lane — per-op outputs are
+///    independent pure functions, so this cannot perturb its results.
+fn run_pipeline_batch(
+    config: &ArchConfig,
+    params: &CostParams,
+    plan: &ExecutionPlan,
+    programs: &[&dyn VertexProgram],
+    executor: &mut dyn StepExecutor,
+    mut mode: LaneMode<'_>,
+) -> Result<Vec<RunResult>> {
+    config.validate()?;
+    anyhow::ensure!(
+        plan.matches(config),
+        "execution plan was compiled for a different architecture \
+         (plan C={} N={} T={} M={})",
+        plan.c,
+        plan.static_engines,
+        plan.total_engines,
+        plan.crossbars_per_engine
+    );
+    let kind = programs[0].step_kind();
+    for program in programs {
+        anyhow::ensure!(
+            program.step_kind() == kind,
+            "batched programs must share one step kind ({:?} vs {:?})",
+            program.step_kind(),
+            kind
+        );
+        if program.needs_weights() {
+            anyhow::ensure!(
+                plan.weighted,
+                "{} requires weighted partitioning",
+                program.name()
+            );
+        }
+    }
+    let c = plan.c;
+    let n = plan.num_vertices as usize;
+    let num_blocks = plan.num_blocks as usize;
+    let n_static = config.static_engines;
+    let n_total = config.total_engines as usize;
+    let m = config.crossbars_per_engine as usize;
+    let n_dyn_slots = config.dynamic_engines() as usize * m;
+    let outdeg = plan.out_degrees();
+    let lane_tab = plan.lanes();
+    let lat_mvm = crate::cost::timing::mvm_latency_ns(params, c as u32, c as u32)
+        + crate::cost::timing::reduce_latency_ns(params, c as u32);
+
+    // --- per-job initialization: the solo init, replicated verbatim ---
+    let mut jobs: Vec<BatchJob<'_>> = Vec::with_capacity(programs.len());
+    for &program in programs {
+        let mut engines: Vec<Option<GraphEngine>> = (0..n_total)
+            .map(|i| {
+                let kind = if (i as u32) < n_static {
+                    EngineKind::Static
+                } else {
+                    EngineKind::Dynamic
+                };
+                Some(GraphEngine::new(i as u32, kind, c, m as u32))
+            })
+            .collect();
+        for &(slot, pattern) in plan.static_config() {
+            engines[slot.engine as usize]
+                .as_mut()
+                .expect("engine present")
+                .configure(slot.crossbar as usize, pattern, params);
+        }
+        let mut init_counts = EventCounts::default();
+        let mut init_time_ns = 0f64;
+        for e in engines.iter_mut() {
+            let e = e.as_mut().expect("engine present");
+            init_counts.add(&e.counts);
+            let (busy, _) = e.end_iteration();
+            init_time_ns = init_time_ns.max(busy);
+        }
+        let values = program.init(plan.num_vertices);
+        anyhow::ensure!(values.len() == n, "program init length mismatch");
+        let semiring = program.semiring();
+        let acc = match semiring {
+            Semiring::SumProd => vec![0f32; n],
+            Semiring::MinPlus => Vec::new(),
+        };
+        let all_blocks = program.processes_all_blocks();
+        let mut active_block = vec![false; num_blocks];
+        if !all_blocks {
+            for (v, &val) in values.iter().enumerate() {
+                if val < INF {
+                    active_block[v / c] = true;
+                }
+            }
+        }
+        jobs.push(BatchJob {
+            program,
+            semiring,
+            all_blocks,
+            max_supersteps: program.max_supersteps(),
+            snapshot: values.clone(),
+            values,
+            acc,
+            active_block,
+            next_active_block: vec![false; num_blocks],
+            policy: build_policy(config.policy, n_dyn_slots),
+            dyn_dir: vec![NONE; plan.num_patterns as usize],
+            slot_rank: vec![NONE; n_dyn_slots],
+            retired: vec![false; n_dyn_slots],
+            shadow: (0..n_dyn_slots).map(|_| Crossbar::new(c)).collect(),
+            shadow_busy: vec![0f64; n_total],
+            records: (0..n_total)
+                .map(|e| Vec::with_capacity(lane_tab.fixed_ops_on(e as u32) as usize))
+                .collect(),
+            engines,
+            sup_ops: Vec::new(),
+            xs: Vec::new(),
+            cand: Vec::new(),
+            counts_baseline: init_counts,
+            init_counts,
+            init_time_ns,
+            exec_time_ns: 0f64,
+            sys_counts: EventCounts::default(),
+            iterations: 0,
+            static_ops: 0,
+            dynamic_ops: 0,
+            dynamic_hits: 0,
+            supersteps: 0,
+            ops_in_group: 0,
+            done: false,
+        });
+    }
+
+    let mut scratch = Scratch::new(n_total, mode.threads());
+    let mut union_ops: Vec<u32> = Vec::new();
+    let mut xs_all: Vec<f32> = Vec::new();
+    let mut cand_all: Vec<f32> = Vec::new();
+    let max_supersteps_all =
+        jobs.iter().map(|j| j.max_supersteps).max().unwrap_or(0);
+
+    for superstep in 0..max_supersteps_all {
+        // A job whose own superstep budget ran out has exited its solo
+        // loop — it just stops, with `supersteps` as already recorded.
+        for job in jobs.iter_mut() {
+            if superstep >= job.max_supersteps {
+                job.done = true;
+            }
+        }
+        if jobs.iter().all(|j| j.done) {
+            break;
+        }
+
+        // --- phase 1: one plan walk, per-job decisions on isolated state ---
+        for job in jobs.iter_mut().filter(|j| !j.done) {
+            job.snapshot.copy_from_slice(&job.values);
+            job.sup_ops.clear();
+            for r in job.records.iter_mut() {
+                r.clear();
+            }
+            job.shadow_busy.iter_mut().for_each(|b| *b = 0.0);
+        }
+        for g in 0..plan.num_groups() {
+            let (start, end) = plan.group_bounds(g);
+            for job in jobs.iter_mut().filter(|j| !j.done) {
+                job.ops_in_group = 0;
+            }
+            for (off, op) in plan.ops[start..end].iter().enumerate() {
+                for job in jobs.iter_mut().filter(|j| !j.done) {
+                    if !job.all_blocks && !job.active_block[op.src_block as usize] {
+                        continue;
+                    }
+                    job.ops_in_group += 1;
+                    if op.is_static() {
+                        let slots = plan.slots_of(op);
+                        let slot = if lane_tab.home_of(start + off).is_some() {
+                            slots[0]
+                        } else {
+                            *slots
+                                .iter()
+                                .min_by(|a, b| {
+                                    job.shadow_busy[a.engine as usize]
+                                        .total_cmp(&job.shadow_busy[b.engine as usize])
+                                })
+                                .expect("static op has a slot")
+                        };
+                        job.shadow_busy[slot.engine as usize] += lat_mvm;
+                        job.records[slot.engine as usize].push(LaneRecord::Mvm {
+                            crossbar: slot.crossbar,
+                            read_rows: op.read_rows,
+                        });
+                        job.static_ops += 1;
+                    } else {
+                        let rank = op.pattern_rank as usize;
+                        let hit = if config.dynamic_reuse {
+                            let k = job.dyn_dir[rank];
+                            (k != NONE && !job.retired[k as usize]).then_some(k as usize)
+                        } else {
+                            None
+                        };
+                        let k = match hit {
+                            Some(k) => {
+                                job.dynamic_hits += 1;
+                                k
+                            }
+                            None => {
+                                let pattern = plan.pattern_of_rank(op.pattern_rank);
+                                loop {
+                                    let k = job.policy.pick(&job.retired).ok_or_else(|| {
+                                        anyhow::anyhow!(
+                                            "all dynamic crossbars retired (wear-out)"
+                                        )
+                                    })?;
+                                    let (ei, cb) = slot_pos(config, k);
+                                    let old = job.slot_rank[k];
+                                    if old != NONE {
+                                        job.dyn_dir[old as usize] = NONE;
+                                        job.slot_rank[k] = NONE;
+                                    }
+                                    job.shadow[k].configure(pattern);
+                                    job.records[ei].push(LaneRecord::Configure {
+                                        crossbar: cb as u32,
+                                        rank: op.pattern_rank,
+                                    });
+                                    if job.shadow[k].worn_out(params.endurance_cycles) {
+                                        job.retired[k] = true;
+                                        continue;
+                                    }
+                                    job.slot_rank[k] = rank as u32;
+                                    job.dyn_dir[rank] = k as u32;
+                                    break k;
+                                }
+                            }
+                        };
+                        let (ei, cb) = slot_pos(config, k);
+                        job.records[ei].push(LaneRecord::Mvm {
+                            crossbar: cb as u32,
+                            read_rows: op.rows,
+                        });
+                        job.policy.touch(k);
+                        job.dynamic_ops += 1;
+                    }
+                    job.sup_ops.push((start + off) as u32);
+                }
+            }
+            for job in jobs.iter_mut().filter(|j| !j.done) {
+                if job.ops_in_group > 0 {
+                    job.iterations += 1;
+                    job.sys_counts.main_mem_accesses += 2 * job.ops_in_group.div_ceil(16);
+                }
+            }
+        }
+
+        // --- phase 2: per-job lane replay (engine state is per job) ---
+        for job in jobs.iter_mut().filter(|j| !j.done) {
+            job.exec_time_ns += replay_lanes(
+                &mut job.engines,
+                &job.records,
+                &mut scratch,
+                plan,
+                params,
+                lat_mvm,
+                &mut mode,
+            );
+            if job.sup_ops.is_empty() {
+                job.done = true;
+            }
+        }
+
+        // --- phase 3: one batched numeric pass over the sup_ops union ---
+        let lanes_n = jobs.iter().filter(|j| !j.done).count();
+        if lanes_n == 0 {
+            continue; // the all-done check at the loop top will break
+        }
+        if lanes_n == 1 {
+            // Single survivor: take the solo phase 3 verbatim.
+            let job = jobs.iter_mut().find(|j| !j.done).expect("one live job");
+            gather_sources(
+                plan, job.program, kind, &job.snapshot, outdeg, &job.sup_ops, &mut job.xs,
+            );
+            run_numeric(
+                executor,
+                kind,
+                plan,
+                &job.sup_ops,
+                &job.xs,
+                &mut job.cand,
+                &mut scratch.chunk_bufs,
+                &mut mode,
+            )?;
+            finish_superstep(job, plan, superstep);
+        } else {
+            // Sorted union of the live jobs' op selections (each job's
+            // sup_ops is strictly increasing in plan order).
+            union_ops.clear();
+            for job in jobs.iter().filter(|j| !j.done) {
+                union_ops.extend_from_slice(&job.sup_ops);
+            }
+            union_ops.sort_unstable();
+            union_ops.dedup();
+            // Per-job gather over the union, then op-major interleave.
+            for job in jobs.iter_mut().filter(|j| !j.done) {
+                gather_sources(
+                    plan, job.program, kind, &job.snapshot, outdeg, &union_ops, &mut job.xs,
+                );
+            }
+            xs_all.clear();
+            xs_all.resize(union_ops.len() * lanes_n * c, 0.0);
+            for (l, job) in jobs.iter().filter(|j| !j.done).enumerate() {
+                for k in 0..union_ops.len() {
+                    xs_all[(k * lanes_n + l) * c..(k * lanes_n + l + 1) * c]
+                        .copy_from_slice(&job.xs[k * c..(k + 1) * c]);
+                }
+            }
+            run_numeric_multi(
+                executor,
+                kind,
+                plan,
+                &union_ops,
+                lanes_n,
+                &xs_all,
+                &mut cand_all,
+                &mut scratch.chunk_bufs,
+                &mut mode,
+            )?;
+            // Extract each job's candidates (two-pointer over its sorted
+            // sup_ops vs the union), then reduce/apply per job.
+            for (l, job) in jobs.iter_mut().filter(|j| !j.done).enumerate() {
+                job.cand.clear();
+                job.cand.reserve(job.sup_ops.len() * c);
+                let mut ptr = 0usize;
+                for (k, &op) in union_ops.iter().enumerate() {
+                    if ptr < job.sup_ops.len() && job.sup_ops[ptr] == op {
+                        let off = (k * lanes_n + l) * c;
+                        job.cand.extend_from_slice(&cand_all[off..off + c]);
+                        ptr += 1;
+                    }
+                }
+                debug_assert_eq!(ptr, job.sup_ops.len(), "sup_ops ⊄ union");
+                finish_superstep(job, plan, superstep);
+            }
+        }
+    }
+
+    // --- final accounting per job, exactly the solo fold ---
+    Ok(jobs
+        .into_iter()
+        .map(|job| {
+            let mut counts = job.sys_counts;
+            let mut summaries = Vec::with_capacity(job.engines.len());
+            let mut max_dyn_writes = 0u32;
+            for e in &job.engines {
+                let e = e.as_ref().expect("engine present");
+                counts.add(&e.counts);
+                if e.kind == EngineKind::Dynamic {
+                    max_dyn_writes = max_dyn_writes.max(e.max_cell_writes());
+                }
+                summaries.push(EngineSummary::of(e));
+            }
+            counts.subtract(&job.counts_baseline);
+            RunResult {
+                values: job.values,
+                counts,
+                init_counts: job.init_counts,
+                exec_time_ns: job.exec_time_ns,
+                init_time_ns: job.init_time_ns,
+                supersteps: job.supersteps,
+                iterations: job.iterations,
+                static_ops: job.static_ops,
+                dynamic_ops: job.dynamic_ops,
+                dynamic_hits: job.dynamic_hits,
+                max_dynamic_cell_writes: max_dyn_writes,
+                engines: summaries,
+                activity: None,
+            }
+        })
+        .collect())
+}
+
+/// Reduce/apply one job's superstep tail — identical to the solo loop's
+/// epilogue: apply candidates, record the superstep, and exit the job's
+/// loop when its program says stop.
+fn finish_superstep(job: &mut BatchJob<'_>, plan: &ExecutionPlan, superstep: usize) {
+    let any_changed = reduce_apply(
+        plan,
+        job.program,
+        job.semiring,
+        &job.sup_ops,
+        &job.cand,
+        &mut job.values,
+        &mut job.acc,
+        &mut job.active_block,
+        &mut job.next_active_block,
+    );
+    job.supersteps = superstep + 1;
+    if !job.program.post_superstep(superstep, &mut job.values, &mut job.acc, any_changed) {
+        job.done = true;
+    }
 }
 
 /// The pre-pool baseline: identical dispatch, but phases 2/3 spawn
@@ -1078,5 +1615,111 @@ mod tests {
     fn resolve_threads_maps_zero_to_auto() {
         assert!(resolve_threads(0) >= 1);
         assert_eq!(resolve_threads(3), 3);
+    }
+
+    #[test]
+    fn batched_runs_are_bit_identical_to_solo_across_sizes_and_threads() {
+        // The batch determinism contract: element i of a batched run is
+        // bit-identical to programs[i] run alone — every field of every
+        // RunResult — across batch sizes, thread counts, and repeated
+        // use of one pool.
+        let g = Dataset::Tiny.load().unwrap();
+        let config = ArchConfig::default();
+        let params = CostParams::default();
+        let plan = plan_for(&g, &config, false);
+        let sources = [0u32, 1, 2, 3];
+        let programs: Vec<Bfs> = sources.iter().map(|&s| Bfs::new(s)).collect();
+        let solo: Vec<RunResult> = programs
+            .iter()
+            .map(|p| Scheduler::new(&config, &params, &plan).run(p, &mut NativeExecutor).unwrap())
+            .collect();
+        for threads in [2usize, 4] {
+            let mut pool = WorkerPool::new(threads);
+            for size in [1usize, 2, 4] {
+                let batch: Vec<&dyn VertexProgram> =
+                    programs[..size].iter().map(|p| p as &dyn VertexProgram).collect();
+                let results = run_parallel_pooled_batch(
+                    &config,
+                    &params,
+                    &plan,
+                    &batch,
+                    &mut NativeExecutor,
+                    &mut pool,
+                    threads,
+                )
+                .unwrap();
+                assert_eq!(results.len(), size);
+                for (i, r) in results.iter().enumerate() {
+                    assert_same(
+                        &solo[i],
+                        r,
+                        &format!("batch size {size}, threads {threads}, job {i}"),
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn batched_pagerank_and_wcc_match_solo() {
+        // Same-kind batches for the non-frontier semiring (identical
+        // programs stress the all-lanes-identical corner) and a frontier
+        // algorithm where jobs drop out of the batch at different
+        // supersteps (sources with different eccentricities).
+        let g = Dataset::Tiny.load().unwrap();
+        let config = ArchConfig::default();
+        let params = CostParams::default();
+        let plan = plan_for(&g, &config, false);
+        let mut pool = WorkerPool::new(4);
+
+        let pr = PageRank::new(0.85, 6);
+        let solo_pr = Scheduler::new(&config, &params, &plan)
+            .run(&pr, &mut NativeExecutor)
+            .unwrap();
+        let batch: Vec<&dyn VertexProgram> = vec![&pr, &pr, &pr];
+        for r in run_parallel_pooled_batch(
+            &config, &params, &plan, &batch, &mut NativeExecutor, &mut pool, 4,
+        )
+        .unwrap()
+        {
+            assert_same(&solo_pr, &r, "identical pagerank batch");
+        }
+
+        let a = Bfs::new(0);
+        let b = Bfs::new(5);
+        let solo_a = Scheduler::new(&config, &params, &plan)
+            .run(&a, &mut NativeExecutor)
+            .unwrap();
+        let solo_b = Scheduler::new(&config, &params, &plan)
+            .run(&b, &mut NativeExecutor)
+            .unwrap();
+        let batch: Vec<&dyn VertexProgram> = vec![&a, &b];
+        let rs = run_parallel_pooled_batch(
+            &config, &params, &plan, &batch, &mut NativeExecutor, &mut pool, 4,
+        )
+        .unwrap();
+        assert_same(&solo_a, &rs[0], "staggered-frontier job 0");
+        assert_same(&solo_b, &rs[1], "staggered-frontier job 1");
+    }
+
+    #[test]
+    fn batch_rejects_mixed_step_kinds_and_empty_batches() {
+        let g = Dataset::Tiny.load().unwrap();
+        let config = ArchConfig::default();
+        let params = CostParams::default();
+        let plan = plan_for(&g, &config, false);
+        let mut pool = WorkerPool::new(2);
+        let empty: Vec<&dyn VertexProgram> = Vec::new();
+        assert!(run_parallel_pooled_batch(
+            &config, &params, &plan, &empty, &mut NativeExecutor, &mut pool, 2,
+        )
+        .is_err());
+        let bfs = Bfs::new(0);
+        let mixed: Vec<&dyn VertexProgram> = vec![&bfs, &Wcc];
+        let err = run_parallel_pooled_batch(
+            &config, &params, &plan, &mixed, &mut NativeExecutor, &mut pool, 2,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("step kind"), "{err}");
     }
 }

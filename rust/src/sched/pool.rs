@@ -85,11 +85,15 @@ enum Task {
         lat_mvm: f64,
     },
     /// Evaluate one numeric batch chunk on the worker's cached fork.
+    /// `lanes > 1` selects the batched (`execute_multi`) surface: `xs`
+    /// and `out` are op-major lane-interleaved, one C-vector per
+    /// `(op, lane)` pair; `lanes == 1` is the plain solo call.
     Numeric {
         kind: crate::algo::traits::StepKind,
         ops: SendConstPtr<[u32]>,
         xs: SendConstPtr<[f32]>,
         plan: SendConstPtr<ExecutionPlan>,
+        lanes: usize,
         out: Vec<f32>,
     },
     /// Cache a forked executor for subsequent `Numeric` tasks (replaces
@@ -150,10 +154,13 @@ fn worker_loop(rx: Receiver<Task>, tx: Sender<Reply>, _alive: Arc<()>) {
                 }
                 Reply::Replay(lane)
             }
-            Task::Numeric { kind, ops, xs, plan, mut out } => {
+            Task::Numeric { kind, ops, xs, plan, lanes, mut out } => {
                 // SAFETY: as above.
                 let (ops, xs, plan) = unsafe { (&*ops.0, &*xs.0, &*plan.0) };
                 let result = match fork.as_mut() {
+                    Some(exec) if lanes > 1 => {
+                        exec.execute_multi(kind, plan.batch(ops), lanes, xs, &mut out)
+                    }
                     Some(exec) => exec.execute(kind, plan.batch(ops), xs, &mut out),
                     None => Err(anyhow::anyhow!(
                         "pool worker received a numeric chunk without a \
@@ -346,13 +353,17 @@ impl WorkerPool {
     /// order (bit-identical to one sequential call — each op's output
     /// lanes are an independent pure function of its operands). `bufs`
     /// cycle through the channels so the steady state allocates nothing.
-    /// The caller must have succeeded with [`ensure_forks`](Self::ensure_forks).
+    /// With `lanes > 1`, `xs` is op-major lane-interleaved and each op
+    /// chunk carries `chunk * lanes` C-vectors — chunk boundaries sit on
+    /// op boundaries, so every lane's chunking matches its solo run. The
+    /// caller must have succeeded with [`ensure_forks`](Self::ensure_forks).
     #[allow(clippy::too_many_arguments)]
     pub(crate) fn execute_chunks(
         &mut self,
         kind: crate::algo::traits::StepKind,
         plan: &ExecutionPlan,
         sup_ops: &[u32],
+        lanes: usize,
         xs: &[f32],
         chunk: usize,
         bufs: &mut [Vec<f32>],
@@ -365,21 +376,23 @@ impl WorkerPool {
             n_chunks <= self.workers() && n_chunks <= bufs.len(),
             "more chunks than workers/buffers"
         );
+        assert!(lanes >= 1, "execute_chunks requires at least one lane");
         // Prepare `cand` BEFORE any task is in flight: `reserve` can
         // panic (capacity overflow), and no unwind may happen while
         // workers hold task pointers.
         cand.clear();
-        cand.reserve(sup_ops.len() * c);
+        cand.reserve(sup_ops.len() * lanes * c);
         let mut sent = 0usize;
         let mut failed = false;
         for (w, (ops_chunk, xs_chunk)) in
-            sup_ops.chunks(chunk).zip(xs.chunks(chunk * c)).enumerate()
+            sup_ops.chunks(chunk).zip(xs.chunks(chunk * lanes * c)).enumerate()
         {
             let task = Task::Numeric {
                 kind,
                 ops: SendConstPtr(ops_chunk as *const _),
                 xs: SendConstPtr(xs_chunk as *const _),
                 plan: SendConstPtr(plan as *const _),
+                lanes,
                 out: std::mem::take(&mut bufs[w]),
             };
             if self.tx[w].send(task).is_err() {
@@ -635,10 +648,61 @@ mod tests {
         let mut bufs = vec![Vec::new(); 3];
         let mut got = Vec::new();
         let chunk = n.div_ceil(3);
-        pool.execute_chunks(StepKind::PageRank, &plan, &ids, &xs, chunk, &mut bufs, &mut got)
+        pool.execute_chunks(StepKind::PageRank, &plan, &ids, 1, &xs, chunk, &mut bufs, &mut got)
             .unwrap();
         assert_eq!(got, want, "chunked == sequential, bit for bit");
         // Buffers came back with retained capacity for the next call.
         assert!(bufs.iter().take(n.div_ceil(chunk)).all(|b| b.capacity() > 0));
+    }
+
+    #[test]
+    fn execute_chunks_multi_lane_matches_per_lane_sequential_calls() {
+        let g = Dataset::Tiny.load().unwrap();
+        let part = partition(&g, 4, false);
+        let plan = ExecutionPlan::from_partitioned(&part);
+        let n = plan.num_ops();
+        let ids: Vec<u32> = (0..n as u32).collect();
+        let c = 4;
+        let lanes = 3;
+        // Per-lane solo inputs, then the op-major lane-interleaved image.
+        let lane_xs: Vec<Vec<f32>> = (0..lanes)
+            .map(|l| (0..n * c).map(|i| ((i + l * 11) % 7) as f32).collect())
+            .collect();
+        let mut xs = vec![0.0f32; n * lanes * c];
+        for (l, lx) in lane_xs.iter().enumerate() {
+            for k in 0..n {
+                xs[(k * lanes + l) * c..(k * lanes + l + 1) * c]
+                    .copy_from_slice(&lx[k * c..(k + 1) * c]);
+            }
+        }
+
+        let mut pool = WorkerPool::new(3);
+        assert!(pool.ensure_forks(&NativeExecutor));
+        let mut bufs = vec![Vec::new(); 3];
+        let mut got = Vec::new();
+        let chunk = n.div_ceil(3);
+        pool.execute_chunks(
+            StepKind::PageRank,
+            &plan,
+            &ids,
+            lanes,
+            &xs,
+            chunk,
+            &mut bufs,
+            &mut got,
+        )
+        .unwrap();
+        assert_eq!(got.len(), n * lanes * c);
+        for (l, lx) in lane_xs.iter().enumerate() {
+            let mut want = Vec::new();
+            NativeExecutor.execute(StepKind::PageRank, plan.batch(&ids), lx, &mut want).unwrap();
+            for k in 0..n {
+                assert_eq!(
+                    got[(k * lanes + l) * c..(k * lanes + l + 1) * c],
+                    want[k * c..(k + 1) * c],
+                    "lane {l} op {k}",
+                );
+            }
+        }
     }
 }

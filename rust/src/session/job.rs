@@ -68,6 +68,32 @@ pub struct CoalesceKey {
     damping_bits: u32,
 }
 
+/// The batch-compatibility identity of a [`JobSpec`]: two specs with
+/// equal keys share one execution artifact — the same `(dataset,
+/// scale-microunits, algorithm kind, weighted)` preprocessing output and
+/// compiled plan — and identical result-determining parameters except
+/// the source vertex, so a serve worker can run them as one multi-source
+/// batch through the batch-aware executor surface
+/// (`sched::run_parallel_pooled_batch`).
+///
+/// Batch compatibility is a **scheduling** decision, exactly like
+/// `parallelism` and `shards`: it decides *when* jobs run together,
+/// never *what* a job returns (every batched job's `RunResult` is
+/// bit-identical to its solo run — see the ROADMAP batch-formation
+/// invariant). It therefore must never feed back into
+/// [`CoalesceKey`], which is pure result identity: specs that batch
+/// together still answer with *different* per-source results, while
+/// specs that coalesce share one result. The two keys are kept as
+/// separate types so the compiler enforces the distinction.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct BatchKey {
+    dataset: Dataset,
+    scale_micro: u64,
+    algorithm: AlgorithmId,
+    iterations: usize,
+    damping_bits: u32,
+}
+
 impl JobSpec {
     /// A job at full dataset scale with default parameters.
     pub fn new(dataset: Dataset, algorithm: impl Into<AlgorithmId>) -> Self {
@@ -149,6 +175,19 @@ impl JobSpec {
         }
     }
 
+    /// The batch-compatibility identity of this spec (see [`BatchKey`]):
+    /// [`coalesce_key`](Self::coalesce_key) minus the source vertex.
+    /// Scheduling only — this key never influences coalescing.
+    pub fn batch_key(&self) -> BatchKey {
+        BatchKey {
+            dataset: self.dataset,
+            scale_micro: scale_micro(self.scale),
+            algorithm: self.algorithm.clone(),
+            iterations: self.params.iterations,
+            damping_bits: self.params.damping.to_bits(),
+        }
+    }
+
     /// Spec-level validation (algorithm existence and parameter checks
     /// happen against the session's registry at run time).
     pub fn validate(&self) -> Result<()> {
@@ -216,6 +255,35 @@ mod tests {
         assert_ne!(
             base().coalesce_key(),
             JobSpec::new(Dataset::Tiny, "sssp").with_source(3).coalesce_key()
+        );
+    }
+
+    #[test]
+    fn batch_key_groups_compatible_sources_and_never_drives_coalescing() {
+        let base = || JobSpec::new(Dataset::Tiny, "bfs").with_source(3);
+        // Different sources batch together...
+        assert_eq!(base().batch_key(), base().with_source(4).batch_key());
+        // ...but never coalesce: batch compatibility must not leak into
+        // result identity.
+        assert_ne!(base().coalesce_key(), base().with_source(4).coalesce_key());
+        // Scheduling knobs don't change the batch key either.
+        assert_eq!(
+            base().batch_key(),
+            base()
+                .with_parallelism(8)
+                .with_shards(4)
+                .with_priority(5)
+                .with_deadline(Duration::from_secs(1))
+                .batch_key()
+        );
+        // Result-determining params other than the source split batches:
+        // they select different execution artifacts or numeric programs.
+        assert_ne!(base().batch_key(), base().with_scale(0.5).batch_key());
+        assert_ne!(base().batch_key(), base().with_iterations(9).batch_key());
+        assert_ne!(base().batch_key(), base().with_damping(0.9).batch_key());
+        assert_ne!(
+            base().batch_key(),
+            JobSpec::new(Dataset::Tiny, "sssp").with_source(3).batch_key()
         );
     }
 }

@@ -75,7 +75,7 @@ mod job;
 mod store;
 
 pub use artifact::{ArtifactKey, ArtifactStats, ArtifactStore, CompileFn};
-pub use job::{CoalesceKey, JobSpec};
+pub use job::{BatchKey, CoalesceKey, JobSpec};
 pub use store::{DeltaProvenance, DiskStore, StoreError, FORMAT_VERSION, SCHEMA_VERSION};
 
 pub use crate::algo::registry::{AlgoParams, AlgorithmId, AlgorithmRegistry, BoxedProgram};
@@ -857,6 +857,55 @@ impl Session {
         self.dispatch_sharded(&acc, &pres, program.as_ref(), executor, self.threads_for(spec))
     }
 
+    /// Run a batch of **batch-compatible** jobs (equal
+    /// [`JobSpec::batch_key`], equal `parallelism`/`shards` overrides —
+    /// the serve queue's claim rule) through one lane-interleaved
+    /// pipeline pass, sharing the artifact lookup, pool checkout, plan
+    /// walk, and crossbar replay across the whole batch. Every returned
+    /// report is bit-identical to `run_with` on that spec alone; batches
+    /// the pipeline cannot take whole (sharded, tracing, sequential, or
+    /// singleton) fall back to solo runs in order, so callers always get
+    /// solo-identical results and errors.
+    pub fn run_batch_with(
+        &self,
+        specs: &[JobSpec],
+        executor: &mut dyn StepExecutor,
+    ) -> Result<Vec<SimReport>> {
+        anyhow::ensure!(!specs.is_empty(), "empty job batch");
+        let leader = &specs[0];
+        // Compatibility is a caller contract, enforced here so the
+        // batched and fallback paths reject the same inputs: mixed
+        // batch keys would run every job against the leader's artifact.
+        for s in &specs[1..] {
+            anyhow::ensure!(
+                s.batch_key() == leader.batch_key()
+                    && s.parallelism == leader.parallelism
+                    && s.shards == leader.shards,
+                "job batch mixes incompatible specs ({} vs {})",
+                s.algorithm.as_str(),
+                leader.algorithm.as_str(),
+            );
+        }
+        let threads = self.threads_for(leader);
+        if specs.len() == 1
+            || self.shards_for(leader) > 1
+            || self.arch.trace_activity
+            || threads <= 1
+        {
+            return specs.iter().map(|s| self.run_with(s, executor)).collect();
+        }
+        let programs: Vec<BoxedProgram> =
+            specs.iter().map(|s| self.program_for(s)).collect::<Result<_>>()?;
+        let weighted = programs[0].needs_weights();
+        let pre = self.artifact_for(leader, weighted)?;
+        let acc = self.accelerator();
+        let refs: Vec<&dyn VertexProgram> = programs.iter().map(|p| p.as_ref()).collect();
+        let mut pool = self.checkout_pool(threads);
+        let result = acc.run_batch_pooled_at(&pre, &refs, executor, &mut pool, threads);
+        self.checkin_pool(pool);
+        result
+    }
+
     /// DSE: best static/dynamic engine split for the job's algorithm on
     /// its dataset (paper Fig. 6 / conclusion). Reuses the session's
     /// cached Alg.-1 output; only the N-dependent pieces — the config
@@ -995,6 +1044,30 @@ mod tests {
         assert_eq!(seq.exec_time_ns, over.exec_time_ns);
         // Zero shards is rejected at build time like any bad config.
         assert!(Session::builder().shards(0).build().is_err());
+    }
+
+    #[test]
+    fn batched_session_runs_are_bit_identical_to_solo() {
+        let session = Session::builder().parallelism(4).build().unwrap();
+        let specs: Vec<JobSpec> =
+            (0..3).map(|s| JobSpec::new(Dataset::Tiny, "bfs").with_source(s)).collect();
+        let mut exec = session.executor().unwrap();
+        let batched = session.run_batch_with(&specs, exec.as_mut()).unwrap();
+        assert_eq!(batched.len(), specs.len());
+        for (spec, b) in specs.iter().zip(&batched) {
+            let solo = session.run(spec).unwrap();
+            assert_eq!(solo.run.as_ref().unwrap().values, b.run.as_ref().unwrap().values);
+            assert_eq!(solo.counts, b.counts);
+            assert_eq!(solo.exec_time_ns, b.exec_time_ns);
+            assert_eq!(solo.supersteps, b.supersteps);
+        }
+        // Sequential sessions take the solo fallback and still answer
+        // every spec in order.
+        let seq = Session::with_defaults().unwrap();
+        let mut seq_exec = seq.executor().unwrap();
+        let reports = seq.run_batch_with(&specs, seq_exec.as_mut()).unwrap();
+        assert_eq!(reports.len(), specs.len());
+        assert!(seq.run_batch_with(&[], seq_exec.as_mut()).is_err());
     }
 
     #[test]

@@ -15,7 +15,7 @@
 //! result stays reference-checked by the rest of the suite.
 
 mod common;
-use common::default_threads;
+use common::{default_shards, default_threads};
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Barrier, Mutex};
@@ -70,6 +70,19 @@ struct Harness {
 }
 
 fn harness(workers: usize, queue_depth: usize) -> Harness {
+    harness_opts(workers, queue_depth, 1, 1)
+}
+
+/// Batching harness: `max_batch > 1` lets a worker claim compatible
+/// queued jobs at dequeue. It rides the `REPRO_SHARDS` matrix so batch
+/// *formation* is also exercised against the sharded session, where
+/// execution falls back to per-job solo runs — formation, accounting
+/// and bit-identity must be unchanged either way.
+fn harness_batch(workers: usize, queue_depth: usize, max_batch: usize) -> Harness {
+    harness_opts(workers, queue_depth, max_batch, default_shards())
+}
+
+fn harness_opts(workers: usize, queue_depth: usize, max_batch: usize, shards: u32) -> Harness {
     let runs = Arc::new(AtomicU64::new(0));
     let gate = Arc::new(Barrier::new(2));
     let order = Arc::new(Mutex::new(Vec::new()));
@@ -102,9 +115,10 @@ fn harness(workers: usize, queue_depth: usize) -> Harness {
     let session = Session::builder()
         .registry(reg)
         .parallelism(default_threads())
+        .shards(shards)
         .build()
         .unwrap();
-    let svc = Service::with_session_depth(Arc::new(session), workers, queue_depth);
+    let svc = Service::with_session_batch(Arc::new(session), workers, queue_depth, max_batch);
     Harness { svc, runs, gate, order }
 }
 
@@ -394,5 +408,161 @@ fn latency_percentiles_are_monotone_and_bounded() {
         check(&st.queue_wait, &format!("{algo} queue-wait"));
         check(&st.execution, &format!("{algo} execution"));
         assert_eq!(st.execution.count, st.completed, "{algo}: one execution sample per completion");
+    }
+}
+
+#[test]
+fn ops_are_recorded_once_per_execution_even_when_the_leader_is_shed() {
+    // Regression: completion ops used to be taken only from the rider
+    // with `coalesced: false`. If that leader rider expired at dequeue
+    // while its coalesced followers survived, the execution ran, the
+    // followers completed — and the execution's ops never reached
+    // `subgraph_ops`. Ops now land exactly once per execution with the
+    // first delivered rider, whatever its role.
+    let h = harness(1, 0);
+    let gate_pending = h.svc.submit(JobSpec::new(Dataset::Tiny, "gate")).unwrap();
+    let dup = || JobSpec::new(Dataset::Tiny, "count").with_source(3);
+    // Leader already expired at submit; followers coalesce onto it with
+    // no deadline and must survive the dequeue-time shed.
+    let leader = h.svc.submit(dup().with_deadline(Duration::ZERO)).unwrap();
+    let followers: Vec<_> = (0..2).map(|_| h.svc.submit(dup()).unwrap()).collect();
+    h.gate.wait();
+    let gate_res = gate_pending.wait().unwrap();
+
+    let err = leader.wait().unwrap_err();
+    assert!(
+        matches!(err.downcast_ref::<JobError>(), Some(JobError::DeadlineExceeded { .. })),
+        "leader must be shed: {err:#}"
+    );
+    let survivors: Vec<_> = followers.into_iter().map(|f| f.wait().unwrap()).collect();
+    assert_eq!(h.runs.load(Ordering::SeqCst), 1, "one execution serves both survivors");
+    assert!(survivors.iter().all(|r| r.coalesced), "both survivors are coalesced riders");
+
+    let ops = survivors[0].report.counts.mvm_ops;
+    assert!(ops > 0, "the instrument must do real work");
+    let snap = h.svc.snapshot();
+    assert_eq!((snap.jobs_completed, snap.jobs_shed), (3, 1));
+    assert_eq!(
+        snap.subgraph_ops,
+        gate_res.report.counts.mvm_ops + ops,
+        "the shed-leader execution's ops must land exactly once, not zero or twice"
+    );
+}
+
+#[test]
+fn batched_jobs_return_bit_identical_results_to_solo_runs() {
+    // Dequeue-time batch formation across batch bounds 1 (off), 2 and
+    // 4: four compatible jobs queue behind the gate, the single worker
+    // claims them in batches of `max_batch`, and every result must be
+    // bit-identical to a solo run of the same spec through the same
+    // service. The threads and shards dimensions of the matrix come in
+    // via REPRO_THREADS / REPRO_SHARDS (tests/common).
+    for max_batch in [1usize, 2, 4] {
+        let h = harness_batch(1, 0, max_batch);
+        let gate_pending = h.svc.submit(JobSpec::new(Dataset::Tiny, "gate")).unwrap();
+        let specs: Vec<_> = (0..4u32)
+            .map(|i| JobSpec::new(Dataset::Tiny, "bfs").with_source(i).with_iterations(3))
+            .collect();
+        let pending: Vec<_> = specs.iter().map(|s| h.svc.submit(s.clone()).unwrap()).collect();
+        h.gate.wait();
+        gate_pending.wait().unwrap();
+        let batched: Vec<_> = pending.into_iter().map(|p| p.wait().unwrap()).collect();
+
+        let snap = h.svc.snapshot();
+        if max_batch == 1 {
+            assert_eq!(snap.jobs_batched, 0, "max_batch=1 must never form batches");
+            assert_eq!(snap.batch_size.count, 0);
+        } else {
+            assert_eq!(snap.jobs_batched, 4, "max_batch={max_batch}: all four jobs ride batches");
+            assert_eq!(
+                snap.batch_size.count,
+                4 / max_batch as u64,
+                "max_batch={max_batch}: batch count"
+            );
+            assert_eq!(
+                snap.batch_size.max_us, max_batch as u64,
+                "max_batch={max_batch}: histogram holds batch sizes (jobs), not latencies"
+            );
+        }
+        assert_eq!(snap.jobs_coalesced, 0, "distinct sources must never coalesce");
+
+        // Solo reference runs: the queue is drained, so each blocking
+        // submit executes alone through the very same service/session.
+        for (spec, batched) in specs.into_iter().zip(&batched) {
+            let solo = h.svc.submit_blocking(spec).unwrap();
+            let (b, s) = (&batched.report, &solo.report);
+            assert_eq!(
+                b.run.as_ref().unwrap().values,
+                s.run.as_ref().unwrap().values,
+                "max_batch={max_batch}: values diverge from solo"
+            );
+            assert_eq!(b.counts, s.counts, "max_batch={max_batch}: counts diverge");
+            assert_eq!(b.exec_time_ns, s.exec_time_ns, "max_batch={max_batch}: model time diverges");
+            assert_eq!(b.supersteps, s.supersteps, "max_batch={max_batch}: supersteps diverge");
+        }
+
+        let snap = h.svc.snapshot();
+        assert_eq!(
+            snap.jobs_completed + snap.jobs_failed + snap.jobs_shed,
+            snap.jobs_submitted,
+            "max_batch={max_batch}: conservation"
+        );
+    }
+}
+
+#[test]
+fn metrics_conserve_under_batched_bursts() {
+    // The hostile-burst conservation property again, now with a
+    // batching worker in the mix: random blends of batch-compatible
+    // jobs (one algorithm, few sources), incompatible jobs, panicking
+    // factories (exercising the batch → solo fallback) and zero-
+    // deadline jobs (shed out of claimed batches) must keep
+    // `submitted == completed + failed + shed` and the histogram
+    // sample counts exact.
+    let algos = ["bfs", "bfs", "bfs", "wcc", "boom"];
+    for seed in 0..4u64 {
+        let mut rng = SplitMix64::new(seed);
+        let workers = 1 + rng.next_index(2);
+        let h = harness_batch(workers, 0, 4);
+        let njobs = 8 + rng.next_index(16);
+        let pending: Vec<_> = (0..njobs)
+            .map(|_| {
+                let mut spec = JobSpec::new(Dataset::Tiny, algos[rng.next_index(algos.len())])
+                    .with_source(rng.next_index(4) as u32)
+                    .with_iterations(3);
+                if rng.next_bool(0.2) {
+                    spec = spec.with_deadline(Duration::ZERO);
+                }
+                h.svc.submit(spec).unwrap()
+            })
+            .collect();
+        let mut completed = 0u64;
+        for p in pending {
+            if p.wait().is_ok() {
+                completed += 1;
+            }
+        }
+        let snap = h.svc.snapshot();
+        assert_eq!(snap.jobs_submitted, njobs as u64, "seed {seed}");
+        assert_eq!(snap.jobs_completed, completed, "seed {seed}");
+        assert_eq!(
+            snap.jobs_completed + snap.jobs_failed + snap.jobs_shed,
+            njobs as u64,
+            "seed {seed}: conservation"
+        );
+        assert!(
+            snap.jobs_batched <= snap.jobs_completed + snap.jobs_failed,
+            "seed {seed}: batched jobs are a subset of delivered jobs"
+        );
+        assert_eq!(
+            snap.queue_wait.count,
+            snap.jobs_completed + snap.jobs_shed,
+            "seed {seed}: queue-wait samples"
+        );
+        assert_eq!(snap.execution.count, snap.jobs_completed, "seed {seed}: execution samples");
+        assert!(
+            snap.per_algorithm.values().all(|s| s.queue_depth == 0),
+            "seed {seed}: in-flight gauge must drain"
+        );
     }
 }
